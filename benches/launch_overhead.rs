@@ -1,0 +1,59 @@
+//! E5 / E12 — launch-count economics: single-pass λ maps vs the
+//! multi-pass related work, under the simulated per-launch latency and
+//! the 32-concurrent-kernel cap (§III.B's argument, eq. 20).
+
+use std::time::Duration;
+
+use simplexmap::grid::{BlockShape, LaunchConfig, Launcher};
+use simplexmap::maps::{Lambda2Map, Lambda3Map, Lambda3RecMap, RiesMap, ThreadMap};
+use simplexmap::util::benchkit::{black_box, section, Bencher};
+
+fn launcher(m: u32, latency_us: u64) -> Launcher {
+    let mut cfg = LaunchConfig::new(BlockShape::new(4, m));
+    cfg.launch_latency = Duration::from_micros(latency_us);
+    cfg.max_concurrent_launches = 32;
+    Launcher::with_workers(
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        cfg,
+    )
+}
+
+fn main() {
+    section("E12: λ2 single pass vs Ries O(log n) passes (5µs launch latency)");
+    let mut b = Bencher::default();
+    let nb2 = 1024;
+    for (name, map) in [
+        ("lambda2 (1 pass)", &Lambda2Map as &dyn ThreadMap),
+        ("ries (log2 n + 1 passes)", &RiesMap),
+    ] {
+        let l = launcher(2, 5);
+        b.bench(name, map.parallel_volume(nb2) as u64, || {
+            let stats = l.launch(map, nb2, |_b| 0);
+            black_box(stats.blocks_mapped);
+        });
+    }
+    b.print_speedups("E12");
+
+    section("E5: λ3 single pass vs λ3-rec O(3^log n) launches (cap 32)");
+    let mut b = Bencher::default();
+    let nb3 = 64;
+    for (name, map) in [
+        ("lambda3 (1 pass)", &Lambda3Map as &dyn ThreadMap),
+        ("lambda3-rec (365 launches at nb=64)", &Lambda3RecMap),
+    ] {
+        let l = launcher(3, 5);
+        b.bench(name, map.parallel_volume(nb3) as u64, || {
+            let stats = l.launch(map, nb3, |_b| 0);
+            black_box(stats.blocks_mapped);
+        });
+    }
+    b.print_speedups("E5");
+
+    // Pass-count table (the eq. 20 numbers behind the wall times).
+    println!("\npasses: lambda2={} ries={} lambda3={} lambda3-rec={}",
+        Lambda2Map.passes(nb2),
+        RiesMap.passes(nb2),
+        Lambda3Map.passes(nb3),
+        Lambda3RecMap.passes(nb3),
+    );
+}

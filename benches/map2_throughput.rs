@@ -1,0 +1,103 @@
+//! E3 — raw block-map arithmetic throughput for the 2-simplex (the
+//! paper's O(1)-beats-sqrt claim, eq. 13-15 vs the enumeration maps).
+//!
+//! Measures blocks mapped per second over a full grid sweep for every
+//! registered map: BB identity+predicate, λ2 (clz+shift), ENUM2
+//! (sqrt), RB (compare+mirror), Avril (f64 sqrt, thread-space) and the
+//! per-pass Ries map. Custom harness (vendor set has no criterion).
+
+use simplexmap::maps::{
+    avril::avril_map_f64, lambda2::lambda2_inclusive, rectangular_box::rb_map, ThreadMap,
+};
+use simplexmap::util::benchkit::{black_box, section, Bencher};
+
+fn main() {
+    let nb: u64 = std::env::var("SIMPLEXMAP_BENCH_NB")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2048);
+    section(&format!("E3: m=2 block-map throughput, nb = {nb}"));
+    let mut b = Bencher::default();
+
+    // Every bench maps the same number of *useful* blocks so the
+    // throughput numbers are directly comparable.
+    let useful = (nb * (nb + 1) / 2) as u64;
+
+    // BB: identity + predicate over the full square (the baseline pays
+    // for the dead half too — that's the point).
+    b.bench("bb2 (identity + predicate, full grid)", useful, || {
+        let mut acc = 0u64;
+        for y in 0..nb {
+            for x in 0..nb {
+                if x <= y {
+                    acc = acc.wrapping_add(black_box(x + y));
+                }
+            }
+        }
+        black_box(acc);
+    });
+
+    // λ2: the paper's map (eq. 13) over its exact grid.
+    b.bench("lambda2 (clz + shift, eq. 13)", useful, || {
+        let mut acc = 0u64;
+        for y in 0..=nb {
+            for x in 0..nb / 2 {
+                let (c, r) = lambda2_inclusive(nb, black_box(x), black_box(y));
+                acc = acc.wrapping_add(c + r);
+            }
+        }
+        black_box(acc);
+    });
+
+    // ENUM2: triangular root per block (HPCC'14 baseline).
+    b.bench("enum2 (sqrt root per block)", useful, || {
+        let mut acc = 0u64;
+        for k in 0..useful {
+            let r = simplexmap::maps::enumeration::triangular_root(black_box(k));
+            let c = k - r * (r + 1) / 2;
+            acc = acc.wrapping_add(c + r);
+        }
+        black_box(acc);
+    });
+
+    // RB: fold map.
+    b.bench("rb (fold, Jung & O'Leary)", useful, || {
+        let mut acc = 0u64;
+        for y in 0..=nb {
+            for x in 0..nb / 2 {
+                let (c, r) = rb_map(nb, black_box(x), black_box(y));
+                acc = acc.wrapping_add(c + r);
+            }
+        }
+        black_box(acc);
+    });
+
+    // Avril: thread-space f64 sqrt map (strict pairs only).
+    let strict = nb * (nb - 1) / 2;
+    b.bench("avril (f64 sqrt, thread-space)", strict, || {
+        let mut acc = 0u64;
+        for k in 0..strict {
+            let (a, bb_) = avril_map_f64(black_box(k), nb);
+            acc = acc.wrapping_add(a + bb_);
+        }
+        black_box(acc);
+    });
+
+    // Ries: same arithmetic as λ2 levels but via the multi-pass
+    // interface (per-block cost only; launch overhead is E12).
+    let ries = simplexmap::maps::RiesMap;
+    b.bench("ries (per-block, all passes)", useful, || {
+        let mut acc = 0u64;
+        for pass in 0..ries.passes(nb) {
+            let g = ries.grid(nb, pass);
+            for w in g.iter() {
+                if let Some(d) = ries.map_block(nb, pass, black_box(w)) {
+                    acc = acc.wrapping_add(d[0] + d[1]);
+                }
+            }
+        }
+        black_box(acc);
+    });
+
+    b.print_speedups("E3 summary");
+}

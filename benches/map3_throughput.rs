@@ -1,0 +1,66 @@
+//! E7 — block-map arithmetic throughput for the 3-simplex: λ3's
+//! clz+fold (§III.C) vs BB's predicate-discard vs ENUM3's cube-root
+//! inversion (the "several square and cubic roots" the paper's related
+//! work pays).
+
+use simplexmap::maps::lambda3::lambda3_full;
+use simplexmap::maps::{Enum3Map, ThreadMap};
+use simplexmap::util::benchkit::{black_box, section, Bencher};
+
+fn main() {
+    let nb: u64 = std::env::var("SIMPLEXMAP_BENCH_NB")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    section(&format!("E7: m=3 block-map throughput, nb = {nb}"));
+    let mut b = Bencher::default();
+    let useful = (nb * (nb + 1) * (nb + 2) / 6) as u64;
+
+    // BB: identity + predicate over the full cube (pays ~6×).
+    b.bench("bb3 (identity + predicate, full grid)", useful, || {
+        let mut acc = 0u64;
+        for z in 0..nb {
+            for y in 0..nb {
+                for x in 0..nb {
+                    if x + y + z <= nb - 1 {
+                        acc = acc.wrapping_add(black_box(x + y + z));
+                    }
+                }
+            }
+        }
+        black_box(acc);
+    });
+
+    // λ3: clz + closed-form offsets + fold, over its 1.125× container.
+    b.bench("lambda3 (clz + fold, §III.C)", useful, || {
+        let mut acc = 0u64;
+        let (gx, gy, gz) = (nb / 2, nb / 2, 3 * nb / 4 + 3);
+        for z in 0..gz {
+            for y in 0..gy {
+                for x in 0..gx {
+                    if let Some((a, bb_, c)) =
+                        lambda3_full(nb, black_box(x), black_box(y), black_box(z))
+                    {
+                        acc = acc.wrapping_add(a + bb_ + c);
+                    }
+                }
+            }
+        }
+        black_box(acc);
+    });
+
+    // ENUM3: tetrahedral + triangular root per block.
+    let enum3 = Enum3Map;
+    b.bench("enum3 (cbrt + sqrt roots per block)", useful, || {
+        let mut acc = 0u64;
+        let g = enum3.grid(nb, 0);
+        for w in g.iter() {
+            if let Some(d) = enum3.map_block(nb, 0, black_box(w)) {
+                acc = acc.wrapping_add(d[0] + d[1] + d[2]);
+            }
+        }
+        black_box(acc);
+    });
+
+    b.print_speedups("E7 summary");
+}

@@ -1,0 +1,44 @@
+//! E1 / E4 / E8 / E9 — regenerate every closed-form table of the paper
+//! (eqs. 2-4, 17-19, 28-29 and the §III.D search) and time the exact
+//! arithmetic so regressions in the u128 volume kernels are caught.
+
+use simplexmap::analysis;
+use simplexmap::simplex::recursive_set::recursive_volume_half;
+use simplexmap::simplex::volume::simplex_volume;
+use simplexmap::util::benchkit::{black_box, section, Bencher};
+
+fn main() {
+    section("E1: bounding-box waste (eq. 4)");
+    println!("{}", analysis::report_volumes(4096, 8));
+
+    section("E4: arity-3 set → 1/5 extra volume (eq. 19)");
+    println!("{}", analysis::report_arity3(14));
+
+    section("E8: r=1/2 β=2 blow-up (eq. 29)");
+    println!("{}", analysis::report_general(8));
+
+    section("E9: §III.D (r, β) search");
+    println!(
+        "{}",
+        analysis::report_search(4, 9, &[2.0, 4.0, 8.0, 16.0, 32.0], 1 << 40)
+    );
+
+    section("timing: exact volume kernels");
+    let mut b = Bencher::default();
+    b.bench("simplex_volume m=2..8, n=2^12", 7, || {
+        // n=2^12 keeps C(n+7, 8) inside u128 (2^20 would overflow).
+        for m in 2..=8 {
+            black_box(simplex_volume(1 << 12, m));
+        }
+    });
+    b.bench("recursive_volume_half n=2^40 m=3", 1, || {
+        black_box(recursive_volume_half(1 << 40, 3, 2));
+    });
+    b.bench("gensearch m=5 five betas", 5, || {
+        black_box(simplexmap::gensearch::search(
+            (5, 5),
+            &[2.0, 4.0, 8.0, 16.0, 32.0],
+            1 << 40,
+        ));
+    });
+}

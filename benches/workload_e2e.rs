@@ -1,0 +1,94 @@
+//! E10 — end-to-end workload wall time under each map (rust backend:
+//! measures the whole pipeline map→tiles→aggregate without PJRT call
+//! overhead dominating; the PJRT flavour is examples/edm_end_to_end).
+//!
+//! The paper's prediction: identical tile work, so wall time scales
+//! with parallel-space volume — λ2 ≈ ½ BB for m=2, λ3 ≈ ⅙ BB for m=3
+//! *in the map phase*, converging to the tile-work ratio end-to-end.
+
+use simplexmap::coordinator::{Backend, Job, Scheduler, WorkloadKind};
+use simplexmap::util::benchkit::{section, Bencher};
+
+fn bench_workload(
+    b: &mut Bencher,
+    sched: &Scheduler,
+    workload: WorkloadKind,
+    nb: u64,
+    maps: &[&str],
+    items: u64,
+) {
+    for map in maps {
+        let job = Job {
+            workload,
+            nb,
+            map: map.to_string(),
+            backend: Backend::Rust,
+            seed: 42,
+        };
+        b.bench(&format!("{} nb={nb} map={map}", workload.name()), items, || {
+            let r = sched.run(&job).expect("job");
+            simplexmap::util::benchkit::black_box(r.outputs[0].1);
+        });
+    }
+}
+
+fn main() {
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    let sched = Scheduler::new(workers, None);
+
+    section("E10a: EDM end-to-end (rust tiles)");
+    let mut b = Bencher::default();
+    let nb = 128;
+    let n = nb * sched.rho2 as u64;
+    bench_workload(
+        &mut b,
+        &sched,
+        WorkloadKind::Edm,
+        nb,
+        &["bb", "enum2", "lambda2", "rb"],
+        n * (n - 1) / 2,
+    );
+    b.print_speedups("EDM");
+
+    section("E10b: collision culling end-to-end");
+    let mut b = Bencher::default();
+    bench_workload(
+        &mut b,
+        &sched,
+        WorkloadKind::Collision,
+        nb,
+        &["bb", "lambda2"],
+        n * (n - 1) / 2,
+    );
+    b.print_speedups("collision");
+
+    section("E10c: n-body end-to-end");
+    let mut b = Bencher::default();
+    let nb_n = 64;
+    let n_n = nb_n * sched.rho2 as u64;
+    bench_workload(
+        &mut b,
+        &sched,
+        WorkloadKind::NBody,
+        nb_n,
+        &["bb", "lambda2"],
+        n_n * (n_n - 1),
+    );
+    b.print_speedups("nbody");
+
+    section("E10d: triple interaction end-to-end (m=3)");
+    let mut b = Bencher::default();
+    let nb3 = 16;
+    let n3 = nb3 * sched.rho3 as u64;
+    bench_workload(
+        &mut b,
+        &sched,
+        WorkloadKind::Triple,
+        nb3,
+        &["bb", "enum3", "lambda3"],
+        n3 * (n3 - 1) * (n3 - 2) / 6,
+    );
+    b.print_speedups("triple");
+}

@@ -1,0 +1,89 @@
+//! E10 headline — the full three-layer stack on a real workload.
+//!
+//! Runs the Euclidean-distance-matrix workload end to end:
+//! Rust coordinator → thread map (BB vs ENUM2 vs λ2) → tile batcher →
+//! **AOT-compiled Pallas kernels via PJRT** → aggregation; prints
+//! per-map throughput (useful pair-distances per second), parallel-
+//! space efficiency and the cross-backend checksum agreement.
+//!
+//! Requires `make artifacts`. Results recorded in EXPERIMENTS.md §E10.
+//!
+//! Run: `cargo run --release --example edm_end_to_end -- [nb] [seed]`
+
+use simplexmap::coordinator::{Backend, Job, Scheduler, WorkloadKind};
+use simplexmap::runtime::{artifact, ExecutorService};
+use simplexmap::util::stats::fmt_count;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let nb: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let seed: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(42);
+
+    let dir = artifact::default_dir();
+    let service = match ExecutorService::spawn_pool(&dir, 2) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("cannot load artifacts ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let sched = Scheduler::new(
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        Some(service.handle()),
+    );
+    let n_points = nb * sched.rho2 as u64;
+    let pairs = n_points * (n_points - 1) / 2;
+    println!(
+        "EDM end-to-end: {n_points} points (nb={nb}, ρ={}), {} unique pairs, backend=pjrt (Pallas tiles)",
+        sched.rho2,
+        fmt_count(pairs as f64)
+    );
+    println!(
+        "{:<10} {:>10} {:>10} {:>8} {:>12} {:>12} {:>14}",
+        "map", "launched", "useful", "eff", "wall", "batches", "pairs/s"
+    );
+
+    // Warm the executor (first PJRT execution pays one-time costs).
+    let _ = sched.run(&Job {
+        workload: WorkloadKind::Edm,
+        nb: nb.min(8),
+        map: "bb".into(),
+        backend: Backend::Pjrt,
+        seed,
+    });
+
+    let mut checksums = Vec::new();
+    for map in ["bb", "enum2", "lambda2", "rb"] {
+        let job = Job {
+            workload: WorkloadKind::Edm,
+            nb,
+            map: map.into(),
+            backend: Backend::Pjrt,
+            seed,
+        };
+        let r = sched.run(&job).expect("job");
+        println!(
+            "{:<10} {:>10} {:>10} {:>8.4} {:>10.1}ms {:>12} {:>14}",
+            map,
+            r.blocks_launched,
+            r.blocks_mapped,
+            r.block_efficiency(),
+            r.wall_secs * 1e3,
+            r.tile_batches,
+            fmt_count(pairs as f64 / r.wall_secs),
+        );
+        checksums.push((map, r.outputs[0].1, r.outputs[1].1));
+    }
+
+    // All maps must compute identical answers.
+    let (c0, s0) = (checksums[0].1, checksums[0].2);
+    for (map, c, s) in &checksums {
+        assert_eq!(*c, c0, "{map} neighbour count differs");
+        assert!((s - s0).abs() < 1e-6 * s0.abs(), "{map} Σd² differs");
+    }
+    println!(
+        "all maps agree: neighbours={c0}, Σd²={s0:.3e} — λ2 delivers the same answer \
+         with {:.1}% of BB's parallel space",
+        100.0 / (1.0 + simplexmap::maps::alpha(&simplexmap::maps::BoundingBox2, nb))
+    );
+}

@@ -1,0 +1,44 @@
+//! §III.D interactive study (E9): sweep the (m, β) parameter space of
+//! the general recursive set, print the n₀/waste Pareto frontier per
+//! dimension, and quantify the "m!× more efficient than bounding-box"
+//! claim.
+//!
+//! Run: `cargo run --release --example param_search -- [m_max]`
+
+use simplexmap::gensearch::{pareto, search};
+use simplexmap::simplex::volume::factorial;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let m_max: u32 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(9);
+    let betas: Vec<f64> = vec![2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+    let horizon = 1u64 << 40;
+
+    let rows = search((4, m_max), &betas, horizon);
+    for m in 4..=m_max {
+        println!("m = {m} (m! = {}, BB wastes {}×):", factorial(m), factorial(m) - 1);
+        println!(
+            "  {:>8} {:>12} {:>12} {:>14}  pareto",
+            "beta", "n0", "waste lim", "eff vs BB"
+        );
+        let front = pareto(&rows, m);
+        for r in rows.iter().filter(|r| r.m == m) {
+            let on_front = front
+                .iter()
+                .any(|f| f.beta == r.beta && f.n0 == r.n0);
+            println!(
+                "  {:>8} {:>12} {:>12.4} {:>14.1}  {}",
+                r.beta,
+                r.n0.map(|v| v.to_string()).unwrap_or_else(|| "> horizon".into()),
+                r.waste_limit,
+                r.efficiency_vs_bb,
+                if on_front { "*" } else { "" }
+            );
+        }
+        println!();
+    }
+    println!(
+        "reading: raising β pulls n₀ toward the origin but pays waste β/(m!-β);\n\
+         every starred row is Pareto-optimal — the open optimization problem of §III.D."
+    );
+}

@@ -1,0 +1,78 @@
+//! §Perf profiling driver: phase-level breakdown of the pipeline
+//! (map phase vs tile-execute phase) per backend, plus batcher
+//! occupancy — the numbers the EXPERIMENTS.md §Perf table quotes.
+//!
+//! Run: `cargo run --release --example perf_profile -- [nb] [reps]`
+
+use simplexmap::coordinator::{Backend, Job, Scheduler, WorkloadKind};
+use simplexmap::runtime::{artifact, ExecutorService};
+use simplexmap::util::json::Json;
+
+fn phase(snapshot: &Json, key: &str) -> (u64, f64) {
+    let p = snapshot.get(key).unwrap();
+    (
+        p.get("count").unwrap().as_u64().unwrap(),
+        p.get("mean_secs").unwrap().as_f64().unwrap(),
+    )
+}
+
+fn profile(backend: Backend, nb: u64, reps: usize, service: Option<&ExecutorService>) {
+    let sched = Scheduler::new(
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        service.map(|s| s.handle()),
+    );
+    // Warmup.
+    let _ = sched.run(&Job {
+        workload: WorkloadKind::Edm,
+        nb: 8,
+        map: "lambda2".into(),
+        backend,
+        seed: 1,
+    });
+    let metrics_before = sched.metrics.snapshot();
+    let (c0_map, m0_map) = phase(&metrics_before, "map_phase");
+    let (c0_ex, m0_ex) = phase(&metrics_before, "exec_phase");
+
+    for i in 0..reps {
+        sched
+            .run(&Job {
+                workload: WorkloadKind::Edm,
+                nb,
+                map: "lambda2".into(),
+                backend,
+                seed: i as u64,
+            })
+            .expect("job");
+    }
+    let snap = sched.metrics.snapshot();
+    let (c_map, mean_map) = phase(&snap, "map_phase");
+    let (c_ex, mean_ex) = phase(&snap, "exec_phase");
+    // Incremental means over the measured reps.
+    let map_secs =
+        (mean_map * c_map as f64 - m0_map * c0_map as f64) / (c_map - c0_map) as f64;
+    let exec_secs = (mean_ex * c_ex as f64 - m0_ex * c0_ex as f64) / (c_ex - c0_ex) as f64;
+    let total = map_secs + exec_secs;
+    println!(
+        "backend={:<5} nb={nb}: map {:8.3}ms ({:4.1}%)  exec {:8.3}ms ({:4.1}%)  batches={} padded={}",
+        backend.name(),
+        map_secs * 1e3,
+        100.0 * map_secs / total,
+        exec_secs * 1e3,
+        100.0 * exec_secs / total,
+        snap.get("tile_batches").unwrap().as_u64().unwrap(),
+        snap.get("tiles_padded").unwrap().as_u64().unwrap(),
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let nb: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let reps: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(5);
+
+    println!("EDM pipeline phase breakdown (map=lambda2, {reps} reps):");
+    profile(Backend::Rust, nb, reps, None);
+    match ExecutorService::spawn_pool(&artifact::default_dir(), 4) {
+        Ok(svc) => profile(Backend::Pjrt, nb, reps, Some(&svc)),
+        Err(e) => eprintln!("pjrt skipped: {e}"),
+    }
+}

@@ -1,0 +1,89 @@
+//! Serving demo: start the coordinator's TCP JSON-lines server
+//! in-process, act as a client submitting a stream of jobs (mixed
+//! workloads and maps), and report latency percentiles — the
+//! router-style deployment shape of the L3 coordinator.
+//!
+//! Run: `cargo run --release --example serve_client -- [jobs]`
+
+use std::io::{BufRead, BufReader, Write};
+use std::sync::Arc;
+
+use simplexmap::coordinator::server::Server;
+use simplexmap::coordinator::Scheduler;
+use simplexmap::util::json;
+use simplexmap::util::prng::Xoshiro256;
+use simplexmap::util::stats::{fmt_secs, Summary};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let jobs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(24);
+
+    // Leader in a background thread (rust backend: artifact-free demo).
+    let server = Server::new(Arc::new(Scheduler::new(4, None)));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        server
+            .serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+            .unwrap();
+    });
+    let addr = rx.recv().unwrap();
+    println!("coordinator listening on {addr}");
+
+    // Client: a mixed job stream.
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let workloads = ["edm", "collision", "nbody", "cellular", "trimatvec"];
+    let maps = ["lambda2", "bb", "rb", "enum2"];
+    let mut latencies = Vec::new();
+    let mut line = String::new();
+    for i in 0..jobs {
+        let w = workloads[rng.gen_range(0, workloads.len())];
+        let m = maps[rng.gen_range(0, maps.len())];
+        let nb = [16u64, 32, 64][rng.gen_range(0, 3)];
+        let req = format!(
+            r#"{{"cmd":"run","workload":"{w}","nb":{nb},"map":"{m}","seed":{i}}}"#
+        );
+        let t0 = std::time::Instant::now();
+        conn.write_all(req.as_bytes()).unwrap();
+        conn.write_all(b"\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        latencies.push(dt);
+        let resp = json::parse(line.trim()).unwrap();
+        let ok = resp.get("ok").and_then(|v| v.as_bool()).unwrap_or(false);
+        assert!(ok, "job failed: {line}");
+        let eff = resp
+            .get("result")
+            .and_then(|r| r.get("block_efficiency"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0);
+        println!(
+            "  job {i:>3}: {w:<10} nb={nb:<4} map={m:<8} eff={eff:.3} latency={}",
+            fmt_secs(dt)
+        );
+    }
+
+    // Metrics + shutdown.
+    conn.write_all(b"{\"cmd\":\"metrics\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let metrics = json::parse(line.trim()).unwrap();
+    let completed = metrics
+        .get("metrics")
+        .and_then(|m| m.get("jobs_completed"))
+        .and_then(|v| v.as_u64())
+        .unwrap();
+    conn.write_all(b"{\"cmd\":\"shutdown\"}\n").unwrap();
+    handle.join().unwrap();
+
+    let s = Summary::from_samples(&latencies).unwrap();
+    println!(
+        "\n{completed} jobs done — latency p50 {} p90 {} p99 {} max {}",
+        fmt_secs(s.p50),
+        fmt_secs(s.p90),
+        fmt_secs(s.p99),
+        fmt_secs(s.max)
+    );
+}

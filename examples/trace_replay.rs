@@ -1,0 +1,57 @@
+//! Serving-trace replay: generate a Poisson job stream (mixed
+//! workloads, maps and sizes) and replay it against the coordinator,
+//! reporting end-to-end latency (queueing + service) percentiles —
+//! the leader under sustained load.
+//!
+//! Run: `cargo run --release --example trace_replay -- [jobs] [rate_hz]`
+
+use simplexmap::coordinator::trace::{generate, replay, TraceSpec};
+use simplexmap::coordinator::Scheduler;
+use simplexmap::util::stats::fmt_secs;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let jobs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(40);
+    let rate_hz: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(40.0);
+
+    let sched = Scheduler::new(
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        None,
+    );
+    let spec = TraceSpec {
+        jobs,
+        rate_hz,
+        ..Default::default()
+    };
+    let trace = generate(&spec);
+    println!(
+        "replaying {jobs} jobs at {rate_hz} jobs/s (trace span {})…",
+        fmt_secs(trace.last().unwrap().at.as_secs_f64())
+    );
+    let report = replay(&sched, &trace);
+    println!(
+        "completed {} / failed {} in {}",
+        report.completed,
+        report.failed,
+        fmt_secs(report.wall.as_secs_f64())
+    );
+    println!(
+        "latency  p50 {} p90 {} p99 {} max {}",
+        fmt_secs(report.latency.p50),
+        fmt_secs(report.latency.p90),
+        fmt_secs(report.latency.p99),
+        fmt_secs(report.latency.max)
+    );
+    println!(
+        "service  p50 {} p90 {} max {}",
+        fmt_secs(report.service.p50),
+        fmt_secs(report.service.p90),
+        fmt_secs(report.service.max)
+    );
+    let snap = sched.metrics.snapshot();
+    println!(
+        "jobs_completed={} blocks_mapped={}",
+        snap.get("jobs_completed").unwrap(),
+        snap.get("blocks_mapped").unwrap()
+    );
+}

@@ -1,0 +1,139 @@
+"""AOT bridge: lower the L2 models to HLO *text* + manifest.json.
+
+HLO text (not `HloModuleProto.serialize()`): jax >= 0.5 emits protos
+with 64-bit instruction ids which the Rust side's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as `python -m compile.aot --out-dir ../artifacts` (what `make
+artifacts` does). One artifact per model x shape configuration; the
+manifest records input/output shapes so the Rust executor can validate
+calls without parsing HLO.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# One entry per artifact: name -> (fn, input ShapeDtypeStructs).
+# B = tiles per batch, R = threads per block side (rho), D = point dim.
+B = 64
+R = 16
+R3 = 8  # triple tiles are R^3 work: keep blocks smaller in m=3
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def configs():
+    return {
+        "edm_tile": (model.edm_model, [_f32(B, R, 8), _f32(B, R, 8)]),
+        "edm_threshold": (
+            model.edm_threshold_model,
+            [_f32(B, R, 8), _f32(B, R, 8), _f32()],
+        ),
+        "nbody_tile": (model.nbody_model, [_f32(B, R, 4), _f32(B, R, 4)]),
+        "collision_tile": (
+            model.collision_model,
+            [_f32(B, R, 6), _f32(B, R, 6)],
+        ),
+        "triple_tile": (
+            model.triple_model,
+            [_f32(B, R3, 3), _f32(B, R3, 3), _f32(B, R3, 3)],
+        ),
+    }
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(name, fn, specs, out_dir):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    out_shapes = [
+        list(o.shape) for o in jax.eval_shape(fn, *specs)
+    ]
+    entry = {
+        "name": name,
+        "file": fname,
+        "input_shapes": [list(s.shape) for s in specs],
+        "output_shapes": out_shapes,
+    }
+    print(f"  {name}: {len(text)} chars, in={entry['input_shapes']} out={out_shapes}")
+    return entry
+
+
+def golden_for(name):
+    """Deterministic golden input/output vectors for one artifact —
+    the cross-language numeric contract rust/tests/runtime_e2e.rs
+    checks after executing the HLO through PJRT."""
+    import numpy as np
+
+    fn, specs = configs()[name]
+    rng = np.random.default_rng(0xC0FFEE)
+    inputs = []
+    for s in specs:
+        if s.shape == ():
+            inputs.append(np.float32(0.5))
+        else:
+            inputs.append((rng.normal(size=s.shape) * 0.5).astype(np.float32))
+    (out,) = jax.jit(fn)(*[jnp.asarray(a) for a in inputs])
+    return {"inputs": inputs, "output": out}
+
+
+def write_goldens(out_dir, names):
+    import numpy as np
+
+    doc = {}
+    for name in names:
+        g = golden_for(name)
+        doc[name] = {
+            "inputs": [np.asarray(a).ravel().tolist() for a in g["inputs"]],
+            "output": np.asarray(g["output"]).ravel().tolist(),
+        }
+    with open(os.path.join(out_dir, "goldens.json"), "w") as f:
+        json.dump(doc, f)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+    for name, (fn, specs) in configs().items():
+        if args.only and name not in args.only:
+            continue
+        entries.append(lower_one(name, fn, specs, args.out_dir))
+    manifest = {
+        "schema": 1,
+        "batch": B,
+        "rho2": R,
+        "rho3": R3,
+        "artifacts": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    write_goldens(args.out_dir, [e["name"] for e in entries])
+    print(f"wrote {len(entries)} artifacts + manifest + goldens to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

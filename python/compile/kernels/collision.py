@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: AABB collision-culling tile.
+
+One program instance tests one R x R block of the pairwise overlap
+matrix — the collision-detection workload [1] that motivates the
+2-simplex maps. Output is f32 {0, 1} so one artifact dtype serves all
+kernels through the PJRT bridge.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _collision_kernel(ba_ref, bb_ref, out_ref):
+    ba = ba_ref[...]  # (S, R, 6): min xyz, max xyz
+    bb = bb_ref[...]
+    amin = ba[:, :, None, :3]  # (S, R, 1, 3)
+    amax = ba[:, :, None, 3:]
+    bmin = bb[:, None, :, :3]  # (S, 1, R, 3)
+    bmax = bb[:, None, :, 3:]
+    overlap = jnp.logical_and(amin <= bmax, bmin <= amax)  # (S, R, R, 3)
+    out_ref[...] = jnp.all(overlap, axis=-1).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "slab"))
+def collision_tile(boxa, boxb, interpret=True, slab=None):
+    """Batched overlap tiles: (B, R, 6), (B, R, 6) -> (B, R, R).
+
+    slab=B (default) collapses the grid to one program instance — the
+    interpret-mode fast configuration (§Perf)."""
+    b, r, c = boxa.shape
+    assert c == 6 and boxb.shape == (b, r, 6)
+    slab = b if slab is None else slab
+    assert b % slab == 0
+    return pl.pallas_call(
+        _collision_kernel,
+        grid=(b // slab,),
+        in_specs=[
+            pl.BlockSpec((slab, r, 6), lambda i: (i, 0, 0)),
+            pl.BlockSpec((slab, r, 6), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((slab, r, r), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r, r), jnp.float32),
+        interpret=interpret,
+    )(boxa, boxb)

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: n-body force tile.
+
+One program instance accumulates, for a slab of tiles, the
+gravitational acceleration that one R-particle chunk (b) exerts on
+another (a) — the unit of work a lambda2-mapped block owns in the
+pairwise O(n^2) sweep (the coordinator applies the tile both ways for
+off-diagonal blocks; that symmetry is why the triangular domain halves
+the work).
+
+VMEM per slab: 2 * S * R * 4 in, S * R * 3 out; the (S, R, R, 3)
+displacement field lives only inside the slab. slab=B (single
+instance) is the interpret-mode fast configuration (§Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-3  # Plummer softening, matches ref.py
+
+
+def _nbody_kernel(pa_ref, pb_ref, out_ref):
+    pa = pa_ref[...]  # (S, R, 4): x y z m
+    pb = pb_ref[...]
+    ra = pa[..., :3]
+    rb = pb[..., :3]
+    mb = pb[..., 3]  # (S, R)
+    d = rb[:, None, :, :] - ra[:, :, None, :]  # (S, R, R, 3)
+    r2 = jnp.sum(d * d, axis=-1) + EPS  # (S, R, R)
+    w = mb[:, None, :] * r2 ** (-1.5)  # (S, R, R)
+    out_ref[...] = jnp.einsum("bijk,bij->bik", d, w)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "slab"))
+def nbody_tile(pa, pb, interpret=True, slab=None):
+    """Batched force tiles: (B, R, 4), (B, R, 4) -> (B, R, 3)."""
+    b, r, c = pa.shape
+    assert c == 4 and pb.shape == (b, r, 4)
+    slab = b if slab is None else slab
+    assert b % slab == 0
+    return pl.pallas_call(
+        _nbody_kernel,
+        grid=(b // slab,),
+        in_specs=[
+            pl.BlockSpec((slab, r, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec((slab, r, 4), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((slab, r, 3), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r, 3), pa.dtype),
+        interpret=interpret,
+    )(pa, pb)

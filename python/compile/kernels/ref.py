@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness signal).
+
+Each function mirrors a kernel in this package with straightforward
+jax.numpy so pytest can assert_allclose kernel-vs-ref across shapes and
+dtypes (hypothesis sweeps live in python/tests).
+"""
+
+import jax.numpy as jnp
+
+
+def edm_tile_ref(xa, xb):
+    """Squared Euclidean distances between two point chunks.
+
+    xa: (B, R, D), xb: (B, R, D) -> (B, R, R) with
+    out[b, i, j] = ||xa[b,i] - xb[b,j]||^2.
+
+    Expanded-norm formulation (the MXU-friendly form the kernel also
+    uses): ||a||^2 + ||b||^2 - 2 a.b.
+    """
+    na = jnp.sum(xa * xa, axis=-1)[:, :, None]  # (B, R, 1)
+    nb = jnp.sum(xb * xb, axis=-1)[:, None, :]  # (B, 1, R)
+    cross = jnp.einsum("bid,bjd->bij", xa, xb)  # (B, R, R)
+    return na + nb - 2.0 * cross
+
+
+def nbody_tile_ref(pa, pb, eps=1e-3):
+    """Gravitational accelerations on chunk-a particles from chunk-b.
+
+    pa, pb: (B, R, 4) = (x, y, z, mass) -> (B, R, 3)
+    a_i = sum_j m_j * (r_j - r_i) / (|r_j - r_i|^2 + eps)^(3/2)
+    (Plummer softening; G folded into masses.)
+    """
+    ra = pa[..., :3]
+    rb = pb[..., :3]
+    mb = pb[..., 3]  # (B, R)
+    d = rb[:, None, :, :] - ra[:, :, None, :]  # (B, R, R, 3)
+    r2 = jnp.sum(d * d, axis=-1) + eps  # (B, R, R)
+    inv_r3 = r2 ** (-1.5)
+    return jnp.einsum("bijk,bij,bj->bik", d, inv_r3, mb)
+
+
+def collision_tile_ref(boxa, boxb):
+    """AABB overlap tests between two box chunks.
+
+    boxa, boxb: (B, R, 6) = (xmin, ymin, zmin, xmax, ymax, zmax)
+    -> (B, R, R) f32 in {0, 1}: 1 where the boxes overlap on all axes.
+    """
+    amin = boxa[..., :3][:, :, None, :]  # (B, R, 1, 3)
+    amax = boxa[..., 3:][:, :, None, :]
+    bmin = boxb[..., :3][:, None, :, :]  # (B, 1, R, 3)
+    bmax = boxb[..., 3:][:, None, :, :]
+    overlap = jnp.logical_and(amin <= bmax, bmin <= amax)  # (B, R, R, 3)
+    return jnp.all(overlap, axis=-1).astype(jnp.float32)
+
+
+def triple_tile_ref(pi, pj, pk, eps=1e-3):
+    """Axilrod–Teller triple-dipole energy over a tile of triples.
+
+    pi, pj, pk: (B, R, 3) -> (B,): summed AT energy over all R^3
+    triples (i from pi, j from pj, k from pk):
+
+        E = (1 + 3 cos t_i cos t_j cos t_k) / (r_ij r_ik r_jk)^3
+
+    with nu = 1 and Plummer-softened squared distances.
+    """
+    dij = pi[:, :, None, :] - pj[:, None, :, :]  # (B, R, R, 3)
+    dik = pi[:, :, None, :] - pk[:, None, :, :]
+    djk = pj[:, :, None, :] - pk[:, None, :, :]
+    r2ij = jnp.sum(dij * dij, axis=-1) + eps  # (B, Ri, Rj)
+    r2ik = jnp.sum(dik * dik, axis=-1) + eps  # (B, Ri, Rk)
+    r2jk = jnp.sum(djk * djk, axis=-1) + eps  # (B, Rj, Rk)
+    # cos t_i = (dij . dik) / (r_ij r_ik), etc.
+    dot_i = jnp.einsum("bijd,bikd->bijk", dij, dik)
+    dot_j = jnp.einsum("bijd,bjkd->bijk", -dij, djk)
+    dot_k = jnp.einsum("bikd,bjkd->bijk", dik, djk)
+    r2prod = r2ij[:, :, :, None] * r2ik[:, :, None, :] * r2jk[:, None, :, :]
+    denom = r2prod**1.5
+    e = (1.0 + 3.0 * dot_i * dot_j * dot_k / r2prod) / denom
+    return jnp.sum(e, axis=(1, 2, 3))

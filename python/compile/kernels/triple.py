@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: triple-interaction (Axilrod–Teller) tile.
+
+One program instance reduces the AT triple-dipole energy of all R^3
+triples drawn from three R-point chunks — the unit of work a
+lambda3-mapped block owns in the O(n^3) 3-simplex sweep ([11], [6]).
+The (R, R, R) intermediate lives only inside one tile: this is the
+VMEM-tiling answer to the paper's 3-simplex motivation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-3  # matches ref.py
+
+
+def _triple_kernel(pi_ref, pj_ref, pk_ref, out_ref):
+    pi = pi_ref[...]  # (S, R, 3)
+    pj = pj_ref[...]
+    pk = pk_ref[...]
+    dij = pi[:, :, None, :] - pj[:, None, :, :]  # (S, R, R, 3)
+    dik = pi[:, :, None, :] - pk[:, None, :, :]
+    djk = pj[:, :, None, :] - pk[:, None, :, :]
+    r2ij = jnp.sum(dij * dij, axis=-1) + EPS  # (S, Ri, Rj)
+    r2ik = jnp.sum(dik * dik, axis=-1) + EPS  # (S, Ri, Rk)
+    r2jk = jnp.sum(djk * djk, axis=-1) + EPS  # (S, Rj, Rk)
+    dot_i = jnp.einsum("bijd,bikd->bijk", dij, dik)
+    dot_j = jnp.einsum("bijd,bjkd->bijk", -dij, djk)
+    dot_k = jnp.einsum("bikd,bjkd->bijk", dik, djk)
+    r2prod = r2ij[:, :, :, None] * r2ik[:, :, None, :] * r2jk[:, None, :, :]
+    denom = r2prod**1.5
+    e = (1.0 + 3.0 * dot_i * dot_j * dot_k / r2prod) / denom
+    out_ref[...] = jnp.sum(e, axis=(1, 2, 3))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "slab"))
+def triple_tile(pi, pj, pk, interpret=True, slab=None):
+    """Batched AT energy tiles: 3 x (B, R, 3) -> (B,).
+
+    slab=B (default) collapses the grid to one program instance — the
+    interpret-mode fast configuration (§Perf)."""
+    b, r, c = pi.shape
+    assert c == 3 and pj.shape == (b, r, 3) and pk.shape == (b, r, 3)
+    slab = b if slab is None else slab
+    assert b % slab == 0
+    return pl.pallas_call(
+        _triple_kernel,
+        grid=(b // slab,),
+        in_specs=[
+            pl.BlockSpec((slab, r, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((slab, r, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((slab, r, 3), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((slab,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), pi.dtype),
+        interpret=interpret,
+    )(pi, pj, pk)

@@ -1,0 +1,55 @@
+"""L2 — the JAX compute graphs that get AOT-lowered for the Rust side.
+
+Each model composes an L1 Pallas kernel with the pre/post-processing
+that belongs on-device (so the Rust hot path ships raw chunk tensors
+and receives finished tile results). The shapes are fixed at lowering
+time (one artifact per (B, R, ...) configuration, chosen in aot.py);
+Rust pads the final partial batch.
+
+Python runs only at `make artifacts`; nothing here is imported at
+serving time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.collision import collision_tile
+from .kernels.edm import edm_tile
+from .kernels.nbody import nbody_tile
+from .kernels.triple import triple_tile
+
+
+def edm_model(xa, xb):
+    """Batched EDM tiles, returning *squared* distances.
+
+    (B, R, D) x (B, R, D) -> (B, R, R). Squared distances are what the
+    downstream consumers (k-NN screening, DNA distance matrices [22])
+    threshold on; taking the sqrt on-device would only lose precision
+    for the comparison use-case.
+    """
+    return (edm_tile(xa, xb),)
+
+
+def edm_threshold_model(xa, xb, r2):
+    """EDM tile + on-device epsilon-neighbour counting.
+
+    (B, R, D) x (B, R, D) x scalar -> (B,): per-tile count of pairs
+    with squared distance <= r2. Demonstrates kernel + reduction
+    fusion in one artifact (the XLA fusion shows up in the HLO).
+    """
+    d2 = edm_tile(xa, xb)
+    return (jnp.sum(jnp.where(d2 <= r2, 1.0, 0.0), axis=(1, 2)),)
+
+
+def nbody_model(pa, pb):
+    """Batched force tiles: (B, R, 4) x (B, R, 4) -> (B, R, 3)."""
+    return (nbody_tile(pa, pb),)
+
+
+def collision_model(boxa, boxb):
+    """Batched AABB overlap tiles: (B, R, 6) x2 -> (B, R, R) in {0,1}."""
+    return (collision_tile(boxa, boxb),)
+
+
+def triple_model(pi, pj, pk):
+    """Batched Axilrod–Teller tile energies: 3 x (B, R, 3) -> (B,)."""
+    return (triple_tile(pi, pj, pk),)

@@ -1,0 +1,137 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle,
+swept over shapes and dtypes with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import collision, edm, nbody, ref, triple
+
+SEED = st.integers(min_value=0, max_value=2**31 - 1)
+BATCH = st.integers(min_value=1, max_value=5)
+RHO = st.sampled_from([1, 2, 4, 8, 16])
+DIM = st.sampled_from([1, 2, 3, 8])
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=SEED, b=BATCH, r=RHO, d=DIM)
+def test_edm_matches_ref(seed, b, r, d):
+    rng = _rng(seed)
+    xa = jnp.asarray(rng.normal(size=(b, r, d)).astype(np.float32))
+    xb = jnp.asarray(rng.normal(size=(b, r, d)).astype(np.float32))
+    np.testing.assert_allclose(
+        edm.edm_tile(xa, xb), ref.edm_tile_ref(xa, xb), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=SEED, b=BATCH, r=RHO)
+def test_nbody_matches_ref(seed, b, r):
+    rng = _rng(seed)
+    pa = jnp.asarray(rng.normal(size=(b, r, 4)).astype(np.float32))
+    pb = jnp.asarray(rng.normal(size=(b, r, 4)).astype(np.float32))
+    np.testing.assert_allclose(
+        nbody.nbody_tile(pa, pb),
+        ref.nbody_tile_ref(pa, pb),
+        rtol=5e-4,
+        atol=5e-4,
+    )
+
+
+def _boxes(rng, b, r):
+    lo = rng.normal(size=(b, r, 3)).astype(np.float32)
+    ext = rng.uniform(0.05, 1.5, size=(b, r, 3)).astype(np.float32)
+    return jnp.asarray(np.concatenate([lo, lo + ext], axis=-1))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=SEED, b=BATCH, r=RHO)
+def test_collision_matches_ref(seed, b, r):
+    rng = _rng(seed)
+    ba = _boxes(rng, b, r)
+    bb = _boxes(rng, b, r)
+    got = collision.collision_tile(ba, bb)
+    want = ref.collision_tile_ref(ba, bb)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=SEED, b=st.integers(min_value=1, max_value=3), r=st.sampled_from([1, 2, 4, 8]))
+def test_triple_matches_ref(seed, b, r):
+    rng = _rng(seed)
+    pts = [
+        jnp.asarray(rng.normal(size=(b, r, 3)).astype(np.float32))
+        for _ in range(3)
+    ]
+    got = triple.triple_tile(*pts)
+    want = ref.triple_tile_ref(*pts)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+# --- Deterministic edge cases -------------------------------------------
+
+def test_edm_zero_distance_on_identical_points():
+    x = jnp.ones((2, 4, 3), jnp.float32)
+    out = np.asarray(edm.edm_tile(x, x))
+    np.testing.assert_allclose(out, 0.0, atol=1e-5)
+
+
+def test_edm_known_values():
+    xa = jnp.asarray([[[0.0, 0.0]]], jnp.float32)  # (1,1,2)
+    xb = jnp.asarray([[[3.0, 4.0]]], jnp.float32)
+    out = np.asarray(edm.edm_tile(xa, xb))
+    np.testing.assert_allclose(out, [[[25.0]]], rtol=1e-6)
+
+
+def test_edm_symmetry():
+    rng = _rng(7)
+    x = jnp.asarray(rng.normal(size=(1, 8, 3)).astype(np.float32))
+    out = np.asarray(edm.edm_tile(x, x))[0]
+    np.testing.assert_allclose(out, out.T, atol=1e-5)
+
+
+def test_nbody_equal_masses_opposite_forces():
+    # Two mirrored particles: accelerations must be opposite.
+    pa = jnp.asarray([[[1.0, 0.0, 0.0, 1.0], [-1.0, 0.0, 0.0, 1.0]]], jnp.float32)
+    out = np.asarray(nbody.nbody_tile(pa, pa))[0]
+    np.testing.assert_allclose(out[0], -out[1], atol=1e-6)
+    assert out[0][0] < 0.0  # particle at +x pulled toward -x
+
+
+def test_nbody_zero_mass_exerts_no_force():
+    pa = jnp.asarray([[[0.0, 0.0, 0.0, 1.0]]], jnp.float32)
+    pb = jnp.asarray([[[1.0, 1.0, 1.0, 0.0]]], jnp.float32)
+    out = np.asarray(nbody.nbody_tile(pa, pb))
+    np.testing.assert_allclose(out, 0.0, atol=1e-7)
+
+
+def test_collision_disjoint_and_contained():
+    a = jnp.asarray([[[0, 0, 0, 1, 1, 1], [10, 10, 10, 11, 11, 11]]], jnp.float32)
+    b = jnp.asarray([[[0.5, 0.5, 0.5, 2, 2, 2], [-5, -5, -5, -4, -4, -4]]], jnp.float32)
+    out = np.asarray(collision.collision_tile(a, b))[0]
+    assert out[0, 0] == 1.0  # overlapping
+    assert out[0, 1] == 0.0  # disjoint
+    assert out[1, 0] == 0.0
+    assert out[1, 1] == 0.0
+
+
+def test_triple_energy_is_permutation_invariant_on_identical_chunks():
+    rng = _rng(11)
+    p = jnp.asarray(rng.normal(size=(1, 4, 3)).astype(np.float32))
+    e1 = np.asarray(triple.triple_tile(p, p, p))
+    e2 = np.asarray(ref.triple_tile_ref(p, p, p))
+    np.testing.assert_allclose(e1, e2, rtol=1e-3)
+
+
+def test_kernels_are_jittable_and_stable_across_calls():
+    rng = _rng(3)
+    xa = jnp.asarray(rng.normal(size=(2, 8, 8)).astype(np.float32))
+    first = np.asarray(edm.edm_tile(xa, xa))
+    second = np.asarray(edm.edm_tile(xa, xa))
+    np.testing.assert_array_equal(first, second)

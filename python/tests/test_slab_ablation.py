@@ -1,0 +1,59 @@
+"""Ablation for the §Perf slab parameter: the kernels must compute
+identical results for every slab size that divides the batch (the slab
+only changes the HBM<->VMEM schedule, never the math)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import collision, edm, nbody, ref, triple
+
+
+@pytest.mark.parametrize("slab", [1, 2, 8, 16])
+def test_edm_slab_invariant(slab):
+    rng = np.random.default_rng(0)
+    xa = jnp.asarray(rng.normal(size=(16, 8, 4)).astype(np.float32))
+    xb = jnp.asarray(rng.normal(size=(16, 8, 4)).astype(np.float32))
+    full = edm.edm_tile(xa, xb)  # slab = B
+    sliced = edm.edm_tile(xa, xb, slab=slab)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(sliced), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(sliced), np.asarray(ref.edm_tile_ref(xa, xb)), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("slab", [1, 4, 8])
+def test_nbody_slab_invariant(slab):
+    rng = np.random.default_rng(1)
+    pa = jnp.asarray(rng.normal(size=(8, 4, 4)).astype(np.float32))
+    pb = jnp.asarray(rng.normal(size=(8, 4, 4)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(nbody.nbody_tile(pa, pb)),
+        np.asarray(nbody.nbody_tile(pa, pb, slab=slab)),
+        rtol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("slab", [1, 4])
+def test_collision_and_triple_slab_invariant(slab):
+    rng = np.random.default_rng(2)
+    lo = rng.normal(size=(4, 4, 3)).astype(np.float32)
+    boxes = jnp.asarray(
+        np.concatenate([lo, lo + rng.uniform(0.1, 1, lo.shape).astype(np.float32)], -1)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(collision.collision_tile(boxes, boxes)),
+        np.asarray(collision.collision_tile(boxes, boxes, slab=slab)),
+    )
+    pts = jnp.asarray(rng.normal(size=(4, 4, 3)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(triple.triple_tile(pts, pts, pts)),
+        np.asarray(triple.triple_tile(pts, pts, pts, slab=slab)),
+        rtol=1e-5,
+    )
+
+
+def test_slab_must_divide_batch():
+    x = jnp.zeros((6, 4, 2), jnp.float32)
+    with pytest.raises(AssertionError):
+        edm.edm_tile(x, x, slab=4)  # 4 does not divide 6

@@ -1,0 +1,301 @@
+//! Report generation — the executable versions of the paper's tables
+//! and figures (experiment index in DESIGN.md). Every function returns
+//! the formatted table as a `String` so the CLI prints it and the
+//! tests assert on its contents.
+
+pub mod viz;
+
+use crate::gensearch;
+use crate::maps::{
+    alpha, domain_volume, map2_by_name, map3_by_name, space_efficiency, ThreadMap,
+};
+use crate::simplex::recursive_set::{alpha_half, recursive_volume_half};
+use crate::simplex::volume::{bb_alpha, bb_alpha_limit, simplex_volume};
+
+/// E1 (eq. 2-4, Figs. 2-3): simplex vs bounding-box volumes and the
+/// waste ratio α for m = 1..=m_max at a reference n.
+pub fn report_volumes(n: u64, m_max: u32) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "E1: bounding-box waste (eq. 4), n = {n}\n\
+         {:>3} {:>22} {:>22} {:>12} {:>12}\n",
+        "m", "V(simplex)", "V(bounding-box)", "alpha(n)", "lim m!-1"
+    ));
+    for m in 1..=m_max {
+        out.push_str(&format!(
+            "{:>3} {:>22} {:>22} {:>12.4} {:>12.1}\n",
+            m,
+            simplex_volume(n, m),
+            (n as u128).pow(m),
+            bb_alpha(n, m),
+            bb_alpha_limit(m),
+        ));
+    }
+    out
+}
+
+/// E2/E6 summary: per-map parallel volume, efficiency and α at size nb.
+pub fn report_maps(nb: u64) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Map space efficiency at nb = {nb} (V(domain) m=2: {}, m=3: {})\n\
+         {:<14} {:>3} {:>14} {:>10} {:>10} {:>8}\n",
+        domain_volume(nb, 2),
+        domain_volume(nb, 3),
+        "map",
+        "m",
+        "V(parallel)",
+        "eff",
+        "alpha",
+        "passes"
+    ));
+    let mut rows: Vec<Box<dyn ThreadMap>> = Vec::new();
+    for name in crate::maps::MAP2_NAMES {
+        rows.push(map2_by_name(name).unwrap());
+    }
+    for name in crate::maps::MAP3_NAMES {
+        rows.push(map3_by_name(name).unwrap());
+    }
+    for map in &rows {
+        if !map.supports(nb) {
+            continue;
+        }
+        out.push_str(&format!(
+            "{:<14} {:>3} {:>14} {:>10.4} {:>10.4} {:>8}\n",
+            map.name(),
+            map.m(),
+            map.parallel_volume(nb),
+            space_efficiency(map.as_ref(), nb),
+            alpha(map.as_ref(), nb),
+            map.passes(nb),
+        ));
+    }
+    out
+}
+
+/// E4 (eq. 17-19, Fig. 5): the arity-3 recursive set's extra volume
+/// converging to 1/5.
+pub fn report_arity3(k_max: u32) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "E4: arity-3 recursive set vs tetrahedron (eq. 19: lim = 1/5)\n\
+         {:>10} {:>18} {:>18} {:>10}\n",
+        "n", "V(S_n^3) beta=3", "V(tet_n)", "alpha"
+    ));
+    for k in 2..=k_max {
+        let n = 1u64 << k;
+        let v_s = recursive_volume_half(n, 3, 3);
+        let v_d = simplex_volume(n, 3);
+        out.push_str(&format!(
+            "{:>10} {:>18} {:>18} {:>10.5}\n",
+            n,
+            v_s,
+            v_d,
+            v_s as f64 / v_d as f64 - 1.0
+        ));
+    }
+    out
+}
+
+/// E5 (eq. 20): launch counts of the §III.B recursive map vs the
+/// 32-concurrent-kernel budget and λ3's single pass.
+pub fn report_launches(k_max: u32) -> String {
+    use crate::maps::lambda3_recursive::launch_count;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "E5: kernel launches (eq. 20) — lambda3-rec vs lambda3, cap 32\n\
+         {:>8} {:>14} {:>12} {:>10}\n",
+        "nb", "rec launches", "waves(cap32)", "lambda3"
+    ));
+    for k in 1..=k_max {
+        let nb = 1u64 << k;
+        let lc = launch_count(nb) + 1;
+        out.push_str(&format!(
+            "{:>8} {:>14} {:>12} {:>10}\n",
+            nb,
+            lc,
+            lc.div_ceil(32),
+            1
+        ));
+    }
+    out
+}
+
+/// E8 (eq. 28-29): r=1/2, β=2 waste blow-up table.
+pub fn report_general(m_max: u32) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "E8: r=1/2, beta=2 general-m waste (eq. 29: lim = m!/(2^m-2) - 1)\n\
+         {:>3} {:>14} {:>14}\n",
+        "m", "alpha(n=2^14)", "alpha limit"
+    ));
+    for m in 2..=m_max {
+        out.push_str(&format!(
+            "{:>3} {:>14.4} {:>14.4}\n",
+            m,
+            alpha_half(1 << 14, m, 2),
+            crate::simplex::recursive_set::alpha_limit_half_beta2(m),
+        ));
+    }
+    out
+}
+
+/// E9 (§III.D): the (m, β) search table.
+pub fn report_search(m_lo: u32, m_hi: u32, betas: &[f64], horizon: u64) -> String {
+    let rows = gensearch::search((m_lo, m_hi), betas, horizon);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "E9: §III.D parameter search, r = m!^(-1/m), horizon = {horizon}\n\
+         {:>3} {:>8} {:>10} {:>12} {:>12} {:>14}\n",
+        "m", "beta", "r", "n0", "waste lim", "eff vs BB"
+    ));
+    for r in &rows {
+        out.push_str(&format!(
+            "{:>3} {:>8} {:>10.5} {:>12} {:>12.4} {:>14.1}\n",
+            r.m,
+            r.beta,
+            r.r,
+            r.n0.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
+            r.waste_limit,
+            r.efficiency_vs_bb,
+        ));
+    }
+    out
+}
+
+/// §III.A non-power-of-two approaches: waste (approach 1) vs launch
+/// count (approach 2), for sizes around a power of two.
+pub fn report_nonpow2() -> String {
+    use crate::maps::{CoverFromAbove, CoverFromBelow2, Lambda2Map};
+    let mut out = String::new();
+    out.push_str(
+        "§III.A non-pow2 handling: approach 1 (round up + filter) vs approach 2 (binary segments)
+",
+    );
+    out.push_str(&format!(
+        "{:>6} {:>16} {:>14} {:>16} {:>14}
+",
+        "nb", "above: V(par)/V", "above passes", "below: V(par)/V", "below passes"
+    ));
+    let above = CoverFromAbove::new(Lambda2Map);
+    let below = CoverFromBelow2;
+    for nb in [9u64, 12, 17, 21, 33, 63, 65, 100, 127, 129] {
+        let dv = domain_volume(nb, 2) as f64;
+        out.push_str(&format!(
+            "{:>6} {:>16.4} {:>14} {:>16.4} {:>14}
+",
+            nb,
+            above.parallel_volume(nb) as f64 / dv,
+            above.passes(nb),
+            below.parallel_volume(nb) as f64 / dv,
+            below.passes(nb),
+        ));
+    }
+    out
+}
+
+/// E11: the Avril f32 accuracy cliff.
+pub fn report_avril() -> String {
+    use crate::maps::avril::f32_error_rate;
+    let mut out = String::new();
+    out.push_str(
+        "E11: Avril thread-map f32 error rate (paper: accurate n in [0, 3000])\n",
+    );
+    out.push_str(&format!("{:>10} {:>14}\n", "n", "err rate"));
+    for n in [512u64, 1000, 2000, 3000, 5000, 10_000, 20_000, 50_000] {
+        let stride = (n * (n - 1) / 2 / 20_000).max(1);
+        out.push_str(&format!(
+            "{:>10} {:>14.6}\n",
+            n,
+            f32_error_rate(n, stride)
+        ));
+    }
+    out
+}
+
+/// E12: Ries multi-pass vs λ2 single-pass.
+pub fn report_ries(k_max: u32) -> String {
+    use crate::maps::{Lambda2Map, RiesMap};
+    let mut out = String::new();
+    out.push_str(&format!(
+        "E12: launch passes — Ries recursive partition vs lambda2\n\
+         {:>8} {:>10} {:>10}\n",
+        "nb", "ries", "lambda2"
+    ));
+    for k in 1..=k_max {
+        let nb = 1u64 << k;
+        out.push_str(&format!(
+            "{:>8} {:>10} {:>10}\n",
+            nb,
+            RiesMap.passes(nb),
+            Lambda2Map.passes(nb)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn volumes_report_shows_factorial_limits() {
+        let r = report_volumes(4096, 5);
+        assert!(r.contains("119.0"), "5!-1 = 119:\n{r}");
+        assert!(r.contains("E1"));
+    }
+
+    #[test]
+    fn maps_report_lists_all_supported_maps() {
+        let r = report_maps(64);
+        for name in ["bb2", "lambda2", "enum2", "rb", "ries", "bb3", "lambda3", "enum3"] {
+            assert!(r.contains(name), "missing {name}:\n{r}");
+        }
+    }
+
+    #[test]
+    fn arity3_report_converges_to_one_fifth() {
+        let r = report_arity3(12);
+        assert!(r.contains("0.2000") || r.contains("0.19"), "{r}");
+    }
+
+    #[test]
+    fn launches_report_shows_explosion() {
+        let r = report_launches(8);
+        assert!(r.contains("3281")); // (3^8-1)/2 + 1 at nb=256
+    }
+
+    #[test]
+    fn general_report_matches_eq29_values() {
+        let r = report_general(7);
+        assert!(r.contains("3.0000"), "m=5 → 3x:\n{r}");
+        assert!(r.contains("39.0000"), "m=7 → 39x:\n{r}");
+    }
+
+    #[test]
+    fn search_report_has_n0_column() {
+        let r = report_search(4, 5, &[2.0, 8.0], 1 << 40);
+        assert!(r.contains("512"), "n0(5,2)=512:\n{r}");
+    }
+
+    #[test]
+    fn nonpow2_report_shows_tradeoff() {
+        let r = report_nonpow2();
+        // Approach 2 always shows ratio 1.0000 (zero waste).
+        assert!(r.contains("1.0000"), "{r}");
+        // Approach 1 always shows a single pass.
+        assert!(r.contains("§III.A"));
+    }
+
+    #[test]
+    fn avril_report_runs() {
+        let r = report_avril();
+        assert!(r.contains("20000") || r.contains("20_000") || r.contains(" 20000"));
+    }
+
+    #[test]
+    fn ries_report_passes() {
+        let r = report_ries(10);
+        assert!(r.contains("11")); // log2(1024)+1
+    }
+}

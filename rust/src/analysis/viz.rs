@@ -1,0 +1,167 @@
+//! ASCII visualization of the maps — the executable version of the
+//! paper's Figures 4, 6 and 7: render where every parallel block lands
+//! in data space, labelled by recursion level, so the recursive
+//! structure is visible at a glance.
+//!
+//! `simplexmap show --map lambda2 --nb 16` prints e.g.
+//!
+//! ```text
+//! 0
+//! 1 0
+//! 2 2 1
+//! 2 2 1 0
+//! ...
+//! ```
+//!
+//! where the digit is the λ2 recursion level that produced the block
+//! (`.` = never covered — must not appear for the bijective maps).
+
+use crate::maps::ThreadMap;
+
+/// Character for a block produced by parallel block `w` of pass `pass`.
+fn label(map_name: &str, w: [u64; 3], pass: u64) -> char {
+    let level = match map_name {
+        // λ2: level = ⌊log2 y⌋ of the parallel row (diagonal rows get 'D').
+        "lambda2" => {
+            if w[1] == 0 {
+                return 'D';
+            }
+            63 - w[1].leading_zeros() as u64
+        }
+        // Ries: the pass is the level.
+        "ries" => pass,
+        // Everything else: label by pass (multi-pass) or a dot-free '#'.
+        _ => pass,
+    };
+    char::from_digit((level % 36) as u32, 36).unwrap_or('#')
+}
+
+/// Render the m=2 data triangle with per-block labels.
+pub fn render_m2(map: &dyn ThreadMap, nb: u64) -> String {
+    assert_eq!(map.m(), 2);
+    let mut cells = vec![vec!['.'; nb as usize]; nb as usize];
+    for pass in 0..map.passes(nb) {
+        for w in map.grid(nb, pass).iter() {
+            if let Some(d) = map.map_block(nb, pass, w) {
+                let (c, r) = (d[0] as usize, d[1] as usize);
+                if r < nb as usize && c <= r {
+                    cells[r][c] = if map.name() == "lambda2" && w[1] == nb {
+                        'D'
+                    } else {
+                        label(map.name(), w, pass)
+                    };
+                }
+            }
+        }
+    }
+    let mut out = String::new();
+    for (r, row) in cells.iter().enumerate() {
+        for c in 0..=r {
+            out.push(row[c]);
+            out.push(' ');
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render z-slices of the m=3 tetrahedron; label = recursion level
+/// ('0' main cube identity part, 'f' folded, digits for deeper levels,
+/// 'P' diagonal plane).
+pub fn render_m3(map: &dyn ThreadMap, nb: u64) -> String {
+    assert_eq!(map.m(), 3);
+    let n = nb as usize;
+    let mut cells = vec![vec![vec!['.'; n]; n]; n];
+    for pass in 0..map.passes(nb) {
+        for w in map.grid(nb, pass).iter() {
+            if let Some(d) = map.map_block(nb, pass, w) {
+                let (x, y, z) = (d[0] as usize, d[1] as usize, d[2] as usize);
+                if x + y + z < n {
+                    cells[z][y][x] = classify_m3(map.name(), nb, w, d);
+                }
+            }
+        }
+    }
+    let mut out = String::new();
+    for (z, plane) in cells.iter().enumerate() {
+        out.push_str(&format!("z = {z}\n"));
+        for (y, row) in plane.iter().enumerate() {
+            if row.iter().take(n - z - y.min(n - z)).all(|&c| c == '.') && y + z >= n {
+                continue;
+            }
+            let width = n - z - y;
+            if width == 0 {
+                continue;
+            }
+            out.push_str("  ");
+            for c in row.iter().take(width) {
+                out.push(*c);
+                out.push(' ');
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+fn classify_m3(name: &str, nb: u64, w: [u64; 3], d: [u64; 3]) -> char {
+    if name != "lambda3" {
+        return '#';
+    }
+    if w[2] >= 3 * nb / 4 {
+        return 'P'; // diagonal plane layers
+    }
+    if w[2] < nb / 2 {
+        // Main cube: identity or folded?
+        return if d == w { '0' } else { 'f' };
+    }
+    // Deeper levels: level from the y coordinate.
+    let u = nb / 2 - 1 - w[1];
+    let level_log = 63 - u.leading_zeros() as u64;
+    char::from_digit(((level_log + 1) % 36) as u32, 36).unwrap_or('#')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::{Lambda2Map, Lambda3Map, RiesMap};
+
+    #[test]
+    fn lambda2_rendering_has_no_holes() {
+        let s = render_m2(&Lambda2Map, 16);
+        assert!(!s.contains('.'), "bijective map leaves no holes:\n{s}");
+        // Levels 0..3 and the diagonal all appear.
+        for c in ['0', '1', '2', '3', 'D'] {
+            assert!(s.contains(c), "missing label {c}:\n{s}");
+        }
+    }
+
+    #[test]
+    fn lambda2_levels_form_squares() {
+        // Level 2 of nb=16 consists of 4×4 squares just below the
+        // diagonal; check one known cell.
+        let s = render_m2(&Lambda2Map, 16);
+        let rows: Vec<&str> = s.lines().collect();
+        // Row 4 (0-indexed), col 0 belongs to the level-2 square
+        // (cols [0,4) × rows [4,8)).
+        assert_eq!(rows[4].chars().next(), Some('2'));
+    }
+
+    #[test]
+    fn ries_rendering_matches_lambda2_geometry() {
+        // Same squares, labelled by pass instead of row-level.
+        let l = render_m2(&Lambda2Map, 8);
+        let r = render_m2(&RiesMap, 8);
+        assert!(!r.contains('.'));
+        assert_eq!(l.len(), r.len());
+    }
+
+    #[test]
+    fn lambda3_rendering_covers_tetra() {
+        let s = render_m3(&Lambda3Map, 8);
+        assert!(!s.contains('.'), "no holes:\n{s}");
+        for c in ['0', 'f', '1', 'P'] {
+            assert!(s.contains(c), "missing label {c}:\n{s}");
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Tile batcher: the bridge between λ-mapped blocks and the fixed-shape
+//! AOT executables.
+//!
+//! The artifacts are compiled for a fixed batch `B` of tiles (see
+//! python/compile/aot.py); real workloads produce an arbitrary number
+//! of mapped blocks. The batcher packs tile operands into `B`-sized
+//! batches, zero-pads the last one, executes, and hands each tile's
+//! output slice back with its block identity. Padding tiles are
+//! computed and discarded — exactly like the filler threads of a
+//! bounding-box launch, but bounded by `B-1` tiles per job.
+
+use crate::runtime::{ExecHandle, Result, TensorF32};
+
+/// One tile's operands: `inputs[i]` is the flat f32 chunk for artifact
+/// input `i` (length = per-tile element count of that input).
+#[derive(Clone, Debug)]
+pub struct TileInput {
+    pub block_id: u64,
+    pub inputs: Vec<Vec<f32>>,
+}
+
+/// One tile's output slice.
+#[derive(Clone, Debug)]
+pub struct TileOutput {
+    pub block_id: u64,
+    pub data: Vec<f32>,
+}
+
+/// Batches tiles through one artifact.
+pub struct TileBatcher {
+    exe: ExecHandle,
+    artifact: String,
+    batch: usize,
+    per_tile_in: Vec<usize>,
+    per_tile_out: usize,
+    /// Extra leading inputs shared by every tile (e.g. the scalar
+    /// threshold of edm_threshold), passed through unbatched.
+    scalar_inputs: Vec<TensorF32>,
+    pub batches_run: u64,
+    pub tiles_padded: u64,
+}
+
+impl TileBatcher {
+    /// `artifact` must have all batched inputs shaped (B, ...) and the
+    /// output shaped (B, ...); trailing scalar inputs are configured
+    /// via `with_scalar`.
+    pub fn new(exe: ExecHandle, artifact: &str) -> Result<TileBatcher> {
+        let spec = exe.spec(artifact)?;
+        let batch = spec.output_shape[0];
+        let batched = spec
+            .input_shapes
+            .iter()
+            .filter(|s| !s.is_empty() && s[0] == batch)
+            .count();
+        let per_tile_in = spec.input_shapes[..batched]
+            .iter()
+            .map(|s| s[1..].iter().product::<usize>())
+            .collect();
+        let per_tile_out = spec.output_shape[1..].iter().product::<usize>().max(1);
+        Ok(TileBatcher {
+            exe,
+            artifact: artifact.to_string(),
+            batch,
+            per_tile_in,
+            per_tile_out,
+            scalar_inputs: Vec::new(),
+            batches_run: 0,
+            tiles_padded: 0,
+        })
+    }
+
+    /// Append a shared (unbatched) trailing input.
+    pub fn with_scalar(mut self, t: TensorF32) -> Self {
+        self.scalar_inputs.push(t);
+        self
+    }
+
+    /// Tiles per executable call.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Execute all tiles, preserving input order in the output.
+    ///
+    /// Batches are *dispatched asynchronously* and round-robin over the
+    /// executor pool, so up to `pool_size` batches run concurrently
+    /// while this thread assembles the next operands (§Perf: 2.1x on
+    /// a 4-thread pool vs the serial loop).
+    pub fn run(&mut self, tiles: &[TileInput]) -> Result<Vec<TileOutput>> {
+        let spec = self.exe.spec(&self.artifact)?.clone();
+        let mut pending = Vec::new();
+        for chunk in tiles.chunks(self.batch) {
+            let inputs = self.assemble(&spec, chunk)?;
+            let rx = self.exe.run_f32_async(&self.artifact, inputs)?;
+            self.batches_run += 1;
+            self.tiles_padded += (self.batch - chunk.len()) as u64;
+            pending.push((chunk, rx));
+        }
+        let mut out = Vec::with_capacity(tiles.len());
+        for (chunk, rx) in pending {
+            let result = rx
+                .recv()
+                .map_err(|_| crate::runtime::RuntimeError::Xla("executor dropped reply".into()))??;
+            out.extend(chunk.iter().enumerate().map(|(t, tile)| TileOutput {
+                block_id: tile.block_id,
+                data: result.data[t * self.per_tile_out..(t + 1) * self.per_tile_out]
+                    .to_vec(),
+            }));
+        }
+        Ok(out)
+    }
+
+    fn assemble(
+        &self,
+        spec: &crate::runtime::ArtifactSpec,
+        chunk: &[TileInput],
+    ) -> Result<Vec<TensorF32>> {
+        let n_batched = self.per_tile_in.len();
+        let mut inputs: Vec<TensorF32> = Vec::with_capacity(n_batched + 1);
+        for (i, &per_tile) in self.per_tile_in.iter().enumerate() {
+            let mut flat = vec![0f32; self.batch * per_tile];
+            for (t, tile) in chunk.iter().enumerate() {
+                debug_assert_eq!(tile.inputs[i].len(), per_tile);
+                flat[t * per_tile..(t + 1) * per_tile].copy_from_slice(&tile.inputs[i]);
+            }
+            inputs.push(TensorF32::new(spec.input_shapes[i].clone(), flat));
+        }
+        inputs.extend(self.scalar_inputs.iter().cloned());
+        Ok(inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Pure logic tests for batch arithmetic; executor-backed tests are
+    // in rust/tests/coordinator_e2e.rs (require artifacts).
+
+    #[test]
+    fn chunking_math() {
+        // 130 tiles at B=64 → 3 batches, 62 padded in the last.
+        let tiles = 130usize;
+        let batch = 64usize;
+        let batches = tiles.div_ceil(batch);
+        assert_eq!(batches, 3);
+        assert_eq!(batches * batch - tiles, 62);
+    }
+}

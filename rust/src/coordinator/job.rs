@@ -1,0 +1,236 @@
+//! Job model: what a client asks the coordinator to run, and what it
+//! gets back. JSON-serializable (hand-rolled `util::json`) for the
+//! TCP server and the CLI.
+
+use crate::util::json::Json;
+
+/// Which paper workload to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// Euclidean distance matrix (2-simplex) — [13], [12], [22].
+    Edm,
+    /// AABB collision culling (2-simplex) — [1].
+    Collision,
+    /// Pairwise gravitational n-body (2-simplex) — [23], [2].
+    NBody,
+    /// Triple-interaction Axilrod–Teller (3-simplex) — [11], [6].
+    Triple,
+    /// Cellular automaton on a triangular domain (2-simplex) — [4].
+    Cellular,
+    /// Triangular matrix-vector product (2-simplex) — [21], [5].
+    TriMatVec,
+}
+
+impl WorkloadKind {
+    pub fn parse(s: &str) -> Option<WorkloadKind> {
+        match s {
+            "edm" => Some(WorkloadKind::Edm),
+            "collision" => Some(WorkloadKind::Collision),
+            "nbody" => Some(WorkloadKind::NBody),
+            "triple" => Some(WorkloadKind::Triple),
+            "cellular" => Some(WorkloadKind::Cellular),
+            "trimatvec" => Some(WorkloadKind::TriMatVec),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::Edm => "edm",
+            WorkloadKind::Collision => "collision",
+            WorkloadKind::NBody => "nbody",
+            WorkloadKind::Triple => "triple",
+            WorkloadKind::Cellular => "cellular",
+            WorkloadKind::TriMatVec => "trimatvec",
+        }
+    }
+
+    /// Simplex dimensionality of this workload's domain.
+    pub fn m(&self) -> u32 {
+        match self {
+            WorkloadKind::Triple => 3,
+            _ => 2,
+        }
+    }
+
+    pub const ALL: &'static [WorkloadKind] = &[
+        WorkloadKind::Edm,
+        WorkloadKind::Collision,
+        WorkloadKind::NBody,
+        WorkloadKind::Triple,
+        WorkloadKind::Cellular,
+        WorkloadKind::TriMatVec,
+    ];
+}
+
+/// Where tiles execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust tile kernels (hot-path reference; always available).
+    Rust,
+    /// AOT-compiled Pallas kernels through PJRT (requires artifacts).
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "rust" => Some(Backend::Rust),
+            "pjrt" => Some(Backend::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Rust => "rust",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// A job request.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub workload: WorkloadKind,
+    /// Problem size in blocks per side (threads = nb · ρ).
+    pub nb: u64,
+    pub map: String,
+    pub backend: Backend,
+    pub seed: u64,
+}
+
+impl Job {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", self.workload.name().into()),
+            ("nb", self.nb.into()),
+            ("map", self.map.as_str().into()),
+            ("backend", self.backend.name().into()),
+            ("seed", self.seed.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Job> {
+        Some(Job {
+            workload: WorkloadKind::parse(j.get("workload")?.as_str()?)?,
+            nb: j.get("nb")?.as_u64()?,
+            map: j.get("map")?.as_str()?.to_string(),
+            backend: j
+                .get("backend")
+                .and_then(Json::as_str)
+                .and_then(Backend::parse)
+                .unwrap_or(Backend::Rust),
+            seed: j.get("seed").and_then(Json::as_u64).unwrap_or(42),
+        })
+    }
+}
+
+/// A completed job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub job: Job,
+    /// Workload-specific scalar outputs (checksums, counts, energies).
+    pub outputs: Vec<(String, f64)>,
+    pub blocks_launched: u64,
+    pub blocks_mapped: u64,
+    pub threads_launched: u64,
+    pub wall_secs: f64,
+    pub tile_batches: u64,
+}
+
+impl JobResult {
+    pub fn block_efficiency(&self) -> f64 {
+        self.blocks_mapped as f64 / self.blocks_launched as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let outputs = Json::Obj(
+            self.outputs
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("job", self.job.to_json()),
+            ("outputs", outputs),
+            ("blocks_launched", self.blocks_launched.into()),
+            ("blocks_mapped", self.blocks_mapped.into()),
+            ("threads_launched", self.threads_launched.into()),
+            ("block_efficiency", self.block_efficiency().into()),
+            ("wall_secs", self.wall_secs.into()),
+            ("tile_batches", self.tile_batches.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn workload_parse_roundtrip() {
+        for w in WorkloadKind::ALL {
+            assert_eq!(WorkloadKind::parse(w.name()), Some(*w));
+        }
+        assert_eq!(WorkloadKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn workload_dimensionality() {
+        assert_eq!(WorkloadKind::Edm.m(), 2);
+        assert_eq!(WorkloadKind::Triple.m(), 3);
+    }
+
+    #[test]
+    fn job_json_roundtrip() {
+        let j = Job {
+            workload: WorkloadKind::Edm,
+            nb: 64,
+            map: "lambda2".into(),
+            backend: Backend::Pjrt,
+            seed: 7,
+        };
+        let parsed = Job::from_json(&json::parse(&j.to_json().to_string_compact()).unwrap())
+            .expect("roundtrip");
+        assert_eq!(parsed.workload, j.workload);
+        assert_eq!(parsed.nb, j.nb);
+        assert_eq!(parsed.map, j.map);
+        assert_eq!(parsed.backend, j.backend);
+        assert_eq!(parsed.seed, j.seed);
+    }
+
+    #[test]
+    fn job_defaults_backend_and_seed() {
+        let j = json::parse(r#"{"workload":"nbody","nb":16,"map":"bb"}"#).unwrap();
+        let job = Job::from_json(&j).unwrap();
+        assert_eq!(job.backend, Backend::Rust);
+        assert_eq!(job.seed, 42);
+    }
+
+    #[test]
+    fn result_json_has_efficiency() {
+        let r = JobResult {
+            job: Job {
+                workload: WorkloadKind::Edm,
+                nb: 4,
+                map: "bb".into(),
+                backend: Backend::Rust,
+                seed: 1,
+            },
+            outputs: vec![("count".into(), 10.0)],
+            blocks_launched: 16,
+            blocks_mapped: 10,
+            threads_launched: 4096,
+            wall_secs: 0.5,
+            tile_batches: 1,
+        };
+        let j = r.to_json();
+        assert!((j.get("block_efficiency").unwrap().as_f64().unwrap() - 0.625).abs() < 1e-12);
+        assert_eq!(
+            j.get("outputs").unwrap().get("count").unwrap().as_f64(),
+            Some(10.0)
+        );
+    }
+}

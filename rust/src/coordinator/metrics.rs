@@ -1,0 +1,109 @@
+//! Process-wide coordinator metrics: job counters, per-phase latency
+//! accumulators, tile/batch counters. Snapshots serialize to JSON for
+//! the server's `metrics` command.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats::Welford;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub jobs_accepted: AtomicU64,
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub blocks_mapped: AtomicU64,
+    pub tile_batches: AtomicU64,
+    pub tiles_padded: AtomicU64,
+    map_phase: Mutex<Welford>,
+    exec_phase: Mutex<Welford>,
+    job_wall: Mutex<Welford>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_map_phase(&self, secs: f64) {
+        self.map_phase.lock().unwrap().push(secs);
+    }
+
+    pub fn record_exec_phase(&self, secs: f64) {
+        self.exec_phase.lock().unwrap().push(secs);
+    }
+
+    pub fn record_job(&self, secs: f64) {
+        self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.job_wall.lock().unwrap().push(secs);
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let phase = |w: &Mutex<Welford>| {
+            let w = w.lock().unwrap();
+            Json::obj(vec![
+                ("count", w.count().into()),
+                ("mean_secs", w.mean().into()),
+                ("stddev_secs", w.stddev().into()),
+                ("max_secs", if w.count() > 0 { w.max() } else { 0.0 }.into()),
+            ])
+        };
+        Json::obj(vec![
+            (
+                "jobs_accepted",
+                self.jobs_accepted.load(Ordering::Relaxed).into(),
+            ),
+            (
+                "jobs_completed",
+                self.jobs_completed.load(Ordering::Relaxed).into(),
+            ),
+            (
+                "jobs_failed",
+                self.jobs_failed.load(Ordering::Relaxed).into(),
+            ),
+            (
+                "blocks_mapped",
+                self.blocks_mapped.load(Ordering::Relaxed).into(),
+            ),
+            (
+                "tile_batches",
+                self.tile_batches.load(Ordering::Relaxed).into(),
+            ),
+            (
+                "tiles_padded",
+                self.tiles_padded.load(Ordering::Relaxed).into(),
+            ),
+            ("map_phase", phase(&self.map_phase)),
+            ("exec_phase", phase(&self.exec_phase)),
+            ("job_wall", phase(&self.job_wall)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_counters() {
+        let m = Metrics::new();
+        m.jobs_accepted.fetch_add(3, Ordering::Relaxed);
+        m.record_job(0.5);
+        m.record_job(1.5);
+        m.record_map_phase(0.1);
+        let s = m.snapshot();
+        assert_eq!(s.get("jobs_accepted").unwrap().as_u64(), Some(3));
+        assert_eq!(s.get("jobs_completed").unwrap().as_u64(), Some(2));
+        let wall = s.get("job_wall").unwrap();
+        assert_eq!(wall.get("count").unwrap().as_u64(), Some(2));
+        assert!((wall.get("mean_secs").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_snapshot_is_valid_json() {
+        let s = Metrics::new().snapshot();
+        let text = s.to_string_compact();
+        assert!(crate::util::json::parse(&text).is_ok());
+    }
+}

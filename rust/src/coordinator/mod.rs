@@ -1,0 +1,29 @@
+//! L3 coordinator — the serving layer around the maps.
+//!
+//! The paper's contribution is the *launch geometry*; this module is
+//! the system that exploits it end-to-end, shaped like a (small)
+//! serving runtime:
+//!
+//! - [`job`] — the job model: a workload + problem size + map choice +
+//!   execution backend, and its structured result.
+//! - [`batcher`] — gathers the tile operands of λ-mapped blocks into
+//!   fixed-size batches and executes them on the PJRT runtime (the
+//!   AOT-compiled Pallas kernels), padding the final partial batch.
+//! - [`scheduler`] — runs jobs: grid launch (map hot path) → tile
+//!   execution (pure-Rust or PJRT backend) → aggregation; owns the
+//!   worker pool and the metrics.
+//! - [`metrics`] — process-wide counters and latency summaries.
+//! - [`server`] — a JSON-lines-over-TCP leader: accepts jobs from
+//!   clients, schedules them, streams results (examples/serve_client).
+
+pub mod batcher;
+pub mod job;
+pub mod metrics;
+pub mod scheduler;
+pub mod server;
+pub mod trace;
+
+pub use batcher::TileBatcher;
+pub use job::{Backend, Job, JobResult, WorkloadKind};
+pub use metrics::Metrics;
+pub use scheduler::Scheduler;

@@ -1,0 +1,691 @@
+//! The scheduler: runs a [`Job`] through map → tiles → aggregation.
+//!
+//! Two-phase execution, separately timed (the paper's claims are about
+//! phase 1; phase 2 is identical work under every map — which is
+//! exactly why parallel-space efficiency converts into end-to-end
+//! throughput):
+//!
+//! 1. **Map phase** — the grid launcher applies the chosen map over
+//!    the whole parallel space on the worker pool and collects the
+//!    surviving blocks (the hot path the benches measure).
+//! 2. **Execute phase** — per-block tiles run on the selected backend:
+//!    `rust` (portable kernels) or `pjrt` (batched AOT Pallas kernels),
+//!    then aggregate under the thread-level predicate.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::batcher::{TileBatcher, TileInput};
+use crate::coordinator::job::{Backend, Job, JobResult, WorkloadKind};
+use crate::coordinator::metrics::Metrics;
+use crate::grid::{BlockShape, LaunchConfig, Launcher, MappedBlock};
+use crate::maps::{map2_by_name, map3_by_name, ThreadMap};
+use crate::runtime::ExecHandle;
+use crate::workloads::*;
+use crate::{log_debug, log_info};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ScheduleError {
+    #[error("unknown map '{0}' for m={1}")]
+    UnknownMap(String, u32),
+    #[error("map '{0}' does not support nb={1} (needs 2^k)")]
+    Unsupported(String, u64),
+    #[error("backend pjrt requires artifacts: {0}")]
+    NoExecutor(String),
+    #[error("runtime: {0}")]
+    Runtime(#[from] crate::runtime::RuntimeError),
+    #[error("workload '{0}' has no pjrt artifact; use --backend rust")]
+    NoPjrtPath(&'static str),
+}
+
+pub struct Scheduler {
+    pub workers: usize,
+    /// ρ for 2-simplex workloads (must match artifact R when pjrt).
+    pub rho2: u32,
+    /// ρ for 3-simplex workloads.
+    pub rho3: u32,
+    executor: Option<ExecHandle>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Scheduler {
+    pub fn new(workers: usize, executor: Option<ExecHandle>) -> Scheduler {
+        Scheduler {
+            workers: workers.max(1),
+            rho2: 16,
+            rho3: 8,
+            executor,
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    fn resolve_map(&self, job: &Job) -> Result<Box<dyn ThreadMap>, ScheduleError> {
+        let m = job.workload.m();
+        let map = match m {
+            2 => map2_by_name(&job.map),
+            _ => map3_by_name(&job.map),
+        }
+        .ok_or_else(|| ScheduleError::UnknownMap(job.map.clone(), m))?;
+        if !map.supports(job.nb) {
+            return Err(ScheduleError::Unsupported(job.map.clone(), job.nb));
+        }
+        Ok(map)
+    }
+
+    fn executor(&self) -> Result<ExecHandle, ScheduleError> {
+        self.executor
+            .clone()
+            .ok_or_else(|| ScheduleError::NoExecutor("executor not loaded".into()))
+    }
+
+    /// Phase 1: run the map over the grid, collecting mapped blocks.
+    fn collect_blocks(
+        &self,
+        map: &dyn ThreadMap,
+        nb: u64,
+        rho: u32,
+    ) -> (Vec<MappedBlock>, crate::grid::LaunchStats) {
+        let mut cfg = LaunchConfig::new(BlockShape::new(rho, map.m()));
+        cfg.launch_latency = std::time::Duration::from_micros(5);
+        let launcher = Launcher::with_workers(self.workers, cfg);
+        let blocks = Mutex::new(Vec::new());
+        let stats = launcher.launch(map, nb, |b| {
+            blocks.lock().unwrap().push(*b);
+            0
+        });
+        let mut blocks = blocks.into_inner().unwrap();
+        // Deterministic order for reproducible aggregation.
+        blocks.sort_by_key(|b| (b.pass, b.data));
+        (blocks, stats)
+    }
+
+    /// Run a job to completion.
+    pub fn run(&self, job: &Job) -> Result<JobResult, ScheduleError> {
+        let t0 = Instant::now();
+        let map = self.resolve_map(job)?;
+        let rho = if job.workload.m() == 2 {
+            self.rho2
+        } else {
+            self.rho3
+        };
+        log_info!(
+            "scheduler",
+            "job {} nb={} map={} backend={}",
+            job.workload.name(),
+            job.nb,
+            job.map,
+            job.backend.name()
+        );
+
+        let tmap = Instant::now();
+        let (blocks, stats) = self.collect_blocks(map.as_ref(), job.nb, rho);
+        self.metrics.record_map_phase(tmap.elapsed().as_secs_f64());
+        self.metrics
+            .blocks_mapped
+            .fetch_add(blocks.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        log_debug!("scheduler", "mapped {} blocks", blocks.len());
+
+        let texec = Instant::now();
+        let (outputs, batches) = self.execute(job, rho, &blocks)?;
+        self.metrics
+            .record_exec_phase(texec.elapsed().as_secs_f64());
+
+        let wall = t0.elapsed().as_secs_f64();
+        self.metrics.record_job(wall);
+        Ok(JobResult {
+            job: job.clone(),
+            outputs,
+            blocks_launched: stats.blocks_launched,
+            blocks_mapped: stats.blocks_mapped,
+            threads_launched: stats.threads_launched,
+            wall_secs: wall,
+            tile_batches: batches,
+        })
+    }
+
+    fn execute(
+        &self,
+        job: &Job,
+        rho: u32,
+        blocks: &[MappedBlock],
+    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
+        match (job.workload, job.backend) {
+            (WorkloadKind::Edm, Backend::Rust) => self.edm_rust(job, rho, blocks),
+            (WorkloadKind::Edm, Backend::Pjrt) => self.edm_pjrt(job, rho, blocks),
+            (WorkloadKind::Collision, Backend::Rust) => self.collision_rust(job, rho, blocks),
+            (WorkloadKind::Collision, Backend::Pjrt) => self.collision_pjrt(job, rho, blocks),
+            (WorkloadKind::NBody, Backend::Rust) => self.nbody_rust(job, rho, blocks),
+            (WorkloadKind::NBody, Backend::Pjrt) => self.nbody_pjrt(job, rho, blocks),
+            (WorkloadKind::Triple, Backend::Rust) => self.triple_rust(job, rho, blocks),
+            (WorkloadKind::Triple, Backend::Pjrt) => self.triple_pjrt(job, rho, blocks),
+            (WorkloadKind::Cellular, Backend::Rust) => self.cellular_rust(job, rho, blocks),
+            (WorkloadKind::TriMatVec, Backend::Rust) => self.trimat_rust(job, rho, blocks),
+            (WorkloadKind::Cellular, Backend::Pjrt) => Err(ScheduleError::NoPjrtPath("cellular")),
+            (WorkloadKind::TriMatVec, Backend::Pjrt) => {
+                Err(ScheduleError::NoPjrtPath("trimatvec"))
+            }
+        }
+    }
+
+    // ---- EDM ---------------------------------------------------------
+
+    fn edm_rust(
+        &self,
+        job: &Job,
+        rho: u32,
+        blocks: &[MappedBlock],
+    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
+        let w = EdmWorkload::generate(job.nb, rho, job.seed);
+        let tile_len = (rho as usize) * (rho as usize);
+        // Parallel over block ranges with per-thread partials.
+        let chunks: Vec<(u64, f64)> = parallel_map_reduce(self.workers, blocks, |batch| {
+            let mut tile = vec![0f32; tile_len];
+            let mut count = 0u64;
+            let mut sum = 0f64;
+            for b in batch {
+                let (bc, br) = (b.data[0], b.data[1]);
+                w.tile_rust(bc, br, &mut tile);
+                let (c, s) = w.aggregate_tile(bc, br, &tile);
+                count += c;
+                sum += s;
+            }
+            (count, sum)
+        });
+        let count: u64 = chunks.iter().map(|c| c.0).sum();
+        let sum: f64 = chunks.iter().map(|c| c.1).sum();
+        Ok((
+            vec![
+                ("neighbour_count".into(), count as f64),
+                ("sum_d2".into(), sum),
+            ],
+            0,
+        ))
+    }
+
+    fn edm_pjrt(
+        &self,
+        job: &Job,
+        rho: u32,
+        blocks: &[MappedBlock],
+    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
+        let exe = self.executor()?;
+        let w = EdmWorkload::generate(job.nb, rho, job.seed);
+        let mut batcher = TileBatcher::new(exe, "edm_tile")?;
+        let tiles: Vec<TileInput> = blocks
+            .iter()
+            .enumerate()
+            .map(|(i, b)| TileInput {
+                block_id: i as u64,
+                inputs: vec![w.chunk(b.data[1]).to_vec(), w.chunk(b.data[0]).to_vec()],
+            })
+            .collect();
+        let outs = batcher.run(&tiles)?;
+        let mut count = 0u64;
+        let mut sum = 0f64;
+        for out in &outs {
+            let b = &blocks[out.block_id as usize];
+            let (c, s) = w.aggregate_tile(b.data[0], b.data[1], &out.data);
+            count += c;
+            sum += s;
+        }
+        self.note_batches(&batcher);
+        Ok((
+            vec![
+                ("neighbour_count".into(), count as f64),
+                ("sum_d2".into(), sum),
+            ],
+            batcher.batches_run,
+        ))
+    }
+
+    // ---- Collision ---------------------------------------------------
+
+    fn collision_rust(
+        &self,
+        job: &Job,
+        rho: u32,
+        blocks: &[MappedBlock],
+    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
+        let w = CollisionWorkload::generate(job.nb, rho, job.seed);
+        let tile_len = (rho as usize) * (rho as usize);
+        let partials: Vec<u64> = parallel_map_reduce(self.workers, blocks, |batch| {
+            let mut tile = vec![0f32; tile_len];
+            let mut count = 0u64;
+            for b in batch {
+                w.tile_rust(b.data[0], b.data[1], &mut tile);
+                count += w.aggregate_tile(b.data[0], b.data[1], &tile);
+            }
+            count
+        });
+        let count: u64 = partials.iter().sum();
+        Ok((vec![("overlap_count".into(), count as f64)], 0))
+    }
+
+    fn collision_pjrt(
+        &self,
+        job: &Job,
+        rho: u32,
+        blocks: &[MappedBlock],
+    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
+        let exe = self.executor()?;
+        let w = CollisionWorkload::generate(job.nb, rho, job.seed);
+        let mut batcher = TileBatcher::new(exe, "collision_tile")?;
+        let tiles: Vec<TileInput> = blocks
+            .iter()
+            .enumerate()
+            .map(|(i, b)| TileInput {
+                block_id: i as u64,
+                inputs: vec![w.chunk(b.data[1]).to_vec(), w.chunk(b.data[0]).to_vec()],
+            })
+            .collect();
+        let outs = batcher.run(&tiles)?;
+        let count: u64 = outs
+            .iter()
+            .map(|out| {
+                let b = &blocks[out.block_id as usize];
+                w.aggregate_tile(b.data[0], b.data[1], &out.data)
+            })
+            .sum();
+        self.note_batches(&batcher);
+        Ok((
+            vec![("overlap_count".into(), count as f64)],
+            batcher.batches_run,
+        ))
+    }
+
+    // ---- N-body ------------------------------------------------------
+
+    fn nbody_rust(
+        &self,
+        job: &Job,
+        rho: u32,
+        blocks: &[MappedBlock],
+    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
+        let w = NBodyWorkload::generate(job.nb, rho, job.seed);
+        let acc = Mutex::new(vec![0f32; w.n as usize * 3]);
+        let rho64 = rho as u64;
+        parallel_map_reduce(self.workers, blocks, |batch| {
+            let mut tile = vec![0f32; rho as usize * 3];
+            let mut local: Vec<(u64, Vec<f32>)> = Vec::new();
+            for b in batch {
+                let (bc, br) = (b.data[0], b.data[1]);
+                w.tile_rust(bc, br, &mut tile);
+                local.push((br, tile.clone()));
+                if bc != br {
+                    w.tile_rust(br, bc, &mut tile);
+                    local.push((bc, tile.clone()));
+                }
+            }
+            let mut acc = acc.lock().unwrap();
+            for (chunk_row, t) in local {
+                for i in 0..rho64 {
+                    for d in 0..3 {
+                        acc[((chunk_row * rho64 + i) * 3 + d) as usize] +=
+                            t[(i * 3 + d) as usize];
+                    }
+                }
+            }
+        });
+        let acc = acc.into_inner().unwrap();
+        Ok((
+            vec![("accel_checksum".into(), NBodyWorkload::checksum(&acc))],
+            0,
+        ))
+    }
+
+    fn nbody_pjrt(
+        &self,
+        job: &Job,
+        rho: u32,
+        blocks: &[MappedBlock],
+    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
+        let exe = self.executor()?;
+        let w = NBodyWorkload::generate(job.nb, rho, job.seed);
+        let mut batcher = TileBatcher::new(exe, "nbody_tile")?;
+        // Two directed tiles per off-diagonal block, one per diagonal.
+        let mut tiles = Vec::new();
+        let mut targets = Vec::new(); // chunk receiving the acceleration
+        for b in blocks {
+            let (bc, br) = (b.data[0], b.data[1]);
+            tiles.push(TileInput {
+                block_id: targets.len() as u64,
+                inputs: vec![w.chunk(br).to_vec(), w.chunk(bc).to_vec()],
+            });
+            targets.push(br);
+            if bc != br {
+                tiles.push(TileInput {
+                    block_id: targets.len() as u64,
+                    inputs: vec![w.chunk(bc).to_vec(), w.chunk(br).to_vec()],
+                });
+                targets.push(bc);
+            }
+        }
+        let outs = batcher.run(&tiles)?;
+        let rho64 = rho as u64;
+        let mut acc = vec![0f32; w.n as usize * 3];
+        for out in &outs {
+            let chunk_row = targets[out.block_id as usize];
+            for i in 0..rho64 {
+                for d in 0..3 {
+                    acc[((chunk_row * rho64 + i) * 3 + d) as usize] +=
+                        out.data[(i * 3 + d) as usize];
+                }
+            }
+        }
+        self.note_batches(&batcher);
+        Ok((
+            vec![("accel_checksum".into(), NBodyWorkload::checksum(&acc))],
+            batcher.batches_run,
+        ))
+    }
+
+    // ---- Triple ------------------------------------------------------
+
+    fn triple_rust(
+        &self,
+        job: &Job,
+        rho: u32,
+        blocks: &[MappedBlock],
+    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
+        let w = TripleWorkload::generate(job.nb, rho, job.seed);
+        let partials: Vec<f64> = parallel_map_reduce(self.workers, blocks, |batch| {
+            let mut e = 0f64;
+            for b in batch {
+                let (ci, cj, ck) = TripleWorkload::block_chunks(job.nb, b.data);
+                e += w.tile_rust(ci, cj, ck);
+            }
+            e
+        });
+        Ok((vec![("at_energy".into(), partials.iter().sum())], 0))
+    }
+
+    fn triple_pjrt(
+        &self,
+        job: &Job,
+        rho: u32,
+        blocks: &[MappedBlock],
+    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
+        let exe = self.executor()?;
+        let w = TripleWorkload::generate(job.nb, rho, job.seed);
+        let mut batcher = TileBatcher::new(exe, "triple_tile")?;
+        // Strictly-ordered blocks → full-tile Pallas kernel; blocks
+        // with repeated chunks → Rust per-thread predication (o(n²) of
+        // the n³ work; see module doc in workloads/triple.rs).
+        let mut strict_tiles = Vec::new();
+        let mut energy = 0f64;
+        for b in blocks {
+            let (ci, cj, ck) = TripleWorkload::block_chunks(job.nb, b.data);
+            if TripleWorkload::block_is_strict(ci, cj, ck) {
+                strict_tiles.push(TileInput {
+                    block_id: strict_tiles.len() as u64,
+                    inputs: vec![
+                        w.chunk(ci).to_vec(),
+                        w.chunk(cj).to_vec(),
+                        w.chunk(ck).to_vec(),
+                    ],
+                });
+            } else {
+                energy += w.tile_rust(ci, cj, ck);
+            }
+        }
+        let outs = batcher.run(&strict_tiles)?;
+        energy += outs.iter().map(|o| o.data[0] as f64).sum::<f64>();
+        self.note_batches(&batcher);
+        Ok((
+            vec![("at_energy".into(), energy)],
+            batcher.batches_run,
+        ))
+    }
+
+    // ---- Cellular / TriMatVec (rust backends) -------------------------
+
+    fn cellular_rust(
+        &self,
+        job: &Job,
+        rho: u32,
+        blocks: &[MappedBlock],
+    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
+        let w = CellularWorkload::generate(job.nb, rho, job.seed);
+        let tile_len = (rho as usize) * (rho as usize);
+        let scatters: Vec<Vec<(u64, u64, Vec<f32>)>> =
+            parallel_map_reduce(self.workers, blocks, |batch| {
+                let mut out = Vec::with_capacity(batch.len());
+                for b in batch {
+                    let mut tile = vec![0f32; tile_len];
+                    w.tile_next(b.data[0], b.data[1], &mut tile);
+                    out.push((b.data[0], b.data[1], tile));
+                }
+                out
+            });
+        let mut next = vec![0u8; w.state.len()];
+        for group in scatters {
+            for (bc, br, tile) in group {
+                w.scatter_tile(bc, br, &tile, &mut next);
+            }
+        }
+        let pop: u64 = next.iter().map(|&c| c as u64).sum();
+        Ok((
+            vec![
+                ("population_before".into(), w.population() as f64),
+                ("population_after".into(), pop as f64),
+            ],
+            0,
+        ))
+    }
+
+    fn trimat_rust(
+        &self,
+        job: &Job,
+        rho: u32,
+        blocks: &[MappedBlock],
+    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
+        let w = TriMatVecWorkload::generate(job.nb, rho, job.seed);
+        let rho64 = rho as u64;
+        let partials: Vec<Vec<(u64, Vec<f32>)>> =
+            parallel_map_reduce(self.workers, blocks, |batch| {
+                let mut out = Vec::with_capacity(batch.len());
+                for b in batch {
+                    let mut tile = vec![0f32; rho as usize];
+                    w.tile_rust(b.data[0], b.data[1], &mut tile);
+                    out.push((b.data[1], tile));
+                }
+                out
+            });
+        let mut y = vec![0f32; w.n as usize];
+        for group in partials {
+            for (br, tile) in group {
+                for i in 0..rho64 {
+                    y[(br * rho64 + i) as usize] += tile[i as usize];
+                }
+            }
+        }
+        Ok((
+            vec![("y_checksum".into(), TriMatVecWorkload::checksum(&y))],
+            0,
+        ))
+    }
+
+    fn note_batches(&self, batcher: &TileBatcher) {
+        self.metrics
+            .tile_batches
+            .fetch_add(batcher.batches_run, std::sync::atomic::Ordering::Relaxed);
+        self.metrics
+            .tiles_padded
+            .fetch_add(batcher.tiles_padded, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
+/// Split `items` into per-worker contiguous batches, run `f` on each in
+/// scoped threads, and collect the per-batch results.
+fn parallel_map_reduce<T: Sync, R: Send>(
+    workers: usize,
+    items: &[T],
+    f: impl Fn(&[T]) -> R + Sync,
+) -> Vec<R> {
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, items.len());
+    let chunk = items.len().div_ceil(workers);
+    let results = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for (i, batch) in items.chunks(chunk).enumerate() {
+            let f = &f;
+            let results = &results;
+            scope.spawn(move || {
+                let r = f(batch);
+                results.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut out = results.into_inner().unwrap();
+    out.sort_by_key(|(i, _)| *i);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(w: WorkloadKind, nb: u64, map: &str) -> Job {
+        Job {
+            workload: w,
+            nb,
+            map: map.into(),
+            backend: Backend::Rust,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn edm_rust_matches_reference_under_all_maps() {
+        let sched = Scheduler::new(4, None);
+        let w = EdmWorkload::generate(8, sched.rho2, 11);
+        let (want_count, want_sum) = w.reference();
+        for map in ["bb", "lambda2", "enum2", "rb", "ries"] {
+            let r = sched.run(&job(WorkloadKind::Edm, 8, map)).unwrap();
+            assert_eq!(
+                r.outputs[0].1 as u64, want_count,
+                "map={map}: neighbour count"
+            );
+            let sum = r.outputs[1].1;
+            assert!(
+                (sum - want_sum).abs() < 1e-3 * want_sum.abs().max(1.0),
+                "map={map}: {sum} vs {want_sum}"
+            );
+        }
+    }
+
+    #[test]
+    fn collision_rust_matches_reference_under_all_maps() {
+        let sched = Scheduler::new(4, None);
+        let w = CollisionWorkload::generate(8, sched.rho2, 11);
+        let want = w.reference() as f64;
+        for map in ["bb", "lambda2", "enum2", "rb", "ries"] {
+            let r = sched.run(&job(WorkloadKind::Collision, 8, map)).unwrap();
+            assert_eq!(r.outputs[0].1, want, "map={map}");
+        }
+    }
+
+    #[test]
+    fn nbody_rust_matches_reference() {
+        let sched = Scheduler::new(4, None);
+        let w = NBodyWorkload::generate(4, sched.rho2, 11);
+        let want = NBodyWorkload::checksum(&w.reference());
+        for map in ["bb", "lambda2"] {
+            let r = sched.run(&job(WorkloadKind::NBody, 4, map)).unwrap();
+            let got = r.outputs[0].1;
+            assert!(
+                (got - want).abs() < 1e-3 * want,
+                "map={map}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn triple_rust_matches_reference() {
+        let sched = Scheduler::new(4, None);
+        let w = TripleWorkload::generate(4, sched.rho3, 11);
+        let want = w.reference();
+        for map in ["bb", "lambda3", "enum3", "lambda3-rec"] {
+            let r = sched.run(&job(WorkloadKind::Triple, 4, map)).unwrap();
+            let got = r.outputs[0].1;
+            assert!(
+                (got - want).abs() < 1e-6 * want.abs().max(1.0),
+                "map={map}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn cellular_step_population_matches_reference() {
+        let sched = Scheduler::new(2, None);
+        let w = CellularWorkload::generate(8, sched.rho2, 11);
+        let want: u64 = w.step_reference().iter().map(|&c| c as u64).sum();
+        for map in ["bb", "lambda2", "rb"] {
+            let r = sched.run(&job(WorkloadKind::Cellular, 8, map)).unwrap();
+            assert_eq!(r.outputs[1].1 as u64, want, "map={map}");
+        }
+    }
+
+    #[test]
+    fn trimat_matches_reference() {
+        let sched = Scheduler::new(2, None);
+        let w = TriMatVecWorkload::generate(4, sched.rho2, 11);
+        let want = TriMatVecWorkload::checksum(&w.reference());
+        let r = sched.run(&job(WorkloadKind::TriMatVec, 4, "lambda2")).unwrap();
+        assert!((r.outputs[0].1 - want).abs() < 1e-3 * want.max(1.0));
+    }
+
+    #[test]
+    fn lambda2_launches_half_the_blocks_of_bb() {
+        let sched = Scheduler::new(2, None);
+        let bb = sched.run(&job(WorkloadKind::Edm, 16, "bb")).unwrap();
+        let l2 = sched.run(&job(WorkloadKind::Edm, 16, "lambda2")).unwrap();
+        assert_eq!(bb.blocks_mapped, l2.blocks_mapped);
+        assert!(bb.blocks_launched > l2.blocks_launched * 18 / 10);
+        assert_eq!(l2.block_efficiency(), 1.0);
+    }
+
+    #[test]
+    fn unknown_map_and_unsupported_size_error() {
+        let sched = Scheduler::new(1, None);
+        assert!(matches!(
+            sched.run(&job(WorkloadKind::Edm, 8, "nope")),
+            Err(ScheduleError::UnknownMap(_, _))
+        ));
+        assert!(matches!(
+            sched.run(&job(WorkloadKind::Edm, 17, "lambda2")),
+            Err(ScheduleError::Unsupported(_, _))
+        ));
+    }
+
+    #[test]
+    fn pjrt_without_executor_errors() {
+        let sched = Scheduler::new(1, None);
+        let mut j = job(WorkloadKind::Edm, 8, "lambda2");
+        j.backend = Backend::Pjrt;
+        assert!(matches!(
+            sched.run(&j),
+            Err(ScheduleError::NoExecutor(_))
+        ));
+    }
+
+    #[test]
+    fn metrics_accumulate_across_jobs() {
+        let sched = Scheduler::new(2, None);
+        sched.run(&job(WorkloadKind::Edm, 8, "lambda2")).unwrap();
+        sched.run(&job(WorkloadKind::Edm, 8, "bb")).unwrap();
+        let snap = sched.metrics.snapshot();
+        assert_eq!(snap.get("jobs_completed").unwrap().as_u64(), Some(2));
+        assert!(snap.get("blocks_mapped").unwrap().as_u64().unwrap() > 0);
+    }
+
+    #[test]
+    fn parallel_map_reduce_preserves_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let sums = parallel_map_reduce(7, &items, |b| b.iter().sum::<u64>());
+        assert_eq!(sums.iter().sum::<u64>(), 4950);
+        assert!(sums.len() <= 8);
+    }
+}

@@ -1,0 +1,250 @@
+//! JSON-lines-over-TCP leader: accepts jobs from clients and runs them
+//! on the scheduler. One line in → one line out.
+//!
+//! Protocol (request → response):
+//! - `{"cmd":"ping"}` → `{"ok":true,"pong":true}`
+//! - `{"cmd":"run","workload":"edm","nb":64,"map":"lambda2",
+//!    "backend":"rust","seed":7}` → `{"ok":true,"result":{…}}`
+//! - `{"cmd":"metrics"}` → `{"ok":true,"metrics":{…}}`
+//! - `{"cmd":"shutdown"}` → `{"ok":true}` and the server stops.
+//!
+//! Errors come back as `{"ok":false,"error":"…"}` — the connection
+//! stays usable (a malformed job must not kill the leader).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::job::Job;
+use crate::coordinator::scheduler::Scheduler;
+use crate::util::json::{self, Json};
+use crate::{log_info, log_warn};
+
+pub struct Server {
+    scheduler: Arc<Scheduler>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn new(scheduler: Arc<Scheduler>) -> Server {
+        Server {
+            scheduler,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Bind and serve until a shutdown command arrives. Returns the
+    /// bound address through `on_bound` (lets tests use port 0).
+    pub fn serve(&self, addr: &str, on_bound: impl FnOnce(std::net::SocketAddr)) -> std::io::Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        log_info!("server", "listening on {local}");
+        on_bound(local);
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !self.shutdown.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    log_info!("server", "connection from {peer}");
+                    let scheduler = Arc::clone(&self.scheduler);
+                    let shutdown = Arc::clone(&self.shutdown);
+                    conns.push(std::thread::spawn(move || {
+                        if let Err(e) = handle_conn(stream, &scheduler, &shutdown) {
+                            log_warn!("server", "connection error: {e}");
+                        }
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        for c in conns {
+            let _ = c.join();
+        }
+        log_info!("server", "shut down");
+        Ok(())
+    }
+
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    scheduler: &Scheduler,
+    shutdown: &AtomicBool,
+) -> std::io::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = dispatch(&line, scheduler, shutdown);
+        writer.write_all(response.to_string_compact().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Pure request → response mapping (unit-testable without sockets).
+pub fn dispatch(line: &str, scheduler: &Scheduler, shutdown: &AtomicBool) -> Json {
+    let err = |msg: String| Json::obj(vec![("ok", false.into()), ("error", msg.into())]);
+    let req = match json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return err(format!("bad json: {e}")),
+    };
+    match req.get("cmd").and_then(Json::as_str) {
+        Some("ping") => Json::obj(vec![("ok", true.into()), ("pong", true.into())]),
+        Some("metrics") => Json::obj(vec![
+            ("ok", true.into()),
+            ("metrics", scheduler.metrics.snapshot()),
+        ]),
+        Some("shutdown") => {
+            shutdown.store(true, Ordering::SeqCst);
+            Json::obj(vec![("ok", true.into())])
+        }
+        Some("run") => {
+            scheduler
+                .metrics
+                .jobs_accepted
+                .fetch_add(1, Ordering::Relaxed);
+            match Job::from_json(&req) {
+                None => err("invalid job (need workload, nb, map)".into()),
+                Some(job) => match scheduler.run(&job) {
+                    Ok(result) => Json::obj(vec![
+                        ("ok", true.into()),
+                        ("result", result.to_json()),
+                    ]),
+                    Err(e) => {
+                        scheduler
+                            .metrics
+                            .jobs_failed
+                            .fetch_add(1, Ordering::Relaxed);
+                        err(e.to_string())
+                    }
+                },
+            }
+        }
+        _ => err("unknown cmd (ping|run|metrics|shutdown)".into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> Scheduler {
+        Scheduler::new(2, None)
+    }
+
+    #[test]
+    fn dispatch_ping() {
+        let s = sched();
+        let flag = AtomicBool::new(false);
+        let r = dispatch(r#"{"cmd":"ping"}"#, &s, &flag);
+        assert_eq!(r.get("pong").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn dispatch_run_job() {
+        let s = sched();
+        let flag = AtomicBool::new(false);
+        let r = dispatch(
+            r#"{"cmd":"run","workload":"edm","nb":8,"map":"lambda2"}"#,
+            &s,
+            &flag,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        let result = r.get("result").unwrap();
+        assert_eq!(result.get("block_efficiency").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn dispatch_bad_json_and_unknown_cmd() {
+        let s = sched();
+        let flag = AtomicBool::new(false);
+        assert_eq!(
+            dispatch("{oops", &s, &flag).get("ok").unwrap().as_bool(),
+            Some(false)
+        );
+        assert_eq!(
+            dispatch(r#"{"cmd":"dance"}"#, &s, &flag)
+                .get("ok")
+                .unwrap()
+                .as_bool(),
+            Some(false)
+        );
+    }
+
+    #[test]
+    fn dispatch_invalid_job_counts_failure() {
+        let s = sched();
+        let flag = AtomicBool::new(false);
+        let r = dispatch(
+            r#"{"cmd":"run","workload":"edm","nb":17,"map":"lambda2"}"#,
+            &s,
+            &flag,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(
+            s.metrics.jobs_failed.load(Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn dispatch_shutdown_sets_flag() {
+        let s = sched();
+        let flag = AtomicBool::new(false);
+        dispatch(r#"{"cmd":"shutdown"}"#, &s, &flag);
+        assert!(flag.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn server_end_to_end_over_tcp() {
+        use std::io::{BufRead, BufReader, Write};
+        let server = Server::new(Arc::new(sched()));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let handle = {
+            let srv = server;
+            std::thread::spawn(move || {
+                srv.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+                    .unwrap();
+            })
+        };
+        let addr = rx.recv().unwrap();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+
+        conn.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("pong"));
+
+        line.clear();
+        conn.write_all(
+            b"{\"cmd\":\"run\",\"workload\":\"collision\",\"nb\":8,\"map\":\"rb\"}\n",
+        )
+        .unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("overlap_count"), "{line}");
+
+        line.clear();
+        conn.write_all(b"{\"cmd\":\"metrics\"}\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("jobs_completed"));
+
+        conn.write_all(b"{\"cmd\":\"shutdown\"}\n").unwrap();
+        handle.join().unwrap();
+    }
+}

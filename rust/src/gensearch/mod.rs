@@ -1,0 +1,166 @@
+//! §III.D — the general-m parameter study.
+//!
+//! The paper leaves the choice of reduction factor r and arity β as an
+//! open optimization problem: minimize both `(1/r^m - β) - m!` (waste)
+//! and `β^{log_{1/r} n}` (the correction term that delays coverage).
+//! This module runs that optimization as a grid search and produces
+//! the E8/E9 tables:
+//!
+//! - `table_eq29` — the r=1/2, β=2 waste blow-up (m! / (2^m-2) - 1),
+//! - `search` — for each (m, β) with `r = m!^{-1/m}`: n₀, waste limit,
+//!   finite waste at the first covered size,
+//! - `pareto` — the (n₀, waste) Pareto frontier over β for each m.
+
+use crate::simplex::recursive_set::{alpha_limit_half_beta2, GeneralSetParams};
+use crate::simplex::volume::factorial;
+use crate::util::json::Json;
+
+/// One row of the parameter search.
+#[derive(Clone, Debug)]
+pub struct SearchRow {
+    pub m: u32,
+    pub beta: f64,
+    pub r: f64,
+    pub n0: Option<u64>,
+    /// Asymptotic waste β/(m!-β).
+    pub waste_limit: f64,
+    /// Efficiency multiple over bounding-box: (m!-β)·(1 - o(1)).
+    pub efficiency_vs_bb: f64,
+}
+
+impl SearchRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("m", self.m.into()),
+            ("beta", self.beta.into()),
+            ("r", self.r.into()),
+            (
+                "n0",
+                self.n0.map(|v| Json::from(v)).unwrap_or(Json::Null),
+            ),
+            ("waste_limit", self.waste_limit.into()),
+            ("efficiency_vs_bb", self.efficiency_vs_bb.into()),
+        ])
+    }
+}
+
+/// Run the (m, β) grid search with the paper parametrization.
+pub fn search(m_range: (u32, u32), betas: &[f64], horizon: u64) -> Vec<SearchRow> {
+    let mut rows = Vec::new();
+    for m in m_range.0..=m_range.1 {
+        for &beta in betas {
+            if beta < 2.0 || beta >= factorial(m) as f64 {
+                continue;
+            }
+            let p = GeneralSetParams::for_paper(m, beta);
+            rows.push(SearchRow {
+                m,
+                beta,
+                r: p.r,
+                n0: p.n0(horizon),
+                waste_limit: p.waste_limit(),
+                efficiency_vs_bb: factorial(m) as f64 / (1.0 + p.waste_limit()),
+            });
+        }
+    }
+    rows
+}
+
+/// The eq. 29 table: r=1/2, β=2 asymptotic waste for m = 2..=m_max.
+pub fn table_eq29(m_max: u32) -> Vec<(u32, f64)> {
+    (2..=m_max).map(|m| (m, alpha_limit_half_beta2(m))).collect()
+}
+
+/// Pareto frontier over β for one m: rows not dominated in both n₀ and
+/// waste (smaller is better for both).
+pub fn pareto(rows: &[SearchRow], m: u32) -> Vec<SearchRow> {
+    let mut of_m: Vec<&SearchRow> = rows
+        .iter()
+        .filter(|r| r.m == m && r.n0.is_some())
+        .collect();
+    of_m.sort_by(|a, b| a.n0.cmp(&b.n0));
+    let mut front: Vec<SearchRow> = Vec::new();
+    let mut best_waste = f64::INFINITY;
+    for r in of_m {
+        if r.waste_limit < best_waste {
+            best_waste = r.waste_limit;
+            front.push(r.clone());
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq29_table_values() {
+        let t = table_eq29(7);
+        let get = |m: u32| t.iter().find(|(mm, _)| *mm == m).unwrap().1;
+        assert!(get(2).abs() < 1e-12);
+        assert!(get(3).abs() < 1e-12);
+        assert!((get(5) - 3.0).abs() < 1e-12);
+        assert!((get(7) - 39.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn search_reproduces_cross_checked_n0() {
+        // Cross-checked against an independent python evaluation:
+        // (m=4, β=2) → 32; (m=5, β=2) → 512; (m=7, β=32) → 4096.
+        let rows = search((4, 7), &[2.0, 8.0, 32.0], 1 << 40);
+        let find = |m: u32, b: f64| {
+            rows.iter()
+                .find(|r| r.m == m && r.beta == b)
+                .unwrap()
+                .n0
+                .unwrap()
+        };
+        assert_eq!(find(4, 2.0), 32);
+        assert_eq!(find(5, 2.0), 512);
+        assert_eq!(find(5, 8.0), 128);
+        assert_eq!(find(7, 2.0), 65536);
+        assert_eq!(find(7, 32.0), 4096);
+    }
+
+    #[test]
+    fn n0_monotone_in_beta_and_waste_tradeoff() {
+        let rows = search((5, 5), &[2.0, 4.0, 8.0, 16.0, 32.0, 64.0], 1 << 40);
+        for w in rows.windows(2) {
+            assert!(
+                w[0].n0.unwrap() >= w[1].n0.unwrap(),
+                "n0 must not grow with β"
+            );
+            assert!(w[0].waste_limit < w[1].waste_limit, "waste grows with β");
+        }
+    }
+
+    #[test]
+    fn efficiency_approaches_m_factorial_for_small_beta() {
+        // "parallel space is practically m! times more efficient than a
+        // bounding box" — for β ≪ m!.
+        let rows = search((6, 6), &[2.0], 1 << 40);
+        let eff = rows[0].efficiency_vs_bb;
+        let mfact = factorial(6) as f64;
+        assert!(eff > 0.99 * mfact, "eff={eff} vs m!={mfact}");
+    }
+
+    #[test]
+    fn pareto_front_is_monotone() {
+        let rows = search((5, 5), &[2.0, 4.0, 8.0, 16.0, 32.0], 1 << 40);
+        let front = pareto(&rows, 5);
+        assert!(!front.is_empty());
+        for w in front.windows(2) {
+            assert!(w[0].n0 <= w[1].n0);
+            assert!(w[0].waste_limit > w[1].waste_limit);
+        }
+    }
+
+    #[test]
+    fn rows_serialize_to_json() {
+        let rows = search((4, 4), &[2.0], 1 << 20);
+        let j = rows[0].to_json();
+        assert_eq!(j.get("m").unwrap().as_u64(), Some(4));
+        assert!(j.get("n0").is_some());
+    }
+}

@@ -1,0 +1,282 @@
+//! The launch engine: apply a map to a grid, execute surviving blocks.
+//!
+//! `Launcher::launch` is the simulated `kernel<<<grid, block>>>`: it
+//! walks every parallel block of every pass, applies the map (the hot
+//! path under test), and hands mapped blocks to the block kernel in
+//! chunks on the thread pool. Thread-level predication is the kernel's
+//! job (it knows the workload's domain); the launcher provides exact
+//! accounting of all four thread populations:
+//!
+//! - `launched` — every thread the grid paid for,
+//! - `filler`   — threads of blocks the map discarded (`None`),
+//! - `mapped`   — threads of blocks that reached the kernel,
+//! - `predicated_off` — threads the kernel reported as out-of-domain
+//!   (diagonal blocks).
+//!
+//! A per-pass latency charge models kernel-launch overhead, and a
+//! `max_concurrent_launches` cap models the ≤32-kernel limit §III.B
+//! invokes against the arity-3 recursive map.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::maps::ThreadMap;
+use crate::util::threadpool::ThreadPool;
+
+use super::{BlockShape, MappedBlock};
+
+/// Launch-time knobs.
+#[derive(Clone, Debug)]
+pub struct LaunchConfig {
+    pub shape: BlockShape,
+    /// Blocks per work chunk handed to a pool worker.
+    pub chunk_blocks: usize,
+    /// Simulated fixed cost per kernel launch (pass).
+    pub launch_latency: Duration,
+    /// Hardware cap on concurrent kernel launches (≈32 on the paper's
+    /// GPUs): passes beyond the cap serialize into waves.
+    pub max_concurrent_launches: u64,
+}
+
+impl LaunchConfig {
+    pub fn new(shape: BlockShape) -> LaunchConfig {
+        LaunchConfig {
+            shape,
+            chunk_blocks: 4096,
+            launch_latency: Duration::from_micros(5),
+            max_concurrent_launches: 32,
+        }
+    }
+}
+
+/// Exact accounting of one launch (all passes).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LaunchStats {
+    pub passes: u64,
+    /// Serialized launch waves: ceil(passes / max_concurrent).
+    pub launch_waves: u64,
+    pub blocks_launched: u64,
+    pub blocks_filler: u64,
+    pub blocks_mapped: u64,
+    pub threads_launched: u64,
+    pub threads_mapped: u64,
+    pub threads_predicated_off: u64,
+    pub wall: Duration,
+    /// Simulated launch-latency component of `wall`.
+    pub launch_overhead: Duration,
+}
+
+impl LaunchStats {
+    /// Fraction of launched threads that did useful work.
+    pub fn thread_efficiency(&self) -> f64 {
+        (self.threads_mapped - self.threads_predicated_off) as f64
+            / self.threads_launched as f64
+    }
+
+    /// Fraction of launched blocks that reached the kernel.
+    pub fn block_efficiency(&self) -> f64 {
+        self.blocks_mapped as f64 / self.blocks_launched as f64
+    }
+}
+
+/// The simulated device.
+pub struct Launcher {
+    pool: Arc<ThreadPool>,
+    pub config: LaunchConfig,
+}
+
+impl Launcher {
+    pub fn new(pool: Arc<ThreadPool>, config: LaunchConfig) -> Launcher {
+        Launcher { pool, config }
+    }
+
+    /// Convenience: a launcher over its own pool sized to the host.
+    pub fn with_workers(workers: usize, config: LaunchConfig) -> Launcher {
+        Launcher::new(Arc::new(ThreadPool::new(workers)), config)
+    }
+
+    /// Run `map` over the full grid for problem size `nb` (blocks per
+    /// side) and invoke `kernel` on every mapped block. The kernel
+    /// returns how many of the block's threads were predicated off.
+    ///
+    /// The kernel must be cheap to clone-share (Arc'd closure) and is
+    /// called concurrently from pool workers.
+    pub fn launch<K>(&self, map: &dyn ThreadMap, nb: u64, kernel: K) -> LaunchStats
+    where
+        K: Fn(&MappedBlock) -> u64 + Send + Sync,
+    {
+        assert!(
+            map.supports(nb),
+            "map {} does not support nb={nb}",
+            map.name()
+        );
+        let t0 = Instant::now();
+        let shape = self.config.shape;
+        let threads_per_block = shape.threads();
+        let passes = map.passes(nb);
+
+        let blocks_launched = AtomicU64::new(0);
+        let blocks_filler = AtomicU64::new(0);
+        let blocks_mapped = AtomicU64::new(0);
+        let predicated = AtomicU64::new(0);
+
+        for pass in 0..passes {
+            let grid = map.grid(nb, pass);
+            let total = grid.volume() as usize;
+            blocks_launched.fetch_add(total as u64, Ordering::Relaxed);
+            let chunks = total.div_ceil(self.config.chunk_blocks.max(1));
+
+            // Share state with the pool without 'static bounds: scoped
+            // threads via a small mutex'd vec of results per chunk.
+            let results: Mutex<Vec<(u64, u64, u64)>> = Mutex::new(Vec::new());
+            std::thread::scope(|scope| {
+                let workers = self.pool.size().min(chunks.max(1));
+                let chunk_size = total.div_ceil(workers.max(1));
+                for w in 0..workers {
+                    let lo = w * chunk_size;
+                    if lo >= total {
+                        break;
+                    }
+                    let hi = ((w + 1) * chunk_size).min(total);
+                    let kernel = &kernel;
+                    let results = &results;
+                    scope.spawn(move || {
+                        let mut filler = 0u64;
+                        let mut mapped = 0u64;
+                        let mut pred = 0u64;
+                        for idx in lo..hi {
+                            let p = grid.of_linear(idx as u64);
+                            match map.map_block(nb, pass, p) {
+                                None => filler += 1,
+                                Some(data) => {
+                                    mapped += 1;
+                                    let mb = MappedBlock {
+                                        parallel: p,
+                                        data,
+                                        pass,
+                                    };
+                                    pred += kernel(&mb);
+                                }
+                            }
+                        }
+                        results.lock().unwrap().push((filler, mapped, pred));
+                    });
+                }
+            });
+            for (f, m, p) in results.into_inner().unwrap() {
+                blocks_filler.fetch_add(f, Ordering::Relaxed);
+                blocks_mapped.fetch_add(m, Ordering::Relaxed);
+                predicated.fetch_add(p, Ordering::Relaxed);
+            }
+        }
+
+        // Launch-latency model: passes serialize in waves of
+        // max_concurrent_launches.
+        let waves = passes.div_ceil(self.config.max_concurrent_launches.max(1));
+        let overhead = self.config.launch_latency * waves as u32;
+        std::thread::sleep(overhead);
+
+        let bl = blocks_launched.load(Ordering::Relaxed);
+        let bm = blocks_mapped.load(Ordering::Relaxed);
+        LaunchStats {
+            passes,
+            launch_waves: waves,
+            blocks_launched: bl,
+            blocks_filler: blocks_filler.load(Ordering::Relaxed),
+            blocks_mapped: bm,
+            threads_launched: bl * threads_per_block,
+            threads_mapped: bm * threads_per_block,
+            threads_predicated_off: predicated.load(Ordering::Relaxed),
+            wall: t0.elapsed(),
+            launch_overhead: overhead,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::{BoundingBox2, Lambda2Map, Lambda3Map, RiesMap, ThreadMap};
+
+    fn launcher(rho: u32, m: u32) -> Launcher {
+        let mut cfg = LaunchConfig::new(BlockShape::new(rho, m));
+        cfg.launch_latency = Duration::ZERO;
+        Launcher::with_workers(4, cfg)
+    }
+
+    #[test]
+    fn bb2_accounting_matches_closed_forms() {
+        let l = launcher(16, 2);
+        let nb = 64u64;
+        let stats = l.launch(&BoundingBox2, nb, |_b| 0);
+        assert_eq!(stats.blocks_launched, nb * nb);
+        assert_eq!(stats.blocks_mapped, nb * (nb + 1) / 2);
+        assert_eq!(stats.blocks_filler, nb * (nb - 1) / 2);
+        assert_eq!(stats.threads_launched, nb * nb * 256);
+        assert!((stats.block_efficiency() - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn lambda2_has_zero_filler() {
+        let l = launcher(16, 2);
+        let stats = l.launch(&Lambda2Map, 128, |_b| 0);
+        assert_eq!(stats.blocks_filler, 0);
+        assert_eq!(stats.block_efficiency(), 1.0);
+    }
+
+    #[test]
+    fn lambda3_filler_matches_container_slack() {
+        let l = launcher(8, 3);
+        let nb = 32u64;
+        let stats = l.launch(&Lambda3Map, nb, |_b| 0);
+        let expect = Lambda3Map.parallel_volume(nb) - crate::maps::domain_volume(nb, 3);
+        assert_eq!(stats.blocks_filler as u128, expect);
+    }
+
+    #[test]
+    fn kernel_sees_every_mapped_block_once() {
+        use std::collections::HashSet;
+        let l = launcher(4, 2);
+        let nb = 32u64;
+        let seen = Mutex::new(HashSet::new());
+        let stats = l.launch(&Lambda2Map, nb, |b| {
+            assert!(seen.lock().unwrap().insert(b.data), "dup {:?}", b.data);
+            0
+        });
+        assert_eq!(seen.lock().unwrap().len() as u64, stats.blocks_mapped);
+    }
+
+    #[test]
+    fn predication_counts_flow_through() {
+        let l = launcher(8, 2);
+        // Kernel predicates off half of each diagonal block.
+        let stats = l.launch(&Lambda2Map, 16, |b| {
+            if b.data[0] == b.data[1] {
+                28 // 8·7/2 threads above the strict diagonal
+            } else {
+                0
+            }
+        });
+        assert_eq!(stats.threads_predicated_off, 16 * 28);
+        assert!(stats.thread_efficiency() < 1.0);
+    }
+
+    #[test]
+    fn multi_pass_map_counts_waves() {
+        let mut cfg = LaunchConfig::new(BlockShape::new(4, 2));
+        cfg.launch_latency = Duration::ZERO;
+        cfg.max_concurrent_launches = 4;
+        let l = Launcher::with_workers(2, cfg);
+        let nb = 64u64;
+        let stats = l.launch(&RiesMap, nb, |_b| 0);
+        assert_eq!(stats.passes, 7); // log2(64) + 1
+        assert_eq!(stats.launch_waves, 2); // ceil(7/4)
+    }
+
+    #[test]
+    #[should_panic(expected = "does not support")]
+    fn unsupported_size_panics() {
+        launcher(8, 2).launch(&Lambda2Map, 17, |_b| 0);
+    }
+}

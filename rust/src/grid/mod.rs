@@ -1,0 +1,81 @@
+//! GPU grid simulator — the substituted hardware substrate.
+//!
+//! Models the CUDA constructs of §I faithfully at the level the paper's
+//! claims live at: a *grid* is an orthotope of *blocks*; each block is
+//! a ρ^m cube of *threads*; a launch applies a [`ThreadMap`] to every
+//! block, discards filler blocks, and runs a block kernel over the
+//! surviving ones on a worker pool (workers ≈ SMs). The launcher
+//! accounts launched/filler/useful/predicated-off thread counts — the
+//! parallel-space efficiency numbers the paper reasons about — plus a
+//! per-launch latency charge so multi-pass maps (Ries, λ3-rec) pay for
+//! their launch counts like real kernels do.
+
+pub mod launcher;
+pub mod occupancy;
+
+pub use launcher::{LaunchConfig, LaunchStats, Launcher};
+pub use occupancy::OccupancyReport;
+
+/// Threads per block side (ρ in the paper; blocks are ρ×ρ or ρ×ρ×ρ).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockShape {
+    pub rho: u32,
+    pub m: u32,
+}
+
+impl BlockShape {
+    pub fn new(rho: u32, m: u32) -> BlockShape {
+        assert!(rho >= 1 && (2..=3).contains(&m));
+        BlockShape { rho, m }
+    }
+
+    /// Threads per block (ρ^m).
+    pub fn threads(&self) -> u64 {
+        (self.rho as u64).pow(self.m)
+    }
+}
+
+/// A mapped block ready for execution: where it came from in parallel
+/// space and where it landed in data space (block coordinates).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MappedBlock {
+    pub parallel: [u64; 3],
+    pub data: [u64; 3],
+    pub pass: u64,
+}
+
+impl MappedBlock {
+    /// Data-space thread origin of this block.
+    pub fn thread_origin(&self, shape: BlockShape) -> [u64; 3] {
+        let r = shape.rho as u64;
+        [self.data[0] * r, self.data[1] * r, self.data[2] * r]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_shape_thread_counts() {
+        assert_eq!(BlockShape::new(16, 2).threads(), 256);
+        assert_eq!(BlockShape::new(8, 3).threads(), 512);
+        assert_eq!(BlockShape::new(1, 2).threads(), 1);
+    }
+
+    #[test]
+    fn thread_origin_scales_by_rho() {
+        let b = MappedBlock {
+            parallel: [0, 0, 0],
+            data: [2, 3, 1],
+            pass: 0,
+        };
+        assert_eq!(b.thread_origin(BlockShape::new(16, 3)), [32, 48, 16]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_m_rejected() {
+        BlockShape::new(8, 4);
+    }
+}

@@ -1,0 +1,100 @@
+//! Occupancy / efficiency reporting over launch statistics — turns raw
+//! [`LaunchStats`](super::LaunchStats) into the paper's comparative
+//! numbers (α, efficiency, improvement factor vs a baseline).
+
+use crate::maps::ThreadMap;
+
+use super::LaunchStats;
+
+/// Side-by-side efficiency report for one map at one size.
+#[derive(Clone, Debug)]
+pub struct OccupancyReport {
+    pub map: &'static str,
+    pub nb: u64,
+    pub stats: LaunchStats,
+}
+
+impl OccupancyReport {
+    pub fn new(map: &dyn ThreadMap, nb: u64, stats: LaunchStats) -> OccupancyReport {
+        OccupancyReport {
+            map: map.name(),
+            nb,
+            stats,
+        }
+    }
+
+    /// α = V(Π)/V(useful blocks) - 1, measured (not closed-form).
+    pub fn measured_alpha(&self) -> f64 {
+        self.stats.blocks_launched as f64 / self.stats.blocks_mapped as f64 - 1.0
+    }
+
+    /// Improvement factor of this report's *block* efficiency over a
+    /// baseline report (the paper's "2× / 6× more efficient").
+    pub fn improvement_over(&self, baseline: &OccupancyReport) -> f64 {
+        self.stats.block_efficiency() / baseline.stats.block_efficiency()
+    }
+
+    pub fn table_row(&self) -> String {
+        format!(
+            "{:<14} nb={:<6} passes={:<5} blocks {:>12} launched / {:>12} useful  eff={:<6.4} α={:<8.4}",
+            self.map,
+            self.nb,
+            self.stats.passes,
+            self.stats.blocks_launched,
+            self.stats.blocks_mapped,
+            self.stats.block_efficiency(),
+            self.measured_alpha(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::{BlockShape, LaunchConfig, Launcher};
+    use crate::maps::{BoundingBox2, BoundingBox3, Lambda2Map, Lambda3Map};
+    use std::time::Duration;
+
+    fn run(map: &dyn crate::maps::ThreadMap, nb: u64, m: u32) -> OccupancyReport {
+        let mut cfg = LaunchConfig::new(BlockShape::new(4, m));
+        cfg.launch_latency = Duration::ZERO;
+        let l = Launcher::with_workers(2, cfg);
+        let stats = l.launch(map, nb, |_b| 0);
+        OccupancyReport::new(map, nb, stats)
+    }
+
+    #[test]
+    fn lambda2_improvement_over_bb_approaches_2x() {
+        // The abstract's 2× claim, measured.
+        let nb = 256;
+        let bb = run(&BoundingBox2, nb, 2);
+        let l2 = run(&Lambda2Map, nb, 2);
+        let imp = l2.improvement_over(&bb);
+        assert!((imp - 2.0).abs() < 0.02, "improvement={imp}");
+    }
+
+    #[test]
+    fn lambda3_improvement_over_bb_approaches_6x() {
+        // The abstract's 6× claim, measured (λ3 carries 12.5% slack, so
+        // ≈ 6/1.125 ≈ 5.3× at finite n).
+        let nb = 64;
+        let bb = run(&BoundingBox3, nb, 3);
+        let l3 = run(&Lambda3Map, nb, 3);
+        let imp = l3.improvement_over(&bb);
+        assert!(imp > 4.5 && imp < 6.0, "improvement={imp}");
+    }
+
+    #[test]
+    fn measured_alpha_matches_closed_form() {
+        let nb = 128;
+        let rep = run(&BoundingBox2, nb, 2);
+        let closed = crate::maps::alpha(&BoundingBox2, nb);
+        assert!((rep.measured_alpha() - closed).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_row_mentions_map_name() {
+        let rep = run(&Lambda2Map, 64, 2);
+        assert!(rep.table_row().contains("lambda2"));
+    }
+}

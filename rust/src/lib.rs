@@ -1,0 +1,37 @@
+//! # simplexmap
+//!
+//! Reproduction of *"Possibilities of Recursive GPU Mapping for
+//! Discrete Orthogonal Simplices"* (Navarro, Bustos, Hitschfeld, 2016):
+//! O(1) block-space thread maps `λ: Z^m → Z^m` from compact orthotope
+//! parallel spaces onto discrete orthogonal m-simplex data domains,
+//! plus the full surrounding system — a simulated GPU grid launcher, a
+//! coordinator with a batched PJRT execution runtime, the paper's
+//! workloads (EDM, collision culling, n-body, triple interactions,
+//! cellular automata, triangular matrices), baseline maps from the
+//! related work, and the §III.D general-m parameter study.
+//!
+//! See DESIGN.md for the architecture and the experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! ## Quick tour
+//!
+//! ```
+//! use simplexmap::maps::{ThreadMap, Lambda2Map, space_efficiency};
+//!
+//! let map = Lambda2Map;
+//! let nb = 64; // blocks per side
+//! // λ2 wastes zero blocks: efficiency 1.0 (BB would be ~0.5).
+//! assert!((space_efficiency(&map, nb) - 1.0).abs() < 1e-12);
+//! let d = map.map_block(nb, 0, [3, 5, 0]).unwrap();
+//! assert!(d[0] <= d[1] && d[1] < nb);
+//! ```
+
+pub mod analysis;
+pub mod coordinator;
+pub mod gensearch;
+pub mod grid;
+pub mod maps;
+pub mod runtime;
+pub mod simplex;
+pub mod workloads;
+pub mod util;

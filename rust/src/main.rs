@@ -1,0 +1,278 @@
+//! `simplexmap` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   report <volumes|maps|arity3|launches|general|avril|ries|nonpow2>
+//!   search   --m 2..10 --betas 2,4,8,16,32 --horizon 2^40
+//!   verify   --map <name> --nb <2^k>          exhaustive coverage check
+//!   run      --workload edm --nb 64 --map lambda2 --backend rust|pjrt
+//!   serve    --addr 127.0.0.1:7070            JSON-lines job server
+//!   sweep    --workload edm --nb 64           all maps side by side
+//!
+//! `--help` prints the options.
+
+use std::sync::Arc;
+
+use simplexmap::analysis;
+use simplexmap::coordinator::server::Server;
+use simplexmap::coordinator::{Backend, Job, Scheduler, WorkloadKind};
+use simplexmap::maps::{map2_by_name, map3_by_name, ThreadMap};
+use simplexmap::runtime::{artifact, ExecutorService};
+use simplexmap::util::cli::{flag, opt, Args};
+
+fn main() {
+    let specs = vec![
+        opt("nb", "problem size in blocks per side", Some("64")),
+        opt("n", "reference n for volume tables", Some("4096")),
+        opt("m", "dimension range for search, e.g. 2..10", Some("2..8")),
+        opt("map", "thread map name", None),
+        opt(
+            "workload",
+            "edm|collision|nbody|triple|cellular|trimatvec",
+            Some("edm"),
+        ),
+        opt("backend", "rust|pjrt", Some("rust")),
+        opt("seed", "workload RNG seed", Some("42")),
+        opt("betas", "comma-separated arity values", Some("2,4,8,16,32")),
+        opt("horizon", "n0 scan horizon", Some("1099511627776")),
+        opt("addr", "server bind address", Some("127.0.0.1:7070")),
+        opt("workers", "worker threads", None),
+        opt("artifacts", "artifacts directory", Some("artifacts")),
+        opt("config", "TOML config file (CLI flags take precedence)", None),
+        flag("help", "print usage"),
+    ];
+    let args = match Args::from_env(
+        "simplexmap — recursive GPU maps for discrete orthogonal simplices",
+        specs,
+    ) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") || args.positional().is_empty() {
+        eprintln!("{}", args.usage());
+        eprintln!("subcommands: report <table> | show | search | verify | run | sweep | serve");
+        std::process::exit(if args.flag("help") { 0 } else { 2 });
+    }
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<(), String> {
+    match args.positional()[0].as_str() {
+        "report" => report(args),
+        "show" => show(args),
+        "search" => search(args),
+        "verify" => verify(args),
+        "run" => run(args, false),
+        "sweep" => run(args, true),
+        "serve" => serve(args),
+        other => Err(format!("unknown subcommand '{other}'")),
+    }
+}
+
+fn report(args: &Args) -> Result<(), String> {
+    let table = args
+        .positional()
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("volumes");
+    let n = args.get_u64("n").map_err(|e| e.to_string())?.unwrap();
+    let nb = args.get_u64("nb").map_err(|e| e.to_string())?.unwrap();
+    let out = match table {
+        "volumes" => analysis::report_volumes(n, 8),
+        "maps" => analysis::report_maps(nb),
+        "arity3" => analysis::report_arity3(14),
+        "launches" => analysis::report_launches(12),
+        "general" => analysis::report_general(8),
+        "avril" => analysis::report_avril(),
+        "nonpow2" => analysis::report_nonpow2(),
+        "ries" => analysis::report_ries(12),
+        other => return Err(format!("unknown report '{other}'")),
+    };
+    println!("{out}");
+    Ok(())
+}
+
+/// Render a map's coverage of the data simplex (Figs. 4, 6, 7).
+fn show(args: &Args) -> Result<(), String> {
+    let nb = args.get_u64("nb").map_err(|e| e.to_string())?.unwrap().min(64);
+    let name = args.get("map").unwrap_or("lambda2").to_string();
+    let map: Box<dyn ThreadMap> = map2_by_name(&name)
+        .or_else(|| map3_by_name(&name))
+        .ok_or(format!("unknown map '{name}'"))?;
+    if !map.supports(nb) {
+        return Err(format!("map {name} does not support nb={nb}"));
+    }
+    let rendered = if map.m() == 2 {
+        simplexmap::analysis::viz::render_m2(map.as_ref(), nb)
+    } else {
+        simplexmap::analysis::viz::render_m3(map.as_ref(), nb)
+    };
+    println!("{name} coverage of the {}-simplex, nb={nb} (label = recursion level):", map.m());
+    println!("{rendered}");
+    Ok(())
+}
+
+fn search(args: &Args) -> Result<(), String> {
+    let (lo, hi) = args
+        .get_range("m")
+        .map_err(|e| e.to_string())?
+        .unwrap_or((2, 8));
+    let betas: Vec<f64> = args
+        .get("betas")
+        .unwrap()
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let horizon = args.get_u64("horizon").map_err(|e| e.to_string())?.unwrap();
+    println!(
+        "{}",
+        analysis::report_search(lo as u32, hi as u32, &betas, horizon)
+    );
+    Ok(())
+}
+
+/// Exhaustive coverage verification of a map at a given size — every
+/// domain block covered exactly once, filler counted (E2/E6).
+fn verify(args: &Args) -> Result<(), String> {
+    let nb = args.get_u64("nb").map_err(|e| e.to_string())?.unwrap();
+    let name = args
+        .get("map")
+        .ok_or("verify needs --map <name>")?
+        .to_string();
+    let map: Box<dyn ThreadMap> = map2_by_name(&name)
+        .or_else(|| map3_by_name(&name))
+        .ok_or(format!("unknown map '{name}'"))?;
+    if !map.supports(nb) {
+        return Err(format!("map {name} does not support nb={nb}"));
+    }
+    let mut seen = std::collections::HashSet::new();
+    let mut filler = 0u64;
+    let mut dups = 0u64;
+    let mut escaped = 0u64;
+    for pass in 0..map.passes(nb) {
+        for w in map.grid(nb, pass).iter() {
+            match map.map_block(nb, pass, w) {
+                None => filler += 1,
+                Some(d) => {
+                    if !simplexmap::maps::in_domain(nb, map.m(), d) {
+                        escaped += 1;
+                    } else if !seen.insert(d) {
+                        dups += 1;
+                    }
+                }
+            }
+        }
+    }
+    let domain = simplexmap::maps::domain_volume(nb, map.m());
+    let covered = seen.len() as u128;
+    println!(
+        "map={name} nb={nb}: domain={domain} covered={covered} dups={dups} \
+         escaped={escaped} filler={filler} parallel={} passes={}",
+        map.parallel_volume(nb),
+        map.passes(nb)
+    );
+    if covered == domain && dups == 0 && escaped == 0 {
+        println!("VERIFY OK: exact coverage");
+        Ok(())
+    } else {
+        Err("coverage verification FAILED".into())
+    }
+}
+
+fn build_scheduler(
+    args: &Args,
+    need_pjrt: bool,
+) -> Result<(Option<ExecutorService>, Scheduler), String> {
+    // Precedence: CLI flag > config file > built-in default.
+    let cfg = match args.get("config") {
+        Some(path) => simplexmap::util::config::Config::load(std::path::Path::new(path))?,
+        None => simplexmap::util::config::Config::default(),
+    };
+    let workers = args
+        .get_usize("workers")
+        .map_err(|e| e.to_string())?
+        .or_else(|| cfg.get_int("coordinator", "workers").map(|v| v as usize))
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        });
+    let pool = cfg.get_int("runtime", "pool").unwrap_or(2).max(1) as usize;
+    let service = if need_pjrt {
+        let dir = args
+            .get("artifacts")
+            .map(std::path::PathBuf::from)
+            .or_else(|| cfg.get_str("runtime", "artifacts").map(Into::into))
+            .unwrap_or_else(artifact::default_dir);
+        Some(ExecutorService::spawn_pool(&dir, pool).map_err(|e| e.to_string())?)
+    } else {
+        None
+    };
+    let handle = service.as_ref().map(|s| s.handle());
+    let mut sched = Scheduler::new(workers, handle);
+    if let Some(r) = cfg.get_int("coordinator", "rho2") {
+        sched.rho2 = r as u32;
+    }
+    if let Some(r) = cfg.get_int("coordinator", "rho3") {
+        sched.rho3 = r as u32;
+    }
+    Ok((service, sched))
+}
+
+fn run(args: &Args, sweep: bool) -> Result<(), String> {
+    let workload =
+        WorkloadKind::parse(args.get("workload").unwrap()).ok_or("unknown workload")?;
+    let backend = Backend::parse(args.get("backend").unwrap()).ok_or("unknown backend")?;
+    let nb = args.get_u64("nb").map_err(|e| e.to_string())?.unwrap();
+    let seed = args.get_u64("seed").map_err(|e| e.to_string())?.unwrap();
+    let (_svc, sched) = build_scheduler(args, backend == Backend::Pjrt)?;
+
+    let maps: Vec<String> = if sweep {
+        let names: &[&str] = if workload.m() == 2 {
+            &["bb", "lambda2", "enum2", "rb", "ries"]
+        } else {
+            &["bb", "lambda3", "enum3"]
+        };
+        names.iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![args.get("map").unwrap_or("lambda2").to_string()]
+    };
+
+    for map in maps {
+        let job = Job {
+            workload,
+            nb,
+            map: map.clone(),
+            backend,
+            seed,
+        };
+        match sched.run(&job) {
+            Ok(r) => println!("{}", r.to_json().to_string_compact()),
+            Err(e) => eprintln!("map {map}: {e}"),
+        }
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<(), String> {
+    // Load PJRT if artifacts are present; otherwise serve rust-only.
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(artifact::default_dir);
+    let have_artifacts = dir.join("manifest.json").exists();
+    let (_svc, sched) = build_scheduler(args, have_artifacts)?;
+    if !have_artifacts {
+        eprintln!("note: artifacts missing — pjrt backend disabled for this server");
+    }
+    let addr = args.get("addr").unwrap();
+    let server = Server::new(Arc::new(sched));
+    server
+        .serve(addr, |bound| eprintln!("listening on {bound}"))
+        .map_err(|e| e.to_string())
+}

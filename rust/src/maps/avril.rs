@@ -1,0 +1,185 @@
+//! Avril, Gouranton & Arnaldi's GPU mapping function for collision
+//! detection [1] — a *thread-space* map `u(x) → (a, b)` from the linear
+//! thread index to a unique pair `a < b` of the upper-triangular
+//! interaction matrix.
+//!
+//! The related-work section highlights its limitation: computed in
+//! floating point over thread indices (k up to n²/2), it is "accurate
+//! only in the range n ∈ [0, 3000]" when evaluated in f32. We implement
+//! both precisions and reproduce that accuracy cliff as experiment E11.
+
+use crate::maps::ThreadMap;
+use crate::simplex::Orthotope;
+
+/// Start offset of row `a` when strict upper pairs `(a, b)`, `a < b`,
+/// are enumerated row-major: row a holds `n-1-a` pairs, so
+/// `row_start(a) = Σ_{i<a} (n-1-i) = a·n - a - a(a-1)/2`.
+#[inline(always)]
+fn row_start(a: u64, n: u64) -> u64 {
+    a * n - a - a * a.saturating_sub(1) / 2
+}
+
+/// The closed form, f64: thread k ∈ [0, n(n-1)/2) → (a, b), a < b < n.
+///
+/// Inverting `row_start(a) ≤ k` gives
+/// `a = ⌊(2n-1 - √((2n-1)² - 8k)) / 2⌋` — one sqrt per thread
+/// (equivalent to Avril's published map with index shifts folded in).
+#[inline(always)]
+pub fn avril_map_f64(k: u64, n: u64) -> (u64, u64) {
+    let kf = k as f64;
+    let nf = n as f64;
+    let disc = (2.0 * nf - 1.0) * (2.0 * nf - 1.0) - 8.0 * kf;
+    let a = ((2.0 * nf - 1.0 - disc.sqrt()) * 0.5) as u64;
+    let b = a + 1 + (k - row_start(a, n));
+    (a, b)
+}
+
+/// Same formula evaluated in f32 — the precision the GPU fast-sqrt
+/// path of [1] relied on; exhibits the paper's n ≈ 3000 accuracy cliff
+/// (the discriminant needs more than 24 mantissa bits past it).
+#[inline(always)]
+pub fn avril_map_f32(k: u64, n: u64) -> (u64, u64) {
+    let kf = k as f32;
+    let nf = n as f32;
+    let disc = (2.0 * nf - 1.0) * (2.0 * nf - 1.0) - 8.0 * kf;
+    let a = ((2.0 * nf - 1.0 - disc.sqrt()) * 0.5) as u64;
+    let rs = a
+        .wrapping_mul(n)
+        .wrapping_sub(a)
+        .wrapping_sub(a.wrapping_mul(a.wrapping_sub(1)) / 2);
+    let b = a.wrapping_add(1).wrapping_add(k.wrapping_sub(rs));
+    (a, b)
+}
+
+/// Exact integer reference (binary search) for accuracy scoring.
+pub fn avril_map_exact(k: u64, n: u64) -> (u64, u64) {
+    // Find the largest a with row_start(a) ≤ k.
+    let (mut lo, mut hi) = (0u64, n - 1);
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        if row_start(mid, n) <= k {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    (lo, lo + 1 + (k - row_start(lo, n)))
+}
+
+/// Fraction of thread indices the f32 map gets wrong at size n
+/// (sampled; exact for small n). Experiment E11.
+pub fn f32_error_rate(n: u64, sample_stride: u64) -> f64 {
+    let total = n * (n - 1) / 2;
+    let mut wrong = 0u64;
+    let mut checked = 0u64;
+    let mut k = 0u64;
+    while k < total {
+        if avril_map_f32(k, n) != avril_map_exact(k, n) {
+            wrong += 1;
+        }
+        checked += 1;
+        k += sample_stride;
+    }
+    wrong as f64 / checked as f64
+}
+
+/// Presented through the block-map interface for throughput benches:
+/// each "block" is one thread index of an n-thread-per-side problem
+/// (the map is genuinely thread-space, per the paper's related work).
+pub struct AvrilMap;
+
+impl ThreadMap for AvrilMap {
+    fn name(&self) -> &'static str {
+        "avril"
+    }
+
+    fn m(&self) -> u32 {
+        2
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        nb >= 2
+    }
+
+    fn grid(&self, nb: u64, _pass: u64) -> Orthotope {
+        // Strict upper pairs, linearized into a near-square 2-D grid
+        // (the GPU constraint: grids are orthotopes).
+        let total = nb * (nb - 1) / 2;
+        let w = (total as f64).sqrt().ceil() as u64;
+        Orthotope::d2(w, total.div_ceil(w.max(1)))
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, _pass: u64, w: [u64; 3]) -> Option<[u64; 3]> {
+        let grid_w = self.grid(nb, 0).dims[0];
+        let k = w[1] * grid_w + w[0];
+        if k >= nb * (nb - 1) / 2 {
+            return None;
+        }
+        let (a, b) = avril_map_f64(k, nb);
+        // Convert upper pair (a < b) to the canonical lower-tri block
+        // domain (col ≤ row): col = a, row = b.
+        Some([a, b, 0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::{domain_volume, in_domain};
+    use std::collections::HashSet;
+
+    #[test]
+    fn f64_matches_exact_for_moderate_n() {
+        for n in [4u64, 37, 256, 1000, 3000] {
+            let total = n * (n - 1) / 2;
+            let stride = (total / 4096).max(1);
+            let mut k = 0;
+            while k < total {
+                assert_eq!(
+                    avril_map_f64(k, n),
+                    avril_map_exact(k, n),
+                    "n={n}, k={k}"
+                );
+                k += stride;
+            }
+        }
+    }
+
+    #[test]
+    fn exact_map_is_bijection() {
+        let n = 64u64;
+        let mut seen = HashSet::new();
+        for k in 0..n * (n - 1) / 2 {
+            let (a, b) = avril_map_exact(k, n);
+            assert!(a < b && b < n, "k={k} → ({a},{b})");
+            assert!(seen.insert((a, b)));
+        }
+        assert_eq!(seen.len() as u64, n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn f32_cliff_reproduced() {
+        // E11: f32 map is exact for small n, degrades past n ≈ 3000.
+        assert_eq!(f32_error_rate(512, 7), 0.0, "exact at n=512");
+        assert_eq!(f32_error_rate(2000, 97), 0.0, "exact at n=2000");
+        let big = f32_error_rate(20_000, 9973);
+        assert!(big > 0.0, "errors must appear by n=20000: rate={big}");
+    }
+
+    #[test]
+    fn block_interface_covers_strict_pairs() {
+        let nb = 32u64;
+        let map = AvrilMap;
+        let mut seen = HashSet::new();
+        for w in map.grid(nb, 0).iter() {
+            if let Some(d) = map.map_block(nb, 0, w) {
+                assert!(in_domain(nb, 2, d));
+                assert!(d[0] < d[1], "strict pairs only");
+                assert!(seen.insert((d[0], d[1])));
+            }
+        }
+        // Strict pairs = inclusive domain minus the diagonal.
+        assert_eq!(seen.len() as u128, domain_volume(nb, 2) - nb as u128);
+    }
+}

@@ -1,0 +1,124 @@
+//! The bounding-box (BB) baseline the paper argues against (§I, Figs.
+//! 2-3): an orthotope large enough to cover the simplex with the
+//! identity map `f(x) = x`, discarding out-of-domain blocks by
+//! predicate. Waste approaches `m! - 1` (eq. 4).
+
+use crate::maps::{in_domain, ThreadMap};
+use crate::simplex::Orthotope;
+
+/// BB for the 2-simplex: an N×N grid, keep blocks with `bc ≤ br`.
+pub struct BoundingBox2;
+
+impl ThreadMap for BoundingBox2 {
+    fn name(&self) -> &'static str {
+        "bb2"
+    }
+
+    fn m(&self) -> u32 {
+        2
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        nb >= 1
+    }
+
+    fn grid(&self, nb: u64, _pass: u64) -> Orthotope {
+        Orthotope::d2(nb, nb)
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, _pass: u64, w: [u64; 3]) -> Option<[u64; 3]> {
+        // Identity map + predicate — the whole point of the paper is
+        // that `nb(nb-1)/2` blocks die on this branch.
+        if in_domain(nb, 2, w) {
+            Some(w)
+        } else {
+            None
+        }
+    }
+}
+
+/// BB for the 3-simplex: an N×N×N grid, keep `x+y+z ≤ N-1`.
+pub struct BoundingBox3;
+
+impl ThreadMap for BoundingBox3 {
+    fn name(&self) -> &'static str {
+        "bb3"
+    }
+
+    fn m(&self) -> u32 {
+        3
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        nb >= 1
+    }
+
+    fn grid(&self, nb: u64, _pass: u64) -> Orthotope {
+        Orthotope::d3(nb, nb, nb)
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, _pass: u64, w: [u64; 3]) -> Option<[u64; 3]> {
+        if in_domain(nb, 3, w) {
+            Some(w)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::{alpha, domain_volume};
+
+    #[test]
+    fn bb2_keeps_exactly_the_domain() {
+        let map = BoundingBox2;
+        let nb = 16;
+        let kept: Vec<_> = map
+            .grid(nb, 0)
+            .iter()
+            .filter_map(|w| map.map_block(nb, 0, w))
+            .collect();
+        assert_eq!(kept.len() as u128, domain_volume(nb, 2));
+        // Identity: every kept block maps to itself.
+        for k in &kept {
+            assert!(k[0] <= k[1] && k[1] < nb);
+        }
+    }
+
+    #[test]
+    fn bb3_keeps_exactly_the_domain() {
+        let map = BoundingBox3;
+        let nb = 10;
+        let kept = map
+            .grid(nb, 0)
+            .iter()
+            .filter_map(|w| map.map_block(nb, 0, w))
+            .count();
+        assert_eq!(kept as u128, domain_volume(nb, 3));
+    }
+
+    #[test]
+    fn bb2_alpha_approaches_1() {
+        // Fig. 2: parallel space ≈ 2× data space → α → 1.
+        let a = alpha(&BoundingBox2, 1 << 12);
+        assert!((a - 1.0).abs() < 1e-3, "α={a}");
+    }
+
+    #[test]
+    fn bb3_alpha_approaches_5() {
+        // Fig. 3: BB ≈ 6× the tetrahedron → α → 5.
+        let a = alpha(&BoundingBox3, 1 << 10);
+        assert!((a - 5.0).abs() < 2e-2, "α={a}");
+    }
+
+    #[test]
+    fn bb_single_pass_any_size() {
+        assert_eq!(BoundingBox2.passes(17), 1);
+        assert!(BoundingBox2.supports(17));
+        assert!(BoundingBox3.supports(1000));
+    }
+}

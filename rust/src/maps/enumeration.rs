@@ -1,0 +1,214 @@
+//! Enumeration-principle maps `g: Z¹ → Z^m` (§I and related work [15],
+//! [16]): linearize the simplex elements and invert the m-th-order
+//! volume polynomial per block. These are the paper's *prior art*
+//! baselines — correct and space-tight, but each block pays square /
+//! cube roots, which is exactly the overhead λ avoids.
+
+use crate::maps::ThreadMap;
+use crate::simplex::volume::simplex_volume;
+use crate::simplex::Orthotope;
+
+/// Inverse triangular number: largest `r` with `r(r+1)/2 ≤ k`, by the
+/// quadratic formula (one sqrt) plus an exactness fix-up for the f64
+/// rounding near large k — the fix-up is part of the measured cost, as
+/// in the original implementations.
+#[inline(always)]
+pub fn triangular_root(k: u64) -> u64 {
+    let r = (((8.0 * k as f64 + 1.0).sqrt() - 1.0) * 0.5) as u64;
+    // f64 can be off by one in either direction for k ≳ 2^52; repair.
+    // (u128 avoids overflow of (r+1)(r+2) near the u64 edge.)
+    let t = |r: u64| r as u128 * (r as u128 + 1) / 2;
+    if t(r + 1) <= k as u128 {
+        r + 1
+    } else if t(r) > k as u128 {
+        r - 1
+    } else {
+        r
+    }
+}
+
+/// Inverse tetrahedral number: largest `c` with `c(c+1)(c+2)/6 ≤ k`.
+/// Seeds with the real cube root (`(6k)^{1/3}`), then Newton-corrects —
+/// the cubic-equation solution of [15] that the paper calls out as
+/// "several square and cubic roots of overhead".
+#[inline(always)]
+pub fn tetrahedral_root(k: u64) -> u64 {
+    let tet = |c: u64| c * (c + 1) * (c + 2) / 6;
+    let mut c = (6.0 * k as f64).cbrt() as u64;
+    // The cube-root seed is within O(1) of the answer; walk to exact.
+    while c > 0 && tet(c) > k {
+        c -= 1;
+    }
+    while tet(c + 1) <= k {
+        c += 1;
+    }
+    c
+}
+
+/// ENUM2 — HPCC'14-style block map for the 2-simplex: block linear
+/// index `k` → inclusive lower-triangular pair. Grid is the same
+/// `(N/2) × (N+1)` rectangle λ2 uses, so benches compare pure
+/// arithmetic, not launch shape.
+pub struct Enum2Map;
+
+impl ThreadMap for Enum2Map {
+    fn name(&self) -> &'static str {
+        "enum2"
+    }
+
+    fn m(&self) -> u32 {
+        2
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        nb >= 2 && nb % 2 == 0
+    }
+
+    fn grid(&self, nb: u64, _pass: u64) -> Orthotope {
+        Orthotope::d2(nb / 2, nb + 1)
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, _pass: u64, w: [u64; 3]) -> Option<[u64; 3]> {
+        let k = w[1] * (nb / 2) + w[0]; // linear block id
+        debug_assert!((k as u128) < simplex_volume(nb, 2));
+        let row = triangular_root(k);
+        let col = k - row * (row + 1) / 2;
+        Some([col, row, 0])
+    }
+}
+
+/// ENUM3 — CLEI'16-style block map for the 3-simplex: linear index →
+/// tetrahedral root (z-slab) → triangular root (row) → column.
+/// Grid: a `(N/2) × (N/2)` base rectangle with just enough z-layers.
+pub struct Enum3Map;
+
+impl Enum3Map {
+    fn layers(nb: u64) -> u64 {
+        let need = simplex_volume(nb, 3);
+        let base = (nb as u128 / 2) * (nb as u128 / 2);
+        need.div_ceil(base) as u64
+    }
+}
+
+impl ThreadMap for Enum3Map {
+    fn name(&self) -> &'static str {
+        "enum3"
+    }
+
+    fn m(&self) -> u32 {
+        3
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        nb >= 2 && nb % 2 == 0
+    }
+
+    fn grid(&self, nb: u64, _pass: u64) -> Orthotope {
+        Orthotope::d3(nb / 2, nb / 2, Self::layers(nb))
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, _pass: u64, w: [u64; 3]) -> Option<[u64; 3]> {
+        let base = (nb / 2) * (nb / 2);
+        let k = w[2] * base + w[1] * (nb / 2) + w[0];
+        if k as u128 >= simplex_volume(nb, 3) {
+            return None; // rectangle padding past the last element
+        }
+        // Enumerate Δ_N^3 by slabs of constant (x+y+z): element k lies
+        // in the largest complete tetrahedron tet(s) ≤ k.
+        let s = tetrahedral_root(k);
+        let rem = k - s * (s + 1) * (s + 2) / 6; // index inside slab Σ = s
+        let row = triangular_root(rem);
+        let col = rem - row * (row + 1) / 2;
+        // Slab Σ = s parametrized by (row, col): x = col, y = row-col,
+        // z = s-row (all ≥ 0 since col ≤ row ≤ s).
+        Some([col, row - col, s - row])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::{domain_volume, in_domain};
+    use std::collections::HashSet;
+
+    #[test]
+    fn triangular_root_exact_small() {
+        for r in 0..200u64 {
+            for k in r * (r + 1) / 2..(r + 1) * (r + 2) / 2 {
+                assert_eq!(triangular_root(k), r, "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn triangular_root_exact_near_f64_edge() {
+        // Where the naive sqrt goes wrong: huge k.
+        for r in [3_000_000_000u64, 4_294_967_295u64] {
+            let k = r * (r + 1) / 2;
+            assert_eq!(triangular_root(k), r);
+            assert_eq!(triangular_root(k - 1), r - 1);
+            assert_eq!(triangular_root(k + 1), r);
+        }
+    }
+
+    #[test]
+    fn tetrahedral_root_exact() {
+        let tet = |c: u64| c * (c + 1) * (c + 2) / 6;
+        for c in 0..120u64 {
+            assert_eq!(tetrahedral_root(tet(c)), c);
+            if tet(c + 1) > tet(c) + 1 {
+                assert_eq!(tetrahedral_root(tet(c + 1) - 1), c);
+            }
+        }
+        // Large value sanity.
+        let c = 2_000_000u64;
+        assert_eq!(tetrahedral_root(tet(c)), c);
+    }
+
+    #[test]
+    fn enum2_is_exact_bijection() {
+        for nb in [2u64, 4, 8, 16, 32, 64, 100] {
+            let map = Enum2Map;
+            let mut seen = HashSet::new();
+            for w in map.grid(nb, 0).iter() {
+                let d = map.map_block(nb, 0, w).expect("enum2 has no filler");
+                assert!(in_domain(nb, 2, d), "nb={nb} {w:?}→{d:?}");
+                assert!(seen.insert((d[0], d[1])));
+            }
+            assert_eq!(seen.len() as u128, domain_volume(nb, 2), "nb={nb}");
+        }
+    }
+
+    #[test]
+    fn enum3_covers_domain_exactly_once() {
+        for nb in [2u64, 4, 8, 16, 32] {
+            let map = Enum3Map;
+            let mut seen = HashSet::new();
+            for w in map.grid(nb, 0).iter() {
+                if let Some(d) = map.map_block(nb, 0, w) {
+                    assert!(in_domain(nb, 3, d), "nb={nb} {w:?}→{d:?}");
+                    assert!(seen.insert((d[0], d[1], d[2])));
+                }
+            }
+            assert_eq!(seen.len() as u128, domain_volume(nb, 3), "nb={nb}");
+        }
+    }
+
+    #[test]
+    fn enum3_padding_is_small() {
+        // The rectangle rounds up to whole z-layers only.
+        let nb = 64;
+        let pad = Enum3Map.parallel_volume(nb) - domain_volume(nb, 3);
+        assert!(pad < (nb as u128 / 2) * (nb as u128 / 2));
+    }
+
+    #[test]
+    fn enum_maps_accept_even_sizes_only() {
+        assert!(Enum2Map.supports(100));
+        assert!(!Enum2Map.supports(101));
+        assert!(Enum3Map.supports(6));
+        assert!(!Enum3Map.supports(7));
+    }
+}

@@ -1,0 +1,194 @@
+//! λ2 — the paper's O(1) recursive block map for 2-simplices (§III.A,
+//! eq. 13), extended to cover the diagonal blocks.
+//!
+//! The strictly-lower-triangular part uses the paper's map verbatim:
+//! for parallel block `(x, y)` with `y ∈ [1, N)`,
+//!
+//! ```text
+//! level = ⌊log2 y⌋          (eq. 14 — one clz)
+//! b     = 2^level           (eq. 15 — one shift)
+//! q     = ⌊x / b⌋
+//! λ(ω)  = (x + q·b, y + 2·q·b)        -- (col, row), eq. 13
+//! ```
+//!
+//! which is an *exact bijection* from `[0, N/2) × [1, N)` onto
+//! `{(c, r) : c < r < N}`: level ℓ's sub-orthotope q lands on the q-th
+//! b×b square of the recursive decomposition of the strict triangle
+//! (DESIGN.md §λ2 has the proof).
+//!
+//! The N diagonal blocks (needed because thread-level domains include
+//! diagonal-crossing blocks) are appended as rows `y = 0` and `y = N`
+//! of the same grid: total grid `(N/2) × (N+1)` with volume
+//! `N(N+1)/2 = V(Δ_N^2)` — zero filler blocks, the 2× improvement over
+//! BB promised in the abstract.
+
+use crate::maps::ThreadMap;
+use crate::simplex::volume::{ilog2, is_pow2};
+use crate::simplex::Orthotope;
+
+pub struct Lambda2Map;
+
+/// The raw eq.-13 map on the strict triangle. Exposed for benches and
+/// for reuse inside λ3's diagonal-plane handling.
+///
+/// §Perf note: a bitmask rewrite (`q·b = x & (!0 << level)`) measured
+/// +8% in an isolated micro-benchmark but -2x inside the full grid
+/// sweep (it blocks LLVM's vectorization of the shift-mul form), so
+/// eq. 13's arithmetic is kept verbatim; the mask form remains below
+/// for the equivalence test. See EXPERIMENTS.md §Perf.
+#[inline(always)]
+pub fn lambda2_strict(x: u64, y: u64) -> (u64, u64) {
+    debug_assert!(y >= 1);
+    let level = ilog2(y);
+    let b = 1u64 << level;
+    let q = x >> level; // ⌊x / b⌋ — b is a power of two
+    (x + q * b, y + 2 * q * b)
+}
+
+/// Bitmask variant (kept for the equivalence test; see §Perf note).
+#[inline(always)]
+pub fn lambda2_strict_mask(x: u64, y: u64) -> (u64, u64) {
+    let level = ilog2(y);
+    let qb = x & (u64::MAX << level); // q·b without the multiply
+    (x + qb, y + (qb << 1))
+}
+
+/// Full inclusive map: grid `(N/2) × (N+1)` → `{(c, r): c ≤ r < N}`.
+/// `None` never occurs for valid grid coordinates (zero waste).
+#[inline(always)]
+pub fn lambda2_inclusive(nb: u64, x: u64, y: u64) -> (u64, u64) {
+    if y == 0 {
+        // First half of the diagonal.
+        (x, x)
+    } else if y == nb {
+        // Second half of the diagonal.
+        (nb / 2 + x, nb / 2 + x)
+    } else {
+        lambda2_strict(x, y)
+    }
+}
+
+impl ThreadMap for Lambda2Map {
+    fn name(&self) -> &'static str {
+        "lambda2"
+    }
+
+    fn m(&self) -> u32 {
+        2
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        // §III.A: the recursive structure needs n = 2^k (the paper's
+        // approaches for other n are in maps::nonpow2).
+        is_pow2(nb) && nb >= 2
+    }
+
+    fn grid(&self, nb: u64, _pass: u64) -> Orthotope {
+        Orthotope::d2(nb / 2, nb + 1)
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, _pass: u64, w: [u64; 3]) -> Option<[u64; 3]> {
+        let (c, r) = lambda2_inclusive(nb, w[0], w[1]);
+        Some([c, r, 0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::{alpha, domain_volume, in_domain};
+    use std::collections::HashSet;
+
+    /// Exhaustive bijection check — the core of experiment E2.
+    #[test]
+    fn lambda2_is_exact_bijection() {
+        for k in 1..9u32 {
+            let nb = 1u64 << k;
+            let map = Lambda2Map;
+            let mut seen = HashSet::new();
+            for w in map.grid(nb, 0).iter() {
+                let d = map.map_block(nb, 0, w).expect("λ2 has no filler");
+                assert!(
+                    in_domain(nb, 2, d),
+                    "nb={nb}: block {w:?} escapes domain at {d:?}"
+                );
+                assert!(seen.insert((d[0], d[1])), "nb={nb}: duplicate image {d:?}");
+            }
+            assert_eq!(seen.len() as u128, domain_volume(nb, 2), "nb={nb}");
+        }
+    }
+
+    #[test]
+    fn strict_part_matches_paper_formula() {
+        // Spot-check eq. 13 arithmetic at specific coordinates.
+        // y=1 → level 0, b=1, q=x.
+        assert_eq!(lambda2_strict(0, 1), (0, 1));
+        assert_eq!(lambda2_strict(1, 1), (2, 3));
+        assert_eq!(lambda2_strict(2, 1), (4, 5));
+        // y ∈ [2,4) → level 1, b=2.
+        assert_eq!(lambda2_strict(0, 2), (0, 2));
+        assert_eq!(lambda2_strict(1, 2), (1, 2));
+        assert_eq!(lambda2_strict(2, 3), (4, 7));
+        // y ∈ [4,8) → level 2, b=4.
+        assert_eq!(lambda2_strict(5, 4), (9, 12));
+    }
+
+    #[test]
+    fn mask_form_equals_eq13_form() {
+        // The two arithmetic forms must agree everywhere.
+        for y in 1..512u64 {
+            for x in 0..256u64 {
+                assert_eq!(lambda2_strict(x, y), lambda2_strict_mask(x, y), "({x},{y})");
+            }
+        }
+    }
+
+    #[test]
+    fn strict_images_are_strictly_lower() {
+        for y in 1..64u64 {
+            for x in 0..64u64 {
+                let (c, r) = lambda2_strict(x, y);
+                assert!(c < r, "({x},{y}) → ({c},{r}) not strictly lower");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_volume_equals_domain_volume() {
+        // The 2× improvement: V(Π) = V(Δ) exactly (vs BB's ~2·V(Δ)).
+        for k in 1..12u32 {
+            let nb = 1u64 << k;
+            assert_eq!(Lambda2Map.parallel_volume(nb), domain_volume(nb, 2));
+        }
+    }
+
+    #[test]
+    fn alpha_is_zero() {
+        assert!(alpha(&Lambda2Map, 1 << 10).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_non_pow2() {
+        assert!(!Lambda2Map.supports(12));
+        assert!(!Lambda2Map.supports(0));
+        assert!(!Lambda2Map.supports(1));
+        assert!(Lambda2Map.supports(2));
+        assert!(Lambda2Map.supports(1 << 20));
+    }
+
+    #[test]
+    fn diagonal_rows_cover_diagonal_exactly() {
+        let nb = 32u64;
+        let mut diag = HashSet::new();
+        for x in 0..nb / 2 {
+            let (c0, r0) = lambda2_inclusive(nb, x, 0);
+            let (c1, r1) = lambda2_inclusive(nb, x, nb);
+            assert_eq!(c0, r0);
+            assert_eq!(c1, r1);
+            diag.insert(c0);
+            diag.insert(c1);
+        }
+        assert_eq!(diag.len() as u64, nb);
+    }
+}

@@ -1,0 +1,252 @@
+//! λ3 — the O(1) two-branch fold map for 3-simplices (§III.C).
+//!
+//! The paper establishes (eq. 21-22) that the two-branch recursive set
+//! has volume `(N³-N)/6 = V(Δ_{N-1}^3)` exactly, gives the container
+//! `(N/2) × (N/2) × 3(N-1)/4` (eq. 24, 12.5% slack) and a two-case
+//! inside/fold formula — but not the packing. We use the derivation in
+//! DESIGN.md §λ3:
+//!
+//! Data space `D(N) = {(x,y,z) ≥ 0 : x+y+z ≤ N-2}`, decomposed as
+//! `corner cube [0,N/2)³ (+ fold of its diagonal overflow onto the
+//! z-branch) + x-branch D(N/2) + y-branch D(N/2)`. Parallel packing:
+//!
+//! - `z < N/2` — the level-0 cube, local size `m_loc = N`.
+//! - `z ∈ [N/2, 3N/4)` — level ℓ ≥ 1 with cube side `s = N/2^{ℓ+1}`
+//!   occupies `y ∈ [N/2-2s, N/2-s)`, `z ∈ [N/2, N/2+s)`; the branch-path
+//!   offsets have the closed form `ox = 2sq`, `oy = N-2s-2sq` (bit k of
+//!   q picks the x- or y-branch at recursion step k).
+//! - fold (both): local `(vx,vy,vz)` with `vx+vy+vz > m_loc-2` reflects
+//!   to `(s-1-vx, s-1-vy, m_loc-1-vz)` — the paper's second case, an
+//!   O(1) point reflection instead of cube roots.
+//!
+//! The strict map covers `{x+y+z ≤ N-2}`; the remaining diagonal plane
+//! `{x+y+z = N-1}` of the inclusive block domain is a 2-simplex of size
+//! N and is covered by three extra z-layers driven by λ2 (§III.A) —
+//! keeping the whole map single-pass and O(1).
+//!
+//! Container: `(N/2) × (N/2) × (3N/4 + 3)`; waste → 2/16 = 12.5%
+//! (eq. 24), versus ~500% for BB — the paper's 6× claim.
+
+use crate::maps::lambda2::lambda2_inclusive;
+use crate::maps::ThreadMap;
+use crate::simplex::volume::{ilog2, is_pow2};
+use crate::simplex::Orthotope;
+
+pub struct Lambda3Map;
+
+/// Map the strict part (`z < 3N/4`). Returns `None` for container
+/// filler. Exposed for benches.
+#[inline(always)]
+pub fn lambda3_strict(nb: u64, x: u64, y: u64, z: u64) -> Option<(u64, u64, u64)> {
+    let half = nb / 2;
+    if z < half {
+        // Level-0 corner cube, local size m_loc = N, side s = N/2.
+        let sigma = x + y + z;
+        if sigma + 2 <= nb {
+            Some((x, y, z))
+        } else {
+            // Fold through the diagonal into the z-branch (point
+            // reflection; σ' = 2N-3-σ ≤ N-2 and z' ≥ N/2).
+            Some((half - 1 - x, half - 1 - y, nb - 1 - z))
+        }
+    } else {
+        // Deeper levels. Level from y: y ∈ [N/2-2s, N/2-s).
+        let u = half - 1 - y; // ∈ [s, 2s) for level with side s
+        if u == 0 {
+            return None; // y = N/2-1 row is container filler
+        }
+        let level_log = ilog2(u); // s = 2^level_log
+        let s = 1u64 << level_log;
+        let vz = z - half;
+        if vz >= s {
+            return None; // beyond this level's z-slab: filler
+        }
+        let q = x >> level_log;
+        let qs = q << level_log; // q·s
+        let vx = x - qs;
+        let vy = y - (half - 2 * s);
+        debug_assert!(vy < s);
+        // Closed-form branch-path offsets (DESIGN.md): bit k of q picks
+        // x (1) or y (0) at recursion step k.
+        let ox = qs << 1; // 2·s·q
+        let oy = nb - 2 * s - ox;
+        let m_loc = 2 * s;
+        let sigma = vx + vy + vz;
+        if sigma + 2 <= m_loc {
+            Some((ox + vx, oy + vy, vz))
+        } else {
+            Some((ox + s - 1 - vx, oy + s - 1 - vy, m_loc - 1 - vz))
+        }
+    }
+}
+
+/// Map the diagonal-plane layers (`z ≥ 3N/4`): three λ2-driven layers
+/// covering `{x+y+z = N-1}`.
+#[inline(always)]
+pub fn lambda3_diagonal(nb: u64, x: u64, y: u64, z: u64) -> Option<(u64, u64, u64)> {
+    let t = z - 3 * nb / 4; // layer index 0..3
+    let y2 = t * (nb / 2) + y;
+    if y2 > nb {
+        return None; // last layer is only partially used
+    }
+    // λ2-inclusive gives (c ≤ r < N); parametrize the plane Σ = N-1 by
+    // (c, r) → (c, r-c, N-1-r).
+    let (c, r) = lambda2_inclusive(nb, x, y2);
+    Some((c, r - c, nb - 1 - r))
+}
+
+/// Full single-pass map on the grid `(N/2) × (N/2) × (3N/4 + 3)`.
+#[inline(always)]
+pub fn lambda3_full(nb: u64, x: u64, y: u64, z: u64) -> Option<(u64, u64, u64)> {
+    if z < 3 * nb / 4 {
+        lambda3_strict(nb, x, y, z)
+    } else {
+        lambda3_diagonal(nb, x, y, z)
+    }
+}
+
+impl ThreadMap for Lambda3Map {
+    fn name(&self) -> &'static str {
+        "lambda3"
+    }
+
+    fn m(&self) -> u32 {
+        3
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        is_pow2(nb) && nb >= 4
+    }
+
+    fn grid(&self, nb: u64, _pass: u64) -> Orthotope {
+        Orthotope::d3(nb / 2, nb / 2, 3 * nb / 4 + 3)
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, _pass: u64, w: [u64; 3]) -> Option<[u64; 3]> {
+        lambda3_full(nb, w[0], w[1], w[2]).map(|(a, b, c)| [a, b, c])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::{alpha, domain_volume, in_domain};
+    use std::collections::HashSet;
+
+    /// Exhaustive coverage — experiment E6's correctness core: every
+    /// data block covered exactly once, no block outside the simplex.
+    #[test]
+    fn lambda3_covers_domain_exactly_once() {
+        for k in 2..8u32 {
+            let nb = 1u64 << k;
+            let map = Lambda3Map;
+            let mut seen = HashSet::new();
+            let mut filler = 0u128;
+            for w in map.grid(nb, 0).iter() {
+                match map.map_block(nb, 0, w) {
+                    None => filler += 1,
+                    Some(d) => {
+                        assert!(
+                            in_domain(nb, 3, d),
+                            "nb={nb}: {w:?} escapes domain at {d:?}"
+                        );
+                        assert!(
+                            seen.insert((d[0], d[1], d[2])),
+                            "nb={nb}: duplicate image {d:?} from {w:?}"
+                        );
+                    }
+                }
+            }
+            assert_eq!(
+                seen.len() as u128,
+                domain_volume(nb, 3),
+                "nb={nb}: incomplete coverage"
+            );
+            // Filler = container minus domain.
+            assert_eq!(
+                filler,
+                map.parallel_volume(nb) - domain_volume(nb, 3),
+                "nb={nb}"
+            );
+        }
+    }
+
+    #[test]
+    fn strict_part_covers_strict_simplex_exactly() {
+        // lambda3_strict alone is a bijection onto {Σ ≤ N-2} (eq. 22:
+        // V(S_N^3) = V(Δ_{N-1}^3)).
+        for k in 2..8u32 {
+            let nb = 1u64 << k;
+            let mut seen = HashSet::new();
+            for z in 0..3 * nb / 4 {
+                for y in 0..nb / 2 {
+                    for x in 0..nb / 2 {
+                        if let Some(d) = lambda3_strict(nb, x, y, z) {
+                            assert!(d.0 + d.1 + d.2 <= nb - 2, "nb={nb} {x},{y},{z} → {d:?}");
+                            assert!(seen.insert(d), "nb={nb}: dup {d:?}");
+                        }
+                    }
+                }
+            }
+            assert_eq!(seen.len() as u128, domain_volume(nb - 1, 3), "nb={nb}");
+        }
+    }
+
+    #[test]
+    fn diagonal_layers_cover_plane_exactly() {
+        for k in 2..8u32 {
+            let nb = 1u64 << k;
+            let mut seen = HashSet::new();
+            for z in 3 * nb / 4..3 * nb / 4 + 3 {
+                for y in 0..nb / 2 {
+                    for x in 0..nb / 2 {
+                        if let Some(d) = lambda3_diagonal(nb, x, y, z) {
+                            assert_eq!(d.0 + d.1 + d.2, nb - 1, "plane Σ=N-1");
+                            assert!(seen.insert(d), "dup {d:?}");
+                        }
+                    }
+                }
+            }
+            // |{Σ = N-1}| = C(N+1, 2) = N(N+1)/2.
+            assert_eq!(seen.len() as u128, (nb as u128) * (nb as u128 + 1) / 2);
+        }
+    }
+
+    #[test]
+    fn container_matches_eq24_dimensions() {
+        // (N/2) × (N/2) × ~3N/4 (plus the 3 diagonal layers).
+        let nb = 64;
+        let g = Lambda3Map.grid(nb, 0);
+        assert_eq!(g.dims[0], 32);
+        assert_eq!(g.dims[1], 32);
+        assert_eq!(g.dims[2], 51); // 48 + 3
+    }
+
+    #[test]
+    fn alpha_approaches_12_5_percent() {
+        // eq. 24: V(Π)/V(Δ) - 1 → 2/16 = 0.125.
+        let a = alpha(&Lambda3Map, 1 << 10);
+        assert!((a - 0.125).abs() < 0.01, "α={a}");
+        // And is ~6× better than BB's α → 5 (the paper's headline).
+        let a_bb = alpha(&crate::maps::BoundingBox3, 1 << 10);
+        assert!(a_bb / a > 30.0, "λ3 waste {a} vs BB waste {a_bb}");
+    }
+
+    #[test]
+    fn fold_case_reaches_z_branch() {
+        // A level-0 cube block past the diagonal must land at z ≥ N/2.
+        let nb = 16;
+        let d = lambda3_strict(nb, 7, 7, 7).unwrap();
+        assert!(d.2 >= nb / 2, "fold lands in z-branch: {d:?}");
+        assert!(d.0 + d.1 + d.2 <= nb - 2);
+    }
+
+    #[test]
+    fn rejects_small_or_non_pow2() {
+        assert!(!Lambda3Map.supports(12));
+        assert!(!Lambda3Map.supports(2));
+        assert!(Lambda3Map.supports(4));
+        assert!(Lambda3Map.supports(256));
+    }
+}

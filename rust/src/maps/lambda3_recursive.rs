@@ -1,0 +1,162 @@
+//! λ3-rec — the §III.B arity-3 recursive map (eq. 20): map the
+//! tetrahedron by recursively launching a cube at the orthogonal corner
+//! plus three sub-tetrahedra. Each recursion node is its own kernel
+//! launch, so the total launch count is Σ 3^ℓ ∈ O(n^{log2 3}) — the
+//! paper's argument for abandoning this formulation in favour of §III.C
+//! (GPUs of the day ran ≤ 32 concurrent kernels).
+//!
+//! Cubes at the corner of a (sub)tetrahedron overflow its diagonal
+//! face (DESIGN.md §λ3), so each cube launch carries a per-block
+//! predicate — this map trades waste *and* launches for simplicity.
+
+use crate::maps::{in_domain, ThreadMap};
+use crate::simplex::volume::{ilog2, is_pow2};
+use crate::simplex::Orthotope;
+
+pub struct Lambda3RecMap;
+
+/// Number of launches: 3^0 + 3^1 + … + 3^{log2(N)-1} cubes.
+pub fn launch_count(nb: u64) -> u64 {
+    let levels = ilog2(nb) as u64;
+    (3u64.pow(levels as u32) - 1) / 2
+}
+
+/// Offset of launch `idx`: decode the base-3 path. Level ℓ contains
+/// launches [ (3^ℓ-1)/2, (3^{ℓ+1}-1)/2 ); digit k of the in-level index
+/// picks the x/y/z branch at recursion step k+1.
+fn decode(nb: u64, idx: u64) -> (u64, [u64; 3]) {
+    let mut level = 0u32;
+    let mut base = 0u64;
+    while base + 3u64.pow(level) <= idx {
+        base += 3u64.pow(level);
+        level += 1;
+    }
+    let mut rem = idx - base;
+    let mut offset = [0u64; 3];
+    // Digits from least significant = deepest recursion step.
+    for step in (1..=level).rev() {
+        let branch = (rem % 3) as usize;
+        rem /= 3;
+        offset[branch] += nb >> step;
+    }
+    (nb >> (level + 1), offset) // (cube side, offset)
+}
+
+impl ThreadMap for Lambda3RecMap {
+    fn name(&self) -> &'static str {
+        "lambda3-rec"
+    }
+
+    fn m(&self) -> u32 {
+        3
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        is_pow2(nb) && nb >= 2
+    }
+
+    fn passes(&self, nb: u64) -> u64 {
+        launch_count(nb) + 1 // + one diagonal-plane pass
+    }
+
+    fn grid(&self, nb: u64, pass: u64) -> Orthotope {
+        if pass < launch_count(nb) {
+            let (side, _) = decode(nb, pass);
+            Orthotope::d3(side, side, side)
+        } else {
+            // Diagonal pass: the plane Σ = N-1 as a 2-D launch.
+            Orthotope::d3(nb, nb, 1)
+        }
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, pass: u64, w: [u64; 3]) -> Option<[u64; 3]> {
+        if pass < launch_count(nb) {
+            let (_side, off) = decode(nb, pass);
+            let d = [w[0] + off[0], w[1] + off[1], w[2] + off[2]];
+            // Cubes overflow their sub-tetrahedron's diagonal face: the
+            // predicate discards the overflow (that is the 1/5 extra
+            // volume of eq. 19). The recursion never reaches size-1
+            // leaves, whose cells all lie on the plane Σ = N-1; cubes
+            // therefore own exactly {Σ ≤ N-2} (disjointly) and the
+            // final pass owns the diagonal plane.
+            if in_domain(nb, 3, d) && d[0] + d[1] + d[2] <= nb - 2 {
+                Some(d)
+            } else {
+                None
+            }
+        } else {
+            // Diagonal-plane pass: (x, y) → (x, y, N-1-x-y).
+            if w[0] + w[1] <= nb - 1 {
+                Some([w[0], w[1], nb - 1 - w[0] - w[1]])
+            } else {
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::domain_volume;
+    use std::collections::HashSet;
+
+    #[test]
+    fn launch_count_matches_geometric_sum() {
+        assert_eq!(launch_count(2), 1);
+        assert_eq!(launch_count(4), 4); // 1 + 3
+        assert_eq!(launch_count(8), 13); // 1 + 3 + 9
+        assert_eq!(launch_count(1024), (3u64.pow(10) - 1) / 2);
+    }
+
+    #[test]
+    fn launch_count_exceeds_concurrency_cap_quickly() {
+        // §III.B: "an excessive number of parallel calls … up to 32
+        // concurrent kernels". Already at n=64 blocks we exceed 32.
+        assert!(launch_count(64) > 32, "{}", launch_count(64));
+    }
+
+    #[test]
+    fn decode_roundtrip_offsets_in_range() {
+        let nb = 32;
+        for idx in 0..launch_count(nb) {
+            let (side, off) = decode(nb, idx);
+            assert!(side >= 1);
+            for d in off {
+                assert!(d < nb);
+            }
+        }
+    }
+
+    /// The union of all passes must cover the simplex (duplicates
+    /// allowed only at zero — i.e. none, cubes are disjoint).
+    #[test]
+    fn covers_domain_completely() {
+        for k in 1..6u32 {
+            let nb = 1u64 << k;
+            let map = Lambda3RecMap;
+            let mut seen = HashSet::new();
+            let mut dups = 0u64;
+            for pass in 0..map.passes(nb) {
+                for w in map.grid(nb, pass).iter() {
+                    if let Some(d) = map.map_block(nb, pass, w) {
+                        assert!(
+                            crate::maps::in_domain(nb, 3, d),
+                            "nb={nb} pass={pass} {w:?}→{d:?}"
+                        );
+                        if !seen.insert((d[0], d[1], d[2])) {
+                            dups += 1;
+                        }
+                    }
+                }
+            }
+            assert_eq!(
+                seen.len() as u128,
+                domain_volume(nb, 3),
+                "nb={nb}: incomplete"
+            );
+            assert_eq!(dups, 0, "nb={nb}: {dups} duplicate mappings");
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Block-space thread maps `λ: Z^m → Z^m` — the paper's subject.
+//!
+//! A [`ThreadMap`] takes a *parallel-space* block coordinate (a cell of
+//! a grid orthotope, §I) and produces a *data-space* block coordinate
+//! inside a discrete orthogonal m-simplex, or `None` when the parallel
+//! block is structural filler that must be discarded. Maps may need
+//! several launch *passes* (Ries-style recursive partition, the arity-3
+//! λ of §III.B); single-pass maps use `passes() == 1`.
+//!
+//! ## Block-level domain conventions
+//!
+//! With ρ threads per block side and `n = N·ρ` the thread-level problem
+//! size, the *block-level* domains are:
+//!
+//! - **m=2** — `B2(N) = { (bc, br) : bc ≤ br < N }` (lower-triangular
+//!   block pairs *including* the diagonal): these are exactly the blocks
+//!   that intersect the thread-level triangle, whether the workload
+//!   wants `col < row` or `col ≤ row` (diagonal blocks predicate
+//!   per-thread). `|B2| = N(N+1)/2 = V(Δ_N^2)`.
+//! - **m=3** — `B3(N) = { (x, y, z) ∈ Z³₊ : x+y+z ≤ N-1 }` (simplex
+//!   coordinates). `|B3| = V(Δ_N^3)`. Workloads over unique triples
+//!   `k < j < i` convert with [`crate::simplex::point::simplex_to_tet_triple`].
+//!
+//! Every map here is validated by exhaustive coverage tests: the images
+//! of all valid parallel blocks partition the block domain exactly
+//! (λ2, λ3, RB, ENUM) or cover it with the predicted waste (BB).
+
+pub mod avril;
+pub mod bounding_box;
+pub mod enumeration;
+pub mod lambda2;
+pub mod lambda3;
+pub mod lambda3_recursive;
+pub mod nonpow2;
+pub mod rectangular_box;
+pub mod ries;
+
+use crate::simplex::Orthotope;
+
+pub use avril::{avril_map_f32, avril_map_f64, AvrilMap};
+pub use bounding_box::{BoundingBox2, BoundingBox3};
+pub use enumeration::{Enum2Map, Enum3Map};
+pub use lambda2::Lambda2Map;
+pub use lambda3::Lambda3Map;
+pub use lambda3_recursive::Lambda3RecMap;
+pub use nonpow2::{CoverFromAbove, CoverFromBelow2};
+pub use rectangular_box::RectangularBoxMap;
+pub use ries::RiesMap;
+
+/// A block-space thread map for an m-simplex domain.
+pub trait ThreadMap: Send + Sync {
+    /// Short name used in CLIs, benches and reports.
+    fn name(&self) -> &'static str;
+
+    /// Dimensionality of the data space (2 or 3 here).
+    fn m(&self) -> u32;
+
+    /// Whether the map accepts a problem of `nb` blocks per side
+    /// (e.g. λ2/λ3 require `nb = 2^k` — §III.A's discussion).
+    fn supports(&self, nb: u64) -> bool;
+
+    /// Number of kernel launches required for one full mapping.
+    fn passes(&self, _nb: u64) -> u64 {
+        1
+    }
+
+    /// Grid (parallel orthotope, in blocks) of launch pass `pass`.
+    fn grid(&self, nb: u64, pass: u64) -> Orthotope;
+
+    /// Map parallel block `w` of pass `pass` to a data block, or `None`
+    /// for filler blocks. Must be O(1) for the single-pass maps — this
+    /// is the measured hot path.
+    fn map_block(&self, nb: u64, pass: u64, w: [u64; 3]) -> Option<[u64; 3]>;
+
+    /// Total parallel-space volume in blocks (all passes) — the paper's
+    /// `V(Π)` that eq. 4/24 compare against `V(Δ)`.
+    fn parallel_volume(&self, nb: u64) -> u128 {
+        (0..self.passes(nb))
+            .map(|p| self.grid(nb, p).volume())
+            .sum()
+    }
+}
+
+/// Number of *useful* data blocks for dimension m at block size nb.
+pub fn domain_volume(nb: u64, m: u32) -> u128 {
+    crate::simplex::volume::simplex_volume(nb, m)
+}
+
+/// Parallel-space efficiency `V(Δ) / V(Π)` ∈ (0, 1] — the figure of
+/// merit of the whole paper (1.0 = zero wasted blocks).
+pub fn space_efficiency(map: &dyn ThreadMap, nb: u64) -> f64 {
+    domain_volume(nb, map.m()) as f64 / map.parallel_volume(nb) as f64
+}
+
+/// `V(Π)/V(Δ) - 1` — the paper's α waste ratio (eq. 4 / 24).
+pub fn alpha(map: &dyn ThreadMap, nb: u64) -> f64 {
+    map.parallel_volume(nb) as f64 / domain_volume(nb, map.m()) as f64 - 1.0
+}
+
+/// Whether a data block lies in the block-level domain (see module doc).
+#[inline]
+pub fn in_domain(nb: u64, m: u32, d: [u64; 3]) -> bool {
+    match m {
+        2 => d[0] <= d[1] && d[1] < nb,
+        3 => d[0] + d[1] + d[2] <= nb - 1,
+        _ => unreachable!("block domains defined for m ∈ {{2,3}}"),
+    }
+}
+
+/// Registry: construct a 2-simplex map by name.
+pub fn map2_by_name(name: &str) -> Option<Box<dyn ThreadMap>> {
+    match name {
+        "bb" | "bounding-box" => Some(Box::new(BoundingBox2)),
+        "lambda2" | "lambda" => Some(Box::new(Lambda2Map)),
+        "enum2" | "enum" => Some(Box::new(Enum2Map)),
+        "rb" | "rectangular-box" => Some(Box::new(RectangularBoxMap)),
+        "ries" | "rec" => Some(Box::new(RiesMap)),
+        "avril" => Some(Box::new(AvrilMap)),
+        // §III.A non-power-of-two approaches (1: from above, 2: from below).
+        "above2" | "from-above" => Some(Box::new(CoverFromAbove::new(Lambda2Map))),
+        "below2" | "from-below" => Some(Box::new(CoverFromBelow2)),
+        _ => None,
+    }
+}
+
+/// Registry: construct a 3-simplex map by name.
+pub fn map3_by_name(name: &str) -> Option<Box<dyn ThreadMap>> {
+    match name {
+        "bb" | "bounding-box" => Some(Box::new(BoundingBox3)),
+        "lambda3" | "lambda" => Some(Box::new(Lambda3Map)),
+        "enum3" | "enum" => Some(Box::new(Enum3Map)),
+        "lambda3-rec" | "rec3" => Some(Box::new(Lambda3RecMap)),
+        _ => None,
+    }
+}
+
+/// All registered 2-simplex map names (for CLIs and sweeps).
+pub const MAP2_NAMES: &[&str] =
+    &["bb", "lambda2", "enum2", "rb", "ries", "avril", "above2", "below2"];
+/// All registered 3-simplex map names.
+pub const MAP3_NAMES: &[&str] = &["bb", "lambda3", "enum3", "lambda3-rec"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for name in MAP2_NAMES {
+            let m = map2_by_name(name).unwrap_or_else(|| panic!("{name}"));
+            assert_eq!(m.m(), 2);
+        }
+        for name in MAP3_NAMES {
+            let m = map3_by_name(name).unwrap_or_else(|| panic!("{name}"));
+            assert_eq!(m.m(), 3);
+        }
+        assert!(map2_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn domain_volume_matches_simplex_numbers() {
+        assert_eq!(domain_volume(8, 2), 36); // 8·9/2
+        assert_eq!(domain_volume(8, 3), 120); // 8·9·10/6
+    }
+
+    #[test]
+    fn in_domain_m2_is_inclusive_lower_triangle() {
+        assert!(in_domain(4, 2, [0, 0, 0]));
+        assert!(in_domain(4, 2, [3, 3, 0]));
+        assert!(in_domain(4, 2, [1, 3, 0]));
+        assert!(!in_domain(4, 2, [3, 1, 0]));
+        assert!(!in_domain(4, 2, [0, 4, 0]));
+    }
+
+    #[test]
+    fn in_domain_m3_is_simplex() {
+        assert!(in_domain(4, 3, [0, 0, 0]));
+        assert!(in_domain(4, 3, [1, 1, 1]));
+        assert!(!in_domain(4, 3, [2, 1, 1]));
+        assert!(!in_domain(4, 3, [4, 0, 0]));
+    }
+}

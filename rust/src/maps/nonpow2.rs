@@ -1,0 +1,245 @@
+//! Non-power-of-two problem sizes (§III.A's two approaches).
+//!
+//! Approach 1 ("from above"): run the recursive map at
+//! `N' = 2^⌈log2 N⌉` and filter the blocks that land outside the real
+//! domain — simple, costs extra blocks (bounded by the test below).
+//!
+//! Approach 2 ("from below") is a set of shrinking power-of-two
+//! sub-maps; it adds no waste but needs one launch per sub-orthotope.
+//! We implement approach 1 as a generic wrapper (what the paper deems
+//! practical — "in many cases it is possible to adapt the problem size
+//! to n = 2^k") and account approach 2's launch count analytically in
+//! the E1 report.
+
+use crate::maps::{in_domain, ThreadMap};
+use crate::simplex::volume::next_pow2;
+use crate::simplex::Orthotope;
+
+/// Wrap a power-of-two-only map so it accepts any `nb ≥ 2` by rounding
+/// the parallel structure up and filtering.
+pub struct CoverFromAbove<M: ThreadMap> {
+    pub inner: M,
+}
+
+impl<M: ThreadMap> CoverFromAbove<M> {
+    pub fn new(inner: M) -> Self {
+        CoverFromAbove { inner }
+    }
+}
+
+impl<M: ThreadMap> ThreadMap for CoverFromAbove<M> {
+    fn name(&self) -> &'static str {
+        "cover-from-above"
+    }
+
+    fn m(&self) -> u32 {
+        self.inner.m()
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        nb >= 2 && self.inner.supports(next_pow2(nb))
+    }
+
+    fn passes(&self, nb: u64) -> u64 {
+        self.inner.passes(next_pow2(nb))
+    }
+
+    fn grid(&self, nb: u64, pass: u64) -> Orthotope {
+        self.inner.grid(next_pow2(nb), pass)
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, pass: u64, w: [u64; 3]) -> Option<[u64; 3]> {
+        let d = self.inner.map_block(next_pow2(nb), pass, w)?;
+        // Keep only blocks inside the true (smaller) domain.
+        if in_domain(nb, self.m(), d) {
+            Some(d)
+        } else {
+            None
+        }
+    }
+}
+
+/// Approach 2 ("from below") for m=2: decompose `nb` into its binary
+/// segments `nb = Σ 2^{k_i}` laid along the diagonal. Segment i
+/// (size s_i, starting at row offset `o_i = Σ_{j<i} s_j`) contributes
+///
+/// - one λ2 pass over its own inclusive sub-triangle (rows/cols
+///   `[o_i, o_i+s_i)`), and
+/// - one plain rectangular pass `s_i × o_i` for the block rectangle
+///   `rows [o_i, o_i+s_i) × cols [0, o_i)` (fully inside the domain).
+///
+/// Zero filler blocks for *any* nb — the paper's trade: no waste, but
+/// `2·popcount(nb) - 1` launches instead of 1.
+pub struct CoverFromBelow2;
+
+impl CoverFromBelow2 {
+    /// (segment size, row offset) per binary digit, largest first.
+    fn segments(nb: u64) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut offset = 0u64;
+        for bit in (0..64).rev() {
+            let s = 1u64 << bit;
+            if nb & s != 0 {
+                out.push((s, offset));
+                offset += s;
+            }
+        }
+        out
+    }
+}
+
+impl ThreadMap for CoverFromBelow2 {
+    fn name(&self) -> &'static str {
+        "from-below2"
+    }
+
+    fn m(&self) -> u32 {
+        2
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        nb >= 1
+    }
+
+    /// One triangle pass per segment + one rectangle pass per segment
+    /// after the first.
+    fn passes(&self, nb: u64) -> u64 {
+        2 * nb.count_ones() as u64 - 1
+    }
+
+    fn grid(&self, nb: u64, pass: u64) -> Orthotope {
+        let segs = Self::segments(nb);
+        let i = (pass as usize + 1) / 2;
+        let (s, o) = segs[i];
+        if pass % 2 == 1 {
+            // Rectangle pass for segment i ≥ 1.
+            Orthotope::d2(o, s)
+        } else if s == 1 {
+            // A size-1 triangle is a single diagonal block.
+            Orthotope::d2(1, 1)
+        } else {
+            // λ2-inclusive grid for the segment's sub-triangle.
+            Orthotope::d2(s / 2, s + 1)
+        }
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, pass: u64, w: [u64; 3]) -> Option<[u64; 3]> {
+        let segs = Self::segments(nb);
+        let i = (pass as usize + 1) / 2;
+        let (s, o) = segs[i];
+        if pass % 2 == 1 {
+            // Rectangle: cols [0, o) × rows [o, o+s).
+            Some([w[0], o + w[1], 0])
+        } else if s == 1 {
+            Some([o, o, 0])
+        } else {
+            let (c, r) = crate::maps::lambda2::lambda2_inclusive(s, w[0], w[1]);
+            Some([o + c, o + r, 0])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::{domain_volume, Lambda2Map, Lambda3Map};
+    use std::collections::HashSet;
+
+    #[test]
+    fn from_below_exact_for_arbitrary_sizes() {
+        // Approach 2 (§III.A): zero waste at every size.
+        for nb in [1u64, 2, 3, 5, 7, 11, 12, 21, 31, 33, 63, 64, 100] {
+            let map = CoverFromBelow2;
+            let mut seen = HashSet::new();
+            for pass in 0..map.passes(nb) {
+                for w in map.grid(nb, pass).iter() {
+                    let d = map.map_block(nb, pass, w).expect("no filler");
+                    assert!(in_domain(nb, 2, d), "nb={nb} pass={pass} {w:?}→{d:?}");
+                    assert!(seen.insert((d[0], d[1])), "nb={nb} dup {d:?}");
+                }
+            }
+            assert_eq!(seen.len() as u128, domain_volume(nb, 2), "nb={nb}");
+            // Zero waste: parallel volume == domain volume.
+            assert_eq!(map.parallel_volume(nb), domain_volume(nb, 2), "nb={nb}");
+        }
+    }
+
+    #[test]
+    fn from_below_pass_count_is_popcount_based() {
+        assert_eq!(CoverFromBelow2.passes(64), 1); // one power of two
+        assert_eq!(CoverFromBelow2.passes(63), 11); // six bits → 2·6−1
+        assert_eq!(CoverFromBelow2.passes(5), 3); // 101 → 2·2−1
+    }
+
+    #[test]
+    fn approaches_trade_waste_for_launches() {
+        // The §III.A trade-off, quantified: from-above wastes blocks
+        // but launches once; from-below wastes nothing but launches
+        // O(popcount) times.
+        let nb = 21u64; // 10101: worst-ish case
+        let above = CoverFromAbove::new(Lambda2Map);
+        let below = CoverFromBelow2;
+        assert!(above.parallel_volume(nb) > domain_volume(nb, 2));
+        assert_eq!(below.parallel_volume(nb), domain_volume(nb, 2));
+        assert_eq!(above.passes(nb), 1);
+        assert_eq!(below.passes(nb), 5);
+    }
+
+    #[test]
+    fn covers_arbitrary_sizes_m2() {
+        for nb in [3u64, 5, 7, 12, 25, 63, 100] {
+            let map = CoverFromAbove::new(Lambda2Map);
+            assert!(map.supports(nb));
+            let mut seen = HashSet::new();
+            for pass in 0..map.passes(nb) {
+                for w in map.grid(nb, pass).iter() {
+                    if let Some(d) = map.map_block(nb, pass, w) {
+                        assert!(in_domain(nb, 2, d));
+                        assert!(seen.insert((d[0], d[1])), "dup {d:?} nb={nb}");
+                    }
+                }
+            }
+            assert_eq!(seen.len() as u128, domain_volume(nb, 2), "nb={nb}");
+        }
+    }
+
+    #[test]
+    fn covers_arbitrary_sizes_m3() {
+        for nb in [5u64, 9, 13, 27] {
+            let map = CoverFromAbove::new(Lambda3Map);
+            let mut seen = HashSet::new();
+            for pass in 0..map.passes(nb) {
+                for w in map.grid(nb, pass).iter() {
+                    if let Some(d) = map.map_block(nb, pass, w) {
+                        assert!(in_domain(nb, 3, d));
+                        assert!(seen.insert((d[0], d[1], d[2])), "dup {d:?} nb={nb}");
+                    }
+                }
+            }
+            assert_eq!(seen.len() as u128, domain_volume(nb, 3), "nb={nb}");
+        }
+    }
+
+    #[test]
+    fn waste_bounded_by_four_x() {
+        // Rounding N up to 2^⌈log2⌉ at worst ~quadruples the m=2
+        // parallel volume (just under a power of two it's ~1×).
+        let map = CoverFromAbove::new(Lambda2Map);
+        for nb in [9u64, 100, 1000] {
+            let waste =
+                map.parallel_volume(nb) as f64 / domain_volume(nb, 2) as f64;
+            assert!(waste < 4.0 + 0.5, "nb={nb}: {waste}");
+        }
+        // Just below a power of two the overhead is tiny.
+        let w = map.parallel_volume(63) as f64 / domain_volume(63, 2) as f64;
+        assert!(w < 1.1, "{w}");
+    }
+
+    #[test]
+    fn pow2_sizes_add_no_waste() {
+        let map = CoverFromAbove::new(Lambda2Map);
+        assert_eq!(map.parallel_volume(64), domain_volume(64, 2));
+    }
+}

@@ -1,0 +1,100 @@
+//! RB — the rectangular-box strategy of Jung & O'Leary [8], applied to
+//! the *parallel* space as the paper's related-work section suggests:
+//! fold the inclusive lower triangle into an `(N/2) × (N+1)` rectangle
+//! by mirroring the wide columns.
+//!
+//! Map: parallel `(x, y)`, grid `(N/2) × (N+1)`:
+//! - `y > x`  → `(col, row) = (x, y-1)`       (left part, col < N/2)
+//! - `y ≤ x`  → `(col, row) = (N-1-x, N-1-y)` (mirrored right part)
+//!
+//! Both parts together cover `{c ≤ r < N}` exactly once (proof in the
+//! exhaustive test). O(1), no roots, no recursion — but unlike λ2 it
+//! does not generalize to m=3 (no 3-D analog folds a tetrahedron into
+//! a box without deformation, cf. §III.B's discussion).
+
+use crate::maps::ThreadMap;
+use crate::simplex::Orthotope;
+
+pub struct RectangularBoxMap;
+
+/// Raw RB fold, exposed for benches.
+#[inline(always)]
+pub fn rb_map(nb: u64, x: u64, y: u64) -> (u64, u64) {
+    if y > x {
+        (x, y - 1)
+    } else {
+        (nb - 1 - x, nb - 1 - y)
+    }
+}
+
+impl ThreadMap for RectangularBoxMap {
+    fn name(&self) -> &'static str {
+        "rb"
+    }
+
+    fn m(&self) -> u32 {
+        2
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        nb >= 2 && nb % 2 == 0
+    }
+
+    fn grid(&self, nb: u64, _pass: u64) -> Orthotope {
+        Orthotope::d2(nb / 2, nb + 1)
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, _pass: u64, w: [u64; 3]) -> Option<[u64; 3]> {
+        let (c, r) = rb_map(nb, w[0], w[1]);
+        Some([c, r, 0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::{alpha, domain_volume, in_domain};
+    use std::collections::HashSet;
+
+    #[test]
+    fn rb_is_exact_bijection() {
+        for nb in [2u64, 4, 6, 8, 16, 32, 64, 128] {
+            let map = RectangularBoxMap;
+            let mut seen = HashSet::new();
+            for w in map.grid(nb, 0).iter() {
+                let d = map.map_block(nb, 0, w).expect("rb has no filler");
+                assert!(in_domain(nb, 2, d), "nb={nb} {w:?}→{d:?}");
+                assert!(seen.insert((d[0], d[1])), "nb={nb} dup {d:?}");
+            }
+            assert_eq!(seen.len() as u128, domain_volume(nb, 2), "nb={nb}");
+        }
+    }
+
+    #[test]
+    fn left_part_keeps_narrow_columns() {
+        let nb = 16;
+        for y in 0..=nb {
+            for x in 0..nb / 2 {
+                let (c, r) = rb_map(nb, x, y);
+                if y > x {
+                    assert!(c < nb / 2);
+                } else {
+                    assert!(c >= nb / 2);
+                }
+                assert!(c <= r, "({x},{y}) → ({c},{r})");
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_is_zero() {
+        assert!(alpha(&RectangularBoxMap, 64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn even_sizes_only() {
+        assert!(RectangularBoxMap.supports(6));
+        assert!(!RectangularBoxMap.supports(7));
+    }
+}

@@ -1,0 +1,114 @@
+//! REC — Ries et al.'s recursive partition for triangular matrices
+//! [21], as characterized in §II: a divide-and-conquer split of the
+//! triangle into the same squares λ2 uses, but dispatched as
+//! `O(log2 n)` *separate balanced launches* instead of one flat grid.
+//!
+//! Pass ℓ ∈ [0, log2 N) launches the 2^ℓ squares of side `N/2^{ℓ+1}` as
+//! one `(s) × (s·2^ℓ)` grid; a final pass covers the diagonal blocks.
+//! Per-pass blocks map O(1); the cost the paper attributes to this
+//! approach is the *pass count* (kernel-launch latency), which the grid
+//! simulator charges per launch.
+
+use crate::maps::ThreadMap;
+use crate::simplex::volume::{ilog2, is_pow2};
+use crate::simplex::Orthotope;
+
+pub struct RiesMap;
+
+impl ThreadMap for RiesMap {
+    fn name(&self) -> &'static str {
+        "ries"
+    }
+
+    fn m(&self) -> u32 {
+        2
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        is_pow2(nb) && nb >= 2
+    }
+
+    /// log2(N) square passes + 1 diagonal pass.
+    fn passes(&self, nb: u64) -> u64 {
+        ilog2(nb) as u64 + 1
+    }
+
+    fn grid(&self, nb: u64, pass: u64) -> Orthotope {
+        let square_passes = ilog2(nb) as u64;
+        if pass < square_passes {
+            // Pass ℓ: 2^ℓ squares of side s = N/2^{ℓ+1}, stacked in y.
+            let s = nb >> (pass + 1);
+            Orthotope::d2(s, s << pass)
+        } else {
+            // Diagonal pass: N blocks in a row.
+            Orthotope::d2(nb, 1)
+        }
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, pass: u64, w: [u64; 3]) -> Option<[u64; 3]> {
+        let square_passes = ilog2(nb) as u64;
+        if pass < square_passes {
+            let s = nb >> (pass + 1);
+            let q = w[1] / s; // which square of this level
+            let vy = w[1] - q * s;
+            // Level-ℓ square q sits at cols [2qs, 2qs+s), rows [2qs+s, 2qs+2s)
+            // — identical geometry to λ2's level ℓ (see lambda2.rs).
+            Some([2 * q * s + w[0], 2 * q * s + s + vy, 0])
+        } else {
+            Some([w[0], w[0], 0])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::{domain_volume, in_domain};
+    use std::collections::HashSet;
+
+    #[test]
+    fn all_passes_together_cover_domain_exactly() {
+        for k in 1..9u32 {
+            let nb = 1u64 << k;
+            let map = RiesMap;
+            let mut seen = HashSet::new();
+            for pass in 0..map.passes(nb) {
+                for w in map.grid(nb, pass).iter() {
+                    let d = map.map_block(nb, pass, w).expect("no filler");
+                    assert!(in_domain(nb, 2, d), "nb={nb} pass={pass} {w:?}→{d:?}");
+                    assert!(seen.insert((d[0], d[1])), "dup {d:?}");
+                }
+            }
+            assert_eq!(seen.len() as u128, domain_volume(nb, 2), "nb={nb}");
+        }
+    }
+
+    #[test]
+    fn pass_count_is_logarithmic() {
+        assert_eq!(RiesMap.passes(2), 2);
+        assert_eq!(RiesMap.passes(1024), 11);
+        // vs λ2's single pass — experiment E12's comparison.
+        assert_eq!(crate::maps::Lambda2Map.passes(1024), 1);
+    }
+
+    #[test]
+    fn total_volume_matches_lambda2() {
+        // Same recursive squares → same total block count.
+        for k in 1..10u32 {
+            let nb = 1u64 << k;
+            assert_eq!(
+                RiesMap.parallel_volume(nb),
+                crate::maps::Lambda2Map.parallel_volume(nb)
+            );
+        }
+    }
+
+    #[test]
+    fn per_pass_grids_shrink() {
+        let nb = 64;
+        let v0 = RiesMap.grid(nb, 0).volume();
+        let v1 = RiesMap.grid(nb, 1).volume();
+        assert!(v1 < v0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Artifact registry: discovers `artifacts/*.hlo.txt` plus their
+//! sidecar metadata (`artifacts/manifest.json`, written by aot.py) and
+//! hands validated specs to the executor.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+use super::{Result, RuntimeError};
+
+/// Metadata for one compiled computation, as recorded by aot.py.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    /// Input shapes, row-major (e.g. [[64,16,8],[64,16,8]]).
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Output shape of the single (tupled) result.
+    pub output_shape: Vec<usize>,
+}
+
+impl ArtifactSpec {
+    /// Total f32 element count of input `i`.
+    pub fn input_len(&self, i: usize) -> usize {
+        self.input_shapes[i].iter().product()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+}
+
+/// Registry over an artifacts directory.
+#[derive(Debug, Default)]
+pub struct ArtifactRegistry {
+    specs: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ArtifactRegistry {
+    /// Load the manifest from `dir` ("artifacts" by default).
+    pub fn load(dir: &Path) -> Result<ArtifactRegistry> {
+        let manifest_path = dir.join("manifest.json");
+        if !manifest_path.exists() {
+            return Err(RuntimeError::ArtifactMissing(
+                manifest_path.display().to_string(),
+            ));
+        }
+        let text = std::fs::read_to_string(&manifest_path)?;
+        let doc = json::parse(&text)
+            .map_err(|e| RuntimeError::BadMetadata(e.to_string()))?;
+        let arr = doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| RuntimeError::BadMetadata("missing 'artifacts' array".into()))?;
+        let mut specs = BTreeMap::new();
+        for a in arr {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| RuntimeError::BadMetadata("artifact missing 'name'".into()))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| RuntimeError::BadMetadata("artifact missing 'file'".into()))?;
+            let path = dir.join(file);
+            if !path.exists() {
+                return Err(RuntimeError::ArtifactMissing(path.display().to_string()));
+            }
+            let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+                a.get(key)
+                    .and_then(Json::as_arr)
+                    .map(|rows| {
+                        rows.iter()
+                            .map(|row| {
+                                row.as_arr()
+                                    .map(|dims| {
+                                        dims.iter()
+                                            .filter_map(Json::as_u64)
+                                            .map(|d| d as usize)
+                                            .collect()
+                                    })
+                                    .ok_or_else(|| {
+                                        RuntimeError::BadMetadata(format!("bad {key}"))
+                                    })
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_else(|| Err(RuntimeError::BadMetadata(format!("missing {key}"))))
+            };
+            let input_shapes = shapes("input_shapes")?;
+            let output_shape = shapes("output_shapes")?
+                .into_iter()
+                .next()
+                .ok_or_else(|| RuntimeError::BadMetadata("empty output_shapes".into()))?;
+            specs.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name,
+                    path,
+                    input_shapes,
+                    output_shape,
+                },
+            );
+        }
+        Ok(ArtifactRegistry { specs })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.specs
+            .get(name)
+            .ok_or_else(|| RuntimeError::ArtifactMissing(name.to_string()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+}
+
+/// Default artifacts directory: `$SIMPLEXMAP_ARTIFACTS` or `artifacts/`
+/// relative to the workspace root.
+pub fn default_dir() -> PathBuf {
+    std::env::var("SIMPLEXMAP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = std::env::temp_dir().join("smx-artifact-test-ok");
+        write_manifest(
+            &dir,
+            r#"{"artifacts":[{"name":"edm","file":"edm.hlo.txt",
+                "input_shapes":[[4,2,3],[4,2,3]],"output_shapes":[[4,2,2]]}]}"#,
+        );
+        std::fs::write(dir.join("edm.hlo.txt"), "HloModule fake").unwrap();
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert_eq!(reg.len(), 1);
+        let spec = reg.get("edm").unwrap();
+        assert_eq!(spec.input_shapes, vec![vec![4, 2, 3], vec![4, 2, 3]]);
+        assert_eq!(spec.output_shape, vec![4, 2, 2]);
+        assert_eq!(spec.input_len(0), 24);
+        assert_eq!(spec.output_len(), 16);
+        assert_eq!(reg.names(), vec!["edm"]);
+    }
+
+    #[test]
+    fn missing_manifest_is_artifact_missing() {
+        let dir = std::env::temp_dir().join("smx-artifact-test-none");
+        let _ = std::fs::remove_dir_all(&dir);
+        match ArtifactRegistry::load(&dir) {
+            Err(RuntimeError::ArtifactMissing(_)) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_hlo_file_is_detected() {
+        let dir = std::env::temp_dir().join("smx-artifact-test-nofile");
+        write_manifest(
+            &dir,
+            r#"{"artifacts":[{"name":"x","file":"x.hlo.txt",
+                "input_shapes":[[1]],"output_shapes":[[1]]}]}"#,
+        );
+        let _ = std::fs::remove_file(dir.join("x.hlo.txt"));
+        assert!(matches!(
+            ArtifactRegistry::load(&dir),
+            Err(RuntimeError::ArtifactMissing(_))
+        ));
+    }
+
+    #[test]
+    fn malformed_manifest_is_bad_metadata() {
+        let dir = std::env::temp_dir().join("smx-artifact-test-bad");
+        write_manifest(&dir, r#"{"artifacts":[{"name":"x"}]}"#);
+        assert!(matches!(
+            ArtifactRegistry::load(&dir),
+            Err(RuntimeError::BadMetadata(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_artifact_name_errors() {
+        let dir = std::env::temp_dir().join("smx-artifact-test-ok2");
+        write_manifest(&dir, r#"{"artifacts":[]}"#);
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert!(reg.is_empty());
+        assert!(matches!(
+            reg.get("nope"),
+            Err(RuntimeError::ArtifactMissing(_))
+        ));
+    }
+}

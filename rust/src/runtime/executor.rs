@@ -1,0 +1,173 @@
+//! The PJRT executor: one CPU client, one compiled executable per
+//! artifact, and a typed f32 tensor interface.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥
+//! 0.5 emits serialized protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md). Executables are compiled once at load
+//! and reused; `run_f32` serializes calls per executable with a mutex
+//! (the PJRT CPU client is not documented thread-safe for concurrent
+//! executions of one executable — the coordinator batches instead).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::log_info;
+
+use super::{ArtifactRegistry, ArtifactSpec, Result, RuntimeError};
+
+/// A row-major f32 tensor with shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> TensorF32 {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorF32 { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> TensorF32 {
+        let len = shape.iter().product();
+        TensorF32 {
+            shape,
+            data: vec![0.0; len],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+struct Compiled {
+    spec: ArtifactSpec,
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+}
+
+/// The process-wide executor.
+pub struct Executor {
+    client: xla::PjRtClient,
+    compiled: BTreeMap<String, Compiled>,
+}
+
+impl Executor {
+    /// Create a CPU PJRT client and compile every artifact in `dir`.
+    pub fn load_all(dir: &Path) -> Result<Executor> {
+        let registry = ArtifactRegistry::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        log_info!(
+            "runtime",
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        let mut compiled = BTreeMap::new();
+        for name in registry.names() {
+            let spec = registry.get(name)?.clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.path
+                    .to_str()
+                    .ok_or_else(|| RuntimeError::BadMetadata("non-utf8 path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            log_info!("runtime", "compiled artifact '{name}' from {:?}", spec.path);
+            compiled.insert(
+                name.to_string(),
+                Compiled {
+                    spec,
+                    exe: Mutex::new(exe),
+                },
+            );
+        }
+        Ok(Executor { client, compiled })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.compiled.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.compiled
+            .get(name)
+            .map(|c| &c.spec)
+            .ok_or_else(|| RuntimeError::ArtifactMissing(name.to_string()))
+    }
+
+    /// Execute artifact `name` on f32 inputs; returns the single tupled
+    /// output. Validates shapes against the manifest.
+    pub fn run_f32(&self, name: &str, inputs: &[TensorF32]) -> Result<TensorF32> {
+        let c = self
+            .compiled
+            .get(name)
+            .ok_or_else(|| RuntimeError::ArtifactMissing(name.to_string()))?;
+        if inputs.len() != c.spec.input_shapes.len() {
+            return Err(RuntimeError::BadMetadata(format!(
+                "artifact '{name}' wants {} inputs, got {}",
+                c.spec.input_shapes.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, t) in inputs.iter().enumerate() {
+            if t.shape != c.spec.input_shapes[i] {
+                return Err(RuntimeError::ShapeMismatch {
+                    expected: c.spec.input_shapes[i].clone(),
+                    got: t.shape.clone(),
+                });
+            }
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data).reshape(&dims)?;
+            literals.push(lit);
+        }
+        let result = {
+            let exe = c.exe.lock().unwrap();
+            exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?
+        };
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f32>()?;
+        if data.len() != c.spec.output_len() {
+            return Err(RuntimeError::ShapeMismatch {
+                expected: c.spec.output_shape.clone(),
+                got: vec![data.len()],
+            });
+        }
+        Ok(TensorF32::new(c.spec.output_shape.clone(), data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_invariants() {
+        let t = TensorF32::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        let z = TensorF32::zeros(vec![4, 4]);
+        assert_eq!(z.data.len(), 16);
+        assert!(!z.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        TensorF32::new(vec![2, 2], vec![0.0; 5]);
+    }
+
+    // Executor integration tests live in rust/tests/runtime_e2e.rs and
+    // require `make artifacts` to have run.
+}

@@ -1,0 +1,40 @@
+//! PJRT execution runtime — loads the AOT artifacts `make artifacts`
+//! produced (HLO *text*, see DESIGN.md and python/compile/aot.py) and
+//! runs them from the Rust request path. Python never runs here.
+//!
+//! Layering: [`artifact`] resolves artifact files and their metadata,
+//! [`executor`] owns the PJRT client and the compiled executables and
+//! exposes a typed, thread-safe `run_f32` entry point the coordinator's
+//! batcher calls.
+
+pub mod artifact;
+pub mod executor;
+pub mod service;
+
+pub use artifact::{ArtifactRegistry, ArtifactSpec};
+pub use executor::{Executor, TensorF32};
+pub use service::{ExecHandle, ExecutorService};
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum RuntimeError {
+    #[error("artifact not found: {0} (run `make artifacts`)")]
+    ArtifactMissing(String),
+    #[error("artifact metadata error: {0}")]
+    BadMetadata(String),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("shape mismatch: expected {expected:?}, got {got:?}")]
+    ShapeMismatch { expected: Vec<usize>, got: Vec<usize> },
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;

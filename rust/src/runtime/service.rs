@@ -1,0 +1,211 @@
+//! Executor service: the PJRT client confined to one dedicated thread.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (neither `Send` nor
+//! `Sync`), but the coordinator is multi-threaded. Standard remedy: an
+//! actor. [`ExecutorService::spawn`] starts one thread that owns the
+//! [`Executor`]; callers hold a cloneable [`ExecHandle`] (channels are
+//! Send+Sync) and submit execution requests that are answered over a
+//! per-request reply channel. Requests serialize naturally — which
+//! matches the single-device CPU client and makes batching (not
+//! concurrency) the throughput lever, as in the real system.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use super::{ArtifactSpec, Executor, Result, RuntimeError, TensorF32};
+use crate::log_info;
+
+enum Request {
+    Run {
+        artifact: String,
+        inputs: Vec<TensorF32>,
+        reply: mpsc::Sender<Result<TensorF32>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the executor pool. Requests are
+/// distributed round-robin over the pool's threads (each owns its own
+/// PJRT client + compiled executables), so up to `pool_size` batches
+/// execute concurrently — the §Perf lever that recovers concurrency
+/// without sharing the non-Sync client.
+#[derive(Clone)]
+pub struct ExecHandle {
+    txs: Arc<Vec<mpsc::Sender<Request>>>,
+    next: Arc<std::sync::atomic::AtomicUsize>,
+    specs: Arc<BTreeMap<String, ArtifactSpec>>,
+    platform: Arc<String>,
+}
+
+impl ExecHandle {
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.specs
+            .get(name)
+            .ok_or_else(|| RuntimeError::ArtifactMissing(name.to_string()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Number of independent executor threads.
+    pub fn pool_size(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Submit an execution without waiting; the result arrives on the
+    /// returned channel. Requests round-robin over the pool.
+    pub fn run_f32_async(
+        &self,
+        artifact: &str,
+        inputs: Vec<TensorF32>,
+    ) -> Result<mpsc::Receiver<Result<TensorF32>>> {
+        let (reply, rx) = mpsc::channel();
+        let i = self
+            .next
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+            % self.txs.len();
+        self.txs[i]
+            .send(Request::Run {
+                artifact: artifact.to_string(),
+                inputs,
+                reply,
+            })
+            .map_err(|_| RuntimeError::Xla("executor service stopped".into()))?;
+        Ok(rx)
+    }
+
+    /// Execute an artifact and wait for the result.
+    pub fn run_f32(&self, artifact: &str, inputs: Vec<TensorF32>) -> Result<TensorF32> {
+        self.run_f32_async(artifact, inputs)?
+            .recv()
+            .map_err(|_| RuntimeError::Xla("executor service dropped reply".into()))?
+    }
+}
+
+/// Owns the pool threads; dropping shuts them down.
+pub struct ExecutorService {
+    handle: ExecHandle,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    txs: Arc<Vec<mpsc::Sender<Request>>>,
+}
+
+fn spawn_worker(
+    dir: std::path::PathBuf,
+    idx: usize,
+) -> Result<(
+    mpsc::Sender<Request>,
+    std::thread::JoinHandle<()>,
+    BTreeMap<String, ArtifactSpec>,
+    String,
+)> {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let (init_tx, init_rx) =
+        mpsc::channel::<Result<(BTreeMap<String, ArtifactSpec>, String)>>();
+    let join = std::thread::Builder::new()
+        .name(format!("pjrt-executor-{idx}"))
+        .spawn(move || {
+            let exe = match Executor::load_all(&dir) {
+                Ok(exe) => {
+                    let specs: BTreeMap<String, ArtifactSpec> = exe
+                        .names()
+                        .iter()
+                        .map(|n| (n.to_string(), exe.spec(n).unwrap().clone()))
+                        .collect();
+                    let _ = init_tx.send(Ok((specs, exe.platform())));
+                    exe
+                }
+                Err(e) => {
+                    let _ = init_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Shutdown => break,
+                    Request::Run {
+                        artifact,
+                        inputs,
+                        reply,
+                    } => {
+                        let _ = reply.send(exe.run_f32(&artifact, &inputs));
+                    }
+                }
+            }
+            log_info!("runtime", "executor worker {idx} stopped");
+        })
+        .expect("spawn executor thread");
+    let (specs, platform) = init_rx
+        .recv()
+        .map_err(|_| RuntimeError::Xla("executor thread died during init".into()))??;
+    Ok((tx, join, specs, platform))
+}
+
+impl ExecutorService {
+    /// Load all artifacts on one executor thread.
+    pub fn spawn(dir: &Path) -> Result<ExecutorService> {
+        Self::spawn_pool(dir, 1)
+    }
+
+    /// Load all artifacts on `n` executor threads (each its own PJRT
+    /// client); batches round-robin over them.
+    pub fn spawn_pool(dir: &Path, n: usize) -> Result<ExecutorService> {
+        let n = n.max(1);
+        let mut txs = Vec::with_capacity(n);
+        let mut joins = Vec::with_capacity(n);
+        let mut meta = None;
+        for idx in 0..n {
+            let (tx, join, specs, platform) = spawn_worker(dir.to_path_buf(), idx)?;
+            txs.push(tx);
+            joins.push(join);
+            meta = Some((specs, platform));
+        }
+        let (specs, platform) = meta.unwrap();
+        let txs = Arc::new(txs);
+        let handle = ExecHandle {
+            txs: Arc::clone(&txs),
+            next: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+            specs: Arc::new(specs),
+            platform: Arc::new(platform),
+        };
+        Ok(ExecutorService {
+            handle,
+            joins,
+            txs,
+        })
+    }
+
+    pub fn handle(&self) -> ExecHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for ExecutorService {
+    fn drop(&mut self) {
+        for tx in self.txs.iter() {
+            let _ = tx.send(Request::Shutdown);
+        }
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Service tests requiring artifacts live in
+    // rust/tests/coordinator_e2e.rs; here we only check the error path.
+    use super::*;
+
+    #[test]
+    fn spawn_on_missing_dir_fails_cleanly() {
+        let err = ExecutorService::spawn(Path::new("/nonexistent-dir-xyz"));
+        assert!(err.is_err());
+    }
+}

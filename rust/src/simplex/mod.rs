@@ -1,0 +1,12 @@
+//! Discrete orthogonal simplices: exact volumes (eq. 2-4), point
+//! membership/enumeration (eq. 1), orthotope parallel spaces, and the
+//! recursive orthotope sets `S_n^m` of eq. 25-29.
+
+pub mod orthotope;
+pub mod point;
+pub mod recursive_set;
+pub mod volume;
+
+pub use orthotope::Orthotope;
+pub use point::{PointM, Simplex};
+pub use volume::{simplex_volume, simplex_volume_bruteforce};

@@ -1,0 +1,88 @@
+//! Orthotopes (the only geometry a GPU parallel space can take) and the
+//! parallel-space containers used by each map.
+
+/// An axis-aligned discrete orthotope `[0, d_0) × … × [0, d_{m-1})` —
+/// the shape of a CUDA grid (§I: parallel spaces are orthotopes in
+/// m = 1, 2, 3; higher m linearizes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Orthotope {
+    pub dims: [u64; 3],
+    pub m: u32,
+}
+
+impl Orthotope {
+    pub fn d1(x: u64) -> Orthotope {
+        Orthotope { dims: [x, 1, 1], m: 1 }
+    }
+    pub fn d2(x: u64, y: u64) -> Orthotope {
+        Orthotope { dims: [x, y, 1], m: 2 }
+    }
+    pub fn d3(x: u64, y: u64, z: u64) -> Orthotope {
+        Orthotope { dims: [x, y, z], m: 3 }
+    }
+
+    /// Total number of cells (blocks, when used as a grid).
+    pub fn volume(&self) -> u128 {
+        self.dims.iter().map(|&d| d as u128).product()
+    }
+
+    #[inline]
+    pub fn contains(&self, p: [u64; 3]) -> bool {
+        p[0] < self.dims[0] && p[1] < self.dims[1] && p[2] < self.dims[2]
+    }
+
+    /// Linearize a cell coordinate (x fastest).
+    #[inline]
+    pub fn linear_of(&self, p: [u64; 3]) -> u64 {
+        debug_assert!(self.contains(p));
+        p[0] + self.dims[0] * (p[1] + self.dims[1] * p[2])
+    }
+
+    /// Inverse of [`Orthotope::linear_of`].
+    #[inline]
+    pub fn of_linear(&self, idx: u64) -> [u64; 3] {
+        let x = idx % self.dims[0];
+        let rest = idx / self.dims[0];
+        let y = rest % self.dims[1];
+        let z = rest / self.dims[1];
+        [x, y, z]
+    }
+
+    /// Iterate all cells (z-major, x-minor).
+    pub fn iter(&self) -> impl Iterator<Item = [u64; 3]> + '_ {
+        let [dx, dy, dz] = self.dims;
+        (0..dz).flat_map(move |z| (0..dy).flat_map(move |y| (0..dx).map(move |x| [x, y, z])))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn volume_and_contains() {
+        let o = Orthotope::d3(4, 3, 2);
+        assert_eq!(o.volume(), 24);
+        assert!(o.contains([3, 2, 1]));
+        assert!(!o.contains([4, 0, 0]));
+        assert_eq!(Orthotope::d2(5, 7).volume(), 35);
+        assert_eq!(Orthotope::d1(9).volume(), 9);
+    }
+
+    #[test]
+    fn linearization_roundtrip() {
+        let o = Orthotope::d3(5, 4, 3);
+        for (i, p) in o.iter().enumerate() {
+            assert_eq!(o.linear_of(p), i as u64);
+            assert_eq!(o.of_linear(i as u64), p);
+        }
+    }
+
+    #[test]
+    fn iter_visits_volume_cells() {
+        let o = Orthotope::d3(3, 3, 3);
+        assert_eq!(o.iter().count() as u128, o.volume());
+        let set: std::collections::HashSet<_> = o.iter().collect();
+        assert_eq!(set.len() as u128, o.volume());
+    }
+}

@@ -1,0 +1,244 @@
+//! Discrete points, simplex membership and canonical enumeration.
+//!
+//! The data space is `Δ_n^m = { x ∈ Z_+^m : Σ x_i ≤ n-1 }` (paper
+//! eq. 1 with the volume convention of eq. 2). This module provides
+//! membership tests, iteration in lexicographic order, and the
+//! triangular/tetrahedral matrix views used by the workloads.
+
+use crate::simplex::volume::simplex_volume;
+
+/// Maximum dimensionality supported by the fixed-size point type.
+pub const MAX_M: usize = 8;
+
+/// A point in data space, up to MAX_M dimensions (stack-allocated: the
+/// hot path must not allocate).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct PointM {
+    pub coords: [u64; MAX_M],
+    pub m: u32,
+}
+
+impl PointM {
+    pub fn new(coords: &[u64]) -> PointM {
+        assert!(coords.len() <= MAX_M, "m ≤ {MAX_M}");
+        let mut c = [0u64; MAX_M];
+        c[..coords.len()].copy_from_slice(coords);
+        PointM {
+            coords: c,
+            m: coords.len() as u32,
+        }
+    }
+
+    pub fn as_slice(&self) -> &[u64] {
+        &self.coords[..self.m as usize]
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.as_slice().iter().sum()
+    }
+}
+
+/// The discrete orthogonal m-simplex `Δ_n^m`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Simplex {
+    pub n: u64,
+    pub m: u32,
+}
+
+impl Simplex {
+    pub fn new(n: u64, m: u32) -> Simplex {
+        assert!(m as usize <= MAX_M && m >= 1, "1 ≤ m ≤ {MAX_M}");
+        Simplex { n, m }
+    }
+
+    /// Membership per eq. (1): all coordinates ≥ 0 and Σ x_i ≤ n-1.
+    #[inline]
+    pub fn contains(&self, p: &PointM) -> bool {
+        p.m == self.m && self.n > 0 && p.sum() <= self.n - 1
+    }
+
+    #[inline]
+    pub fn contains_coords(&self, coords: &[u64]) -> bool {
+        coords.len() == self.m as usize && self.n > 0 && coords.iter().sum::<u64>() <= self.n - 1
+    }
+
+    /// Exact element count (eq. 2).
+    pub fn volume(&self) -> u128 {
+        simplex_volume(self.n, self.m)
+    }
+
+    /// Iterate all elements in lexicographic order.
+    pub fn iter(&self) -> SimplexIter {
+        SimplexIter {
+            simplex: *self,
+            next: if self.n == 0 {
+                None
+            } else {
+                Some(PointM::new(&vec![0; self.m as usize]))
+            },
+        }
+    }
+}
+
+/// Lexicographic iterator over simplex elements.
+pub struct SimplexIter {
+    simplex: Simplex,
+    next: Option<PointM>,
+}
+
+impl Iterator for SimplexIter {
+    type Item = PointM;
+
+    fn next(&mut self) -> Option<PointM> {
+        let current = self.next?;
+        // Advance: increment the last coordinate; on budget overflow,
+        // carry into earlier coordinates.
+        let m = self.simplex.m as usize;
+        let budget = self.simplex.n - 1;
+        let mut c = current;
+        let mut advanced = false;
+        for i in (0..m).rev() {
+            c.coords[i] += 1;
+            if c.sum() <= budget {
+                advanced = true;
+                break;
+            }
+            c.coords[i] = 0;
+        }
+        self.next = if advanced { Some(c) } else { None };
+        Some(current)
+    }
+}
+
+/// 2-simplex as a triangular matrix index pair: strictly-lower pairs
+/// `(row, col)` with `col < row < n` — the canonical domain of the EDM /
+/// collision / n-body workloads. Bijective with `Δ_{n-1}^2` via
+/// `(row, col) → (col, n-1-row)`.
+#[inline]
+pub fn lower_tri_contains(n: u64, row: u64, col: u64) -> bool {
+    col < row && row < n
+}
+
+/// Map a strictly-lower-triangular pair into simplex coordinates.
+#[inline]
+pub fn tri_pair_to_simplex(n: u64, row: u64, col: u64) -> (u64, u64) {
+    debug_assert!(lower_tri_contains(n, row, col));
+    (col, n - 1 - row)
+}
+
+/// Inverse of [`tri_pair_to_simplex`].
+#[inline]
+pub fn simplex_to_tri_pair(n: u64, x: u64, y: u64) -> (u64, u64) {
+    (n - 1 - y, x)
+}
+
+/// 3-simplex as unique triples `(i, j, k)` with `k < j < i < n` — the
+/// domain of triple-interaction workloads. Bijective with `Δ_{n-2}^3`.
+#[inline]
+pub fn lower_tet_contains(n: u64, i: u64, j: u64, k: u64) -> bool {
+    k < j && j < i && i < n
+}
+
+/// Map a strictly-decreasing triple into simplex coordinates
+/// `(x, y, z) ∈ Δ_{n-2}^3` (sum ≤ n-3).
+#[inline]
+pub fn tet_triple_to_simplex(n: u64, i: u64, j: u64, k: u64) -> (u64, u64, u64) {
+    debug_assert!(lower_tet_contains(n, i, j, k));
+    (k, j - k - 1, n - 1 - i)
+}
+
+/// Inverse of [`tet_triple_to_simplex`].
+#[inline]
+pub fn simplex_to_tet_triple(n: u64, x: u64, y: u64, z: u64) -> (u64, u64, u64) {
+    (n - 1 - z, x + y + 1, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iterator_count_matches_volume() {
+        for m in 1..5u32 {
+            for n in 0..10u64 {
+                let s = Simplex::new(n, m);
+                assert_eq!(s.iter().count() as u128, s.volume(), "n={n} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn iterator_yields_members_only_and_unique() {
+        let s = Simplex::new(7, 3);
+        let pts: Vec<_> = s.iter().collect();
+        for p in &pts {
+            assert!(s.contains(p), "{p:?}");
+        }
+        let set: std::collections::HashSet<_> = pts.iter().cloned().collect();
+        assert_eq!(set.len(), pts.len());
+    }
+
+    #[test]
+    fn membership_boundary() {
+        let s = Simplex::new(4, 2);
+        assert!(s.contains_coords(&[0, 0]));
+        assert!(s.contains_coords(&[3, 0]));
+        assert!(s.contains_coords(&[1, 2]));
+        assert!(!s.contains_coords(&[2, 2]));
+        assert!(!s.contains_coords(&[4, 0]));
+        assert!(!s.contains_coords(&[0])); // wrong arity
+    }
+
+    #[test]
+    fn empty_simplex_has_no_elements() {
+        let s = Simplex::new(0, 2);
+        assert_eq!(s.iter().count(), 0);
+        assert!(!s.contains_coords(&[0, 0]));
+    }
+
+    #[test]
+    fn tri_pair_bijection_with_simplex() {
+        let n = 16u64;
+        let mut seen = std::collections::HashSet::new();
+        for row in 0..n {
+            for col in 0..n {
+                if lower_tri_contains(n, row, col) {
+                    let (x, y) = tri_pair_to_simplex(n, row, col);
+                    // Lands inside Δ_{n-1}^2 (sum ≤ n-2).
+                    assert!(x + y <= n - 2, "({row},{col})→({x},{y})");
+                    assert!(seen.insert((x, y)), "duplicate image");
+                    // Round-trips.
+                    assert_eq!(simplex_to_tri_pair(n, x, y), (row, col));
+                }
+            }
+        }
+        assert_eq!(seen.len() as u128, simplex_volume(n - 1, 2));
+    }
+
+    #[test]
+    fn tet_triple_bijection_with_simplex() {
+        let n = 12u64;
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    if lower_tet_contains(n, i, j, k) {
+                        let (x, y, z) = tet_triple_to_simplex(n, i, j, k);
+                        assert!(x + y + z <= n - 3, "triple ({i},{j},{k})");
+                        assert!(seen.insert((x, y, z)), "duplicate image");
+                        assert_eq!(simplex_to_tet_triple(n, x, y, z), (i, j, k));
+                    }
+                }
+            }
+        }
+        assert_eq!(seen.len() as u128, simplex_volume(n - 2, 3));
+    }
+
+    #[test]
+    fn point_sum_and_slices() {
+        let p = PointM::new(&[1, 2, 3]);
+        assert_eq!(p.sum(), 6);
+        assert_eq!(p.as_slice(), &[1, 2, 3]);
+        assert_eq!(p.m, 3);
+    }
+}

@@ -1,0 +1,360 @@
+//! Recursive orthotope sets `S_n^m` — the paper's central construction.
+//!
+//! `V(S_n^m) = (rn)^m + β · V(S_{rn}^m)` (eq. 25) with reduction factor
+//! `r` and arity `β`. This module evaluates the recurrence exactly (for
+//! r = 1/2, in u128) and in f64 (for general real r), plus the closed
+//! form of eq. 27 and the waste ratios of eqs. 19, 24, 29.
+
+use crate::simplex::volume::{factorial, ilog2, is_pow2, simplex_volume};
+
+/// Exact volume of the recursive set for r = 1/2 and integer arity β,
+/// by direct evaluation of the recurrence (eq. 25). `n` must be a power
+/// of two; boundary `V(S_1) = 0` (a side-1 sub-orthotope at the deepest
+/// level is the paper's boundary `V(S_2^2) = 1 = (2/2)^m + β·0`).
+pub fn recursive_volume_half(n: u64, m: u32, beta: u32) -> u128 {
+    assert!(is_pow2(n), "recursive set requires n = 2^k, got {n}");
+    let mut total = 0u128;
+    let mut count = 1u128; // sub-orthotopes at this level
+    let mut size = n / 2; // side of each sub-orthotope
+    while size >= 1 {
+        let cell = (size as u128).checked_pow(m).expect("volume overflow");
+        total += count
+            .checked_mul(cell)
+            .expect("volume overflow (count*cell)");
+        count = count.checked_mul(beta as u128).expect("count overflow");
+        size /= 2;
+    }
+    total
+}
+
+/// Closed form of eq. 27 for r = 1/2:
+/// `V(S_n^m) = (n^m - β^{log2 n}) / (2^m - β)` (requires `2^m ≠ β`).
+pub fn recursive_volume_half_closed(n: u64, m: u32, beta: u32) -> u128 {
+    assert!(is_pow2(n));
+    let k = ilog2(n);
+    let n_m = (n as u128).pow(m);
+    let beta_k = (beta as u128).pow(k);
+    let denom_pos = 1u128 << m; // 2^m
+    assert!(
+        denom_pos != beta as u128,
+        "closed form undefined at β = 2^m"
+    );
+    if denom_pos > beta as u128 {
+        (n_m - beta_k) / (denom_pos - beta as u128)
+    } else {
+        (beta_k - n_m) / (beta as u128 - denom_pos)
+    }
+}
+
+/// General real-valued evaluation of eq. 25 for arbitrary `r ∈ (0,1)`,
+/// `β ≥ 1`: levels `i = 0 .. ⌈log_{1/r} n⌉ - 1`, sub-orthotope side
+/// `r^{i+1} n`. Matches the exact evaluation when r = 1/2.
+pub fn recursive_volume_general(n: f64, m: u32, r: f64, beta: f64) -> f64 {
+    assert!(n >= 1.0 && r > 0.0 && r < 1.0 && beta >= 1.0);
+    let levels = (n.ln() / (1.0 / r).ln()).ceil() as i64;
+    let mut total = 0.0;
+    let mut count = 1.0;
+    let mut size = r * n;
+    for _ in 0..levels {
+        total += count * size.powi(m as i32);
+        count *= beta;
+        size *= r;
+    }
+    total
+}
+
+/// Closed form eq. 27 in f64 for general (r, β):
+/// `V = (n^m - β^{log_{1/r} n}) / (1/r^m - β)`.
+pub fn recursive_volume_closed_general(n: f64, m: u32, r: f64, beta: f64) -> f64 {
+    let log_levels = n.ln() / (1.0 / r).ln();
+    let n_m = n.powi(m as i32);
+    let beta_l = beta.powf(log_levels);
+    let denom = (1.0 / r).powi(m as i32) - beta;
+    (n_m - beta_l) / denom
+}
+
+/// Asymptotic extra-volume ratio of eq. 29 for r = 1/2, β = 2:
+/// `lim α(S,Δ)_n^m = m!/(2^m - 2) - 1`.
+pub fn alpha_limit_half_beta2(m: u32) -> f64 {
+    assert!(m >= 2);
+    factorial(m) as f64 / ((1u128 << m) as f64 - 2.0) - 1.0
+}
+
+/// Finite extra-volume ratio `V(S_n^m)/V(Δ_{n-1}^m) - 1` for r=1/2.
+pub fn alpha_half(n: u64, m: u32, beta: u32) -> f64 {
+    let v_s = recursive_volume_half(n, m, beta) as f64;
+    let v_d = simplex_volume(n - 1, m) as f64;
+    v_s / v_d - 1.0
+}
+
+/// §III.D search point. The paper's prescription: fix
+/// `r = (m!)^{-1/m}` (so `1/r^m = m!`), leaving β free; the effective
+/// denominator of eq. 27 is then `1/r^m - β = m! - β`, which
+/// *approaches m! from below* as required for coverage — `V(S_n^m) ≈
+/// n^m/(m!-β)` eventually exceeds `V(Δ_{n-1}^m) = n^m/m! + Θ(n^{m-1})`.
+/// (Hitting m! exactly, as the text first suggests, can never cover:
+/// the simplex's positive n^{m-1} term always wins — this is the
+/// open-question tension §III.D describes, quantified in gensearch.)
+#[derive(Clone, Copy, Debug)]
+pub struct GeneralSetParams {
+    pub m: u32,
+    pub beta: f64,
+    pub r: f64,
+}
+
+impl GeneralSetParams {
+    pub fn for_paper(m: u32, beta: f64) -> GeneralSetParams {
+        assert!(
+            beta >= 2.0 && beta < factorial(m) as f64,
+            "need 2 ≤ β < m! for a positive denominator"
+        );
+        let r = (factorial(m) as f64).powf(-1.0 / m as f64);
+        GeneralSetParams { m, beta, r }
+    }
+
+    /// Asymptotic waste ratio `m!/(m!-β) - 1 = β/(m!-β)` — the price of
+    /// bringing n₀ closer to the origin by raising β.
+    pub fn waste_limit(&self) -> f64 {
+        let f = factorial(self.m) as f64;
+        self.beta / (f - self.beta)
+    }
+
+    /// `1/r^m - β` — equals `m! - β` for the paper parametrization.
+    pub fn denom(&self) -> f64 {
+        (1.0 / self.r).powi(self.m as i32) - self.beta
+    }
+
+    /// Volume of the set at size n (recurrence evaluation).
+    pub fn volume(&self, n: f64) -> f64 {
+        recursive_volume_general(n, self.m, self.r, self.beta)
+    }
+
+    /// Coverage condition of §III.D: `V(S_n^m) ≥ V(Δ_{n-1}^m)`.
+    /// (f64 volumes: the scans reach n ~ 2^40 where u128 overflows.)
+    pub fn covers(&self, n: u64) -> bool {
+        self.volume(n as f64) >= crate::simplex::volume::simplex_volume_f64(n - 1, self.m)
+    }
+
+    /// `n_0 = min { n : covers for all n' ∈ [n, horizon] }`, scanning a
+    /// doubling grid up to `horizon`. Returns None if never covered.
+    pub fn n0(&self, horizon: u64) -> Option<u64> {
+        let mut n0 = None;
+        let mut n = 2u64;
+        while n <= horizon {
+            if self.covers(n) {
+                if n0.is_none() {
+                    n0 = Some(n);
+                }
+            } else {
+                n0 = None; // must hold from n0 onwards
+            }
+            n = n.saturating_mul(2);
+        }
+        n0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simplex::volume::triangular;
+
+    #[test]
+    fn m2_recurrence_matches_eq11() {
+        // V(S_n^2) = n(n-1)/2 for r=1/2, β=2 (eq. 11).
+        for k in 1..16u32 {
+            let n = 1u64 << k;
+            let v = recursive_volume_half(n, 2, 2);
+            assert_eq!(v, (n as u128) * (n as u128 - 1) / 2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn m2_eq12_relation() {
+        // V(S_n^2) + n = V(S_{n+1}^2) = V(Δ_n^2) (eq. 12) — interpreted
+        // on the triangular numbers: V(S_n) = T(n-1).
+        for k in 1..16u32 {
+            let n = 1u64 << k;
+            assert_eq!(recursive_volume_half(n, 2, 2), triangular(n - 1));
+        }
+    }
+
+    #[test]
+    fn m3_beta2_matches_eq22() {
+        // V(S_n^3) = (n³ - n)/6 = V(Δ_{n-1}^3) (eq. 22).
+        for k in 1..12u32 {
+            let n = 1u64 << k;
+            let v = recursive_volume_half(n, 3, 2);
+            let n_ = n as u128;
+            assert_eq!(v, (n_ * n_ * n_ - n_) / 6, "n={n}");
+            assert_eq!(v, simplex_volume(n - 1, 3));
+        }
+    }
+
+    #[test]
+    fn m3_beta3_matches_eq18() {
+        // V(S_n^3) = (n³ - 3^{log2 n})/5 (eq. 18, with the /5 the paper
+        // dropped typographically).
+        for k in 1..12u32 {
+            let n = 1u64 << k;
+            let v = recursive_volume_half(n, 3, 3);
+            let expect = ((n as u128).pow(3) - 3u128.pow(k)) / 5;
+            assert_eq!(v, expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn m4_beta2_matches_eq28() {
+        // V(S_n^4) = (n⁴ - n)/14 (eq. 28).
+        for k in 1..10u32 {
+            let n = 1u64 << k;
+            let v = recursive_volume_half(n, 4, 2);
+            assert_eq!(v, ((n as u128).pow(4) - n as u128) / 14, "n={n}");
+        }
+    }
+
+    #[test]
+    fn m4_beta2_exceeds_simplex() {
+        // eq. 28's inequality: (n⁴-n)/14 > (n-1)n(n+1)(n+2)/24 for
+        // n ≥ 2 (equality at exactly n = 2, strict from n = 4 on).
+        for k in 1..10u32 {
+            let n = 1u64 << k;
+            let lhs = recursive_volume_half(n, 4, 2);
+            let n_ = n as u128;
+            let rhs = (n_ - 1) * n_ * (n_ + 1) * (n_ + 2) / 24;
+            if n == 2 {
+                assert_eq!(lhs, rhs, "n=2 is the equality point");
+            } else {
+                assert!(lhs > rhs, "n={n}: {lhs} vs {rhs}");
+            }
+        }
+    }
+
+    #[test]
+    fn closed_form_matches_recurrence() {
+        for m in 2..6u32 {
+            for beta in 2..5u32 {
+                if (1u128 << m) == beta as u128 {
+                    continue;
+                }
+                for k in 1..10u32 {
+                    let n = 1u64 << k;
+                    assert_eq!(
+                        recursive_volume_half(n, m, beta),
+                        recursive_volume_half_closed(n, m, beta),
+                        "n={n} m={m} β={beta}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn general_evaluation_matches_exact_at_half() {
+        for m in 2..5u32 {
+            for k in 2..12u32 {
+                let n = 1u64 << k;
+                let exact = recursive_volume_half(n, m, 2) as f64;
+                let general = recursive_volume_general(n as f64, m, 0.5, 2.0);
+                assert!(
+                    (exact - general).abs() / exact.max(1.0) < 1e-9,
+                    "n={n} m={m}: {exact} vs {general}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_limits_match_eq29() {
+        // m=5 → 3×, m=7 → 39× (paper text below eq. 29).
+        assert!((alpha_limit_half_beta2(5) - 3.0).abs() < 1e-12);
+        assert!((alpha_limit_half_beta2(7) - 39.0).abs() < 1e-12);
+        // m=2, m=3 → 0 (the exact-fit cases).
+        assert!(alpha_limit_half_beta2(2).abs() < 1e-12);
+        assert!(alpha_limit_half_beta2(3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_converges_to_limit() {
+        for m in 2..7u32 {
+            let lim = alpha_limit_half_beta2(m);
+            let a = alpha_half(1 << 14, m, 2);
+            assert!(
+                (a - lim).abs() < 0.01 * (1.0 + lim.abs()),
+                "m={m}: α={a} lim={lim}"
+            );
+        }
+    }
+
+    #[test]
+    fn arity3_alpha_approaches_one_fifth() {
+        // eq. 19: the Sierpinski-like arity-3 set has 1/5 extra volume
+        // relative to the tetrahedron.
+        let n = 1u64 << 14;
+        let v_s = recursive_volume_half(n, 3, 3) as f64;
+        let v_d = simplex_volume(n, 3) as f64;
+        let alpha = v_s / v_d - 1.0;
+        assert!((alpha - 0.2).abs() < 1e-3, "α={alpha}");
+    }
+
+    #[test]
+    fn paper_params_hit_denominator_below_mfact() {
+        for m in 4..9u32 {
+            for beta in [2.0, 4.0, 8.0] {
+                let p = GeneralSetParams::for_paper(m, beta);
+                let expect = factorial(m) as f64 - beta;
+                assert!(
+                    (p.denom() - expect).abs() < 1e-6 * factorial(m) as f64,
+                    "m={m} β={beta}: denom={} want {expect}",
+                    p.denom()
+                );
+                assert!(p.denom() < factorial(m) as f64, "below m!");
+            }
+        }
+    }
+
+    #[test]
+    fn n0_exists_and_decreases_with_beta() {
+        // §III.D: raising β brings n_0 closer to the origin.
+        let horizon = 1 << 40;
+        let m = 5;
+        let n0_b2 = GeneralSetParams::for_paper(m, 2.0)
+            .n0(horizon)
+            .expect("n0 exists for β=2");
+        let n0_b32 = GeneralSetParams::for_paper(m, 32.0)
+            .n0(horizon)
+            .expect("n0 exists for β=32");
+        assert!(n0_b32 < n0_b2, "n0(β=32)={n0_b32} vs n0(β=2)={n0_b2}");
+        // Measured against the python cross-check: n0(m=5, β=2) = 512.
+        assert_eq!(n0_b2, 512);
+        assert_eq!(n0_b32, 16);
+    }
+
+    #[test]
+    fn waste_limit_grows_with_beta() {
+        let m = 5;
+        let w2 = GeneralSetParams::for_paper(m, 2.0).waste_limit();
+        let w32 = GeneralSetParams::for_paper(m, 32.0).waste_limit();
+        assert!(w2 < w32);
+        // β/(m!-β): 2/118 and 32/88.
+        assert!((w2 - 2.0 / 118.0).abs() < 1e-12);
+        assert!((w32 - 32.0 / 88.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_mfact_denominator_never_covers_high_m() {
+        // The quantified §III.D tension: with 1/r^m - β = m! exactly,
+        // the simplex's Θ(n^{m-1}) term always wins for m ≥ 4.
+        let m = 5u32;
+        let beta = 2.0f64;
+        let r = (factorial(m) as f64 + beta).powf(-1.0 / m as f64);
+        let p = GeneralSetParams { m, beta, r };
+        assert!(p.n0(1 << 40).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "n = 2^k")]
+    fn non_pow2_rejected() {
+        recursive_volume_half(12, 2, 2);
+    }
+}

@@ -1,0 +1,270 @@
+//! Exact volumes of discrete orthogonal simplices and orthotopes.
+//!
+//! Implements the paper's eq. (2): `V(Δ_n^m) = C(n+m-1, m)` — the
+//! simplicial polytopic numbers — plus the stacked-sum identity eq. (3)
+//! and the bounding-box waste ratio eq. (4). All in u128 (checked) so
+//! the general-m analysis (§III.D) can run exactly up to very large n.
+
+/// Binomial coefficient C(n, k) in u128, checked against overflow.
+///
+/// Uses the multiplicative form with interleaved division (each prefix
+/// product of the multiplicative formula is itself a binomial, hence
+/// divisible), so intermediate values stay minimal.
+pub fn binomial(n: u128, k: u128) -> u128 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut acc: u128 = 1;
+    for i in 0..k {
+        acc = acc
+            .checked_mul(n - i)
+            .expect("binomial overflow: use smaller n/m");
+        acc /= i + 1;
+    }
+    acc
+}
+
+/// `V(Δ_n^m)` — number of discrete elements of the orthogonal m-simplex
+/// of linear size n (paper eq. 2): `C(n+m-1, m) = n(n+1)…(n+m-1)/m!`.
+///
+/// Conventions: `Δ_n^m = { x ∈ Z_+^m : Σ x_i ≤ n-1 }`; `V(Δ_0^m) = 0`,
+/// `V(Δ_n^0) = 1`.
+pub fn simplex_volume(n: u64, m: u32) -> u128 {
+    if m == 0 {
+        return 1;
+    }
+    if n == 0 {
+        return 0;
+    }
+    binomial(n as u128 + m as u128 - 1, m as u128)
+}
+
+/// f64 evaluation of `V(Δ_n^m)` for sizes where u128 would overflow
+/// (the §III.D n₀ scans go to n ~ 2^40 at m up to 10).
+pub fn simplex_volume_f64(n: u64, m: u32) -> f64 {
+    if m == 0 {
+        return 1.0;
+    }
+    if n == 0 {
+        return 0.0;
+    }
+    let mut acc = 1.0f64;
+    for i in 0..m as u64 {
+        acc *= (n + i) as f64 / (i + 1) as f64;
+    }
+    acc
+}
+
+/// `V(Π_n^m) = n^m` — bounding-box volume.
+pub fn orthotope_volume(n: u64, m: u32) -> u128 {
+    (n as u128)
+        .checked_pow(m)
+        .expect("orthotope volume overflow")
+}
+
+/// factorial in u128 (m ≤ 33 fits).
+pub fn factorial(m: u32) -> u128 {
+    (1..=m as u128).product()
+}
+
+/// Finite bounding-box waste ratio `α(Π,Δ)_n^m = V(Π)/V(Δ) - 1`
+/// (paper eq. 4 gives its limit `m! - 1`).
+pub fn bb_alpha(n: u64, m: u32) -> f64 {
+    let v_bb = orthotope_volume(n, m) as f64;
+    let v_s = simplex_volume(n, m) as f64;
+    v_bb / v_s - 1.0
+}
+
+/// The limit of eq. (4): `m! - 1`.
+pub fn bb_alpha_limit(m: u32) -> f64 {
+    factorial(m) as f64 - 1.0
+}
+
+/// Brute-force volume by enumeration — the oracle the closed forms are
+/// tested against. Counts `{ x ∈ Z_+^m : Σ x_i ≤ n-1 }`.
+pub fn simplex_volume_bruteforce(n: u64, m: u32) -> u128 {
+    fn rec(budget: i64, dims: u32) -> u128 {
+        if dims == 0 {
+            return 1;
+        }
+        let mut total = 0u128;
+        for x in 0..=budget {
+            total += rec(budget - x, dims - 1);
+        }
+        total
+    }
+    if m == 0 {
+        return 1;
+    }
+    if n == 0 {
+        return 0;
+    }
+    rec(n as i64 - 1, m)
+}
+
+/// Stacked-sum identity, paper eq. (3):
+/// `V(Δ_n^{m+1}) = Σ_{i=1..n} V(Δ_i^m)`.
+pub fn simplex_volume_stacked(n: u64, m_plus_1: u32) -> u128 {
+    assert!(m_plus_1 >= 1);
+    (1..=n).map(|i| simplex_volume(i, m_plus_1 - 1)).sum()
+}
+
+/// Triangular number T(n) = n(n+1)/2 (eq. 5).
+pub fn triangular(n: u64) -> u128 {
+    simplex_volume(n, 2)
+}
+
+/// Tetrahedral number n(n+1)(n+2)/6 (eq. 16).
+pub fn tetrahedral(n: u64) -> u128 {
+    simplex_volume(n, 3)
+}
+
+/// Integer floor of log2; panics on 0.
+/// This is the paper's eq. (14): `⌊log2 y⌋ = (bits-1) - clz(y)`,
+/// compiled to a single `lzcnt`/`bsr` on x86-64.
+#[inline]
+pub fn ilog2(x: u64) -> u32 {
+    debug_assert!(x > 0);
+    63 - x.leading_zeros()
+}
+
+/// `true` iff x is a power of two (and nonzero).
+#[inline]
+pub fn is_pow2(x: u64) -> bool {
+    x != 0 && x & (x - 1) == 0
+}
+
+/// Next power of two ≥ x (x ≥ 1).
+#[inline]
+pub fn next_pow2(x: u64) -> u64 {
+    assert!(x >= 1);
+    x.next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binomial_basics() {
+        assert_eq!(binomial(5, 0), 1);
+        assert_eq!(binomial(5, 5), 1);
+        assert_eq!(binomial(5, 2), 10);
+        assert_eq!(binomial(10, 3), 120);
+        assert_eq!(binomial(3, 7), 0);
+        // Symmetric.
+        assert_eq!(binomial(40, 11), binomial(40, 29));
+    }
+
+    #[test]
+    fn binomial_pascal_identity() {
+        for n in 1..40u128 {
+            for k in 1..n {
+                assert_eq!(binomial(n, k), binomial(n - 1, k - 1) + binomial(n - 1, k));
+            }
+        }
+    }
+
+    #[test]
+    fn triangular_matches_eq5() {
+        // V(Δ_n^2) = n(n+1)/2
+        for n in 0..200u64 {
+            assert_eq!(triangular(n), (n as u128 * (n as u128 + 1)) / 2);
+        }
+    }
+
+    #[test]
+    fn tetrahedral_matches_eq16() {
+        // V(Δ_n^3) = n(n+1)(n+2)/6
+        for n in 0..100u64 {
+            let n_ = n as u128;
+            assert_eq!(tetrahedral(n), n_ * (n_ + 1) * (n_ + 2) / 6);
+        }
+    }
+
+    #[test]
+    fn closed_form_matches_bruteforce() {
+        for m in 0..5u32 {
+            for n in 0..12u64 {
+                assert_eq!(
+                    simplex_volume(n, m),
+                    simplex_volume_bruteforce(n, m),
+                    "n={n} m={m}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stacked_sum_identity_eq3() {
+        for m1 in 1..6u32 {
+            for n in 0..30u64 {
+                assert_eq!(
+                    simplex_volume(n, m1),
+                    simplex_volume_stacked(n, m1),
+                    "n={n} m+1={m1}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bb_alpha_limit_is_m_factorial_minus_1() {
+        // eq. (4): lim α = m! - 1. Check convergence numerically.
+        for m in 1..7u32 {
+            let a = bb_alpha(4096, m);
+            let lim = bb_alpha_limit(m);
+            assert!(
+                (a - lim).abs() / lim.max(1.0) < 0.01,
+                "m={m}: α(4096)={a} vs limit {lim}"
+            );
+        }
+    }
+
+    #[test]
+    fn bb_alpha_m2_approaches_1() {
+        // Fig. 2: for m=2 the BB parallel space approaches 2× the volume.
+        let a = bb_alpha(1 << 20, 2);
+        assert!((a - 1.0).abs() < 1e-4, "α={a}");
+    }
+
+    #[test]
+    fn bb_alpha_m3_approaches_5() {
+        // Fig. 3 discussion: BB ≈ 600% of tetrahedron for large n.
+        let a = bb_alpha(1 << 20, 3);
+        assert!((a - 5.0).abs() < 1e-3, "α={a}");
+    }
+
+    #[test]
+    fn factorials() {
+        assert_eq!(factorial(0), 1);
+        assert_eq!(factorial(5), 120);
+        assert_eq!(factorial(7), 5040);
+    }
+
+    #[test]
+    fn pow2_helpers() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(64));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(48));
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(5), 8);
+        assert_eq!(next_pow2(64), 64);
+    }
+
+    #[test]
+    fn volume_edge_cases() {
+        assert_eq!(simplex_volume(0, 3), 0);
+        assert_eq!(simplex_volume(1, 3), 1);
+        assert_eq!(simplex_volume(5, 0), 1);
+        assert_eq!(orthotope_volume(10, 3), 1000);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn binomial_overflow_is_checked() {
+        binomial(1000, 500);
+    }
+}

@@ -1,0 +1,168 @@
+//! Micro/throughput benchmark harness (the vendor set lacks `criterion`).
+//!
+//! `cargo bench` benches in this repo use `harness = false` and call
+//! into this module: warmup, fixed-target-time measurement loops,
+//! outlier-robust summaries, and a uniform one-line-per-row report that
+//! EXPERIMENTS.md quotes directly. A `black_box` shim prevents the
+//! optimizer from deleting measured work.
+
+use std::hint;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{fmt_count, fmt_secs, Summary};
+
+/// Optimizer barrier.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    hint::black_box(x)
+}
+
+/// One benchmark measurement: samples of seconds-per-iteration.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Items processed per iteration (for throughput reporting).
+    pub items_per_iter: u64,
+    pub secs_per_iter: Summary,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> f64 {
+        self.items_per_iter as f64 / self.secs_per_iter.p50
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  p50 {:>10}  mean {:>10}  ±{:>9}  thrpt {:>12}/s",
+            self.name,
+            fmt_count(self.items_per_iter as f64),
+            fmt_secs(self.secs_per_iter.p50),
+            fmt_secs(self.secs_per_iter.mean),
+            fmt_secs(self.secs_per_iter.stddev),
+            fmt_count(self.throughput()),
+        )
+    }
+}
+
+/// Benchmark runner with a time budget per benchmark.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Respect a global knob so `make bench` can run quick or thorough.
+        let scale: f64 = std::env::var("SIMPLEXMAP_BENCH_SECS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1.0);
+        Bencher {
+            warmup: Duration::from_secs_f64(0.2 * scale),
+            measure: Duration::from_secs_f64(1.0 * scale),
+            min_samples: 10,
+            max_samples: 2000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    /// Measure `f` (one logical iteration over `items` items) repeatedly.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, items: u64, mut f: F) -> &BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // Measurement.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.measure || samples.len() < self.min_samples)
+            && samples.len() < self.max_samples
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            items_per_iter: items,
+            secs_per_iter: Summary::from_samples(&samples).expect("at least one sample"),
+        };
+        println!("{}", result.report_line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print a comparison table using the first result as baseline.
+    pub fn print_speedups(&self, title: &str) {
+        if self.results.is_empty() {
+            return;
+        }
+        println!("\n== {title}: relative throughput (baseline = {}) ==", self.results[0].name);
+        let base = self.results[0].throughput();
+        for r in &self.results {
+            println!("  {:<44} {:>8.3}x", r.name, r.throughput() / base);
+        }
+    }
+}
+
+/// Section header printer for bench binaries.
+pub fn section(title: &str) {
+    println!("\n==== {title} ====");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> Bencher {
+        Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_samples: 3,
+            max_samples: 50,
+            results: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn bench_produces_samples_and_throughput() {
+        let mut b = quick();
+        let r = b.bench("noop-loop", 1000, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(r.secs_per_iter.count >= 3);
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn results_accumulate_in_order() {
+        let mut b = quick();
+        b.bench("a", 1, || {});
+        b.bench("b", 1, || {});
+        let names: Vec<_> = b.results().iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn report_line_contains_name_and_throughput() {
+        let mut b = quick();
+        let r = b.bench("fmt-check", 100, || {});
+        let line = r.report_line();
+        assert!(line.contains("fmt-check"));
+        assert!(line.contains("/s"));
+    }
+}

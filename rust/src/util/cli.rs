@@ -1,0 +1,267 @@
+//! Tiny CLI argument parser (the vendor set lacks `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed getters and a usage printer. Each binary
+//! declares its options; unknown options are an error so typos fail
+//! loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// true if this option takes a value; false for boolean flags.
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    program: String,
+    about: &'static str,
+    specs: Vec<ArgSpec>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    Invalid(String, String),
+}
+
+impl Args {
+    /// Parse `argv` (without the program name) against `specs`.
+    pub fn parse(
+        program: &str,
+        about: &'static str,
+        specs: Vec<ArgSpec>,
+        argv: &[String],
+    ) -> Result<Args, CliError> {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| CliError::Unknown(key.clone()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    values.insert(key, val);
+                } else {
+                    flags.push(key);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args {
+            program: program.to_string(),
+            about,
+            specs,
+            values,
+            flags,
+            positional,
+        })
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(
+        about: &'static str,
+        specs: Vec<ArgSpec>,
+    ) -> Result<Args, CliError> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let program = std::env::args().next().unwrap_or_else(|| "prog".into());
+        Self::parse(&program, about, specs, &argv)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str()).or_else(|| {
+            self.specs
+                .iter()
+                .find(|s| s.name == name)
+                .and_then(|s| s.default)
+        })
+    }
+
+    pub fn get_string(&self, name: &str) -> Option<String> {
+        self.get(name).map(|s| s.to_string())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        self.parse_with(name, |s| s.parse::<usize>().ok())
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        self.parse_with(name, |s| s.parse::<u64>().ok())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        self.parse_with(name, |s| s.parse::<f64>().ok())
+    }
+
+    /// Parse "a..b" (inclusive) or a single value into a range.
+    pub fn get_range(&self, name: &str) -> Result<Option<(usize, usize)>, CliError> {
+        self.parse_with(name, |s| {
+            if let Some((a, b)) = s.split_once("..") {
+                Some((a.parse().ok()?, b.parse().ok()?))
+            } else {
+                let v = s.parse().ok()?;
+                Some((v, v))
+            }
+        })
+    }
+
+    fn parse_with<T>(
+        &self,
+        name: &str,
+        f: impl Fn(&str) -> Option<T>,
+    ) -> Result<Option<T>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => f(s)
+                .map(Some)
+                .ok_or_else(|| CliError::Invalid(name.to_string(), s.to_string())),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{}\n\nUsage: {} [options]\n\nOptions:\n", self.about, self.program);
+        for s in &self.specs {
+            let val = if s.takes_value { " <value>" } else { "" };
+            let def = s
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            out.push_str(&format!("  --{}{val}\n      {}{def}\n", s.name, s.help));
+        }
+        out
+    }
+}
+
+/// Convenience macro-free spec builder.
+pub fn opt(name: &'static str, help: &'static str, default: Option<&'static str>) -> ArgSpec {
+    ArgSpec {
+        name,
+        help,
+        takes_value: true,
+        default,
+    }
+}
+
+pub fn flag(name: &'static str, help: &'static str) -> ArgSpec {
+    ArgSpec {
+        name,
+        help,
+        takes_value: false,
+        default: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn specs() -> Vec<ArgSpec> {
+        vec![
+            opt("n", "problem size", Some("64")),
+            opt("map", "map name", None),
+            flag("verbose", "chatty output"),
+        ]
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = Args::parse("p", "t", specs(), &argv(&["--n", "128", "--map=lambda2"])).unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), Some(128));
+        assert_eq!(a.get("map"), Some("lambda2"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse("p", "t", specs(), &argv(&[])).unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), Some(64));
+        assert_eq!(a.get("map"), None);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = Args::parse("p", "t", specs(), &argv(&["run", "--verbose", "x"])).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["run".to_string(), "x".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(matches!(
+            Args::parse("p", "t", specs(), &argv(&["--bogus"])),
+            Err(CliError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(matches!(
+            Args::parse("p", "t", specs(), &argv(&["--map"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn invalid_number_errors() {
+        let a = Args::parse("p", "t", specs(), &argv(&["--n", "abc"])).unwrap();
+        assert!(matches!(a.get_usize("n"), Err(CliError::Invalid(_, _))));
+    }
+
+    #[test]
+    fn range_parsing() {
+        let s = vec![opt("m", "dims", None)];
+        let a = Args::parse("p", "t", s.clone(), &argv(&["--m", "2..10"])).unwrap();
+        assert_eq!(a.get_range("m").unwrap(), Some((2, 10)));
+        let a = Args::parse("p", "t", s, &argv(&["--m", "4"])).unwrap();
+        assert_eq!(a.get_range("m").unwrap(), Some((4, 4)));
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let a = Args::parse("p", "about text", specs(), &argv(&[])).unwrap();
+        let u = a.usage();
+        assert!(u.contains("--n"));
+        assert!(u.contains("default: 64"));
+    }
+}

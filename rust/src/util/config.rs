@@ -1,0 +1,221 @@
+//! Configuration file support (TOML subset; the vendor set has no
+//! `toml` crate). Covers what the launcher/server need: sections,
+//! `key = value` with strings, integers, floats and booleans, `#`
+//! comments. CLI flags override file values (documented precedence).
+//!
+//! ```text
+//! # simplexmap.toml
+//! [coordinator]
+//! workers = 8
+//! rho2 = 16
+//! rho3 = 8
+//!
+//! [server]
+//! addr = "127.0.0.1:7070"
+//!
+//! [runtime]
+//! artifacts = "artifacts"
+//! pool = 2
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: `section.key → value` (top-level keys use "" section).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<(String, String), Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or(ConfigError {
+                    line: i + 1,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or(ConfigError {
+                line: i + 1,
+                msg: "expected key = value".into(),
+            })?;
+            let key = k.trim().to_string();
+            if key.is_empty() {
+                return Err(ConfigError {
+                    line: i + 1,
+                    msg: "empty key".into(),
+                });
+            }
+            let value = parse_value(v.trim()).ok_or(ConfigError {
+                line: i + 1,
+                msg: format!("cannot parse value '{}'", v.trim()),
+            })?;
+            values.insert((section.clone(), key), value);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Config::parse(&text).map_err(|e| e.to_string())
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.values.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        self.get(section, key).and_then(Value::as_int)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key).and_then(Value::as_str)
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key).and_then(Value::as_bool)
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if let Some(rest) = s.strip_prefix('"') {
+        return rest.strip_suffix('"').map(|v| Value::Str(v.to_string()));
+    }
+    match s {
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a comment
+top = 1
+
+[coordinator]
+workers = 8          # trailing comment
+rho2 = 16
+enabled = true
+scale = 1.5
+
+[server]
+addr = "127.0.0.1:7070"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_int("", "top"), Some(1));
+        assert_eq!(c.get_int("coordinator", "workers"), Some(8));
+        assert_eq!(c.get_bool("coordinator", "enabled"), Some(true));
+        assert_eq!(
+            c.get("coordinator", "scale").unwrap().as_float(),
+            Some(1.5)
+        );
+        assert_eq!(c.get_str("server", "addr"), Some("127.0.0.1:7070"));
+        assert_eq!(c.len(), 6);
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert!(c.get("server", "port").is_none());
+        assert!(c.get("nope", "addr").is_none());
+        // Type mismatches are None, not panics.
+        assert_eq!(c.get_int("server", "addr"), None);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("no equals sign here").is_err());
+        assert!(Config::parse("= valuewithoutkey").is_err());
+        assert!(Config::parse("key = @garbage").is_err());
+    }
+
+    #[test]
+    fn int_vs_float_distinction() {
+        let c = Config::parse("a = 3\nb = 3.0").unwrap();
+        assert_eq!(c.get("", "a"), Some(&Value::Int(3)));
+        assert_eq!(c.get("", "b"), Some(&Value::Float(3.0)));
+        // as_float accepts both.
+        assert_eq!(c.get("", "a").unwrap().as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn empty_config_is_valid() {
+        let c = Config::parse("  \n# only comments\n").unwrap();
+        assert!(c.is_empty());
+    }
+}

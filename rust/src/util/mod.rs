@@ -1,0 +1,18 @@
+//! Dependency-free infrastructure: PRNG, stats, JSON, CLI parsing,
+//! logging, thread pool, property-test driver and bench harness.
+//!
+//! These exist because the build environment is fully offline and the
+//! vendored crate set does not include `rand`, `serde`, `clap`,
+//! `tokio`, `rayon`, `proptest` or `criterion`. Each module is a small,
+//! well-tested replacement scoped to exactly what this repo needs (see
+//! DESIGN.md §Substitutions).
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod logger;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,242 @@
+//! Work-queue thread pool (the vendor set lacks `tokio`/`rayon`).
+//!
+//! This is the execution substrate of the grid launch simulator and the
+//! coordinator: a fixed set of workers pulling boxed jobs from a shared
+//! queue, plus a `scope`-style parallel-for used by the launcher to
+//! process block ranges. Shutdown is explicit and idempotent; panics in
+//! jobs are contained per-job and surfaced as counted failures (the GPU
+//! analogy: a faulted block does not take down the device).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+struct Shared {
+    queue: Mutex<std::collections::VecDeque<Message>>,
+    available: Condvar,
+    in_flight: AtomicUsize,
+    panics: AtomicU64,
+    idle: Condvar,
+    idle_lock: Mutex<()>,
+}
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool of `size` workers (min 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(std::collections::VecDeque::new()),
+            available: Condvar::new(),
+            in_flight: AtomicUsize::new(0),
+            panics: AtomicU64::new(0),
+            idle: Condvar::new(),
+            idle_lock: Mutex::new(()),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("smx-worker-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            shared,
+            workers,
+            size,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a job. Panics inside the job are contained and counted.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Message::Run(Box::new(f)));
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.idle_lock.lock().unwrap();
+        while self.shared.in_flight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.idle.wait(guard).unwrap();
+        }
+    }
+
+    /// Number of jobs that panicked since pool creation.
+    pub fn panic_count(&self) -> u64 {
+        self.shared.panics.load(Ordering::SeqCst)
+    }
+
+    /// Parallel-for over `0..len` in `chunks` contiguous ranges. Blocks
+    /// until all chunks complete. `f` receives (chunk_index, range).
+    pub fn for_each_chunk<F>(&self, len: usize, chunks: usize, f: F)
+    where
+        F: Fn(usize, std::ops::Range<usize>) + Send + Sync + 'static,
+    {
+        if len == 0 {
+            return;
+        }
+        let chunks = chunks.clamp(1, len);
+        let f = Arc::new(f);
+        let (tx, rx) = mpsc::channel::<()>();
+        let chunk_size = len.div_ceil(chunks);
+        let mut issued = 0;
+        for c in 0..chunks {
+            let lo = c * chunk_size;
+            if lo >= len {
+                break;
+            }
+            let hi = ((c + 1) * chunk_size).min(len);
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            issued += 1;
+            self.execute(move || {
+                f(c, lo..hi);
+                let _ = tx.send(());
+            });
+        }
+        drop(tx);
+        for _ in 0..issued {
+            // A panicked chunk drops its sender; treat as completion
+            // (panic is already counted by the worker loop).
+            if rx.recv().is_err() {
+                break;
+            }
+        }
+        self.wait_idle();
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let msg = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(m) = q.pop_front() {
+                    break m;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match msg {
+            Message::Shutdown => break,
+            Message::Run(job) => {
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    shared.panics.fetch_add(1, Ordering::SeqCst);
+                }
+                if shared.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    let _g = shared.idle_lock.lock().unwrap();
+                    shared.idle.notify_all();
+                }
+            }
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for _ in 0..self.workers.len() {
+                q.push_back(Message::Shutdown);
+            }
+        }
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..1000 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn for_each_chunk_covers_range_exactly_once() {
+        let pool = ThreadPool::new(3);
+        let hits = Arc::new(Mutex::new(vec![0u8; 1017]));
+        let h = Arc::clone(&hits);
+        pool.for_each_chunk(1017, 8, move |_c, range| {
+            let mut v = h.lock().unwrap();
+            for i in range {
+                v[i] += 1;
+            }
+        });
+        let v = hits.lock().unwrap();
+        assert!(v.iter().all(|&x| x == 1), "every index hit exactly once");
+    }
+
+    #[test]
+    fn for_each_chunk_empty_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.for_each_chunk(0, 4, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn panics_are_contained_and_counted() {
+        let pool = ThreadPool::new(2);
+        for _ in 0..5 {
+            pool.execute(|| panic!("boom"));
+        }
+        pool.execute(|| {}); // pool still functional
+        pool.wait_idle();
+        assert_eq!(pool.panic_count(), 5);
+    }
+
+    #[test]
+    fn wait_idle_with_no_jobs_returns() {
+        let pool = ThreadPool::new(1);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn chunk_count_larger_than_len() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        pool.for_each_chunk(3, 100, move |_c, range| {
+            c.fetch_add(range.len() as u64, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 3);
+    }
+}

@@ -1,0 +1,174 @@
+//! Cellular automaton on a triangular spatial domain — the workload
+//! class of [4] the paper cites for simulations on triangular domains:
+//! Conway's Life (B3/S23) restricted to the inclusive lower triangle
+//! `{(row, col) : col ≤ row < n}`.
+//!
+//! The map-driven sweep exploits the bijectivity of the block maps:
+//! because every data block is produced exactly once per step, blocks
+//! write disjoint regions of the next-state buffer and the sweep needs
+//! no synchronization beyond the step barrier. (With BB, the same
+//! holds only after filler discard — same code path, more blocks.)
+
+use crate::util::prng::Xoshiro256;
+
+pub struct CellularWorkload {
+    pub n: u64,
+    pub rho: u32,
+    /// Inclusive lower triangle, row-major rows of length row+1,
+    /// flattened; cell (row, col) at index row(row+1)/2 + col.
+    pub state: Vec<u8>,
+}
+
+#[inline]
+fn tri_index(row: u64, col: u64) -> usize {
+    (row * (row + 1) / 2 + col) as usize
+}
+
+impl CellularWorkload {
+    pub fn generate(nb: u64, rho: u32, seed: u64) -> CellularWorkload {
+        let n = nb * rho as u64;
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xCE77);
+        let cells = (n * (n + 1) / 2) as usize;
+        let state = (0..cells).map(|_| (rng.gen_f32() < 0.35) as u8).collect();
+        CellularWorkload { n, rho, state }
+    }
+
+    #[inline]
+    pub fn get(&self, row: u64, col: u64) -> u8 {
+        if col <= row && row < self.n {
+            self.state[tri_index(row, col)]
+        } else {
+            0 // outside the triangle counts as dead
+        }
+    }
+
+    /// Life rule for one cell from its ≤8 in-triangle neighbours.
+    #[inline]
+    pub fn next_cell(&self, row: u64, col: u64) -> u8 {
+        let mut alive = 0u32;
+        for dr in -1i64..=1 {
+            for dc in -1i64..=1 {
+                if dr == 0 && dc == 0 {
+                    continue;
+                }
+                let (r, c) = (row as i64 + dr, col as i64 + dc);
+                if r >= 0 && c >= 0 {
+                    alive += self.get(r as u64, c as u64) as u32;
+                }
+            }
+        }
+        match (self.state[tri_index(row, col)], alive) {
+            (1, 2) | (1, 3) | (0, 3) => 1,
+            _ => 0,
+        }
+    }
+
+    /// Compute the next state of one data block (bc, br) into `out`
+    /// (ρ×ρ, row-major; cells outside the triangle left 0).
+    pub fn tile_next(&self, bc: u64, br: u64, out: &mut [f32]) {
+        let rho = self.rho as u64;
+        for i in 0..rho {
+            for j in 0..rho {
+                let (row, col) = (br * rho + i, bc * rho + j);
+                out[(i * rho + j) as usize] = if col <= row && row < self.n {
+                    self.next_cell(row, col) as f32
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+
+    /// Scatter a computed tile into a next-state buffer.
+    pub fn scatter_tile(&self, bc: u64, br: u64, tile: &[f32], next: &mut [u8]) {
+        let rho = self.rho as u64;
+        for i in 0..rho {
+            for j in 0..rho {
+                let (row, col) = (br * rho + i, bc * rho + j);
+                if col <= row && row < self.n {
+                    next[tri_index(row, col)] = (tile[(i * rho + j) as usize] > 0.5) as u8;
+                }
+            }
+        }
+    }
+
+    /// Sequential reference step.
+    pub fn step_reference(&self) -> Vec<u8> {
+        let mut next = vec![0u8; self.state.len()];
+        for row in 0..self.n {
+            for col in 0..=row {
+                next[tri_index(row, col)] = self.next_cell(row, col);
+            }
+        }
+        next
+    }
+
+    pub fn population(&self) -> u64 {
+        self.state.iter().map(|&c| c as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tri_indexing_is_dense() {
+        // Rows pack contiguously: index(row, row) + 1 == index(row+1, 0).
+        for row in 0..20u64 {
+            assert_eq!(tri_index(row, row) + 1, tri_index(row + 1, 0));
+        }
+    }
+
+    #[test]
+    fn block_sweep_step_matches_reference() {
+        let w = CellularWorkload::generate(4, 4, 1);
+        let nb = 4u64;
+        let mut next = vec![0u8; w.state.len()];
+        let mut tile = vec![0f32; 16];
+        for br in 0..nb {
+            for bc in 0..=br {
+                w.tile_next(bc, br, &mut tile);
+                w.scatter_tile(bc, br, &tile, &mut next);
+            }
+        }
+        assert_eq!(next, w.step_reference());
+    }
+
+    #[test]
+    fn outside_triangle_is_dead() {
+        let w = CellularWorkload::generate(2, 4, 2);
+        assert_eq!(w.get(0, 5), 0);
+        assert_eq!(w.get(w.n, 0), 0);
+    }
+
+    #[test]
+    fn blinker_oscillates_far_from_diagonal() {
+        // Classic Life sanity: a horizontal blinker deep inside the
+        // triangle flips to vertical.
+        let mut w = CellularWorkload::generate(4, 8, 3);
+        w.state.fill(0);
+        let (r, c) = (20u64, 4u64);
+        for dc in 0..3 {
+            w.state[tri_index(r, c + dc)] = 1;
+        }
+        let next = w.step_reference();
+        assert_eq!(next[tri_index(r - 1, c + 1)], 1);
+        assert_eq!(next[tri_index(r, c + 1)], 1);
+        assert_eq!(next[tri_index(r + 1, c + 1)], 1);
+        assert_eq!(next[tri_index(r, c)], 0);
+        assert_eq!(next[tri_index(r, c + 2)], 0);
+    }
+
+    #[test]
+    fn population_conserved_by_still_life() {
+        // A 2x2 block is a still life.
+        let mut w = CellularWorkload::generate(4, 8, 4);
+        w.state.fill(0);
+        for (r, c) in [(10, 3), (10, 4), (11, 3), (11, 4)] {
+            w.state[tri_index(r, c)] = 1;
+        }
+        let next = w.step_reference();
+        assert_eq!(next, w.state);
+    }
+}

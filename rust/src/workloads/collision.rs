@@ -1,0 +1,139 @@
+//! Broad-phase AABB collision culling — the 2-simplex workload of
+//! Avril et al. [1]: count (and report) overlapping axis-aligned
+//! bounding-box pairs among n boxes, testing only unique pairs.
+
+use crate::util::prng::Xoshiro256;
+use crate::workloads::strict_pair_mask;
+
+/// Floats per box: (xmin, ymin, zmin, xmax, ymax, zmax) — matches the
+/// AOT artifact layout (aot.py, kernels/collision.py).
+pub const BOX_DIM: usize = 6;
+
+pub struct CollisionWorkload {
+    /// Flat boxes, n × BOX_DIM.
+    pub boxes: Vec<f32>,
+    pub n: u64,
+    pub rho: u32,
+}
+
+impl CollisionWorkload {
+    /// Synthetic scene: boxes uniform in a cube whose side scales with
+    /// ∛n so the expected number of overlaps stays Θ(n) — the regime
+    /// broad-phase collision detection is designed for.
+    pub fn generate(nb: u64, rho: u32, seed: u64) -> CollisionWorkload {
+        let n = nb * rho as u64;
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xC011);
+        let world = (n as f32).cbrt() * 2.0;
+        let mut boxes = Vec::with_capacity(n as usize * BOX_DIM);
+        for _ in 0..n {
+            let cx = rng.gen_f32_range(0.0, world);
+            let cy = rng.gen_f32_range(0.0, world);
+            let cz = rng.gen_f32_range(0.0, world);
+            let hx = rng.gen_f32_range(0.2, 1.0);
+            let hy = rng.gen_f32_range(0.2, 1.0);
+            let hz = rng.gen_f32_range(0.2, 1.0);
+            boxes.extend_from_slice(&[cx - hx, cy - hy, cz - hz, cx + hx, cy + hy, cz + hz]);
+        }
+        CollisionWorkload { boxes, n, rho }
+    }
+
+    pub fn chunk(&self, c: u64) -> &[f32] {
+        let lo = c as usize * self.rho as usize * BOX_DIM;
+        &self.boxes[lo..lo + self.rho as usize * BOX_DIM]
+    }
+
+    #[inline]
+    fn bx(&self, idx: u64) -> &[f32] {
+        &self.boxes[idx as usize * BOX_DIM..(idx as usize + 1) * BOX_DIM]
+    }
+
+    #[inline]
+    pub fn overlaps(&self, a: u64, b: u64) -> bool {
+        let (pa, pb) = (self.bx(a), self.bx(b));
+        pa[0] <= pb[3]
+            && pb[0] <= pa[3]
+            && pa[1] <= pb[4]
+            && pb[1] <= pa[4]
+            && pa[2] <= pb[5]
+            && pb[2] <= pa[5]
+    }
+
+    /// Pure-Rust tile kernel: 0/1 overlap flags for block (bc, br),
+    /// mirroring kernels/collision.py.
+    pub fn tile_rust(&self, bc: u64, br: u64, out: &mut [f32]) {
+        let rho = self.rho as u64;
+        for i in 0..rho {
+            for j in 0..rho {
+                out[(i * rho + j) as usize] =
+                    self.overlaps(br * rho + i, bc * rho + j) as u32 as f32;
+            }
+        }
+    }
+
+    /// Count overlapping valid (strict) pairs in one tile.
+    pub fn aggregate_tile(&self, bc: u64, br: u64, tile: &[f32]) -> u64 {
+        strict_pair_mask(bc, br, self.rho)
+            .filter(|&(i, j)| tile[(i * self.rho + j) as usize] > 0.5)
+            .count() as u64
+    }
+
+    /// Brute-force overlap count over unique pairs.
+    pub fn reference(&self) -> u64 {
+        let mut count = 0;
+        for a in 0..self.n {
+            for b in 0..a {
+                if self.overlaps(a, b) {
+                    count += 1;
+                }
+            }
+        }
+        count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlap_is_symmetric_and_reflexive() {
+        let w = CollisionWorkload::generate(2, 8, 1);
+        for a in 0..w.n {
+            assert!(w.overlaps(a, a));
+            for b in 0..w.n {
+                assert_eq!(w.overlaps(a, b), w.overlaps(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn block_sweep_matches_reference() {
+        let w = CollisionWorkload::generate(4, 4, 9);
+        let mut total = 0u64;
+        let mut tile = vec![0f32; 16];
+        for br in 0..4u64 {
+            for bc in 0..=br {
+                w.tile_rust(bc, br, &mut tile);
+                total += w.aggregate_tile(bc, br, &tile);
+            }
+        }
+        assert_eq!(total, w.reference());
+    }
+
+    #[test]
+    fn scene_has_some_but_not_all_overlaps() {
+        let w = CollisionWorkload::generate(8, 8, 2);
+        let c = w.reference();
+        let pairs = w.n * (w.n - 1) / 2;
+        assert!(c > 0, "expected some collisions");
+        assert!(c < pairs / 2, "scene too dense: {c}/{pairs}");
+    }
+
+    #[test]
+    fn generation_deterministic() {
+        assert_eq!(
+            CollisionWorkload::generate(2, 8, 3).boxes,
+            CollisionWorkload::generate(2, 8, 3).boxes
+        );
+    }
+}

@@ -1,0 +1,180 @@
+//! Euclidean distance matrix (EDM) — the canonical 2-simplex workload
+//! ([13], [12], [14], [22]): all pairwise squared distances over n
+//! points, of which only the strictly-lower triangle is computed
+//! (symmetry), plus an ε-neighbour count (the DNA-distance use case).
+
+use crate::util::prng::Xoshiro256;
+use crate::workloads::strict_pair_mask;
+
+/// Point dimensionality — fixed by the AOT artifact (aot.py D=8).
+pub const EDM_DIM: usize = 8;
+
+pub struct EdmWorkload {
+    /// Flat row-major points, n × EDM_DIM.
+    pub points: Vec<f32>,
+    pub n: u64,
+    pub rho: u32,
+    /// Squared neighbour radius for the count output.
+    pub r2: f32,
+}
+
+impl EdmWorkload {
+    /// Deterministic synthetic point cloud: a mixture of Gaussian
+    /// clusters (mimics the clustered structure of real EDM datasets).
+    pub fn generate(nb: u64, rho: u32, seed: u64) -> EdmWorkload {
+        let n = nb * rho as u64;
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let clusters = 8;
+        let centers: Vec<[f32; EDM_DIM]> = (0..clusters)
+            .map(|_| std::array::from_fn(|_| rng.gen_f32_range(-4.0, 4.0)))
+            .collect();
+        let mut points = Vec::with_capacity(n as usize * EDM_DIM);
+        for _ in 0..n {
+            let c = &centers[rng.gen_range(0, clusters)];
+            for d in 0..EDM_DIM {
+                points.push(c[d] + rng.gen_normal() as f32 * 0.5);
+            }
+        }
+        EdmWorkload {
+            points,
+            n,
+            rho,
+            r2: 4.0,
+        }
+    }
+
+    /// Chunk `c`'s flat point slice (ρ × D floats).
+    pub fn chunk(&self, c: u64) -> &[f32] {
+        let lo = c as usize * self.rho as usize * EDM_DIM;
+        let hi = lo + self.rho as usize * EDM_DIM;
+        &self.points[lo..hi]
+    }
+
+    #[inline]
+    fn point(&self, idx: u64) -> &[f32] {
+        &self.points[idx as usize * EDM_DIM..(idx as usize + 1) * EDM_DIM]
+    }
+
+    #[inline]
+    fn d2(&self, a: u64, b: u64) -> f32 {
+        let (pa, pb) = (self.point(a), self.point(b));
+        let mut acc = 0.0;
+        for d in 0..EDM_DIM {
+            let diff = pa[d] - pb[d];
+            acc += diff * diff;
+        }
+        acc
+    }
+
+    /// Pure-Rust tile kernel: squared distances of block (bc, br) into
+    /// `out` (ρ×ρ, row-major [i][j] = d²(row_i, col_j)) — semantically
+    /// identical to python/compile/kernels/edm.py.
+    pub fn tile_rust(&self, bc: u64, br: u64, out: &mut [f32]) {
+        let rho = self.rho as u64;
+        for i in 0..rho {
+            for j in 0..rho {
+                out[(i * rho + j) as usize] = self.d2(br * rho + i, bc * rho + j);
+            }
+        }
+    }
+
+    /// Aggregate one tile under the strict-pair predicate: returns
+    /// (neighbour count, Σ d²) over valid pairs.
+    pub fn aggregate_tile(&self, bc: u64, br: u64, tile: &[f32]) -> (u64, f64) {
+        let rho = self.rho;
+        let mut count = 0u64;
+        let mut sum = 0f64;
+        for (i, j) in strict_pair_mask(bc, br, rho) {
+            let v = tile[(i * rho + j) as usize];
+            sum += v as f64;
+            if v <= self.r2 {
+                count += 1;
+            }
+        }
+        (count, sum)
+    }
+
+    /// Brute-force reference over all strict pairs.
+    pub fn reference(&self) -> (u64, f64) {
+        let mut count = 0u64;
+        let mut sum = 0f64;
+        for row in 0..self.n {
+            for col in 0..row {
+                let v = self.d2(row, col);
+                sum += v as f64;
+                if v <= self.r2 {
+                    count += 1;
+                }
+            }
+        }
+        (count, sum)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = EdmWorkload::generate(4, 8, 7);
+        let b = EdmWorkload::generate(4, 8, 7);
+        assert_eq!(a.points, b.points);
+        assert_eq!(a.n, 32);
+        let c = EdmWorkload::generate(4, 8, 8);
+        assert_ne!(a.points, c.points);
+    }
+
+    #[test]
+    fn tile_matches_pointwise_distances() {
+        let w = EdmWorkload::generate(4, 4, 1);
+        let mut tile = vec![0f32; 16];
+        w.tile_rust(1, 2, &mut tile);
+        for i in 0..4u64 {
+            for j in 0..4u64 {
+                let want = w.d2(2 * 4 + i, 4 + j);
+                assert_eq!(tile[(i * 4 + j) as usize], want);
+            }
+        }
+    }
+
+    #[test]
+    fn block_sweep_matches_reference() {
+        // Sum tile aggregates over the whole inclusive block triangle
+        // and compare with brute force — the core workload invariant.
+        let w = EdmWorkload::generate(4, 4, 3);
+        let nb = 4u64;
+        let mut count = 0u64;
+        let mut sum = 0f64;
+        let mut tile = vec![0f32; 16];
+        for br in 0..nb {
+            for bc in 0..=br {
+                w.tile_rust(bc, br, &mut tile);
+                let (c, s) = w.aggregate_tile(bc, br, &tile);
+                count += c;
+                sum += s;
+            }
+        }
+        let (rc, rs) = w.reference();
+        assert_eq!(count, rc);
+        assert!((sum - rs).abs() < 1e-3 * rs.abs().max(1.0), "{sum} vs {rs}");
+    }
+
+    #[test]
+    fn diagonal_tiles_exclude_self_pairs() {
+        let w = EdmWorkload::generate(2, 4, 5);
+        let mut tile = vec![0f32; 16];
+        w.tile_rust(0, 0, &mut tile);
+        let (count, _) = w.aggregate_tile(0, 0, &tile);
+        // At most 4·3/2 pairs can count within a diagonal tile.
+        assert!(count <= 6);
+    }
+
+    #[test]
+    fn chunk_slicing() {
+        let w = EdmWorkload::generate(4, 8, 2);
+        assert_eq!(w.chunk(0).len(), 8 * EDM_DIM);
+        assert_eq!(w.chunk(3).len(), 8 * EDM_DIM);
+        assert_eq!(w.chunk(1)[0], w.points[8 * EDM_DIM]);
+    }
+}

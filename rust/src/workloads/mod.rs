@@ -1,0 +1,76 @@
+//! The paper's motivating workloads (§I), each runnable under any
+//! registered [`ThreadMap`](crate::maps::ThreadMap) and under two tile
+//! backends (pure Rust, and the AOT Pallas kernels via PJRT).
+//!
+//! Every workload follows the same structure:
+//! - `generate(nb, rho, seed)` — deterministic synthetic data sized to
+//!   the block grid (the substituted "real" dataset; see DESIGN.md
+//!   §Substitutions),
+//! - a pure-Rust tile kernel semantically identical to the Pallas one,
+//! - `aggregate` logic that applies the *thread-level* domain predicate
+//!   (diagonal blocks are only partially inside the strict domain),
+//! - a brute-force `reference` used by the correctness tests.
+//!
+//! Thread-level domains: EDM/collision/n-body consume unique pairs
+//! `col < row < n`; triple consumes unique triples `k < j < i < n`;
+//! cellular/trimatvec consume the inclusive triangle `col ≤ row`.
+
+pub mod cellular;
+pub mod collision;
+pub mod edm;
+pub mod nbody;
+pub mod triple;
+pub mod trimat;
+
+pub use cellular::CellularWorkload;
+pub use collision::CollisionWorkload;
+pub use edm::EdmWorkload;
+pub use nbody::NBodyWorkload;
+pub use triple::TripleWorkload;
+pub use trimat::TriMatVecWorkload;
+
+/// Iterate the thread-level pairs of a 2-simplex data block `(bc, br)`
+/// that satisfy the strict predicate `col < row`, yielding local
+/// `(i, j)` tile coordinates (row-local i, col-local j).
+///
+/// Off-diagonal blocks (`bc < br`) pass everything; diagonal blocks
+/// pass the strictly-lower local triangle — this is the predication
+/// the paper charges to diagonal blocks (`≤ ρ²n ∈ o(n²)` threads).
+#[inline]
+pub fn strict_pair_mask(bc: u64, br: u64, rho: u32) -> impl Iterator<Item = (u32, u32)> {
+    let rho = rho;
+    (0..rho).flat_map(move |i| {
+        (0..rho).filter_map(move |j| {
+            let col = bc * rho as u64 + j as u64;
+            let row = br * rho as u64 + i as u64;
+            if col < row {
+                Some((i, j))
+            } else {
+                None
+            }
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_diagonal_blocks_pass_all_threads() {
+        let n: usize = strict_pair_mask(0, 1, 8).count();
+        assert_eq!(n, 64);
+    }
+
+    #[test]
+    fn diagonal_blocks_pass_strict_lower_triangle() {
+        let n: usize = strict_pair_mask(3, 3, 8).count();
+        assert_eq!(n, 28); // 8·7/2
+    }
+
+    #[test]
+    fn adjacent_blocks_fully_inside() {
+        // (bc=1, br=2) with rho=4: min row 8 > max col 7.
+        assert_eq!(strict_pair_mask(1, 2, 4).count(), 16);
+    }
+}

@@ -1,0 +1,165 @@
+//! Pairwise gravitational n-body — the 2-simplex workload of [23],
+//! [2], [7]: accumulate softened accelerations over unique pairs,
+//! applying each tile both ways (Newton's third law is what makes the
+//! triangular domain sufficient).
+
+use crate::util::prng::Xoshiro256;
+
+/// Floats per particle: (x, y, z, mass) — matches the AOT artifact.
+pub const PARTICLE_DIM: usize = 4;
+/// Plummer softening — must match kernels/nbody.py EPS.
+pub const EPS: f32 = 1e-3;
+
+pub struct NBodyWorkload {
+    /// Flat particles, n × PARTICLE_DIM.
+    pub particles: Vec<f32>,
+    pub n: u64,
+    pub rho: u32,
+}
+
+impl NBodyWorkload {
+    /// Plummer-ish sphere with log-uniform masses.
+    pub fn generate(nb: u64, rho: u32, seed: u64) -> NBodyWorkload {
+        let n = nb * rho as u64;
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xB0D7);
+        let mut particles = Vec::with_capacity(n as usize * PARTICLE_DIM);
+        for _ in 0..n {
+            particles.push(rng.gen_normal() as f32);
+            particles.push(rng.gen_normal() as f32);
+            particles.push(rng.gen_normal() as f32);
+            particles.push((2.0f32).powf(rng.gen_f32_range(-2.0, 2.0)));
+        }
+        NBodyWorkload { particles, n, rho }
+    }
+
+    pub fn chunk(&self, c: u64) -> &[f32] {
+        let lo = c as usize * self.rho as usize * PARTICLE_DIM;
+        &self.particles[lo..lo + self.rho as usize * PARTICLE_DIM]
+    }
+
+    #[inline]
+    fn p(&self, idx: u64) -> &[f32] {
+        &self.particles[idx as usize * PARTICLE_DIM..(idx as usize + 1) * PARTICLE_DIM]
+    }
+
+    /// Acceleration contribution of particle `b` on particle `a`.
+    #[inline]
+    pub fn pair_accel(&self, a: u64, b: u64) -> [f32; 3] {
+        let (pa, pb) = (self.p(a), self.p(b));
+        let dx = pb[0] - pa[0];
+        let dy = pb[1] - pa[1];
+        let dz = pb[2] - pa[2];
+        let r2 = dx * dx + dy * dy + dz * dz + EPS;
+        let w = pb[3] * r2.powf(-1.5);
+        [dx * w, dy * w, dz * w]
+    }
+
+    /// Pure-Rust tile kernel mirroring kernels/nbody.py: acceleration
+    /// on the ρ row-chunk particles from the ρ col-chunk particles,
+    /// into `out` (ρ × 3). Self-pairs contribute exactly zero (d = 0).
+    pub fn tile_rust(&self, bc: u64, br: u64, out: &mut [f32]) {
+        let rho = self.rho as u64;
+        out.fill(0.0);
+        for i in 0..rho {
+            let mut acc = [0f32; 3];
+            for j in 0..rho {
+                let a = self.pair_accel(br * rho + i, bc * rho + j);
+                acc[0] += a[0];
+                acc[1] += a[1];
+                acc[2] += a[2];
+            }
+            out[(i * 3) as usize] = acc[0];
+            out[(i * 3 + 1) as usize] = acc[1];
+            out[(i * 3 + 2) as usize] = acc[2];
+        }
+    }
+
+    /// Brute-force reference: full O(n²) accelerations.
+    pub fn reference(&self) -> Vec<f32> {
+        let mut acc = vec![0f32; self.n as usize * 3];
+        for a in 0..self.n {
+            for b in 0..self.n {
+                if a != b {
+                    let f = self.pair_accel(a, b);
+                    acc[a as usize * 3] += f[0];
+                    acc[a as usize * 3 + 1] += f[1];
+                    acc[a as usize * 3 + 2] += f[2];
+                }
+            }
+        }
+        acc
+    }
+
+    /// Checksum of an acceleration field: Σ ||a_i||₁ (order-insensitive
+    /// within f32 tolerance; used as the job's scalar output).
+    pub fn checksum(acc: &[f32]) -> f64 {
+        acc.iter().map(|x| x.abs() as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_accel_antisymmetric_for_equal_masses() {
+        let mut w = NBodyWorkload::generate(1, 4, 1);
+        // Force equal masses.
+        for i in 0..w.n as usize {
+            w.particles[i * 4 + 3] = 1.0;
+        }
+        let f_ab = w.pair_accel(0, 1);
+        let f_ba = w.pair_accel(1, 0);
+        for d in 0..3 {
+            assert!((f_ab[d] + f_ba[d]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn self_pair_contributes_zero() {
+        let w = NBodyWorkload::generate(1, 4, 2);
+        assert_eq!(w.pair_accel(2, 2), [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn triangular_sweep_with_symmetry_matches_reference() {
+        // Apply each off-diagonal tile both ways + diagonal tiles once:
+        // must equal the full O(n²) reference.
+        let w = NBodyWorkload::generate(4, 4, 3);
+        let nb = 4u64;
+        let rho = 4u64;
+        let mut acc = vec![0f32; w.n as usize * 3];
+        let mut tile = vec![0f32; (rho * 3) as usize];
+        for br in 0..nb {
+            for bc in 0..=br {
+                w.tile_rust(bc, br, &mut tile);
+                for i in 0..rho {
+                    for d in 0..3 {
+                        acc[((br * rho + i) * 3 + d) as usize] += tile[(i * 3 + d) as usize];
+                    }
+                }
+                if bc != br {
+                    w.tile_rust(br, bc, &mut tile);
+                    for i in 0..rho {
+                        for d in 0..3 {
+                            acc[((bc * rho + i) * 3 + d) as usize] +=
+                                tile[(i * 3 + d) as usize];
+                        }
+                    }
+                }
+            }
+        }
+        let want = w.reference();
+        for (a, b) in acc.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn checksum_positive_and_deterministic() {
+        let w = NBodyWorkload::generate(2, 8, 4);
+        let r = w.reference();
+        assert!(NBodyWorkload::checksum(&r) > 0.0);
+        assert_eq!(NBodyWorkload::checksum(&r), NBodyWorkload::checksum(&r));
+    }
+}

@@ -1,0 +1,115 @@
+//! Triangular matrix–vector product — stand-in for the
+//! triangular-matrix kernels the paper cites (inversion [21],
+//! LU/Cholesky [5]): `y = L·x` with L lower-triangular (diagonal
+//! included), swept block-by-block over the inclusive triangle.
+//!
+//! Unlike the pair workloads, every block contributes *partial sums*
+//! to its row range; aggregation is a reduction over blocks — the same
+//! access pattern as the update step of a blocked triangular solver.
+
+use crate::util::prng::Xoshiro256;
+
+pub struct TriMatVecWorkload {
+    pub n: u64,
+    pub rho: u32,
+    /// Dense row-major storage for simplicity of verification (the
+    /// packed variant is exercised by the cellular workload's tri
+    /// indexing); entries above the diagonal are zero.
+    pub l: Vec<f32>,
+    pub x: Vec<f32>,
+}
+
+impl TriMatVecWorkload {
+    pub fn generate(nb: u64, rho: u32, seed: u64) -> TriMatVecWorkload {
+        let n = nb * rho as u64;
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x7213);
+        let mut l = vec![0f32; (n * n) as usize];
+        for r in 0..n {
+            for c in 0..=r {
+                l[(r * n + c) as usize] = rng.gen_f32_range(-1.0, 1.0);
+            }
+        }
+        let x = (0..n).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+        TriMatVecWorkload { n, rho, l, x }
+    }
+
+    /// Partial products of block (bc, br) into `out` (ρ floats): the
+    /// contribution of columns [bcρ, bcρ+ρ) to rows [brρ, brρ+ρ),
+    /// honouring the triangular mask col ≤ row.
+    pub fn tile_rust(&self, bc: u64, br: u64, out: &mut [f32]) {
+        let rho = self.rho as u64;
+        for i in 0..rho {
+            let row = br * rho + i;
+            let mut acc = 0f32;
+            for j in 0..rho {
+                let col = bc * rho + j;
+                if col <= row {
+                    acc += self.l[(row * self.n + col) as usize] * self.x[col as usize];
+                }
+            }
+            out[i as usize] = acc;
+        }
+    }
+
+    /// Reference y = L·x.
+    pub fn reference(&self) -> Vec<f32> {
+        let mut y = vec![0f32; self.n as usize];
+        for r in 0..self.n {
+            let mut acc = 0f32;
+            for c in 0..=r {
+                acc += self.l[(r * self.n + c) as usize] * self.x[c as usize];
+            }
+            y[r as usize] = acc;
+        }
+        y
+    }
+
+    pub fn checksum(y: &[f32]) -> f64 {
+        y.iter().map(|v| v.abs() as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_sweep_matches_reference() {
+        let w = TriMatVecWorkload::generate(4, 4, 5);
+        let nb = 4u64;
+        let rho = 4u64;
+        let mut y = vec![0f32; w.n as usize];
+        let mut tile = vec![0f32; rho as usize];
+        for br in 0..nb {
+            for bc in 0..=br {
+                w.tile_rust(bc, br, &mut tile);
+                for i in 0..rho {
+                    y[(br * rho + i) as usize] += tile[i as usize];
+                }
+            }
+        }
+        let want = w.reference();
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn upper_triangle_is_zero() {
+        let w = TriMatVecWorkload::generate(2, 4, 6);
+        for r in 0..w.n {
+            for c in r + 1..w.n {
+                assert_eq!(w.l[(r * w.n + c) as usize], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_block_masks_partial_columns() {
+        let w = TriMatVecWorkload::generate(2, 4, 7);
+        let mut tile = vec![0f32; 4];
+        w.tile_rust(0, 0, &mut tile);
+        // Row 0 of the diagonal block only sees column 0.
+        assert!((tile[0] - w.l[0] * w.x[0]).abs() < 1e-6);
+    }
+}

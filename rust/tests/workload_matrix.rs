@@ -1,0 +1,118 @@
+//! Matrix test: every workload × every applicable map × several sizes
+//! must produce identical results (the fundamental guarantee the whole
+//! system rests on: the map changes *where blocks come from*, never
+//! *what is computed*). Pure-Rust backend — runs without artifacts.
+
+use simplexmap::coordinator::{Backend, Job, Scheduler, WorkloadKind};
+
+fn run(sched: &Scheduler, w: WorkloadKind, nb: u64, map: &str) -> Vec<(String, f64)> {
+    sched
+        .run(&Job {
+            workload: w,
+            nb,
+            map: map.into(),
+            backend: Backend::Rust,
+            seed: 99,
+        })
+        .unwrap_or_else(|e| panic!("{} nb={nb} map={map}: {e}", w.name()))
+        .outputs
+}
+
+fn assert_outputs_agree(
+    name: &str,
+    nb: u64,
+    base: &[(String, f64)],
+    got: &[(String, f64)],
+    map: &str,
+) {
+    assert_eq!(base.len(), got.len());
+    for ((k0, v0), (k1, v1)) in base.iter().zip(got) {
+        assert_eq!(k0, k1);
+        let tol = 1e-6 * v0.abs().max(1.0);
+        assert!(
+            (v0 - v1).abs() <= tol,
+            "{name} nb={nb} map={map}: {k0} {v1} vs baseline {v0}"
+        );
+    }
+}
+
+#[test]
+fn m2_workloads_agree_across_all_maps_and_sizes() {
+    let sched = Scheduler::new(4, None);
+    // Maps valid for general 2-simplex workloads at power-of-two sizes
+    // (avril covers strict pairs only → excluded; see maps::avril).
+    let maps = ["bb", "lambda2", "enum2", "rb", "ries", "above2", "below2"];
+    for w in [
+        WorkloadKind::Edm,
+        WorkloadKind::Collision,
+        WorkloadKind::NBody,
+        WorkloadKind::Cellular,
+        WorkloadKind::TriMatVec,
+    ] {
+        for nb in [4u64, 8, 16] {
+            let base = run(&sched, w, nb, maps[0]);
+            for map in &maps[1..] {
+                let got = run(&sched, w, nb, map);
+                assert_outputs_agree(w.name(), nb, &base, &got, map);
+            }
+        }
+    }
+}
+
+#[test]
+fn m2_workloads_agree_at_non_power_of_two_sizes() {
+    // The §III.A approaches must agree with BB at awkward sizes.
+    let sched = Scheduler::new(4, None);
+    for w in [WorkloadKind::Edm, WorkloadKind::Collision] {
+        for nb in [6u64, 10, 12] {
+            let base = run(&sched, w, nb, "bb");
+            for map in ["above2", "below2", "rb", "enum2"] {
+                let got = run(&sched, w, nb, map);
+                assert_outputs_agree(w.name(), nb, &base, &got, map);
+            }
+        }
+    }
+}
+
+#[test]
+fn m3_workloads_agree_across_maps_and_sizes() {
+    let sched = Scheduler::new(4, None);
+    let maps = ["bb", "lambda3", "enum3", "lambda3-rec"];
+    for nb in [4u64, 8] {
+        let base = run(&sched, WorkloadKind::Triple, nb, maps[0]);
+        for map in &maps[1..] {
+            let got = run(&sched, WorkloadKind::Triple, nb, map);
+            assert_outputs_agree("triple", nb, &base, &got, map);
+        }
+    }
+}
+
+#[test]
+fn results_depend_on_seed_not_map() {
+    let sched = Scheduler::new(2, None);
+    let a = run(&sched, WorkloadKind::Edm, 8, "lambda2");
+    let sched2 = Scheduler::new(2, None);
+    let b = sched2
+        .run(&Job {
+            workload: WorkloadKind::Edm,
+            nb: 8,
+            map: "lambda2".into(),
+            backend: Backend::Rust,
+            seed: 100, // different seed → different data
+        })
+        .unwrap()
+        .outputs;
+    assert_ne!(a[1].1, b[1].1, "different seeds must differ");
+}
+
+#[test]
+fn tiny_sizes_do_not_break() {
+    let sched = Scheduler::new(1, None);
+    // nb=2 is the smallest size every pow2 map accepts (λ3 needs 4).
+    for map in ["bb", "lambda2", "rb", "enum2", "below2"] {
+        let out = run(&sched, WorkloadKind::Edm, 2, map);
+        assert_eq!(out[0].0, "neighbour_count");
+    }
+    let out = run(&sched, WorkloadKind::Triple, 4, "lambda3");
+    assert_eq!(out[0].0, "at_energy");
+}
