@@ -1,0 +1,31 @@
+# simplexmap — build/test/bench driver.
+#
+# `make test` is the tier-1 gate. `make artifacts` produces the AOT
+# Pallas/HLO artifacts + JAX goldens the PJRT-backed tests consume;
+# note that *executing* those artifacts from Rust additionally needs
+# the real `xla` crate in place of runtime/xla_stub.rs (see DESIGN.md
+# §Substitutions) — without it the artifact-dependent suites skip.
+
+.PHONY: test build bench examples artifacts python-test clean
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo build --release && cargo test -q
+
+bench:
+	cd rust && cargo bench
+
+examples:
+	cd rust && cargo build --release --benches --examples
+
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+python-test:
+	python -m pytest python/tests -q
+
+clean:
+	cd rust && cargo clean
+	rm -rf artifacts

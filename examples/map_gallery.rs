@@ -1,0 +1,43 @@
+//! Map gallery — the executable version of the paper's Figures 4, 6
+//! and 7: render where every registered map sends each parallel block,
+//! labelled by recursion level, so the recursive decompositions are
+//! visible side by side.
+//!
+//! Run: `cargo run --release --example map_gallery -- [nb2] [nb3]`
+
+use simplexmap::analysis::viz::{render_m2, render_m3};
+use simplexmap::maps::{map2_by_name, map3_by_name, MAP2_NAMES, MAP3_NAMES};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let nb2: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+    let nb3: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    println!("== 2-simplex maps at nb = {nb2} (Fig. 4) ==");
+    for name in MAP2_NAMES {
+        let map = map2_by_name(name).expect("registered map");
+        if !map.supports(nb2) {
+            println!("\n-- {name}: does not support nb={nb2}, skipped --");
+            continue;
+        }
+        println!("\n-- {name} (passes = {}) --", map.passes(nb2));
+        let rendered = render_m2(map.as_ref(), nb2);
+        print!("{rendered}");
+        // Bijective maps must leave no hole; BB-style maps may.
+        if !rendered.contains('.') {
+            println!("   (exact cover: no holes)");
+        }
+    }
+
+    println!("\n== 3-simplex maps at nb = {nb3} (Figs. 6-7) ==");
+    for name in MAP3_NAMES {
+        let map = map3_by_name(name).expect("registered map");
+        if !map.supports(nb3) {
+            println!("\n-- {name}: does not support nb={nb3}, skipped --");
+            continue;
+        }
+        println!("\n-- {name} (passes = {}) --", map.passes(nb3));
+        print!("{}", render_m3(map.as_ref(), nb3));
+    }
+    println!("\nmap_gallery OK");
+}

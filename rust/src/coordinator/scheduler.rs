@@ -24,18 +24,46 @@ use crate::runtime::ExecHandle;
 use crate::workloads::*;
 use crate::{log_debug, log_info};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ScheduleError {
-    #[error("unknown map '{0}' for m={1}")]
     UnknownMap(String, u32),
-    #[error("map '{0}' does not support nb={1} (needs 2^k)")]
     Unsupported(String, u64),
-    #[error("backend pjrt requires artifacts: {0}")]
     NoExecutor(String),
-    #[error("runtime: {0}")]
-    Runtime(#[from] crate::runtime::RuntimeError),
-    #[error("workload '{0}' has no pjrt artifact; use --backend rust")]
+    Runtime(crate::runtime::RuntimeError),
     NoPjrtPath(&'static str),
+}
+
+impl std::fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScheduleError::UnknownMap(name, m) => write!(f, "unknown map '{name}' for m={m}"),
+            ScheduleError::Unsupported(name, nb) => {
+                write!(f, "map '{name}' does not support nb={nb} (needs 2^k)")
+            }
+            ScheduleError::NoExecutor(msg) => {
+                write!(f, "backend pjrt requires artifacts: {msg}")
+            }
+            ScheduleError::Runtime(e) => write!(f, "runtime: {e}"),
+            ScheduleError::NoPjrtPath(w) => {
+                write!(f, "workload '{w}' has no pjrt artifact; use --backend rust")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ScheduleError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ScheduleError::Runtime(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::runtime::RuntimeError> for ScheduleError {
+    fn from(e: crate::runtime::RuntimeError) -> Self {
+        ScheduleError::Runtime(e)
+    }
 }
 
 pub struct Scheduler {

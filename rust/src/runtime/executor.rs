@@ -15,6 +15,7 @@ use std::sync::Mutex;
 
 use crate::log_info;
 
+use super::xla_stub as xla;
 use super::{ArtifactRegistry, ArtifactSpec, Result, RuntimeError};
 
 /// A row-major f32 tensor with shape.

@@ -10,25 +10,52 @@
 pub mod artifact;
 pub mod executor;
 pub mod service;
+pub mod xla_stub;
 
 pub use artifact::{ArtifactRegistry, ArtifactSpec};
 pub use executor::{Executor, TensorF32};
 pub use service::{ExecHandle, ExecutorService};
 
-use thiserror::Error;
+use xla_stub as xla;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("artifact not found: {0} (run `make artifacts`)")]
     ArtifactMissing(String),
-    #[error("artifact metadata error: {0}")]
     BadMetadata(String),
-    #[error("xla error: {0}")]
     Xla(String),
-    #[error("shape mismatch: expected {expected:?}, got {got:?}")]
     ShapeMismatch { expected: Vec<usize>, got: Vec<usize> },
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::ArtifactMissing(name) => {
+                write!(f, "artifact not found: {name} (run `make artifacts`)")
+            }
+            RuntimeError::BadMetadata(msg) => write!(f, "artifact metadata error: {msg}"),
+            RuntimeError::Xla(msg) => write!(f, "xla error: {msg}"),
+            RuntimeError::ShapeMismatch { expected, got } => {
+                write!(f, "shape mismatch: expected {expected:?}, got {got:?}")
+            }
+            RuntimeError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        RuntimeError::Io(e)
+    }
 }
 
 impl From<xla::Error> for RuntimeError {

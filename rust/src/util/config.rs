@@ -63,12 +63,19 @@ pub struct Config {
     values: BTreeMap<(String, String), Value>,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("config parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct ConfigError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl Config {
     pub fn parse(text: &str) -> Result<Config, ConfigError> {

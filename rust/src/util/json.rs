@@ -184,12 +184,19 @@ fn write_string(s: &str, out: &mut String) {
 }
 
 /// Parse error with byte offset for diagnostics.
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ParseError {
     pub offset: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// Parse a complete JSON document. Trailing whitespace allowed; trailing
 /// garbage is an error.

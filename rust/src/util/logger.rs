@@ -5,9 +5,8 @@
 //! start — good enough for correlating coordinator events.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
-
-use once_cell::sync::Lazy;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
@@ -41,21 +40,29 @@ impl Level {
     }
 }
 
-static START: Lazy<Instant> = Lazy::new(Instant::now);
-static LEVEL: Lazy<AtomicU8> = Lazy::new(|| {
-    let lvl = std::env::var("SIMPLEXMAP_LOG")
-        .ok()
-        .and_then(|s| Level::parse(&s))
-        .unwrap_or(Level::Info);
-    AtomicU8::new(lvl as u8)
-});
+static START: OnceLock<Instant> = OnceLock::new();
+static LEVEL: OnceLock<AtomicU8> = OnceLock::new();
+
+fn start() -> &'static Instant {
+    START.get_or_init(Instant::now)
+}
+
+fn level_cell() -> &'static AtomicU8 {
+    LEVEL.get_or_init(|| {
+        let lvl = std::env::var("SIMPLEXMAP_LOG")
+            .ok()
+            .and_then(|s| Level::parse(&s))
+            .unwrap_or(Level::Info);
+        AtomicU8::new(lvl as u8)
+    })
+}
 
 pub fn set_level(level: Level) {
-    LEVEL.store(level as u8, Ordering::SeqCst);
+    level_cell().store(level as u8, Ordering::SeqCst);
 }
 
 pub fn level() -> Level {
-    match LEVEL.load(Ordering::SeqCst) {
+    match level_cell().load(Ordering::SeqCst) {
         0 => Level::Error,
         1 => Level::Warn,
         2 => Level::Info,
@@ -70,7 +77,7 @@ pub fn enabled(l: Level) -> bool {
 
 pub fn log(l: Level, target: &str, msg: &str) {
     if enabled(l) {
-        let t = START.elapsed().as_secs_f64();
+        let t = start().elapsed().as_secs_f64();
         eprintln!("[{t:9.3} {} {target}] {msg}", l.tag());
     }
 }

@@ -1,9 +1,10 @@
 //! Property-testing driver (the vendor set lacks `proptest`).
 //!
 //! `check` runs a property against `cases` random inputs drawn by a
-//! generator closure; on failure it performs simple halving shrinkage on
-//! any `Shrinkable` input and reports the minimal failing case plus the
-//! seed needed to reproduce. Deliberately small: enough for the
+//! generator closure; on failure it reports the failing input, its case
+//! index, and the seed needed to reproduce (`SIMPLEXMAP_PROPTEST_SEED`
+//! re-runs the exact stream; `SIMPLEXMAP_PROPTEST_CASES` scales the
+//! count up for soak runs). Deliberately small: enough for the
 //! invariants this repo cares about (map bijectivity, volume identities,
 //! scheduler conservation laws).
 
@@ -36,13 +37,20 @@ pub struct Config {
 
 impl Default for Config {
     fn default() -> Self {
-        // Seed overridable for reproduction of CI failures.
+        // Seed overridable for reproduction of CI failures; case count
+        // overridable for soak runs. The default of 1000 cases is the
+        // floor every P1-P6 map property must clear (deterministically:
+        // the seed fixes the whole input stream).
         let seed = std::env::var("SIMPLEXMAP_PROPTEST_SEED")
             .ok()
             .and_then(|s| s.parse().ok())
             .unwrap_or(0xC0FFEE);
+        let cases = std::env::var("SIMPLEXMAP_PROPTEST_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1000);
         Config {
-            cases: 256,
+            cases,
             seed,
             max_discard_ratio: 10,
         }

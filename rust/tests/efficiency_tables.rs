@@ -1,0 +1,108 @@
+//! `space_efficiency` against the paper's closed forms at
+//! nb ∈ {8, 64, 512, 4096} — the E1/E2/E6 numbers:
+//!
+//! - λ2 (and every zero-waste m=2 map): exactly 1.0 (eq. 12);
+//! - BB m=2: `T(nb)/nb² = (nb+1)/(2nb)` → 1/2 (eq. 4, m=2);
+//! - BB m=3: `Tet(nb)/nb³ = (nb+1)(nb+2)/(6nb²)` → 1/6 (eq. 4, m=3);
+//! - λ3: `Tet(nb)/((nb/2)²(3nb/4+3))` → 8/9 (eq. 24's 12.5% slack).
+
+use simplexmap::maps::{
+    alpha, map2_by_name, map3_by_name, space_efficiency, BoundingBox2, BoundingBox3,
+    Lambda2Map, Lambda3Map,
+};
+
+const SIZES: [u64; 4] = [8, 64, 512, 4096];
+
+#[test]
+fn lambda2_efficiency_is_exactly_one() {
+    for nb in SIZES {
+        let e = space_efficiency(&Lambda2Map, nb);
+        assert!((e - 1.0).abs() < 1e-12, "nb={nb}: eff={e}");
+        assert!(alpha(&Lambda2Map, nb).abs() < 1e-12, "nb={nb}");
+    }
+}
+
+#[test]
+fn all_zero_waste_m2_maps_hit_efficiency_one() {
+    for name in ["lambda2", "enum2", "rb", "ries", "below2"] {
+        let map = map2_by_name(name).unwrap();
+        for nb in SIZES {
+            assert!(map.supports(nb), "{name} must support pow2 {nb}");
+            let e = space_efficiency(map.as_ref(), nb);
+            assert!((e - 1.0).abs() < 1e-12, "{name} nb={nb}: eff={e}");
+        }
+    }
+}
+
+#[test]
+fn bb2_efficiency_matches_closed_form_and_tends_to_half() {
+    for nb in SIZES {
+        let e = space_efficiency(&BoundingBox2, nb);
+        let closed = (nb as f64 + 1.0) / (2.0 * nb as f64);
+        assert!((e - closed).abs() < 1e-12, "nb={nb}: {e} vs {closed}");
+    }
+    // Convergence: each size strictly closer to 1/2, and within 0.02%
+    // at nb = 4096.
+    let effs: Vec<f64> = SIZES
+        .iter()
+        .map(|&nb| space_efficiency(&BoundingBox2, nb))
+        .collect();
+    for w in effs.windows(2) {
+        assert!((w[1] - 0.5).abs() < (w[0] - 0.5).abs());
+    }
+    assert!((effs[3] - 0.5).abs() < 2e-4, "eff(4096)={}", effs[3]);
+}
+
+#[test]
+fn bb3_efficiency_matches_closed_form_and_tends_to_sixth() {
+    for nb in SIZES {
+        let e = space_efficiency(&BoundingBox3, nb);
+        let nbf = nb as f64;
+        let closed = (nbf + 1.0) * (nbf + 2.0) / (6.0 * nbf * nbf);
+        assert!((e - closed).abs() < 1e-12, "nb={nb}: {e} vs {closed}");
+    }
+    let effs: Vec<f64> = SIZES
+        .iter()
+        .map(|&nb| space_efficiency(&BoundingBox3, nb))
+        .collect();
+    for w in effs.windows(2) {
+        assert!((w[1] - 1.0 / 6.0).abs() < (w[0] - 1.0 / 6.0).abs());
+    }
+    assert!((effs[3] - 1.0 / 6.0).abs() < 2e-4, "eff(4096)={}", effs[3]);
+}
+
+#[test]
+fn lambda3_efficiency_approaches_eight_ninths() {
+    // eq. 24: container = 9/8 of the domain asymptotically.
+    for nb in SIZES {
+        let e = space_efficiency(&Lambda3Map, nb);
+        let nbf = nb as f64;
+        let closed =
+            (nbf * (nbf + 1.0) * (nbf + 2.0) / 6.0) / ((nbf / 2.0).powi(2) * (0.75 * nbf + 3.0));
+        assert!((e - closed).abs() < 1e-12, "nb={nb}: {e} vs {closed}");
+    }
+    let e = space_efficiency(&Lambda3Map, 4096);
+    assert!((e - 8.0 / 9.0).abs() < 2e-3, "eff(4096)={e}");
+}
+
+#[test]
+fn headline_improvement_factors() {
+    // The abstract's "2× and 6× more efficient than bounding-box".
+    let nb = 4096;
+    let m2 = space_efficiency(&Lambda2Map, nb) / space_efficiency(&BoundingBox2, nb);
+    assert!((m2 - 2.0).abs() < 1e-3, "m=2 improvement {m2}");
+    let m3 = space_efficiency(&Lambda3Map, nb) / space_efficiency(&BoundingBox3, nb);
+    // λ3 carries its 12.5% container slack: 6 × 8/9 = 16/3 ≈ 5.33.
+    assert!((m3 - 16.0 / 3.0).abs() < 2e-2, "m=3 improvement {m3}");
+}
+
+#[test]
+fn enum3_and_lambda3_rec_efficiency_bounded() {
+    for name in ["enum3", "lambda3-rec"] {
+        let map = map3_by_name(name).unwrap();
+        for nb in [8u64, 32] {
+            let e = space_efficiency(map.as_ref(), nb);
+            assert!(e > 0.5 && e <= 1.0, "{name} nb={nb}: eff={e}");
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! Exhaustive map-conformance layer — the guarantee the maps module
+//! header promises: for EVERY registered [`ThreadMap`] and EVERY
+//! supported problem size up to the sweep bound, the images of all
+//! valid parallel blocks (all passes) partition the block-level domain
+//! exactly — no hole, no duplicate, no escape — and the filler count
+//! equals the map's closed-form predicted waste.
+//!
+//! Sweep bounds: all `nb ≤ 64` for m=2 maps, all `nb ≤ 32` for m=3
+//! maps (each map restricted to the sizes its `supports()` accepts).
+//! This subsumes the per-map unit tests (which spot-check a few sizes)
+//! and is the validation methodology of the follow-up papers: full
+//! domain coverage before any benchmarking.
+//!
+//! Predicted waste (blocks discarded as `None` or grid padding):
+//! - zero-waste maps (λ2, ENUM2, RB, Ries, CoverFromBelow): exactly 0 —
+//!   `V(Π) = V(Δ)`, the paper's 2× headline for m=2;
+//! - BB m=2 (eq. 4 finite form): `nb² − nb(nb+1)/2 = nb(nb−1)/2`;
+//! - BB m=3: `nb³ − nb(nb+1)(nb+2)/6` (→ 5·V(Δ), the 6× headline);
+//! - λ3 (eq. 24 container): `(nb/2)²(3nb/4+3) − V(Δ³)` (→ 12.5% slack);
+//! - CoverFromAbove(λ2): `T(2^⌈log2 nb⌉) − T(nb)` (§III.A approach 1);
+//! - ENUM3: z-layer rounding, `< (nb/2)²` padding blocks;
+//! - Avril: strict pairs only (domain minus diagonal) + grid rounding;
+//! - λ3-rec: cube overflow past each sub-tetrahedron's diagonal face
+//!   (eq. 19's 1/5 extra volume, measured exactly).
+
+use std::collections::HashSet;
+
+use simplexmap::maps::{
+    domain_volume, in_domain, map2_by_name, map3_by_name, ThreadMap, MAP2_NAMES, MAP3_NAMES,
+};
+use simplexmap::simplex::volume::{next_pow2, simplex_volume, triangular};
+
+const NB_MAX_M2: u64 = 64;
+const NB_MAX_M3: u64 = 32;
+
+/// Full-sweep accounting of one map at one size.
+struct Coverage {
+    covered: u128,
+    dups: u64,
+    escaped: u64,
+    filler: u128,
+    parallel: u128,
+    images: HashSet<[u64; 3]>,
+}
+
+fn sweep(map: &dyn ThreadMap, nb: u64) -> Coverage {
+    let mut images = HashSet::new();
+    let mut dups = 0u64;
+    let mut escaped = 0u64;
+    let mut filler = 0u128;
+    let mut parallel = 0u128;
+    for pass in 0..map.passes(nb) {
+        for w in map.grid(nb, pass).iter() {
+            parallel += 1;
+            match map.map_block(nb, pass, w) {
+                None => filler += 1,
+                Some(d) => {
+                    if !in_domain(nb, map.m(), d) {
+                        escaped += 1;
+                    } else if !images.insert(d) {
+                        dups += 1;
+                    }
+                }
+            }
+        }
+    }
+    Coverage {
+        covered: images.len() as u128,
+        dups,
+        escaped,
+        filler,
+        parallel,
+        images,
+    }
+}
+
+/// Assert the map partitions the full block domain exactly at size nb.
+fn assert_partitions(name: &str, map: &dyn ThreadMap, nb: u64, c: &Coverage) {
+    let domain = domain_volume(nb, map.m());
+    assert_eq!(c.dups, 0, "{name} nb={nb}: duplicate images");
+    assert_eq!(c.escaped, 0, "{name} nb={nb}: images escape the domain");
+    assert_eq!(
+        c.covered, domain,
+        "{name} nb={nb}: covered {} of {domain} blocks",
+        c.covered
+    );
+    assert_eq!(
+        c.parallel,
+        map.parallel_volume(nb),
+        "{name} nb={nb}: grid iteration disagrees with parallel_volume"
+    );
+}
+
+/// The supported sizes of a map within [2, bound].
+fn supported_sizes(map: &dyn ThreadMap, bound: u64) -> Vec<u64> {
+    (1..=bound).filter(|&nb| map.supports(nb)).collect()
+}
+
+// ---- m = 2: every registered map, all nb ≤ 64 ------------------------
+
+#[test]
+fn every_m2_map_partitions_domain_at_every_supported_size() {
+    for name in MAP2_NAMES {
+        let map = map2_by_name(name).unwrap();
+        let sizes = supported_sizes(map.as_ref(), NB_MAX_M2);
+        assert!(!sizes.is_empty(), "{name}: supports no size ≤ {NB_MAX_M2}");
+        for nb in sizes {
+            let c = sweep(map.as_ref(), nb);
+            if *name == "avril" {
+                // Thread-space map over strict pairs: covers the domain
+                // minus the nb diagonal blocks, exactly once.
+                assert_eq!(c.dups, 0, "avril nb={nb}");
+                assert_eq!(c.escaped, 0, "avril nb={nb}");
+                assert_eq!(
+                    c.covered,
+                    domain_volume(nb, 2) - nb as u128,
+                    "avril nb={nb}: strict pairs"
+                );
+                for d in &c.images {
+                    assert!(d[0] < d[1], "avril nb={nb}: diagonal image {d:?}");
+                }
+            } else {
+                assert_partitions(name, map.as_ref(), nb, &c);
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_waste_m2_maps_have_exactly_zero_filler() {
+    // The paper's m=2 claim: parallel space equals the data domain.
+    for name in ["lambda2", "enum2", "rb", "ries", "below2"] {
+        let map = map2_by_name(name).unwrap();
+        for nb in supported_sizes(map.as_ref(), NB_MAX_M2) {
+            let c = sweep(map.as_ref(), nb);
+            assert_eq!(c.filler, 0, "{name} nb={nb}: zero-waste map has filler");
+            assert_eq!(
+                map.parallel_volume(nb),
+                domain_volume(nb, 2),
+                "{name} nb={nb}: V(Π) ≠ V(Δ)"
+            );
+        }
+    }
+}
+
+#[test]
+fn bb2_filler_matches_eq4_closed_form_at_every_size() {
+    // Exact predicted waste: nb(nb−1)/2 dead blocks — the finite form
+    // of eq. 4 whose limit is the 2× claim of the abstract.
+    let map = map2_by_name("bb").unwrap();
+    for nb in 1..=NB_MAX_M2 {
+        let c = sweep(map.as_ref(), nb);
+        let nb_ = nb as u128;
+        assert_eq!(c.filler, nb_ * (nb_ - 1) / 2, "bb2 nb={nb}");
+        assert_eq!(c.parallel, nb_ * nb_, "bb2 nb={nb}");
+        assert_eq!(c.covered, triangular(nb), "bb2 nb={nb}");
+    }
+}
+
+#[test]
+fn cover_from_above_filler_matches_rounding_waste() {
+    // §III.A approach 1: run λ2 at 2^⌈log2 nb⌉, discard the overshoot.
+    let map = map2_by_name("above2").unwrap();
+    for nb in 2..=NB_MAX_M2 {
+        let c = sweep(map.as_ref(), nb);
+        let up = next_pow2(nb);
+        assert_eq!(
+            c.filler,
+            triangular(up) - triangular(nb),
+            "above2 nb={nb} (rounds to {up})"
+        );
+    }
+}
+
+#[test]
+fn avril_filler_is_grid_rounding_only() {
+    let map = map2_by_name("avril").unwrap();
+    for nb in supported_sizes(map.as_ref(), NB_MAX_M2) {
+        let c = sweep(map.as_ref(), nb);
+        let strict = (nb as u128) * (nb as u128 - 1) / 2;
+        assert_eq!(c.filler, c.parallel - strict, "avril nb={nb}");
+    }
+}
+
+// ---- m = 3: every registered map, all nb ≤ 32 ------------------------
+
+#[test]
+fn every_m3_map_partitions_domain_at_every_supported_size() {
+    for name in MAP3_NAMES {
+        let map = map3_by_name(name).unwrap();
+        let sizes = supported_sizes(map.as_ref(), NB_MAX_M3);
+        assert!(!sizes.is_empty(), "{name}: supports no size ≤ {NB_MAX_M3}");
+        for nb in sizes {
+            let c = sweep(map.as_ref(), nb);
+            assert_partitions(name, map.as_ref(), nb, &c);
+        }
+    }
+}
+
+#[test]
+fn bb3_filler_matches_eq4_closed_form_at_every_size() {
+    // Exact predicted waste: nb³ − Tet(nb); the ratio to the domain
+    // approaches 3! − 1 = 5, i.e. the 6× headline.
+    let map = map3_by_name("bb").unwrap();
+    for nb in 1..=NB_MAX_M3 {
+        let c = sweep(map.as_ref(), nb);
+        let nb_ = nb as u128;
+        assert_eq!(
+            c.filler,
+            nb_ * nb_ * nb_ - simplex_volume(nb, 3),
+            "bb3 nb={nb}"
+        );
+    }
+    let c = sweep(map.as_ref(), NB_MAX_M3);
+    let ratio = c.filler as f64 / c.covered as f64;
+    assert!((ratio - 5.0).abs() < 0.3, "bb3 waste ratio {ratio} vs 5");
+}
+
+#[test]
+fn lambda3_filler_matches_eq24_container_slack() {
+    // The λ3 container (N/2)×(N/2)×(3N/4+3): slack → 2/16 = 12.5%.
+    let map = map3_by_name("lambda3").unwrap();
+    for nb in supported_sizes(map.as_ref(), NB_MAX_M3) {
+        let c = sweep(map.as_ref(), nb);
+        let nb_ = nb as u128;
+        let container = (nb_ / 2) * (nb_ / 2) * (3 * nb_ / 4 + 3);
+        assert_eq!(c.parallel, container, "lambda3 nb={nb}");
+        assert_eq!(c.filler, container - simplex_volume(nb, 3), "lambda3 nb={nb}");
+    }
+}
+
+#[test]
+fn lambda3_rec_cubes_are_disjoint_and_filler_is_cube_overflow() {
+    // §III.B: cubes overflow their sub-tetrahedron's diagonal face; the
+    // union of all passes still partitions the domain.
+    let map = map3_by_name("lambda3-rec").unwrap();
+    for nb in supported_sizes(map.as_ref(), NB_MAX_M3) {
+        let c = sweep(map.as_ref(), nb);
+        assert_eq!(
+            c.filler,
+            map.parallel_volume(nb) - domain_volume(nb, 3),
+            "lambda3-rec nb={nb}"
+        );
+    }
+}
+
+#[test]
+fn enum3_padding_is_less_than_one_layer() {
+    let map = map3_by_name("enum3").unwrap();
+    for nb in supported_sizes(map.as_ref(), NB_MAX_M3) {
+        let c = sweep(map.as_ref(), nb);
+        let base = (nb as u128 / 2) * (nb as u128 / 2);
+        assert!(
+            c.filler < base,
+            "enum3 nb={nb}: padding {} ≥ one base layer {base}",
+            c.filler
+        );
+    }
+}
+
+// ---- cross-map agreement --------------------------------------------
+
+#[test]
+fn all_m2_maps_produce_the_same_image_set() {
+    // Not just "a partition" — the SAME partition of the same domain,
+    // so any workload sees identical block sets under every map.
+    for nb in [2u64, 4, 8, 16, 32, 64] {
+        let reference: HashSet<[u64; 3]> = sweep(map2_by_name("bb").unwrap().as_ref(), nb).images;
+        for name in MAP2_NAMES {
+            let map = map2_by_name(name).unwrap();
+            if !map.supports(nb) || *name == "avril" {
+                continue;
+            }
+            let got = sweep(map.as_ref(), nb).images;
+            assert_eq!(got, reference, "{name} nb={nb}: image set differs from bb");
+        }
+    }
+}
+
+#[test]
+fn all_m3_maps_produce_the_same_image_set() {
+    for nb in [4u64, 8, 16, 32] {
+        let reference: HashSet<[u64; 3]> = sweep(map3_by_name("bb").unwrap().as_ref(), nb).images;
+        for name in MAP3_NAMES {
+            let map = map3_by_name(name).unwrap();
+            if !map.supports(nb) {
+                continue;
+            }
+            let got = sweep(map.as_ref(), nb).images;
+            assert_eq!(got, reference, "{name} nb={nb}: image set differs from bb");
+        }
+    }
+}

@@ -19,10 +19,13 @@ use simplexmap::maps::{
 };
 use simplexmap::util::proptest::{check, Config, Prop};
 
+/// Every property below runs ≥ 1000 deterministic random cases (the
+/// seeded default of [`Config`]); `cfg` only ever raises that floor.
 fn cfg(cases: usize) -> Config {
+    let base = Config::default();
     Config {
-        cases,
-        ..Default::default()
+        cases: cases.max(base.cases),
+        ..base
     }
 }
 
@@ -32,7 +35,7 @@ fn p1_random_blocks_land_in_domain_m2() {
         let map = map2_by_name(name).unwrap();
         check(
             &format!("p1-{name}"),
-            &cfg(512),
+            &cfg(1024),
             |rng| {
                 let k = rng.gen_range(1, 11) as u32;
                 let nb = 1u64 << k;
@@ -58,7 +61,7 @@ fn p1_random_blocks_land_in_domain_m3() {
         let map = map3_by_name(name).unwrap();
         check(
             &format!("p1-{name}"),
-            &cfg(512),
+            &cfg(1024),
             |rng| {
                 let k = rng.gen_range(2, 9) as u32;
                 let nb = 1u64 << k;
@@ -85,7 +88,7 @@ fn p1_random_blocks_land_in_domain_m3() {
 fn p2_parallel_volumes_match_closed_forms() {
     check(
         "p2-volumes",
-        &cfg(64),
+        &cfg(1000),
         |rng| 1u64 << rng.gen_range(1, 16) as u32,
         |&nb| {
             // λ2: exactly N(N+1)/2 (eq. 12); λ3: (N/2)²(3N/4+3).
@@ -144,7 +147,7 @@ fn p3_lambda2_injective_on_random_pairs() {
 fn p4_cover_from_above_exact_for_random_nb() {
     check(
         "p4-cover-from-above",
-        &cfg(12),
+        &cfg(1000),
         |rng| rng.gen_range(2, 70) as u64,
         |&nb| {
             let map = CoverFromAbove::new(Lambda2Map);
@@ -175,7 +178,7 @@ fn p5_scheduler_conserves_blocks() {
     let sched = Scheduler::new(2, None);
     check(
         "p5-conservation",
-        &cfg(8),
+        &cfg(1000),
         |rng| 1u64 << rng.gen_range(2, 6) as u32,
         |&nb| {
             let r = sched

@@ -1,0 +1,100 @@
+//! Round-trip conformance for the simplex ↔ ordered-index coordinate
+//! changes in `simplex::point` — the bridges every 3-simplex workload
+//! crosses between map output (simplex coordinates) and data indices
+//! (strictly ordered tuples).
+//!
+//! `tet_triple_to_simplex(n, ·)` maps `{(i,j,k) : k<j<i<n}` onto
+//! `Δ_{n-2}³ = {(x,y,z) : x+y+z ≤ n-3}` bijectively;
+//! `simplex_to_tet_triple` is its inverse. Here both directions are
+//! verified over the FULL block domain `B3(N) = {x+y+z ≤ N-1}` for
+//! every `N ≤ 24` (embedding `B3(N) = Δ_{(N+2)-2}³`, i.e. `n = N+2`),
+//! plus the m=2 pair bridge over every `N ≤ 64`.
+
+use std::collections::HashSet;
+
+use simplexmap::simplex::point::{
+    lower_tet_contains, lower_tri_contains, simplex_to_tet_triple, simplex_to_tri_pair,
+    tet_triple_to_simplex, tri_pair_to_simplex,
+};
+use simplexmap::simplex::volume::simplex_volume;
+
+#[test]
+fn tet_triple_roundtrip_over_full_b3_domain() {
+    for cap in 1..=24u64 {
+        // B3(cap) = {x+y+z ≤ cap-1} = Δ_cap³; ordered triples live in
+        // [0, n) with n = cap + 2.
+        let n = cap + 2;
+        let mut seen = HashSet::new();
+        for x in 0..cap {
+            for y in 0..cap {
+                for z in 0..cap {
+                    if x + y + z > cap - 1 {
+                        continue;
+                    }
+                    let (i, j, k) = simplex_to_tet_triple(n, x, y, z);
+                    // Lands in the strict triple domain…
+                    assert!(
+                        lower_tet_contains(n, i, j, k),
+                        "N={cap}: ({x},{y},{z}) → ({i},{j},{k}) not strict"
+                    );
+                    // …injectively…
+                    assert!(seen.insert((i, j, k)), "N={cap}: duplicate ({i},{j},{k})");
+                    // …and returns home exactly.
+                    assert_eq!(
+                        tet_triple_to_simplex(n, i, j, k),
+                        (x, y, z),
+                        "N={cap}: round trip broke at ({x},{y},{z})"
+                    );
+                }
+            }
+        }
+        // Surjective: the image is the whole strict-triple set.
+        assert_eq!(
+            seen.len() as u128,
+            simplex_volume(cap, 3),
+            "N={cap}: image size"
+        );
+        let all_strict = (0..n)
+            .flat_map(|i| (0..i).flat_map(move |j| (0..j).map(move |k| (i, j, k))))
+            .count();
+        assert_eq!(seen.len(), all_strict, "N={cap}: not onto");
+    }
+}
+
+#[test]
+fn tet_triple_inverse_direction_over_all_strict_triples() {
+    for n in 3..=26u64 {
+        let mut seen = HashSet::new();
+        for i in 0..n {
+            for j in 0..i {
+                for k in 0..j {
+                    let (x, y, z) = tet_triple_to_simplex(n, i, j, k);
+                    assert!(x + y + z <= n - 3, "n={n}: ({i},{j},{k}) → ({x},{y},{z})");
+                    assert!(seen.insert((x, y, z)), "n={n}: duplicate ({x},{y},{z})");
+                    assert_eq!(simplex_to_tet_triple(n, x, y, z), (i, j, k), "n={n}");
+                }
+            }
+        }
+        assert_eq!(seen.len() as u128, simplex_volume(n - 2, 3), "n={n}");
+    }
+}
+
+#[test]
+fn tri_pair_roundtrip_over_full_b2_domain() {
+    for cap in 1..=64u64 {
+        let n = cap + 1; // B2(cap) = Δ_cap² ↔ strict pairs below n = cap+1
+        let mut seen = HashSet::new();
+        for x in 0..cap {
+            for y in 0..cap {
+                if x + y > cap - 1 {
+                    continue;
+                }
+                let (row, col) = simplex_to_tri_pair(n, x, y);
+                assert!(lower_tri_contains(n, row, col), "N={cap}: ({x},{y})");
+                assert!(seen.insert((row, col)), "N={cap}: duplicate");
+                assert_eq!(tri_pair_to_simplex(n, row, col), (x, y), "N={cap}");
+            }
+        }
+        assert_eq!(seen.len() as u128, simplex_volume(cap, 2), "N={cap}");
+    }
+}

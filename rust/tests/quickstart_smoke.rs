@@ -1,0 +1,51 @@
+//! Smoke test mirroring `examples/quickstart.rs` step by step, so the
+//! documented entry path is exercised by `cargo test` (the example
+//! binary itself only compiles under `cargo build --examples`). The
+//! λ2 doctest in `lib.rs` covers the API one-liner; this covers the
+//! full quickstart flow: geometry → single map_block → end-to-end job.
+
+use simplexmap::coordinator::{Backend, Job, Scheduler, WorkloadKind};
+use simplexmap::maps::{alpha, space_efficiency, BoundingBox2, Lambda2Map, ThreadMap};
+
+#[test]
+fn quickstart_flow_runs_end_to_end() {
+    // 1. Parallel-space geometry (quickstart step 1).
+    let nb = 256u64;
+    assert_eq!(BoundingBox2.parallel_volume(nb), (nb as u128) * (nb as u128));
+    assert_eq!(
+        Lambda2Map.parallel_volume(nb),
+        (nb as u128) * (nb as u128 + 1) / 2
+    );
+    assert!((space_efficiency(&Lambda2Map, nb) - 1.0).abs() < 1e-12);
+    assert!((alpha(&BoundingBox2, nb) - 1.0).abs() < 0.01);
+
+    // 2. One O(1) map evaluation (quickstart step 2).
+    let w = [5u64, 9, 0];
+    let d = Lambda2Map.map_block(nb, 0, w).unwrap();
+    assert!(d[0] <= d[1] && d[1] < nb, "λ2({w:?}) = {d:?}");
+
+    // 3. End-to-end: EDM under both maps, identical answers
+    //    (quickstart step 3, at the example's size).
+    let sched = Scheduler::new(4, None);
+    let mut results = Vec::new();
+    for map in ["bb", "lambda2"] {
+        let job = Job {
+            workload: WorkloadKind::Edm,
+            nb: 64,
+            map: map.into(),
+            backend: Backend::Rust,
+            seed: 42,
+        };
+        let r = sched.run(&job).expect("quickstart job");
+        results.push(r);
+    }
+    let (bb, l2) = (&results[0], &results[1]);
+    assert_eq!(bb.blocks_mapped, l2.blocks_mapped, "same useful blocks");
+    assert!(bb.blocks_launched > l2.blocks_launched, "λ2 launches fewer");
+    assert_eq!(
+        bb.outputs[0].1, l2.outputs[0].1,
+        "same neighbour count under both maps"
+    );
+    let (s_bb, s_l2) = (bb.outputs[1].1, l2.outputs[1].1);
+    assert!((s_bb - s_l2).abs() < 1e-3 * s_bb.abs().max(1.0));
+}
