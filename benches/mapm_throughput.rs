@@ -1,0 +1,58 @@
+//! E13 — block-map arithmetic throughput for the general-m subsystem:
+//! λ_m's combinatorial unranking (binary-searched binomials, §III.D
+//! made executable) vs BB_m's predicate-discard over the full nb^m
+//! orthotope. The interesting number is useful-blocks/s: BB_m touches
+//! ≈ m! parallel blocks per useful one, so λ_m wins end to end even
+//! though its per-block arithmetic is heavier.
+
+use simplexmap::maps::{BoundingBoxM, LambdaMMap, MThreadMap};
+use simplexmap::util::benchkit::{black_box, section, Bencher};
+
+fn bench_map(b: &mut Bencher, label: &str, map: &dyn MThreadMap, nb: u64) {
+    let useful = simplexmap::maps::domain_volume(nb, map.m()) as u64;
+    b.bench(label, useful, || {
+        let mut acc = 0u64;
+        for pass in 0..map.passes(nb) {
+            for w in map.grid(nb, pass).iter() {
+                if let Some(d) = map.map_block(nb, pass, black_box(&w)) {
+                    acc = acc.wrapping_add(d.sum());
+                }
+            }
+        }
+        black_box(acc);
+    });
+}
+
+fn main() {
+    let nb: u64 = std::env::var("SIMPLEXMAP_BENCH_NB")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(28);
+    section(&format!(
+        "E13: general-m block-map throughput, nb ≈ {nb} (first covered size ≥ nb)"
+    ));
+    let mut b = Bencher::default();
+
+    // m=5's BB sweep is nb^5 blocks per iteration, so cap its size.
+    for (m, beta, target) in [(4u32, 2u32, nb), (5, 32, nb.min(12))] {
+        let lam = LambdaMMap::for_paper(m, beta);
+        let native = lam
+            .native_size(target)
+            .expect("covered size within the horizon");
+        bench_map(
+            &mut b,
+            &format!("lambda-m (m={m}, β={beta}, unranking) nb={native}"),
+            &lam,
+            native,
+        );
+        let bb = BoundingBoxM::new(m);
+        bench_map(
+            &mut b,
+            &format!("bb (m={m}, identity + predicate) nb={native}"),
+            &bb,
+            native,
+        );
+    }
+
+    b.print_speedups("E13 summary");
+}

@@ -1,0 +1,79 @@
+//! General-m end to end: the unique k-tuple interaction workload under
+//! BB_m vs λ_m — §III.D's ≈m! parallel-space claim on a real O(n^m)
+//! computation, through the same scheduler every other workload uses.
+//!
+//! Run: `cargo run --release --example ktuple_interaction -- [m] [nb]`
+//! (defaults m=4, nb=28 — λ_m's first covered size, where it uses
+//! ~1/19.5 of BB's parallel space; small nb also brute-force checks).
+
+use simplexmap::coordinator::{Backend, Job, Scheduler, WorkloadKind};
+use simplexmap::maps::map_names;
+use simplexmap::simplex::volume::binomial;
+use simplexmap::util::stats::fmt_count;
+use simplexmap::workloads::KTupleWorkload;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let m: u32 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let nb: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(28);
+    let workload = WorkloadKind::ktuple(m).expect("arity within 3..=8");
+
+    let sched = Scheduler::new(
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4),
+        None,
+    );
+    let rho = if m == 3 { sched.rho3 } else { sched.rho_m };
+    let n = nb * rho as u64;
+    let tuples = binomial(n as u128, m as u128);
+    println!(
+        "k-tuple interaction: {n} particles (nb={nb}, ρ={rho}), m={m}, {} unique tuples",
+        fmt_count(tuples as f64)
+    );
+    println!(
+        "{:<14} {:>12} {:>12} {:>8} {:>12} {:>16}",
+        "map", "launched", "useful", "eff", "wall", "tuples/s"
+    );
+
+    let mut energies = Vec::new();
+    for map in map_names(m) {
+        let job = Job {
+            workload,
+            nb,
+            map: map.clone(),
+            backend: Backend::Rust,
+            seed: 42,
+        };
+        let r = sched.run(&job).expect("job");
+        println!(
+            "{:<14} {:>12} {:>12} {:>8.4} {:>10.1}ms {:>16}",
+            map,
+            r.blocks_launched,
+            r.blocks_mapped,
+            r.block_efficiency(),
+            r.wall_secs * 1e3,
+            fmt_count(tuples as f64 / r.wall_secs),
+        );
+        energies.push((map, r.outputs[0].1));
+    }
+
+    let e0 = energies[0].1;
+    for (map, e) in &energies {
+        assert!(
+            (e - e0).abs() < 1e-9 * e0.abs().max(1.0),
+            "{map}: energy {e} vs {e0}"
+        );
+    }
+    println!("all maps agree: E = {e0:.6e}");
+
+    if n <= 16 {
+        let w = KTupleWorkload::generate(nb, rho, m, 42);
+        let want = w.reference();
+        assert!(
+            (want - e0).abs() < 1e-9 * want.abs().max(1.0),
+            "reference {want} vs {e0}"
+        );
+        println!("brute-force reference agrees: {want:.6e}");
+    }
+}

@@ -146,16 +146,19 @@ pub fn report_search(m_lo: u32, m_hi: u32, betas: &[f64], horizon: u64) -> Strin
     let mut out = String::new();
     out.push_str(&format!(
         "E9: §III.D parameter search, r = m!^(-1/m), horizon = {horizon}\n\
-         {:>3} {:>8} {:>10} {:>12} {:>12} {:>14}\n",
-        "m", "beta", "r", "n0", "waste lim", "eff vs BB"
+         {:>3} {:>8} {:>10} {:>12} {:>10} {:>12} {:>14}\n",
+        "m", "beta", "r", "n0", "n0 exec", "waste lim", "eff vs BB"
     ));
     for r in &rows {
         out.push_str(&format!(
-            "{:>3} {:>8} {:>10.5} {:>12} {:>12.4} {:>14.1}\n",
+            "{:>3} {:>8} {:>10.5} {:>12} {:>10} {:>12.4} {:>14.1}\n",
             r.m,
             r.beta,
             r.r,
             r.n0.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
+            r.n0_exec
+                .map(|v| v.to_string())
+                .unwrap_or_else(|| "-".into()),
             r.waste_limit,
             r.efficiency_vs_bb,
         ));

@@ -19,6 +19,9 @@ pub enum WorkloadKind {
     Cellular,
     /// Triangular matrix-vector product (2-simplex) — [21], [5].
     TriMatVec,
+    /// Unique k-tuple interaction (m-simplex, 3 ≤ m ≤ 8) — the
+    /// general-m subsystem's workload; the payload is the tuple arity.
+    KTuple(u32),
 }
 
 impl WorkloadKind {
@@ -30,7 +33,21 @@ impl WorkloadKind {
             "triple" => Some(WorkloadKind::Triple),
             "cellular" => Some(WorkloadKind::Cellular),
             "trimatvec" => Some(WorkloadKind::TriMatVec),
-            _ => None,
+            // "ktuple" defaults to quadruples; "ktuple<m>" pins the arity.
+            "ktuple" => Some(WorkloadKind::KTuple(4)),
+            _ => {
+                let m: u32 = s.strip_prefix("ktuple")?.parse().ok()?;
+                WorkloadKind::ktuple(m)
+            }
+        }
+    }
+
+    /// The k-tuple workload at arity m, when m is executable.
+    pub fn ktuple(m: u32) -> Option<WorkloadKind> {
+        if (3..=8).contains(&m) {
+            Some(WorkloadKind::KTuple(m))
+        } else {
+            None
         }
     }
 
@@ -42,6 +59,12 @@ impl WorkloadKind {
             WorkloadKind::Triple => "triple",
             WorkloadKind::Cellular => "cellular",
             WorkloadKind::TriMatVec => "trimatvec",
+            WorkloadKind::KTuple(3) => "ktuple3",
+            WorkloadKind::KTuple(4) => "ktuple4",
+            WorkloadKind::KTuple(5) => "ktuple5",
+            WorkloadKind::KTuple(6) => "ktuple6",
+            WorkloadKind::KTuple(7) => "ktuple7",
+            WorkloadKind::KTuple(_) => "ktuple8",
         }
     }
 
@@ -49,6 +72,7 @@ impl WorkloadKind {
     pub fn m(&self) -> u32 {
         match self {
             WorkloadKind::Triple => 3,
+            WorkloadKind::KTuple(m) => *m,
             _ => 2,
         }
     }
@@ -60,6 +84,8 @@ impl WorkloadKind {
         WorkloadKind::Triple,
         WorkloadKind::Cellular,
         WorkloadKind::TriMatVec,
+        WorkloadKind::KTuple(4),
+        WorkloadKind::KTuple(5),
     ];
 }
 
@@ -181,6 +207,18 @@ mod tests {
     fn workload_dimensionality() {
         assert_eq!(WorkloadKind::Edm.m(), 2);
         assert_eq!(WorkloadKind::Triple.m(), 3);
+        assert_eq!(WorkloadKind::KTuple(5).m(), 5);
+    }
+
+    #[test]
+    fn ktuple_parse_variants() {
+        assert_eq!(WorkloadKind::parse("ktuple"), Some(WorkloadKind::KTuple(4)));
+        assert_eq!(
+            WorkloadKind::parse("ktuple6"),
+            Some(WorkloadKind::KTuple(6))
+        );
+        assert_eq!(WorkloadKind::parse("ktuple2"), None, "pairs are edm's job");
+        assert_eq!(WorkloadKind::parse("ktuple9"), None, "beyond M_MAX");
     }
 
     #[test]

@@ -19,7 +19,7 @@ use crate::coordinator::batcher::{TileBatcher, TileInput};
 use crate::coordinator::job::{Backend, Job, JobResult, WorkloadKind};
 use crate::coordinator::metrics::Metrics;
 use crate::grid::{BlockShape, LaunchConfig, Launcher, MappedBlock};
-use crate::maps::{map2_by_name, map3_by_name, ThreadMap};
+use crate::maps::{map2_by_name, map3_by_name, MThreadMap as _, ThreadMap};
 use crate::runtime::ExecHandle;
 use crate::workloads::*;
 use crate::{log_debug, log_info};
@@ -72,6 +72,8 @@ pub struct Scheduler {
     pub rho2: u32,
     /// ρ for 3-simplex workloads.
     pub rho3: u32,
+    /// ρ for general-m workloads (blocks are ρ^m threads, so small).
+    pub rho_m: u32,
     executor: Option<ExecHandle>,
     pub metrics: Arc<Metrics>,
 }
@@ -82,6 +84,7 @@ impl Scheduler {
             workers: workers.max(1),
             rho2: 16,
             rho3: 8,
+            rho_m: 2,
             executor,
             metrics: Arc::new(Metrics::new()),
         }
@@ -129,6 +132,9 @@ impl Scheduler {
 
     /// Run a job to completion.
     pub fn run(&self, job: &Job) -> Result<JobResult, ScheduleError> {
+        if let WorkloadKind::KTuple(m) = job.workload {
+            return self.run_ktuple(job, m);
+        }
         let t0 = Instant::now();
         let map = self.resolve_map(job)?;
         let rho = if job.workload.m() == 2 {
@@ -192,7 +198,82 @@ impl Scheduler {
             (WorkloadKind::TriMatVec, Backend::Pjrt) => {
                 Err(ScheduleError::NoPjrtPath("trimatvec"))
             }
+            (WorkloadKind::KTuple(_), _) => {
+                unreachable!("ktuple jobs take the general-m path in run()")
+            }
         }
+    }
+
+    // ---- KTuple (general-m path) -------------------------------------
+
+    /// The general-m pipeline: resolve through the unified registry,
+    /// launch with [`Launcher::launch_m`], execute ρ^m tuple tiles.
+    fn run_ktuple(&self, job: &Job, m: u32) -> Result<JobResult, ScheduleError> {
+        if job.backend == Backend::Pjrt {
+            return Err(ScheduleError::NoPjrtPath("ktuple"));
+        }
+        let map = crate::maps::map_by_name(m, &job.map)
+            .ok_or_else(|| ScheduleError::UnknownMap(job.map.clone(), m))?;
+        if !map.supports(job.nb) {
+            return Err(ScheduleError::Unsupported(job.map.clone(), job.nb));
+        }
+        let rho = if m == 2 {
+            self.rho2
+        } else if m == 3 {
+            self.rho3
+        } else {
+            self.rho_m
+        };
+        log_info!(
+            "scheduler",
+            "job {} nb={} map={} backend={} (general-m)",
+            job.workload.name(),
+            job.nb,
+            job.map,
+            job.backend.name()
+        );
+        let t0 = Instant::now();
+
+        let tmap = Instant::now();
+        let mut cfg = LaunchConfig::new(BlockShape::new(rho, m));
+        cfg.launch_latency = std::time::Duration::from_micros(5);
+        let launcher = Launcher::with_workers(self.workers, cfg);
+        let blocks = Mutex::new(Vec::new());
+        let stats = launcher.launch_m(map.as_ref(), job.nb, |b| {
+            blocks.lock().unwrap().push(*b);
+            0
+        });
+        let mut blocks = blocks.into_inner().unwrap();
+        // Deterministic order for reproducible aggregation.
+        blocks.sort_by(|a, b| (a.pass, a.data.as_slice()).cmp(&(b.pass, b.data.as_slice())));
+        self.metrics.record_map_phase(tmap.elapsed().as_secs_f64());
+        self.metrics
+            .blocks_mapped
+            .fetch_add(blocks.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        log_debug!("scheduler", "mapped {} blocks (m={m})", blocks.len());
+
+        let texec = Instant::now();
+        let w = KTupleWorkload::generate(job.nb, rho, m, job.seed);
+        let partials: Vec<f64> = parallel_map_reduce(self.workers, &blocks, |batch| {
+            batch
+                .iter()
+                .map(|b| w.tile_rust(&KTupleWorkload::block_chunks(job.nb, &b.data)))
+                .sum()
+        });
+        self.metrics
+            .record_exec_phase(texec.elapsed().as_secs_f64());
+
+        let wall = t0.elapsed().as_secs_f64();
+        self.metrics.record_job(wall);
+        Ok(JobResult {
+            job: job.clone(),
+            outputs: vec![("ktuple_energy".into(), partials.iter().sum())],
+            blocks_launched: stats.blocks_launched,
+            blocks_mapped: stats.blocks_mapped,
+            threads_launched: stats.threads_launched,
+            wall_secs: wall,
+            tile_batches: 0,
+        })
     }
 
     // ---- EDM ---------------------------------------------------------
@@ -663,6 +744,61 @@ mod tests {
         let want = TriMatVecWorkload::checksum(&w.reference());
         let r = sched.run(&job(WorkloadKind::TriMatVec, 4, "lambda2")).unwrap();
         assert!((r.outputs[0].1 - want).abs() < 1e-3 * want.max(1.0));
+    }
+
+    #[test]
+    fn ktuple_rust_matches_reference_under_bb_and_lambda_m() {
+        let sched = Scheduler::new(4, None);
+        for (m, nb) in [(4u32, 4u64), (5, 3)] {
+            let w = KTupleWorkload::generate(nb, sched.rho_m, m, 11);
+            let want = w.reference();
+            for map in ["bb", "lambda-m"] {
+                let r = sched
+                    .run(&job(WorkloadKind::KTuple(m), nb, map))
+                    .unwrap_or_else(|e| panic!("m={m} map={map}: {e}"));
+                let got = r.outputs[0].1;
+                assert!(
+                    (got - want).abs() < 1e-9 * want.abs().max(1.0),
+                    "m={m} map={map}: {got} vs {want}"
+                );
+                assert_eq!(
+                    r.blocks_mapped as u128,
+                    crate::maps::domain_volume(nb, m),
+                    "m={m} map={map}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ktuple3_runs_on_the_adapted_fixed_maps() {
+        // At m=3 the general-m path reuses the λ3 family via adapters.
+        let sched = Scheduler::new(2, None);
+        let w = KTupleWorkload::generate(4, sched.rho3, 3, 11);
+        let want = w.reference();
+        for map in ["bb", "lambda3", "enum3"] {
+            let r = sched.run(&job(WorkloadKind::KTuple(3), 4, map)).unwrap();
+            let got = r.outputs[0].1;
+            assert!(
+                (got - want).abs() < 1e-9 * want.abs().max(1.0),
+                "map={map}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn ktuple_errors_cover_registry_and_backend() {
+        let sched = Scheduler::new(1, None);
+        assert!(matches!(
+            sched.run(&job(WorkloadKind::KTuple(4), 4, "lambda3")),
+            Err(ScheduleError::UnknownMap(_, 4))
+        ));
+        let mut j = job(WorkloadKind::KTuple(4), 4, "bb");
+        j.backend = Backend::Pjrt;
+        assert!(matches!(
+            sched.run(&j),
+            Err(ScheduleError::NoPjrtPath("ktuple"))
+        ));
     }
 
     #[test]

@@ -5,6 +5,8 @@
 //! - `{"cmd":"ping"}` → `{"ok":true,"pong":true}`
 //! - `{"cmd":"run","workload":"edm","nb":64,"map":"lambda2",
 //!    "backend":"rust","seed":7}` → `{"ok":true,"result":{…}}`
+//! - `{"cmd":"maps"}` → `{"ok":true,"maps":{"2":[…],…,"8":[…]}}` —
+//!   the registered map names per dimension (the unified registry).
 //! - `{"cmd":"metrics"}` → `{"ok":true,"metrics":{…}}`
 //! - `{"cmd":"shutdown"}` → `{"ok":true}` and the server stops.
 //!
@@ -36,7 +38,11 @@ impl Server {
 
     /// Bind and serve until a shutdown command arrives. Returns the
     /// bound address through `on_bound` (lets tests use port 0).
-    pub fn serve(&self, addr: &str, on_bound: impl FnOnce(std::net::SocketAddr)) -> std::io::Result<()> {
+    pub fn serve(
+        &self,
+        addr: &str,
+        on_bound: impl FnOnce(std::net::SocketAddr),
+    ) -> std::io::Result<()> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
@@ -105,6 +111,18 @@ pub fn dispatch(line: &str, scheduler: &Scheduler, shutdown: &AtomicBool) -> Jso
     };
     match req.get("cmd").and_then(Json::as_str) {
         Some("ping") => Json::obj(vec![("ok", true.into()), ("pong", true.into())]),
+        Some("maps") => {
+            let per_m = (2..=crate::simplex::block_m::M_MAX as u32)
+                .map(|m| {
+                    let names = crate::maps::map_names(m)
+                        .into_iter()
+                        .map(Json::Str)
+                        .collect();
+                    (m.to_string(), Json::Arr(names))
+                })
+                .collect();
+            Json::obj(vec![("ok", true.into()), ("maps", Json::Obj(per_m))])
+        }
         Some("metrics") => Json::obj(vec![
             ("ok", true.into()),
             ("metrics", scheduler.metrics.snapshot()),
@@ -135,7 +153,7 @@ pub fn dispatch(line: &str, scheduler: &Scheduler, shutdown: &AtomicBool) -> Jso
                 },
             }
         }
-        _ => err("unknown cmd (ping|run|metrics|shutdown)".into()),
+        _ => err("unknown cmd (ping|run|maps|metrics|shutdown)".into()),
     }
 }
 
@@ -167,6 +185,39 @@ mod tests {
         assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
         let result = r.get("result").unwrap();
         assert_eq!(result.get("block_efficiency").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn dispatch_maps_lists_names_per_dimension() {
+        let s = sched();
+        let flag = AtomicBool::new(false);
+        let r = dispatch(r#"{"cmd":"maps"}"#, &s, &flag);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        let maps = r.get("maps").unwrap();
+        let names = |m: &str| -> Vec<String> {
+            maps.get(m)
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|j| j.as_str().unwrap().to_string())
+                .collect()
+        };
+        assert!(names("2").contains(&"lambda2".to_string()));
+        assert!(names("3").contains(&"lambda3".to_string()));
+        for m in ["4", "5", "6", "7", "8"] {
+            assert!(names(m).contains(&"lambda-m".to_string()), "m={m}");
+            assert!(names(m).contains(&"bb".to_string()), "m={m}");
+        }
+        // Every advertised name must resolve in the unified registry.
+        for m in 2..=8u32 {
+            for name in names(&m.to_string()) {
+                assert!(
+                    crate::maps::map_by_name(m, &name).is_some(),
+                    "m={m} {name}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -238,6 +289,20 @@ mod tests {
         .unwrap();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("overlap_count"), "{line}");
+
+        line.clear();
+        conn.write_all(b"{\"cmd\":\"maps\"}\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("lambda-m"), "{line}");
+        assert!(line.contains("\"4\""), "{line}");
+
+        line.clear();
+        conn.write_all(
+            b"{\"cmd\":\"run\",\"workload\":\"ktuple4\",\"nb\":3,\"map\":\"bb\"}\n",
+        )
+        .unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("ktuple_energy"), "{line}");
 
         line.clear();
         conn.write_all(b"{\"cmd\":\"metrics\"}\n").unwrap();

@@ -65,11 +65,12 @@ pub fn generate(spec: &TraceSpec) -> Vec<TraceEntry> {
         let u = rng.gen_f64().max(f64::MIN_POSITIVE);
         t += -u.ln() / spec.rate_hz;
         let workload = spec.workloads[rng.gen_range(0, spec.workloads.len())];
-        // m=3 workloads need an m=3 map; fall back to lambda3.
-        let map = if workload.m() == 3 {
-            "lambda3".to_string()
-        } else {
-            spec.maps[rng.gen_range(0, spec.maps.len())].clone()
+        // Higher-m workloads need a map of their dimension; fall back
+        // to the canonical recursive map for m ≥ 3.
+        let map = match workload.m() {
+            2 => spec.maps[rng.gen_range(0, spec.maps.len())].clone(),
+            3 => "lambda3".to_string(),
+            _ => "lambda-m".to_string(),
         };
         let nb = spec.sizes[rng.gen_range(0, spec.sizes.len())];
         out.push(TraceEntry {

@@ -22,6 +22,9 @@ pub struct SearchRow {
     pub beta: f64,
     pub r: f64,
     pub n0: Option<u64>,
+    /// First size the *integer-discretized* set (the one `maps::lambda_m`
+    /// actually launches) covers — the executable counterpart of n₀.
+    pub n0_exec: Option<u64>,
     /// Asymptotic waste β/(m!-β).
     pub waste_limit: f64,
     /// Efficiency multiple over bounding-box: (m!-β)·(1 - o(1)).
@@ -38,6 +41,10 @@ impl SearchRow {
                 "n0",
                 self.n0.map(|v| Json::from(v)).unwrap_or(Json::Null),
             ),
+            (
+                "n0_exec",
+                self.n0_exec.map(|v| Json::from(v)).unwrap_or(Json::Null),
+            ),
             ("waste_limit", self.waste_limit.into()),
             ("efficiency_vs_bb", self.efficiency_vs_bb.into()),
         ])
@@ -53,11 +60,18 @@ pub fn search(m_range: (u32, u32), betas: &[f64], horizon: u64) -> Vec<SearchRow
                 continue;
             }
             let p = GeneralSetParams::for_paper(m, beta);
+            // Discrete scans need integer β and a u128-safe bound.
+            let n0_exec = if beta.fract() == 0.0 {
+                p.first_covered(2, horizon.min(4096))
+            } else {
+                None
+            };
             rows.push(SearchRow {
                 m,
                 beta,
                 r: p.r,
                 n0: p.n0(horizon),
+                n0_exec,
                 waste_limit: p.waste_limit(),
                 efficiency_vs_bb: factorial(m) as f64 / (1.0 + p.waste_limit()),
             });
@@ -121,6 +135,23 @@ mod tests {
         assert_eq!(find(5, 8.0), 128);
         assert_eq!(find(7, 2.0), 65536);
         assert_eq!(find(7, 32.0), 4096);
+    }
+
+    #[test]
+    fn n0_exec_matches_discrete_cross_check() {
+        // Executable (integer-plan) first-covered sizes, python-checked:
+        // (m=4, β=2) → 28; (m=5, β=16) → 17; (m=5, β=32) → 4.
+        let rows = search((4, 5), &[2.0, 16.0, 32.0], 1 << 40);
+        let find = |m: u32, b: f64| {
+            rows.iter()
+                .find(|r| r.m == m && r.beta == b)
+                .unwrap()
+                .n0_exec
+                .unwrap()
+        };
+        assert_eq!(find(4, 2.0), 28);
+        assert_eq!(find(5, 16.0), 17);
+        assert_eq!(find(5, 32.0), 4);
     }
 
     #[test]

@@ -21,10 +21,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::maps::ThreadMap;
+use crate::maps::{MThreadMap, ThreadMap};
 use crate::util::threadpool::ThreadPool;
 
-use super::{BlockShape, MappedBlock};
+use super::{BlockShape, MappedBlock, MappedBlockM};
 
 /// Launch-time knobs.
 #[derive(Clone, Debug)]
@@ -192,6 +192,98 @@ impl Launcher {
             launch_overhead: overhead,
         }
     }
+
+    /// The general-m counterpart of [`Launcher::launch`]: walk every
+    /// m-dimensional parallel orthotope of every pass of an
+    /// [`MThreadMap`], with the same four-population thread accounting
+    /// and launch-latency model. `config.shape.m` must match the map.
+    pub fn launch_m<K>(&self, map: &dyn MThreadMap, nb: u64, kernel: K) -> LaunchStats
+    where
+        K: Fn(&MappedBlockM) -> u64 + Send + Sync,
+    {
+        assert!(
+            map.supports(nb),
+            "map {} does not support nb={nb}",
+            map.name()
+        );
+        assert_eq!(self.config.shape.m, map.m(), "block shape vs map dim");
+        let t0 = Instant::now();
+        let threads_per_block = self.config.shape.threads();
+        let passes = map.passes(nb);
+
+        let blocks_launched = AtomicU64::new(0);
+        let blocks_filler = AtomicU64::new(0);
+        let blocks_mapped = AtomicU64::new(0);
+        let predicated = AtomicU64::new(0);
+
+        for pass in 0..passes {
+            let grid = map.grid(nb, pass);
+            let total = grid.volume() as usize;
+            blocks_launched.fetch_add(total as u64, Ordering::Relaxed);
+            let chunks = total.div_ceil(self.config.chunk_blocks.max(1));
+
+            let results: Mutex<Vec<(u64, u64, u64)>> = Mutex::new(Vec::new());
+            std::thread::scope(|scope| {
+                let workers = self.pool.size().min(chunks.max(1));
+                let chunk_size = total.div_ceil(workers.max(1));
+                for w in 0..workers {
+                    let lo = w * chunk_size;
+                    if lo >= total {
+                        break;
+                    }
+                    let hi = ((w + 1) * chunk_size).min(total);
+                    let kernel = &kernel;
+                    let results = &results;
+                    let grid = &grid;
+                    scope.spawn(move || {
+                        let mut filler = 0u64;
+                        let mut mapped = 0u64;
+                        let mut pred = 0u64;
+                        for idx in lo..hi {
+                            let p = grid.of_linear(idx as u64);
+                            match map.map_block(nb, pass, &p) {
+                                None => filler += 1,
+                                Some(data) => {
+                                    mapped += 1;
+                                    let mb = MappedBlockM {
+                                        parallel: p,
+                                        data,
+                                        pass,
+                                    };
+                                    pred += kernel(&mb);
+                                }
+                            }
+                        }
+                        results.lock().unwrap().push((filler, mapped, pred));
+                    });
+                }
+            });
+            for (f, m, p) in results.into_inner().unwrap() {
+                blocks_filler.fetch_add(f, Ordering::Relaxed);
+                blocks_mapped.fetch_add(m, Ordering::Relaxed);
+                predicated.fetch_add(p, Ordering::Relaxed);
+            }
+        }
+
+        let waves = passes.div_ceil(self.config.max_concurrent_launches.max(1));
+        let overhead = self.config.launch_latency * waves as u32;
+        std::thread::sleep(overhead);
+
+        let bl = blocks_launched.load(Ordering::Relaxed);
+        let bm = blocks_mapped.load(Ordering::Relaxed);
+        LaunchStats {
+            passes,
+            launch_waves: waves,
+            blocks_launched: bl,
+            blocks_filler: blocks_filler.load(Ordering::Relaxed),
+            blocks_mapped: bm,
+            threads_launched: bl * threads_per_block,
+            threads_mapped: bm * threads_per_block,
+            threads_predicated_off: predicated.load(Ordering::Relaxed),
+            wall: t0.elapsed(),
+            launch_overhead: overhead,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -278,5 +370,55 @@ mod tests {
     #[should_panic(expected = "does not support")]
     fn unsupported_size_panics() {
         launcher(8, 2).launch(&Lambda2Map, 17, |_b| 0);
+    }
+
+    #[test]
+    fn launch_m_lambda_m_accounting_matches_plan() {
+        use crate::maps::{LambdaMMap, MThreadMap as _};
+        let l = launcher(2, 4);
+        let map = LambdaMMap::for_paper(4, 2);
+        let nb = 28u64; // first covered size: parallel 31501, filler 36
+        let stats = l.launch_m(&map, nb, |_b| 0);
+        assert_eq!(stats.blocks_launched, 31501);
+        assert_eq!(stats.blocks_filler, 36);
+        assert_eq!(stats.blocks_mapped, 31465);
+        assert_eq!(stats.passes, map.passes(nb));
+        assert_eq!(stats.threads_launched, 31501 * 16);
+        assert_eq!(stats.threads_mapped, 31465 * 16);
+    }
+
+    #[test]
+    fn launch_m_sees_each_data_block_once() {
+        use crate::maps::BoundingBoxM;
+        use std::collections::HashSet;
+        let l = launcher(2, 5);
+        let map = BoundingBoxM::new(5);
+        let nb = 4u64;
+        let seen = Mutex::new(HashSet::new());
+        let stats = l.launch_m(&map, nb, |b| {
+            assert!(seen.lock().unwrap().insert(b.data), "dup {:?}", b.data);
+            0
+        });
+        assert_eq!(seen.lock().unwrap().len() as u64, stats.blocks_mapped);
+        assert_eq!(stats.blocks_mapped as u128, crate::maps::domain_volume(4, 5));
+        assert_eq!(stats.blocks_launched, 4u64.pow(5));
+    }
+
+    #[test]
+    fn launch_m_predication_counts_flow_through() {
+        use crate::maps::BoundingBoxM;
+        let l = launcher(2, 4);
+        let stats = l.launch_m(&BoundingBoxM::new(4), 3, |b| {
+            // Predicate one thread off in every block on the main
+            // diagonal plane Σ = nb-1.
+            if b.data.sum() == 2 {
+                1
+            } else {
+                0
+            }
+        });
+        // |{Σ = 2, m = 4}| = C(5, 3) = 10.
+        assert_eq!(stats.threads_predicated_off, 10);
+        assert!(stats.thread_efficiency() < 1.0);
     }
 }

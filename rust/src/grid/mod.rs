@@ -13,10 +13,14 @@
 pub mod launcher;
 pub mod occupancy;
 
+use crate::simplex::block_m::{BlockM, M_MAX};
+
 pub use launcher::{LaunchConfig, LaunchStats, Launcher};
 pub use occupancy::OccupancyReport;
 
-/// Threads per block side (ρ in the paper; blocks are ρ×ρ or ρ×ρ×ρ).
+/// Threads per block side (ρ in the paper; blocks are ρ^m cubes —
+/// m ≤ 3 on real CUDA grids, up to [`M_MAX`] in the general-m
+/// subsystem, which linearizes higher dimensions like §I describes).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BlockShape {
     pub rho: u32,
@@ -25,7 +29,7 @@ pub struct BlockShape {
 
 impl BlockShape {
     pub fn new(rho: u32, m: u32) -> BlockShape {
-        assert!(rho >= 1 && (2..=3).contains(&m));
+        assert!(rho >= 1 && m >= 2 && m as usize <= M_MAX);
         BlockShape { rho, m }
     }
 
@@ -52,6 +56,26 @@ impl MappedBlock {
     }
 }
 
+/// A mapped block of the general-m launch path (dynamic dimension).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MappedBlockM {
+    pub parallel: BlockM,
+    pub data: BlockM,
+    pub pass: u64,
+}
+
+impl MappedBlockM {
+    /// Data-space thread origin of this block.
+    pub fn thread_origin(&self, shape: BlockShape) -> BlockM {
+        let r = shape.rho as u64;
+        let mut origin = self.data;
+        for i in 0..origin.m() as usize {
+            origin[i] *= r;
+        }
+        origin
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -61,6 +85,18 @@ mod tests {
         assert_eq!(BlockShape::new(16, 2).threads(), 256);
         assert_eq!(BlockShape::new(8, 3).threads(), 512);
         assert_eq!(BlockShape::new(1, 2).threads(), 1);
+        assert_eq!(BlockShape::new(2, 5).threads(), 32);
+    }
+
+    #[test]
+    fn mapped_block_m_thread_origin() {
+        let b = MappedBlockM {
+            parallel: BlockM::zeros(4),
+            data: BlockM::from_slice(&[2, 3, 1, 5]),
+            pass: 0,
+        };
+        let origin = b.thread_origin(BlockShape::new(4, 4));
+        assert_eq!(origin.as_slice(), &[8, 12, 4, 20]);
     }
 
     #[test]
@@ -76,6 +112,6 @@ mod tests {
     #[test]
     #[should_panic]
     fn invalid_m_rejected() {
-        BlockShape::new(8, 4);
+        BlockShape::new(8, M_MAX as u32 + 1);
     }
 }

@@ -3,8 +3,9 @@
 //! Subcommands:
 //!   report <volumes|maps|arity3|launches|general|avril|ries|nonpow2>
 //!   search   --m 2..10 --betas 2,4,8,16,32 --horizon 2^40
-//!   verify   --map <name> --nb <2^k>          exhaustive coverage check
+//!   verify   --map <name> --nb <2^k> [--m 4..8]  exhaustive coverage check
 //!   run      --workload edm --nb 64 --map lambda2 --backend rust|pjrt
+//!            (--workload ktuple --m 4..8 runs the general-m subsystem)
 //!   serve    --addr 127.0.0.1:7070            JSON-lines job server
 //!   sweep    --workload edm --nb 64           all maps side by side
 //!
@@ -15,7 +16,7 @@ use std::sync::Arc;
 use simplexmap::analysis;
 use simplexmap::coordinator::server::Server;
 use simplexmap::coordinator::{Backend, Job, Scheduler, WorkloadKind};
-use simplexmap::maps::{map2_by_name, map3_by_name, ThreadMap};
+use simplexmap::maps::{map2_by_name, map3_by_name, MThreadMap as _, ThreadMap};
 use simplexmap::runtime::{artifact, ExecutorService};
 use simplexmap::util::cli::{flag, opt, Args};
 
@@ -27,7 +28,7 @@ fn main() {
         opt("map", "thread map name", None),
         opt(
             "workload",
-            "edm|collision|nbody|triple|cellular|trimatvec",
+            "edm|collision|nbody|triple|cellular|trimatvec|ktuple[3-8]",
             Some("edm"),
         ),
         opt("backend", "rust|pjrt", Some("rust")),
@@ -137,13 +138,19 @@ fn search(args: &Args) -> Result<(), String> {
 }
 
 /// Exhaustive coverage verification of a map at a given size — every
-/// domain block covered exactly once, filler counted (E2/E6).
+/// domain block covered exactly once, filler counted (E2/E6). With
+/// `--m 4..8` the general-m registry is verified instead (E13).
 fn verify(args: &Args) -> Result<(), String> {
     let nb = args.get_u64("nb").map_err(|e| e.to_string())?.unwrap();
     let name = args
         .get("map")
         .ok_or("verify needs --map <name>")?
         .to_string();
+    if let Some((lo, hi)) = args.get_range("m").map_err(|e| e.to_string())? {
+        if lo == hi && lo >= 4 {
+            return verify_m(lo as u32, &name, nb);
+        }
+    }
     let map: Box<dyn ThreadMap> = map2_by_name(&name)
         .or_else(|| map3_by_name(&name))
         .ok_or(format!("unknown map '{name}'"))?;
@@ -172,6 +179,47 @@ fn verify(args: &Args) -> Result<(), String> {
     let covered = seen.len() as u128;
     println!(
         "map={name} nb={nb}: domain={domain} covered={covered} dups={dups} \
+         escaped={escaped} filler={filler} parallel={} passes={}",
+        map.parallel_volume(nb),
+        map.passes(nb)
+    );
+    if covered == domain && dups == 0 && escaped == 0 {
+        println!("VERIFY OK: exact coverage");
+        Ok(())
+    } else {
+        Err("coverage verification FAILED".into())
+    }
+}
+
+/// General-m counterpart of `verify` over the unified registry.
+fn verify_m(m: u32, name: &str, nb: u64) -> Result<(), String> {
+    let map = simplexmap::maps::map_by_name(m, name)
+        .ok_or(format!("unknown map '{name}' for m={m}"))?;
+    if !map.supports(nb) {
+        return Err(format!("map {name} does not support nb={nb} at m={m}"));
+    }
+    let mut seen = std::collections::HashSet::new();
+    let mut filler = 0u64;
+    let mut dups = 0u64;
+    let mut escaped = 0u64;
+    for pass in 0..map.passes(nb) {
+        for w in map.grid(nb, pass).iter() {
+            match map.map_block(nb, pass, &w) {
+                None => filler += 1,
+                Some(d) => {
+                    if !simplexmap::maps::in_domain_m(nb, m, &d) {
+                        escaped += 1;
+                    } else if !seen.insert(d) {
+                        dups += 1;
+                    }
+                }
+            }
+        }
+    }
+    let domain = simplexmap::maps::domain_volume(nb, m);
+    let covered = seen.len() as u128;
+    println!(
+        "map={name} m={m} nb={nb}: domain={domain} covered={covered} dups={dups} \
          escaped={escaped} filler={filler} parallel={} passes={}",
         map.parallel_volume(nb),
         map.passes(nb)
@@ -225,22 +273,35 @@ fn build_scheduler(
 }
 
 fn run(args: &Args, sweep: bool) -> Result<(), String> {
-    let workload =
+    let mut workload =
         WorkloadKind::parse(args.get("workload").unwrap()).ok_or("unknown workload")?;
+    // `--m 4..8` (single value) retargets the ktuple arity, so
+    // `run --workload ktuple --m 5` is the CLI door to the m-axis.
+    if let WorkloadKind::KTuple(_) = workload {
+        if let Some((lo, hi)) = args.get_range("m").map_err(|e| e.to_string())? {
+            if lo == hi {
+                workload = WorkloadKind::ktuple(lo as u32)
+                    .ok_or(format!("ktuple arity {lo} outside 3..=8"))?;
+            }
+        }
+    }
     let backend = Backend::parse(args.get("backend").unwrap()).ok_or("unknown backend")?;
     let nb = args.get_u64("nb").map_err(|e| e.to_string())?.unwrap();
     let seed = args.get_u64("seed").map_err(|e| e.to_string())?.unwrap();
     let (_svc, sched) = build_scheduler(args, backend == Backend::Pjrt)?;
 
     let maps: Vec<String> = if sweep {
-        let names: &[&str] = if workload.m() == 2 {
-            &["bb", "lambda2", "enum2", "rb", "ries"]
-        } else {
-            &["bb", "lambda3", "enum3"]
-        };
-        names.iter().map(|s| s.to_string()).collect()
+        match workload.m() {
+            2 => ["bb", "lambda2", "enum2", "rb", "ries"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            3 => ["bb", "lambda3", "enum3"].iter().map(|s| s.to_string()).collect(),
+            m => simplexmap::maps::map_names(m),
+        }
     } else {
-        vec![args.get("map").unwrap_or("lambda2").to_string()]
+        let default = if workload.m() >= 4 { "lambda-m" } else { "lambda2" };
+        vec![args.get("map").unwrap_or(default).to_string()]
     };
 
     for map in maps {

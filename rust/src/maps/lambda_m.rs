@@ -1,0 +1,365 @@
+//! λ_m — the executable general-m recursive map (§III.D).
+//!
+//! The paper proves a recursive parallel space `S_n^m` with volume
+//! `V(S_n^m) = (rn)^m + β·V(S_{rn}^m)` (eq. 25) covers the m-simplex
+//! for `n ≥ n₀` when `r = m!^{-1/m}` and `2 ≤ β < m!`, at asymptotic
+//! waste `β/(m!-β)` — ≈ m! better than a bounding box — but leaves the
+//! packing (which parallel cell computes which simplex cell) open. This
+//! module supplies one:
+//!
+//! - **Geometry** comes straight from the gensearch parametrization:
+//!   [`GeneralSetParams::level_plan`] discretizes the recursion into
+//!   integer levels (`β^i` orthotopes of side `round(r^{i+1} n)`), and
+//!   a size is *covered* when the plan's volume reaches
+//!   `V(Δ_n^m) = C(n+m-1, m)`. Each level launches as one pass with its
+//!   `β^i` sub-orthotopes concatenated along the last grid axis.
+//! - **Assignment** is the combinatorial number system: parallel cell
+//!   ranks (pass-major, axis-0-minor) map to simplex cells in colex
+//!   order through the prefix-sum bijection
+//!   `x ↦ { c_i = x_1+…+x_i + (i-1) }` between `Bm(N)` and m-subsets of
+//!   `{0, …, N+m-2}`. Unranking is O(m² log n) integer arithmetic per
+//!   block — no floating-point roots, exact at every size. Ranks past
+//!   `V(Δ)` are the structural filler (the measured waste, which equals
+//!   the plan's closed form exactly and approaches eq. 27's β/(m!-β)).
+//! - **Below the first covered size** the map falls back to §III.A's
+//!   cover-from-above: run at the smallest covered `n' ≥ nb` and filter
+//!   images to `Bm(nb)` — the same trade CoverFromAbove makes for λ2/λ3
+//!   at non-power-of-two sizes.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::maps::mdim::{in_domain_m, MThreadMap};
+use crate::simplex::block_m::{BlockM, OrthotopeM, M_MAX};
+use crate::simplex::recursive_set::{GeneralSetParams, LevelPlan};
+use crate::simplex::volume::{binomial, factorial, simplex_volume};
+
+/// Default scan bound for covered sizes: far above every practical
+/// grid, low enough that u128 simplex volumes cannot overflow at m ≤ 8.
+pub const DEFAULT_HORIZON: u64 = 4096;
+
+/// Per-native-size layout, cached because `map_block` is the hot path.
+struct Layout {
+    plan: LevelPlan,
+    /// Rank base of each pass: Σ volumes of earlier levels.
+    bases: Vec<u128>,
+    /// `V(Δ_n^m)` — ranks at or above this are filler.
+    domain: u128,
+}
+
+pub struct LambdaMMap {
+    m: u32,
+    beta: u32,
+    params: GeneralSetParams,
+    horizon: u64,
+    layouts: RwLock<HashMap<u64, Arc<Layout>>>,
+    /// nb → native size (the cover-from-above scan is O(horizon)).
+    natives: RwLock<HashMap<u64, Option<u64>>>,
+}
+
+impl LambdaMMap {
+    /// The paper parametrization: `r = m!^{-1/m}`, explicit arity β.
+    pub fn for_paper(m: u32, beta: u32) -> LambdaMMap {
+        Self::try_for_paper(m, beta)
+            .unwrap_or_else(|| panic!("λ_m needs 2 ≤ m ≤ {M_MAX} and 2 ≤ β < m!"))
+    }
+
+    /// Non-panicking constructor (registry path for user-typed names).
+    pub fn try_for_paper(m: u32, beta: u32) -> Option<LambdaMMap> {
+        if m < 2 || m as usize > M_MAX || beta < 2 || (beta as u128) >= factorial(m) {
+            return None;
+        }
+        Some(LambdaMMap {
+            m,
+            beta,
+            params: GeneralSetParams::for_paper(m, beta as f64),
+            horizon: DEFAULT_HORIZON,
+            layouts: RwLock::new(HashMap::new()),
+            natives: RwLock::new(HashMap::new()),
+        })
+    }
+
+    /// Pick β automatically from the gensearch trade-off: the smallest
+    /// power-of-two arity whose first covered size is ≤ 32 (waste grows
+    /// with β, n₀ shrinks — §III.D), else the β minimizing the first
+    /// covered size. None when no arity covers within the horizon.
+    pub fn auto(m: u32) -> Option<LambdaMMap> {
+        let mut candidates = Vec::new();
+        let mut beta = 2u32;
+        while (beta as u128) < factorial(m) {
+            let p = GeneralSetParams::for_paper(m, beta as f64);
+            if let Some(fc) = p.first_covered(2, 512) {
+                candidates.push((beta, fc));
+            }
+            beta = beta.checked_mul(2)?;
+        }
+        let pick = candidates
+            .iter()
+            .find(|(_, fc)| *fc <= 32)
+            .or_else(|| candidates.iter().min_by_key(|(_, fc)| *fc))?;
+        Self::try_for_paper(m, pick.0)
+    }
+
+    pub fn beta(&self) -> u32 {
+        self.beta
+    }
+
+    pub fn r(&self) -> f64 {
+        self.params.r
+    }
+
+    /// Whether the discretized recursion covers `Bm(nb)` natively.
+    pub fn covered(&self, nb: u64) -> bool {
+        nb >= 2 && self.params.discrete_covers(nb)
+    }
+
+    /// The size the map actually runs at: `nb` when covered, else the
+    /// smallest covered size above it (cover-from-above fallback).
+    /// Cached: `map_block` resolves this per call, and re-evaluating
+    /// the level plan (allocations + float math) per block would
+    /// dominate the hot path the benches measure.
+    pub fn native_size(&self, nb: u64) -> Option<u64> {
+        if let Some(n) = self.natives.read().unwrap().get(&nb) {
+            return *n;
+        }
+        let native = if self.covered(nb) {
+            Some(nb)
+        } else {
+            self.params.first_covered(nb.max(2), self.horizon)
+        };
+        self.natives.write().unwrap().insert(nb, native);
+        native
+    }
+
+    fn layout(&self, native: u64) -> Arc<Layout> {
+        if let Some(l) = self.layouts.read().unwrap().get(&native) {
+            return Arc::clone(l);
+        }
+        let plan = self
+            .params
+            .level_plan(native)
+            .expect("supports() guards plan overflow");
+        let mut bases = Vec::with_capacity(plan.levels());
+        let mut acc = 0u128;
+        for i in 0..plan.levels() {
+            bases.push(acc);
+            acc += plan.level_volume(i).expect("supports() guards volume");
+        }
+        let layout = Arc::new(Layout {
+            plan,
+            bases,
+            domain: simplex_volume(native, self.m),
+        });
+        self.layouts
+            .write()
+            .unwrap()
+            .entry(native)
+            .or_insert(layout)
+            .clone()
+    }
+
+    fn pass_grid(&self, layout: &Layout, pass: u64) -> OrthotopeM {
+        let i = pass as usize;
+        let side = layout.plan.sides[i];
+        let count = layout.plan.counts[i] as u64;
+        let mut dims = [side; M_MAX];
+        dims[self.m as usize - 1] = count * side;
+        OrthotopeM::new(&dims[..self.m as usize])
+    }
+
+    /// Colex unranking through the combinatorial number system:
+    /// rank `t` → the m-subset `c_m > … > c_1` with `Σ C(c_i, i) = t`
+    /// (greedy, binary-searched), then prefix-sum differences give the
+    /// simplex cell.
+    fn unrank(&self, mut t: u128, native: u64) -> BlockM {
+        let m = self.m as usize;
+        let mut cs = [0u64; M_MAX];
+        let mut ub = native + self.m as u64 - 2;
+        for i in (1..=m).rev() {
+            let k = i as u128;
+            let (mut lo, mut hi) = (i as u64 - 1, ub);
+            while lo < hi {
+                let mid = lo + (hi - lo + 1) / 2;
+                if binomial(mid as u128, k) <= t {
+                    lo = mid;
+                } else {
+                    hi = mid - 1;
+                }
+            }
+            cs[i - 1] = lo;
+            t -= binomial(lo as u128, k);
+            ub = lo.saturating_sub(1);
+        }
+        debug_assert_eq!(t, 0);
+        let mut x = BlockM::zeros(self.m);
+        x[0] = cs[0];
+        for i in 1..m {
+            x[i] = cs[i] - cs[i - 1] - 1;
+        }
+        x
+    }
+}
+
+impl MThreadMap for LambdaMMap {
+    fn name(&self) -> String {
+        format!("lambda-m-b{}", self.beta)
+    }
+
+    fn m(&self) -> u32 {
+        self.m
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        if nb < 2 {
+            return false;
+        }
+        let Some(native) = self.native_size(nb) else {
+            return false;
+        };
+        // Ranks and per-pass linear indices must fit u64.
+        match self.params.discrete_volume(native) {
+            Some(v) => v <= u64::MAX as u128,
+            None => false,
+        }
+    }
+
+    fn passes(&self, nb: u64) -> u64 {
+        let native = self.native_size(nb).expect("unsupported nb");
+        self.layout(native).plan.levels() as u64
+    }
+
+    fn grid(&self, nb: u64, pass: u64) -> OrthotopeM {
+        let native = self.native_size(nb).expect("unsupported nb");
+        self.pass_grid(&self.layout(native), pass)
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, pass: u64, w: &BlockM) -> Option<BlockM> {
+        let native = self.native_size(nb).expect("unsupported nb");
+        let layout = self.layout(native);
+        let grid = self.pass_grid(&layout, pass);
+        let t = layout.bases[pass as usize] + grid.linear_of(w) as u128;
+        if t >= layout.domain {
+            return None; // structural filler past V(Δ)
+        }
+        let x = self.unrank(t, native);
+        if native == nb || in_domain_m(nb, self.m, &x) {
+            Some(x)
+        } else {
+            None // cover-from-above: outside the true (smaller) domain
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::domain_volume;
+    use crate::maps::mdim::space_efficiency_m;
+    use std::collections::HashSet;
+
+    fn sweep(map: &LambdaMMap, nb: u64) -> (u128, u128, HashSet<BlockM>) {
+        let mut seen = HashSet::new();
+        let mut filler = 0u128;
+        let mut parallel = 0u128;
+        for pass in 0..map.passes(nb) {
+            for w in map.grid(nb, pass).iter() {
+                parallel += 1;
+                match map.map_block(nb, pass, &w) {
+                    None => filler += 1,
+                    Some(d) => {
+                        assert!(in_domain_m(nb, map.m(), &d), "{w:?} → {d:?}");
+                        assert!(seen.insert(d), "dup image {d:?} from {w:?}");
+                    }
+                }
+            }
+        }
+        (parallel, filler, seen)
+    }
+
+    #[test]
+    fn unrank_is_a_bijection() {
+        for (m, n) in [(4u32, 6u64), (5, 5), (3, 8), (6, 4)] {
+            let map = LambdaMMap::for_paper(m, 2);
+            let vol = domain_volume(n, m);
+            let mut seen = HashSet::new();
+            for t in 0..vol {
+                let x = map.unrank(t, n);
+                assert!(x.sum() <= n - 1, "t={t} → {x:?}");
+                assert!(seen.insert(x), "t={t} duplicates {x:?}");
+            }
+            assert_eq!(seen.len() as u128, vol, "m={m} n={n}");
+        }
+    }
+
+    #[test]
+    fn native_partition_m4() {
+        // Python cross-check: n=28 → parallel 31501, filler 36.
+        let map = LambdaMMap::for_paper(4, 2);
+        assert!(map.covered(28));
+        let (parallel, filler, seen) = sweep(&map, 28);
+        assert_eq!(parallel, 31501);
+        assert_eq!(filler, 36);
+        assert_eq!(seen.len() as u128, domain_volume(28, 4));
+        assert_eq!(parallel, map.parallel_volume(28));
+    }
+
+    #[test]
+    fn native_partition_m5() {
+        // Python cross-check: n=4 → 64/8; n=9 → 1299/12.
+        let map = LambdaMMap::for_paper(5, 32);
+        let (parallel, filler, seen) = sweep(&map, 4);
+        assert_eq!((parallel, filler), (64, 8));
+        assert_eq!(seen.len() as u128, domain_volume(4, 5));
+        let (parallel, filler, _) = sweep(&map, 9);
+        assert_eq!((parallel, filler), (1299, 12));
+    }
+
+    #[test]
+    fn fallback_covers_uncovered_sizes_from_above() {
+        // nb=5 is uncovered for (m=5, β=32); runs at n'=9, filters.
+        let map = LambdaMMap::for_paper(5, 32);
+        assert!(!map.covered(5));
+        assert_eq!(map.native_size(5), Some(9));
+        let (parallel, filler, seen) = sweep(&map, 5);
+        assert_eq!(parallel, 1299);
+        assert_eq!(seen.len() as u128, domain_volume(5, 5));
+        assert_eq!(filler, parallel - domain_volume(5, 5));
+    }
+
+    #[test]
+    fn auto_picks_cross_checked_arities() {
+        // Python: m=4 → β=2 (fc 28), m=5 → β=16 (fc 17), m=6 → β=128.
+        assert_eq!(LambdaMMap::auto(4).unwrap().beta(), 2);
+        assert_eq!(LambdaMMap::auto(5).unwrap().beta(), 16);
+        assert_eq!(LambdaMMap::auto(6).unwrap().beta(), 128);
+    }
+
+    #[test]
+    fn efficiency_beats_bounding_box_at_first_covered_size() {
+        // Acceptance: ≥ 3× over BB at the first covered size for m=4
+        // (measured: 19.5×).
+        let map = LambdaMMap::for_paper(4, 2);
+        let bb = crate::maps::mdim::BoundingBoxM::new(4);
+        let nb = 28;
+        let ratio = space_efficiency_m(&map, nb) / space_efficiency_m(&bb, nb);
+        assert!(ratio >= 3.0, "λ_m/BB = {ratio}");
+        assert!(ratio > 15.0, "cross-check says ≈19.5, got {ratio}");
+    }
+
+    #[test]
+    fn name_round_trips_through_registry() {
+        let map = LambdaMMap::for_paper(5, 32);
+        let again = crate::maps::map_by_name(5, &map.name()).unwrap();
+        assert_eq!(again.name(), map.name());
+        assert_eq!(again.m(), 5);
+    }
+
+    #[test]
+    fn invalid_parameters_rejected() {
+        assert!(LambdaMMap::try_for_paper(4, 24).is_none(), "β = m!");
+        assert!(LambdaMMap::try_for_paper(4, 1).is_none());
+        assert!(LambdaMMap::try_for_paper(9, 2).is_none(), "m > M_MAX");
+        assert!(!LambdaMMap::for_paper(4, 2).supports(1));
+    }
+}

@@ -1,0 +1,288 @@
+//! The general-m map layer: [`MThreadMap`] lifts the fixed-`[u64; 3]`
+//! [`ThreadMap`] contract to dynamic-dimension block coordinates so the
+//! §III.D maps (λ_m, m-dim bounding box) become executable, while every
+//! existing m ≤ 3 map registers unchanged through [`FixedAdapter`].
+//!
+//! Block-level domains extend the module conventions of [`crate::maps`]:
+//! m = 2 keeps the inclusive lower-triangle pairs; every m ≥ 3 uses
+//! simplex coordinates `Bm(N) = { x ∈ Z₊^m : Σ x_i ≤ N-1 }` with
+//! `|Bm(N)| = V(Δ_N^m) = C(N+m-1, m)`.
+
+use crate::maps::ThreadMap;
+use crate::simplex::block_m::{BlockM, OrthotopeM, M_MAX};
+
+/// A block-space thread map for an m-simplex domain, any m ≤ [`M_MAX`].
+///
+/// Mirrors [`ThreadMap`] with dynamic coordinates; `name` is owned
+/// because parameterized maps (λ_m over (r, β)) synthesize theirs.
+pub trait MThreadMap: Send + Sync {
+    /// Registry name (round-trips through [`map_by_name`]).
+    fn name(&self) -> String;
+
+    /// Dimensionality of the data space.
+    fn m(&self) -> u32;
+
+    /// Whether the map accepts a problem of `nb` blocks per side.
+    fn supports(&self, nb: u64) -> bool;
+
+    /// Number of kernel launches required for one full mapping.
+    fn passes(&self, _nb: u64) -> u64 {
+        1
+    }
+
+    /// Grid (parallel orthotope, in blocks) of launch pass `pass`.
+    fn grid(&self, nb: u64, pass: u64) -> OrthotopeM;
+
+    /// Map parallel block `w` of pass `pass` to a data block, or `None`
+    /// for filler blocks.
+    fn map_block(&self, nb: u64, pass: u64, w: &BlockM) -> Option<BlockM>;
+
+    /// Total parallel-space volume in blocks (all passes).
+    fn parallel_volume(&self, nb: u64) -> u128 {
+        (0..self.passes(nb))
+            .map(|p| self.grid(nb, p).volume())
+            .sum()
+    }
+}
+
+/// Whether a data block lies in the m-dimensional block-level domain.
+#[inline]
+pub fn in_domain_m(nb: u64, m: u32, d: &BlockM) -> bool {
+    debug_assert_eq!(d.m(), m);
+    if m == 2 {
+        d[0] <= d[1] && d[1] < nb
+    } else {
+        d.sum() <= nb - 1
+    }
+}
+
+/// Parallel-space efficiency `V(Δ) / V(Π)` for a dynamic-m map.
+pub fn space_efficiency_m(map: &dyn MThreadMap, nb: u64) -> f64 {
+    crate::maps::domain_volume(nb, map.m()) as f64 / map.parallel_volume(nb) as f64
+}
+
+/// `V(Π)/V(Δ) - 1` — the waste ratio α for a dynamic-m map.
+pub fn alpha_m(map: &dyn MThreadMap, nb: u64) -> f64 {
+    map.parallel_volume(nb) as f64 / crate::maps::domain_volume(nb, map.m()) as f64 - 1.0
+}
+
+/// Adapter: any registered fixed-m [`ThreadMap`] (m ≤ 3) as an
+/// [`MThreadMap`], coordinate conversion only — the inner map's grid,
+/// passes, and images are untouched.
+pub struct FixedAdapter {
+    pub inner: Box<dyn ThreadMap>,
+}
+
+impl FixedAdapter {
+    pub fn new(inner: Box<dyn ThreadMap>) -> FixedAdapter {
+        assert!(inner.m() <= 3, "FixedAdapter wraps m ≤ 3 maps");
+        FixedAdapter { inner }
+    }
+}
+
+impl MThreadMap for FixedAdapter {
+    fn name(&self) -> String {
+        self.inner.name().to_string()
+    }
+
+    fn m(&self) -> u32 {
+        self.inner.m()
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        self.inner.supports(nb)
+    }
+
+    fn passes(&self, nb: u64) -> u64 {
+        self.inner.passes(nb)
+    }
+
+    fn grid(&self, nb: u64, pass: u64) -> OrthotopeM {
+        let g = self.inner.grid(nb, pass);
+        OrthotopeM::new(&g.dims[..g.m as usize])
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, pass: u64, w: &BlockM) -> Option<BlockM> {
+        let d = self.inner.map_block(nb, pass, w.to_fixed3())?;
+        Some(BlockM::from_fixed3(d, self.m()))
+    }
+}
+
+/// The m-dimensional bounding-box baseline: launch the full `nb^m`
+/// orthotope and predicate-discard everything outside the simplex —
+/// eq. 4's `m! - 1` waste, the number λ_m is measured against.
+pub struct BoundingBoxM {
+    m: u32,
+}
+
+impl BoundingBoxM {
+    pub fn new(m: u32) -> BoundingBoxM {
+        assert!(m >= 2 && m as usize <= M_MAX);
+        BoundingBoxM { m }
+    }
+}
+
+impl MThreadMap for BoundingBoxM {
+    fn name(&self) -> String {
+        "bb".into()
+    }
+
+    fn m(&self) -> u32 {
+        self.m
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        // Linear block indices must fit u64.
+        nb >= 1 && (nb as u128).checked_pow(self.m).is_some_and(|v| v <= u64::MAX as u128)
+    }
+
+    fn grid(&self, nb: u64, _pass: u64) -> OrthotopeM {
+        let dims = [nb; M_MAX];
+        OrthotopeM::new(&dims[..self.m as usize])
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, _pass: u64, w: &BlockM) -> Option<BlockM> {
+        if in_domain_m(nb, self.m, w) {
+            Some(*w)
+        } else {
+            None
+        }
+    }
+}
+
+/// The unified registry: construct a map for any dimension by name.
+/// `map2_by_name`/`map3_by_name` are thin wrappers over the same table
+/// (m ≤ 3 maps arrive through [`FixedAdapter`]); m ≥ 4 resolves the
+/// general-m natives.
+pub fn map_by_name(m: u32, name: &str) -> Option<Box<dyn MThreadMap>> {
+    match m {
+        2 | 3 => crate::maps::fixed_map_by_name(m, name)
+            .map(|inner| Box::new(FixedAdapter::new(inner)) as Box<dyn MThreadMap>),
+        4..=8 => match name {
+            "bb" | "bounding-box" => Some(Box::new(BoundingBoxM::new(m))),
+            "lambda-m" | "lambda" => crate::maps::lambda_m::LambdaMMap::auto(m)
+                .map(|map| Box::new(map) as Box<dyn MThreadMap>),
+            _ => {
+                let beta: u32 = name.strip_prefix("lambda-m-b")?.parse().ok()?;
+                crate::maps::lambda_m::LambdaMMap::try_for_paper(m, beta)
+                    .map(|map| Box::new(map) as Box<dyn MThreadMap>)
+            }
+        },
+        _ => None,
+    }
+}
+
+/// All registered map names for dimension m (for CLIs and sweeps).
+pub fn map_names(m: u32) -> Vec<String> {
+    match m {
+        2 => crate::maps::MAP2_NAMES.iter().map(|s| s.to_string()).collect(),
+        3 => crate::maps::MAP3_NAMES.iter().map(|s| s.to_string()).collect(),
+        4..=8 => vec!["bb".into(), "lambda-m".into()],
+        _ => Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::domain_volume;
+    use std::collections::HashSet;
+
+    #[test]
+    fn in_domain_m_matches_fixed_conventions() {
+        // m=2 inclusive triangle.
+        assert!(in_domain_m(4, 2, &BlockM::from_slice(&[3, 3])));
+        assert!(!in_domain_m(4, 2, &BlockM::from_slice(&[3, 1])));
+        assert!(!in_domain_m(4, 2, &BlockM::from_slice(&[0, 4])));
+        // m=3 simplex, agreeing with maps::in_domain.
+        for x in 0..5u64 {
+            for y in 0..5u64 {
+                for z in 0..5u64 {
+                    assert_eq!(
+                        in_domain_m(4, 3, &BlockM::from_slice(&[x, y, z])),
+                        crate::maps::in_domain(4, 3, [x, y, z])
+                    );
+                }
+            }
+        }
+        // m=5 simplex.
+        assert!(in_domain_m(3, 5, &BlockM::from_slice(&[1, 0, 1, 0, 0])));
+        assert!(!in_domain_m(3, 5, &BlockM::from_slice(&[1, 1, 1, 0, 0])));
+    }
+
+    #[test]
+    fn adapter_preserves_lambda2_partition() {
+        let map = map_by_name(2, "lambda2").unwrap();
+        assert_eq!(map.m(), 2);
+        assert_eq!(map.name(), "lambda2");
+        let nb = 16u64;
+        assert!(map.supports(nb));
+        let mut seen = HashSet::new();
+        for pass in 0..map.passes(nb) {
+            for w in map.grid(nb, pass).iter() {
+                let d = map.map_block(nb, pass, &w).expect("λ2 has no filler");
+                assert!(in_domain_m(nb, 2, &d));
+                assert!(seen.insert(d));
+            }
+        }
+        assert_eq!(seen.len() as u128, domain_volume(nb, 2));
+    }
+
+    #[test]
+    fn adapter_preserves_lambda3_images() {
+        let fixed = crate::maps::map3_by_name("lambda3").unwrap();
+        let dynamic = map_by_name(3, "lambda3").unwrap();
+        let nb = 8u64;
+        for w in fixed.grid(nb, 0).iter() {
+            let a = fixed.map_block(nb, 0, w);
+            let b = dynamic.map_block(nb, 0, &BlockM::from_fixed3(w, 3));
+            assert_eq!(a.map(|d| BlockM::from_fixed3(d, 3)), b, "{w:?}");
+        }
+        assert_eq!(fixed.parallel_volume(nb), dynamic.parallel_volume(nb));
+    }
+
+    #[test]
+    fn bounding_box_m_partitions_with_eq4_waste() {
+        for m in [4u32, 5] {
+            let map = BoundingBoxM::new(m);
+            let nb = 5u64;
+            let mut seen = HashSet::new();
+            let mut filler = 0u128;
+            for w in map.grid(nb, 0).iter() {
+                match map.map_block(nb, 0, &w) {
+                    None => filler += 1,
+                    Some(d) => {
+                        assert!(in_domain_m(nb, m, &d));
+                        assert!(seen.insert(d));
+                    }
+                }
+            }
+            assert_eq!(seen.len() as u128, domain_volume(nb, m), "m={m}");
+            assert_eq!(
+                filler,
+                (nb as u128).pow(m) - domain_volume(nb, m),
+                "m={m}"
+            );
+        }
+    }
+
+    #[test]
+    fn registry_resolves_per_dimension() {
+        assert!(map_by_name(2, "ries").is_some());
+        assert!(map_by_name(3, "lambda3-rec").is_some());
+        assert!(map_by_name(4, "bb").is_some());
+        assert!(map_by_name(4, "lambda-m").is_some());
+        assert!(map_by_name(5, "lambda-m-b32").is_some());
+        assert!(map_by_name(4, "lambda3").is_none());
+        assert!(map_by_name(9, "bb").is_none());
+        assert!(map_by_name(4, "lambda-m-b999999").is_none());
+        for m in 2..=8u32 {
+            for name in map_names(m) {
+                let map = map_by_name(m, &name).unwrap_or_else(|| panic!("{m} {name}"));
+                assert_eq!(map.m(), m, "{name}");
+            }
+        }
+    }
+}

@@ -24,6 +24,11 @@
 //! Every map here is validated by exhaustive coverage tests: the images
 //! of all valid parallel blocks partition the block domain exactly
 //! (λ2, λ3, RB, ENUM) or cover it with the predicted waste (BB).
+//!
+//! Dimensions above 3 live in [`mdim`] (the dynamic-coordinate
+//! [`MThreadMap`] trait, into which these fixed maps adapt unchanged)
+//! and [`lambda_m`] (the executable §III.D recursive map); the
+//! all-dimensions registry is [`map_by_name`].
 
 pub mod avril;
 pub mod bounding_box;
@@ -31,6 +36,8 @@ pub mod enumeration;
 pub mod lambda2;
 pub mod lambda3;
 pub mod lambda3_recursive;
+pub mod lambda_m;
+pub mod mdim;
 pub mod nonpow2;
 pub mod rectangular_box;
 pub mod ries;
@@ -43,6 +50,11 @@ pub use enumeration::{Enum2Map, Enum3Map};
 pub use lambda2::Lambda2Map;
 pub use lambda3::Lambda3Map;
 pub use lambda3_recursive::Lambda3RecMap;
+pub use lambda_m::LambdaMMap;
+pub use mdim::{
+    alpha_m, in_domain_m, map_by_name, map_names, space_efficiency_m, BoundingBoxM,
+    FixedAdapter, MThreadMap,
+};
 pub use nonpow2::{CoverFromAbove, CoverFromBelow2};
 pub use rectangular_box::RectangularBoxMap;
 pub use ries::RiesMap;
@@ -107,31 +119,36 @@ pub fn in_domain(nb: u64, m: u32, d: [u64; 3]) -> bool {
     }
 }
 
-/// Registry: construct a 2-simplex map by name.
-pub fn map2_by_name(name: &str) -> Option<Box<dyn ThreadMap>> {
-    match name {
-        "bb" | "bounding-box" => Some(Box::new(BoundingBox2)),
-        "lambda2" | "lambda" => Some(Box::new(Lambda2Map)),
-        "enum2" | "enum" => Some(Box::new(Enum2Map)),
-        "rb" | "rectangular-box" => Some(Box::new(RectangularBoxMap)),
-        "ries" | "rec" => Some(Box::new(RiesMap)),
-        "avril" => Some(Box::new(AvrilMap)),
-        // §III.A non-power-of-two approaches (1: from above, 2: from below).
-        "above2" | "from-above" => Some(Box::new(CoverFromAbove::new(Lambda2Map))),
-        "below2" | "from-below" => Some(Box::new(CoverFromBelow2)),
+/// The single fixed-m registry table (m ∈ {2, 3}); the general-m entry
+/// point is [`map_by_name`], which adapts these rows unchanged and adds
+/// the m ≥ 4 natives (λ_m, BB_m).
+pub fn fixed_map_by_name(m: u32, name: &str) -> Option<Box<dyn ThreadMap>> {
+    match (m, name) {
+        (2, "bb" | "bounding-box") => Some(Box::new(BoundingBox2)),
+        (2, "lambda2" | "lambda") => Some(Box::new(Lambda2Map)),
+        (2, "enum2" | "enum") => Some(Box::new(Enum2Map)),
+        (2, "rb" | "rectangular-box") => Some(Box::new(RectangularBoxMap)),
+        (2, "ries" | "rec") => Some(Box::new(RiesMap)),
+        (2, "avril") => Some(Box::new(AvrilMap)),
+        // §III.A non-power-of-two approaches (1: from above, 2: below).
+        (2, "above2" | "from-above") => Some(Box::new(CoverFromAbove::new(Lambda2Map))),
+        (2, "below2" | "from-below") => Some(Box::new(CoverFromBelow2)),
+        (3, "bb" | "bounding-box") => Some(Box::new(BoundingBox3)),
+        (3, "lambda3" | "lambda") => Some(Box::new(Lambda3Map)),
+        (3, "enum3" | "enum") => Some(Box::new(Enum3Map)),
+        (3, "lambda3-rec" | "rec3") => Some(Box::new(Lambda3RecMap)),
         _ => None,
     }
 }
 
-/// Registry: construct a 3-simplex map by name.
+/// Registry: construct a 2-simplex map by name (thin wrapper).
+pub fn map2_by_name(name: &str) -> Option<Box<dyn ThreadMap>> {
+    fixed_map_by_name(2, name)
+}
+
+/// Registry: construct a 3-simplex map by name (thin wrapper).
 pub fn map3_by_name(name: &str) -> Option<Box<dyn ThreadMap>> {
-    match name {
-        "bb" | "bounding-box" => Some(Box::new(BoundingBox3)),
-        "lambda3" | "lambda" => Some(Box::new(Lambda3Map)),
-        "enum3" | "enum" => Some(Box::new(Enum3Map)),
-        "lambda3-rec" | "rec3" => Some(Box::new(Lambda3RecMap)),
-        _ => None,
-    }
+    fixed_map_by_name(3, name)
 }
 
 /// All registered 2-simplex map names (for CLIs and sweeps).
@@ -155,6 +172,14 @@ mod tests {
             assert_eq!(m.m(), 3);
         }
         assert!(map2_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn fixed_registry_is_dimension_scoped() {
+        assert!(fixed_map_by_name(2, "lambda2").is_some());
+        assert!(fixed_map_by_name(3, "lambda2").is_none());
+        assert!(fixed_map_by_name(2, "lambda3").is_none());
+        assert!(fixed_map_by_name(4, "bb").is_none(), "m ≥ 4 is mdim's job");
     }
 
     #[test]

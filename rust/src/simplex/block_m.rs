@@ -1,0 +1,266 @@
+//! Dynamic-dimension block coordinates and orthotopes for the
+//! general-m subsystem (§III.D made executable).
+//!
+//! The fixed `[u64; 3]` types in [`crate::simplex::Orthotope`] and the
+//! [`crate::maps::ThreadMap`] trait cap the system at m = 3. [`BlockM`]
+//! is a SmallVec-style fixed-capacity coordinate (inline `[u64; M_MAX]`
+//! plus a length — `Copy`, no allocation, cheap to pass through the
+//! launcher hot path), and [`OrthotopeM`] is its axis-aligned orthotope
+//! with the same volume/linearization/iteration API as the fixed-m
+//! `Orthotope`. Together they carry the m-dimensional parallel spaces
+//! of `λ_m` and the m-simplex block domains of the k-tuple workloads.
+
+/// Hard cap on the executable dimension. The paper's general-m analysis
+/// runs to m = 10 and beyond, but executable grids above m = 8 overflow
+/// u64 linear indices at any interesting size, so the subsystem stops
+/// there.
+pub const M_MAX: usize = 8;
+
+/// An m-dimensional block coordinate, 1 ≤ m ≤ [`M_MAX`].
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct BlockM {
+    len: u8,
+    xs: [u64; M_MAX],
+}
+
+impl BlockM {
+    /// The zero coordinate of dimension m.
+    pub fn zeros(m: u32) -> BlockM {
+        assert!(m >= 1 && m as usize <= M_MAX, "m={m} out of 1..={M_MAX}");
+        BlockM {
+            len: m as u8,
+            xs: [0; M_MAX],
+        }
+    }
+
+    /// Build from a slice (length = dimension).
+    pub fn from_slice(xs: &[u64]) -> BlockM {
+        let mut b = BlockM::zeros(xs.len() as u32);
+        b.xs[..xs.len()].copy_from_slice(xs);
+        b
+    }
+
+    /// Dimensionality m.
+    #[inline]
+    pub fn m(&self) -> u32 {
+        self.len as u32
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u64] {
+        &self.xs[..self.len as usize]
+    }
+
+    /// Coordinate sum `Σ x_i` (the simplex membership quantity).
+    #[inline]
+    pub fn sum(&self) -> u64 {
+        self.as_slice().iter().sum()
+    }
+
+    /// Widen a fixed `[u64; 3]` coordinate (m ≤ 3 legacy maps).
+    #[inline]
+    pub fn from_fixed3(p: [u64; 3], m: u32) -> BlockM {
+        debug_assert!((1..=3).contains(&m));
+        let mut b = BlockM::zeros(m);
+        b.xs[..m as usize].copy_from_slice(&p[..m as usize]);
+        b
+    }
+
+    /// Narrow to `[u64; 3]`, zero-padded (requires m ≤ 3).
+    #[inline]
+    pub fn to_fixed3(&self) -> [u64; 3] {
+        debug_assert!(self.len <= 3);
+        let mut p = [0u64; 3];
+        p[..self.len as usize].copy_from_slice(self.as_slice());
+        p
+    }
+}
+
+impl std::ops::Index<usize> for BlockM {
+    type Output = u64;
+    #[inline]
+    fn index(&self, i: usize) -> &u64 {
+        &self.as_slice()[i]
+    }
+}
+
+impl std::ops::IndexMut<usize> for BlockM {
+    #[inline]
+    fn index_mut(&mut self, i: usize) -> &mut u64 {
+        &mut self.xs[..self.len as usize][i]
+    }
+}
+
+/// An axis-aligned discrete orthotope `[0, d_0) × … × [0, d_{m-1})` of
+/// dynamic dimension — the shape of one `λ_m` launch pass.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct OrthotopeM {
+    pub dims: BlockM,
+}
+
+impl OrthotopeM {
+    pub fn new(dims: &[u64]) -> OrthotopeM {
+        OrthotopeM {
+            dims: BlockM::from_slice(dims),
+        }
+    }
+
+    #[inline]
+    pub fn m(&self) -> u32 {
+        self.dims.m()
+    }
+
+    /// Total number of cells (blocks, when used as a grid).
+    pub fn volume(&self) -> u128 {
+        self.dims.as_slice().iter().map(|&d| d as u128).product()
+    }
+
+    #[inline]
+    pub fn contains(&self, p: &BlockM) -> bool {
+        p.m() == self.m()
+            && p.as_slice()
+                .iter()
+                .zip(self.dims.as_slice())
+                .all(|(&x, &d)| x < d)
+    }
+
+    /// Linearize a cell coordinate (axis 0 fastest). The volume must
+    /// fit u64 — map constructors guard this via `supports`.
+    #[inline]
+    pub fn linear_of(&self, p: &BlockM) -> u64 {
+        debug_assert!(self.contains(p));
+        let dims = self.dims.as_slice();
+        let mut idx = 0u64;
+        for i in (0..dims.len()).rev() {
+            idx = idx * dims[i] + p[i];
+        }
+        idx
+    }
+
+    /// Inverse of [`OrthotopeM::linear_of`].
+    #[inline]
+    pub fn of_linear(&self, mut idx: u64) -> BlockM {
+        let m = self.m();
+        let mut p = BlockM::zeros(m);
+        for i in 0..m as usize {
+            let d = self.dims[i];
+            p[i] = idx % d;
+            idx /= d;
+        }
+        p
+    }
+
+    /// Iterate all cells (axis 0 fastest), matching `linear_of` order.
+    pub fn iter(&self) -> OrthotopeMIter {
+        OrthotopeMIter {
+            shape: *self,
+            next: Some(BlockM::zeros(self.m())),
+        }
+    }
+}
+
+/// Odometer iterator over an [`OrthotopeM`].
+pub struct OrthotopeMIter {
+    shape: OrthotopeM,
+    next: Option<BlockM>,
+}
+
+impl Iterator for OrthotopeMIter {
+    type Item = BlockM;
+
+    fn next(&mut self) -> Option<BlockM> {
+        if self.shape.volume() == 0 {
+            return None;
+        }
+        let cur = self.next?;
+        let mut succ = cur;
+        let mut i = 0usize;
+        loop {
+            if i == succ.m() as usize {
+                self.next = None;
+                break;
+            }
+            succ[i] += 1;
+            if succ[i] < self.shape.dims[i] {
+                self.next = Some(succ);
+                break;
+            }
+            succ[i] = 0;
+            i += 1;
+        }
+        Some(cur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blockm_roundtrips_and_sums() {
+        let b = BlockM::from_slice(&[3, 1, 4, 1, 5]);
+        assert_eq!(b.m(), 5);
+        assert_eq!(b.sum(), 14);
+        assert_eq!(b[2], 4);
+        assert_eq!(b.as_slice(), &[3, 1, 4, 1, 5]);
+        let mut c = b;
+        c[0] = 9;
+        assert_eq!(c.as_slice(), &[9, 1, 4, 1, 5]);
+        assert_eq!(b[0], 3, "BlockM is a value type");
+    }
+
+    #[test]
+    fn fixed3_conversions() {
+        let b = BlockM::from_fixed3([7, 2, 0], 2);
+        assert_eq!(b.m(), 2);
+        assert_eq!(b.as_slice(), &[7, 2]);
+        assert_eq!(b.to_fixed3(), [7, 2, 0]);
+        let t = BlockM::from_fixed3([1, 2, 3], 3);
+        assert_eq!(t.to_fixed3(), [1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of 1..=")]
+    fn dimension_above_cap_rejected() {
+        BlockM::zeros(M_MAX as u32 + 1);
+    }
+
+    #[test]
+    fn orthotope_m_volume_and_contains() {
+        let o = OrthotopeM::new(&[4, 3, 2, 2]);
+        assert_eq!(o.m(), 4);
+        assert_eq!(o.volume(), 48);
+        assert!(o.contains(&BlockM::from_slice(&[3, 2, 1, 1])));
+        assert!(!o.contains(&BlockM::from_slice(&[4, 0, 0, 0])));
+        assert!(!o.contains(&BlockM::from_slice(&[0, 0, 0])), "wrong m");
+    }
+
+    #[test]
+    fn linearization_roundtrip_matches_iteration_order() {
+        let o = OrthotopeM::new(&[3, 2, 4, 2]);
+        let mut count = 0u64;
+        for (i, p) in o.iter().enumerate() {
+            assert_eq!(o.linear_of(&p), i as u64);
+            assert_eq!(o.of_linear(i as u64), p);
+            count += 1;
+        }
+        assert_eq!(count as u128, o.volume());
+    }
+
+    #[test]
+    fn iteration_agrees_with_fixed_orthotope() {
+        // Same cell order as Orthotope::iter (x fastest) for m = 3.
+        let fixed = crate::simplex::Orthotope::d3(3, 4, 2);
+        let dynamic = OrthotopeM::new(&[3, 4, 2]);
+        let a: Vec<[u64; 3]> = fixed.iter().collect();
+        let b: Vec<[u64; 3]> = dynamic.iter().map(|p| p.to_fixed3()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_orthotope_iterates_nothing() {
+        let o = OrthotopeM::new(&[3, 0, 2]);
+        assert_eq!(o.iter().count(), 0);
+        assert_eq!(o.volume(), 0);
+    }
+}

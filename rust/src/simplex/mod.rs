@@ -2,11 +2,13 @@
 //! membership/enumeration (eq. 1), orthotope parallel spaces, and the
 //! recursive orthotope sets `S_n^m` of eq. 25-29.
 
+pub mod block_m;
 pub mod orthotope;
 pub mod point;
 pub mod recursive_set;
 pub mod volume;
 
+pub use block_m::{BlockM, OrthotopeM, M_MAX};
 pub use orthotope::Orthotope;
 pub use point::{PointM, Simplex};
 pub use volume::{simplex_volume, simplex_volume_bruteforce};

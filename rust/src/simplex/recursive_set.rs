@@ -135,6 +135,62 @@ impl GeneralSetParams {
         self.volume(n as f64) >= crate::simplex::volume::simplex_volume_f64(n - 1, self.m)
     }
 
+    /// Integer discretization of the level geometry (the executable
+    /// side of §III.D, used by `maps::lambda_m`): level `i` holds
+    /// `β^i` orthotopes of side `round(r^{i+1} n)`, zero sides dropped
+    /// (sides decrease, so the first zero ends the recursion). Requires
+    /// integer β; returns `None` when a level count overflows u128.
+    pub fn level_plan(&self, n: u64) -> Option<LevelPlan> {
+        assert!(n >= 2, "level plan needs n ≥ 2, got {n}");
+        assert!(
+            self.beta.fract() == 0.0 && self.beta >= 1.0,
+            "executable plans need integer β, got {}",
+            self.beta
+        );
+        let beta = self.beta as u128;
+        let levels = ((n as f64).ln() / (1.0 / self.r).ln()).ceil() as u32;
+        let mut sides = Vec::new();
+        let mut counts = Vec::new();
+        let mut size = self.r * n as f64;
+        let mut count = 1u128;
+        for _ in 0..levels {
+            let s = (size + 0.5).floor() as u64; // round half up
+            if s == 0 {
+                break;
+            }
+            sides.push(s);
+            counts.push(count);
+            size *= self.r;
+            count = count.checked_mul(beta)?;
+        }
+        Some(LevelPlan {
+            m: self.m,
+            sides,
+            counts,
+        })
+    }
+
+    /// Total integer volume of the discretized set, or None on overflow.
+    pub fn discrete_volume(&self, n: u64) -> Option<u128> {
+        self.level_plan(n).and_then(|p| p.volume())
+    }
+
+    /// Whether the *discretized* set covers the inclusive block domain
+    /// `Δ_n^m` (the executable coverage condition; the real-valued
+    /// `covers` compares against `Δ_{n-1}` per the paper's text).
+    pub fn discrete_covers(&self, n: u64) -> bool {
+        match self.discrete_volume(n) {
+            Some(v) => v >= simplex_volume(n, self.m),
+            None => false,
+        }
+    }
+
+    /// Smallest discretely-covered size in `[lo, hi]`. Keep `hi` ≤ 4096
+    /// so u128 simplex volumes cannot overflow at m ≤ 8.
+    pub fn first_covered(&self, lo: u64, hi: u64) -> Option<u64> {
+        (lo.max(2)..=hi).find(|&n| self.discrete_covers(n))
+    }
+
     /// `n_0 = min { n : covers for all n' ∈ [n, horizon] }`, scanning a
     /// doubling grid up to `horizon`. Returns None if never covered.
     pub fn n0(&self, horizon: u64) -> Option<u64> {
@@ -151,6 +207,37 @@ impl GeneralSetParams {
             n = n.saturating_mul(2);
         }
         n0
+    }
+}
+
+/// The integer-side geometry of one discretized recursive set: level
+/// `i` launches `counts[i]` orthotopes of side `sides[i]` (in blocks).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LevelPlan {
+    pub m: u32,
+    pub sides: Vec<u64>,
+    pub counts: Vec<u128>,
+}
+
+impl LevelPlan {
+    pub fn levels(&self) -> usize {
+        self.sides.len()
+    }
+
+    /// Volume of level `i`: `counts[i] · sides[i]^m`, None on overflow.
+    pub fn level_volume(&self, i: usize) -> Option<u128> {
+        (self.sides[i] as u128)
+            .checked_pow(self.m)
+            .and_then(|c| c.checked_mul(self.counts[i]))
+    }
+
+    /// Total volume over all levels, None on overflow.
+    pub fn volume(&self) -> Option<u128> {
+        let mut total = 0u128;
+        for i in 0..self.levels() {
+            total = total.checked_add(self.level_volume(i)?)?;
+        }
+        Some(total)
     }
 }
 
@@ -356,5 +443,70 @@ mod tests {
     #[should_panic(expected = "n = 2^k")]
     fn non_pow2_rejected() {
         recursive_volume_half(12, 2, 2);
+    }
+
+    #[test]
+    fn level_plan_m4_beta2_matches_cross_check() {
+        // Python cross-check: m=4 β=2 n=28 → sides [13,6,3,1,1],
+        // counts 2^i, total volume 31501 (vs V(Δ_28^4) = 31465).
+        let p = GeneralSetParams::for_paper(4, 2.0);
+        let plan = p.level_plan(28).unwrap();
+        assert_eq!(plan.sides, vec![13, 6, 3, 1, 1]);
+        assert_eq!(plan.counts, vec![1, 2, 4, 8, 16]);
+        assert_eq!(plan.volume(), Some(31501));
+        assert_eq!(p.discrete_volume(28), Some(31501));
+        assert_eq!(simplex_volume(28, 4), 31465);
+    }
+
+    #[test]
+    fn level_plan_m5_beta32_matches_cross_check() {
+        // m=5 β=32 n=4 → sides [2,1], counts [1,32], volume 64 ≥ 56.
+        let p = GeneralSetParams::for_paper(5, 32.0);
+        let plan = p.level_plan(4).unwrap();
+        assert_eq!(plan.sides, vec![2, 1]);
+        assert_eq!(plan.counts, vec![1, 32]);
+        assert_eq!(plan.volume(), Some(64));
+        assert_eq!(simplex_volume(4, 5), 56);
+    }
+
+    #[test]
+    fn discrete_coverage_matches_cross_checked_sizes() {
+        // Covered sizes (python): m=4 β=2 → 28, 30, 37, 39, …;
+        // m=5 β=32 → 4, 9, 10, 11, 12, 17, ….
+        let p4 = GeneralSetParams::for_paper(4, 2.0);
+        for n in [28u64, 30, 37, 39, 41] {
+            assert!(p4.discrete_covers(n), "m=4 β=2 n={n}");
+        }
+        for n in [27u64, 29, 31, 36] {
+            assert!(!p4.discrete_covers(n), "m=4 β=2 n={n}");
+        }
+        assert_eq!(p4.first_covered(2, 300), Some(28));
+
+        let p5 = GeneralSetParams::for_paper(5, 32.0);
+        for n in [4u64, 9, 10, 11, 12, 17] {
+            assert!(p5.discrete_covers(n), "m=5 β=32 n={n}");
+        }
+        for n in [2u64, 3, 5, 8, 13] {
+            assert!(!p5.discrete_covers(n), "m=5 β=32 n={n}");
+        }
+        assert_eq!(p5.first_covered(2, 300), Some(4));
+    }
+
+    #[test]
+    fn discrete_volume_tracks_closed_form_at_scale() {
+        // Rounding noise vanishes as n grows: the integer plan volume
+        // is within 2% of eq. 27's real-valued closed form by n = 1024.
+        for (m, beta) in [(4u32, 2.0f64), (4, 4.0), (5, 16.0), (5, 32.0)] {
+            let p = GeneralSetParams::for_paper(m, beta);
+            for n in [1024u64, 4096] {
+                let discrete = p.discrete_volume(n).unwrap() as f64;
+                let closed = recursive_volume_closed_general(n as f64, m, p.r, beta);
+                let ratio = discrete / closed;
+                assert!(
+                    (ratio - 1.0).abs() < 0.02,
+                    "m={m} β={beta} n={n}: discrete/closed = {ratio}"
+                );
+            }
+        }
     }
 }

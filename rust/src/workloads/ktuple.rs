@@ -1,0 +1,277 @@
+//! Unique k-tuple interaction — the m-dimensional generalization of
+//! the triple workload: sum a softened all-pairs-within-tuple energy
+//! over all unique particle m-tuples `g_m < … < g_2 < g_1 < n`, an
+//! O(n^m) sweep whose domain is exactly the discrete orthogonal
+//! m-simplex. This is the workload that makes λ_m's ≈m! parallel-space
+//! advantage (§III.D) observable end to end.
+//!
+//! Block-level: data blocks arrive in simplex coordinates (the
+//! [`crate::maps::MThreadMap`] output); [`KTupleWorkload::block_chunks`]
+//! converts them to the ordered chunk tuple `c_1 ≥ c_2 ≥ … ≥ c_m` by
+//! prefix sums — the same bijection the triple workload uses at m = 3.
+//! Blocks with strictly decreasing chunks are full ρ^m tiles; repeated
+//! chunks predicate per-thread (the o(n^m) diagonal charge).
+
+use crate::simplex::block_m::BlockM;
+use crate::util::prng::Xoshiro256;
+
+/// Plummer-style softening of the pairwise-distance denominator.
+pub const EPS: f32 = 1e-3;
+
+pub struct KTupleWorkload {
+    /// Flat positions, n × 3 (particles live in 3-space; the *tuple*
+    /// arity m is what scales, not the embedding dimension).
+    pub pos: Vec<f32>,
+    pub n: u64,
+    pub rho: u32,
+    pub m: u32,
+}
+
+impl KTupleWorkload {
+    pub fn generate(nb: u64, rho: u32, m: u32, seed: u64) -> KTupleWorkload {
+        assert!(m >= 2, "tuples need arity ≥ 2");
+        let n = nb * rho as u64;
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x517A ^ ((m as u64) << 32));
+        let pos = (0..n * 3).map(|_| rng.gen_normal() as f32).collect();
+        KTupleWorkload { pos, n, rho, m }
+    }
+
+    pub fn chunk(&self, c: u64) -> &[f32] {
+        let lo = c as usize * self.rho as usize * 3;
+        &self.pos[lo..lo + self.rho as usize * 3]
+    }
+
+    /// Convert a simplex-coordinate data block to the ordered chunk
+    /// tuple `c_1 ≥ c_2 ≥ … ≥ c_m` (descending): `c_{m-i}` is the
+    /// prefix sum `d_0 + … + d_i`, and `c_1 = nb - 1 - d_{m-1}` — the
+    /// m-dim generalization of the triple workload's block conversion,
+    /// a bijection from `Bm(nb)` onto ordered chunk tuples.
+    #[inline]
+    pub fn block_chunks(nb: u64, d: &BlockM) -> BlockM {
+        let m = d.m() as usize;
+        let mut c = BlockM::zeros(m as u32);
+        let mut prefix = 0u64;
+        for i in 0..m - 1 {
+            prefix += d[i];
+            c[m - 1 - i] = prefix;
+        }
+        c[0] = nb - 1 - d[m - 1];
+        debug_assert!((0..m - 1).all(|i| c[i] >= c[i + 1]) && c[0] < nb);
+        c
+    }
+
+    /// Whether all chunks are strictly decreasing — i.e. the whole
+    /// ρ^m tile is inside the strict domain (no predication needed).
+    #[inline]
+    pub fn block_is_strict(chunks: &BlockM) -> bool {
+        let s = chunks.as_slice();
+        s.windows(2).all(|w| w[0] > w[1])
+    }
+
+    #[inline]
+    fn p(&self, idx: u64) -> [f32; 3] {
+        let i = idx as usize * 3;
+        [self.pos[i], self.pos[i + 1], self.pos[i + 2]]
+    }
+
+    /// Softened inverse-power energy of one m-tuple: with
+    /// `S = Σ_{a<b} |p_a - p_b|²` over the tuple's pairs,
+    /// `e = (S + ε)^{-3/2}` — permutation-invariant, singular only at
+    /// full coincidence, and O(m²) like the Axilrod–Teller triple term.
+    #[inline]
+    pub fn energy(&self, g: &[u64]) -> f64 {
+        let mut s = 0f32;
+        for a in 0..g.len() {
+            let pa = self.p(g[a]);
+            for b in a + 1..g.len() {
+                let pb = self.p(g[b]);
+                let d = [pa[0] - pb[0], pa[1] - pb[1], pa[2] - pb[2]];
+                s += d[0] * d[0] + d[1] * d[1] + d[2] * d[2];
+            }
+        }
+        1.0 / (s as f64 + EPS as f64).powf(1.5)
+    }
+
+    /// Pure-Rust tile: total energy over the valid m-tuples of one
+    /// chunk tuple — the full ρ^m sweep when strictly ordered, the
+    /// per-thread predicate `g_1 > g_2 > … > g_m` otherwise.
+    pub fn tile_rust(&self, chunks: &BlockM) -> f64 {
+        let m = self.m as usize;
+        debug_assert_eq!(chunks.m() as usize, m);
+        let rho = self.rho as u64;
+        let strict = Self::block_is_strict(chunks);
+        let mut local = [0u64; crate::simplex::block_m::M_MAX];
+        let mut g = [0u64; crate::simplex::block_m::M_MAX];
+        let mut e = 0f64;
+        'tile: loop {
+            for a in 0..m {
+                g[a] = chunks[a] * rho + local[a];
+            }
+            if strict || g[..m].windows(2).all(|w| w[0] > w[1]) {
+                e += self.energy(&g[..m]);
+            }
+            // Odometer over the ρ^m tile, axis 0 fastest.
+            let mut i = 0;
+            loop {
+                if i == m {
+                    break 'tile;
+                }
+                local[i] += 1;
+                if local[i] < rho {
+                    break;
+                }
+                local[i] = 0;
+                i += 1;
+            }
+        }
+        e
+    }
+
+    /// Brute-force reference: Σ over all `g_1 > g_2 > … > g_m`.
+    pub fn reference(&self) -> f64 {
+        let mut acc = 0f64;
+        let mut tuple = Vec::with_capacity(self.m as usize);
+        self.reference_rec(self.m, self.n, &mut tuple, &mut acc);
+        acc
+    }
+
+    fn reference_rec(&self, remaining: u32, max_excl: u64, tuple: &mut Vec<u64>, acc: &mut f64) {
+        if remaining == 0 {
+            *acc += self.energy(tuple);
+            return;
+        }
+        // Leave room for the (remaining - 1) strictly smaller indices.
+        for g in (remaining as u64 - 1..max_excl).rev() {
+            tuple.push(g);
+            self.reference_rec(remaining - 1, g, tuple, acc);
+            tuple.pop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::{domain_volume, in_domain_m};
+    use crate::simplex::block_m::OrthotopeM;
+
+    fn simplex_blocks(nb: u64, m: u32) -> Vec<BlockM> {
+        let dims = vec![nb; m as usize];
+        OrthotopeM::new(&dims)
+            .iter()
+            .filter(|d| in_domain_m(nb, m, d))
+            .collect()
+    }
+
+    #[test]
+    fn block_chunks_bijective_over_domain() {
+        for m in [3u32, 4, 5] {
+            let nb = 5u64;
+            let mut seen = std::collections::HashSet::new();
+            for d in simplex_blocks(nb, m) {
+                let c = KTupleWorkload::block_chunks(nb, &d);
+                assert!(c[0] < nb, "{d:?} → {c:?}");
+                for w in c.as_slice().windows(2) {
+                    assert!(w[0] >= w[1], "{d:?} → {c:?} not descending");
+                }
+                assert!(seen.insert(c), "{d:?} duplicates {c:?}");
+            }
+            assert_eq!(seen.len() as u128, domain_volume(nb, m), "m={m}");
+        }
+    }
+
+    #[test]
+    fn block_chunks_agrees_with_triple_at_m3() {
+        let nb = 6u64;
+        for d in simplex_blocks(nb, 3) {
+            let c = KTupleWorkload::block_chunks(nb, &d);
+            let (ci, cj, ck) =
+                crate::workloads::TripleWorkload::block_chunks(nb, d.to_fixed3());
+            assert_eq!(c.as_slice(), &[ci, cj, ck], "{d:?}");
+        }
+    }
+
+    #[test]
+    fn energy_is_permutation_invariant() {
+        let w = KTupleWorkload::generate(1, 8, 4, 3);
+        let e1 = w.energy(&[6, 4, 2, 0]);
+        let e2 = w.energy(&[0, 2, 4, 6]);
+        let e3 = w.energy(&[4, 0, 6, 2]);
+        assert!((e1 - e2).abs() < 1e-12 * e1.abs().max(1.0));
+        assert!((e1 - e3).abs() < 1e-12 * e1.abs().max(1.0));
+    }
+
+    #[test]
+    fn block_sweep_matches_reference() {
+        // Sweeping every simplex block must reproduce the brute force
+        // over all C(n, m) unique tuples — m = 4 and m = 5.
+        for (m, nb, rho) in [(4u32, 4u64, 2u32), (5, 3, 2), (4, 3, 3)] {
+            let w = KTupleWorkload::generate(nb, rho, m, 7);
+            let mut total = 0f64;
+            for d in simplex_blocks(nb, m) {
+                let c = KTupleWorkload::block_chunks(nb, &d);
+                total += w.tile_rust(&c);
+            }
+            let want = w.reference();
+            assert!(
+                (total - want).abs() < 1e-9 * want.abs().max(1.0),
+                "m={m} nb={nb} ρ={rho}: {total} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn strict_block_detection() {
+        assert!(KTupleWorkload::block_is_strict(&BlockM::from_slice(&[
+            5, 3, 2, 0
+        ])));
+        assert!(!KTupleWorkload::block_is_strict(&BlockM::from_slice(&[
+            5, 3, 3, 0
+        ])));
+    }
+
+    #[test]
+    fn reference_visits_binomial_many_tuples() {
+        // With a counting "energy" stand-in: the recursion must visit
+        // exactly C(n, m) tuples. Verified through the domain identity
+        // |Bm(nb)| = C(nb+m-1, m) and the per-block predicate instead.
+        let m = 4u32;
+        let (nb, rho) = (3u64, 2u32);
+        let w = KTupleWorkload::generate(nb, rho, m, 1);
+        let mut tuples = 0u64;
+        for d in simplex_blocks(nb, m) {
+            let c = KTupleWorkload::block_chunks(nb, &d);
+            if KTupleWorkload::block_is_strict(&c) {
+                tuples += (rho as u64).pow(m);
+            } else {
+                // Count predicated survivors the slow way.
+                let rho64 = rho as u64;
+                let mut local = [0u64; 8];
+                let mut g = [0u64; 8];
+                let md = m as usize;
+                'tile: loop {
+                    for a in 0..md {
+                        g[a] = c[a] * rho64 + local[a];
+                    }
+                    if g[..md].windows(2).all(|p| p[0] > p[1]) {
+                        tuples += 1;
+                    }
+                    let mut i = 0;
+                    loop {
+                        if i == md {
+                            break 'tile;
+                        }
+                        local[i] += 1;
+                        if local[i] < rho64 {
+                            break;
+                        }
+                        local[i] = 0;
+                        i += 1;
+                    }
+                }
+            }
+        }
+        // C(6, 4) = 15.
+        assert_eq!(tuples, 15, "n={} m={m}", w.n);
+    }
+}

@@ -13,11 +13,14 @@
 //!
 //! Thread-level domains: EDM/collision/n-body consume unique pairs
 //! `col < row < n`; triple consumes unique triples `k < j < i < n`;
-//! cellular/trimatvec consume the inclusive triangle `col ≤ row`.
+//! cellular/trimatvec consume the inclusive triangle `col ≤ row`;
+//! ktuple consumes unique m-tuples `g_m < … < g_1 < n` (the general-m
+//! subsystem's workload, any 2 ≤ m ≤ 8).
 
 pub mod cellular;
 pub mod collision;
 pub mod edm;
+pub mod ktuple;
 pub mod nbody;
 pub mod triple;
 pub mod trimat;
@@ -25,6 +28,7 @@ pub mod trimat;
 pub use cellular::CellularWorkload;
 pub use collision::CollisionWorkload;
 pub use edm::EdmWorkload;
+pub use ktuple::KTupleWorkload;
 pub use nbody::NBodyWorkload;
 pub use triple::TripleWorkload;
 pub use trimat::TriMatVecWorkload;

@@ -7,9 +7,10 @@
 //! - λ3: `Tet(nb)/((nb/2)²(3nb/4+3))` → 8/9 (eq. 24's 12.5% slack).
 
 use simplexmap::maps::{
-    alpha, map2_by_name, map3_by_name, space_efficiency, BoundingBox2, BoundingBox3,
-    Lambda2Map, Lambda3Map,
+    alpha, alpha_m, map2_by_name, map3_by_name, space_efficiency, space_efficiency_m,
+    BoundingBox2, BoundingBox3, BoundingBoxM, Lambda2Map, Lambda3Map, LambdaMMap,
 };
+use simplexmap::simplex::volume::factorial;
 
 const SIZES: [u64; 4] = [8, 64, 512, 4096];
 
@@ -104,5 +105,85 @@ fn enum3_and_lambda3_rec_efficiency_bounded() {
             let e = space_efficiency(map.as_ref(), nb);
             assert!(e > 0.5 && e <= 1.0, "{name} nb={nb}: eff={e}");
         }
+    }
+}
+
+// ---- the general-m asymptote rows (§III.D / gensearch, E13) ----------
+
+#[test]
+fn bb_m_efficiency_tends_to_inverse_m_factorial() {
+    // eq. 4: BB waste → m! − 1, i.e. efficiency → 1/m!. At nb = 4096
+    // the finite form C(nb+m-1, m)/nb^m is within 1% of the limit.
+    for m in 4..=6u32 {
+        let bb = BoundingBoxM::new(m);
+        let e = space_efficiency_m(&bb, 4096);
+        let limit = 1.0 / factorial(m) as f64;
+        assert!(
+            (e / limit - 1.0).abs() < 0.01,
+            "m={m}: eff={e} vs 1/m!={limit}"
+        );
+        // And each size is strictly closer to the limit than the last.
+        let closer = space_efficiency_m(&bb, 512);
+        assert!((e - limit).abs() < (closer - limit).abs(), "m={m}");
+    }
+}
+
+#[test]
+fn lambda_m_waste_tends_to_gensearch_limit() {
+    // The executable λ_m's measured waste approaches the gensearch
+    // asymptote β/(m!-β) (python cross-check: 0.0902 vs 0.0909 for
+    // m=4 β=2; 0.3611 vs 0.3636 for m=5 β=32 — all at nb = 4096).
+    for (m, beta) in [(4u32, 2u32), (4, 4), (5, 16), (5, 32)] {
+        let map = LambdaMMap::for_paper(m, beta);
+        assert!(map.covered(4096), "m={m} β={beta}");
+        let waste = alpha_m(&map, 4096);
+        let limit = beta as f64 / (factorial(m) as f64 - beta as f64);
+        assert!(
+            (waste - limit).abs() < 0.01,
+            "m={m} β={beta}: waste={waste} vs limit={limit}"
+        );
+    }
+}
+
+#[test]
+fn lambda_m_improvement_over_bb_approaches_m_factorial() {
+    // The paper's §III.D headline: the recursive parallel space is
+    // practically m! times more efficient than the bounding box (up to
+    // the β/(m!-β) slack): eff ratio at 4096 ≈ m!/(1 + waste_limit).
+    for (m, beta) in [(4u32, 2u32), (5, 16)] {
+        let map = LambdaMMap::for_paper(m, beta);
+        let bb = BoundingBoxM::new(m);
+        let nb = 4096u64;
+        let ratio = space_efficiency_m(&map, nb) / space_efficiency_m(&bb, nb);
+        let limit = beta as f64 / (factorial(m) as f64 - beta as f64);
+        let expect = factorial(m) as f64 / (1.0 + limit);
+        assert!(
+            (ratio / expect - 1.0).abs() < 0.02,
+            "m={m} β={beta}: ratio={ratio} vs m!/(1+waste)={expect}"
+        );
+        assert!(ratio > 3.0, "m={m}: the acceptance floor");
+    }
+}
+
+#[test]
+fn gensearch_rows_agree_with_the_asymptote_table() {
+    // The E9 rows' efficiency_vs_bb column is exactly m! − β under the
+    // paper parametrization — the m!-vs-BB asymptote rows.
+    let rows = simplexmap::gensearch::search((4, 7), &[2.0, 8.0, 32.0], 1 << 40);
+    for r in &rows {
+        let expect = factorial(r.m) as f64 - r.beta;
+        assert!(
+            (r.efficiency_vs_bb - expect).abs() < 1e-6 * expect,
+            "m={} β={}: {} vs {expect}",
+            r.m,
+            r.beta,
+            r.efficiency_vs_bb
+        );
+    }
+    // And the executable n0 (n0_exec) exists whenever n0 does, at or
+    // below the horizon-capped real-valued n0 … or earlier, because
+    // integer rounding over-covers small sizes.
+    for r in rows.iter().filter(|r| r.m <= 5) {
+        assert!(r.n0_exec.is_some(), "m={} β={}", r.m, r.beta);
     }
 }

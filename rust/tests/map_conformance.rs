@@ -6,7 +6,9 @@
 //! equals the map's closed-form predicted waste.
 //!
 //! Sweep bounds: all `nb ≤ 64` for m=2 maps, all `nb ≤ 32` for m=3
-//! maps (each map restricted to the sizes its `supports()` accepts).
+//! maps (each map restricted to the sizes its `supports()` accepts);
+//! the general-m section sweeps λ_m and BB_m at m ∈ {4, 5, 6} over the
+//! first covered sizes of the gensearch level plans (E13).
 //! This subsumes the per-map unit tests (which spot-check a few sizes)
 //! and is the validation methodology of the follow-up papers: full
 //! domain coverage before any benchmarking.
@@ -26,8 +28,10 @@
 use std::collections::HashSet;
 
 use simplexmap::maps::{
-    domain_volume, in_domain, map2_by_name, map3_by_name, ThreadMap, MAP2_NAMES, MAP3_NAMES,
+    domain_volume, in_domain, in_domain_m, map2_by_name, map3_by_name, map_by_name,
+    LambdaMMap, MThreadMap, ThreadMap, MAP2_NAMES, MAP3_NAMES,
 };
+use simplexmap::simplex::recursive_set::GeneralSetParams;
 use simplexmap::simplex::volume::{next_pow2, simplex_volume, triangular};
 
 const NB_MAX_M2: u64 = 64;
@@ -255,6 +259,176 @@ fn enum3_padding_is_less_than_one_layer() {
             "enum3 nb={nb}: padding {} ≥ one base layer {base}",
             c.filler
         );
+    }
+}
+
+// ---- m ≥ 4: λ_m and the m-dim bounding box (E13) ---------------------
+
+/// Full-sweep accounting of a dynamic-m map at one size.
+struct CoverageM {
+    covered: u128,
+    dups: u64,
+    escaped: u64,
+    filler: u128,
+    parallel: u128,
+}
+
+fn sweep_m(map: &dyn MThreadMap, nb: u64) -> CoverageM {
+    let mut images = HashSet::new();
+    let mut dups = 0u64;
+    let mut escaped = 0u64;
+    let mut filler = 0u128;
+    let mut parallel = 0u128;
+    for pass in 0..map.passes(nb) {
+        for w in map.grid(nb, pass).iter() {
+            parallel += 1;
+            match map.map_block(nb, pass, &w) {
+                None => filler += 1,
+                Some(d) => {
+                    if !in_domain_m(nb, map.m(), &d) {
+                        escaped += 1;
+                    } else if !images.insert(d) {
+                        dups += 1;
+                    }
+                }
+            }
+        }
+    }
+    CoverageM {
+        covered: images.len() as u128,
+        dups,
+        escaped,
+        filler,
+        parallel,
+    }
+}
+
+fn assert_partitions_m(name: &str, map: &dyn MThreadMap, nb: u64, c: &CoverageM) {
+    let domain = domain_volume(nb, map.m());
+    assert_eq!(c.dups, 0, "{name} nb={nb}: duplicate images");
+    assert_eq!(c.escaped, 0, "{name} nb={nb}: images escape the domain");
+    assert_eq!(
+        c.covered, domain,
+        "{name} nb={nb}: covered {} of {domain} blocks",
+        c.covered
+    );
+    assert_eq!(
+        c.parallel,
+        map.parallel_volume(nb),
+        "{name} nb={nb}: grid iteration disagrees with parallel_volume"
+    );
+}
+
+/// λ_m partitions `Bm(N)` exactly at its first covered sizes, and the
+/// measured filler equals the gensearch level plan's closed-form waste
+/// `V(plan) − V(Δ)` — python-cross-checked: m=4 β=2 covers {28, 30, …}
+/// with plans 31501/41356; m=5 β=32 covers {4, 9, 10, …}.
+#[test]
+fn lambda_m_partitions_bm_exactly_at_covered_sizes() {
+    for (m, beta, sizes) in [
+        (4u32, 2u32, vec![28u64, 30]),
+        (5, 32, vec![4, 9, 10]),
+    ] {
+        let map = LambdaMMap::for_paper(m, beta);
+        let params = GeneralSetParams::for_paper(m, beta as f64);
+        assert_eq!(
+            params.first_covered(2, 4096),
+            Some(sizes[0]),
+            "m={m} β={beta}: first covered size moved"
+        );
+        for nb in sizes {
+            assert!(map.covered(nb), "m={m} β={beta} nb={nb}");
+            let c = sweep_m(&map, nb);
+            assert_partitions_m("lambda-m", &map, nb, &c);
+            // Closed-form waste: the discretized eq. 25 volume minus
+            // the simplex, exactly.
+            let plan_volume = params.discrete_volume(nb).unwrap();
+            assert_eq!(c.parallel, plan_volume, "m={m} nb={nb}");
+            assert_eq!(
+                c.filler,
+                plan_volume - simplex_volume(nb, m),
+                "m={m} nb={nb}: filler ≠ plan − domain"
+            );
+        }
+    }
+}
+
+/// Cross-checked absolute numbers for the two headline sizes.
+#[test]
+fn lambda_m_waste_matches_python_cross_check() {
+    let m4 = LambdaMMap::for_paper(4, 2);
+    let c = sweep_m(&m4, 28);
+    assert_eq!((c.parallel, c.filler), (31501, 36));
+    let m5 = LambdaMMap::for_paper(5, 32);
+    let c = sweep_m(&m5, 9);
+    assert_eq!((c.parallel, c.filler), (1299, 12));
+}
+
+/// Below the first covered size λ_m falls back to §III.A's
+/// cover-from-above: exact partition at every nb ≥ 2, with the filler
+/// being the (larger) native plan minus the true domain.
+#[test]
+fn lambda_m_fallback_partitions_below_n0() {
+    for (m, beta, nbs) in [(4u32, 2u32, vec![8u64, 29]), (5, 32, vec![5u64])] {
+        let map = LambdaMMap::for_paper(m, beta);
+        for nb in nbs {
+            assert!(!map.covered(nb), "m={m} nb={nb} should need fallback");
+            let native = map.native_size(nb).unwrap();
+            assert!(native > nb);
+            let c = sweep_m(&map, nb);
+            assert_partitions_m("lambda-m (fallback)", &map, nb, &c);
+            let plan = GeneralSetParams::for_paper(m, beta as f64)
+                .discrete_volume(native)
+                .unwrap();
+            assert_eq!(c.filler, plan - simplex_volume(nb, m), "m={m} nb={nb}");
+        }
+    }
+}
+
+/// Acceptance: λ_m beats the m-dim bounding box by ≥ 3× in space
+/// efficiency at the first covered size for m=4 (measured ≈ 19.5×).
+#[test]
+fn lambda_m_exceeds_bb_efficiency_threefold_at_first_covered() {
+    use simplexmap::maps::{space_efficiency_m, BoundingBoxM};
+    let map = LambdaMMap::for_paper(4, 2);
+    let bb = BoundingBoxM::new(4);
+    let nb = 28u64;
+    let lam = space_efficiency_m(&map, nb);
+    let bbe = space_efficiency_m(&bb, nb);
+    assert!(lam / bbe >= 3.0, "λ_m {lam} vs BB {bbe}");
+    assert!((lam - 31465.0 / 31501.0).abs() < 1e-12);
+}
+
+/// The m-dim bounding box partitions with eq. 4's waste at every size.
+#[test]
+fn bb_m_partitions_with_eq4_filler() {
+    for m in [4u32, 5, 6] {
+        let map = map_by_name(m, "bb").unwrap();
+        for nb in [2u64, 3, 5] {
+            let c = sweep_m(map.as_ref(), nb);
+            assert_partitions_m("bb-m", map.as_ref(), nb, &c);
+            assert_eq!(
+                c.filler,
+                (nb as u128).pow(m) - simplex_volume(nb, m),
+                "m={m} nb={nb}"
+            );
+        }
+    }
+}
+
+/// Registered adapters reproduce the fixed-m partition guarantee: the
+/// unified registry's view of λ3 sweeps identically to the native one.
+#[test]
+fn adapted_lambda3_sweeps_like_the_fixed_map() {
+    let fixed = map3_by_name("lambda3").unwrap();
+    let adapted = map_by_name(3, "lambda3").unwrap();
+    for nb in [4u64, 8, 16] {
+        let cf = sweep(fixed.as_ref(), nb);
+        let ca = sweep_m(adapted.as_ref(), nb);
+        assert_eq!(cf.covered, ca.covered, "nb={nb}");
+        assert_eq!(cf.filler, ca.filler, "nb={nb}");
+        assert_eq!(cf.parallel, ca.parallel, "nb={nb}");
+        assert_eq!(cf.dups + cf.escaped + ca.dups + ca.escaped, 0);
     }
 }
 
