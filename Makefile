@@ -6,13 +6,16 @@
 # the real `xla` crate in place of runtime/xla_stub.rs (see DESIGN.md
 # §Substitutions) — without it the artifact-dependent suites skip.
 
-.PHONY: test build bench examples artifacts python-test clean
+.PHONY: test build bench lint examples artifacts python-test clean
 
 build:
 	cd rust && cargo build --release
 
 test:
 	cd rust && cargo build --release && cargo test -q
+
+lint:
+	cd rust && cargo clippy --all-targets -- -D warnings
 
 bench:
 	cd rust && cargo bench

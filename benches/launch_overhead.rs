@@ -1,59 +1,68 @@
 //! E5 / E12 — launch-count economics: single-pass λ maps vs the
 //! multi-pass related work, under the simulated per-launch latency and
 //! the 32-concurrent-kernel cap (§III.B's argument, eq. 20).
+//!
+//! This bench is the one place that *wants* the launch-latency model
+//! to cost real wall time, so it opts into
+//! `LaunchConfig::simulate_latency` (the engine runs accounting-only).
 
 use std::time::Duration;
 
 use simplexmap::grid::{BlockShape, LaunchConfig, Launcher};
-use simplexmap::maps::{Lambda2Map, Lambda3Map, Lambda3RecMap, RiesMap, ThreadMap};
+use simplexmap::maps::{map2_by_name, map3_by_name, FixedAdapter, ThreadMap};
 use simplexmap::util::benchkit::{black_box, section, Bencher};
 
 fn launcher(m: u32, latency_us: u64) -> Launcher {
     let mut cfg = LaunchConfig::new(BlockShape::new(4, m));
     cfg.launch_latency = Duration::from_micros(latency_us);
     cfg.max_concurrent_launches = 32;
+    cfg.simulate_latency = true;
     Launcher::with_workers(
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
         cfg,
     )
 }
 
+fn bench_map(b: &mut Bencher, l: &Launcher, name: &str, fixed: Box<dyn ThreadMap>, nb: u64) {
+    let volume = fixed.parallel_volume(nb) as u64;
+    let map = FixedAdapter::new(fixed);
+    b.bench(name, volume, || {
+        let stats = l.launch(&map, nb, |_lane, _b| 0);
+        black_box(stats.blocks_mapped);
+    });
+}
+
 fn main() {
     section("E12: λ2 single pass vs Ries O(log n) passes (5µs launch latency)");
     let mut b = Bencher::default();
     let nb2 = 1024;
-    for (name, map) in [
-        ("lambda2 (1 pass)", &Lambda2Map as &dyn ThreadMap),
-        ("ries (log2 n + 1 passes)", &RiesMap),
+    for (name, map_name) in [
+        ("lambda2 (1 pass)", "lambda2"),
+        ("ries (log2 n + 1 passes)", "ries"),
     ] {
         let l = launcher(2, 5);
-        b.bench(name, map.parallel_volume(nb2) as u64, || {
-            let stats = l.launch(map, nb2, |_b| 0);
-            black_box(stats.blocks_mapped);
-        });
+        bench_map(&mut b, &l, name, map2_by_name(map_name).unwrap(), nb2);
     }
     b.print_speedups("E12");
 
     section("E5: λ3 single pass vs λ3-rec O(3^log n) launches (cap 32)");
     let mut b = Bencher::default();
     let nb3 = 64;
-    for (name, map) in [
-        ("lambda3 (1 pass)", &Lambda3Map as &dyn ThreadMap),
-        ("lambda3-rec (365 launches at nb=64)", &Lambda3RecMap),
+    for (name, map_name) in [
+        ("lambda3 (1 pass)", "lambda3"),
+        ("lambda3-rec (365 launches at nb=64)", "lambda3-rec"),
     ] {
         let l = launcher(3, 5);
-        b.bench(name, map.parallel_volume(nb3) as u64, || {
-            let stats = l.launch(map, nb3, |_b| 0);
-            black_box(stats.blocks_mapped);
-        });
+        bench_map(&mut b, &l, name, map3_by_name(map_name).unwrap(), nb3);
     }
     b.print_speedups("E5");
 
     // Pass-count table (the eq. 20 numbers behind the wall times).
-    println!("\npasses: lambda2={} ries={} lambda3={} lambda3-rec={}",
-        Lambda2Map.passes(nb2),
-        RiesMap.passes(nb2),
-        Lambda3Map.passes(nb3),
-        Lambda3RecMap.passes(nb3),
+    println!(
+        "\npasses: lambda2={} ries={} lambda3={} lambda3-rec={}",
+        map2_by_name("lambda2").unwrap().passes(nb2),
+        map2_by_name("ries").unwrap().passes(nb2),
+        map3_by_name("lambda3").unwrap().passes(nb3),
+        map3_by_name("lambda3-rec").unwrap().passes(nb3),
     );
 }

@@ -41,7 +41,7 @@ fn main() {
     section("E10a: EDM end-to-end (rust tiles)");
     let mut b = Bencher::default();
     let nb = 128;
-    let n = nb * sched.rho2 as u64;
+    let n = nb * sched.rho_for(2) as u64;
     bench_workload(
         &mut b,
         &sched,
@@ -67,7 +67,7 @@ fn main() {
     section("E10c: n-body end-to-end");
     let mut b = Bencher::default();
     let nb_n = 64;
-    let n_n = nb_n * sched.rho2 as u64;
+    let n_n = nb_n * sched.rho_for(2) as u64;
     bench_workload(
         &mut b,
         &sched,
@@ -81,7 +81,7 @@ fn main() {
     section("E10d: triple interaction end-to-end (m=3)");
     let mut b = Bencher::default();
     let nb3 = 16;
-    let n3 = nb3 * sched.rho3 as u64;
+    let n3 = nb3 * sched.rho_for(3) as u64;
     bench_workload(
         &mut b,
         &sched,
@@ -91,4 +91,20 @@ fn main() {
         n3 * (n3 - 1) * (n3 - 2) / 6,
     );
     b.print_speedups("triple");
+
+    section("E14: k-tuple end-to-end (m=4, unified engine)");
+    let mut b = Bencher::default();
+    let nb4 = 16;
+    let n4 = nb4 * sched.rho_for(4) as u64;
+    // C(n, 4) useful tuples.
+    let tuples4 = n4 * (n4 - 1) * (n4 - 2) * (n4 - 3) / 24;
+    bench_workload(
+        &mut b,
+        &sched,
+        WorkloadKind::KTuple(4),
+        nb4,
+        &["bb", "lambda-m"],
+        tuples4,
+    );
+    b.print_speedups("ktuple4");
 }

@@ -10,7 +10,7 @@
 //! Run: `cargo run --release --example cellular_life -- [nb] [steps]`
 
 use simplexmap::grid::{BlockShape, LaunchConfig, Launcher};
-use simplexmap::maps::{Lambda2Map, ThreadMap};
+use simplexmap::maps::{adapt, Lambda2Map, MThreadMap};
 use simplexmap::workloads::CellularWorkload;
 
 fn main() {
@@ -20,7 +20,7 @@ fn main() {
     let rho = 4u32;
 
     let mut world = CellularWorkload::generate(nb, rho, 2026);
-    let map = Lambda2Map;
+    let map = adapt(Lambda2Map);
     assert!(map.supports(nb), "nb must be a power of two");
     let mut cfg = LaunchConfig::new(BlockShape::new(rho, 2));
     cfg.launch_latency = std::time::Duration::ZERO;
@@ -42,7 +42,7 @@ fn main() {
         // disjoint writes (mutex only because the kernel is a closure).
         let next = std::sync::Mutex::new(vec![0u8; world.state.len()]);
         let world_ref = &world;
-        let stats = launcher.launch(&map, nb, |b| {
+        let stats = launcher.launch(&map, nb, |_lane, b| {
             let mut tile = vec![0f32; (rho * rho) as usize];
             world_ref.tile_next(b.data[0], b.data[1], &mut tile);
             world_ref.scatter_tile(b.data[0], b.data[1], &tile, &mut next.lock().unwrap());

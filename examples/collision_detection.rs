@@ -17,7 +17,7 @@ fn main() {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
         None,
     );
-    let n = nb * sched.rho2 as u64;
+    let n = nb * sched.rho_for(2) as u64;
     println!("Broad-phase AABB culling over {n} boxes:");
     println!(
         "{:<10} {:>10} {:>10} {:>8} {:>12} {:>14}",

@@ -31,11 +31,11 @@ fn main() {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
         Some(service.handle()),
     );
-    let n_points = nb * sched.rho2 as u64;
+    let n_points = nb * sched.rho_for(2) as u64;
     let pairs = n_points * (n_points - 1) / 2;
     println!(
         "EDM end-to-end: {n_points} points (nb={nb}, ρ={}), {} unique pairs, backend=pjrt (Pallas tiles)",
-        sched.rho2,
+        sched.rho_for(2),
         fmt_count(pairs as f64)
     );
     println!(

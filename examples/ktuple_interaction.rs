@@ -24,7 +24,7 @@ fn main() {
             .unwrap_or(4),
         None,
     );
-    let rho = if m == 3 { sched.rho3 } else { sched.rho_m };
+    let rho = sched.rho_for(m);
     let n = nb * rho as u64;
     let tuples = binomial(n as u128, m as u128);
     println!(

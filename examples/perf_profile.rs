@@ -17,10 +17,13 @@ fn phase(snapshot: &Json, key: &str) -> (u64, f64) {
 }
 
 fn profile(backend: Backend, nb: u64, reps: usize, service: Option<&ExecutorService>) {
-    let sched = Scheduler::new(
+    let mut sched = Scheduler::new(
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
         service.map(|s| s.handle()),
     );
+    // Phase profiling wants the two-phase split, so opt into the
+    // collect flow (the engine's default is the fused streaming mode).
+    sched.exec_mode = simplexmap::coordinator::ExecMode::Collect;
     // Warmup.
     let _ = sched.run(&Job {
         workload: WorkloadKind::Edm,

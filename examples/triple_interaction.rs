@@ -36,11 +36,11 @@ fn main() {
         service.as_ref().map(|s| s.handle()),
     );
 
-    let n = nb * sched.rho3 as u64;
+    let n = nb * sched.rho_for(3) as u64;
     let triples = n * (n - 1) * (n - 2) / 6;
     println!(
         "Triple-interaction: {n} particles (nb={nb}, ρ={}), {} unique triples, backend={}",
-        sched.rho3,
+        sched.rho_for(3),
         fmt_count(triples as f64),
         backend.name()
     );

@@ -19,8 +19,10 @@ pub enum WorkloadKind {
     Cellular,
     /// Triangular matrix-vector product (2-simplex) — [21], [5].
     TriMatVec,
-    /// Unique k-tuple interaction (m-simplex, 3 ≤ m ≤ 8) — the
-    /// general-m subsystem's workload; the payload is the tuple arity.
+    /// Unique k-tuple interaction (m-simplex, 2 ≤ m ≤ 8) — the
+    /// general-m workload; the payload is the tuple arity. Arity 2 is
+    /// the pair-style regression case: it must share launch geometry
+    /// with the dedicated pair workloads under the same map.
     KTuple(u32),
 }
 
@@ -44,7 +46,7 @@ impl WorkloadKind {
 
     /// The k-tuple workload at arity m, when m is executable.
     pub fn ktuple(m: u32) -> Option<WorkloadKind> {
-        if (3..=8).contains(&m) {
+        if (2..=8).contains(&m) {
             Some(WorkloadKind::KTuple(m))
         } else {
             None
@@ -59,6 +61,7 @@ impl WorkloadKind {
             WorkloadKind::Triple => "triple",
             WorkloadKind::Cellular => "cellular",
             WorkloadKind::TriMatVec => "trimatvec",
+            WorkloadKind::KTuple(2) => "ktuple2",
             WorkloadKind::KTuple(3) => "ktuple3",
             WorkloadKind::KTuple(4) => "ktuple4",
             WorkloadKind::KTuple(5) => "ktuple5",
@@ -158,9 +161,15 @@ pub struct JobResult {
     pub job: Job,
     /// Workload-specific scalar outputs (checksums, counts, energies).
     pub outputs: Vec<(String, f64)>,
+    pub passes: u64,
     pub blocks_launched: u64,
     pub blocks_mapped: u64,
     pub threads_launched: u64,
+    /// Threads the workload's thread-level predicate discarded
+    /// (diagonal blocks) — identical across the rust backend's
+    /// streaming and collect modes. The pjrt backend reports 0 (its
+    /// predication happens tile-side; see `scheduler::run_pjrt`).
+    pub threads_predicated_off: u64,
     pub wall_secs: f64,
     pub tile_batches: u64,
 }
@@ -180,9 +189,11 @@ impl JobResult {
         Json::obj(vec![
             ("job", self.job.to_json()),
             ("outputs", outputs),
+            ("passes", self.passes.into()),
             ("blocks_launched", self.blocks_launched.into()),
             ("blocks_mapped", self.blocks_mapped.into()),
             ("threads_launched", self.threads_launched.into()),
+            ("threads_predicated_off", self.threads_predicated_off.into()),
             ("block_efficiency", self.block_efficiency().into()),
             ("wall_secs", self.wall_secs.into()),
             ("tile_batches", self.tile_batches.into()),
@@ -217,7 +228,12 @@ mod tests {
             WorkloadKind::parse("ktuple6"),
             Some(WorkloadKind::KTuple(6))
         );
-        assert_eq!(WorkloadKind::parse("ktuple2"), None, "pairs are edm's job");
+        assert_eq!(
+            WorkloadKind::parse("ktuple2"),
+            Some(WorkloadKind::KTuple(2)),
+            "pair-style regression arity"
+        );
+        assert_eq!(WorkloadKind::parse("ktuple1"), None, "no 1-tuples");
         assert_eq!(WorkloadKind::parse("ktuple9"), None, "beyond M_MAX");
     }
 
@@ -258,9 +274,11 @@ mod tests {
                 seed: 1,
             },
             outputs: vec![("count".into(), 10.0)],
+            passes: 1,
             blocks_launched: 16,
             blocks_mapped: 10,
             threads_launched: 4096,
+            threads_predicated_off: 136,
             wall_secs: 0.5,
             tile_batches: 1,
         };

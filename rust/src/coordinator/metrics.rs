@@ -1,6 +1,12 @@
 //! Process-wide coordinator metrics: job counters, per-phase latency
-//! accumulators, tile/batch counters. Snapshots serialize to JSON for
-//! the server's `metrics` command.
+//! accumulators, tile/batch counters, job-queue gauges, and the
+//! scheduler's map-layout-cache hit rate. Snapshots serialize to JSON
+//! for the server's `metrics` command.
+//!
+//! Phases: streaming jobs run map+execute fused (one `fused_phase`
+//! sample per job); collect-mode and PJRT jobs keep the split
+//! `map_phase`/`exec_phase` timings. Queue metrics: `queue_depth` is a
+//! live gauge, `queue_wait` the enqueue→dequeue latency.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -16,8 +22,18 @@ pub struct Metrics {
     pub blocks_mapped: AtomicU64,
     pub tile_batches: AtomicU64,
     pub tiles_padded: AtomicU64,
+    /// Jobs that entered the bounded job queue.
+    pub jobs_queued: AtomicU64,
+    /// Jobs rejected because the queue was full (backpressure).
+    pub queue_rejected: AtomicU64,
+    /// Live queue depth (enqueued, not yet picked up by a worker).
+    pub queue_depth: AtomicU64,
+    pub map_cache_hits: AtomicU64,
+    pub map_cache_misses: AtomicU64,
     map_phase: Mutex<Welford>,
     exec_phase: Mutex<Welford>,
+    fused_phase: Mutex<Welford>,
+    queue_wait: Mutex<Welford>,
     job_wall: Mutex<Welford>,
 }
 
@@ -32,6 +48,16 @@ impl Metrics {
 
     pub fn record_exec_phase(&self, secs: f64) {
         self.exec_phase.lock().unwrap().push(secs);
+    }
+
+    /// One fused map+execute sweep (the streaming engine's hot path).
+    pub fn record_fused_phase(&self, secs: f64) {
+        self.fused_phase.lock().unwrap().push(secs);
+    }
+
+    /// Time a job spent waiting in the bounded queue.
+    pub fn record_queue_wait(&self, secs: f64) {
+        self.queue_wait.lock().unwrap().push(secs);
     }
 
     pub fn record_job(&self, secs: f64) {
@@ -49,33 +75,23 @@ impl Metrics {
                 ("max_secs", if w.count() > 0 { w.max() } else { 0.0 }.into()),
             ])
         };
+        let counter = |a: &AtomicU64| Json::from(a.load(Ordering::Relaxed));
         Json::obj(vec![
-            (
-                "jobs_accepted",
-                self.jobs_accepted.load(Ordering::Relaxed).into(),
-            ),
-            (
-                "jobs_completed",
-                self.jobs_completed.load(Ordering::Relaxed).into(),
-            ),
-            (
-                "jobs_failed",
-                self.jobs_failed.load(Ordering::Relaxed).into(),
-            ),
-            (
-                "blocks_mapped",
-                self.blocks_mapped.load(Ordering::Relaxed).into(),
-            ),
-            (
-                "tile_batches",
-                self.tile_batches.load(Ordering::Relaxed).into(),
-            ),
-            (
-                "tiles_padded",
-                self.tiles_padded.load(Ordering::Relaxed).into(),
-            ),
+            ("jobs_accepted", counter(&self.jobs_accepted)),
+            ("jobs_completed", counter(&self.jobs_completed)),
+            ("jobs_failed", counter(&self.jobs_failed)),
+            ("blocks_mapped", counter(&self.blocks_mapped)),
+            ("tile_batches", counter(&self.tile_batches)),
+            ("tiles_padded", counter(&self.tiles_padded)),
+            ("jobs_queued", counter(&self.jobs_queued)),
+            ("queue_rejected", counter(&self.queue_rejected)),
+            ("queue_depth", counter(&self.queue_depth)),
+            ("map_cache_hits", counter(&self.map_cache_hits)),
+            ("map_cache_misses", counter(&self.map_cache_misses)),
             ("map_phase", phase(&self.map_phase)),
             ("exec_phase", phase(&self.exec_phase)),
+            ("fused_phase", phase(&self.fused_phase)),
+            ("queue_wait", phase(&self.queue_wait)),
             ("job_wall", phase(&self.job_wall)),
         ])
     }
@@ -92,12 +108,23 @@ mod tests {
         m.record_job(0.5);
         m.record_job(1.5);
         m.record_map_phase(0.1);
+        m.record_fused_phase(0.2);
+        m.record_queue_wait(0.01);
         let s = m.snapshot();
         assert_eq!(s.get("jobs_accepted").unwrap().as_u64(), Some(3));
         assert_eq!(s.get("jobs_completed").unwrap().as_u64(), Some(2));
         let wall = s.get("job_wall").unwrap();
         assert_eq!(wall.get("count").unwrap().as_u64(), Some(2));
         assert!((wall.get("mean_secs").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-12);
+        assert_eq!(
+            s.get("fused_phase").unwrap().get("count").unwrap().as_u64(),
+            Some(1)
+        );
+        assert_eq!(
+            s.get("queue_wait").unwrap().get("count").unwrap().as_u64(),
+            Some(1)
+        );
+        assert_eq!(s.get("queue_depth").unwrap().as_u64(), Some(0));
     }
 
     #[test]

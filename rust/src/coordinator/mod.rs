@@ -6,19 +6,22 @@
 //!
 //! - [`job`] — the job model: a workload + problem size + map choice +
 //!   execution backend, and its structured result.
+//! - [`scheduler`] — the unified execution engine: one pipeline for
+//!   every workload at every m, fused map+execute by default (opt-in
+//!   collect mode), a single ρ policy, and a map-layout cache.
+//! - [`queue`] — a bounded job queue with a worker pool: concurrent
+//!   clients execute in parallel, overload answers with backpressure.
 //! - [`batcher`] — gathers the tile operands of λ-mapped blocks into
 //!   fixed-size batches and executes them on the PJRT runtime (the
 //!   AOT-compiled Pallas kernels), padding the final partial batch.
-//! - [`scheduler`] — runs jobs: grid launch (map hot path) → tile
-//!   execution (pure-Rust or PJRT backend) → aggregation; owns the
-//!   worker pool and the metrics.
-//! - [`metrics`] — process-wide counters and latency summaries.
+//! - [`metrics`] — process-wide counters, phase timings, queue gauges.
 //! - [`server`] — a JSON-lines-over-TCP leader: accepts jobs from
-//!   clients, schedules them, streams results (examples/serve_client).
+//!   clients and runs them through the queue (examples/serve_client).
 
 pub mod batcher;
 pub mod job;
 pub mod metrics;
+pub mod queue;
 pub mod scheduler;
 pub mod server;
 pub mod trace;
@@ -26,4 +29,5 @@ pub mod trace;
 pub use batcher::TileBatcher;
 pub use job::{Backend, Job, JobResult, WorkloadKind};
 pub use metrics::Metrics;
-pub use scheduler::Scheduler;
+pub use queue::{JobQueue, QueueConfig};
+pub use scheduler::{ExecMode, RhoPolicy, Scheduler};

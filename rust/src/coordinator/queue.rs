@@ -1,0 +1,286 @@
+//! Bounded job queue + worker pool in front of the unified engine.
+//!
+//! The server used to run every job inline on its connection thread;
+//! the queue decouples admission from execution: connections enqueue,
+//! a fixed pool of queue workers executes jobs in parallel on the
+//! shared scheduler, and the bounded capacity gives backpressure
+//! ([`ScheduleError::QueueFull`]) instead of unbounded memory growth
+//! under overload. Queue depth and enqueue→dequeue wait times are
+//! exported through the scheduler's [`Metrics`](crate::coordinator::Metrics).
+//!
+//! Shutdown drains: workers finish every job already enqueued (their
+//! clients are still waiting on replies) before exiting.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::job::{Job, JobResult};
+use crate::coordinator::scheduler::{ScheduleError, Scheduler};
+
+/// Queue sizing knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct QueueConfig {
+    /// Concurrent job executions (queue workers).
+    pub workers: usize,
+    /// Maximum enqueued-but-not-started jobs before backpressure.
+    pub capacity: usize,
+}
+
+impl Default for QueueConfig {
+    fn default() -> QueueConfig {
+        QueueConfig {
+            workers: 4,
+            capacity: 64,
+        }
+    }
+}
+
+/// The result channel a submitted job resolves through.
+pub type JobReceiver = mpsc::Receiver<Result<JobResult, ScheduleError>>;
+
+struct Queued {
+    job: Job,
+    enqueued: Instant,
+    reply: mpsc::Sender<Result<JobResult, ScheduleError>>,
+}
+
+struct Inner {
+    queue: Mutex<VecDeque<Queued>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    capacity: usize,
+    scheduler: Arc<Scheduler>,
+}
+
+/// A running queue: workers live until shutdown/drop.
+pub struct JobQueue {
+    inner: Arc<Inner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl JobQueue {
+    pub fn start(scheduler: Arc<Scheduler>, cfg: QueueConfig) -> JobQueue {
+        let inner = Arc::new(Inner {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            capacity: cfg.capacity.max(1),
+            scheduler,
+        });
+        let workers = (0..cfg.workers.max(1))
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("smx-jobq-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn queue worker")
+            })
+            .collect();
+        JobQueue { inner, workers }
+    }
+
+    /// Enqueue a job; the receiver yields its result once a worker
+    /// finishes. Fails fast when the queue is full (backpressure) or
+    /// the coordinator is shutting down.
+    pub fn submit(&self, job: Job) -> Result<JobReceiver, ScheduleError> {
+        let metrics = &self.inner.scheduler.metrics;
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.inner.queue.lock().unwrap();
+            // Shutdown must be re-checked under the queue lock: workers
+            // take the same lock before their final empty+shutdown
+            // check, so a job enqueued here is guaranteed to be seen
+            // by the drain (no stranded reply channels).
+            if self.inner.shutdown.load(Ordering::SeqCst) {
+                return Err(ScheduleError::Shutdown);
+            }
+            if q.len() >= self.inner.capacity {
+                metrics.queue_rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(ScheduleError::QueueFull(self.inner.capacity));
+            }
+            q.push_back(Queued {
+                job,
+                enqueued: Instant::now(),
+                reply: tx,
+            });
+            // Gauge updates stay under the lock so a worker cannot pop
+            // (and decrement) before the increment lands.
+            metrics.jobs_queued.fetch_add(1, Ordering::Relaxed);
+            metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+        }
+        self.inner.available.notify_one();
+        Ok(rx)
+    }
+
+    /// Submit and block for the result (what a connection thread does).
+    pub fn run(&self, job: Job) -> Result<JobResult, ScheduleError> {
+        let rx = self.submit(job)?;
+        rx.recv().unwrap_or(Err(ScheduleError::Shutdown))
+    }
+
+    /// Live queue depth (enqueued, not yet picked up).
+    pub fn depth(&self) -> u64 {
+        self.inner
+            .scheduler
+            .metrics
+            .queue_depth
+            .load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting new jobs; workers drain what is already queued.
+    pub fn shutdown(&self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.available.notify_all();
+    }
+}
+
+impl Drop for JobQueue {
+    fn drop(&mut self) {
+        self.shutdown();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    loop {
+        let item = {
+            let mut q = inner.queue.lock().unwrap();
+            loop {
+                if let Some(item) = q.pop_front() {
+                    break Some(item);
+                }
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = inner.available.wait(q).unwrap();
+            }
+        };
+        let Some(item) = item else { return };
+        let metrics = &inner.scheduler.metrics;
+        metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        metrics.record_queue_wait(item.enqueued.elapsed().as_secs_f64());
+        let result = inner.scheduler.run(&item.job);
+        // The client may have disconnected; dropping the result is fine.
+        let _ = item.reply.send(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::{Backend, WorkloadKind};
+
+    fn job(nb: u64, seed: u64) -> Job {
+        Job {
+            workload: WorkloadKind::Edm,
+            nb,
+            map: "lambda2".into(),
+            backend: Backend::Rust,
+            seed,
+        }
+    }
+
+    #[test]
+    fn jobs_submitted_concurrently_all_complete() {
+        let sched = Arc::new(Scheduler::new(2, None));
+        let q = JobQueue::start(
+            Arc::clone(&sched),
+            QueueConfig {
+                workers: 3,
+                capacity: 32,
+            },
+        );
+        let receivers: Vec<_> = (0..9).map(|i| q.submit(job(8, i)).unwrap()).collect();
+        for rx in receivers {
+            let r = rx.recv().unwrap().expect("job result");
+            assert_eq!(r.outputs[0].0, "neighbour_count");
+        }
+        assert_eq!(
+            sched
+                .metrics
+                .jobs_queued
+                .load(std::sync::atomic::Ordering::Relaxed),
+            9
+        );
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn full_queue_rejects_with_backpressure() {
+        // No workers draining: saturate a capacity-2 queue.
+        let sched = Arc::new(Scheduler::new(1, None));
+        let q = JobQueue::start(
+            Arc::clone(&sched),
+            QueueConfig {
+                workers: 1,
+                capacity: 2,
+            },
+        );
+        // Stop the worker first so the queue cannot drain mid-test:
+        // enqueue a job, then shut down? No — shutdown rejects. Instead
+        // rely on capacity bounding the *pending* set: submit many
+        // fast and expect at least one rejection OR all completions.
+        let mut rejected = 0;
+        let mut receivers = Vec::new();
+        for i in 0..64 {
+            match q.submit(job(8, i)) {
+                Ok(rx) => receivers.push(rx),
+                Err(ScheduleError::QueueFull(cap)) => {
+                    assert_eq!(cap, 2);
+                    rejected += 1;
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        for rx in receivers {
+            rx.recv().unwrap().expect("accepted jobs complete");
+        }
+        assert!(
+            rejected > 0,
+            "64 instant submissions against capacity 2 must trip backpressure"
+        );
+        assert_eq!(
+            sched
+                .metrics
+                .queue_rejected
+                .load(std::sync::atomic::Ordering::Relaxed),
+            rejected
+        );
+    }
+
+    #[test]
+    fn shutdown_rejects_new_jobs_but_drains_queued_ones() {
+        let sched = Arc::new(Scheduler::new(1, None));
+        let q = JobQueue::start(
+            Arc::clone(&sched),
+            QueueConfig {
+                workers: 1,
+                capacity: 8,
+            },
+        );
+        let rx = q.submit(job(8, 1)).unwrap();
+        q.shutdown();
+        assert!(matches!(q.submit(job(8, 2)), Err(ScheduleError::Shutdown)));
+        // The already-enqueued job still resolves.
+        let r = rx.recv().unwrap();
+        assert!(r.is_ok(), "drained job must complete: {:?}", r.err().map(|e| e.to_string()));
+    }
+
+    #[test]
+    fn queue_wait_metric_accumulates() {
+        let sched = Arc::new(Scheduler::new(1, None));
+        let q = JobQueue::start(Arc::clone(&sched), QueueConfig::default());
+        q.run(job(8, 3)).unwrap();
+        let snap = sched.metrics.snapshot();
+        assert_eq!(
+            snap.get("queue_wait").unwrap().get("count").unwrap().as_u64(),
+            Some(1)
+        );
+        assert_eq!(snap.get("jobs_queued").unwrap().as_u64(), Some(1));
+    }
+}

@@ -1,27 +1,37 @@
-//! The scheduler: runs a [`Job`] through map → tiles → aggregation.
+//! The unified execution engine: one pipeline for every workload at
+//! every dimension 2 ≤ m ≤ 8.
 //!
-//! Two-phase execution, separately timed (the paper's claims are about
-//! phase 1; phase 2 is identical work under every map — which is
-//! exactly why parallel-space efficiency converts into end-to-end
-//! throughput):
+//! A job resolves through the all-dimensions map registry (behind a
+//! scheduler-level layout cache), picks ρ from a single
+//! [`RhoPolicy::rho_for`] policy, builds its [`Workload`] through the
+//! one factory, and executes in one of two modes:
 //!
-//! 1. **Map phase** — the grid launcher applies the chosen map over
-//!    the whole parallel space on the worker pool and collects the
-//!    surviving blocks (the hot path the benches measure).
-//! 2. **Execute phase** — per-block tiles run on the selected backend:
-//!    `rust` (portable kernels) or `pjrt` (batched AOT Pallas kernels),
-//!    then aggregate under the thread-level predicate.
+//! - [`ExecMode::Streaming`] (default) — the workload's block kernel
+//!   runs *inside* the map sweep on per-lane accumulators (fused
+//!   map+execute): no block list is materialized, removing the
+//!   O(blocks) collect-sort-execute detour from every job's hot path.
+//! - [`ExecMode::Collect`] — the old two-phase flow, kept opt-in for
+//!   trace capture, phase profiling, and the streaming-equivalence
+//!   conformance tests: collect all mapped blocks, sort them
+//!   deterministically, then execute. Same accumulators, same
+//!   accounting (the predication counts are patched into the stats so
+//!   both modes report identical [`LaunchStats`]).
+//!
+//! The PJRT backend necessarily collects (the tile batcher packs
+//! fixed-size batches), and dispatches through
+//! [`Workload::run_pjrt`] — no per-workload code lives here anymore.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::coordinator::batcher::{TileBatcher, TileInput};
-use crate::coordinator::job::{Backend, Job, JobResult, WorkloadKind};
+use crate::coordinator::job::{Backend, Job, JobResult};
 use crate::coordinator::metrics::Metrics;
-use crate::grid::{BlockShape, LaunchConfig, Launcher, MappedBlock};
-use crate::maps::{map2_by_name, map3_by_name, MThreadMap as _, ThreadMap};
+use crate::grid::{BlockShape, LaunchConfig, LaunchStats, Launcher, MappedBlock};
+use crate::maps::MThreadMap;
 use crate::runtime::ExecHandle;
-use crate::workloads::*;
+use crate::workloads::{self, Accum, Workload};
 use crate::{log_debug, log_info};
 
 #[derive(Debug)]
@@ -31,6 +41,10 @@ pub enum ScheduleError {
     NoExecutor(String),
     Runtime(crate::runtime::RuntimeError),
     NoPjrtPath(&'static str),
+    /// The bounded job queue refused the job (backpressure).
+    QueueFull(usize),
+    /// The coordinator is shutting down; the job was not run.
+    Shutdown,
 }
 
 impl std::fmt::Display for ScheduleError {
@@ -47,6 +61,10 @@ impl std::fmt::Display for ScheduleError {
             ScheduleError::NoPjrtPath(w) => {
                 write!(f, "workload '{w}' has no pjrt artifact; use --backend rust")
             }
+            ScheduleError::QueueFull(cap) => {
+                write!(f, "job queue full (capacity {cap}); retry later")
+            }
+            ScheduleError::Shutdown => write!(f, "coordinator shutting down"),
         }
     }
 }
@@ -66,595 +84,319 @@ impl From<crate::runtime::RuntimeError> for ScheduleError {
     }
 }
 
+/// How the engine executes a job's tiles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Fused map+execute: the kernel runs inside the map sweep.
+    Streaming,
+    /// Two-phase: collect all mapped blocks, sort, then execute.
+    Collect,
+}
+
+/// The single ρ policy: ρ per dimension, replacing the scattered
+/// `rho2`/`rho3`/`rho_m` branches of the split pipelines. Blocks are
+/// ρ^m threads, so higher dimensions take a smaller ρ.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RhoPolicy {
+    /// ρ for 2-simplex jobs (must match artifact R when pjrt).
+    pub rho2: u32,
+    /// ρ for 3-simplex jobs.
+    pub rho3: u32,
+    /// ρ for m ≥ 4 jobs.
+    pub rho_m: u32,
+}
+
+impl Default for RhoPolicy {
+    fn default() -> RhoPolicy {
+        RhoPolicy {
+            rho2: 16,
+            rho3: 8,
+            rho_m: 2,
+        }
+    }
+}
+
+impl RhoPolicy {
+    pub fn rho_for(&self, m: u32) -> u32 {
+        match m {
+            2 => self.rho2,
+            3 => self.rho3,
+            _ => self.rho_m,
+        }
+    }
+}
+
 pub struct Scheduler {
     pub workers: usize,
-    /// ρ for 2-simplex workloads (must match artifact R when pjrt).
-    pub rho2: u32,
-    /// ρ for 3-simplex workloads.
-    pub rho3: u32,
-    /// ρ for general-m workloads (blocks are ρ^m threads, so small).
-    pub rho_m: u32,
+    /// The one ρ policy for every dimension.
+    pub rho: RhoPolicy,
+    /// Execution mode for the rust backend (pjrt always collects).
+    pub exec_mode: ExecMode,
     executor: Option<ExecHandle>,
     pub metrics: Arc<Metrics>,
+    /// Per-(map-name, m) resolved maps, shared across jobs: repeated
+    /// jobs (sweeps, server traffic) reuse the λ_m level plans and
+    /// per-nb layouts the map caches internally instead of re-deriving
+    /// them per job.
+    map_cache: Mutex<HashMap<(String, u32), Arc<dyn MThreadMap>>>,
 }
 
 impl Scheduler {
     pub fn new(workers: usize, executor: Option<ExecHandle>) -> Scheduler {
         Scheduler {
             workers: workers.max(1),
-            rho2: 16,
-            rho3: 8,
-            rho_m: 2,
+            rho: RhoPolicy::default(),
+            exec_mode: ExecMode::Streaming,
             executor,
             metrics: Arc::new(Metrics::new()),
+            map_cache: Mutex::new(HashMap::new()),
         }
     }
 
-    fn resolve_map(&self, job: &Job) -> Result<Box<dyn ThreadMap>, ScheduleError> {
-        let m = job.workload.m();
-        let map = match m {
-            2 => map2_by_name(&job.map),
-            _ => map3_by_name(&job.map),
-        }
-        .ok_or_else(|| ScheduleError::UnknownMap(job.map.clone(), m))?;
-        if !map.supports(job.nb) {
-            return Err(ScheduleError::Unsupported(job.map.clone(), job.nb));
+    /// ρ for a job of dimension m (see [`RhoPolicy`]).
+    pub fn rho_for(&self, m: u32) -> u32 {
+        self.rho.rho_for(m)
+    }
+
+    /// Resolve a map through the layout cache.
+    fn resolve_map(
+        &self,
+        name: &str,
+        m: u32,
+        nb: u64,
+    ) -> Result<Arc<dyn MThreadMap>, ScheduleError> {
+        let map = {
+            let cache = self.map_cache.lock().unwrap();
+            cache.get(&(name.to_string(), m)).map(Arc::clone)
+        };
+        let map = match map {
+            Some(map) => {
+                self.metrics.map_cache_hits.fetch_add(1, Ordering::Relaxed);
+                map
+            }
+            None => {
+                self.metrics
+                    .map_cache_misses
+                    .fetch_add(1, Ordering::Relaxed);
+                let map: Arc<dyn MThreadMap> = Arc::from(
+                    crate::maps::map_by_name(m, name)
+                        .ok_or_else(|| ScheduleError::UnknownMap(name.to_string(), m))?,
+                );
+                self.map_cache
+                    .lock()
+                    .unwrap()
+                    .insert((name.to_string(), m), Arc::clone(&map));
+                map
+            }
+        };
+        if !map.supports(nb) {
+            return Err(ScheduleError::Unsupported(name.to_string(), nb));
         }
         Ok(map)
     }
 
-    fn executor(&self) -> Result<ExecHandle, ScheduleError> {
-        self.executor
-            .clone()
-            .ok_or_else(|| ScheduleError::NoExecutor("executor not loaded".into()))
-    }
-
-    /// Phase 1: run the map over the grid, collecting mapped blocks.
-    fn collect_blocks(
-        &self,
-        map: &dyn ThreadMap,
-        nb: u64,
-        rho: u32,
-    ) -> (Vec<MappedBlock>, crate::grid::LaunchStats) {
-        let mut cfg = LaunchConfig::new(BlockShape::new(rho, map.m()));
+    fn launcher(&self, rho: u32, m: u32) -> Launcher {
+        let mut cfg = LaunchConfig::new(BlockShape::new(rho, m));
         cfg.launch_latency = std::time::Duration::from_micros(5);
-        let launcher = Launcher::with_workers(self.workers, cfg);
-        let blocks = Mutex::new(Vec::new());
-        let stats = launcher.launch(map, nb, |b| {
-            blocks.lock().unwrap().push(*b);
-            0
-        });
-        let mut blocks = blocks.into_inner().unwrap();
-        // Deterministic order for reproducible aggregation.
-        blocks.sort_by_key(|b| (b.pass, b.data));
-        (blocks, stats)
+        // Accounting-only launch latency: the model stays in the
+        // stats, the engine never sleeps for it.
+        debug_assert!(!cfg.simulate_latency);
+        Launcher::with_workers(self.workers, cfg)
     }
 
-    /// Run a job to completion.
+    /// Run a job to completion — the one pipeline, any workload, any m.
     pub fn run(&self, job: &Job) -> Result<JobResult, ScheduleError> {
-        if let WorkloadKind::KTuple(m) = job.workload {
-            return self.run_ktuple(job, m);
-        }
         let t0 = Instant::now();
-        let map = self.resolve_map(job)?;
-        let rho = if job.workload.m() == 2 {
-            self.rho2
-        } else {
-            self.rho3
-        };
+        let m = job.workload.m();
+        let map = self.resolve_map(&job.map, m, job.nb)?;
+        let rho = self.rho.rho_for(m);
+        let w = workloads::build(job.workload, job.nb, rho, job.seed);
         log_info!(
             "scheduler",
-            "job {} nb={} map={} backend={}",
+            "job {} nb={} m={m} map={} backend={} mode={:?}",
             job.workload.name(),
             job.nb,
             job.map,
-            job.backend.name()
+            job.backend.name(),
+            self.exec_mode
         );
 
-        let tmap = Instant::now();
-        let (blocks, stats) = self.collect_blocks(map.as_ref(), job.nb, rho);
-        self.metrics.record_map_phase(tmap.elapsed().as_secs_f64());
-        self.metrics
-            .blocks_mapped
-            .fetch_add(blocks.len() as u64, std::sync::atomic::Ordering::Relaxed);
-        log_debug!("scheduler", "mapped {} blocks", blocks.len());
-
-        let texec = Instant::now();
-        let (outputs, batches) = self.execute(job, rho, &blocks)?;
-        self.metrics
-            .record_exec_phase(texec.elapsed().as_secs_f64());
+        let launcher = self.launcher(rho, m);
+        let (outputs, stats, batches) = match job.backend {
+            Backend::Rust => match self.exec_mode {
+                ExecMode::Streaming => {
+                    self.run_streaming(&launcher, map.as_ref(), w.as_ref(), job.nb)
+                }
+                ExecMode::Collect => {
+                    self.run_collect(&launcher, map.as_ref(), w.as_ref(), job.nb)
+                }
+            },
+            Backend::Pjrt => self.run_pjrt(&launcher, map.as_ref(), w.as_ref(), job.nb)?,
+        };
 
         let wall = t0.elapsed().as_secs_f64();
         self.metrics.record_job(wall);
         Ok(JobResult {
             job: job.clone(),
             outputs,
+            passes: stats.passes,
             blocks_launched: stats.blocks_launched,
             blocks_mapped: stats.blocks_mapped,
             threads_launched: stats.threads_launched,
+            threads_predicated_off: stats.threads_predicated_off,
             wall_secs: wall,
             tile_batches: batches,
         })
     }
 
-    fn execute(
+    /// Fused map+execute: per-lane accumulators advance inside the map
+    /// sweep; nothing is materialized between the phases.
+    fn run_streaming(
         &self,
-        job: &Job,
-        rho: u32,
-        blocks: &[MappedBlock],
-    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
-        match (job.workload, job.backend) {
-            (WorkloadKind::Edm, Backend::Rust) => self.edm_rust(job, rho, blocks),
-            (WorkloadKind::Edm, Backend::Pjrt) => self.edm_pjrt(job, rho, blocks),
-            (WorkloadKind::Collision, Backend::Rust) => self.collision_rust(job, rho, blocks),
-            (WorkloadKind::Collision, Backend::Pjrt) => self.collision_pjrt(job, rho, blocks),
-            (WorkloadKind::NBody, Backend::Rust) => self.nbody_rust(job, rho, blocks),
-            (WorkloadKind::NBody, Backend::Pjrt) => self.nbody_pjrt(job, rho, blocks),
-            (WorkloadKind::Triple, Backend::Rust) => self.triple_rust(job, rho, blocks),
-            (WorkloadKind::Triple, Backend::Pjrt) => self.triple_pjrt(job, rho, blocks),
-            (WorkloadKind::Cellular, Backend::Rust) => self.cellular_rust(job, rho, blocks),
-            (WorkloadKind::TriMatVec, Backend::Rust) => self.trimat_rust(job, rho, blocks),
-            (WorkloadKind::Cellular, Backend::Pjrt) => Err(ScheduleError::NoPjrtPath("cellular")),
-            (WorkloadKind::TriMatVec, Backend::Pjrt) => {
-                Err(ScheduleError::NoPjrtPath("trimatvec"))
-            }
-            (WorkloadKind::KTuple(_), _) => {
-                unreachable!("ktuple jobs take the general-m path in run()")
-            }
-        }
+        launcher: &Launcher,
+        map: &dyn MThreadMap,
+        w: &dyn Workload,
+        nb: u64,
+    ) -> (Vec<(String, f64)>, LaunchStats, u64) {
+        let t = Instant::now();
+        let accums: Vec<Mutex<Accum>> = (0..launcher.workers())
+            .map(|_| Mutex::new(w.new_accum()))
+            .collect();
+        // The lane's mutex is uncontended by construction (the launcher
+        // uses each lane index from one thread at a time); the lock is
+        // only what makes the sharing safe Rust, at ~ns per block
+        // against the µs-scale tile work behind it.
+        let stats = launcher.launch(map, nb, |lane, b| {
+            let mut acc = accums[lane].lock().unwrap();
+            w.process_block(&mut acc, b)
+        });
+        let outputs = w.finish(
+            accums
+                .into_iter()
+                .map(|a| a.into_inner().unwrap())
+                .collect(),
+        );
+        self.metrics.record_fused_phase(t.elapsed().as_secs_f64());
+        self.metrics
+            .blocks_mapped
+            .fetch_add(stats.blocks_mapped, Ordering::Relaxed);
+        (outputs, stats, 0)
     }
 
-    // ---- KTuple (general-m path) -------------------------------------
-
-    /// The general-m pipeline: resolve through the unified registry,
-    /// launch with [`Launcher::launch_m`], execute ρ^m tuple tiles.
-    fn run_ktuple(&self, job: &Job, m: u32) -> Result<JobResult, ScheduleError> {
-        if job.backend == Backend::Pjrt {
-            return Err(ScheduleError::NoPjrtPath("ktuple"));
-        }
-        let map = crate::maps::map_by_name(m, &job.map)
-            .ok_or_else(|| ScheduleError::UnknownMap(job.map.clone(), m))?;
-        if !map.supports(job.nb) {
-            return Err(ScheduleError::Unsupported(job.map.clone(), job.nb));
-        }
-        let rho = if m == 2 {
-            self.rho2
-        } else if m == 3 {
-            self.rho3
-        } else {
-            self.rho_m
-        };
-        log_info!(
-            "scheduler",
-            "job {} nb={} map={} backend={} (general-m)",
-            job.workload.name(),
-            job.nb,
-            job.map,
-            job.backend.name()
-        );
-        let t0 = Instant::now();
-
-        let tmap = Instant::now();
-        let mut cfg = LaunchConfig::new(BlockShape::new(rho, m));
-        cfg.launch_latency = std::time::Duration::from_micros(5);
-        let launcher = Launcher::with_workers(self.workers, cfg);
-        let blocks = Mutex::new(Vec::new());
-        let stats = launcher.launch_m(map.as_ref(), job.nb, |b| {
+    /// Phase 1 of the collect flows: run the map over the grid,
+    /// gathering mapped blocks in deterministic order.
+    fn collect_blocks(
+        &self,
+        launcher: &Launcher,
+        map: &dyn MThreadMap,
+        nb: u64,
+    ) -> (Vec<MappedBlock>, LaunchStats) {
+        let t = Instant::now();
+        let blocks: Mutex<Vec<MappedBlock>> = Mutex::new(Vec::new());
+        let stats = launcher.launch(map, nb, |_lane, b| {
             blocks.lock().unwrap().push(*b);
             0
         });
         let mut blocks = blocks.into_inner().unwrap();
         // Deterministic order for reproducible aggregation.
         blocks.sort_by(|a, b| (a.pass, a.data.as_slice()).cmp(&(b.pass, b.data.as_slice())));
-        self.metrics.record_map_phase(tmap.elapsed().as_secs_f64());
+        self.metrics.record_map_phase(t.elapsed().as_secs_f64());
         self.metrics
             .blocks_mapped
-            .fetch_add(blocks.len() as u64, std::sync::atomic::Ordering::Relaxed);
-        log_debug!("scheduler", "mapped {} blocks (m={m})", blocks.len());
-
-        let texec = Instant::now();
-        let w = KTupleWorkload::generate(job.nb, rho, m, job.seed);
-        let partials: Vec<f64> = parallel_map_reduce(self.workers, &blocks, |batch| {
-            batch
-                .iter()
-                .map(|b| w.tile_rust(&KTupleWorkload::block_chunks(job.nb, &b.data)))
-                .sum()
-        });
-        self.metrics
-            .record_exec_phase(texec.elapsed().as_secs_f64());
-
-        let wall = t0.elapsed().as_secs_f64();
-        self.metrics.record_job(wall);
-        Ok(JobResult {
-            job: job.clone(),
-            outputs: vec![("ktuple_energy".into(), partials.iter().sum())],
-            blocks_launched: stats.blocks_launched,
-            blocks_mapped: stats.blocks_mapped,
-            threads_launched: stats.threads_launched,
-            wall_secs: wall,
-            tile_batches: 0,
-        })
+            .fetch_add(stats.blocks_mapped, Ordering::Relaxed);
+        log_debug!("scheduler", "mapped {} blocks", blocks.len());
+        (blocks, stats)
     }
 
-    // ---- EDM ---------------------------------------------------------
-
-    fn edm_rust(
+    /// Opt-in two-phase flow: collect, sort, then execute over the
+    /// same accumulators. Reports the same stats as streaming.
+    fn run_collect(
         &self,
-        job: &Job,
-        rho: u32,
-        blocks: &[MappedBlock],
-    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
-        let w = EdmWorkload::generate(job.nb, rho, job.seed);
-        let tile_len = (rho as usize) * (rho as usize);
-        // Parallel over block ranges with per-thread partials.
-        let chunks: Vec<(u64, f64)> = parallel_map_reduce(self.workers, blocks, |batch| {
-            let mut tile = vec![0f32; tile_len];
-            let mut count = 0u64;
-            let mut sum = 0f64;
-            for b in batch {
-                let (bc, br) = (b.data[0], b.data[1]);
-                w.tile_rust(bc, br, &mut tile);
-                let (c, s) = w.aggregate_tile(bc, br, &tile);
-                count += c;
-                sum += s;
-            }
-            (count, sum)
-        });
-        let count: u64 = chunks.iter().map(|c| c.0).sum();
-        let sum: f64 = chunks.iter().map(|c| c.1).sum();
-        Ok((
-            vec![
-                ("neighbour_count".into(), count as f64),
-                ("sum_d2".into(), sum),
-            ],
-            0,
-        ))
+        launcher: &Launcher,
+        map: &dyn MThreadMap,
+        w: &dyn Workload,
+        nb: u64,
+    ) -> (Vec<(String, f64)>, LaunchStats, u64) {
+        let (blocks, mut stats) = self.collect_blocks(launcher, map, nb);
+        let t = Instant::now();
+        let (outputs, predicated) = self.execute_collected(w, &blocks);
+        stats.threads_predicated_off = predicated;
+        self.metrics.record_exec_phase(t.elapsed().as_secs_f64());
+        (outputs, stats, 0)
     }
 
-    fn edm_pjrt(
+    /// Execute a collected block list over per-lane accumulators.
+    fn execute_collected(
         &self,
-        job: &Job,
-        rho: u32,
+        w: &dyn Workload,
         blocks: &[MappedBlock],
-    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
-        let exe = self.executor()?;
-        let w = EdmWorkload::generate(job.nb, rho, job.seed);
-        let mut batcher = TileBatcher::new(exe, "edm_tile")?;
-        let tiles: Vec<TileInput> = blocks
-            .iter()
-            .enumerate()
-            .map(|(i, b)| TileInput {
-                block_id: i as u64,
-                inputs: vec![w.chunk(b.data[1]).to_vec(), w.chunk(b.data[0]).to_vec()],
-            })
-            .collect();
-        let outs = batcher.run(&tiles)?;
-        let mut count = 0u64;
-        let mut sum = 0f64;
-        for out in &outs {
-            let b = &blocks[out.block_id as usize];
-            let (c, s) = w.aggregate_tile(b.data[0], b.data[1], &out.data);
-            count += c;
-            sum += s;
-        }
-        self.note_batches(&batcher);
-        Ok((
-            vec![
-                ("neighbour_count".into(), count as f64),
-                ("sum_d2".into(), sum),
-            ],
-            batcher.batches_run,
-        ))
-    }
-
-    // ---- Collision ---------------------------------------------------
-
-    fn collision_rust(
-        &self,
-        job: &Job,
-        rho: u32,
-        blocks: &[MappedBlock],
-    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
-        let w = CollisionWorkload::generate(job.nb, rho, job.seed);
-        let tile_len = (rho as usize) * (rho as usize);
-        let partials: Vec<u64> = parallel_map_reduce(self.workers, blocks, |batch| {
-            let mut tile = vec![0f32; tile_len];
-            let mut count = 0u64;
-            for b in batch {
-                w.tile_rust(b.data[0], b.data[1], &mut tile);
-                count += w.aggregate_tile(b.data[0], b.data[1], &tile);
-            }
-            count
-        });
-        let count: u64 = partials.iter().sum();
-        Ok((vec![("overlap_count".into(), count as f64)], 0))
-    }
-
-    fn collision_pjrt(
-        &self,
-        job: &Job,
-        rho: u32,
-        blocks: &[MappedBlock],
-    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
-        let exe = self.executor()?;
-        let w = CollisionWorkload::generate(job.nb, rho, job.seed);
-        let mut batcher = TileBatcher::new(exe, "collision_tile")?;
-        let tiles: Vec<TileInput> = blocks
-            .iter()
-            .enumerate()
-            .map(|(i, b)| TileInput {
-                block_id: i as u64,
-                inputs: vec![w.chunk(b.data[1]).to_vec(), w.chunk(b.data[0]).to_vec()],
-            })
-            .collect();
-        let outs = batcher.run(&tiles)?;
-        let count: u64 = outs
-            .iter()
-            .map(|out| {
-                let b = &blocks[out.block_id as usize];
-                w.aggregate_tile(b.data[0], b.data[1], &out.data)
-            })
-            .sum();
-        self.note_batches(&batcher);
-        Ok((
-            vec![("overlap_count".into(), count as f64)],
-            batcher.batches_run,
-        ))
-    }
-
-    // ---- N-body ------------------------------------------------------
-
-    fn nbody_rust(
-        &self,
-        job: &Job,
-        rho: u32,
-        blocks: &[MappedBlock],
-    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
-        let w = NBodyWorkload::generate(job.nb, rho, job.seed);
-        let acc = Mutex::new(vec![0f32; w.n as usize * 3]);
-        let rho64 = rho as u64;
-        parallel_map_reduce(self.workers, blocks, |batch| {
-            let mut tile = vec![0f32; rho as usize * 3];
-            let mut local: Vec<(u64, Vec<f32>)> = Vec::new();
-            for b in batch {
-                let (bc, br) = (b.data[0], b.data[1]);
-                w.tile_rust(bc, br, &mut tile);
-                local.push((br, tile.clone()));
-                if bc != br {
-                    w.tile_rust(br, bc, &mut tile);
-                    local.push((bc, tile.clone()));
+    ) -> (Vec<(String, f64)>, u64) {
+        let lanes = self.workers.max(1);
+        let accums: Vec<Mutex<Accum>> = (0..lanes).map(|_| Mutex::new(w.new_accum())).collect();
+        let predicated = AtomicU64::new(0);
+        if !blocks.is_empty() {
+            let chunk = blocks.len().div_ceil(lanes);
+            std::thread::scope(|scope| {
+                for (lane, batch) in blocks.chunks(chunk).enumerate() {
+                    let accums = &accums;
+                    let predicated = &predicated;
+                    scope.spawn(move || {
+                        let mut acc = accums[lane].lock().unwrap();
+                        let mut pred = 0u64;
+                        for b in batch {
+                            pred += w.process_block(&mut acc, b);
+                        }
+                        predicated.fetch_add(pred, Ordering::Relaxed);
+                    });
                 }
-            }
-            let mut acc = acc.lock().unwrap();
-            for (chunk_row, t) in local {
-                for i in 0..rho64 {
-                    for d in 0..3 {
-                        acc[((chunk_row * rho64 + i) * 3 + d) as usize] +=
-                            t[(i * 3 + d) as usize];
-                    }
-                }
-            }
-        });
-        let acc = acc.into_inner().unwrap();
-        Ok((
-            vec![("accel_checksum".into(), NBodyWorkload::checksum(&acc))],
-            0,
-        ))
-    }
-
-    fn nbody_pjrt(
-        &self,
-        job: &Job,
-        rho: u32,
-        blocks: &[MappedBlock],
-    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
-        let exe = self.executor()?;
-        let w = NBodyWorkload::generate(job.nb, rho, job.seed);
-        let mut batcher = TileBatcher::new(exe, "nbody_tile")?;
-        // Two directed tiles per off-diagonal block, one per diagonal.
-        let mut tiles = Vec::new();
-        let mut targets = Vec::new(); // chunk receiving the acceleration
-        for b in blocks {
-            let (bc, br) = (b.data[0], b.data[1]);
-            tiles.push(TileInput {
-                block_id: targets.len() as u64,
-                inputs: vec![w.chunk(br).to_vec(), w.chunk(bc).to_vec()],
             });
-            targets.push(br);
-            if bc != br {
-                tiles.push(TileInput {
-                    block_id: targets.len() as u64,
-                    inputs: vec![w.chunk(bc).to_vec(), w.chunk(br).to_vec()],
-                });
-                targets.push(bc);
-            }
         }
-        let outs = batcher.run(&tiles)?;
-        let rho64 = rho as u64;
-        let mut acc = vec![0f32; w.n as usize * 3];
-        for out in &outs {
-            let chunk_row = targets[out.block_id as usize];
-            for i in 0..rho64 {
-                for d in 0..3 {
-                    acc[((chunk_row * rho64 + i) * 3 + d) as usize] +=
-                        out.data[(i * 3 + d) as usize];
-                }
-            }
-        }
-        self.note_batches(&batcher);
-        Ok((
-            vec![("accel_checksum".into(), NBodyWorkload::checksum(&acc))],
-            batcher.batches_run,
-        ))
+        let outputs = w.finish(
+            accums
+                .into_iter()
+                .map(|a| a.into_inner().unwrap())
+                .collect(),
+        );
+        (outputs, predicated.load(Ordering::Relaxed))
     }
 
-    // ---- Triple ------------------------------------------------------
-
-    fn triple_rust(
+    /// PJRT backend: collect (the batcher packs fixed-size batches),
+    /// then dispatch through the workload's batched tile path. The
+    /// stats keep `threads_predicated_off = 0` — predication happens
+    /// tile-side in the artifacts, not in the launch kernel.
+    fn run_pjrt(
         &self,
-        job: &Job,
-        rho: u32,
-        blocks: &[MappedBlock],
-    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
-        let w = TripleWorkload::generate(job.nb, rho, job.seed);
-        let partials: Vec<f64> = parallel_map_reduce(self.workers, blocks, |batch| {
-            let mut e = 0f64;
-            for b in batch {
-                let (ci, cj, ck) = TripleWorkload::block_chunks(job.nb, b.data);
-                e += w.tile_rust(ci, cj, ck);
-            }
-            e
-        });
-        Ok((vec![("at_energy".into(), partials.iter().sum())], 0))
-    }
-
-    fn triple_pjrt(
-        &self,
-        job: &Job,
-        rho: u32,
-        blocks: &[MappedBlock],
-    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
-        let exe = self.executor()?;
-        let w = TripleWorkload::generate(job.nb, rho, job.seed);
-        let mut batcher = TileBatcher::new(exe, "triple_tile")?;
-        // Strictly-ordered blocks → full-tile Pallas kernel; blocks
-        // with repeated chunks → Rust per-thread predication (o(n²) of
-        // the n³ work; see module doc in workloads/triple.rs).
-        let mut strict_tiles = Vec::new();
-        let mut energy = 0f64;
-        for b in blocks {
-            let (ci, cj, ck) = TripleWorkload::block_chunks(job.nb, b.data);
-            if TripleWorkload::block_is_strict(ci, cj, ck) {
-                strict_tiles.push(TileInput {
-                    block_id: strict_tiles.len() as u64,
-                    inputs: vec![
-                        w.chunk(ci).to_vec(),
-                        w.chunk(cj).to_vec(),
-                        w.chunk(ck).to_vec(),
-                    ],
-                });
-            } else {
-                energy += w.tile_rust(ci, cj, ck);
-            }
+        launcher: &Launcher,
+        map: &dyn MThreadMap,
+        w: &dyn Workload,
+        nb: u64,
+    ) -> Result<(Vec<(String, f64)>, LaunchStats, u64), ScheduleError> {
+        if !w.supports_pjrt() {
+            return Err(ScheduleError::NoPjrtPath(w.name()));
         }
-        let outs = batcher.run(&strict_tiles)?;
-        energy += outs.iter().map(|o| o.data[0] as f64).sum::<f64>();
-        self.note_batches(&batcher);
-        Ok((
-            vec![("at_energy".into(), energy)],
-            batcher.batches_run,
-        ))
-    }
-
-    // ---- Cellular / TriMatVec (rust backends) -------------------------
-
-    fn cellular_rust(
-        &self,
-        job: &Job,
-        rho: u32,
-        blocks: &[MappedBlock],
-    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
-        let w = CellularWorkload::generate(job.nb, rho, job.seed);
-        let tile_len = (rho as usize) * (rho as usize);
-        let scatters: Vec<Vec<(u64, u64, Vec<f32>)>> =
-            parallel_map_reduce(self.workers, blocks, |batch| {
-                let mut out = Vec::with_capacity(batch.len());
-                for b in batch {
-                    let mut tile = vec![0f32; tile_len];
-                    w.tile_next(b.data[0], b.data[1], &mut tile);
-                    out.push((b.data[0], b.data[1], tile));
-                }
-                out
-            });
-        let mut next = vec![0u8; w.state.len()];
-        for group in scatters {
-            for (bc, br, tile) in group {
-                w.scatter_tile(bc, br, &tile, &mut next);
-            }
-        }
-        let pop: u64 = next.iter().map(|&c| c as u64).sum();
-        Ok((
-            vec![
-                ("population_before".into(), w.population() as f64),
-                ("population_after".into(), pop as f64),
-            ],
-            0,
-        ))
-    }
-
-    fn trimat_rust(
-        &self,
-        job: &Job,
-        rho: u32,
-        blocks: &[MappedBlock],
-    ) -> Result<(Vec<(String, f64)>, u64), ScheduleError> {
-        let w = TriMatVecWorkload::generate(job.nb, rho, job.seed);
-        let rho64 = rho as u64;
-        let partials: Vec<Vec<(u64, Vec<f32>)>> =
-            parallel_map_reduce(self.workers, blocks, |batch| {
-                let mut out = Vec::with_capacity(batch.len());
-                for b in batch {
-                    let mut tile = vec![0f32; rho as usize];
-                    w.tile_rust(b.data[0], b.data[1], &mut tile);
-                    out.push((b.data[1], tile));
-                }
-                out
-            });
-        let mut y = vec![0f32; w.n as usize];
-        for group in partials {
-            for (br, tile) in group {
-                for i in 0..rho64 {
-                    y[(br * rho64 + i) as usize] += tile[i as usize];
-                }
-            }
-        }
-        Ok((
-            vec![("y_checksum".into(), TriMatVecWorkload::checksum(&y))],
-            0,
-        ))
-    }
-
-    fn note_batches(&self, batcher: &TileBatcher) {
+        let exe = self
+            .executor
+            .clone()
+            .ok_or_else(|| ScheduleError::NoExecutor("executor not loaded".into()))?;
+        let (blocks, stats) = self.collect_blocks(launcher, map, nb);
+        let t = Instant::now();
+        let run = w.run_pjrt(exe, &blocks)?;
         self.metrics
             .tile_batches
-            .fetch_add(batcher.batches_run, std::sync::atomic::Ordering::Relaxed);
+            .fetch_add(run.batches_run, Ordering::Relaxed);
         self.metrics
             .tiles_padded
-            .fetch_add(batcher.tiles_padded, std::sync::atomic::Ordering::Relaxed);
+            .fetch_add(run.tiles_padded, Ordering::Relaxed);
+        self.metrics.record_exec_phase(t.elapsed().as_secs_f64());
+        Ok((run.outputs, stats, run.batches_run))
     }
-}
-
-/// Split `items` into per-worker contiguous batches, run `f` on each in
-/// scoped threads, and collect the per-batch results.
-fn parallel_map_reduce<T: Sync, R: Send>(
-    workers: usize,
-    items: &[T],
-    f: impl Fn(&[T]) -> R + Sync,
-) -> Vec<R> {
-    if items.is_empty() {
-        return Vec::new();
-    }
-    let workers = workers.clamp(1, items.len());
-    let chunk = items.len().div_ceil(workers);
-    let results = Mutex::new(Vec::new());
-    std::thread::scope(|scope| {
-        for (i, batch) in items.chunks(chunk).enumerate() {
-            let f = &f;
-            let results = &results;
-            scope.spawn(move || {
-                let r = f(batch);
-                results.lock().unwrap().push((i, r));
-            });
-        }
-    });
-    let mut out = results.into_inner().unwrap();
-    out.sort_by_key(|(i, _)| *i);
-    out.into_iter().map(|(_, r)| r).collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::job::WorkloadKind;
+    use crate::workloads::*;
 
     fn job(w: WorkloadKind, nb: u64, map: &str) -> Job {
         Job {
@@ -669,7 +411,7 @@ mod tests {
     #[test]
     fn edm_rust_matches_reference_under_all_maps() {
         let sched = Scheduler::new(4, None);
-        let w = EdmWorkload::generate(8, sched.rho2, 11);
+        let w = EdmWorkload::generate(8, sched.rho_for(2), 11);
         let (want_count, want_sum) = w.reference();
         for map in ["bb", "lambda2", "enum2", "rb", "ries"] {
             let r = sched.run(&job(WorkloadKind::Edm, 8, map)).unwrap();
@@ -688,7 +430,7 @@ mod tests {
     #[test]
     fn collision_rust_matches_reference_under_all_maps() {
         let sched = Scheduler::new(4, None);
-        let w = CollisionWorkload::generate(8, sched.rho2, 11);
+        let w = CollisionWorkload::generate(8, sched.rho_for(2), 11);
         let want = w.reference() as f64;
         for map in ["bb", "lambda2", "enum2", "rb", "ries"] {
             let r = sched.run(&job(WorkloadKind::Collision, 8, map)).unwrap();
@@ -699,7 +441,7 @@ mod tests {
     #[test]
     fn nbody_rust_matches_reference() {
         let sched = Scheduler::new(4, None);
-        let w = NBodyWorkload::generate(4, sched.rho2, 11);
+        let w = NBodyWorkload::generate(4, sched.rho_for(2), 11);
         let want = NBodyWorkload::checksum(&w.reference());
         for map in ["bb", "lambda2"] {
             let r = sched.run(&job(WorkloadKind::NBody, 4, map)).unwrap();
@@ -714,7 +456,7 @@ mod tests {
     #[test]
     fn triple_rust_matches_reference() {
         let sched = Scheduler::new(4, None);
-        let w = TripleWorkload::generate(4, sched.rho3, 11);
+        let w = TripleWorkload::generate(4, sched.rho_for(3), 11);
         let want = w.reference();
         for map in ["bb", "lambda3", "enum3", "lambda3-rec"] {
             let r = sched.run(&job(WorkloadKind::Triple, 4, map)).unwrap();
@@ -729,7 +471,7 @@ mod tests {
     #[test]
     fn cellular_step_population_matches_reference() {
         let sched = Scheduler::new(2, None);
-        let w = CellularWorkload::generate(8, sched.rho2, 11);
+        let w = CellularWorkload::generate(8, sched.rho_for(2), 11);
         let want: u64 = w.step_reference().iter().map(|&c| c as u64).sum();
         for map in ["bb", "lambda2", "rb"] {
             let r = sched.run(&job(WorkloadKind::Cellular, 8, map)).unwrap();
@@ -740,7 +482,7 @@ mod tests {
     #[test]
     fn trimat_matches_reference() {
         let sched = Scheduler::new(2, None);
-        let w = TriMatVecWorkload::generate(4, sched.rho2, 11);
+        let w = TriMatVecWorkload::generate(4, sched.rho_for(2), 11);
         let want = TriMatVecWorkload::checksum(&w.reference());
         let r = sched.run(&job(WorkloadKind::TriMatVec, 4, "lambda2")).unwrap();
         assert!((r.outputs[0].1 - want).abs() < 1e-3 * want.max(1.0));
@@ -750,7 +492,7 @@ mod tests {
     fn ktuple_rust_matches_reference_under_bb_and_lambda_m() {
         let sched = Scheduler::new(4, None);
         for (m, nb) in [(4u32, 4u64), (5, 3)] {
-            let w = KTupleWorkload::generate(nb, sched.rho_m, m, 11);
+            let w = KTupleWorkload::generate(nb, sched.rho_for(m), m, 11);
             let want = w.reference();
             for map in ["bb", "lambda-m"] {
                 let r = sched
@@ -772,9 +514,9 @@ mod tests {
 
     #[test]
     fn ktuple3_runs_on_the_adapted_fixed_maps() {
-        // At m=3 the general-m path reuses the λ3 family via adapters.
+        // At m=3 the unified pipeline reuses the λ3 family via adapters.
         let sched = Scheduler::new(2, None);
-        let w = KTupleWorkload::generate(4, sched.rho3, 3, 11);
+        let w = KTupleWorkload::generate(4, sched.rho_for(3), 3, 11);
         let want = w.reference();
         for map in ["bb", "lambda3", "enum3"] {
             let r = sched.run(&job(WorkloadKind::KTuple(3), 4, map)).unwrap();
@@ -783,6 +525,45 @@ mod tests {
                 (got - want).abs() < 1e-9 * want.abs().max(1.0),
                 "map={map}: {got} vs {want}"
             );
+        }
+    }
+
+    #[test]
+    fn ktuple2_shares_launch_geometry_with_edm() {
+        // The ρ-selection regression: a pair-style (m=2) ktuple job
+        // must run with rho2 under the same m=2 maps as edm — same
+        // blocks launched, same blocks mapped, same thread count.
+        let sched = Scheduler::new(2, None);
+        for map in ["bb", "lambda2", "rb"] {
+            let pair = sched.run(&job(WorkloadKind::KTuple(2), 8, map)).unwrap();
+            let edm = sched.run(&job(WorkloadKind::Edm, 8, map)).unwrap();
+            assert_eq!(pair.blocks_launched, edm.blocks_launched, "map={map}");
+            assert_eq!(pair.blocks_mapped, edm.blocks_mapped, "map={map}");
+            assert_eq!(pair.threads_launched, edm.threads_launched, "map={map}");
+        }
+        // And its energy is correct under the pair block convention.
+        let w = KTupleWorkload::generate(8, sched.rho_for(2), 2, 11);
+        let want = w.reference();
+        let got = sched
+            .run(&job(WorkloadKind::KTuple(2), 8, "lambda2"))
+            .unwrap()
+            .outputs[0]
+            .1;
+        assert!(
+            (got - want).abs() < 1e-9 * want.abs().max(1.0),
+            "{got} vs {want}"
+        );
+    }
+
+    #[test]
+    fn ktuple3_shares_launch_geometry_with_triple() {
+        let sched = Scheduler::new(2, None);
+        for map in ["bb", "lambda3"] {
+            let kt = sched.run(&job(WorkloadKind::KTuple(3), 4, map)).unwrap();
+            let tr = sched.run(&job(WorkloadKind::Triple, 4, map)).unwrap();
+            assert_eq!(kt.blocks_launched, tr.blocks_launched, "map={map}");
+            assert_eq!(kt.blocks_mapped, tr.blocks_mapped, "map={map}");
+            assert_eq!(kt.threads_launched, tr.threads_launched, "map={map}");
         }
     }
 
@@ -799,6 +580,33 @@ mod tests {
             sched.run(&j),
             Err(ScheduleError::NoPjrtPath("ktuple"))
         ));
+    }
+
+    #[test]
+    fn streaming_and_collect_agree_on_stats_and_outputs() {
+        // Smoke-level equivalence (the exhaustive per-map sweep lives
+        // in tests/engine_conformance.rs).
+        let streaming = Scheduler::new(3, None);
+        let mut collect = Scheduler::new(3, None);
+        collect.exec_mode = ExecMode::Collect;
+        for (w, nb, map) in [
+            (WorkloadKind::Edm, 8u64, "lambda2"),
+            (WorkloadKind::Triple, 4, "bb"),
+            (WorkloadKind::KTuple(4), 4, "lambda-m"),
+        ] {
+            let a = streaming.run(&job(w, nb, map)).unwrap();
+            let b = collect.run(&job(w, nb, map)).unwrap();
+            assert_eq!(a.blocks_launched, b.blocks_launched, "{}", w.name());
+            assert_eq!(a.blocks_mapped, b.blocks_mapped, "{}", w.name());
+            for ((ka, va), (kb, vb)) in a.outputs.iter().zip(&b.outputs) {
+                assert_eq!(ka, kb);
+                assert!(
+                    (va - vb).abs() <= 1e-9 * va.abs().max(1.0),
+                    "{} {ka}: {va} vs {vb}",
+                    w.name()
+                );
+            }
+        }
     }
 
     #[test]
@@ -843,13 +651,33 @@ mod tests {
         let snap = sched.metrics.snapshot();
         assert_eq!(snap.get("jobs_completed").unwrap().as_u64(), Some(2));
         assert!(snap.get("blocks_mapped").unwrap().as_u64().unwrap() > 0);
+        // Streaming mode records fused-phase samples, not map/exec.
+        assert_eq!(
+            snap.get("fused_phase").unwrap().get("count").unwrap().as_u64(),
+            Some(2)
+        );
     }
 
     #[test]
-    fn parallel_map_reduce_preserves_order() {
-        let items: Vec<u64> = (0..100).collect();
-        let sums = parallel_map_reduce(7, &items, |b| b.iter().sum::<u64>());
-        assert_eq!(sums.iter().sum::<u64>(), 4950);
-        assert!(sums.len() <= 8);
+    fn map_cache_hits_across_repeated_jobs() {
+        let sched = Scheduler::new(2, None);
+        sched.run(&job(WorkloadKind::Edm, 8, "lambda2")).unwrap();
+        sched.run(&job(WorkloadKind::Edm, 16, "lambda2")).unwrap();
+        sched.run(&job(WorkloadKind::Edm, 8, "bb")).unwrap();
+        let hits = sched.metrics.map_cache_hits.load(Ordering::Relaxed);
+        let misses = sched.metrics.map_cache_misses.load(Ordering::Relaxed);
+        assert_eq!(misses, 2, "lambda2 and bb resolved once each");
+        assert_eq!(hits, 1, "second lambda2 job reuses the layout");
+    }
+
+    #[test]
+    fn unsupported_size_still_counts_a_cache_entry() {
+        // Resolution happens before the size check, so the map object
+        // is reusable even after a bad-size job.
+        let sched = Scheduler::new(1, None);
+        assert!(sched.run(&job(WorkloadKind::Edm, 17, "lambda2")).is_err());
+        sched.run(&job(WorkloadKind::Edm, 16, "lambda2")).unwrap();
+        assert_eq!(sched.metrics.map_cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(sched.metrics.map_cache_hits.load(Ordering::Relaxed), 1);
     }
 }

@@ -1,13 +1,18 @@
 //! JSON-lines-over-TCP leader: accepts jobs from clients and runs them
-//! on the scheduler. One line in → one line out.
+//! through the bounded job queue on the unified engine. One line in →
+//! one line out; concurrent clients execute in parallel on the queue's
+//! worker pool instead of serializing behind each other.
 //!
 //! Protocol (request → response):
 //! - `{"cmd":"ping"}` → `{"ok":true,"pong":true}`
 //! - `{"cmd":"run","workload":"edm","nb":64,"map":"lambda2",
-//!    "backend":"rust","seed":7}` → `{"ok":true,"result":{…}}`
+//!    "backend":"rust","seed":7}` → `{"ok":true,"result":{…}}` — the
+//!    job goes through the queue; a full queue answers
+//!    `{"ok":false,"error":"job queue full …"}` (backpressure).
 //! - `{"cmd":"maps"}` → `{"ok":true,"maps":{"2":[…],…,"8":[…]}}` —
 //!   the registered map names per dimension (the unified registry).
-//! - `{"cmd":"metrics"}` → `{"ok":true,"metrics":{…}}`
+//! - `{"cmd":"metrics"}` → `{"ok":true,"metrics":{…}}` — includes
+//!   queue depth/wait and per-phase timings.
 //! - `{"cmd":"shutdown"}` → `{"ok":true}` and the server stops.
 //!
 //! Errors come back as `{"ok":false,"error":"…"}` — the connection
@@ -19,20 +24,42 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::coordinator::job::Job;
+use crate::coordinator::queue::{JobQueue, QueueConfig};
 use crate::coordinator::scheduler::Scheduler;
 use crate::util::json::{self, Json};
 use crate::{log_info, log_warn};
 
+/// Everything a request needs: the scheduler (for metrics/maps), the
+/// job queue (for runs), and the shutdown flag.
+pub struct ServerCtx {
+    pub scheduler: Arc<Scheduler>,
+    pub queue: JobQueue,
+    pub shutdown: Arc<AtomicBool>,
+}
+
+impl ServerCtx {
+    pub fn new(scheduler: Arc<Scheduler>, queue_cfg: QueueConfig) -> ServerCtx {
+        let queue = JobQueue::start(Arc::clone(&scheduler), queue_cfg);
+        ServerCtx {
+            scheduler,
+            queue,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        }
+    }
+}
+
 pub struct Server {
-    scheduler: Arc<Scheduler>,
-    shutdown: Arc<AtomicBool>,
+    ctx: Arc<ServerCtx>,
 }
 
 impl Server {
     pub fn new(scheduler: Arc<Scheduler>) -> Server {
+        Server::with_queue(scheduler, QueueConfig::default())
+    }
+
+    pub fn with_queue(scheduler: Arc<Scheduler>, cfg: QueueConfig) -> Server {
         Server {
-            scheduler,
-            shutdown: Arc::new(AtomicBool::new(false)),
+            ctx: Arc::new(ServerCtx::new(scheduler, cfg)),
         }
     }
 
@@ -49,14 +76,13 @@ impl Server {
         log_info!("server", "listening on {local}");
         on_bound(local);
         let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
-        while !self.shutdown.load(Ordering::SeqCst) {
+        while !self.ctx.shutdown.load(Ordering::SeqCst) {
             match listener.accept() {
                 Ok((stream, peer)) => {
                     log_info!("server", "connection from {peer}");
-                    let scheduler = Arc::clone(&self.scheduler);
-                    let shutdown = Arc::clone(&self.shutdown);
+                    let ctx = Arc::clone(&self.ctx);
                     conns.push(std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, &scheduler, &shutdown) {
+                        if let Err(e) = handle_conn(stream, &ctx) {
                             log_warn!("server", "connection error: {e}");
                         }
                     }));
@@ -70,20 +96,17 @@ impl Server {
         for c in conns {
             let _ = c.join();
         }
+        self.ctx.queue.shutdown();
         log_info!("server", "shut down");
         Ok(())
     }
 
     pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
-        Arc::clone(&self.shutdown)
+        Arc::clone(&self.ctx.shutdown)
     }
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    scheduler: &Scheduler,
-    shutdown: &AtomicBool,
-) -> std::io::Result<()> {
+fn handle_conn(stream: TcpStream, ctx: &ServerCtx) -> std::io::Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -91,11 +114,11 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let response = dispatch(&line, scheduler, shutdown);
+        let response = dispatch(&line, ctx);
         writer.write_all(response.to_string_compact().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
-        if shutdown.load(Ordering::SeqCst) {
+        if ctx.shutdown.load(Ordering::SeqCst) {
             break;
         }
     }
@@ -103,7 +126,7 @@ fn handle_conn(
 }
 
 /// Pure request → response mapping (unit-testable without sockets).
-pub fn dispatch(line: &str, scheduler: &Scheduler, shutdown: &AtomicBool) -> Json {
+pub fn dispatch(line: &str, ctx: &ServerCtx) -> Json {
     let err = |msg: String| Json::obj(vec![("ok", false.into()), ("error", msg.into())]);
     let req = match json::parse(line) {
         Ok(j) => j,
@@ -125,26 +148,26 @@ pub fn dispatch(line: &str, scheduler: &Scheduler, shutdown: &AtomicBool) -> Jso
         }
         Some("metrics") => Json::obj(vec![
             ("ok", true.into()),
-            ("metrics", scheduler.metrics.snapshot()),
+            ("metrics", ctx.scheduler.metrics.snapshot()),
         ]),
         Some("shutdown") => {
-            shutdown.store(true, Ordering::SeqCst);
+            ctx.shutdown.store(true, Ordering::SeqCst);
             Json::obj(vec![("ok", true.into())])
         }
         Some("run") => {
-            scheduler
+            ctx.scheduler
                 .metrics
                 .jobs_accepted
                 .fetch_add(1, Ordering::Relaxed);
             match Job::from_json(&req) {
                 None => err("invalid job (need workload, nb, map)".into()),
-                Some(job) => match scheduler.run(&job) {
+                Some(job) => match ctx.queue.run(job) {
                     Ok(result) => Json::obj(vec![
                         ("ok", true.into()),
                         ("result", result.to_json()),
                     ]),
                     Err(e) => {
-                        scheduler
+                        ctx.scheduler
                             .metrics
                             .jobs_failed
                             .fetch_add(1, Ordering::Relaxed);
@@ -161,37 +184,41 @@ pub fn dispatch(line: &str, scheduler: &Scheduler, shutdown: &AtomicBool) -> Jso
 mod tests {
     use super::*;
 
-    fn sched() -> Scheduler {
-        Scheduler::new(2, None)
+    fn ctx() -> ServerCtx {
+        ServerCtx::new(Arc::new(Scheduler::new(2, None)), QueueConfig::default())
     }
 
     #[test]
     fn dispatch_ping() {
-        let s = sched();
-        let flag = AtomicBool::new(false);
-        let r = dispatch(r#"{"cmd":"ping"}"#, &s, &flag);
+        let c = ctx();
+        let r = dispatch(r#"{"cmd":"ping"}"#, &c);
         assert_eq!(r.get("pong").unwrap().as_bool(), Some(true));
     }
 
     #[test]
-    fn dispatch_run_job() {
-        let s = sched();
-        let flag = AtomicBool::new(false);
+    fn dispatch_run_job_through_queue() {
+        let c = ctx();
         let r = dispatch(
             r#"{"cmd":"run","workload":"edm","nb":8,"map":"lambda2"}"#,
-            &s,
-            &flag,
+            &c,
         );
         assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
         let result = r.get("result").unwrap();
         assert_eq!(result.get("block_efficiency").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            c.scheduler
+                .metrics
+                .jobs_queued
+                .load(std::sync::atomic::Ordering::Relaxed),
+            1,
+            "run must pass through the job queue"
+        );
     }
 
     #[test]
     fn dispatch_maps_lists_names_per_dimension() {
-        let s = sched();
-        let flag = AtomicBool::new(false);
-        let r = dispatch(r#"{"cmd":"maps"}"#, &s, &flag);
+        let c = ctx();
+        let r = dispatch(r#"{"cmd":"maps"}"#, &c);
         assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
         let maps = r.get("maps").unwrap();
         let names = |m: &str| -> Vec<String> {
@@ -222,14 +249,13 @@ mod tests {
 
     #[test]
     fn dispatch_bad_json_and_unknown_cmd() {
-        let s = sched();
-        let flag = AtomicBool::new(false);
+        let c = ctx();
         assert_eq!(
-            dispatch("{oops", &s, &flag).get("ok").unwrap().as_bool(),
+            dispatch("{oops", &c).get("ok").unwrap().as_bool(),
             Some(false)
         );
         assert_eq!(
-            dispatch(r#"{"cmd":"dance"}"#, &s, &flag)
+            dispatch(r#"{"cmd":"dance"}"#, &c)
                 .get("ok")
                 .unwrap()
                 .as_bool(),
@@ -239,32 +265,32 @@ mod tests {
 
     #[test]
     fn dispatch_invalid_job_counts_failure() {
-        let s = sched();
-        let flag = AtomicBool::new(false);
+        let c = ctx();
         let r = dispatch(
             r#"{"cmd":"run","workload":"edm","nb":17,"map":"lambda2"}"#,
-            &s,
-            &flag,
+            &c,
         );
         assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
         assert_eq!(
-            s.metrics.jobs_failed.load(Ordering::Relaxed),
+            c.scheduler
+                .metrics
+                .jobs_failed
+                .load(std::sync::atomic::Ordering::Relaxed),
             1
         );
     }
 
     #[test]
     fn dispatch_shutdown_sets_flag() {
-        let s = sched();
-        let flag = AtomicBool::new(false);
-        dispatch(r#"{"cmd":"shutdown"}"#, &s, &flag);
-        assert!(flag.load(Ordering::SeqCst));
+        let c = ctx();
+        dispatch(r#"{"cmd":"shutdown"}"#, &c);
+        assert!(c.shutdown.load(Ordering::SeqCst));
     }
 
     #[test]
     fn server_end_to_end_over_tcp() {
         use std::io::{BufRead, BufReader, Write};
-        let server = Server::new(Arc::new(sched()));
+        let server = Server::new(Arc::new(Scheduler::new(2, None)));
         let (tx, rx) = std::sync::mpsc::channel();
         let handle = {
             let srv = server;
@@ -308,6 +334,7 @@ mod tests {
         conn.write_all(b"{\"cmd\":\"metrics\"}\n").unwrap();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("jobs_completed"));
+        assert!(line.contains("queue_depth"), "{line}");
 
         conn.write_all(b"{\"cmd\":\"shutdown\"}\n").unwrap();
         handle.join().unwrap();

@@ -1,11 +1,19 @@
 //! The launch engine: apply a map to a grid, execute surviving blocks.
 //!
-//! `Launcher::launch` is the simulated `kernel<<<grid, block>>>`: it
-//! walks every parallel block of every pass, applies the map (the hot
-//! path under test), and hands mapped blocks to the block kernel in
-//! chunks on the thread pool. Thread-level predication is the kernel's
-//! job (it knows the workload's domain); the launcher provides exact
-//! accounting of all four thread populations:
+//! [`Launcher::launch`] is the simulated `kernel<<<grid, block>>>`, and
+//! it is the *only* launch path: every map of every dimension goes
+//! through the [`MThreadMap`] contract (fixed m ≤ 3 maps arrive via
+//! [`FixedAdapter`](crate::maps::FixedAdapter)). It walks every
+//! parallel block of every pass, applies the map (the hot path under
+//! test), and hands mapped blocks to the block kernel *in place* — the
+//! kernel runs inside the map sweep (fused map+execute), so nothing is
+//! materialized between the phases. Callers that want the old
+//! collect-then-execute flow (trace capture, conformance tests) simply
+//! pass a collecting kernel.
+//!
+//! Thread-level predication is the kernel's job (it knows the
+//! workload's domain); the launcher provides exact accounting of all
+//! four thread populations:
 //!
 //! - `launched` — every thread the grid paid for,
 //! - `filler`   — threads of blocks the map discarded (`None`),
@@ -13,18 +21,19 @@
 //! - `predicated_off` — threads the kernel reported as out-of-domain
 //!   (diagonal blocks).
 //!
-//! A per-pass latency charge models kernel-launch overhead, and a
-//! `max_concurrent_launches` cap models the ≤32-kernel limit §III.B
-//! invokes against the arity-3 recursive map.
+//! A per-pass latency charge models kernel-launch overhead — *modeled
+//! only* by default ([`LaunchStats::launch_overhead`]); the actual
+//! wall-clock sleep is opt-in via [`LaunchConfig::simulate_latency`] —
+//! and a `max_concurrent_launches` cap models the ≤32-kernel limit
+//! §III.B invokes against the arity-3 recursive map.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use crate::maps::{MThreadMap, ThreadMap};
-use crate::util::threadpool::ThreadPool;
+use crate::maps::MThreadMap;
 
-use super::{BlockShape, MappedBlock, MappedBlockM};
+use super::{BlockShape, MappedBlock};
 
 /// Launch-time knobs.
 #[derive(Clone, Debug)]
@@ -32,11 +41,16 @@ pub struct LaunchConfig {
     pub shape: BlockShape,
     /// Blocks per work chunk handed to a pool worker.
     pub chunk_blocks: usize,
-    /// Simulated fixed cost per kernel launch (pass).
+    /// Modeled fixed cost per kernel-launch wave.
     pub launch_latency: Duration,
     /// Hardware cap on concurrent kernel launches (≈32 on the paper's
     /// GPUs): passes beyond the cap serialize into waves.
     pub max_concurrent_launches: u64,
+    /// When true, actually sleep for the modeled launch overhead
+    /// (latency experiments); when false — the default — the overhead
+    /// is accounted in [`LaunchStats::launch_overhead`] only and adds
+    /// no wall time.
+    pub simulate_latency: bool,
 }
 
 impl LaunchConfig {
@@ -46,6 +60,7 @@ impl LaunchConfig {
             chunk_blocks: 4096,
             launch_latency: Duration::from_micros(5),
             max_concurrent_launches: 32,
+            simulate_latency: false,
         }
     }
 }
@@ -63,7 +78,8 @@ pub struct LaunchStats {
     pub threads_mapped: u64,
     pub threads_predicated_off: u64,
     pub wall: Duration,
-    /// Simulated launch-latency component of `wall`.
+    /// Modeled launch-latency component (wall time only when
+    /// [`LaunchConfig::simulate_latency`] is set).
     pub launch_overhead: Duration,
 }
 
@@ -78,128 +94,57 @@ impl LaunchStats {
     pub fn block_efficiency(&self) -> f64 {
         self.blocks_mapped as f64 / self.blocks_launched as f64
     }
+
+    /// The deterministic accounting fields (everything except the
+    /// measured wall time) — what execution-mode equivalence means.
+    pub fn accounting(&self) -> [u64; 8] {
+        [
+            self.passes,
+            self.launch_waves,
+            self.blocks_launched,
+            self.blocks_filler,
+            self.blocks_mapped,
+            self.threads_launched,
+            self.threads_mapped,
+            self.threads_predicated_off,
+        ]
+    }
 }
 
 /// The simulated device.
 pub struct Launcher {
-    pool: Arc<ThreadPool>,
+    workers: usize,
     pub config: LaunchConfig,
 }
 
 impl Launcher {
-    pub fn new(pool: Arc<ThreadPool>, config: LaunchConfig) -> Launcher {
-        Launcher { pool, config }
+    /// A launcher that fans block ranges out over `workers` lanes
+    /// (scoped threads — no pool to spin up per job).
+    pub fn with_workers(workers: usize, config: LaunchConfig) -> Launcher {
+        Launcher {
+            workers: workers.max(1),
+            config,
+        }
     }
 
-    /// Convenience: a launcher over its own pool sized to the host.
-    pub fn with_workers(workers: usize, config: LaunchConfig) -> Launcher {
-        Launcher::new(Arc::new(ThreadPool::new(workers)), config)
+    /// Number of worker lanes.
+    pub fn workers(&self) -> usize {
+        self.workers
     }
 
     /// Run `map` over the full grid for problem size `nb` (blocks per
-    /// side) and invoke `kernel` on every mapped block. The kernel
-    /// returns how many of the block's threads were predicated off.
+    /// side) and invoke `kernel` on every mapped block, fused into the
+    /// map sweep. The kernel receives the *lane index* (stable per
+    /// worker across passes, `< workers()`) — per-lane accumulators are
+    /// how fused workloads aggregate without a blocks vector — and the
+    /// mapped block; it returns how many of the block's threads were
+    /// predicated off.
     ///
-    /// The kernel must be cheap to clone-share (Arc'd closure) and is
-    /// called concurrently from pool workers.
-    pub fn launch<K>(&self, map: &dyn ThreadMap, nb: u64, kernel: K) -> LaunchStats
+    /// The kernel is called concurrently from different lanes, but any
+    /// given lane index is used by at most one thread at a time.
+    pub fn launch<K>(&self, map: &dyn MThreadMap, nb: u64, kernel: K) -> LaunchStats
     where
-        K: Fn(&MappedBlock) -> u64 + Send + Sync,
-    {
-        assert!(
-            map.supports(nb),
-            "map {} does not support nb={nb}",
-            map.name()
-        );
-        let t0 = Instant::now();
-        let shape = self.config.shape;
-        let threads_per_block = shape.threads();
-        let passes = map.passes(nb);
-
-        let blocks_launched = AtomicU64::new(0);
-        let blocks_filler = AtomicU64::new(0);
-        let blocks_mapped = AtomicU64::new(0);
-        let predicated = AtomicU64::new(0);
-
-        for pass in 0..passes {
-            let grid = map.grid(nb, pass);
-            let total = grid.volume() as usize;
-            blocks_launched.fetch_add(total as u64, Ordering::Relaxed);
-            let chunks = total.div_ceil(self.config.chunk_blocks.max(1));
-
-            // Share state with the pool without 'static bounds: scoped
-            // threads via a small mutex'd vec of results per chunk.
-            let results: Mutex<Vec<(u64, u64, u64)>> = Mutex::new(Vec::new());
-            std::thread::scope(|scope| {
-                let workers = self.pool.size().min(chunks.max(1));
-                let chunk_size = total.div_ceil(workers.max(1));
-                for w in 0..workers {
-                    let lo = w * chunk_size;
-                    if lo >= total {
-                        break;
-                    }
-                    let hi = ((w + 1) * chunk_size).min(total);
-                    let kernel = &kernel;
-                    let results = &results;
-                    scope.spawn(move || {
-                        let mut filler = 0u64;
-                        let mut mapped = 0u64;
-                        let mut pred = 0u64;
-                        for idx in lo..hi {
-                            let p = grid.of_linear(idx as u64);
-                            match map.map_block(nb, pass, p) {
-                                None => filler += 1,
-                                Some(data) => {
-                                    mapped += 1;
-                                    let mb = MappedBlock {
-                                        parallel: p,
-                                        data,
-                                        pass,
-                                    };
-                                    pred += kernel(&mb);
-                                }
-                            }
-                        }
-                        results.lock().unwrap().push((filler, mapped, pred));
-                    });
-                }
-            });
-            for (f, m, p) in results.into_inner().unwrap() {
-                blocks_filler.fetch_add(f, Ordering::Relaxed);
-                blocks_mapped.fetch_add(m, Ordering::Relaxed);
-                predicated.fetch_add(p, Ordering::Relaxed);
-            }
-        }
-
-        // Launch-latency model: passes serialize in waves of
-        // max_concurrent_launches.
-        let waves = passes.div_ceil(self.config.max_concurrent_launches.max(1));
-        let overhead = self.config.launch_latency * waves as u32;
-        std::thread::sleep(overhead);
-
-        let bl = blocks_launched.load(Ordering::Relaxed);
-        let bm = blocks_mapped.load(Ordering::Relaxed);
-        LaunchStats {
-            passes,
-            launch_waves: waves,
-            blocks_launched: bl,
-            blocks_filler: blocks_filler.load(Ordering::Relaxed),
-            blocks_mapped: bm,
-            threads_launched: bl * threads_per_block,
-            threads_mapped: bm * threads_per_block,
-            threads_predicated_off: predicated.load(Ordering::Relaxed),
-            wall: t0.elapsed(),
-            launch_overhead: overhead,
-        }
-    }
-
-    /// The general-m counterpart of [`Launcher::launch`]: walk every
-    /// m-dimensional parallel orthotope of every pass of an
-    /// [`MThreadMap`], with the same four-population thread accounting
-    /// and launch-latency model. `config.shape.m` must match the map.
-    pub fn launch_m<K>(&self, map: &dyn MThreadMap, nb: u64, kernel: K) -> LaunchStats
-    where
-        K: Fn(&MappedBlockM) -> u64 + Send + Sync,
+        K: Fn(usize, &MappedBlock) -> u64 + Send + Sync,
     {
         assert!(
             map.supports(nb),
@@ -222,16 +167,18 @@ impl Launcher {
             blocks_launched.fetch_add(total as u64, Ordering::Relaxed);
             let chunks = total.div_ceil(self.config.chunk_blocks.max(1));
 
+            // Share state without 'static bounds: scoped threads, one
+            // contiguous block range per lane, results via a mutex.
             let results: Mutex<Vec<(u64, u64, u64)>> = Mutex::new(Vec::new());
             std::thread::scope(|scope| {
-                let workers = self.pool.size().min(chunks.max(1));
-                let chunk_size = total.div_ceil(workers.max(1));
-                for w in 0..workers {
-                    let lo = w * chunk_size;
+                let lanes = self.workers.min(chunks.max(1));
+                let chunk_size = total.div_ceil(lanes.max(1));
+                for lane in 0..lanes {
+                    let lo = lane * chunk_size;
                     if lo >= total {
                         break;
                     }
-                    let hi = ((w + 1) * chunk_size).min(total);
+                    let hi = ((lane + 1) * chunk_size).min(total);
                     let kernel = &kernel;
                     let results = &results;
                     let grid = &grid;
@@ -245,12 +192,12 @@ impl Launcher {
                                 None => filler += 1,
                                 Some(data) => {
                                     mapped += 1;
-                                    let mb = MappedBlockM {
+                                    let mb = MappedBlock {
                                         parallel: p,
                                         data,
                                         pass,
                                     };
-                                    pred += kernel(&mb);
+                                    pred += kernel(lane, &mb);
                                 }
                             }
                         }
@@ -265,9 +212,14 @@ impl Launcher {
             }
         }
 
+        // Launch-latency model: passes serialize in waves of
+        // max_concurrent_launches. Accounting-only unless the caller
+        // opted into simulating the wall time.
         let waves = passes.div_ceil(self.config.max_concurrent_launches.max(1));
         let overhead = self.config.launch_latency * waves as u32;
-        std::thread::sleep(overhead);
+        if self.config.simulate_latency {
+            std::thread::sleep(overhead);
+        }
 
         let bl = blocks_launched.load(Ordering::Relaxed);
         let bm = blocks_mapped.load(Ordering::Relaxed);
@@ -289,7 +241,7 @@ impl Launcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::maps::{BoundingBox2, Lambda2Map, Lambda3Map, RiesMap, ThreadMap};
+    use crate::maps::{adapt, BoundingBox2, Lambda2Map, Lambda3Map, RiesMap, ThreadMap};
 
     fn launcher(rho: u32, m: u32) -> Launcher {
         let mut cfg = LaunchConfig::new(BlockShape::new(rho, m));
@@ -301,7 +253,7 @@ mod tests {
     fn bb2_accounting_matches_closed_forms() {
         let l = launcher(16, 2);
         let nb = 64u64;
-        let stats = l.launch(&BoundingBox2, nb, |_b| 0);
+        let stats = l.launch(&adapt(BoundingBox2), nb, |_lane, _b| 0);
         assert_eq!(stats.blocks_launched, nb * nb);
         assert_eq!(stats.blocks_mapped, nb * (nb + 1) / 2);
         assert_eq!(stats.blocks_filler, nb * (nb - 1) / 2);
@@ -312,7 +264,7 @@ mod tests {
     #[test]
     fn lambda2_has_zero_filler() {
         let l = launcher(16, 2);
-        let stats = l.launch(&Lambda2Map, 128, |_b| 0);
+        let stats = l.launch(&adapt(Lambda2Map), 128, |_lane, _b| 0);
         assert_eq!(stats.blocks_filler, 0);
         assert_eq!(stats.block_efficiency(), 1.0);
     }
@@ -321,7 +273,7 @@ mod tests {
     fn lambda3_filler_matches_container_slack() {
         let l = launcher(8, 3);
         let nb = 32u64;
-        let stats = l.launch(&Lambda3Map, nb, |_b| 0);
+        let stats = l.launch(&adapt(Lambda3Map), nb, |_lane, _b| 0);
         let expect = Lambda3Map.parallel_volume(nb) - crate::maps::domain_volume(nb, 3);
         assert_eq!(stats.blocks_filler as u128, expect);
     }
@@ -332,7 +284,7 @@ mod tests {
         let l = launcher(4, 2);
         let nb = 32u64;
         let seen = Mutex::new(HashSet::new());
-        let stats = l.launch(&Lambda2Map, nb, |b| {
+        let stats = l.launch(&adapt(Lambda2Map), nb, |_lane, b| {
             assert!(seen.lock().unwrap().insert(b.data), "dup {:?}", b.data);
             0
         });
@@ -343,7 +295,7 @@ mod tests {
     fn predication_counts_flow_through() {
         let l = launcher(8, 2);
         // Kernel predicates off half of each diagonal block.
-        let stats = l.launch(&Lambda2Map, 16, |b| {
+        let stats = l.launch(&adapt(Lambda2Map), 16, |_lane, b| {
             if b.data[0] == b.data[1] {
                 28 // 8·7/2 threads above the strict diagonal
             } else {
@@ -355,30 +307,56 @@ mod tests {
     }
 
     #[test]
+    fn lane_indices_stay_within_workers() {
+        let l = launcher(4, 2);
+        let max_lane = AtomicU64::new(0);
+        l.launch(&adapt(BoundingBox2), 32, |lane, _b| {
+            max_lane.fetch_max(lane as u64, Ordering::Relaxed);
+            0
+        });
+        assert!((max_lane.load(Ordering::Relaxed) as usize) < l.workers());
+    }
+
+    #[test]
     fn multi_pass_map_counts_waves() {
         let mut cfg = LaunchConfig::new(BlockShape::new(4, 2));
         cfg.launch_latency = Duration::ZERO;
         cfg.max_concurrent_launches = 4;
         let l = Launcher::with_workers(2, cfg);
         let nb = 64u64;
-        let stats = l.launch(&RiesMap, nb, |_b| 0);
+        let stats = l.launch(&adapt(RiesMap), nb, |_lane, _b| 0);
         assert_eq!(stats.passes, 7); // log2(64) + 1
         assert_eq!(stats.launch_waves, 2); // ceil(7/4)
     }
 
     #[test]
-    #[should_panic(expected = "does not support")]
-    fn unsupported_size_panics() {
-        launcher(8, 2).launch(&Lambda2Map, 17, |_b| 0);
+    fn latency_is_modeled_but_not_slept_by_default() {
+        let mut cfg = LaunchConfig::new(BlockShape::new(4, 2));
+        cfg.launch_latency = Duration::from_millis(250);
+        assert!(!cfg.simulate_latency, "accounting-only is the default");
+        let l = Launcher::with_workers(2, cfg);
+        let stats = l.launch(&adapt(Lambda2Map), 8, |_lane, _b| 0);
+        assert_eq!(stats.launch_overhead, Duration::from_millis(250));
+        assert!(
+            stats.wall < Duration::from_millis(200),
+            "no sleep: wall {:?}",
+            stats.wall
+        );
     }
 
     #[test]
-    fn launch_m_lambda_m_accounting_matches_plan() {
+    #[should_panic(expected = "does not support")]
+    fn unsupported_size_panics() {
+        launcher(8, 2).launch(&adapt(Lambda2Map), 17, |_lane, _b| 0);
+    }
+
+    #[test]
+    fn lambda_m_accounting_matches_plan() {
         use crate::maps::{LambdaMMap, MThreadMap as _};
         let l = launcher(2, 4);
         let map = LambdaMMap::for_paper(4, 2);
         let nb = 28u64; // first covered size: parallel 31501, filler 36
-        let stats = l.launch_m(&map, nb, |_b| 0);
+        let stats = l.launch(&map, nb, |_lane, _b| 0);
         assert_eq!(stats.blocks_launched, 31501);
         assert_eq!(stats.blocks_filler, 36);
         assert_eq!(stats.blocks_mapped, 31465);
@@ -388,14 +366,14 @@ mod tests {
     }
 
     #[test]
-    fn launch_m_sees_each_data_block_once() {
+    fn general_m_sees_each_data_block_once() {
         use crate::maps::BoundingBoxM;
         use std::collections::HashSet;
         let l = launcher(2, 5);
         let map = BoundingBoxM::new(5);
         let nb = 4u64;
         let seen = Mutex::new(HashSet::new());
-        let stats = l.launch_m(&map, nb, |b| {
+        let stats = l.launch(&map, nb, |_lane, b| {
             assert!(seen.lock().unwrap().insert(b.data), "dup {:?}", b.data);
             0
         });
@@ -405,10 +383,10 @@ mod tests {
     }
 
     #[test]
-    fn launch_m_predication_counts_flow_through() {
+    fn general_m_predication_counts_flow_through() {
         use crate::maps::BoundingBoxM;
         let l = launcher(2, 4);
-        let stats = l.launch_m(&BoundingBoxM::new(4), 3, |b| {
+        let stats = l.launch(&BoundingBoxM::new(4), 3, |_lane, b| {
             // Predicate one thread off in every block on the main
             // diagonal plane Σ = nb-1.
             if b.data.sum() == 2 {

@@ -2,13 +2,19 @@
 //!
 //! Models the CUDA constructs of §I faithfully at the level the paper's
 //! claims live at: a *grid* is an orthotope of *blocks*; each block is
-//! a ρ^m cube of *threads*; a launch applies a [`ThreadMap`] to every
+//! a ρ^m cube of *threads*; a launch applies a thread map to every
 //! block, discards filler blocks, and runs a block kernel over the
 //! surviving ones on a worker pool (workers ≈ SMs). The launcher
 //! accounts launched/filler/useful/predicated-off thread counts — the
 //! parallel-space efficiency numbers the paper reasons about — plus a
 //! per-launch latency charge so multi-pass maps (Ries, λ3-rec) pay for
 //! their launch counts like real kernels do.
+//!
+//! Since the pipeline unification there is exactly one launch path:
+//! every map — fixed m ≤ 3 or general-m — goes through
+//! [`Launcher::launch`] over the [`MThreadMap`](crate::maps::MThreadMap)
+//! contract, and every mapped block is the dynamic-coordinate
+//! [`MappedBlock`].
 
 pub mod launcher;
 pub mod occupancy;
@@ -40,31 +46,16 @@ impl BlockShape {
 }
 
 /// A mapped block ready for execution: where it came from in parallel
-/// space and where it landed in data space (block coordinates).
+/// space and where it landed in data space (block coordinates, any
+/// dimension 2 ≤ m ≤ [`M_MAX`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MappedBlock {
-    pub parallel: [u64; 3],
-    pub data: [u64; 3],
-    pub pass: u64,
-}
-
-impl MappedBlock {
-    /// Data-space thread origin of this block.
-    pub fn thread_origin(&self, shape: BlockShape) -> [u64; 3] {
-        let r = shape.rho as u64;
-        [self.data[0] * r, self.data[1] * r, self.data[2] * r]
-    }
-}
-
-/// A mapped block of the general-m launch path (dynamic dimension).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct MappedBlockM {
     pub parallel: BlockM,
     pub data: BlockM,
     pub pass: u64,
 }
 
-impl MappedBlockM {
+impl MappedBlock {
     /// Data-space thread origin of this block.
     pub fn thread_origin(&self, shape: BlockShape) -> BlockM {
         let r = shape.rho as u64;
@@ -89,8 +80,8 @@ mod tests {
     }
 
     #[test]
-    fn mapped_block_m_thread_origin() {
-        let b = MappedBlockM {
+    fn mapped_block_thread_origin() {
+        let b = MappedBlock {
             parallel: BlockM::zeros(4),
             data: BlockM::from_slice(&[2, 3, 1, 5]),
             pass: 0,
@@ -100,13 +91,14 @@ mod tests {
     }
 
     #[test]
-    fn thread_origin_scales_by_rho() {
+    fn thread_origin_scales_by_rho_at_fixed_m() {
         let b = MappedBlock {
-            parallel: [0, 0, 0],
-            data: [2, 3, 1],
+            parallel: BlockM::zeros(3),
+            data: BlockM::from_slice(&[2, 3, 1]),
             pass: 0,
         };
-        assert_eq!(b.thread_origin(BlockShape::new(16, 3)), [32, 48, 16]);
+        let origin = b.thread_origin(BlockShape::new(16, 3));
+        assert_eq!(origin.as_slice(), &[32, 48, 16]);
     }
 
     #[test]

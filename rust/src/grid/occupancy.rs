@@ -55,20 +55,21 @@ mod tests {
     use crate::maps::{BoundingBox2, BoundingBox3, Lambda2Map, Lambda3Map};
     use std::time::Duration;
 
-    fn run(map: &dyn crate::maps::ThreadMap, nb: u64, m: u32) -> OccupancyReport {
+    fn run(map: Box<dyn ThreadMap>, nb: u64, m: u32) -> OccupancyReport {
         let mut cfg = LaunchConfig::new(BlockShape::new(4, m));
         cfg.launch_latency = Duration::ZERO;
         let l = Launcher::with_workers(2, cfg);
-        let stats = l.launch(map, nb, |_b| 0);
-        OccupancyReport::new(map, nb, stats)
+        let adapter = crate::maps::FixedAdapter::new(map);
+        let stats = l.launch(&adapter, nb, |_lane, _b| 0);
+        OccupancyReport::new(adapter.inner.as_ref(), nb, stats)
     }
 
     #[test]
     fn lambda2_improvement_over_bb_approaches_2x() {
         // The abstract's 2× claim, measured.
         let nb = 256;
-        let bb = run(&BoundingBox2, nb, 2);
-        let l2 = run(&Lambda2Map, nb, 2);
+        let bb = run(Box::new(BoundingBox2), nb, 2);
+        let l2 = run(Box::new(Lambda2Map), nb, 2);
         let imp = l2.improvement_over(&bb);
         assert!((imp - 2.0).abs() < 0.02, "improvement={imp}");
     }
@@ -78,8 +79,8 @@ mod tests {
         // The abstract's 6× claim, measured (λ3 carries 12.5% slack, so
         // ≈ 6/1.125 ≈ 5.3× at finite n).
         let nb = 64;
-        let bb = run(&BoundingBox3, nb, 3);
-        let l3 = run(&Lambda3Map, nb, 3);
+        let bb = run(Box::new(BoundingBox3), nb, 3);
+        let l3 = run(Box::new(Lambda3Map), nb, 3);
         let imp = l3.improvement_over(&bb);
         assert!(imp > 4.5 && imp < 6.0, "improvement={imp}");
     }
@@ -87,14 +88,14 @@ mod tests {
     #[test]
     fn measured_alpha_matches_closed_form() {
         let nb = 128;
-        let rep = run(&BoundingBox2, nb, 2);
+        let rep = run(Box::new(BoundingBox2), nb, 2);
         let closed = crate::maps::alpha(&BoundingBox2, nb);
         assert!((rep.measured_alpha() - closed).abs() < 1e-9);
     }
 
     #[test]
     fn table_row_mentions_map_name() {
-        let rep = run(&Lambda2Map, 64, 2);
+        let rep = run(Box::new(Lambda2Map), 64, 2);
         assert!(rep.table_row().contains("lambda2"));
     }
 }

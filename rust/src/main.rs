@@ -28,7 +28,7 @@ fn main() {
         opt("map", "thread map name", None),
         opt(
             "workload",
-            "edm|collision|nbody|triple|cellular|trimatvec|ktuple[3-8]",
+            "edm|collision|nbody|triple|cellular|trimatvec|ktuple[2-8]",
             Some("edm"),
         ),
         opt("backend", "rust|pjrt", Some("rust")),
@@ -264,10 +264,13 @@ fn build_scheduler(
     let handle = service.as_ref().map(|s| s.handle());
     let mut sched = Scheduler::new(workers, handle);
     if let Some(r) = cfg.get_int("coordinator", "rho2") {
-        sched.rho2 = r as u32;
+        sched.rho.rho2 = r as u32;
     }
     if let Some(r) = cfg.get_int("coordinator", "rho3") {
-        sched.rho3 = r as u32;
+        sched.rho.rho3 = r as u32;
+    }
+    if let Some(r) = cfg.get_int("coordinator", "rho_m") {
+        sched.rho.rho_m = r as u32;
     }
     Ok((service, sched))
 }

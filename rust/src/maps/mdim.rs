@@ -80,6 +80,12 @@ impl FixedAdapter {
     }
 }
 
+/// Wrap a fixed m ≤ 3 map for APIs that take the unified
+/// [`MThreadMap`] contract (the single launch path).
+pub fn adapt<T: ThreadMap + 'static>(inner: T) -> FixedAdapter {
+    FixedAdapter::new(Box::new(inner))
+}
+
 impl MThreadMap for FixedAdapter {
     fn name(&self) -> String {
         self.inner.name().to_string()

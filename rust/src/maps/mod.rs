@@ -52,7 +52,7 @@ pub use lambda3::Lambda3Map;
 pub use lambda3_recursive::Lambda3RecMap;
 pub use lambda_m::LambdaMMap;
 pub use mdim::{
-    alpha_m, in_domain_m, map_by_name, map_names, space_efficiency_m, BoundingBoxM,
+    adapt, alpha_m, in_domain_m, map_by_name, map_names, space_efficiency_m, BoundingBoxM,
     FixedAdapter, MThreadMap,
 };
 pub use nonpow2::{CoverFromAbove, CoverFromBelow2};

@@ -5,10 +5,15 @@
 //! outlier-robust summaries, and a uniform one-line-per-row report that
 //! EXPERIMENTS.md quotes directly. A `black_box` shim prevents the
 //! optimizer from deleting measured work.
+//!
+//! With `SIMPLEXMAP_BENCH_JSON=<path>` set, every measurement also
+//! appends one JSON line to `<path>` — CI uploads the accumulated file
+//! as the per-PR perf-trajectory artifact (BENCH_pr*.json).
 
 use std::hint;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::{fmt_count, fmt_secs, Summary};
 
 /// Optimizer barrier.
@@ -41,6 +46,33 @@ impl BenchResult {
             fmt_secs(self.secs_per_iter.stddev),
             fmt_count(self.throughput()),
         )
+    }
+
+    /// One machine-readable JSON line (the perf-trajectory format).
+    pub fn json_line(&self) -> String {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("items_per_iter", self.items_per_iter.into()),
+            ("p50_secs", self.secs_per_iter.p50.into()),
+            ("mean_secs", self.secs_per_iter.mean.into()),
+            ("stddev_secs", self.secs_per_iter.stddev.into()),
+            ("samples", (self.secs_per_iter.count as u64).into()),
+            ("throughput_per_sec", self.throughput().into()),
+        ])
+        .to_string_compact()
+    }
+
+    /// Append the JSON line to `path` (best effort — benches must not
+    /// fail because an artifact directory is read-only).
+    pub fn export_json(&self, path: &str) {
+        use std::io::Write as _;
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+        {
+            let _ = writeln!(f, "{}", self.json_line());
+        }
     }
 }
 
@@ -94,6 +126,11 @@ impl Bencher {
             secs_per_iter: Summary::from_samples(&samples).expect("at least one sample"),
         };
         println!("{}", result.report_line());
+        if let Ok(path) = std::env::var("SIMPLEXMAP_BENCH_JSON") {
+            if !path.is_empty() {
+                result.export_json(&path);
+            }
+        }
         self.results.push(result);
         self.results.last().unwrap()
     }
@@ -164,5 +201,36 @@ mod tests {
         let line = r.report_line();
         assert!(line.contains("fmt-check"));
         assert!(line.contains("/s"));
+    }
+
+    #[test]
+    fn json_line_parses_and_carries_the_fields() {
+        let mut b = quick();
+        let r = b.bench("json-check", 100, || {}).clone();
+        let j = crate::util::json::parse(&r.json_line()).expect("valid json");
+        assert_eq!(j.get("name").unwrap().as_str(), Some("json-check"));
+        assert_eq!(j.get("items_per_iter").unwrap().as_u64(), Some(100));
+        assert!(j.get("throughput_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("samples").unwrap().as_u64().unwrap() >= 3);
+    }
+
+    #[test]
+    fn export_json_appends_one_line_per_result() {
+        let mut b = quick();
+        let r = b.bench("export-check", 10, || {}).clone();
+        let path = std::env::temp_dir().join(format!(
+            "simplexmap_benchkit_test_{}.jsonl",
+            std::process::id()
+        ));
+        let path_str = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        r.export_json(&path_str);
+        r.export_json(&path_str);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            assert!(crate::util::json::parse(line).is_ok(), "{line}");
+        }
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,5 +1,5 @@
 //! Dependency-free infrastructure: PRNG, stats, JSON, CLI parsing,
-//! logging, thread pool, property-test driver and bench harness.
+//! logging, property-test driver and bench harness.
 //!
 //! These exist because the build environment is fully offline and the
 //! vendored crate set does not include `rand`, `serde`, `clap`,
@@ -15,4 +15,3 @@ pub mod logger;
 pub mod prng;
 pub mod proptest;
 pub mod stats;
-pub mod threadpool;

@@ -9,7 +9,9 @@
 //! no synchronization beyond the step barrier. (With BB, the same
 //! holds only after filler discard — same code path, more blocks.)
 
+use crate::grid::MappedBlock;
 use crate::util::prng::Xoshiro256;
+use crate::workloads::{inclusive_pair_predicated_off, Accum, Workload};
 
 pub struct CellularWorkload {
     pub n: u64,
@@ -105,6 +107,63 @@ impl CellularWorkload {
 
     pub fn population(&self) -> u64 {
         self.state.iter().map(|&c| c as u64).sum()
+    }
+}
+
+/// Per-lane state: a tile plus this lane's slice of the next-state
+/// buffer. The maps are bijective at block level, so every cell is
+/// written by exactly one block — lane buffers merge with a plain OR
+/// (unwritten stays 0, and a written dead cell is also 0).
+struct CellularAccum {
+    tile: Vec<f32>,
+    next: Vec<u8>,
+}
+
+impl Workload for CellularWorkload {
+    fn name(&self) -> &'static str {
+        "cellular"
+    }
+
+    fn m(&self) -> u32 {
+        2
+    }
+
+    fn new_accum(&self) -> Accum {
+        Box::new(CellularAccum {
+            tile: vec![0f32; self.rho as usize * self.rho as usize],
+            next: vec![0u8; self.state.len()],
+        })
+    }
+
+    fn process_block(&self, acc: &mut Accum, b: &MappedBlock) -> u64 {
+        let a = acc.downcast_mut::<CellularAccum>().expect("cellular accum");
+        let (bc, br) = (b.data[0], b.data[1]);
+        self.tile_next(bc, br, &mut a.tile);
+        self.scatter_tile(bc, br, &a.tile, &mut a.next);
+        inclusive_pair_predicated_off(bc, br, self.rho)
+    }
+
+    fn finish(&self, accs: Vec<Accum>) -> Vec<(String, f64)> {
+        let mut next = vec![0u8; self.state.len()];
+        for acc in accs {
+            let a = acc.downcast::<CellularAccum>().expect("cellular accum");
+            for (n, v) in next.iter_mut().zip(&a.next) {
+                *n |= v;
+            }
+        }
+        let pop: u64 = next.iter().map(|&c| c as u64).sum();
+        vec![
+            ("population_before".into(), self.population() as f64),
+            ("population_after".into(), pop as f64),
+        ]
+    }
+
+    fn reference_outputs(&self) -> Vec<(String, f64)> {
+        let pop: u64 = self.step_reference().iter().map(|&c| c as u64).sum();
+        vec![
+            ("population_before".into(), self.population() as f64),
+            ("population_after".into(), pop as f64),
+        ]
     }
 }
 

@@ -2,8 +2,11 @@
 //! Avril et al. [1]: count (and report) overlapping axis-aligned
 //! bounding-box pairs among n boxes, testing only unique pairs.
 
+use crate::coordinator::batcher::{TileBatcher, TileInput};
+use crate::grid::MappedBlock;
+use crate::runtime::ExecHandle;
 use crate::util::prng::Xoshiro256;
-use crate::workloads::strict_pair_mask;
+use crate::workloads::{strict_pair_mask, strict_pair_predicated_off, Accum, PjrtRun, Workload};
 
 /// Floats per box: (xmin, ymin, zmin, xmax, ymax, zmax) — matches the
 /// AOT artifact layout (aot.py, kernels/collision.py).
@@ -88,6 +91,81 @@ impl CollisionWorkload {
             }
         }
         count
+    }
+}
+
+struct CollisionAccum {
+    tile: Vec<f32>,
+    count: u64,
+}
+
+impl Workload for CollisionWorkload {
+    fn name(&self) -> &'static str {
+        "collision"
+    }
+
+    fn m(&self) -> u32 {
+        2
+    }
+
+    fn new_accum(&self) -> Accum {
+        Box::new(CollisionAccum {
+            tile: vec![0f32; self.rho as usize * self.rho as usize],
+            count: 0,
+        })
+    }
+
+    fn process_block(&self, acc: &mut Accum, b: &MappedBlock) -> u64 {
+        let a = acc.downcast_mut::<CollisionAccum>().expect("collision accum");
+        let (bc, br) = (b.data[0], b.data[1]);
+        self.tile_rust(bc, br, &mut a.tile);
+        a.count += self.aggregate_tile(bc, br, &a.tile);
+        strict_pair_predicated_off(bc, br, self.rho)
+    }
+
+    fn finish(&self, accs: Vec<Accum>) -> Vec<(String, f64)> {
+        let count: u64 = accs
+            .into_iter()
+            .map(|acc| acc.downcast::<CollisionAccum>().expect("collision accum").count)
+            .sum();
+        vec![("overlap_count".into(), count as f64)]
+    }
+
+    fn reference_outputs(&self) -> Vec<(String, f64)> {
+        vec![("overlap_count".into(), self.reference() as f64)]
+    }
+
+    fn supports_pjrt(&self) -> bool {
+        true
+    }
+
+    fn run_pjrt(
+        &self,
+        exe: ExecHandle,
+        blocks: &[MappedBlock],
+    ) -> crate::runtime::Result<PjrtRun> {
+        let mut batcher = TileBatcher::new(exe, "collision_tile")?;
+        let tiles: Vec<TileInput> = blocks
+            .iter()
+            .enumerate()
+            .map(|(i, b)| TileInput {
+                block_id: i as u64,
+                inputs: vec![self.chunk(b.data[1]).to_vec(), self.chunk(b.data[0]).to_vec()],
+            })
+            .collect();
+        let outs = batcher.run(&tiles)?;
+        let count: u64 = outs
+            .iter()
+            .map(|out| {
+                let b = &blocks[out.block_id as usize];
+                self.aggregate_tile(b.data[0], b.data[1], &out.data)
+            })
+            .sum();
+        Ok(PjrtRun {
+            outputs: vec![("overlap_count".into(), count as f64)],
+            batches_run: batcher.batches_run,
+            tiles_padded: batcher.tiles_padded,
+        })
     }
 }
 

@@ -3,8 +3,11 @@
 //! points, of which only the strictly-lower triangle is computed
 //! (symmetry), plus an ε-neighbour count (the DNA-distance use case).
 
+use crate::coordinator::batcher::{TileBatcher, TileInput};
+use crate::grid::MappedBlock;
+use crate::runtime::ExecHandle;
 use crate::util::prng::Xoshiro256;
-use crate::workloads::strict_pair_mask;
+use crate::workloads::{strict_pair_mask, strict_pair_predicated_off, Accum, PjrtRun, Workload};
 
 /// Point dimensionality — fixed by the AOT artifact (aot.py D=8).
 pub const EDM_DIM: usize = 8;
@@ -108,6 +111,101 @@ impl EdmWorkload {
             }
         }
         (count, sum)
+    }
+}
+
+/// Per-lane streaming state: one reusable tile plus the partial
+/// (count, Σd²) aggregates.
+struct EdmAccum {
+    tile: Vec<f32>,
+    count: u64,
+    sum: f64,
+}
+
+impl Workload for EdmWorkload {
+    fn name(&self) -> &'static str {
+        "edm"
+    }
+
+    fn m(&self) -> u32 {
+        2
+    }
+
+    fn new_accum(&self) -> Accum {
+        Box::new(EdmAccum {
+            tile: vec![0f32; self.rho as usize * self.rho as usize],
+            count: 0,
+            sum: 0.0,
+        })
+    }
+
+    fn process_block(&self, acc: &mut Accum, b: &MappedBlock) -> u64 {
+        let a = acc.downcast_mut::<EdmAccum>().expect("edm accum");
+        let (bc, br) = (b.data[0], b.data[1]);
+        self.tile_rust(bc, br, &mut a.tile);
+        let (c, s) = self.aggregate_tile(bc, br, &a.tile);
+        a.count += c;
+        a.sum += s;
+        strict_pair_predicated_off(bc, br, self.rho)
+    }
+
+    fn finish(&self, accs: Vec<Accum>) -> Vec<(String, f64)> {
+        let mut count = 0u64;
+        let mut sum = 0f64;
+        for acc in accs {
+            let a = acc.downcast::<EdmAccum>().expect("edm accum");
+            count += a.count;
+            sum += a.sum;
+        }
+        vec![
+            ("neighbour_count".into(), count as f64),
+            ("sum_d2".into(), sum),
+        ]
+    }
+
+    fn reference_outputs(&self) -> Vec<(String, f64)> {
+        let (count, sum) = self.reference();
+        vec![
+            ("neighbour_count".into(), count as f64),
+            ("sum_d2".into(), sum),
+        ]
+    }
+
+    fn supports_pjrt(&self) -> bool {
+        true
+    }
+
+    fn run_pjrt(
+        &self,
+        exe: ExecHandle,
+        blocks: &[MappedBlock],
+    ) -> crate::runtime::Result<PjrtRun> {
+        let mut batcher = TileBatcher::new(exe, "edm_tile")?;
+        let tiles: Vec<TileInput> = blocks
+            .iter()
+            .enumerate()
+            .map(|(i, b)| TileInput {
+                block_id: i as u64,
+                inputs: vec![self.chunk(b.data[1]).to_vec(), self.chunk(b.data[0]).to_vec()],
+            })
+            .collect();
+        let outs = batcher.run(&tiles)?;
+        let mut count = 0u64;
+        let mut sum = 0f64;
+        for out in &outs {
+            let b = &blocks[out.block_id as usize];
+            let (c, s) = self.aggregate_tile(b.data[0], b.data[1], &out.data);
+            count += c;
+            sum += s;
+        }
+        Ok(PjrtRun {
+            outputs: vec![
+                ("neighbour_count".into(), count as f64),
+                ("sum_d2".into(), sum),
+            ],
+            batches_run: batcher.batches_run,
+            tiles_padded: batcher.tiles_padded,
+        })
     }
 }
 

@@ -12,8 +12,11 @@
 //! Blocks with strictly decreasing chunks are full ρ^m tiles; repeated
 //! chunks predicate per-thread (the o(n^m) diagonal charge).
 
+use crate::grid::MappedBlock;
 use crate::simplex::block_m::BlockM;
+use crate::simplex::volume::binomial;
 use crate::util::prng::Xoshiro256;
+use crate::workloads::{Accum, Workload};
 
 /// Plummer-style softening of the pairwise-distance denominator.
 pub const EPS: f32 = 1e-3;
@@ -41,14 +44,28 @@ impl KTupleWorkload {
         &self.pos[lo..lo + self.rho as usize * 3]
     }
 
-    /// Convert a simplex-coordinate data block to the ordered chunk
-    /// tuple `c_1 ≥ c_2 ≥ … ≥ c_m` (descending): `c_{m-i}` is the
+    /// Convert a data block to the ordered chunk tuple
+    /// `c_1 ≥ c_2 ≥ … ≥ c_m` (descending).
+    ///
+    /// For m ≥ 3 blocks arrive in simplex coordinates: `c_{m-i}` is the
     /// prefix sum `d_0 + … + d_i`, and `c_1 = nb - 1 - d_{m-1}` — the
     /// m-dim generalization of the triple workload's block conversion,
     /// a bijection from `Bm(nb)` onto ordered chunk tuples.
+    ///
+    /// m = 2 is special: the 2-simplex block domain is the *inclusive
+    /// lower-triangle pair* convention `(bc, br)` with `bc ≤ br` (see
+    /// [`crate::maps`] module doc), not simplex coordinates, so the
+    /// descending chunk pair is simply `(br, bc)`. (Feeding pairs
+    /// through the simplex formula was the ρ-selection bug surface the
+    /// old `run_ktuple` carried: it asserted the map's m but converted
+    /// with the wrong convention.)
     #[inline]
     pub fn block_chunks(nb: u64, d: &BlockM) -> BlockM {
         let m = d.m() as usize;
+        if m == 2 {
+            debug_assert!(d[0] <= d[1] && d[1] < nb);
+            return BlockM::from_slice(&[d[1], d[0]]);
+        }
         let mut c = BlockM::zeros(m as u32);
         let mut prefix = 0u64;
         for i in 0..m - 1 {
@@ -58,6 +75,28 @@ impl KTupleWorkload {
         c[0] = nb - 1 - d[m - 1];
         debug_assert!((0..m - 1).all(|i| c[i] >= c[i + 1]) && c[0] < nb);
         c
+    }
+
+    /// Closed-form count of threads predicated off in the ρ^m tile of
+    /// a descending chunk tuple: local tuples survive iff they are
+    /// strictly decreasing within every run of equal chunks, so the
+    /// survivors are `Π C(ρ, s_i)` over the run lengths `s_i` and the
+    /// predicated count is `ρ^m − Π C(ρ, s_i)` (zero for strictly
+    /// decreasing blocks, where every run has length 1).
+    pub fn predicated_off(chunks: &BlockM, rho: u32) -> u64 {
+        let s = chunks.as_slice();
+        let rho = rho as u128;
+        let mut valid = 1u128;
+        let mut i = 0;
+        while i < s.len() {
+            let mut j = i + 1;
+            while j < s.len() && s[j] == s[i] {
+                j += 1;
+            }
+            valid *= binomial(rho, (j - i) as u128);
+            i = j;
+        }
+        (rho.pow(s.len() as u32) - valid) as u64
     }
 
     /// Whether all chunks are strictly decreasing — i.e. the whole
@@ -149,6 +188,44 @@ impl KTupleWorkload {
     }
 }
 
+struct KTupleAccum {
+    energy: f64,
+}
+
+impl Workload for KTupleWorkload {
+    fn name(&self) -> &'static str {
+        "ktuple"
+    }
+
+    fn m(&self) -> u32 {
+        self.m
+    }
+
+    fn new_accum(&self) -> Accum {
+        Box::new(KTupleAccum { energy: 0.0 })
+    }
+
+    fn process_block(&self, acc: &mut Accum, b: &MappedBlock) -> u64 {
+        let a = acc.downcast_mut::<KTupleAccum>().expect("ktuple accum");
+        let nb = self.n / self.rho as u64;
+        let chunks = KTupleWorkload::block_chunks(nb, &b.data);
+        a.energy += self.tile_rust(&chunks);
+        KTupleWorkload::predicated_off(&chunks, self.rho)
+    }
+
+    fn finish(&self, accs: Vec<Accum>) -> Vec<(String, f64)> {
+        let energy: f64 = accs
+            .into_iter()
+            .map(|acc| acc.downcast::<KTupleAccum>().expect("ktuple accum").energy)
+            .sum();
+        vec![("ktuple_energy".into(), energy)]
+    }
+
+    fn reference_outputs(&self) -> Vec<(String, f64)> {
+        vec![("ktuple_energy".into(), self.reference())]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,6 +254,84 @@ mod tests {
                 assert!(seen.insert(c), "{d:?} duplicates {c:?}");
             }
             assert_eq!(seen.len() as u128, domain_volume(nb, m), "m={m}");
+        }
+    }
+
+    #[test]
+    fn block_chunks_m2_uses_the_pair_convention() {
+        // m=2 blocks are inclusive lower-triangle pairs (bc ≤ br), not
+        // simplex coordinates; chunks are simply (br, bc), bijectively.
+        let nb = 6u64;
+        let mut seen = std::collections::HashSet::new();
+        for d in simplex_blocks(nb, 2) {
+            let c = KTupleWorkload::block_chunks(nb, &d);
+            assert_eq!(c.as_slice(), &[d[1], d[0]], "{d:?}");
+            assert!(seen.insert(c));
+        }
+        assert_eq!(seen.len() as u128, domain_volume(nb, 2));
+    }
+
+    #[test]
+    fn pair_sweep_matches_reference_at_m2() {
+        let (nb, rho) = (4u64, 4u32);
+        let w = KTupleWorkload::generate(nb, rho, 2, 7);
+        let mut total = 0f64;
+        for d in simplex_blocks(nb, 2) {
+            total += w.tile_rust(&KTupleWorkload::block_chunks(nb, &d));
+        }
+        let want = w.reference();
+        assert!(
+            (total - want).abs() < 1e-9 * want.abs().max(1.0),
+            "{total} vs {want}"
+        );
+    }
+
+    #[test]
+    fn predicated_off_matches_brute_force() {
+        // ρ^m − (strictly decreasing survivors), counted the slow way.
+        fn brute(chunks: &BlockM, rho: u32) -> u64 {
+            let m = chunks.m() as usize;
+            let rho = rho as u64;
+            let mut off = 0u64;
+            let mut local = vec![0u64; m];
+            let mut g = vec![0u64; m];
+            'tile: loop {
+                for a in 0..m {
+                    g[a] = chunks[a] * rho + local[a];
+                }
+                if !g.windows(2).all(|w| w[0] > w[1]) {
+                    off += 1;
+                }
+                let mut i = 0;
+                loop {
+                    if i == m {
+                        break 'tile;
+                    }
+                    local[i] += 1;
+                    if local[i] < rho {
+                        break;
+                    }
+                    local[i] = 0;
+                    i += 1;
+                }
+            }
+            off
+        }
+        for (chunks, rho) in [
+            (vec![3u64, 2, 1], 2u32),
+            (vec![3, 3, 1], 2),
+            (vec![2, 2, 2], 3),
+            (vec![5, 3, 3, 0], 2),
+            (vec![4, 4, 4, 4], 2),
+            (vec![7, 2], 4),
+            (vec![2, 2], 4),
+        ] {
+            let b = BlockM::from_slice(&chunks);
+            assert_eq!(
+                KTupleWorkload::predicated_off(&b, rho),
+                brute(&b, rho),
+                "{chunks:?} ρ={rho}"
+            );
         }
     }
 

@@ -1,21 +1,31 @@
 //! The paper's motivating workloads (§I), each runnable under any
-//! registered [`ThreadMap`](crate::maps::ThreadMap) and under two tile
-//! backends (pure Rust, and the AOT Pallas kernels via PJRT).
+//! registered map and under two tile backends (pure Rust, and the AOT
+//! Pallas kernels via PJRT).
 //!
-//! Every workload follows the same structure:
-//! - `generate(nb, rho, seed)` — deterministic synthetic data sized to
-//!   the block grid (the substituted "real" dataset; see DESIGN.md
-//!   §Substitutions),
-//! - a pure-Rust tile kernel semantically identical to the Pallas one,
-//! - `aggregate` logic that applies the *thread-level* domain predicate
-//!   (diagonal blocks are only partially inside the strict domain),
-//! - a brute-force `reference` used by the correctness tests.
+//! Every workload implements the [`Workload`] trait — the single
+//! contract the unified execution engine dispatches on:
+//!
+//! - `generate(nb, rho, seed)` (inherent, per type) — deterministic
+//!   synthetic data sized to the block grid (the substituted "real"
+//!   dataset; see DESIGN.md §Substitutions), reached uniformly through
+//!   [`build`],
+//! - [`Workload::new_accum`] / [`Workload::process_block`] — the fused
+//!   block kernel: one per-lane accumulator (tile scratch + partial
+//!   aggregates) advanced in place while the launcher sweeps the map,
+//!   applying the *thread-level* domain predicate and reporting the
+//!   predicated-off thread count,
+//! - [`Workload::finish`] — fold the per-lane accumulators (in lane
+//!   order, deterministically) into the job's scalar outputs,
+//! - [`Workload::reference_outputs`] — the brute-force reference used
+//!   by the correctness tests,
+//! - [`Workload::run_pjrt`] — the batched AOT tile path, for the
+//!   workloads that ship artifacts ([`Workload::supports_pjrt`]).
 //!
 //! Thread-level domains: EDM/collision/n-body consume unique pairs
 //! `col < row < n`; triple consumes unique triples `k < j < i < n`;
 //! cellular/trimatvec consume the inclusive triangle `col ≤ row`;
-//! ktuple consumes unique m-tuples `g_m < … < g_1 < n` (the general-m
-//! subsystem's workload, any 2 ≤ m ≤ 8).
+//! ktuple consumes unique m-tuples `g_m < … < g_1 < n` (any
+//! 2 ≤ m ≤ 8 — at m = 2 it is the pair-style regression workload).
 
 pub mod cellular;
 pub mod collision;
@@ -25,6 +35,8 @@ pub mod nbody;
 pub mod triple;
 pub mod trimat;
 
+use std::any::Any;
+
 pub use cellular::CellularWorkload;
 pub use collision::CollisionWorkload;
 pub use edm::EdmWorkload;
@@ -32,6 +44,81 @@ pub use ktuple::KTupleWorkload;
 pub use nbody::NBodyWorkload;
 pub use triple::TripleWorkload;
 pub use trimat::TriMatVecWorkload;
+
+use crate::coordinator::job::WorkloadKind;
+use crate::grid::MappedBlock;
+use crate::runtime::ExecHandle;
+
+/// Type-erased per-lane streaming state (tile scratch + partial
+/// aggregates). Each launcher lane owns exactly one; implementations
+/// downcast to their concrete accumulator.
+pub type Accum = Box<dyn Any + Send>;
+
+/// Result of a batched PJRT execution.
+pub struct PjrtRun {
+    pub outputs: Vec<(String, f64)>,
+    pub batches_run: u64,
+    pub tiles_padded: u64,
+}
+
+/// One workload, pluggable into the unified execution engine: the
+/// engine resolves a map, sweeps it with the fused block kernel
+/// (streaming) or over a collected block list (opt-in collect mode /
+/// PJRT batching), and folds accumulators into outputs — no
+/// per-workload code in the scheduler.
+pub trait Workload: Send + Sync {
+    /// Stable name (matches [`WorkloadKind::name`] for the base arity).
+    fn name(&self) -> &'static str;
+
+    /// Simplex dimensionality of the block-level domain.
+    fn m(&self) -> u32;
+
+    /// Fresh per-lane accumulator.
+    fn new_accum(&self) -> Accum;
+
+    /// Fused block kernel: execute mapped block `b` into `acc`,
+    /// returning the number of threads predicated off by the
+    /// thread-level domain predicate.
+    fn process_block(&self, acc: &mut Accum, b: &MappedBlock) -> u64;
+
+    /// Fold the per-lane accumulators (passed in lane order) into the
+    /// job's scalar outputs.
+    fn finish(&self, accs: Vec<Accum>) -> Vec<(String, f64)>;
+
+    /// Brute-force reference, shaped like [`Workload::finish`] output.
+    fn reference_outputs(&self) -> Vec<(String, f64)>;
+
+    /// Whether this workload ships an AOT Pallas artifact.
+    fn supports_pjrt(&self) -> bool {
+        false
+    }
+
+    /// Batched AOT tile path over the collected (deterministically
+    /// ordered) blocks. Only called when [`Workload::supports_pjrt`].
+    fn run_pjrt(
+        &self,
+        _exe: ExecHandle,
+        _blocks: &[MappedBlock],
+    ) -> crate::runtime::Result<PjrtRun> {
+        Err(crate::runtime::RuntimeError::Xla(format!(
+            "workload '{}' has no pjrt artifact",
+            self.name()
+        )))
+    }
+}
+
+/// The one factory the engine uses: generate the workload for a job.
+pub fn build(kind: WorkloadKind, nb: u64, rho: u32, seed: u64) -> Box<dyn Workload> {
+    match kind {
+        WorkloadKind::Edm => Box::new(EdmWorkload::generate(nb, rho, seed)),
+        WorkloadKind::Collision => Box::new(CollisionWorkload::generate(nb, rho, seed)),
+        WorkloadKind::NBody => Box::new(NBodyWorkload::generate(nb, rho, seed)),
+        WorkloadKind::Triple => Box::new(TripleWorkload::generate(nb, rho, seed)),
+        WorkloadKind::Cellular => Box::new(CellularWorkload::generate(nb, rho, seed)),
+        WorkloadKind::TriMatVec => Box::new(TriMatVecWorkload::generate(nb, rho, seed)),
+        WorkloadKind::KTuple(m) => Box::new(KTupleWorkload::generate(nb, rho, m, seed)),
+    }
+}
 
 /// Iterate the thread-level pairs of a 2-simplex data block `(bc, br)`
 /// that satisfy the strict predicate `col < row`, yielding local
@@ -56,6 +143,33 @@ pub fn strict_pair_mask(bc: u64, br: u64, rho: u32) -> impl Iterator<Item = (u32
     })
 }
 
+/// Threads predicated off in a ρ×ρ tile under the *strict* pair
+/// predicate `col < row`: zero off-diagonal, the inclusive upper
+/// triangle `ρ(ρ+1)/2` on the diagonal. Closed form of
+/// `ρ² − |strict_pair_mask|`.
+#[inline]
+pub fn strict_pair_predicated_off(bc: u64, br: u64, rho: u32) -> u64 {
+    let r = rho as u64;
+    if bc == br {
+        r * (r + 1) / 2
+    } else {
+        0
+    }
+}
+
+/// Threads predicated off under the *inclusive* pair predicate
+/// `col ≤ row` (cellular, trimatvec): the strict upper triangle
+/// `ρ(ρ-1)/2` on the diagonal.
+#[inline]
+pub fn inclusive_pair_predicated_off(bc: u64, br: u64, rho: u32) -> u64 {
+    let r = rho as u64;
+    if bc == br {
+        r * (r - 1) / 2
+    } else {
+        0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -64,17 +178,38 @@ mod tests {
     fn off_diagonal_blocks_pass_all_threads() {
         let n: usize = strict_pair_mask(0, 1, 8).count();
         assert_eq!(n, 64);
+        assert_eq!(strict_pair_predicated_off(0, 1, 8), 0);
     }
 
     #[test]
     fn diagonal_blocks_pass_strict_lower_triangle() {
         let n: usize = strict_pair_mask(3, 3, 8).count();
         assert_eq!(n, 28); // 8·7/2
+        assert_eq!(strict_pair_predicated_off(3, 3, 8), 64 - 28);
     }
 
     #[test]
     fn adjacent_blocks_fully_inside() {
         // (bc=1, br=2) with rho=4: min row 8 > max col 7.
         assert_eq!(strict_pair_mask(1, 2, 4).count(), 16);
+    }
+
+    #[test]
+    fn inclusive_predication_counts_strict_upper_triangle() {
+        // Diagonal tile: ρ(ρ+1)/2 cells satisfy col ≤ row.
+        for rho in [1u32, 4, 8] {
+            let r = rho as u64;
+            assert_eq!(inclusive_pair_predicated_off(2, 2, rho), r * r - r * (r + 1) / 2);
+        }
+        assert_eq!(inclusive_pair_predicated_off(0, 3, 8), 0);
+    }
+
+    #[test]
+    fn build_covers_every_workload_kind() {
+        for kind in WorkloadKind::ALL {
+            let w = build(*kind, 4, 2, 7);
+            assert_eq!(w.m(), kind.m(), "{}", kind.name());
+            assert!(!w.reference_outputs().is_empty(), "{}", kind.name());
+        }
     }
 }

@@ -3,7 +3,11 @@
 //! applying each tile both ways (Newton's third law is what makes the
 //! triangular domain sufficient).
 
+use crate::coordinator::batcher::{TileBatcher, TileInput};
+use crate::grid::MappedBlock;
+use crate::runtime::ExecHandle;
 use crate::util::prng::Xoshiro256;
+use crate::workloads::{Accum, PjrtRun, Workload};
 
 /// Floats per particle: (x, y, z, mass) — matches the AOT artifact.
 pub const PARTICLE_DIM: usize = 4;
@@ -94,6 +98,119 @@ impl NBodyWorkload {
     /// within f32 tolerance; used as the job's scalar output).
     pub fn checksum(acc: &[f32]) -> f64 {
         acc.iter().map(|x| x.abs() as f64).sum()
+    }
+}
+
+/// Per-lane state: a tile and this lane's partial acceleration field
+/// (merged elementwise in [`Workload::finish`] — Newton's third law
+/// means off-diagonal tiles are applied both ways right here).
+struct NBodyAccum {
+    tile: Vec<f32>,
+    acc: Vec<f32>,
+}
+
+impl Workload for NBodyWorkload {
+    fn name(&self) -> &'static str {
+        "nbody"
+    }
+
+    fn m(&self) -> u32 {
+        2
+    }
+
+    fn new_accum(&self) -> Accum {
+        Box::new(NBodyAccum {
+            tile: vec![0f32; self.rho as usize * 3],
+            acc: vec![0f32; self.n as usize * 3],
+        })
+    }
+
+    fn process_block(&self, acc: &mut Accum, b: &MappedBlock) -> u64 {
+        let a = acc.downcast_mut::<NBodyAccum>().expect("nbody accum");
+        let (bc, br) = (b.data[0], b.data[1]);
+        let rho = self.rho as u64;
+        self.tile_rust(bc, br, &mut a.tile);
+        for i in 0..rho {
+            for d in 0..3u64 {
+                a.acc[((br * rho + i) * 3 + d) as usize] += a.tile[(i * 3 + d) as usize];
+            }
+        }
+        if bc != br {
+            self.tile_rust(br, bc, &mut a.tile);
+            for i in 0..rho {
+                for d in 0..3u64 {
+                    a.acc[((bc * rho + i) * 3 + d) as usize] += a.tile[(i * 3 + d) as usize];
+                }
+            }
+            0
+        } else {
+            rho // the i == j self-pair threads contribute nothing
+        }
+    }
+
+    fn finish(&self, accs: Vec<Accum>) -> Vec<(String, f64)> {
+        let mut total = vec![0f32; self.n as usize * 3];
+        for acc in accs {
+            let a = acc.downcast::<NBodyAccum>().expect("nbody accum");
+            for (t, v) in total.iter_mut().zip(&a.acc) {
+                *t += v;
+            }
+        }
+        vec![("accel_checksum".into(), NBodyWorkload::checksum(&total))]
+    }
+
+    fn reference_outputs(&self) -> Vec<(String, f64)> {
+        vec![(
+            "accel_checksum".into(),
+            NBodyWorkload::checksum(&self.reference()),
+        )]
+    }
+
+    fn supports_pjrt(&self) -> bool {
+        true
+    }
+
+    fn run_pjrt(
+        &self,
+        exe: ExecHandle,
+        blocks: &[MappedBlock],
+    ) -> crate::runtime::Result<PjrtRun> {
+        let mut batcher = TileBatcher::new(exe, "nbody_tile")?;
+        // Two directed tiles per off-diagonal block, one per diagonal.
+        let mut tiles = Vec::new();
+        let mut targets = Vec::new(); // chunk receiving the acceleration
+        for b in blocks {
+            let (bc, br) = (b.data[0], b.data[1]);
+            tiles.push(TileInput {
+                block_id: targets.len() as u64,
+                inputs: vec![self.chunk(br).to_vec(), self.chunk(bc).to_vec()],
+            });
+            targets.push(br);
+            if bc != br {
+                tiles.push(TileInput {
+                    block_id: targets.len() as u64,
+                    inputs: vec![self.chunk(bc).to_vec(), self.chunk(br).to_vec()],
+                });
+                targets.push(bc);
+            }
+        }
+        let outs = batcher.run(&tiles)?;
+        let rho = self.rho as u64;
+        let mut acc = vec![0f32; self.n as usize * 3];
+        for out in &outs {
+            let chunk_row = targets[out.block_id as usize];
+            for i in 0..rho {
+                for d in 0..3u64 {
+                    acc[((chunk_row * rho + i) * 3 + d) as usize] +=
+                        out.data[(i * 3 + d) as usize];
+                }
+            }
+        }
+        Ok(PjrtRun {
+            outputs: vec![("accel_checksum".into(), NBodyWorkload::checksum(&acc))],
+            batches_run: batcher.batches_run,
+            tiles_padded: batcher.tiles_padded,
+        })
     }
 }
 

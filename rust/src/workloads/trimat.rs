@@ -7,7 +7,9 @@
 //! to its row range; aggregation is a reduction over blocks — the same
 //! access pattern as the update step of a blocked triangular solver.
 
+use crate::grid::MappedBlock;
 use crate::util::prng::Xoshiro256;
+use crate::workloads::{inclusive_pair_predicated_off, Accum, Workload};
 
 pub struct TriMatVecWorkload {
     pub n: u64,
@@ -66,6 +68,60 @@ impl TriMatVecWorkload {
 
     pub fn checksum(y: &[f32]) -> f64 {
         y.iter().map(|v| v.abs() as f64).sum()
+    }
+}
+
+/// Per-lane state: a ρ-row tile plus this lane's partial y vector
+/// (blocks contribute partial sums to their row range; lanes merge by
+/// elementwise addition).
+struct TriMatVecAccum {
+    tile: Vec<f32>,
+    y: Vec<f32>,
+}
+
+impl Workload for TriMatVecWorkload {
+    fn name(&self) -> &'static str {
+        "trimatvec"
+    }
+
+    fn m(&self) -> u32 {
+        2
+    }
+
+    fn new_accum(&self) -> Accum {
+        Box::new(TriMatVecAccum {
+            tile: vec![0f32; self.rho as usize],
+            y: vec![0f32; self.n as usize],
+        })
+    }
+
+    fn process_block(&self, acc: &mut Accum, b: &MappedBlock) -> u64 {
+        let a = acc.downcast_mut::<TriMatVecAccum>().expect("trimat accum");
+        let (bc, br) = (b.data[0], b.data[1]);
+        let rho = self.rho as u64;
+        self.tile_rust(bc, br, &mut a.tile);
+        for i in 0..rho {
+            a.y[(br * rho + i) as usize] += a.tile[i as usize];
+        }
+        inclusive_pair_predicated_off(bc, br, self.rho)
+    }
+
+    fn finish(&self, accs: Vec<Accum>) -> Vec<(String, f64)> {
+        let mut y = vec![0f32; self.n as usize];
+        for acc in accs {
+            let a = acc.downcast::<TriMatVecAccum>().expect("trimat accum");
+            for (t, v) in y.iter_mut().zip(&a.y) {
+                *t += v;
+            }
+        }
+        vec![("y_checksum".into(), TriMatVecWorkload::checksum(&y))]
+    }
+
+    fn reference_outputs(&self) -> Vec<(String, f64)> {
+        vec![(
+            "y_checksum".into(),
+            TriMatVecWorkload::checksum(&self.reference()),
+        )]
     }
 }
 

@@ -9,7 +9,12 @@
 //! tiles (the Pallas kernel's case); blocks with repeated chunks
 //! predicate per-thread and run on the Rust path.
 
+use crate::coordinator::batcher::{TileBatcher, TileInput};
+use crate::grid::MappedBlock;
+use crate::runtime::ExecHandle;
+use crate::simplex::block_m::BlockM;
 use crate::util::prng::Xoshiro256;
+use crate::workloads::{Accum, KTupleWorkload, PjrtRun, Workload};
 
 /// Plummer softening — must match kernels/triple.py EPS.
 pub const EPS: f32 = 1e-3;
@@ -117,6 +122,85 @@ impl TripleWorkload {
             }
         }
         e
+    }
+}
+
+struct TripleAccum {
+    energy: f64,
+}
+
+impl Workload for TripleWorkload {
+    fn name(&self) -> &'static str {
+        "triple"
+    }
+
+    fn m(&self) -> u32 {
+        3
+    }
+
+    fn new_accum(&self) -> Accum {
+        Box::new(TripleAccum { energy: 0.0 })
+    }
+
+    fn process_block(&self, acc: &mut Accum, b: &MappedBlock) -> u64 {
+        let a = acc.downcast_mut::<TripleAccum>().expect("triple accum");
+        let nb = self.n / self.rho as u64;
+        let (ci, cj, ck) = TripleWorkload::block_chunks(nb, b.data.to_fixed3());
+        a.energy += self.tile_rust(ci, cj, ck);
+        // Same closed form as the m-tuple workload at m = 3.
+        KTupleWorkload::predicated_off(&BlockM::from_slice(&[ci, cj, ck]), self.rho)
+    }
+
+    fn finish(&self, accs: Vec<Accum>) -> Vec<(String, f64)> {
+        let energy: f64 = accs
+            .into_iter()
+            .map(|acc| acc.downcast::<TripleAccum>().expect("triple accum").energy)
+            .sum();
+        vec![("at_energy".into(), energy)]
+    }
+
+    fn reference_outputs(&self) -> Vec<(String, f64)> {
+        vec![("at_energy".into(), self.reference())]
+    }
+
+    fn supports_pjrt(&self) -> bool {
+        true
+    }
+
+    fn run_pjrt(
+        &self,
+        exe: ExecHandle,
+        blocks: &[MappedBlock],
+    ) -> crate::runtime::Result<PjrtRun> {
+        let mut batcher = TileBatcher::new(exe, "triple_tile")?;
+        // Strictly-ordered blocks → full-tile Pallas kernel; blocks
+        // with repeated chunks → Rust per-thread predication (o(n²) of
+        // the n³ work; see module doc).
+        let nb = self.n / self.rho as u64;
+        let mut strict_tiles = Vec::new();
+        let mut energy = 0f64;
+        for b in blocks {
+            let (ci, cj, ck) = TripleWorkload::block_chunks(nb, b.data.to_fixed3());
+            if TripleWorkload::block_is_strict(ci, cj, ck) {
+                strict_tiles.push(TileInput {
+                    block_id: strict_tiles.len() as u64,
+                    inputs: vec![
+                        self.chunk(ci).to_vec(),
+                        self.chunk(cj).to_vec(),
+                        self.chunk(ck).to_vec(),
+                    ],
+                });
+            } else {
+                energy += self.tile_rust(ci, cj, ck);
+            }
+        }
+        let outs = batcher.run(&strict_tiles)?;
+        energy += outs.iter().map(|o| o.data[0] as f64).sum::<f64>();
+        Ok(PjrtRun {
+            outputs: vec![("at_energy".into(), energy)],
+            batches_run: batcher.batches_run,
+            tiles_padded: batcher.tiles_padded,
+        })
     }
 }
 

@@ -50,7 +50,7 @@ fn job(w: WorkloadKind, nb: u64, map: &str, backend: Backend) -> Job {
 fn edm_pjrt_matches_rust_and_reference() {
     let (_svc, sched) = scheduler_or_skip!();
     let nb = 8;
-    let w = EdmWorkload::generate(nb, sched.rho2, 23);
+    let w = EdmWorkload::generate(nb, sched.rho_for(2), 23);
     let (want_count, want_sum) = w.reference();
     for map in ["bb", "lambda2", "enum2", "rb"] {
         let pjrt = sched
@@ -70,7 +70,7 @@ fn edm_pjrt_matches_rust_and_reference() {
 fn collision_pjrt_matches_reference() {
     let (_svc, sched) = scheduler_or_skip!();
     let nb = 8;
-    let w = simplexmap::workloads::CollisionWorkload::generate(nb, sched.rho2, 23);
+    let w = simplexmap::workloads::CollisionWorkload::generate(nb, sched.rho_for(2), 23);
     let want = w.reference() as f64;
     for map in ["bb", "lambda2"] {
         let r = sched
@@ -84,7 +84,7 @@ fn collision_pjrt_matches_reference() {
 fn nbody_pjrt_matches_reference() {
     let (_svc, sched) = scheduler_or_skip!();
     let nb = 4;
-    let w = NBodyWorkload::generate(nb, sched.rho2, 23);
+    let w = NBodyWorkload::generate(nb, sched.rho_for(2), 23);
     let want = NBodyWorkload::checksum(&w.reference());
     let r = sched
         .run(&job(WorkloadKind::NBody, nb, "lambda2", Backend::Pjrt))
@@ -100,7 +100,7 @@ fn nbody_pjrt_matches_reference() {
 fn triple_pjrt_matches_reference() {
     let (_svc, sched) = scheduler_or_skip!();
     let nb = 4;
-    let w = TripleWorkload::generate(nb, sched.rho3, 23);
+    let w = TripleWorkload::generate(nb, sched.rho_for(3), 23);
     let want = w.reference();
     for map in ["bb", "lambda3"] {
         let r = sched

@@ -1,0 +1,134 @@
+//! E14 — unified-engine conformance: the fused streaming launch must
+//! produce *identical launch accounting* (passes, blocks launched /
+//! mapped, threads launched / predicated-off) and equal aggregation
+//! outputs (exactly for counts; within float-reassociation tolerance
+//! for f32-merged checksums) to the opt-in collect-then-execute flow —
+//! for every registered map at m ∈ {2, 3, 4} and for every workload.
+//!
+//! Golden values are carried over from the PR 2 conformance layer
+//! (λ_m m=4 β=2 at its first covered size nb=28: 31501 launched /
+//! 31465 mapped / 36 filler).
+
+use simplexmap::coordinator::{Backend, ExecMode, Job, JobResult, Scheduler, WorkloadKind};
+
+fn job(w: WorkloadKind, nb: u64, map: &str) -> Job {
+    Job {
+        workload: w,
+        nb,
+        map: map.into(),
+        backend: Backend::Rust,
+        seed: 29,
+    }
+}
+
+/// Run one job in both modes and assert equivalence; returns the
+/// streaming result for extra (golden-value) assertions.
+fn assert_equivalent(w: WorkloadKind, nb: u64, map: &str) -> JobResult {
+    let streaming = Scheduler::new(4, None);
+    let mut collect = Scheduler::new(4, None);
+    collect.exec_mode = ExecMode::Collect;
+    let label = format!("{} nb={nb} map={map}", w.name());
+    let a = streaming
+        .run(&job(w, nb, map))
+        .unwrap_or_else(|e| panic!("streaming {label}: {e}"));
+    let b = collect
+        .run(&job(w, nb, map))
+        .unwrap_or_else(|e| panic!("collect {label}: {e}"));
+
+    // Launch accounting must be bit-identical across modes.
+    assert_eq!(a.passes, b.passes, "{label}: passes");
+    assert_eq!(a.blocks_launched, b.blocks_launched, "{label}: launched");
+    assert_eq!(a.blocks_mapped, b.blocks_mapped, "{label}: mapped");
+    assert_eq!(a.threads_launched, b.threads_launched, "{label}: threads");
+    assert_eq!(
+        a.threads_predicated_off, b.threads_predicated_off,
+        "{label}: predicated"
+    );
+
+    // Outputs: same keys, same values. Counts are exact; f32-merged
+    // checksums may differ by reassociation across lane boundaries.
+    assert_eq!(a.outputs.len(), b.outputs.len(), "{label}");
+    for ((ka, va), (kb, vb)) in a.outputs.iter().zip(&b.outputs) {
+        assert_eq!(ka, kb, "{label}");
+        let exact = ka.contains("count") || ka.contains("population");
+        if exact {
+            assert_eq!(va, vb, "{label}: {ka}");
+        } else {
+            let tol = 1e-5 * va.abs().max(1.0);
+            assert!(
+                (va - vb).abs() <= tol,
+                "{label}: {ka} {va} vs {vb}"
+            );
+        }
+    }
+    a
+}
+
+#[test]
+fn every_m2_map_streams_equal_to_collect() {
+    for map in simplexmap::maps::map_names(2) {
+        assert_equivalent(WorkloadKind::Edm, 8, &map);
+    }
+}
+
+#[test]
+fn every_m3_map_streams_equal_to_collect() {
+    for map in simplexmap::maps::map_names(3) {
+        assert_equivalent(WorkloadKind::Triple, 8, &map);
+    }
+}
+
+#[test]
+fn every_m4_map_streams_equal_to_collect() {
+    for map in simplexmap::maps::map_names(4) {
+        assert_equivalent(WorkloadKind::KTuple(4), 4, &map);
+    }
+}
+
+#[test]
+fn every_workload_streams_equal_to_collect_under_canonical_maps() {
+    for (w, nb, map) in [
+        (WorkloadKind::Edm, 8u64, "lambda2"),
+        (WorkloadKind::Collision, 8, "lambda2"),
+        (WorkloadKind::NBody, 4, "lambda2"),
+        (WorkloadKind::Cellular, 8, "lambda2"),
+        (WorkloadKind::TriMatVec, 4, "lambda2"),
+        (WorkloadKind::Triple, 4, "lambda3"),
+        (WorkloadKind::KTuple(2), 8, "lambda2"),
+        (WorkloadKind::KTuple(3), 4, "lambda3"),
+        (WorkloadKind::KTuple(4), 4, "lambda-m"),
+        (WorkloadKind::KTuple(5), 3, "lambda-m"),
+    ] {
+        assert_equivalent(w, nb, map);
+    }
+}
+
+#[test]
+fn lambda_m_golden_accounting_survives_the_unification() {
+    // PR 2 golden values: λ_m (m=4, β=2) at its first covered size.
+    let r = assert_equivalent(WorkloadKind::KTuple(4), 28, "lambda-m");
+    assert_eq!(r.blocks_launched, 31501);
+    assert_eq!(r.blocks_mapped, 31465);
+    assert_eq!(r.blocks_launched - r.blocks_mapped, 36, "filler");
+    // ρ_m = 2 at m = 4 → 16 threads per block.
+    assert_eq!(r.threads_launched, 31501 * 16);
+}
+
+#[test]
+fn streaming_outputs_match_brute_force_references() {
+    // Mode equivalence alone could mask a shared bug; pin the fused
+    // engine to the brute-force references directly.
+    use simplexmap::workloads::{EdmWorkload, KTupleWorkload};
+    let sched = Scheduler::new(4, None);
+
+    let w = EdmWorkload::generate(8, sched.rho_for(2), 29);
+    let (want_count, want_sum) = w.reference();
+    let r = sched.run(&job(WorkloadKind::Edm, 8, "lambda2")).unwrap();
+    assert_eq!(r.outputs[0].1 as u64, want_count);
+    assert!((r.outputs[1].1 - want_sum).abs() < 1e-3 * want_sum.abs().max(1.0));
+
+    let w = KTupleWorkload::generate(4, sched.rho_for(4), 4, 29);
+    let want = w.reference();
+    let r = sched.run(&job(WorkloadKind::KTuple(4), 4, "lambda-m")).unwrap();
+    assert!((r.outputs[0].1 - want).abs() < 1e-9 * want.abs().max(1.0));
+}

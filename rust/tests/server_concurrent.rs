@@ -1,0 +1,88 @@
+//! Concurrent serving through the bounded job queue: ≥4 clients hammer
+//! the TCP leader in parallel; every job must complete, every job must
+//! pass through the queue, and the queue metrics must be exported.
+
+use std::io::{BufRead, BufReader, Write};
+use std::sync::Arc;
+
+use simplexmap::coordinator::server::Server;
+use simplexmap::coordinator::{QueueConfig, Scheduler};
+use simplexmap::util::json;
+
+#[test]
+fn concurrent_clients_execute_in_parallel_through_the_queue() {
+    let sched = Arc::new(Scheduler::new(2, None));
+    let server = Server::with_queue(
+        Arc::clone(&sched),
+        QueueConfig {
+            workers: 4,
+            capacity: 64,
+        },
+    );
+    let (tx, rx) = std::sync::mpsc::channel();
+    let server_thread = std::thread::spawn(move || {
+        server
+            .serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+            .unwrap();
+    });
+    let addr = rx.recv().unwrap();
+
+    const CLIENTS: usize = 6;
+    const JOBS_PER_CLIENT: usize = 3;
+    let mut clients = Vec::new();
+    for c in 0..CLIENTS {
+        clients.push(std::thread::spawn(move || {
+            let conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut writer = conn.try_clone().unwrap();
+            let mut reader = BufReader::new(conn);
+            let mut line = String::new();
+            for j in 0..JOBS_PER_CLIENT {
+                let (workload, map, nb) = match (c + j) % 3 {
+                    0 => ("edm", "lambda2", 8),
+                    1 => ("collision", "bb", 8),
+                    _ => ("trimatvec", "rb", 16),
+                };
+                let req = format!(
+                    r#"{{"cmd":"run","workload":"{workload}","nb":{nb},"map":"{map}","seed":{c}}}"#
+                );
+                writer.write_all(req.as_bytes()).unwrap();
+                writer.write_all(b"\n").unwrap();
+                line.clear();
+                reader.read_line(&mut line).unwrap();
+                let resp = json::parse(line.trim()).unwrap();
+                assert_eq!(
+                    resp.get("ok").and_then(|v| v.as_bool()),
+                    Some(true),
+                    "client {c} job {j}: {line}"
+                );
+                assert!(
+                    resp.get("result").and_then(|r| r.get("blocks_mapped")).is_some(),
+                    "client {c} job {j}: {line}"
+                );
+            }
+        }));
+    }
+    for c in clients {
+        c.join().expect("client thread");
+    }
+
+    // Every job went through the queue and completed.
+    let total = (CLIENTS * JOBS_PER_CLIENT) as u64;
+    let snap = sched.metrics.snapshot();
+    assert_eq!(snap.get("jobs_completed").unwrap().as_u64(), Some(total));
+    assert_eq!(snap.get("jobs_queued").unwrap().as_u64(), Some(total));
+    assert_eq!(snap.get("jobs_failed").unwrap().as_u64(), Some(0));
+    assert_eq!(snap.get("queue_depth").unwrap().as_u64(), Some(0));
+    assert_eq!(
+        snap.get("queue_wait").unwrap().get("count").unwrap().as_u64(),
+        Some(total)
+    );
+
+    // Shut the leader down cleanly.
+    let conn = std::net::TcpStream::connect(addr).unwrap();
+    let mut writer = conn.try_clone().unwrap();
+    writer.write_all(b"{\"cmd\":\"shutdown\"}\n").unwrap();
+    let mut line = String::new();
+    BufReader::new(conn).read_line(&mut line).unwrap();
+    server_thread.join().unwrap();
+}
