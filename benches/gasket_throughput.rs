@@ -1,0 +1,80 @@
+//! E15 — fractal-domain throughput: the gasket block-space map λ_Δ
+//! (O(log n) base-3 digit descent, zero filler) vs the gasket bounding
+//! box (O(1) predicate, (4/3)^k filler blocks), as map arithmetic and
+//! end to end under the gasket CA workload.
+//!
+//! The interesting number is useful-blocks/s: BB_Δ touches (4/3)^k
+//! parallel blocks per useful one (≈5.6× at k = 6, unbounded in k), so
+//! λ_Δ wins the sweep even though its per-block arithmetic is heavier —
+//! the fractal counterpart of the λ_m-vs-BB_m story.
+
+use simplexmap::coordinator::{Backend, Job, Scheduler, WorkloadKind};
+use simplexmap::maps::{GasketBoundingBoxMap, GasketLambdaMap, MThreadMap};
+use simplexmap::util::benchkit::{black_box, section, Bencher};
+
+fn bench_map(b: &mut Bencher, label: &str, map: &dyn MThreadMap, nb: u64) {
+    let useful = map.domain_volume(nb) as u64;
+    b.bench(label, useful, || {
+        let mut acc = 0u64;
+        for pass in 0..map.passes(nb) {
+            for w in map.grid(nb, pass).iter() {
+                if let Some(d) = map.map_block(nb, pass, black_box(&w)) {
+                    acc = acc.wrapping_add(d.sum());
+                }
+            }
+        }
+        black_box(acc);
+    });
+}
+
+fn main() {
+    let nb: u64 = std::env::var("SIMPLEXMAP_BENCH_NB")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    let k = nb.trailing_zeros();
+    assert!(nb.is_power_of_two(), "gasket sizes are 2^k");
+
+    section(&format!(
+        "E15a: gasket block-map throughput, nb={nb} (k={k}, 3^k={} useful blocks)",
+        3u64.pow(k)
+    ));
+    let mut b = Bencher::default();
+    bench_map(
+        &mut b,
+        &format!("lambda-gasket (digit descent) nb={nb}"),
+        &GasketLambdaMap,
+        nb,
+    );
+    bench_map(
+        &mut b,
+        &format!("bb-gasket (identity + predicate) nb={nb}"),
+        &GasketBoundingBoxMap,
+        nb,
+    );
+    b.print_speedups("E15a summary");
+
+    section("E15b: gasket CA end-to-end (rust tiles)");
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    let sched = Scheduler::new(workers, None);
+    let nb_e2e = nb.min(64);
+    let rho = sched.rho.rho_gasket as u64;
+    let cells = 3u64.pow(nb_e2e.trailing_zeros() + rho.trailing_zeros());
+    let mut b = Bencher::default();
+    for map in ["bb-gasket", "lambda-gasket", "bb", "lambda2"] {
+        let job = Job {
+            workload: WorkloadKind::GasketCA,
+            nb: nb_e2e,
+            map: map.to_string(),
+            backend: Backend::Rust,
+            seed: 42,
+        };
+        b.bench(&format!("gasket nb={nb_e2e} map={map}"), cells, || {
+            let r = sched.run(&job).expect("job");
+            black_box(r.outputs[3].1);
+        });
+    }
+    b.print_speedups("E15b summary");
+}

@@ -8,8 +8,13 @@
 //! output slice back with its block identity. Padding tiles are
 //! computed and discarded — exactly like the filler threads of a
 //! bounding-box launch, but bounded by `B-1` tiles per job.
+//!
+//! The packing arithmetic lives in [`BatchPlan`], separated from the
+//! executor handle so the zero-padding, scalar passthrough and
+//! `tiles_padded` accounting are unit-testable without artifacts (the
+//! executor-backed path is exercised by rust/tests/coordinator_e2e.rs).
 
-use crate::runtime::{ExecHandle, Result, TensorF32};
+use crate::runtime::{ArtifactSpec, ExecHandle, Result, TensorF32};
 
 /// One tile's operands: `inputs[i]` is the flat f32 chunk for artifact
 /// input `i` (length = per-tile element count of that input).
@@ -26,26 +31,23 @@ pub struct TileOutput {
     pub data: Vec<f32>,
 }
 
-/// Batches tiles through one artifact.
-pub struct TileBatcher {
-    exe: ExecHandle,
-    artifact: String,
+/// The pure packing arithmetic of one artifact: batch size, per-tile
+/// element counts, and batch assembly with zero padding and scalar
+/// passthrough. No executor, no I/O.
+struct BatchPlan {
     batch: usize,
     per_tile_in: Vec<usize>,
     per_tile_out: usize,
     /// Extra leading inputs shared by every tile (e.g. the scalar
     /// threshold of edm_threshold), passed through unbatched.
     scalar_inputs: Vec<TensorF32>,
-    pub batches_run: u64,
-    pub tiles_padded: u64,
 }
 
-impl TileBatcher {
-    /// `artifact` must have all batched inputs shaped (B, ...) and the
-    /// output shaped (B, ...); trailing scalar inputs are configured
-    /// via `with_scalar`.
-    pub fn new(exe: ExecHandle, artifact: &str) -> Result<TileBatcher> {
-        let spec = exe.spec(artifact)?;
+impl BatchPlan {
+    /// Derive the plan from an artifact spec: batched inputs are those
+    /// whose leading dimension equals the output's batch dimension;
+    /// everything after them is a shared (unbatched) trailing input.
+    fn from_spec(spec: &ArtifactSpec) -> BatchPlan {
         let batch = spec.output_shape[0];
         let batched = spec
             .input_shapes
@@ -57,13 +59,60 @@ impl TileBatcher {
             .map(|s| s[1..].iter().product::<usize>())
             .collect();
         let per_tile_out = spec.output_shape[1..].iter().product::<usize>().max(1);
-        Ok(TileBatcher {
-            exe,
-            artifact: artifact.to_string(),
+        BatchPlan {
             batch,
             per_tile_in,
             per_tile_out,
             scalar_inputs: Vec::new(),
+        }
+    }
+
+    /// Tiles zero-padded when a chunk of `chunk_len` tiles fills one
+    /// batch (0 except possibly for the last chunk).
+    fn padding(&self, chunk_len: usize) -> u64 {
+        debug_assert!(chunk_len <= self.batch && chunk_len > 0);
+        (self.batch - chunk_len) as u64
+    }
+
+    /// Pack one chunk (≤ batch tiles) into the artifact's input
+    /// tensors: batched inputs are tile chunks back to back with the
+    /// tail left zero, then every scalar input appended untouched.
+    fn assemble(&self, input_shapes: &[Vec<usize>], chunk: &[TileInput]) -> Vec<TensorF32> {
+        let n_batched = self.per_tile_in.len();
+        let mut inputs: Vec<TensorF32> =
+            Vec::with_capacity(n_batched + self.scalar_inputs.len());
+        for (i, &per_tile) in self.per_tile_in.iter().enumerate() {
+            let mut flat = vec![0f32; self.batch * per_tile];
+            for (t, tile) in chunk.iter().enumerate() {
+                debug_assert_eq!(tile.inputs[i].len(), per_tile);
+                flat[t * per_tile..(t + 1) * per_tile].copy_from_slice(&tile.inputs[i]);
+            }
+            inputs.push(TensorF32::new(input_shapes[i].clone(), flat));
+        }
+        inputs.extend(self.scalar_inputs.iter().cloned());
+        inputs
+    }
+}
+
+/// Batches tiles through one artifact.
+pub struct TileBatcher {
+    exe: ExecHandle,
+    artifact: String,
+    plan: BatchPlan,
+    pub batches_run: u64,
+    pub tiles_padded: u64,
+}
+
+impl TileBatcher {
+    /// `artifact` must have all batched inputs shaped (B, ...) and the
+    /// output shaped (B, ...); trailing scalar inputs are configured
+    /// via `with_scalar`.
+    pub fn new(exe: ExecHandle, artifact: &str) -> Result<TileBatcher> {
+        let plan = BatchPlan::from_spec(exe.spec(artifact)?);
+        Ok(TileBatcher {
+            exe,
+            artifact: artifact.to_string(),
+            plan,
             batches_run: 0,
             tiles_padded: 0,
         })
@@ -71,13 +120,13 @@ impl TileBatcher {
 
     /// Append a shared (unbatched) trailing input.
     pub fn with_scalar(mut self, t: TensorF32) -> Self {
-        self.scalar_inputs.push(t);
+        self.plan.scalar_inputs.push(t);
         self
     }
 
     /// Tiles per executable call.
     pub fn batch_size(&self) -> usize {
-        self.batch
+        self.plan.batch
     }
 
     /// Execute all tiles, preserving input order in the output.
@@ -89,11 +138,11 @@ impl TileBatcher {
     pub fn run(&mut self, tiles: &[TileInput]) -> Result<Vec<TileOutput>> {
         let spec = self.exe.spec(&self.artifact)?.clone();
         let mut pending = Vec::new();
-        for chunk in tiles.chunks(self.batch) {
-            let inputs = self.assemble(&spec, chunk)?;
+        for chunk in tiles.chunks(self.plan.batch) {
+            let inputs = self.plan.assemble(&spec.input_shapes, chunk);
             let rx = self.exe.run_f32_async(&self.artifact, inputs)?;
             self.batches_run += 1;
-            self.tiles_padded += (self.batch - chunk.len()) as u64;
+            self.tiles_padded += self.plan.padding(chunk.len());
             pending.push((chunk, rx));
         }
         let mut out = Vec::with_capacity(tiles.len());
@@ -101,47 +150,125 @@ impl TileBatcher {
             let result = rx
                 .recv()
                 .map_err(|_| crate::runtime::RuntimeError::Xla("executor dropped reply".into()))??;
+            let per_out = self.plan.per_tile_out;
             out.extend(chunk.iter().enumerate().map(|(t, tile)| TileOutput {
                 block_id: tile.block_id,
-                data: result.data[t * self.per_tile_out..(t + 1) * self.per_tile_out]
-                    .to_vec(),
+                data: result.data[t * per_out..(t + 1) * per_out].to_vec(),
             }));
         }
         Ok(out)
-    }
-
-    fn assemble(
-        &self,
-        spec: &crate::runtime::ArtifactSpec,
-        chunk: &[TileInput],
-    ) -> Result<Vec<TensorF32>> {
-        let n_batched = self.per_tile_in.len();
-        let mut inputs: Vec<TensorF32> = Vec::with_capacity(n_batched + 1);
-        for (i, &per_tile) in self.per_tile_in.iter().enumerate() {
-            let mut flat = vec![0f32; self.batch * per_tile];
-            for (t, tile) in chunk.iter().enumerate() {
-                debug_assert_eq!(tile.inputs[i].len(), per_tile);
-                flat[t * per_tile..(t + 1) * per_tile].copy_from_slice(&tile.inputs[i]);
-            }
-            inputs.push(TensorF32::new(spec.input_shapes[i].clone(), flat));
-        }
-        inputs.extend(self.scalar_inputs.iter().cloned());
-        Ok(inputs)
     }
 }
 
 #[cfg(test)]
 mod tests {
-    // Pure logic tests for batch arithmetic; executor-backed tests are
-    // in rust/tests/coordinator_e2e.rs (require artifacts).
+    // Pure packing-logic tests on BatchPlan — no executor, no
+    // artifacts. The executor-backed end-to-end path lives in
+    // rust/tests/coordinator_e2e.rs.
+    use super::*;
+
+    fn spec(input_shapes: Vec<Vec<usize>>, output_shape: Vec<usize>) -> ArtifactSpec {
+        ArtifactSpec {
+            name: "test".into(),
+            path: std::path::PathBuf::from("test.hlo.txt"),
+            input_shapes,
+            output_shape,
+        }
+    }
+
+    fn tile(block_id: u64, inputs: Vec<Vec<f32>>) -> TileInput {
+        TileInput { block_id, inputs }
+    }
 
     #[test]
-    fn chunking_math() {
-        // 130 tiles at B=64 → 3 batches, 62 padded in the last.
-        let tiles = 130usize;
-        let batch = 64usize;
-        let batches = tiles.div_ceil(batch);
+    fn plan_derives_batched_and_scalar_split_from_spec() {
+        // Two batched (B=4) inputs of 6 and 2 elements per tile, one
+        // trailing scalar input: the plan batches exactly the first two.
+        let s = spec(
+            vec![vec![4, 2, 3], vec![4, 2], vec![1]],
+            vec![4, 5],
+        );
+        let plan = BatchPlan::from_spec(&s);
+        assert_eq!(plan.batch, 4);
+        assert_eq!(plan.per_tile_in, vec![6, 2]);
+        assert_eq!(plan.per_tile_out, 5);
+        // Scalar-output artifact: per_tile_out floors at 1.
+        let s1 = spec(vec![vec![8, 2]], vec![8]);
+        assert_eq!(BatchPlan::from_spec(&s1).per_tile_out, 1);
+    }
+
+    #[test]
+    fn last_batch_is_zero_padded() {
+        // 3 tiles into B=4: the 4th slot of every batched input must be
+        // exactly zero, and the live slots must carry the tile data.
+        let s = spec(vec![vec![4, 2]], vec![4, 1]);
+        let plan = BatchPlan::from_spec(&s);
+        let chunk = [
+            tile(0, vec![vec![1.0, 2.0]]),
+            tile(1, vec![vec![3.0, 4.0]]),
+            tile(2, vec![vec![5.0, 6.0]]),
+        ];
+        let inputs = plan.assemble(&s.input_shapes, &chunk);
+        assert_eq!(inputs.len(), 1);
+        assert_eq!(inputs[0].shape, vec![4, 2]);
+        assert_eq!(
+            inputs[0].data,
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 0.0, 0.0],
+            "tail slot zero-padded"
+        );
+        assert_eq!(plan.padding(chunk.len()), 1);
+        assert_eq!(plan.padding(4), 0, "full batches pad nothing");
+    }
+
+    #[test]
+    fn scalar_inputs_pass_through_unbatched() {
+        let s = spec(vec![vec![2, 2], vec![1]], vec![2, 1]);
+        let mut plan = BatchPlan::from_spec(&s);
+        plan.scalar_inputs.push(TensorF32::new(vec![1], vec![0.25]));
+        let chunk = [tile(7, vec![vec![1.0, 1.0]])];
+        let inputs = plan.assemble(&s.input_shapes, &chunk);
+        assert_eq!(inputs.len(), 2, "one batched + one scalar");
+        assert_eq!(inputs[1].shape, vec![1]);
+        assert_eq!(inputs[1].data, vec![0.25], "scalar untouched by padding");
+        // The scalar rides along on *every* batch identically.
+        let again = plan.assemble(&s.input_shapes, &chunk);
+        assert_eq!(again[1].data, vec![0.25]);
+    }
+
+    #[test]
+    fn tiles_padded_accounting_over_a_chunked_run() {
+        // 130 tiles at B=64 → 3 batches; only the last pads (62): the
+        // accounting loop `run` performs, driven without an executor.
+        let s = spec(vec![vec![64, 1]], vec![64, 1]);
+        let plan = BatchPlan::from_spec(&s);
+        let tiles: Vec<TileInput> = (0..130).map(|i| tile(i, vec![vec![i as f32]])).collect();
+        let mut batches = 0u64;
+        let mut padded = 0u64;
+        for chunk in tiles.chunks(plan.batch) {
+            batches += 1;
+            padded += plan.padding(chunk.len());
+        }
         assert_eq!(batches, 3);
-        assert_eq!(batches * batch - tiles, 62);
+        assert_eq!(padded, 62);
+        // Exact multiples pad zero tiles across all batches.
+        let mut padded_exact = 0u64;
+        for chunk in tiles[..128].chunks(plan.batch) {
+            padded_exact += plan.padding(chunk.len());
+        }
+        assert_eq!(padded_exact, 0);
+    }
+
+    #[test]
+    fn multi_input_tiles_pack_in_slot_order() {
+        // Both batched inputs must land in the same tile slot.
+        let s = spec(vec![vec![2, 1], vec![2, 2]], vec![2, 1]);
+        let plan = BatchPlan::from_spec(&s);
+        let chunk = [
+            tile(0, vec![vec![10.0], vec![1.0, 2.0]]),
+            tile(1, vec![vec![20.0], vec![3.0, 4.0]]),
+        ];
+        let inputs = plan.assemble(&s.input_shapes, &chunk);
+        assert_eq!(inputs[0].data, vec![10.0, 20.0]);
+        assert_eq!(inputs[1].data, vec![1.0, 2.0, 3.0, 4.0]);
     }
 }

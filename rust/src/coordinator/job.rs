@@ -24,6 +24,11 @@ pub enum WorkloadKind {
     /// the pair-style regression case: it must share launch geometry
     /// with the dedicated pair workloads under the same map.
     KTuple(u32),
+    /// Mod-sum cellular automaton on the embedded Sierpiński gasket —
+    /// the first non-simplex domain (arXiv:1706.04552). Runs exactly on
+    /// the gasket maps, or (with extra predication waste) under any
+    /// m = 2 simplex map that covers the inclusive triangle.
+    GasketCA,
 }
 
 impl WorkloadKind {
@@ -35,6 +40,7 @@ impl WorkloadKind {
             "triple" => Some(WorkloadKind::Triple),
             "cellular" => Some(WorkloadKind::Cellular),
             "trimatvec" => Some(WorkloadKind::TriMatVec),
+            "gasket" | "gasket-ca" => Some(WorkloadKind::GasketCA),
             // "ktuple" defaults to quadruples; "ktuple<m>" pins the arity.
             "ktuple" => Some(WorkloadKind::KTuple(4)),
             _ => {
@@ -68,15 +74,26 @@ impl WorkloadKind {
             WorkloadKind::KTuple(6) => "ktuple6",
             WorkloadKind::KTuple(7) => "ktuple7",
             WorkloadKind::KTuple(_) => "ktuple8",
+            WorkloadKind::GasketCA => "gasket",
         }
     }
 
-    /// Simplex dimensionality of this workload's domain.
+    /// Dimensionality of this workload's block-level domain.
     pub fn m(&self) -> u32 {
         match self {
             WorkloadKind::Triple => 3,
             WorkloadKind::KTuple(m) => *m,
             _ => 2,
+        }
+    }
+
+    /// Which block-level data domain the workload consumes. The
+    /// scheduler uses this for ρ selection and to reject maps that
+    /// cover a *smaller* domain than the workload needs.
+    pub fn domain(&self) -> crate::simplex::gasket::DomainKind {
+        match self {
+            WorkloadKind::GasketCA => crate::simplex::gasket::DomainKind::Gasket,
+            _ => crate::simplex::gasket::DomainKind::Simplex,
         }
     }
 
@@ -89,6 +106,7 @@ impl WorkloadKind {
         WorkloadKind::TriMatVec,
         WorkloadKind::KTuple(4),
         WorkloadKind::KTuple(5),
+        WorkloadKind::GasketCA,
     ];
 }
 
@@ -219,6 +237,24 @@ mod tests {
         assert_eq!(WorkloadKind::Edm.m(), 2);
         assert_eq!(WorkloadKind::Triple.m(), 3);
         assert_eq!(WorkloadKind::KTuple(5).m(), 5);
+        assert_eq!(WorkloadKind::GasketCA.m(), 2);
+    }
+
+    #[test]
+    fn workload_domains() {
+        use crate::simplex::gasket::DomainKind;
+        assert_eq!(WorkloadKind::GasketCA.domain(), DomainKind::Gasket);
+        assert_eq!(WorkloadKind::parse("gasket"), Some(WorkloadKind::GasketCA));
+        assert_eq!(
+            WorkloadKind::parse("gasket-ca"),
+            Some(WorkloadKind::GasketCA),
+            "alias"
+        );
+        for w in WorkloadKind::ALL {
+            if *w != WorkloadKind::GasketCA {
+                assert_eq!(w.domain(), DomainKind::Simplex, "{}", w.name());
+            }
+        }
     }
 
     #[test]

@@ -30,4 +30,4 @@ pub use batcher::TileBatcher;
 pub use job::{Backend, Job, JobResult, WorkloadKind};
 pub use metrics::Metrics;
 pub use queue::{JobQueue, QueueConfig};
-pub use scheduler::{ExecMode, RhoPolicy, Scheduler};
+pub use scheduler::{ExecMode, RhoPolicy, ScheduleError, Scheduler};

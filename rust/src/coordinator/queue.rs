@@ -152,6 +152,16 @@ fn worker_loop(inner: &Inner) {
             let mut q = inner.queue.lock().unwrap();
             loop {
                 if let Some(item) = q.pop_front() {
+                    // Decrement under the same lock as the pop so the
+                    // gauge always equals the pending-set size — the
+                    // bound `queue_depth ≤ capacity` is exact at every
+                    // instant (the queue property tests sample it
+                    // mid-burst).
+                    inner
+                        .scheduler
+                        .metrics
+                        .queue_depth
+                        .fetch_sub(1, Ordering::Relaxed);
                     break Some(item);
                 }
                 if inner.shutdown.load(Ordering::SeqCst) {
@@ -162,7 +172,6 @@ fn worker_loop(inner: &Inner) {
         };
         let Some(item) = item else { return };
         let metrics = &inner.scheduler.metrics;
-        metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
         metrics.record_queue_wait(item.enqueued.elapsed().as_secs_f64());
         let result = inner.scheduler.run(&item.job);
         // The client may have disconnected; dropping the result is fine.

@@ -30,6 +30,7 @@ use crate::coordinator::job::{Backend, Job, JobResult};
 use crate::coordinator::metrics::Metrics;
 use crate::grid::{BlockShape, LaunchConfig, LaunchStats, Launcher, MappedBlock};
 use crate::maps::MThreadMap;
+use crate::simplex::gasket::DomainKind;
 use crate::runtime::ExecHandle;
 use crate::workloads::{self, Accum, Workload};
 use crate::{log_debug, log_info};
@@ -41,6 +42,12 @@ pub enum ScheduleError {
     NoExecutor(String),
     Runtime(crate::runtime::RuntimeError),
     NoPjrtPath(&'static str),
+    /// The map covers a smaller block-level domain than the workload
+    /// consumes (e.g. a gasket-only map under a simplex workload).
+    DomainMismatch(String, &'static str),
+    /// The gasket domain is only defined at power-of-two geometry
+    /// (nb = 2^k, ρ = 2^s); the job's nb or the configured ρ is not.
+    GasketGeometry(u64, u32),
     /// The bounded job queue refused the job (backpressure).
     QueueFull(usize),
     /// The coordinator is shutting down; the job was not run.
@@ -60,6 +67,19 @@ impl std::fmt::Display for ScheduleError {
             ScheduleError::Runtime(e) => write!(f, "runtime: {e}"),
             ScheduleError::NoPjrtPath(w) => {
                 write!(f, "workload '{w}' has no pjrt artifact; use --backend rust")
+            }
+            ScheduleError::DomainMismatch(map, w) => {
+                write!(
+                    f,
+                    "map '{map}' covers only the gasket domain; workload '{w}' needs the \
+                     full simplex"
+                )
+            }
+            ScheduleError::GasketGeometry(nb, rho) => {
+                write!(
+                    f,
+                    "gasket workload needs power-of-two nb and ρ; got nb={nb}, ρ={rho}"
+                )
             }
             ScheduleError::QueueFull(cap) => {
                 write!(f, "job queue full (capacity {cap}); retry later")
@@ -93,9 +113,12 @@ pub enum ExecMode {
     Collect,
 }
 
-/// The single ρ policy: ρ per dimension, replacing the scattered
-/// `rho2`/`rho3`/`rho_m` branches of the split pipelines. Blocks are
-/// ρ^m threads, so higher dimensions take a smaller ρ.
+/// The single ρ policy: ρ per (domain, dimension), replacing the
+/// scattered `rho2`/`rho3`/`rho_m` branches of the split pipelines.
+/// Blocks are ρ^m threads, so higher dimensions take a smaller ρ; the
+/// gasket takes its own ρ because its per-block useful work is `3^s`
+/// of `ρ² = 4^s` threads (ρ must stay a power of two for the domain's
+/// self-similarity).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct RhoPolicy {
     /// ρ for 2-simplex jobs (must match artifact R when pjrt).
@@ -104,6 +127,8 @@ pub struct RhoPolicy {
     pub rho3: u32,
     /// ρ for m ≥ 4 jobs.
     pub rho_m: u32,
+    /// ρ for gasket-domain jobs (must be a power of two).
+    pub rho_gasket: u32,
 }
 
 impl Default for RhoPolicy {
@@ -112,16 +137,25 @@ impl Default for RhoPolicy {
             rho2: 16,
             rho3: 8,
             rho_m: 2,
+            rho_gasket: 8,
         }
     }
 }
 
 impl RhoPolicy {
+    /// ρ for a *simplex* workload of dimension m.
     pub fn rho_for(&self, m: u32) -> u32 {
-        match m {
-            2 => self.rho2,
-            3 => self.rho3,
-            _ => self.rho_m,
+        self.rho_for_domain(DomainKind::Simplex, m)
+    }
+
+    /// ρ for a (domain, dimension) pair — the one lookup the engine
+    /// uses.
+    pub fn rho_for_domain(&self, domain: DomainKind, m: u32) -> u32 {
+        match (domain, m) {
+            (DomainKind::Gasket, _) => self.rho_gasket,
+            (DomainKind::Simplex, 2) => self.rho2,
+            (DomainKind::Simplex, 3) => self.rho3,
+            (DomainKind::Simplex, _) => self.rho_m,
         }
     }
 }
@@ -204,12 +238,32 @@ impl Scheduler {
         Launcher::with_workers(self.workers, cfg)
     }
 
-    /// Run a job to completion — the one pipeline, any workload, any m.
+    /// Run a job to completion — the one pipeline, any workload, any m,
+    /// any domain.
     pub fn run(&self, job: &Job) -> Result<JobResult, ScheduleError> {
         let t0 = Instant::now();
         let m = job.workload.m();
+        let domain = job.workload.domain();
         let map = self.resolve_map(&job.map, m, job.nb)?;
-        let rho = self.rho.rho_for(m);
+        // A map may cover a *superset* of the workload's domain (the
+        // gasket embeds in the simplex, so simplex maps serve gasket
+        // jobs with extra predication) — never a smaller one.
+        if map.domain() == DomainKind::Gasket && domain != DomainKind::Gasket {
+            return Err(ScheduleError::DomainMismatch(
+                job.map.clone(),
+                job.workload.name(),
+            ));
+        }
+        let rho = self.rho.rho_for_domain(domain, m);
+        // Gasket geometry must be power-of-two on both axes; reject
+        // here so a bad job (or a bad rho_gasket config) is a clean
+        // client error, not a panic inside a queue worker — a simplex
+        // cover map can accept an nb the gasket domain cannot.
+        if domain == DomainKind::Gasket
+            && (!job.nb.is_power_of_two() || !rho.is_power_of_two())
+        {
+            return Err(ScheduleError::GasketGeometry(job.nb, rho));
+        }
         let w = workloads::build(job.workload, job.nb, rho, job.seed);
         log_info!(
             "scheduler",
@@ -583,6 +637,109 @@ mod tests {
     }
 
     #[test]
+    fn gasket_ca_matches_reference_under_gasket_and_simplex_maps() {
+        // The gasket CA is exact integer arithmetic: every covering map
+        // must reproduce the brute-force reference bit for bit.
+        let sched = Scheduler::new(4, None);
+        let nb = 8u64;
+        let rho = sched.rho.rho_for_domain(DomainKind::Gasket, 2);
+        let w = crate::workloads::GasketCAWorkload::generate(nb, rho, 11);
+        let want = w.reference_outputs();
+        for map in ["lambda-gasket", "bb-gasket", "bb", "lambda2", "rb", "enum2"] {
+            let r = sched.run(&job(WorkloadKind::GasketCA, nb, map)).unwrap();
+            assert_eq!(r.outputs, want, "map={map}");
+        }
+    }
+
+    #[test]
+    fn gasket_launch_accounting_matches_closed_forms() {
+        // k = 3, s = 3 (ρ = 8): λ_Δ launches exactly 3^k blocks (zero
+        // filler), bb-gasket launches 4^k with 4^k − 3^k filler; both
+        // predicate 3^k·(ρ² − 3^s) threads off inside gasket blocks.
+        let sched = Scheduler::new(2, None);
+        let nb = 8u64;
+        let pred_gasket: u64 = 27 * (64 - 27);
+        let lam = sched
+            .run(&job(WorkloadKind::GasketCA, nb, "lambda-gasket"))
+            .unwrap();
+        assert_eq!(lam.blocks_launched, 27);
+        assert_eq!(lam.blocks_mapped, 27);
+        assert_eq!(lam.threads_predicated_off, pred_gasket);
+        let bb_job = job(WorkloadKind::GasketCA, nb, "bb-gasket");
+        let bb = sched.run(&bb_job).unwrap();
+        assert_eq!(bb.blocks_launched, 64);
+        assert_eq!(bb.blocks_mapped, 27);
+        assert_eq!(bb.threads_predicated_off, pred_gasket);
+        // A simplex map maps the whole triangle: the 9 non-gasket
+        // triangle blocks reach the kernel and predicate off entirely.
+        let l2 = sched.run(&job(WorkloadKind::GasketCA, nb, "lambda2")).unwrap();
+        assert_eq!(l2.blocks_mapped, 36);
+        assert_eq!(l2.threads_predicated_off, pred_gasket + 9 * 64);
+    }
+
+    #[test]
+    fn gasket_maps_reject_simplex_workloads() {
+        let sched = Scheduler::new(1, None);
+        for map in ["lambda-gasket", "bb-gasket"] {
+            match sched.run(&job(WorkloadKind::Edm, 8, map)) {
+                Err(ScheduleError::DomainMismatch(m, w)) => {
+                    assert_eq!(m, map);
+                    assert_eq!(w, "edm");
+                }
+                other => panic!("map={map}: expected DomainMismatch, got {other:?}"),
+            }
+        }
+        // Error text reaches clients verbatim through the server.
+        let j = job(WorkloadKind::Edm, 8, "lambda-gasket");
+        let e = sched.run(&j).unwrap_err();
+        assert!(e.to_string().contains("gasket domain"), "{e}");
+    }
+
+    #[test]
+    fn gasket_geometry_is_rejected_cleanly_not_panicked() {
+        // A simplex cover map accepts nb=6, but the gasket domain does
+        // not exist there: the job must fail with a client error, not
+        // panic the (queue-worker) thread running it.
+        let sched = Scheduler::new(1, None);
+        match sched.run(&job(WorkloadKind::GasketCA, 6, "bb")) {
+            Err(ScheduleError::GasketGeometry(nb, rho)) => {
+                assert_eq!(nb, 6);
+                assert_eq!(rho, sched.rho.rho_gasket);
+            }
+            other => panic!("expected GasketGeometry, got {other:?}"),
+        }
+        // Same guard covers a bad rho_gasket from the config file.
+        let mut sched = Scheduler::new(1, None);
+        sched.rho.rho_gasket = 6;
+        let e = sched.run(&job(WorkloadKind::GasketCA, 8, "bb")).unwrap_err();
+        assert!(matches!(e, ScheduleError::GasketGeometry(8, 6)));
+        assert!(e.to_string().contains("power-of-two"), "{e}");
+        // Simplex workloads at nb=6 are untouched by the guard.
+        let sched = Scheduler::new(1, None);
+        assert!(sched.run(&job(WorkloadKind::Edm, 6, "bb")).is_ok());
+    }
+
+    #[test]
+    fn gasket_jobs_use_rho_gasket_and_the_layout_cache() {
+        let mut sched = Scheduler::new(2, None);
+        sched.rho.rho_gasket = 4;
+        let r = sched
+            .run(&job(WorkloadKind::GasketCA, 4, "lambda-gasket"))
+            .unwrap();
+        // 3^2 blocks of ρ² = 16 threads each.
+        assert_eq!(r.threads_launched, 9 * 16);
+        sched
+            .run(&job(WorkloadKind::GasketCA, 8, "lambda-gasket"))
+            .unwrap();
+        assert_eq!(sched.metrics.map_cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            sched.metrics.map_cache_hits.load(Ordering::Relaxed),
+            1,
+            "second gasket job reuses the cached map"
+        );
+    }
+
+    #[test]
     fn streaming_and_collect_agree_on_stats_and_outputs() {
         // Smoke-level equivalence (the exhaustive per-map sweep lives
         // in tests/engine_conformance.rs).
@@ -593,6 +750,7 @@ mod tests {
             (WorkloadKind::Edm, 8u64, "lambda2"),
             (WorkloadKind::Triple, 4, "bb"),
             (WorkloadKind::KTuple(4), 4, "lambda-m"),
+            (WorkloadKind::GasketCA, 8, "lambda-gasket"),
         ] {
             let a = streaming.run(&job(w, nb, map)).unwrap();
             let b = collect.run(&job(w, nb, map)).unwrap();

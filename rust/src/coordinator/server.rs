@@ -9,8 +9,10 @@
 //!    "backend":"rust","seed":7}` → `{"ok":true,"result":{…}}` — the
 //!    job goes through the queue; a full queue answers
 //!    `{"ok":false,"error":"job queue full …"}` (backpressure).
-//! - `{"cmd":"maps"}` → `{"ok":true,"maps":{"2":[…],…,"8":[…]}}` —
-//!   the registered map names per dimension (the unified registry).
+//! - `{"cmd":"maps"}` → `{"ok":true,"maps":{"2":[…],…,"8":[…],
+//!   "gasket":[…]}}` — the registered map names per dimension (the
+//!   unified registry), plus the non-simplex gasket domain under its
+//!   own key.
 //! - `{"cmd":"metrics"}` → `{"ok":true,"metrics":{…}}` — includes
 //!   queue depth/wait and per-phase timings.
 //! - `{"cmd":"shutdown"}` → `{"ok":true}` and the server stops.
@@ -135,7 +137,7 @@ pub fn dispatch(line: &str, ctx: &ServerCtx) -> Json {
     match req.get("cmd").and_then(Json::as_str) {
         Some("ping") => Json::obj(vec![("ok", true.into()), ("pong", true.into())]),
         Some("maps") => {
-            let per_m = (2..=crate::simplex::block_m::M_MAX as u32)
+            let mut per_m: Vec<(String, Json)> = (2..=crate::simplex::block_m::M_MAX as u32)
                 .map(|m| {
                     let names = crate::maps::map_names(m)
                         .into_iter()
@@ -144,6 +146,16 @@ pub fn dispatch(line: &str, ctx: &ServerCtx) -> Json {
                     (m.to_string(), Json::Arr(names))
                 })
                 .collect();
+            // Non-simplex domains list under their own key.
+            per_m.push((
+                "gasket".to_string(),
+                Json::Arr(
+                    crate::maps::map_names_for(2, crate::maps::DomainKind::Gasket)
+                        .into_iter()
+                        .map(Json::Str)
+                        .collect(),
+                ),
+            ));
             Json::obj(vec![("ok", true.into()), ("maps", Json::Obj(per_m))])
         }
         Some("metrics") => Json::obj(vec![
@@ -236,7 +248,15 @@ mod tests {
             assert!(names(m).contains(&"lambda-m".to_string()), "m={m}");
             assert!(names(m).contains(&"bb".to_string()), "m={m}");
         }
-        // Every advertised name must resolve in the unified registry.
+        // The gasket domain advertises its maps under its own key, and
+        // they stay out of the numeric (simplex) lists.
+        assert_eq!(
+            names("gasket"),
+            vec!["bb-gasket".to_string(), "lambda-gasket".to_string()]
+        );
+        assert!(!names("2").contains(&"lambda-gasket".to_string()));
+        // Every advertised name must resolve in the unified registry
+        // (gasket maps register at m = 2).
         for m in 2..=8u32 {
             for name in names(&m.to_string()) {
                 assert!(
@@ -245,6 +265,32 @@ mod tests {
                 );
             }
         }
+        for name in names("gasket") {
+            assert!(crate::maps::map_by_name(2, &name).is_some(), "{name}");
+        }
+    }
+
+    #[test]
+    fn dispatch_runs_gasket_jobs_and_reports_domain_mismatch() {
+        let c = ctx();
+        let r = dispatch(
+            r#"{"cmd":"run","workload":"gasket","nb":8,"map":"lambda-gasket"}"#,
+            &c,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        let result = r.get("result").unwrap();
+        assert_eq!(result.get("block_efficiency").unwrap().as_f64(), Some(1.0));
+        assert!(result.get("outputs").unwrap().get("checksum_after").is_some());
+        // Simplex workload on a gasket-only map → clean client error.
+        let r = dispatch(
+            r#"{"cmd":"run","workload":"edm","nb":8,"map":"lambda-gasket"}"#,
+            &c,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        assert!(
+            r.get("error").unwrap().as_str().unwrap().contains("gasket"),
+            "{r}"
+        );
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //!   search   --m 2..10 --betas 2,4,8,16,32 --horizon 2^40
 //!   verify   --map <name> --nb <2^k> [--m 4..8]  exhaustive coverage check
 //!   run      --workload edm --nb 64 --map lambda2 --backend rust|pjrt
-//!            (--workload ktuple --m 4..8 runs the general-m subsystem)
+//!            (--workload ktuple --m 4..8 runs the general-m subsystem;
+//!             --workload gasket runs the Sierpiński-gasket CA)
 //!   serve    --addr 127.0.0.1:7070            JSON-lines job server
 //!   sweep    --workload edm --nb 64           all maps side by side
 //!
@@ -28,7 +29,7 @@ fn main() {
         opt("map", "thread map name", None),
         opt(
             "workload",
-            "edm|collision|nbody|triple|cellular|trimatvec|ktuple[2-8]",
+            "edm|collision|nbody|triple|cellular|trimatvec|ktuple[2-8]|gasket",
             Some("edm"),
         ),
         opt("backend", "rust|pjrt", Some("rust")),
@@ -151,6 +152,9 @@ fn verify(args: &Args) -> Result<(), String> {
             return verify_m(lo as u32, &name, nb);
         }
     }
+    if name.contains("gasket") {
+        return verify_gasket(&name, nb);
+    }
     let map: Box<dyn ThreadMap> = map2_by_name(&name)
         .or_else(|| map3_by_name(&name))
         .ok_or(format!("unknown map '{name}'"))?;
@@ -179,6 +183,50 @@ fn verify(args: &Args) -> Result<(), String> {
     let covered = seen.len() as u128;
     println!(
         "map={name} nb={nb}: domain={domain} covered={covered} dups={dups} \
+         escaped={escaped} filler={filler} parallel={} passes={}",
+        map.parallel_volume(nb),
+        map.passes(nb)
+    );
+    if covered == domain && dups == 0 && escaped == 0 {
+        println!("VERIFY OK: exact coverage");
+        Ok(())
+    } else {
+        Err("coverage verification FAILED".into())
+    }
+}
+
+/// Gasket-domain counterpart of `verify`: every mapped block must be a
+/// gasket cell, each covered exactly once (E15).
+fn verify_gasket(name: &str, nb: u64) -> Result<(), String> {
+    use simplexmap::simplex::gasket;
+    let map = simplexmap::maps::map_by_name(2, name)
+        .filter(|m| m.domain() == gasket::DomainKind::Gasket)
+        .ok_or(format!("unknown gasket map '{name}'"))?;
+    if !map.supports(nb) {
+        return Err(format!("map {name} does not support nb={nb} (needs 2^k)"));
+    }
+    let mut seen = std::collections::HashSet::new();
+    let mut filler = 0u64;
+    let mut dups = 0u64;
+    let mut escaped = 0u64;
+    for pass in 0..map.passes(nb) {
+        for w in map.grid(nb, pass).iter() {
+            match map.map_block(nb, pass, &w) {
+                None => filler += 1,
+                Some(d) => {
+                    if !gasket::in_gasket(nb, d[0], d[1]) {
+                        escaped += 1;
+                    } else if !seen.insert((d[0], d[1])) {
+                        dups += 1;
+                    }
+                }
+            }
+        }
+    }
+    let domain = map.domain_volume(nb);
+    let covered = seen.len() as u128;
+    println!(
+        "map={name} domain=gasket nb={nb}: domain={domain} covered={covered} dups={dups} \
          escaped={escaped} filler={filler} parallel={} passes={}",
         map.parallel_volume(nb),
         map.passes(nb)
@@ -272,6 +320,9 @@ fn build_scheduler(
     if let Some(r) = cfg.get_int("coordinator", "rho_m") {
         sched.rho.rho_m = r as u32;
     }
+    if let Some(r) = cfg.get_int("coordinator", "rho_gasket") {
+        sched.rho.rho_gasket = r as u32;
+    }
     Ok((service, sched))
 }
 
@@ -293,17 +344,33 @@ fn run(args: &Args, sweep: bool) -> Result<(), String> {
     let seed = args.get_u64("seed").map_err(|e| e.to_string())?.unwrap();
     let (_svc, sched) = build_scheduler(args, backend == Backend::Pjrt)?;
 
+    let gasket = workload.domain() == simplexmap::maps::DomainKind::Gasket;
     let maps: Vec<String> = if sweep {
-        match workload.m() {
-            2 => ["bb", "lambda2", "enum2", "rb", "ries"]
+        if gasket {
+            // The dedicated gasket maps, plus two simplex covers to
+            // show the predication waste they pay on a fractal domain.
+            ["bb-gasket", "lambda-gasket", "bb", "lambda2"]
                 .iter()
                 .map(|s| s.to_string())
-                .collect(),
-            3 => ["bb", "lambda3", "enum3"].iter().map(|s| s.to_string()).collect(),
-            m => simplexmap::maps::map_names(m),
+                .collect()
+        } else {
+            match workload.m() {
+                2 => ["bb", "lambda2", "enum2", "rb", "ries"]
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect(),
+                3 => ["bb", "lambda3", "enum3"].iter().map(|s| s.to_string()).collect(),
+                m => simplexmap::maps::map_names(m),
+            }
         }
     } else {
-        let default = if workload.m() >= 4 { "lambda-m" } else { "lambda2" };
+        let default = if gasket {
+            "lambda-gasket"
+        } else if workload.m() >= 4 {
+            "lambda-m"
+        } else {
+            "lambda2"
+        };
         vec![args.get("map").unwrap_or(default).to_string()]
     };
 

@@ -1,0 +1,205 @@
+//! Block-space maps for the embedded Sierpiński gasket (arXiv:1706.04552
+//! brought into the unified [`MThreadMap`] engine) — the first maps
+//! whose data domain is *not* an orthogonal simplex.
+//!
+//! - [`GasketLambdaMap`] (`lambda-gasket`) — the recursive block-space
+//!   map λ_Δ: a compact parallel orthotope of exactly `3^k` blocks,
+//!   each sent to one gasket block by an O(k) base-3 digit descent
+//!   (0 = top, 1 = bottom-left, 2 = bottom-right sub-triangle). Zero
+//!   filler, space efficiency 1.0.
+//! - [`GasketBoundingBoxMap`] (`bb-gasket`) — the baseline: launch the
+//!   gasket's tight `nb × nb` bounding box and predicate-discard every
+//!   non-gasket block. `4^k − 3^k` filler blocks, so λ_Δ improves the
+//!   parallel space by exactly `(4/3)^k` — ≈5.6× at k = 6 and
+//!   unbounded in k, the fractal counterpart of eq. 4's `m! − 1`.
+//!
+//! Both report [`DomainKind::Gasket`] and override
+//! [`MThreadMap::domain_volume`] to `3^k`, so the engine's
+//! waste/efficiency accounting compares them on the *gasket* cell
+//! count, not the simplex closed form.
+
+use crate::maps::MThreadMap;
+use crate::simplex::block_m::{BlockM, OrthotopeM};
+use crate::simplex::gasket::{gasket_cell, gasket_order, gasket_volume, in_gasket, DomainKind};
+
+/// λ_Δ — the recursive gasket map. Stateless: the whole layout is the
+/// digit arithmetic (O(log nb) per block, like the source paper's
+/// recursive descent).
+pub struct GasketLambdaMap;
+
+impl GasketLambdaMap {
+    /// Parallel grid for order k: a balanced two-axis factorization of
+    /// `3^k` (`3^⌈k/2⌉ × 3^⌊k/2⌋`), keeping both grid dimensions small
+    /// the way a real CUDA launch would.
+    fn grid_for(k: u32) -> OrthotopeM {
+        OrthotopeM::new(&[3u64.pow(k.div_ceil(2)), 3u64.pow(k / 2)])
+    }
+}
+
+impl MThreadMap for GasketLambdaMap {
+    fn name(&self) -> String {
+        "lambda-gasket".into()
+    }
+
+    fn m(&self) -> u32 {
+        2
+    }
+
+    fn domain(&self) -> DomainKind {
+        DomainKind::Gasket
+    }
+
+    fn domain_volume(&self, nb: u64) -> u128 {
+        gasket_order(nb).map_or(0, gasket_volume)
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        gasket_order(nb).is_some()
+    }
+
+    fn grid(&self, nb: u64, _pass: u64) -> OrthotopeM {
+        Self::grid_for(gasket_order(nb).expect("supports() gates nb"))
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, _pass: u64, w: &BlockM) -> Option<BlockM> {
+        let k = gasket_order(nb)?;
+        // Linear rank in grid order (axis 0 fastest, matching
+        // OrthotopeM::linear_of).
+        let t = w[1] * 3u64.pow(k.div_ceil(2)) + w[0];
+        let (col, row) = gasket_cell(k, t);
+        Some(BlockM::from_slice(&[col, row]))
+    }
+}
+
+/// BB_Δ — the gasket bounding-box baseline: identity over the full
+/// `nb × nb` grid plus the membership predicate.
+pub struct GasketBoundingBoxMap;
+
+impl MThreadMap for GasketBoundingBoxMap {
+    fn name(&self) -> String {
+        "bb-gasket".into()
+    }
+
+    fn m(&self) -> u32 {
+        2
+    }
+
+    fn domain(&self) -> DomainKind {
+        DomainKind::Gasket
+    }
+
+    fn domain_volume(&self, nb: u64) -> u128 {
+        gasket_order(nb).map_or(0, gasket_volume)
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        gasket_order(nb).is_some()
+    }
+
+    fn grid(&self, nb: u64, _pass: u64) -> OrthotopeM {
+        OrthotopeM::new(&[nb, nb])
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, _pass: u64, w: &BlockM) -> Option<BlockM> {
+        if in_gasket(nb, w[0], w[1]) {
+            Some(*w)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::{alpha_m, space_efficiency_m};
+    use crate::simplex::gasket::enumerate_gasket;
+    use std::collections::HashSet;
+
+    fn images(map: &dyn MThreadMap, nb: u64) -> (HashSet<(u64, u64)>, u64) {
+        let mut seen = HashSet::new();
+        let mut filler = 0u64;
+        for pass in 0..map.passes(nb) {
+            for w in map.grid(nb, pass).iter() {
+                match map.map_block(nb, pass, &w) {
+                    None => filler += 1,
+                    Some(d) => {
+                        assert!(seen.insert((d[0], d[1])), "dup {:?}", d.as_slice());
+                    }
+                }
+            }
+        }
+        (seen, filler)
+    }
+
+    #[test]
+    fn lambda_gasket_partitions_with_zero_filler() {
+        for k in 0..=5u32 {
+            let nb = 1u64 << k;
+            let (seen, filler) = images(&GasketLambdaMap, nb);
+            assert_eq!(filler, 0, "k={k}");
+            let scan: HashSet<_> = enumerate_gasket(nb).into_iter().collect();
+            assert_eq!(seen, scan, "k={k}");
+        }
+    }
+
+    #[test]
+    fn bb_gasket_covers_with_4k_minus_3k_filler() {
+        for k in 0..=5u32 {
+            let nb = 1u64 << k;
+            let (seen, filler) = images(&GasketBoundingBoxMap, nb);
+            let scan: HashSet<_> = enumerate_gasket(nb).into_iter().collect();
+            assert_eq!(seen, scan, "k={k}");
+            assert_eq!(filler as u128, 4u128.pow(k) - 3u128.pow(k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn gasket_grid_is_balanced() {
+        let g = GasketLambdaMap.grid(64, 0); // k=6 → 27 × 27
+        assert_eq!(g.dims.as_slice(), &[27, 27]);
+        let g = GasketLambdaMap.grid(32, 0); // k=5 → 27 × 9
+        assert_eq!(g.dims.as_slice(), &[27, 9]);
+        assert_eq!(GasketLambdaMap.parallel_volume(32), 243);
+    }
+
+    #[test]
+    fn efficiency_uses_the_gasket_domain_volume() {
+        // space_efficiency_m divides by the map's own domain volume —
+        // 3^k here, not the simplex nb(nb+1)/2.
+        let nb = 64u64;
+        assert_eq!(GasketLambdaMap.domain_volume(nb), 729);
+        assert!((space_efficiency_m(&GasketLambdaMap, nb) - 1.0).abs() < 1e-12);
+        assert!(
+            (space_efficiency_m(&GasketBoundingBoxMap, nb) - 0.75f64.powi(6)).abs() < 1e-12
+        );
+        assert!((alpha_m(&GasketLambdaMap, nb)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn improvement_matches_4_thirds_pow_k() {
+        // The acceptance golden: parallel-space improvement over the
+        // bounding box is (4/3)^k, within 1% at k = 6 (it is exact).
+        let nb = 64u64;
+        let ratio = GasketBoundingBoxMap.parallel_volume(nb) as f64
+            / GasketLambdaMap.parallel_volume(nb) as f64;
+        let closed = (4f64 / 3f64).powi(6);
+        assert!(
+            (ratio - closed).abs() / closed < 0.01,
+            "{ratio} vs {closed}"
+        );
+        assert_eq!(GasketLambdaMap.parallel_volume(nb), 729);
+        assert_eq!(GasketBoundingBoxMap.parallel_volume(nb), 4096);
+    }
+
+    #[test]
+    fn unsupported_sizes_rejected() {
+        assert!(!GasketLambdaMap.supports(12));
+        assert!(!GasketBoundingBoxMap.supports(0));
+        assert!(GasketLambdaMap.supports(1), "k=0 is one block");
+        let (seen, filler) = images(&GasketLambdaMap, 1);
+        assert_eq!((seen.len(), filler), (1, 0));
+    }
+}

@@ -10,6 +10,7 @@
 
 use crate::maps::ThreadMap;
 use crate::simplex::block_m::{BlockM, OrthotopeM, M_MAX};
+use crate::simplex::gasket::DomainKind;
 
 /// A block-space thread map for an m-simplex domain, any m ≤ [`M_MAX`].
 ///
@@ -21,6 +22,21 @@ pub trait MThreadMap: Send + Sync {
 
     /// Dimensionality of the data space.
     fn m(&self) -> u32;
+
+    /// Which block-level data domain the map covers. Almost every map
+    /// covers the orthogonal m-simplex; the gasket maps override this
+    /// (and the scheduler refuses to run a simplex workload on a map
+    /// that only covers the gasket).
+    fn domain(&self) -> DomainKind {
+        DomainKind::Simplex
+    }
+
+    /// Number of *useful* data blocks at size `nb` — the denominator of
+    /// the waste/efficiency accounting. Defaults to the simplex closed
+    /// form; non-simplex domains override (gasket: `3^k`).
+    fn domain_volume(&self, nb: u64) -> u128 {
+        crate::maps::domain_volume(nb, self.m())
+    }
 
     /// Whether the map accepts a problem of `nb` blocks per side.
     fn supports(&self, nb: u64) -> bool;
@@ -56,14 +72,15 @@ pub fn in_domain_m(nb: u64, m: u32, d: &BlockM) -> bool {
     }
 }
 
-/// Parallel-space efficiency `V(Δ) / V(Π)` for a dynamic-m map.
+/// Parallel-space efficiency `V(D) / V(Π)` for a dynamic-m map, where
+/// `V(D)` is the map's *own* domain volume (simplex or gasket).
 pub fn space_efficiency_m(map: &dyn MThreadMap, nb: u64) -> f64 {
-    crate::maps::domain_volume(nb, map.m()) as f64 / map.parallel_volume(nb) as f64
+    map.domain_volume(nb) as f64 / map.parallel_volume(nb) as f64
 }
 
-/// `V(Π)/V(Δ) - 1` — the waste ratio α for a dynamic-m map.
+/// `V(Π)/V(D) - 1` — the waste ratio α for a dynamic-m map.
 pub fn alpha_m(map: &dyn MThreadMap, nb: u64) -> f64 {
-    map.parallel_volume(nb) as f64 / crate::maps::domain_volume(nb, map.m()) as f64 - 1.0
+    map.parallel_volume(nb) as f64 / map.domain_volume(nb) as f64 - 1.0
 }
 
 /// Adapter: any registered fixed-m [`ThreadMap`] (m ≤ 3) as an
@@ -164,6 +181,14 @@ impl MThreadMap for BoundingBoxM {
 /// general-m natives.
 pub fn map_by_name(m: u32, name: &str) -> Option<Box<dyn MThreadMap>> {
     match m {
+        // m = 2 also hosts the gasket-domain natives (MThreadMap-only:
+        // they have no fixed-map ancestor to adapt).
+        2 if name == "lambda-gasket" || name == "gasket" => {
+            Some(Box::new(crate::maps::lambda_gasket::GasketLambdaMap))
+        }
+        2 if name == "bb-gasket" || name == "gasket-bb" => {
+            Some(Box::new(crate::maps::lambda_gasket::GasketBoundingBoxMap))
+        }
         2 | 3 => crate::maps::fixed_map_by_name(m, name)
             .map(|inner| Box::new(FixedAdapter::new(inner)) as Box<dyn MThreadMap>),
         4..=8 => match name {
@@ -180,12 +205,29 @@ pub fn map_by_name(m: u32, name: &str) -> Option<Box<dyn MThreadMap>> {
     }
 }
 
-/// All registered map names for dimension m (for CLIs and sweeps).
+/// All registered *simplex-domain* map names for dimension m (for CLIs
+/// and sweeps). Domain-scoped listing is [`map_names_for`].
 pub fn map_names(m: u32) -> Vec<String> {
-    match m {
-        2 => crate::maps::MAP2_NAMES.iter().map(|s| s.to_string()).collect(),
-        3 => crate::maps::MAP3_NAMES.iter().map(|s| s.to_string()).collect(),
-        4..=8 => vec!["bb".into(), "lambda-m".into()],
+    map_names_for(m, DomainKind::Simplex)
+}
+
+/// Registered map names for a (dimension, domain) pair. The simplex
+/// conformance suites sweep `DomainKind::Simplex`; the gasket names
+/// live only under `DomainKind::Gasket` so a partition check against
+/// the wrong domain can never pick them up by accident.
+pub fn map_names_for(m: u32, domain: DomainKind) -> Vec<String> {
+    match (domain, m) {
+        (DomainKind::Simplex, 2) => {
+            crate::maps::MAP2_NAMES.iter().map(|s| s.to_string()).collect()
+        }
+        (DomainKind::Simplex, 3) => {
+            crate::maps::MAP3_NAMES.iter().map(|s| s.to_string()).collect()
+        }
+        (DomainKind::Simplex, 4..=8) => vec!["bb".into(), "lambda-m".into()],
+        (DomainKind::Gasket, 2) => crate::maps::GASKET_MAP_NAMES
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
         _ => Vec::new(),
     }
 }
@@ -271,6 +313,29 @@ mod tests {
                 (nb as u128).pow(m) - domain_volume(nb, m),
                 "m={m}"
             );
+        }
+    }
+
+    #[test]
+    fn registry_resolves_gasket_names_at_m2_only() {
+        let lam = map_by_name(2, "lambda-gasket").unwrap();
+        assert_eq!(lam.domain(), DomainKind::Gasket);
+        assert_eq!(lam.domain_volume(8), 27);
+        assert!(map_by_name(2, "bb-gasket").is_some());
+        assert!(map_by_name(2, "gasket").is_some(), "alias");
+        assert!(map_by_name(3, "lambda-gasket").is_none());
+        // Simplex maps keep the default domain and simplex volume.
+        let l2 = map_by_name(2, "lambda2").unwrap();
+        assert_eq!(l2.domain(), DomainKind::Simplex);
+        assert_eq!(l2.domain_volume(8), domain_volume(8, 2));
+        // Domain-scoped listing: gasket names never leak into the
+        // simplex lists the conformance suites sweep.
+        let gasket = map_names_for(2, DomainKind::Gasket);
+        assert_eq!(gasket, vec!["bb-gasket".to_string(), "lambda-gasket".to_string()]);
+        assert!(map_names(2).iter().all(|n| !n.contains("gasket")));
+        assert!(map_names_for(3, DomainKind::Gasket).is_empty());
+        for name in gasket {
+            assert_eq!(map_by_name(2, &name).unwrap().name(), name);
         }
     }
 

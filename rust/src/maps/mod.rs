@@ -36,6 +36,7 @@ pub mod enumeration;
 pub mod lambda2;
 pub mod lambda3;
 pub mod lambda3_recursive;
+pub mod lambda_gasket;
 pub mod lambda_m;
 pub mod mdim;
 pub mod nonpow2;
@@ -50,11 +51,14 @@ pub use enumeration::{Enum2Map, Enum3Map};
 pub use lambda2::Lambda2Map;
 pub use lambda3::Lambda3Map;
 pub use lambda3_recursive::Lambda3RecMap;
+pub use lambda_gasket::{GasketBoundingBoxMap, GasketLambdaMap};
 pub use lambda_m::LambdaMMap;
 pub use mdim::{
-    adapt, alpha_m, in_domain_m, map_by_name, map_names, space_efficiency_m, BoundingBoxM,
-    FixedAdapter, MThreadMap,
+    adapt, alpha_m, in_domain_m, map_by_name, map_names, map_names_for, space_efficiency_m,
+    BoundingBoxM, FixedAdapter, MThreadMap,
 };
+
+pub use crate::simplex::gasket::DomainKind;
 pub use nonpow2::{CoverFromAbove, CoverFromBelow2};
 pub use rectangular_box::RectangularBoxMap;
 pub use ries::RiesMap;
@@ -156,6 +160,10 @@ pub const MAP2_NAMES: &[&str] =
     &["bb", "lambda2", "enum2", "rb", "ries", "avril", "above2", "below2"];
 /// All registered 3-simplex map names.
 pub const MAP3_NAMES: &[&str] = &["bb", "lambda3", "enum3", "lambda3-rec"];
+/// The gasket-domain map names (m = 2, [`DomainKind::Gasket`]) — listed
+/// separately from [`MAP2_NAMES`] because they cover a different data
+/// domain (the simplex conformance sweeps must not pick them up).
+pub const GASKET_MAP_NAMES: &[&str] = &["bb-gasket", "lambda-gasket"];
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,224 @@
+//! The embedded Sierpiński gasket — the first non-simplex block-level
+//! domain (Navarro & Bustos's follow-up "Block-space GPU Mapping for
+//! Embedded Sierpiński Gasket Fractals", arXiv:1706.04552, applies the
+//! paper's recursive block-space idea to fractal domains).
+//!
+//! ## Embedding
+//!
+//! The gasket of order k lives on an n×n grid with `n = 2^k`, as the
+//! odd entries of Pascal's triangle mod 2:
+//!
+//! ```text
+//! G(k) = { (col, row) : row < 2^k, col & !row == 0 }
+//! ```
+//!
+//! `col & !row == 0` (col's set bits are a subset of row's) implies
+//! `col ≤ row`, so `G(k)` embeds inside the inclusive lower-triangle
+//! convention every m = 2 map in this repo already uses — which is why
+//! the simplex maps *cover* the gasket (with waste) while the dedicated
+//! gasket maps hit it exactly.
+//!
+//! ## Recursion
+//!
+//! Splitting the top bit of (row, col) decomposes `G(k)` into three
+//! disjoint copies of `G(k-1)` (top, bottom-left, bottom-right), so
+//! `|G(k)| = 3^k` — against a tight bounding box of `4^k` cells, the
+//! compact parallel space is a `(4/3)^k` improvement. The same split at
+//! block granularity makes the domain exactly self-similar: with
+//! `ρ = 2^s` threads per block side, block `(bc, br)` intersects the
+//! thread-level gasket of order `k+s` iff `(bc, br) ∈ G(k)`, and then
+//! contains exactly `3^s` gasket cells.
+//!
+//! ## Rank
+//!
+//! Reading the three copies as base-3 digits (0 = top, 1 = bottom-left,
+//! 2 = bottom-right, most significant first) gives the canonical
+//! bijection `[0, 3^k) ↔ G(k)` — [`gasket_rank`]/[`gasket_cell`]. It
+//! composes across granularity:
+//! `rank_{k+s}(cell) = rank_k(block)·3^s + rank_s(local)`, which is how
+//! the CA workload stores per-cell state densely in `3^{k+s}` bytes.
+
+/// Which block-level data domain a map covers / a workload consumes.
+///
+/// Simplex maps cover `Gasket` workloads too (the gasket embeds in the
+/// inclusive triangle); gasket maps cover *only* the gasket — the
+/// scheduler rejects that mismatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DomainKind {
+    /// The paper's discrete orthogonal m-simplex (default).
+    Simplex,
+    /// The embedded Sierpiński gasket (m = 2 only).
+    Gasket,
+}
+
+/// Gasket order k for a grid of `nb` cells per side, i.e. `log2(nb)`
+/// when `nb` is a power of two (and `3^k` fits u64), else `None`.
+pub fn gasket_order(nb: u64) -> Option<u32> {
+    if nb == 0 || !nb.is_power_of_two() {
+        return None;
+    }
+    let k = nb.trailing_zeros();
+    // 3^k must fit a u64 linear rank (3^40 < 2^64 < 3^41).
+    if k <= 40 {
+        Some(k)
+    } else {
+        None
+    }
+}
+
+/// `|G(k)| = 3^k`.
+pub fn gasket_volume(k: u32) -> u128 {
+    3u128.pow(k)
+}
+
+/// Whether `(col, row)` is a gasket cell on the `nb × nb` grid.
+#[inline]
+pub fn in_gasket(nb: u64, col: u64, row: u64) -> bool {
+    row < nb && col & !row == 0
+}
+
+/// The cell of rank `t ∈ [0, 3^k)`: walk t's base-3 digits from most
+/// significant, descending one sub-triangle per level (0 = top,
+/// 1 = bottom-left, 2 = bottom-right). O(k) = O(log n), mirroring the
+/// recursive λ maps of the source papers.
+#[inline]
+pub fn gasket_cell(k: u32, t: u64) -> (u64, u64) {
+    debug_assert!((t as u128) < gasket_volume(k));
+    let (mut col, mut row) = (0u64, 0u64);
+    let mut rem = t;
+    for i in (0..k).rev() {
+        let p = 3u64.pow(i);
+        let d = rem / p;
+        rem %= p;
+        let s = 1u64 << i;
+        if d >= 1 {
+            row += s;
+        }
+        if d == 2 {
+            col += s;
+        }
+    }
+    (col, row)
+}
+
+/// Inverse of [`gasket_cell`]: the base-3 rank of a gasket cell, read
+/// off the bit pairs of (row, col) from the top: (0,0) → 0, (1,0) → 1,
+/// (1,1) → 2. (The pair (row bit 0, col bit 1) cannot occur on a
+/// gasket cell.)
+#[inline]
+pub fn gasket_rank(k: u32, col: u64, row: u64) -> u64 {
+    debug_assert!(in_gasket(1 << k, col, row), "({col},{row}) ∉ G({k})");
+    let mut t = 0u64;
+    for i in (0..k).rev() {
+        let rb = (row >> i) & 1;
+        let cb = (col >> i) & 1;
+        t = t * 3 + rb + cb;
+    }
+    t
+}
+
+/// Brute-force enumeration of `G(k)` by grid scan — the reference the
+/// conformance tests cross-check the rank bijection and the maps
+/// against (deliberately *not* built from [`gasket_cell`]).
+pub fn enumerate_gasket(nb: u64) -> Vec<(u64, u64)> {
+    let mut cells = Vec::new();
+    for row in 0..nb {
+        for col in 0..nb {
+            if in_gasket(nb, col, row) {
+                cells.push((col, row));
+            }
+        }
+    }
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn volume_is_3_pow_k_by_scan() {
+        for k in 0..=7u32 {
+            let nb = 1u64 << k;
+            assert_eq!(enumerate_gasket(nb).len() as u128, gasket_volume(k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn order_accepts_powers_of_two_only() {
+        assert_eq!(gasket_order(1), Some(0));
+        assert_eq!(gasket_order(64), Some(6));
+        assert_eq!(gasket_order(0), None);
+        assert_eq!(gasket_order(12), None);
+        assert_eq!(gasket_order(1 << 41), None, "3^41 overflows u64 ranks");
+        assert_eq!(gasket_order(1 << 40), Some(40));
+    }
+
+    #[test]
+    fn membership_implies_lower_triangle() {
+        // col & !row == 0 ⇒ col ≤ row: the gasket embeds in the m=2
+        // inclusive block-pair domain.
+        for &(col, row) in &enumerate_gasket(32) {
+            assert!(col <= row, "({col},{row})");
+        }
+        assert!(in_gasket(8, 5, 7));
+        assert!(!in_gasket(8, 1, 2), "bit 0 of col not in row");
+        assert!(!in_gasket(8, 0, 8), "row out of grid");
+    }
+
+    #[test]
+    fn rank_is_a_bijection_onto_the_scan() {
+        for k in 0..=6u32 {
+            let nb = 1u64 << k;
+            let mut by_rank: Vec<(u64, u64)> =
+                (0..3u64.pow(k)).map(|t| gasket_cell(k, t)).collect();
+            for (t, &(col, row)) in by_rank.iter().enumerate() {
+                assert_eq!(gasket_rank(k, col, row), t as u64, "k={k}");
+            }
+            let mut scan = enumerate_gasket(nb);
+            by_rank.sort_unstable();
+            scan.sort_unstable();
+            assert_eq!(by_rank, scan, "k={k}");
+        }
+    }
+
+    #[test]
+    fn rank_composes_across_granularity() {
+        // rank_{k+s}(global) = rank_k(block)·3^s + rank_s(local): the
+        // identity the CA workload's dense storage rests on.
+        let (k, s) = (3u32, 2u32);
+        let (nb, rho) = (1u64 << k, 1u64 << s);
+        for bt in 0..3u64.pow(k) {
+            let (bc, br) = gasket_cell(k, bt);
+            for u in 0..3u64.pow(s) {
+                let (lc, lr) = gasket_cell(s, u);
+                let (col, row) = (bc * rho + lc, br * rho + lr);
+                assert!(in_gasket(nb * rho, col, row));
+                assert_eq!(gasket_rank(k + s, col, row), bt * 3u64.pow(s) + u);
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_are_self_similar() {
+        // A ρ×ρ block holds 3^s gasket cells iff the block coordinate
+        // is itself a gasket cell, and zero otherwise.
+        let (k, s) = (2u32, 2u32);
+        let (nb, rho) = (1u64 << k, 1u64 << s);
+        let n = nb * rho;
+        for br in 0..nb {
+            for bc in 0..nb {
+                let cells = (0..rho)
+                    .flat_map(|lr| (0..rho).map(move |lc| (bc * rho + lc, br * rho + lr)))
+                    .filter(|&(c, r)| in_gasket(n, c, r))
+                    .count() as u128;
+                let expect = if in_gasket(nb, bc, br) {
+                    gasket_volume(s)
+                } else {
+                    0
+                };
+                assert_eq!(cells, expect, "block ({bc},{br})");
+            }
+        }
+    }
+}

@@ -3,12 +3,14 @@
 //! recursive orthotope sets `S_n^m` of eq. 25-29.
 
 pub mod block_m;
+pub mod gasket;
 pub mod orthotope;
 pub mod point;
 pub mod recursive_set;
 pub mod volume;
 
 pub use block_m::{BlockM, OrthotopeM, M_MAX};
+pub use gasket::DomainKind;
 pub use orthotope::Orthotope;
 pub use point::{PointM, Simplex};
 pub use volume::{simplex_volume, simplex_volume_bruteforce};

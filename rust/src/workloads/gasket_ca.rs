@@ -1,0 +1,298 @@
+//! Cellular automaton on the embedded Sierpiński gasket — the first
+//! non-simplex workload, exercising the fractal-domain maps end to end
+//! (the "computation on fractal domains" scenario of arXiv:1706.04552).
+//!
+//! Rule: a mod-sum neighbour automaton. Every gasket cell holds a value
+//! in `[0, MOD)`; one step replaces it with `(self + Σ neighbours) mod
+//! MOD`, where neighbours are the ≤8 surrounding cells *that are
+//! themselves gasket cells* (everything off-gasket reads as 0). Exact
+//! integer arithmetic, so every map/mode must agree bit-for-bit.
+//!
+//! Storage is dense in *rank space*: the state vector has `3^K` bytes
+//! (K = thread-level order) indexed by [`gasket_rank`], and the rank
+//! composition `rank_K(cell) = rank_k(block)·3^s + rank_s(local)` gives
+//! every ρ×ρ block (ρ = 2^s) a contiguous `3^s`-slot slice — disjoint
+//! writes per block, exactly like the triangular CA exploits map
+//! bijectivity.
+//!
+//! Block-level domain: the gasket block set `G(k) ⊂ B2(nb)`. Under the
+//! gasket maps every kernel block is a gasket block (3^s live threads,
+//! `ρ² − 3^s` predicated off). Under a *simplex* m=2 map the kernel
+//! also sees the triangle's non-gasket blocks: they do no work and
+//! report all `ρ²` threads predicated off — correct results, more
+//! waste, which is precisely the comparison the gasket maps exist to
+//! win.
+
+use crate::grid::MappedBlock;
+use crate::simplex::gasket::{gasket_cell, gasket_rank, gasket_volume, in_gasket};
+use crate::util::prng::Xoshiro256;
+use crate::workloads::{Accum, Workload};
+
+/// The automaton's value modulus.
+pub const MOD: u8 = 5;
+
+pub struct GasketCAWorkload {
+    /// Blocks per grid side (2^k).
+    pub nb: u64,
+    pub rho: u32,
+    /// Block-level gasket order (nb = 2^k).
+    pub k: u32,
+    /// Intra-block order (ρ = 2^s).
+    pub s: u32,
+    /// Dense rank-indexed state, `3^(k+s)` cells, values in `[0, MOD)`.
+    pub state: Vec<u8>,
+}
+
+impl GasketCAWorkload {
+    pub fn generate(nb: u64, rho: u32, seed: u64) -> GasketCAWorkload {
+        assert!(nb.is_power_of_two(), "gasket needs nb = 2^k, got {nb}");
+        assert!(
+            rho >= 1 && rho.is_power_of_two(),
+            "gasket needs ρ = 2^s, got {rho}"
+        );
+        let k = nb.trailing_zeros();
+        let s = rho.trailing_zeros();
+        let cells = gasket_volume(k + s) as usize;
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x6A5E);
+        let state = (0..cells).map(|_| rng.gen_range_u64(MOD as u64) as u8).collect();
+        GasketCAWorkload { nb, rho, k, s, state }
+    }
+
+    /// Thread-level problem size n = nb·ρ.
+    #[inline]
+    pub fn n(&self) -> u64 {
+        self.nb * self.rho as u64
+    }
+
+    /// Thread-level gasket order K = k + s.
+    #[inline]
+    pub fn order(&self) -> u32 {
+        self.k + self.s
+    }
+
+    /// Cell value at (col, row); off-gasket reads as 0.
+    #[inline]
+    pub fn get(&self, col: u64, row: u64) -> u8 {
+        if in_gasket(self.n(), col, row) {
+            self.state[gasket_rank(self.order(), col, row) as usize]
+        } else {
+            0
+        }
+    }
+
+    /// One cell's next value under the mod-sum rule.
+    #[inline]
+    pub fn next_cell(&self, col: u64, row: u64) -> u8 {
+        let mut total = self.get(col, row) as u32;
+        for dr in -1i64..=1 {
+            for dc in -1i64..=1 {
+                if dr == 0 && dc == 0 {
+                    continue;
+                }
+                let (r, c) = (row as i64 + dr, col as i64 + dc);
+                if r >= 0 && c >= 0 {
+                    total += self.get(c as u64, r as u64) as u32;
+                }
+            }
+        }
+        (total % MOD as u32) as u8
+    }
+
+    /// Sequential per-cell reference step (rank order).
+    pub fn step_reference(&self) -> Vec<u8> {
+        let kk = self.order();
+        (0..gasket_volume(kk) as u64)
+            .map(|t| {
+                let (col, row) = gasket_cell(kk, t);
+                self.next_cell(col, row)
+            })
+            .collect()
+    }
+
+    /// Compute one gasket block's next values into `out` (the block's
+    /// contiguous `3^s` rank slots).
+    pub fn tile_next(&self, bc: u64, br: u64, out: &mut [u8]) {
+        debug_assert!(in_gasket(self.nb, bc, br));
+        debug_assert_eq!(out.len() as u128, gasket_volume(self.s));
+        let rho = self.rho as u64;
+        for (u, slot) in out.iter_mut().enumerate() {
+            let (lc, lr) = gasket_cell(self.s, u as u64);
+            *slot = self.next_cell(bc * rho + lc, br * rho + lr);
+        }
+    }
+
+    /// Σ of all cell values (exact).
+    pub fn sum(&self) -> u64 {
+        self.state.iter().map(|&v| v as u64).sum()
+    }
+
+    fn outputs_for(&self, next: &[u8]) -> Vec<(String, f64)> {
+        let sum_after: u64 = next.iter().map(|&v| v as u64).sum();
+        // Position-weighted checksum: catches any permutation of the
+        // next state that a plain sum would miss. Exact in f64.
+        let checksum: u64 = next
+            .iter()
+            .enumerate()
+            .map(|(t, &v)| v as u64 * ((t as u64 % 97) + 1))
+            .sum();
+        vec![
+            ("cells".into(), self.state.len() as f64),
+            ("sum_before".into(), self.sum() as f64),
+            ("sum_after".into(), sum_after as f64),
+            ("checksum_after".into(), checksum as f64),
+        ]
+    }
+}
+
+/// Per-lane next-state buffer. Blocks write disjoint rank slices and 0
+/// is the empty default, so lanes merge with a plain max.
+struct GasketAccum {
+    next: Vec<u8>,
+}
+
+impl Workload for GasketCAWorkload {
+    fn name(&self) -> &'static str {
+        "gasket"
+    }
+
+    fn m(&self) -> u32 {
+        2
+    }
+
+    fn new_accum(&self) -> Accum {
+        Box::new(GasketAccum {
+            next: vec![0u8; self.state.len()],
+        })
+    }
+
+    fn process_block(&self, acc: &mut Accum, b: &MappedBlock) -> u64 {
+        let rho2 = (self.rho as u64).pow(2);
+        let (bc, br) = (b.data[0], b.data[1]);
+        if !in_gasket(self.nb, bc, br) {
+            // A simplex map handed us a triangle block outside the
+            // gasket: nothing to compute, every thread predicated off.
+            return rho2;
+        }
+        let a = acc.downcast_mut::<GasketAccum>().expect("gasket accum");
+        let per_block = gasket_volume(self.s) as u64;
+        let base = (gasket_rank(self.k, bc, br) * per_block) as usize;
+        self.tile_next(bc, br, &mut a.next[base..base + per_block as usize]);
+        rho2 - per_block
+    }
+
+    fn finish(&self, accs: Vec<Accum>) -> Vec<(String, f64)> {
+        let mut next = vec![0u8; self.state.len()];
+        for acc in accs {
+            let a = acc.downcast::<GasketAccum>().expect("gasket accum");
+            for (n, &v) in next.iter_mut().zip(&a.next) {
+                *n = (*n).max(v);
+            }
+        }
+        self.outputs_for(&next)
+    }
+
+    fn reference_outputs(&self) -> Vec<(String, f64)> {
+        self.outputs_for(&self.step_reference())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simplex::gasket::enumerate_gasket;
+
+    /// Sweep an explicit block list the way the engine would.
+    fn sweep(w: &GasketCAWorkload, blocks: &[(u64, u64)]) -> (Vec<u8>, u64) {
+        let mut next = vec![0u8; w.state.len()];
+        let per_block = gasket_volume(w.s) as usize;
+        let mut predicated = 0u64;
+        for &(bc, br) in blocks {
+            if !in_gasket(w.nb, bc, br) {
+                predicated += (w.rho as u64).pow(2);
+                continue;
+            }
+            let base = gasket_rank(w.k, bc, br) as usize * per_block;
+            w.tile_next(bc, br, &mut next[base..base + per_block]);
+            predicated += (w.rho as u64).pow(2) - per_block as u64;
+        }
+        (next, predicated)
+    }
+
+    #[test]
+    fn block_sweep_matches_reference() {
+        for (nb, rho) in [(4u64, 4u32), (8, 2), (2, 8)] {
+            let w = GasketCAWorkload::generate(nb, rho, 7);
+            let (next, predicated) = sweep(&w, &enumerate_gasket(nb));
+            assert_eq!(next, w.step_reference(), "nb={nb} ρ={rho}");
+            // Closed form: 3^k gasket blocks, each ρ² − 3^s off.
+            let expect = gasket_volume(w.k) as u64
+                * ((rho as u64).pow(2) - gasket_volume(w.s) as u64);
+            assert_eq!(predicated, expect, "nb={nb} ρ={rho}");
+        }
+    }
+
+    #[test]
+    fn triangle_block_sweep_also_matches() {
+        // Simplex maps feed the whole inclusive triangle: non-gasket
+        // blocks contribute nothing but full-ρ² predication.
+        let (nb, rho) = (8u64, 2u32);
+        let w = GasketCAWorkload::generate(nb, rho, 9);
+        let triangle: Vec<(u64, u64)> = (0..nb)
+            .flat_map(|br| (0..=br).map(move |bc| (bc, br)))
+            .collect();
+        let (next, predicated) = sweep(&w, &triangle);
+        assert_eq!(next, w.step_reference());
+        let gasket_blocks = gasket_volume(w.k) as u64;
+        let extra = triangle.len() as u64 - gasket_blocks;
+        let expect = gasket_blocks * ((rho as u64).pow(2) - gasket_volume(w.s) as u64)
+            + extra * (rho as u64).pow(2);
+        assert_eq!(predicated, expect);
+    }
+
+    #[test]
+    fn mod_sum_golden_k1_s1() {
+        // Deterministic state 0..8 mod 5 on the 9-cell order-2 gasket
+        // (Python-verified golden).
+        let mut w = GasketCAWorkload::generate(2, 2, 0);
+        w.state = (0..9u8).map(|t| t % MOD).collect();
+        assert_eq!(w.step_reference(), vec![3, 1, 2, 0, 2, 0, 3, 1, 1]);
+        let out = w.reference_outputs();
+        assert_eq!(out[2], ("sum_after".to_string(), 13.0));
+        assert_eq!(out[3], ("checksum_after".to_string(), 59.0));
+    }
+
+    #[test]
+    fn zero_state_stays_zero() {
+        let mut w = GasketCAWorkload::generate(4, 2, 1);
+        w.state.fill(0);
+        assert!(w.step_reference().iter().all(|&v| v == 0));
+        assert_eq!(w.sum(), 0);
+    }
+
+    #[test]
+    fn off_gasket_reads_as_dead() {
+        let w = GasketCAWorkload::generate(4, 2, 2);
+        assert_eq!(w.get(1, 2), 0, "(1,2) is not a gasket cell");
+        assert_eq!(w.get(0, w.n()), 0, "outside the grid");
+    }
+
+    #[test]
+    #[should_panic(expected = "nb = 2^k")]
+    fn generate_rejects_non_pow2_nb() {
+        GasketCAWorkload::generate(6, 2, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "ρ = 2^s")]
+    fn generate_rejects_non_pow2_rho() {
+        GasketCAWorkload::generate(4, 3, 0);
+    }
+
+    #[test]
+    fn state_values_respect_the_modulus() {
+        let w = GasketCAWorkload::generate(8, 4, 3);
+        assert_eq!(w.state.len() as u128, gasket_volume(w.order()));
+        assert!(w.state.iter().all(|&v| v < MOD));
+        assert!(w.step_reference().iter().all(|&v| v < MOD));
+    }
+}

@@ -25,11 +25,14 @@
 //! `col < row < n`; triple consumes unique triples `k < j < i < n`;
 //! cellular/trimatvec consume the inclusive triangle `col ≤ row`;
 //! ktuple consumes unique m-tuples `g_m < … < g_1 < n` (any
-//! 2 ≤ m ≤ 8 — at m = 2 it is the pair-style regression workload).
+//! 2 ≤ m ≤ 8 — at m = 2 it is the pair-style regression workload);
+//! gasket_ca consumes the embedded Sierpiński gasket `col & !row == 0`
+//! (the non-simplex domain — see [`crate::simplex::gasket`]).
 
 pub mod cellular;
 pub mod collision;
 pub mod edm;
+pub mod gasket_ca;
 pub mod ktuple;
 pub mod nbody;
 pub mod triple;
@@ -40,6 +43,7 @@ use std::any::Any;
 pub use cellular::CellularWorkload;
 pub use collision::CollisionWorkload;
 pub use edm::EdmWorkload;
+pub use gasket_ca::GasketCAWorkload;
 pub use ktuple::KTupleWorkload;
 pub use nbody::NBodyWorkload;
 pub use triple::TripleWorkload;
@@ -117,6 +121,7 @@ pub fn build(kind: WorkloadKind, nb: u64, rho: u32, seed: u64) -> Box<dyn Worklo
         WorkloadKind::Cellular => Box::new(CellularWorkload::generate(nb, rho, seed)),
         WorkloadKind::TriMatVec => Box::new(TriMatVecWorkload::generate(nb, rho, seed)),
         WorkloadKind::KTuple(m) => Box::new(KTupleWorkload::generate(nb, rho, m, seed)),
+        WorkloadKind::GasketCA => Box::new(GasketCAWorkload::generate(nb, rho, seed)),
     }
 }
 

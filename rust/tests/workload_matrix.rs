@@ -2,8 +2,16 @@
 //! must produce identical results (the fundamental guarantee the whole
 //! system rests on: the map changes *where blocks come from*, never
 //! *what is computed*). Pure-Rust backend — runs without artifacts.
+//!
+//! The *full differential matrix* at the bottom sweeps every registered
+//! [`WorkloadKind`] × every compatible map × both [`ExecMode`]s and
+//! asserts identical outputs AND identical thread-population stats —
+//! the class of bug the PR 3 ktuple m=2 `block_chunks` fix patched
+//! ad-hoc (right answer, wrong launch geometry) can no longer land
+//! silently.
 
-use simplexmap::coordinator::{Backend, Job, Scheduler, WorkloadKind};
+use simplexmap::coordinator::{Backend, ExecMode, Job, Scheduler, WorkloadKind};
+use simplexmap::maps::DomainKind;
 
 fn run(sched: &Scheduler, w: WorkloadKind, nb: u64, map: &str) -> Vec<(String, f64)> {
     sched
@@ -83,6 +91,112 @@ fn m3_workloads_agree_across_maps_and_sizes() {
         for map in &maps[1..] {
             let got = run(&sched, WorkloadKind::Triple, nb, map);
             assert_outputs_agree("triple", nb, &base, &got, map);
+        }
+    }
+}
+
+/// Every map a workload can run under — the compatibility axis of the
+/// differential matrix. Simplex workloads take every registered map of
+/// their dimension except avril (strict pairs only, see maps::avril);
+/// the gasket workload additionally runs under the m = 2 simplex maps
+/// (the gasket embeds in the inclusive triangle).
+fn compatible_maps(w: WorkloadKind) -> Vec<&'static str> {
+    match w.domain() {
+        DomainKind::Gasket => vec![
+            "bb-gasket",
+            "lambda-gasket",
+            "bb",
+            "lambda2",
+            "enum2",
+            "rb",
+            "ries",
+            "above2",
+            "below2",
+        ],
+        DomainKind::Simplex => match w.m() {
+            2 => vec!["bb", "lambda2", "enum2", "rb", "ries", "above2", "below2"],
+            3 => vec!["bb", "lambda3", "enum3", "lambda3-rec"],
+            _ => vec!["bb", "lambda-m"],
+        },
+    }
+}
+
+/// Power-of-two sizes every compatible map accepts, scaled down as the
+/// dimension (and thus the brute-force cost) grows.
+fn matrix_sizes(w: WorkloadKind) -> &'static [u64] {
+    match w.m() {
+        2 => &[4, 8],
+        3 => &[4],
+        4 => &[4],
+        _ => &[3],
+    }
+}
+
+#[test]
+fn full_matrix_outputs_agree_across_every_compatible_map() {
+    // Axis 1 of the differential matrix: for each (workload, size),
+    // every compatible map yields the same outputs as the first.
+    let sched = Scheduler::new(4, None);
+    for &w in WorkloadKind::ALL {
+        let maps = compatible_maps(w);
+        for &nb in matrix_sizes(w) {
+            let base = run(&sched, w, nb, maps[0]);
+            for map in &maps[1..] {
+                let got = run(&sched, w, nb, map);
+                assert_outputs_agree(w.name(), nb, &base, &got, map);
+            }
+        }
+    }
+}
+
+#[test]
+fn full_matrix_streaming_equals_collect_with_identical_stats() {
+    // Axis 2: for each (workload, map, size), the streaming and collect
+    // execution modes report the same outputs AND the same thread
+    // populations (passes, launched, mapped, predicated-off) — output
+    // agreement alone would miss a map/geometry mismatch that predicates
+    // the error away.
+    let streaming = Scheduler::new(3, None);
+    let mut collect = Scheduler::new(3, None);
+    collect.exec_mode = ExecMode::Collect;
+    for &w in WorkloadKind::ALL {
+        for &nb in matrix_sizes(w) {
+            for map in compatible_maps(w) {
+                let label = format!("{} nb={nb} map={map}", w.name());
+                let j = Job {
+                    workload: w,
+                    nb,
+                    map: map.into(),
+                    backend: Backend::Rust,
+                    seed: 99,
+                };
+                let a = streaming.run(&j).unwrap_or_else(|e| panic!("{label}: {e}"));
+                let b = collect.run(&j).unwrap_or_else(|e| panic!("{label}: {e}"));
+                assert_eq!(a.passes, b.passes, "{label}: passes");
+                assert_eq!(a.blocks_launched, b.blocks_launched, "{label}: launched");
+                assert_eq!(a.blocks_mapped, b.blocks_mapped, "{label}: mapped");
+                assert_eq!(a.threads_launched, b.threads_launched, "{label}: threads");
+                assert_eq!(
+                    a.threads_predicated_off, b.threads_predicated_off,
+                    "{label}: predicated"
+                );
+                assert_outputs_agree(w.name(), nb, &a.outputs, &b.outputs, map);
+            }
+        }
+    }
+}
+
+#[test]
+fn gasket_maps_and_simplex_covers_agree_exactly() {
+    // The gasket CA is pure integer arithmetic, so *exact* equality is
+    // required across its whole map row — including the simplex covers
+    // that pay predication for the non-gasket triangle blocks.
+    let sched = Scheduler::new(4, None);
+    for nb in [4u64, 8, 16] {
+        let base = run(&sched, WorkloadKind::GasketCA, nb, "lambda-gasket");
+        for map in compatible_maps(WorkloadKind::GasketCA) {
+            let got = run(&sched, WorkloadKind::GasketCA, nb, map);
+            assert_eq!(base, got, "nb={nb} map={map}");
         }
     }
 }
