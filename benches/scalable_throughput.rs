@@ -1,0 +1,168 @@
+//! E16 — λ_S scalable-map throughput: the integer-Newton
+//! rank-rearrangement arithmetic against the family it extends (λ2/λ3
+//! at their pow2-only sizes, the enumeration maps it shares rank order
+//! with, BB's predicate) — plus the same sweep at a non-power-of-two
+//! size, which only λ_S, ENUM and BB can run at all.
+//!
+//! Run: `cargo bench --bench scalable_throughput`
+//! (`SIMPLEXMAP_BENCH_NB` overrides the pow2 size; the JSON trajectory
+//! lands wherever `SIMPLEXMAP_BENCH_JSON` points.)
+
+use simplexmap::maps::lambda2::lambda2_inclusive;
+use simplexmap::maps::lambda_scalable::{lambda_s2, lambda_s3, scalable_width};
+use simplexmap::maps::{Lambda3Map, LambdaScalable3, ThreadMap};
+use simplexmap::util::benchkit::{black_box, section, Bencher};
+use simplexmap::util::isqrt::{isqrt_u64, triangular_root};
+
+fn main() {
+    let nb: u64 = std::env::var("SIMPLEXMAP_BENCH_NB")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2048);
+    // The λ2/λ3 comparison rows are only defined at powers of two; the
+    // non-pow2 sections below pick their own awkward size from nb.
+    assert!(nb.is_power_of_two() && nb >= 64, "SIMPLEXMAP_BENCH_NB must be 2^k ≥ 64");
+
+    section(&format!("E16: λ_S m=2 block-rearrangement throughput, nb = {nb}"));
+    let mut b = Bencher::default();
+    let useful = nb * (nb + 1) / 2;
+    let w2 = scalable_width(nb);
+    let h2 = useful / w2;
+
+    // λ_S over its exact half-width grid (one integer isqrt per block).
+    b.bench("lambda-s m=2 (integer Newton rank)", useful, || {
+        let mut acc = 0u64;
+        for y in 0..h2 {
+            for x in 0..w2 {
+                let (c, r) = lambda_s2(black_box(y * w2 + x));
+                acc = acc.wrapping_add(c + r);
+            }
+        }
+        black_box(acc);
+    });
+
+    // λ2 at the same (power-of-two) size: the cheaper clz+shift per
+    // block that λ_S trades for arbitrary-nb support.
+    b.bench("lambda2 (clz + shift, pow2 only)", useful, || {
+        let mut acc = 0u64;
+        for y in 0..=nb {
+            for x in 0..nb / 2 {
+                let (c, r) = lambda2_inclusive(nb, black_box(x), black_box(y));
+                acc = acc.wrapping_add(c + r);
+            }
+        }
+        black_box(acc);
+    });
+
+    // BB baseline: identity + predicate over the full square.
+    b.bench("bb2 (identity + predicate)", useful, || {
+        let mut acc = 0u64;
+        for y in 0..nb {
+            for x in 0..nb {
+                if x <= y {
+                    acc = acc.wrapping_add(black_box(x + y));
+                }
+            }
+        }
+        black_box(acc);
+    });
+    b.print_speedups("E16 m=2 summary");
+
+    // Non-power-of-two: λ2 cannot run here at all — λ_S vs BB only.
+    let odd = nb + 1 + nb / 2; // deliberately awkward (e.g. 3073)
+    section(&format!("E16: non-pow2 scalability, nb = {odd}"));
+    let mut b = Bencher::default();
+    let useful_odd = odd * (odd + 1) / 2;
+    let w_odd = scalable_width(odd);
+    let h_odd = useful_odd / w_odd;
+    b.bench("lambda-s m=2 (non-pow2 exact)", useful_odd, || {
+        let mut acc = 0u64;
+        for y in 0..h_odd {
+            for x in 0..w_odd {
+                let (c, r) = lambda_s2(black_box(y * w_odd + x));
+                acc = acc.wrapping_add(c + r);
+            }
+        }
+        black_box(acc);
+    });
+    b.bench("bb2 (non-pow2 predicate)", useful_odd, || {
+        let mut acc = 0u64;
+        for y in 0..odd {
+            for x in 0..odd {
+                if x <= y {
+                    acc = acc.wrapping_add(black_box(x + y));
+                }
+            }
+        }
+        black_box(acc);
+    });
+    b.print_speedups("E16 non-pow2 summary");
+
+    // m = 3: λ_S tetrahedral extension vs λ3 through the map interface.
+    let nb3 = (nb / 16).max(4);
+    section(&format!("E16: m=3 tetrahedral extension, nb = {nb3}"));
+    let mut b = Bencher::default();
+    let useful3 = nb3 * (nb3 + 1) * (nb3 + 2) / 6;
+    b.bench("lambda-s m=3 (two integer roots)", useful3, || {
+        let mut acc = 0u64;
+        for k in 0..useful3 {
+            let (x, y, z) = lambda_s3(black_box(k));
+            acc = acc.wrapping_add(x + y + z);
+        }
+        black_box(acc);
+    });
+    let l3 = Lambda3Map;
+    if l3.supports(nb3) {
+        b.bench("lambda3 (map interface, pow2 only)", useful3, || {
+            let mut acc = 0u64;
+            for pass in 0..l3.passes(nb3) {
+                for w in l3.grid(nb3, pass).iter() {
+                    if let Some(d) = l3.map_block(nb3, pass, black_box(w)) {
+                        acc = acc.wrapping_add(d[0] + d[1] + d[2]);
+                    }
+                }
+            }
+            black_box(acc);
+        });
+    }
+    let ls3 = LambdaScalable3;
+    b.bench("lambda-s m=3 (map interface)", useful3, || {
+        let mut acc = 0u64;
+        for w in ls3.grid(nb3, 0).iter() {
+            if let Some(d) = ls3.map_block(nb3, 0, black_box(w)) {
+                acc = acc.wrapping_add(d[0] + d[1] + d[2]);
+            }
+        }
+        black_box(acc);
+    });
+    b.print_speedups("E16 m=3 summary");
+
+    // The root primitive itself: integer Newton isqrt vs f64 sqrt+fixup
+    // (the cost the precision fix buys at, measured).
+    section("E16: root primitive microbench");
+    let mut b = Bencher::default();
+    let n_roots = 1u64 << 16;
+    b.bench("isqrt_u64 (integer Newton)", n_roots, || {
+        let mut acc = 0u64;
+        for i in 0..n_roots {
+            acc = acc.wrapping_add(isqrt_u64(black_box(i * 48_271 + 11)));
+        }
+        black_box(acc);
+    });
+    b.bench("triangular_root (isqrt-based)", n_roots, || {
+        let mut acc = 0u64;
+        for i in 0..n_roots {
+            acc = acc.wrapping_add(triangular_root(black_box(i * 48_271 + 11)));
+        }
+        black_box(acc);
+    });
+    b.bench("f64 sqrt + cast (unfixed)", n_roots, || {
+        let mut acc = 0u64;
+        for i in 0..n_roots {
+            let k = black_box(i * 48_271 + 11);
+            acc = acc.wrapping_add((((8.0 * k as f64 + 1.0).sqrt() - 1.0) * 0.5) as u64);
+        }
+        black_box(acc);
+    });
+    b.print_speedups("E16 root summary");
+}

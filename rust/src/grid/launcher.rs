@@ -84,14 +84,25 @@ pub struct LaunchStats {
 }
 
 impl LaunchStats {
-    /// Fraction of launched threads that did useful work.
+    /// Fraction of launched threads that did useful work. An empty
+    /// launch (zero threads) is vacuously fully efficient — the 0/0
+    /// division would otherwise yield NaN (see
+    /// [`OccupancyReport::measured_alpha`](super::OccupancyReport::measured_alpha)
+    /// for the shared convention).
     pub fn thread_efficiency(&self) -> f64 {
+        if self.threads_launched == 0 {
+            return 1.0;
+        }
         (self.threads_mapped - self.threads_predicated_off) as f64
             / self.threads_launched as f64
     }
 
-    /// Fraction of launched blocks that reached the kernel.
+    /// Fraction of launched blocks that reached the kernel (1.0 for an
+    /// empty launch, 0.0 when everything launched was filler).
     pub fn block_efficiency(&self) -> f64 {
+        if self.blocks_launched == 0 {
+            return 1.0;
+        }
         self.blocks_mapped as f64 / self.blocks_launched as f64
     }
 

@@ -24,7 +24,22 @@ impl OccupancyReport {
     }
 
     /// α = V(Π)/V(useful blocks) - 1, measured (not closed-form).
+    ///
+    /// Empty-coverage convention (the 0/0 and n/0 cases the plain
+    /// division turns into NaN, which then poisons every downstream
+    /// `<`/`max` comparison silently): a launch that paid for blocks
+    /// but mapped **none** is pure waste — α = +∞ — while an empty
+    /// launch (nothing launched, nothing mapped) wasted nothing —
+    /// α = 0. Same convention as [`LaunchStats::block_efficiency`]
+    /// (0 and 1 respectively).
     pub fn measured_alpha(&self) -> f64 {
+        if self.stats.blocks_mapped == 0 {
+            return if self.stats.blocks_launched == 0 {
+                0.0
+            } else {
+                f64::INFINITY
+            };
+        }
         self.stats.blocks_launched as f64 / self.stats.blocks_mapped as f64 - 1.0
     }
 
@@ -97,5 +112,73 @@ mod tests {
     fn table_row_mentions_map_name() {
         let rep = run(Box::new(Lambda2Map), 64, 2);
         assert!(rep.table_row().contains("lambda2"));
+    }
+
+    #[test]
+    fn lambda_s_measures_2x_over_bb_at_non_pow2_sizes() {
+        // The λ_S scalability claim, measured end-to-end at a size λ2
+        // rejects outright: improvement = nb²/T(nb) = 2nb/(nb+1).
+        let nb = 100;
+        let bb = run(Box::new(crate::maps::BoundingBox2), nb, 2);
+        let ls = run(Box::new(crate::maps::LambdaScalable2), nb, 2);
+        assert_eq!(ls.stats.blocks_filler, 0);
+        assert!(ls.measured_alpha().abs() < 1e-12);
+        let imp = ls.improvement_over(&bb);
+        let closed = 2.0 * nb as f64 / (nb as f64 + 1.0);
+        assert!((imp - closed).abs() < 1e-9, "improvement={imp} vs {closed}");
+    }
+
+    /// The empty-coverage convention (ISSUE 5): no NaN out of the α /
+    /// efficiency accessors, ever.
+    #[test]
+    fn measured_alpha_empty_coverage_convention() {
+        // Nothing launched, nothing mapped: zero waste, full efficiency.
+        let empty = OccupancyReport {
+            map: "synthetic",
+            nb: 0,
+            stats: LaunchStats::default(),
+        };
+        assert_eq!(empty.measured_alpha(), 0.0);
+        assert!(!empty.measured_alpha().is_nan());
+        assert_eq!(empty.stats.block_efficiency(), 1.0);
+        assert_eq!(empty.stats.thread_efficiency(), 1.0);
+
+        // Blocks launched, none useful: pure waste — α = +∞, eff 0.
+        let mut wasted = LaunchStats::default();
+        wasted.passes = 1;
+        wasted.blocks_launched = 64;
+        wasted.blocks_filler = 64;
+        wasted.threads_launched = 64 * 256;
+        let report = OccupancyReport {
+            map: "synthetic",
+            nb: 8,
+            stats: wasted,
+        };
+        assert!(report.measured_alpha().is_infinite());
+        assert!(report.measured_alpha() > 0.0);
+        assert_eq!(report.stats.block_efficiency(), 0.0);
+        assert_eq!(report.stats.thread_efficiency(), 0.0);
+        // The table row renders (inf), it must not panic or show NaN.
+        assert!(!report.table_row().contains("NaN"));
+
+        // And a normal report still divides as before.
+        let rep = run(Box::new(BoundingBox2), 16, 2);
+        assert!(rep.measured_alpha().is_finite());
+    }
+
+    #[test]
+    fn improvement_over_an_empty_coverage_baseline_is_infinite() {
+        // A useful map compared against an all-filler baseline: the
+        // ratio is +∞ (not NaN), so comparisons keep ordering.
+        let mut wasted = LaunchStats::default();
+        wasted.blocks_launched = 8;
+        wasted.blocks_filler = 8;
+        let baseline = OccupancyReport {
+            map: "synthetic",
+            nb: 4,
+            stats: wasted,
+        };
+        let good = run(Box::new(Lambda2Map), 16, 2);
+        assert!(good.improvement_over(&baseline).is_infinite());
     }
 }

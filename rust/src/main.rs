@@ -147,17 +147,28 @@ fn verify(args: &Args) -> Result<(), String> {
         .get("map")
         .ok_or("verify needs --map <name>")?
         .to_string();
+    // `--m <k>` (single value) pins the dimension: ≥ 4 goes through the
+    // general-m registry, 2/3 disambiguate names registered at both
+    // fixed dimensions (bb, enum, lambda-s, …). Without it, m=2 wins.
+    let mut pinned_m: Option<u32> = None;
     if let Some((lo, hi)) = args.get_range("m").map_err(|e| e.to_string())? {
         if lo == hi && lo >= 4 {
             return verify_m(lo as u32, &name, nb);
+        }
+        if lo == hi {
+            pinned_m = Some(lo as u32);
         }
     }
     if name.contains("gasket") {
         return verify_gasket(&name, nb);
     }
-    let map: Box<dyn ThreadMap> = map2_by_name(&name)
-        .or_else(|| map3_by_name(&name))
-        .ok_or(format!("unknown map '{name}'"))?;
+    let map: Box<dyn ThreadMap> = match pinned_m {
+        Some(2) => map2_by_name(&name),
+        Some(3) => map3_by_name(&name),
+        Some(m) => return Err(format!("--m {m} is not a verifiable dimension (2..=8)")),
+        None => map2_by_name(&name).or_else(|| map3_by_name(&name)),
+    }
+    .ok_or(format!("unknown map '{name}'"))?;
     if !map.supports(nb) {
         return Err(format!("map {name} does not support nb={nb}"));
     }
@@ -353,15 +364,15 @@ fn run(args: &Args, sweep: bool) -> Result<(), String> {
                 .iter()
                 .map(|s| s.to_string())
                 .collect()
+        } else if workload.m() >= 4 {
+            simplexmap::maps::map_names(workload.m())
         } else {
-            match workload.m() {
-                2 => ["bb", "lambda2", "enum2", "rb", "ries"]
-                    .iter()
-                    .map(|s| s.to_string())
-                    .collect(),
-                3 => ["bb", "lambda3", "enum3"].iter().map(|s| s.to_string()).collect(),
-                m => simplexmap::maps::map_names(m),
-            }
+            let fixed: &[&str] = if workload.m() == 2 {
+                &["bb", "lambda2", "enum2", "rb", "ries", "lambda-s"]
+            } else {
+                &["bb", "lambda3", "enum3", "lambda-s"]
+            };
+            fixed.iter().map(|s| s.to_string()).collect()
         }
     } else {
         let default = if gasket {

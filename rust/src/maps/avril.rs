@@ -7,9 +7,20 @@
 //! floating point over thread indices (k up to n²/2), it is "accurate
 //! only in the range n ∈ [0, 3000]" when evaluated in f32. We implement
 //! both precisions and reproduce that accuracy cliff as experiment E11.
+//!
+//! The f64 evaluation has its own cliff: the discriminant
+//! `(2n−1)² − 8k` is a difference of two ~2^2·log2(n)-bit quantities, so
+//! for k near the top of the range (a near n) catastrophic cancellation
+//! eats the mantissa — python-verified first misassignments at
+//! n = 2^28 (k = 36028796884746239) and n = 2^31. Since PR 5 the block
+//! path ([`AvrilMap::map_block`]) therefore uses [`avril_map_isqrt`] —
+//! the same inversion on the exact integer Newton root
+//! ([`crate::util::isqrt`]) — and the float variants remain only as the
+//! measured E11 subjects.
 
 use crate::maps::ThreadMap;
 use crate::simplex::Orthotope;
+use crate::util::isqrt::{isqrt_u64, triangular_root};
 
 /// Start offset of row `a` when strict upper pairs `(a, b)`, `a < b`,
 /// are enumerated row-major: row a holds `n-1-a` pairs, so
@@ -19,6 +30,17 @@ fn row_start(a: u64, n: u64) -> u64 {
     a * n - a - a * a.saturating_sub(1) / 2
 }
 
+/// Just the row of the f64 map — split out so the precision-cliff
+/// regression tests can probe the row at k values where the full map's
+/// `k - row_start(a)` would underflow on the misassigned row.
+#[inline(always)]
+pub fn avril_row_f64(k: u64, n: u64) -> u64 {
+    let kf = k as f64;
+    let nf = n as f64;
+    let disc = (2.0 * nf - 1.0) * (2.0 * nf - 1.0) - 8.0 * kf;
+    ((2.0 * nf - 1.0 - disc.sqrt()) * 0.5) as u64
+}
+
 /// The closed form, f64: thread k ∈ [0, n(n-1)/2) → (a, b), a < b < n.
 ///
 /// Inverting `row_start(a) ≤ k` gives
@@ -26,12 +48,22 @@ fn row_start(a: u64, n: u64) -> u64 {
 /// (equivalent to Avril's published map with index shifts folded in).
 #[inline(always)]
 pub fn avril_map_f64(k: u64, n: u64) -> (u64, u64) {
-    let kf = k as f64;
-    let nf = n as f64;
-    let disc = (2.0 * nf - 1.0) * (2.0 * nf - 1.0) - 8.0 * kf;
-    let a = ((2.0 * nf - 1.0 - disc.sqrt()) * 0.5) as u64;
+    let a = avril_row_f64(k, n);
     let b = a + 1 + (k - row_start(a, n));
     (a, b)
+}
+
+/// Exact integer inversion, O(1): count pairs from the *end* of the
+/// enumeration, where the reversed rows have triangular starts —
+/// reversed index `k' = total−1−k` lies in reversed row
+/// `j = triangular_root(k')`, i.e. row `a = n−2−j`. One integer
+/// Newton isqrt, no cancellation, exact at every n a u64 can index.
+#[inline(always)]
+pub fn avril_map_isqrt(k: u64, n: u64) -> (u64, u64) {
+    let total = n * (n - 1) / 2;
+    debug_assert!(k < total);
+    let a = n - 2 - triangular_root(total - 1 - k);
+    (a, a + 1 + (k - row_start(a, n)))
 }
 
 /// Same formula evaluated in f32 — the precision the GPU fast-sqrt
@@ -98,15 +130,18 @@ impl ThreadMap for AvrilMap {
     }
 
     fn supports(&self, nb: u64) -> bool {
-        nb >= 2
+        // row_start's a·n term must fit u64 (so must the pair index).
+        nb >= 2 && (nb as u128) * (nb as u128 - 1) <= u64::MAX as u128
     }
 
     fn grid(&self, nb: u64, _pass: u64) -> Orthotope {
         // Strict upper pairs, linearized into a near-square 2-D grid
-        // (the GPU constraint: grids are orthotopes).
+        // (the GPU constraint: grids are orthotopes). Integer ceil-sqrt
+        // width — the grid shape must not wobble with f64 either.
         let total = nb * (nb - 1) / 2;
-        let w = (total as f64).sqrt().ceil() as u64;
-        Orthotope::d2(w, total.div_ceil(w.max(1)))
+        let s = isqrt_u64(total);
+        let w = if s * s == total { s } else { s + 1 };
+        Orthotope::d2(w.max(1), total.div_ceil(w.max(1)))
     }
 
     #[inline]
@@ -116,7 +151,9 @@ impl ThreadMap for AvrilMap {
         if k >= nb * (nb - 1) / 2 {
             return None;
         }
-        let (a, b) = avril_map_f64(k, nb);
+        // Exact integer inversion — the f64 form misassigns rows from
+        // n ≈ 2^28 (see module doc); the floats stay E11-only.
+        let (a, b) = avril_map_isqrt(k, nb);
         // Convert upper pair (a < b) to the canonical lower-tri block
         // domain (col ≤ row): col = a, row = b.
         Some([a, b, 0])
@@ -156,6 +193,74 @@ mod tests {
             assert!(seen.insert((a, b)));
         }
         assert_eq!(seen.len() as u64, n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn isqrt_map_matches_exact_everywhere_small() {
+        for n in [2u64, 3, 5, 17, 64, 301, 1000] {
+            for k in 0..n * (n - 1) / 2 {
+                assert_eq!(avril_map_isqrt(k, n), avril_map_exact(k, n), "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn f64_cliff_at_2p28_and_isqrt_exact_there() {
+        // The f64 discriminant cancellation flips the row assignment at
+        // nb = 2^28 (python-verified golden): one block lands on the
+        // degenerate "pair" (n−1, n−1). The integer-Newton inversion
+        // used by the block path stays exact at the same index — the
+        // regression the old float inverse could not pass.
+        let n = 1u64 << 28;
+        let k = 36_028_796_884_746_239u64; // near total−1: max cancellation
+        assert!(k < n * (n - 1) / 2);
+        let exact = avril_map_exact(k, n);
+        assert_eq!(exact, (n - 2, n - 1));
+        assert_eq!(avril_row_f64(k, n), n - 1, "f64 misassigns the row");
+        assert_ne!(avril_row_f64(k, n), exact.0);
+        assert_eq!(avril_map_isqrt(k, n), exact);
+
+        // Same shape at nb = 2^31.
+        let n = 1u64 << 31;
+        let k = 2_305_843_008_139_952_127u64;
+        assert!(k < n * (n - 1) / 2);
+        let exact = avril_map_exact(k, n);
+        assert_eq!(exact, (n - 2, n - 1));
+        assert_eq!(avril_row_f64(k, n), n - 1, "f64 misassigns the row");
+        assert_eq!(avril_map_isqrt(k, n), exact);
+    }
+
+    #[test]
+    fn isqrt_map_exact_at_sampled_large_sizes() {
+        // Sampled agreement with the binary-search oracle across the
+        // nb ∈ 2^24..2^32 range the ISSUE names, including the
+        // cancellation-critical top of each range.
+        for n in [1u64 << 24, (1 << 26) + 3, 1 << 28, 1 << 31, 1 << 32] {
+            let total = n * (n - 1) / 2;
+            let stride = total / 64 + 1;
+            let mut k = 0u64;
+            while k < total {
+                assert_eq!(avril_map_isqrt(k, n), avril_map_exact(k, n), "n={n} k={k}");
+                k += stride;
+            }
+            for k in [total - 1, total - 2, total - n / 2, total / 2] {
+                assert_eq!(avril_map_isqrt(k, n), avril_map_exact(k, n), "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_path_survives_the_f64_cliff() {
+        // map_block at nb = 2^28 must place the cliff block correctly
+        // (it uses the isqrt inversion, not the f64 one).
+        let nb = 1u64 << 28;
+        let map = AvrilMap;
+        assert!(map.supports(nb));
+        let grid_w = map.grid(nb, 0).dims[0];
+        let k = 36_028_796_884_746_239u64;
+        let w = [k % grid_w, k / grid_w, 0];
+        let d = map.map_block(nb, 0, w).expect("in range");
+        assert_eq!((d[0], d[1]), (nb - 2, nb - 1));
     }
 
     #[test]

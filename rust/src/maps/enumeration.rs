@@ -8,41 +8,28 @@ use crate::maps::ThreadMap;
 use crate::simplex::volume::simplex_volume;
 use crate::simplex::Orthotope;
 
-/// Inverse triangular number: largest `r` with `r(r+1)/2 ≤ k`, by the
-/// quadratic formula (one sqrt) plus an exactness fix-up for the f64
-/// rounding near large k — the fix-up is part of the measured cost, as
-/// in the original implementations.
+/// Inverse triangular number: largest `r` with `r(r+1)/2 ≤ k`.
+///
+/// Until PR 5 this was the quadratic formula in f64 plus a ±1 fix-up —
+/// the original implementations' approach, whose raw (unfixed) form
+/// provably flips a row at `k = T(2^27) − 1` and whose correctness
+/// rested on IEEE rounding arguments. It now delegates to the shared
+/// integer-Newton root ([`crate::util::isqrt`]): exact for every u64
+/// input by construction, no floating point anywhere. The root is
+/// still the measured per-block cost of the enumeration maps — that is
+/// exactly the overhead λ avoids.
 #[inline(always)]
 pub fn triangular_root(k: u64) -> u64 {
-    let r = (((8.0 * k as f64 + 1.0).sqrt() - 1.0) * 0.5) as u64;
-    // f64 can be off by one in either direction for k ≳ 2^52; repair.
-    // (u128 avoids overflow of (r+1)(r+2) near the u64 edge.)
-    let t = |r: u64| r as u128 * (r as u128 + 1) / 2;
-    if t(r + 1) <= k as u128 {
-        r + 1
-    } else if t(r) > k as u128 {
-        r - 1
-    } else {
-        r
-    }
+    crate::util::isqrt::triangular_root(k)
 }
 
-/// Inverse tetrahedral number: largest `c` with `c(c+1)(c+2)/6 ≤ k`.
-/// Seeds with the real cube root (`(6k)^{1/3}`), then Newton-corrects —
-/// the cubic-equation solution of [15] that the paper calls out as
-/// "several square and cubic roots of overhead".
+/// Inverse tetrahedral number: largest `c` with `c(c+1)(c+2)/6 ≤ k` —
+/// the cubic-equation inverse of [15] that the paper calls out as
+/// "several square and cubic roots of overhead"; integer Newton cube
+/// root plus a bounded walk (shared helper, exact at every u64 input).
 #[inline(always)]
 pub fn tetrahedral_root(k: u64) -> u64 {
-    let tet = |c: u64| c * (c + 1) * (c + 2) / 6;
-    let mut c = (6.0 * k as f64).cbrt() as u64;
-    // The cube-root seed is within O(1) of the answer; walk to exact.
-    while c > 0 && tet(c) > k {
-        c -= 1;
-    }
-    while tet(c + 1) <= k {
-        c += 1;
-    }
-    c
+    crate::util::isqrt::tetrahedral_root(k)
 }
 
 /// ENUM2 — HPCC'14-style block map for the 2-simplex: block linear

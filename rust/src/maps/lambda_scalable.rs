@@ -1,0 +1,343 @@
+//! λ_S — the *scalable* block-rearrangement map of the follow-up paper
+//! ("A Scalable and Energy Efficient GPU Thread Map for m-Simplex
+//! Domains", arXiv 2208.11617): rearrange the simplex's blocks onto a
+//! compact orthotopal grid by inverting the simplex enumeration *at
+//! block granularity* with exact integer Newton roots
+//! ([`crate::util::isqrt`]) — no float inverse anywhere, so the map
+//! stays exact at arbitrary `nb`, not just the powers of two λ2/λ3
+//! require and not just the f64-safe sizes the thread-space inverses
+//! survive.
+//!
+//! ## m = 2 — half-width grid, zero waste at *every* size
+//!
+//! The grid is the half-width orthotope `w × h` with `w = ⌈nb/2⌉` and
+//! `h = T(nb)/w` — an *exact* division for every nb, because
+//! `T(nb) = nb(nb+1)/2` always factors through `⌈nb/2⌉`:
+//!
+//! ```text
+//! nb even:  T = (nb/2)·(nb+1)        → grid (nb/2) × (nb+1)
+//! nb odd:   T = ((nb+1)/2)·nb        → grid ((nb+1)/2) × nb
+//! ```
+//!
+//! Block `(x, y)` takes linear rank `k = y·w + x ∈ [0, T(nb))` and is
+//! rearranged to the k-th block of the inclusive lower triangle in
+//! row-major order: `row = triangular_root(k)`, `col = k − T(row)`.
+//! That is a bijection `[0, T(nb)) ↔ B2(nb)` (standard triangular
+//! unranking), so the parallel space *equals* the domain — the paper's
+//! 2×-over-BB headline — at every single size. λ2 achieves the same
+//! ratio with cheaper per-block arithmetic but only at `nb = 2^k`;
+//! λ_S is the production map for everything else.
+//!
+//! ## m = 3 — the tetrahedral extension
+//!
+//! Same rearrangement one dimension up: a half-width-based container
+//! `W × W × L` with `W = ⌈nb/2⌉` and `L = ⌈Tet(nb)/W²⌉` (just enough
+//! layers), linear rank `k`, and the two-stage descent
+//! `slab = tetrahedral_root(k)`, then the triangular unranking inside
+//! the slab `Σ x_i = slab`. Waste is only the final-layer rounding,
+//! `W²·L − Tet(nb) < W²` — strictly tighter than λ3's container slack
+//! of 12.5% (at nb = 32: 6144 launched vs λ3's 6912, exactly 1.125×
+//! tighter; python-cross-checked) and again available at every nb.
+//!
+//! Exhaustive conformance (partition, zero double-coverage, closed-form
+//! waste) for all nb ≤ 64 at m = 2 and nb ≤ 32 at m = 3 lives in
+//! `tests/map_conformance.rs`; E16 in DESIGN.md has the derivation.
+
+use crate::maps::ThreadMap;
+use crate::simplex::volume::triangular;
+use crate::simplex::Orthotope;
+use crate::util::isqrt::{tetrahedral_root, tetrahedron, triangular_root};
+
+/// Half-width grid width shared by both dimensions: `⌈nb/2⌉`.
+#[inline(always)]
+pub fn scalable_width(nb: u64) -> u64 {
+    nb.div_ceil(2)
+}
+
+/// The m = 2 rearrangement: linear block rank → inclusive lower-tri
+/// pair `(col, row)`, `col ≤ row` (one integer Newton isqrt). Exact
+/// for every rank in the `supports()` range, i.e. rows below 2³²,
+/// where `row·(row+1)` stays inside u64.
+#[inline(always)]
+pub fn lambda_s2(k: u64) -> (u64, u64) {
+    let row = triangular_root(k);
+    (k - row * (row + 1) / 2, row)
+}
+
+/// The m = 3 rearrangement: linear block rank → simplex coordinate
+/// `(x, y, z)` with `x+y+z = slab` (two integer Newton roots).
+#[inline(always)]
+pub fn lambda_s3(k: u64) -> (u64, u64, u64) {
+    let slab = tetrahedral_root(k);
+    let rem = k - tetrahedron(slab) as u64;
+    let row = triangular_root(rem);
+    let col = rem - row * (row + 1) / 2;
+    (col, row - col, slab - row)
+}
+
+/// λ_S for the 2-simplex: half-width grid, zero filler at every nb.
+pub struct LambdaScalable2;
+
+impl LambdaScalable2 {
+    /// Grid height `T(nb)/w` — exact division (module doc).
+    #[inline]
+    fn height(nb: u64) -> u64 {
+        (triangular(nb) / scalable_width(nb) as u128) as u64
+    }
+}
+
+impl ThreadMap for LambdaScalable2 {
+    fn name(&self) -> &'static str {
+        "lambda-s"
+    }
+
+    fn m(&self) -> u32 {
+        2
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        // Any size whose rank arithmetic stays in u64: the unranking
+        // computes row·(row+1) for rows up to nb−1, so nb(nb+1) (not
+        // just T(nb)) must fit — i.e. every nb ≤ 2³² − 1.
+        nb >= 1 && (nb as u128) * (nb as u128 + 1) <= u64::MAX as u128
+    }
+
+    fn grid(&self, nb: u64, _pass: u64) -> Orthotope {
+        Orthotope::d2(scalable_width(nb), Self::height(nb))
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, _pass: u64, w: [u64; 3]) -> Option<[u64; 3]> {
+        let k = w[1] * scalable_width(nb) + w[0];
+        let (c, r) = lambda_s2(k);
+        Some([c, r, 0])
+    }
+}
+
+/// λ_S for the 3-simplex: `W × W × L` container, sub-layer waste.
+pub struct LambdaScalable3;
+
+impl LambdaScalable3 {
+    /// Layer count `⌈Tet(nb)/W²⌉`.
+    #[inline]
+    fn layers(nb: u64) -> u64 {
+        let w = scalable_width(nb) as u128;
+        tetrahedron(nb).div_ceil(w * w) as u64
+    }
+}
+
+impl ThreadMap for LambdaScalable3 {
+    fn name(&self) -> &'static str {
+        "lambda-s"
+    }
+
+    fn m(&self) -> u32 {
+        3
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        // The padded linear rank tops out below Tet(nb) + W²; keep it
+        // (and therefore every k the sweep produces) inside u64. The
+        // coarse pre-bound keeps the u128 Tet evaluation itself safe.
+        // Tet(5·10⁶) already exceeds u64::MAX, so the cap loses nothing.
+        if nb == 0 || nb > 5_000_000 {
+            return false;
+        }
+        let w = scalable_width(nb) as u128;
+        tetrahedron(nb) + w * w <= u64::MAX as u128
+    }
+
+    fn grid(&self, nb: u64, _pass: u64) -> Orthotope {
+        let w = scalable_width(nb);
+        Orthotope::d3(w, w, Self::layers(nb))
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, _pass: u64, w: [u64; 3]) -> Option<[u64; 3]> {
+        let width = scalable_width(nb);
+        let k = (w[2] * width + w[1]) * width + w[0];
+        if k as u128 >= tetrahedron(nb) {
+            return None; // final-layer rounding past the last element
+        }
+        let (x, y, z) = lambda_s3(k);
+        Some([x, y, z])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maps::{alpha, domain_volume, in_domain, space_efficiency};
+    use std::collections::HashSet;
+
+    #[test]
+    fn s2_grid_shapes_divide_exactly() {
+        // Even: (nb/2) × (nb+1); odd: ((nb+1)/2) × nb — always T(nb).
+        assert_eq!(LambdaScalable2.grid(64, 0).dims, [32, 65, 1]);
+        assert_eq!(LambdaScalable2.grid(63, 0).dims, [32, 63, 1]);
+        assert_eq!(LambdaScalable2.grid(100, 0).dims, [50, 101, 1]);
+        assert_eq!(LambdaScalable2.grid(1, 0).dims, [1, 1, 1]);
+        for nb in 1..=300u64 {
+            assert_eq!(
+                LambdaScalable2.parallel_volume(nb),
+                triangular(nb),
+                "nb={nb}: the half-width grid must hold exactly T(nb)"
+            );
+        }
+    }
+
+    #[test]
+    fn s2_is_exact_bijection_at_awkward_sizes() {
+        // The scalability claim: exact partition at non-powers of two
+        // (the sizes λ2 rejects). The full nb ≤ 64 sweep is in
+        // tests/map_conformance.rs.
+        for nb in [1u64, 2, 3, 5, 6, 7, 12, 17, 31, 33, 48, 63, 100] {
+            let map = LambdaScalable2;
+            assert!(map.supports(nb));
+            let mut seen = HashSet::new();
+            for w in map.grid(nb, 0).iter() {
+                let d = map.map_block(nb, 0, w).expect("λ_S m=2 has no filler");
+                assert!(in_domain(nb, 2, d), "nb={nb}: {w:?} → {d:?}");
+                assert!(seen.insert((d[0], d[1])), "nb={nb}: dup {d:?}");
+            }
+            assert_eq!(seen.len() as u128, domain_volume(nb, 2), "nb={nb}");
+        }
+    }
+
+    #[test]
+    fn s2_stays_exact_at_sizes_where_f64_flips() {
+        // The precision claim: rank→pair stays an exact inverse at
+        // block ranks around T(2^27) − 1 (where the naive f64 root
+        // flips — util::isqrt tests) and up to the largest supported
+        // rank. Checked via the algebraic roundtrip T(row) + col == k.
+        let nb = (1u64 << 32) - 93;
+        assert!(LambdaScalable2.supports(nb));
+        let w = scalable_width(nb);
+        let h = (triangular(nb) / w as u128) as u64;
+        for k in [
+            0u64,
+            w - 1,
+            (1u64 << 27) * ((1 << 27) + 1) / 2 - 1,
+            (1u64 << 27) * ((1 << 27) + 1) / 2,
+            w * h / 2,
+            w * h - 1,
+        ] {
+            let (c, r) = lambda_s2(k);
+            assert!(c <= r && r < nb, "k={k} → ({c},{r})");
+            assert_eq!(r * (r + 1) / 2 + c, k, "k={k}: rank roundtrip");
+        }
+    }
+
+    #[test]
+    fn s2_zero_waste_and_2x_over_bb_at_every_size() {
+        for nb in [4u64, 7, 10, 64, 100, 4096, 4097] {
+            assert!(alpha(&LambdaScalable2, nb).abs() < 1e-12, "nb={nb}");
+            assert!((space_efficiency(&LambdaScalable2, nb) - 1.0).abs() < 1e-12);
+            // Improvement over BB's nb² grid: exactly 2nb/(nb+1) → 2.
+            let imp = (nb as f64 * nb as f64) / LambdaScalable2.parallel_volume(nb) as f64;
+            let closed = 2.0 * nb as f64 / (nb as f64 + 1.0);
+            assert!((imp - closed).abs() < 1e-12, "nb={nb}: {imp} vs {closed}");
+        }
+    }
+
+    #[test]
+    fn s3_container_matches_closed_form() {
+        // W = ⌈nb/2⌉, L = ⌈Tet(nb)/W²⌉ — python-cross-checked goldens.
+        for (nb, w, l, parallel, filler) in [
+            (4u64, 2u64, 5u64, 20u128, 0u128),
+            (8, 4, 8, 128, 8),
+            (16, 8, 13, 832, 16),
+            (32, 16, 24, 6144, 160),
+        ] {
+            let g = LambdaScalable3.grid(nb, 0);
+            assert_eq!(g.dims, [w, w, l], "nb={nb}");
+            assert_eq!(LambdaScalable3.parallel_volume(nb), parallel, "nb={nb}");
+            assert_eq!(parallel - tetrahedron(nb), filler, "nb={nb}");
+        }
+    }
+
+    #[test]
+    fn s3_covers_domain_exactly_once_at_awkward_sizes() {
+        // Full nb ≤ 32 sweep in tests/map_conformance.rs; here the
+        // non-pow2 sizes that make the scalability point.
+        for nb in [1u64, 2, 3, 5, 6, 7, 9, 12, 15, 17, 21] {
+            let map = LambdaScalable3;
+            assert!(map.supports(nb));
+            let mut seen = HashSet::new();
+            let mut filler = 0u128;
+            for w in map.grid(nb, 0).iter() {
+                match map.map_block(nb, 0, w) {
+                    None => filler += 1,
+                    Some(d) => {
+                        assert!(in_domain(nb, 3, d), "nb={nb}: {w:?} → {d:?}");
+                        assert!(seen.insert(d), "nb={nb}: dup {d:?}");
+                    }
+                }
+            }
+            assert_eq!(seen.len() as u128, domain_volume(nb, 3), "nb={nb}");
+            assert_eq!(
+                filler,
+                map.parallel_volume(nb) - domain_volume(nb, 3),
+                "nb={nb}: filler is exactly the final-layer rounding"
+            );
+        }
+    }
+
+    #[test]
+    fn s3_waste_stays_under_one_layer() {
+        for nb in 1..=64u64 {
+            let w = scalable_width(nb) as u128;
+            let waste = LambdaScalable3.parallel_volume(nb) - tetrahedron(nb);
+            assert!(waste < w * w, "nb={nb}: waste {waste} ≥ one layer {}", w * w);
+        }
+    }
+
+    #[test]
+    fn s3_beats_lambda3_container_by_exactly_its_slack() {
+        // λ3's container is (nb/2)²(3nb/4 + 3); λ_S packs the same
+        // domain into ⌈Tet/W²⌉ layers — 1.125× fewer blocks at nb = 32
+        // (6912 vs 6144, python-cross-checked), and λ3 does not exist
+        // at odd sizes at all.
+        use crate::maps::Lambda3Map;
+        let nb = 32u64;
+        assert_eq!(Lambda3Map.parallel_volume(nb), 6912);
+        assert_eq!(LambdaScalable3.parallel_volume(nb), 6144);
+        let ratio = Lambda3Map.parallel_volume(nb) as f64
+            / LambdaScalable3.parallel_volume(nb) as f64;
+        assert!((ratio - 1.125).abs() < 1e-12, "ratio={ratio}");
+        assert!(!Lambda3Map.supports(33) && LambdaScalable3.supports(33));
+    }
+
+    #[test]
+    fn supports_any_size_with_u64_rank() {
+        assert!(LambdaScalable2.supports(1));
+        assert!(LambdaScalable2.supports(3));
+        assert!(LambdaScalable2.supports(1 << 20));
+        assert!(LambdaScalable2.supports((1 << 32) - 1));
+        assert!(!LambdaScalable2.supports(1 << 32), "row·(row+1) must fit u64");
+        assert!(!LambdaScalable2.supports(0));
+        assert!(!LambdaScalable2.supports(u64::MAX));
+        assert!(LambdaScalable3.supports(1));
+        assert!(LambdaScalable3.supports(4_800_000));
+        assert!(!LambdaScalable3.supports(0));
+        assert!(!LambdaScalable3.supports(u64::MAX));
+    }
+
+    #[test]
+    fn rank_maps_agree_with_enumeration_order() {
+        // λ_S rearranges by the same canonical enumeration ENUM2/ENUM3
+        // invert — same rank order, so trace tooling can cross-read.
+        for k in 0..10_000u64 {
+            let (c, r) = lambda_s2(k);
+            assert_eq!(r * (r + 1) / 2 + c, k);
+            let (x, y, z) = lambda_s3(k);
+            let s = x + y + z;
+            let row = x + y;
+            assert_eq!(
+                tetrahedron(s) as u64 + row * (row + 1) / 2 + x,
+                k,
+                "m=3 rank roundtrip k={k}"
+            );
+        }
+    }
+}

@@ -38,6 +38,7 @@ pub mod lambda3;
 pub mod lambda3_recursive;
 pub mod lambda_gasket;
 pub mod lambda_m;
+pub mod lambda_scalable;
 pub mod mdim;
 pub mod nonpow2;
 pub mod rectangular_box;
@@ -53,6 +54,7 @@ pub use lambda3::Lambda3Map;
 pub use lambda3_recursive::Lambda3RecMap;
 pub use lambda_gasket::{GasketBoundingBoxMap, GasketLambdaMap};
 pub use lambda_m::LambdaMMap;
+pub use lambda_scalable::{LambdaScalable2, LambdaScalable3};
 pub use mdim::{
     adapt, alpha_m, in_domain_m, map_by_name, map_names, map_names_for, space_efficiency_m,
     BoundingBoxM, FixedAdapter, MThreadMap,
@@ -134,6 +136,9 @@ pub fn fixed_map_by_name(m: u32, name: &str) -> Option<Box<dyn ThreadMap>> {
         (2, "rb" | "rectangular-box") => Some(Box::new(RectangularBoxMap)),
         (2, "ries" | "rec") => Some(Box::new(RiesMap)),
         (2, "avril") => Some(Box::new(AvrilMap)),
+        // λ_S (arXiv 2208.11617): exact at arbitrary nb, integer roots.
+        (2, "lambda-s" | "scalable") => Some(Box::new(LambdaScalable2)),
+        (3, "lambda-s" | "scalable") => Some(Box::new(LambdaScalable3)),
         // §III.A non-power-of-two approaches (1: from above, 2: below).
         (2, "above2" | "from-above") => Some(Box::new(CoverFromAbove::new(Lambda2Map))),
         (2, "below2" | "from-below") => Some(Box::new(CoverFromBelow2)),
@@ -157,9 +162,9 @@ pub fn map3_by_name(name: &str) -> Option<Box<dyn ThreadMap>> {
 
 /// All registered 2-simplex map names (for CLIs and sweeps).
 pub const MAP2_NAMES: &[&str] =
-    &["bb", "lambda2", "enum2", "rb", "ries", "avril", "above2", "below2"];
+    &["bb", "lambda2", "enum2", "rb", "ries", "avril", "above2", "below2", "lambda-s"];
 /// All registered 3-simplex map names.
-pub const MAP3_NAMES: &[&str] = &["bb", "lambda3", "enum3", "lambda3-rec"];
+pub const MAP3_NAMES: &[&str] = &["bb", "lambda3", "enum3", "lambda3-rec", "lambda-s"];
 /// The gasket-domain map names (m = 2, [`DomainKind::Gasket`]) — listed
 /// separately from [`MAP2_NAMES`] because they cover a different data
 /// domain (the simplex conformance sweeps must not pick them up).

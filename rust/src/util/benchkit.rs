@@ -62,16 +62,30 @@ impl BenchResult {
         .to_string_compact()
     }
 
-    /// Append the JSON line to `path` (best effort — benches must not
-    /// fail because an artifact directory is read-only).
+    /// Append the JSON line to `path`. Benches never *fail* on export
+    /// problems (a read-only artifact dir must not kill a measurement
+    /// run), but they no longer stay silent either: the PR 3 perf
+    /// trajectory was lost precisely because an unresolvable
+    /// `SIMPLEXMAP_BENCH_JSON` path (missing parent directory on the
+    /// runner) dropped every line without a word and CI then uploaded
+    /// nothing. Parent directories are created on demand and any
+    /// failure is reported once per line on stderr.
     pub fn export_json(&self, path: &str) {
         use std::io::Write as _;
-        if let Ok(mut f) = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(path)
-        {
-            let _ = writeln!(f, "{}", self.json_line());
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() && !dir.exists() {
+                if let Err(e) = std::fs::create_dir_all(dir) {
+                    eprintln!("benchkit: cannot create {} for bench export: {e}", dir.display());
+                }
+            }
+        }
+        match std::fs::OpenOptions::new().create(true).append(true).open(path) {
+            Ok(mut f) => {
+                if let Err(e) = writeln!(f, "{}", self.json_line()) {
+                    eprintln!("benchkit: bench export write to {path} failed: {e}");
+                }
+            }
+            Err(e) => eprintln!("benchkit: bench export to {path} failed: {e}"),
         }
     }
 }
@@ -232,5 +246,25 @@ mod tests {
             assert!(crate::util::json::parse(line).is_ok(), "{line}");
         }
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn export_json_creates_missing_parent_dirs() {
+        // The PR 3 trajectory-loss regression: a path whose parent does
+        // not exist must still land on disk, not vanish silently.
+        let mut b = quick();
+        let r = b.bench("mkdir-check", 10, || {}).clone();
+        let dir = std::env::temp_dir().join(format!(
+            "simplexmap_benchkit_nested_{}/deeper",
+            std::process::id()
+        ));
+        let path = dir.join("BENCH_test.json");
+        let _ = std::fs::remove_dir_all(dir.parent().unwrap());
+        let path_str = path.to_str().unwrap().to_string();
+        r.export_json(&path_str);
+        let text = std::fs::read_to_string(&path).expect("export must land");
+        assert_eq!(text.lines().count(), 1);
+        assert!(crate::util::json::parse(text.lines().next().unwrap()).is_ok());
+        let _ = std::fs::remove_dir_all(dir.parent().unwrap());
     }
 }

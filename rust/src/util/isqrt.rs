@@ -1,0 +1,265 @@
+//! Exact integer roots by Newton descent — the float-free inverses the
+//! sqrt-based maps need (ISSUE 5 / the follow-up paper's precision fix).
+//!
+//! The 2016 paper's related work computes map inverses with `f64::sqrt`
+//! / `f64::cbrt` and repairs the rounding with ±1 fix-ups. That repair
+//! is *not* sufficient for thread-space maps at large n (the Avril f64
+//! discriminant loses to catastrophic cancellation around n ≈ 2^28 —
+//! see `maps::avril`), and it silently couples every map's correctness
+//! to IEEE details. This module provides the exact alternative used by
+//! λ_S, ENUM2/ENUM3 and the Avril block path:
+//!
+//! - [`isqrt_u128`] / [`isqrt_u64`] — floor square root. Newton from a
+//!   power-of-two seed `≥ √x` descends monotonically and stops exactly
+//!   at `⌊√x⌋` (the classic integer-Newton invariant: while `r > ⌊√x⌋`
+//!   the iterate strictly decreases; the first non-decreasing step is
+//!   the answer).
+//! - [`icbrt_u128`] — floor cube root: same descent with a bounded
+//!   (≤ 2 step) fix-up walk, because the floored cube iteration may
+//!   land one below the true floor.
+//! - [`triangular_root`] / [`tetrahedral_root`] — the simplex
+//!   enumeration inverses built on them, exact for every `u64` input:
+//!   `8k+1 ∈ [(2r+1)², (2r+3)²)` ⇒ `⌊(isqrt(8k+1)−1)/2⌋ = r` with no
+//!   fix-up at all.
+//!
+//! Cross-verified against `math.isqrt` and brute force by the PR's
+//! python port (exhaustive to 10^5 plus the 2^24..2^128 boundary set).
+
+/// Floor square root of a `u64` (exact for every input).
+#[inline]
+pub fn isqrt_u64(x: u64) -> u64 {
+    isqrt_u128(x as u128) as u64
+}
+
+/// Floor square root of a `u128` by integer Newton descent.
+#[inline]
+pub fn isqrt_u128(x: u128) -> u128 {
+    if x < 2 {
+        return x;
+    }
+    // Seed 2^⌈bits/2⌉ ≥ √x: x < 2^bits ⇒ √x < 2^(bits/2) ≤ seed.
+    let bits = 128 - x.leading_zeros();
+    let mut r = 1u128 << bits.div_ceil(2);
+    loop {
+        let next = (r + x / r) / 2;
+        if next >= r {
+            return r;
+        }
+        r = next;
+    }
+}
+
+/// Floor cube root of a `u128` by Newton descent plus a bounded walk.
+#[inline]
+pub fn icbrt_u128(x: u128) -> u128 {
+    if x == 0 {
+        return 0;
+    }
+    if x < 8 {
+        return 1;
+    }
+    let bits = 128 - x.leading_zeros();
+    let mut r = 1u128 << bits.div_ceil(3);
+    loop {
+        let next = (2 * r + x / (r * r)) / 3;
+        if next >= r {
+            break;
+        }
+        r = next;
+    }
+    // The floored iteration can stop a step off either way; walk to
+    // exact (never more than a couple of steps, python-cross-checked).
+    // Cubes are probed with checked arithmetic: near x = u128::MAX the
+    // candidate's cube itself can overflow, and an overflowing cube is
+    // by definition > x.
+    let cube = |v: u128| v.checked_mul(v).and_then(|sq| sq.checked_mul(v));
+    while cube(r).is_none_or(|c| c > x) {
+        r -= 1;
+    }
+    while cube(r + 1).is_some_and(|c| c <= x) {
+        r += 1;
+    }
+    r
+}
+
+/// Largest `r` with `r(r+1)/2 ≤ k` — the inverse triangular number,
+/// exact for every `u64` input with no floating point anywhere:
+/// `8k+1 ∈ [(2r+1)², (2r+3)²)` makes `isqrt(8k+1) ∈ {2r+1, 2r+2}`,
+/// and `(s−1)/2` floors both to `r`.
+#[inline]
+pub fn triangular_root(k: u64) -> u64 {
+    ((isqrt_u128(8 * k as u128 + 1) - 1) / 2) as u64
+}
+
+/// `c(c+1)(c+2)/6` in u128 (no overflow for any u64-rooted argument).
+#[inline]
+pub fn tetrahedron(c: u64) -> u128 {
+    let c = c as u128;
+    c * (c + 1) * (c + 2) / 6
+}
+
+/// Largest `c` with `c(c+1)(c+2)/6 ≤ k` — the inverse tetrahedral
+/// number: integer cube-root seed, then a bounded walk (the seed is
+/// within O(1) of the answer because `c³ ≤ c(c+1)(c+2) < (c+2)³`).
+#[inline]
+pub fn tetrahedral_root(k: u64) -> u64 {
+    let mut c = icbrt_u128(6 * k as u128) as u64;
+    while c > 0 && tetrahedron(c) > k as u128 {
+        c -= 1;
+    }
+    while tetrahedron(c + 1) <= k as u128 {
+        c += 1;
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isqrt_exhaustive_small() {
+        let mut r = 0u64;
+        for x in 0..100_000u64 {
+            if (r + 1) * (r + 1) <= x {
+                r += 1;
+            }
+            assert_eq!(isqrt_u64(x), r, "x={x}");
+        }
+    }
+
+    #[test]
+    fn isqrt_boundary_squares_at_large_magnitudes() {
+        // Around perfect squares at every magnitude the maps reach —
+        // the crossing where a rounded float sqrt flips the floor.
+        for s in [1u128 << 12, 1 << 24, 1 << 31, 1 << 32, 1 << 52, (1 << 63) - 25] {
+            assert_eq!(isqrt_u128(s * s), s);
+            assert_eq!(isqrt_u128(s * s - 1), s - 1);
+            assert_eq!(isqrt_u128(s * s + 1), s);
+            assert_eq!(isqrt_u128(s * s + 2 * s), s);
+            assert_eq!(isqrt_u128(s * s + 2 * s + 1), s + 1);
+        }
+        assert_eq!(isqrt_u128(u128::MAX), (1 << 64) - 1);
+        assert_eq!(isqrt_u64(u64::MAX), (1 << 32) - 1);
+    }
+
+    #[test]
+    fn isqrt_trivial_inputs() {
+        assert_eq!(isqrt_u128(0), 0);
+        assert_eq!(isqrt_u128(1), 1);
+        assert_eq!(isqrt_u128(2), 1);
+        assert_eq!(isqrt_u128(3), 1);
+        assert_eq!(isqrt_u128(4), 2);
+    }
+
+    #[test]
+    fn icbrt_exhaustive_small() {
+        for x in 0..20_000u128 {
+            let c = icbrt_u128(x);
+            assert!(c * c * c <= x, "x={x} c={c}");
+            assert!((c + 1) * (c + 1) * (c + 1) > x, "x={x} c={c}");
+        }
+    }
+
+    #[test]
+    fn icbrt_boundary_cubes_at_large_magnitudes() {
+        for c in [1u128 << 8, 1 << 21, 1 << 31, 1 << 40, 1 << 42] {
+            assert_eq!(icbrt_u128(c * c * c), c);
+            assert_eq!(icbrt_u128(c * c * c - 1), c - 1);
+            assert_eq!(icbrt_u128(c * c * c + 1), c);
+        }
+        // The overflow guard: near u128::MAX the candidate cubes do
+        // not fit u128 — the checked probe must treat them as > x.
+        let c = icbrt_u128(u128::MAX);
+        assert_eq!(c, 6_981_463_658_331);
+        assert!(c * c * c <= u128::MAX - 1);
+        assert_eq!(icbrt_u128(c * c * c), c);
+        assert_eq!(icbrt_u128(c * c * c - 1), c - 1);
+    }
+
+    #[test]
+    fn triangular_root_exhaustive_small() {
+        for r in 0..600u64 {
+            for k in r * (r + 1) / 2..(r + 1) * (r + 2) / 2 {
+                assert_eq!(triangular_root(k), r, "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn triangular_root_exact_where_naive_f64_flips() {
+        // The naive float inverse ⌊(√(8k+1)−1)/2⌋ evaluated in f64
+        // rounds UP across the block boundary at k = T(2^27) − 1
+        // (python-verified: it returns 2^27 there, one row high). The
+        // integer-Newton root stays exact at that k and at every
+        // boundary in the 2^24..2^32 row range the maps address.
+        let flip_r = 1u64 << 27;
+        let flip_k = flip_r * (flip_r + 1) / 2 - 1; // 9007199321849855
+        assert_eq!(flip_k, 9_007_199_321_849_855);
+        assert_eq!(triangular_root(flip_k), flip_r - 1, "the f64 flip point");
+        assert_eq!(triangular_root(flip_k + 1), flip_r);
+        for r in [1u64 << 24, 1 << 25, (1 << 31) - 1, (1 << 32) - 1, 3_000_000_000] {
+            let k = r * (r + 1) / 2;
+            assert_eq!(triangular_root(k - 1), r - 1, "r={r}");
+            assert_eq!(triangular_root(k), r, "r={r}");
+            assert_eq!(triangular_root(k + r), r, "r={r}");
+            assert_eq!(triangular_root(k + r + 1), r + 1, "r={r}");
+        }
+    }
+
+    #[test]
+    fn triangular_root_at_the_u64_edge() {
+        // Largest r with T(r) ≤ u64::MAX. T(r) fits u64 but the
+        // intermediate r(r+1) does not — compute it in u128.
+        let r = 6_074_000_999u64;
+        let k = (r as u128 * (r as u128 + 1) / 2) as u64;
+        assert_eq!(triangular_root(k), r);
+        assert_eq!(triangular_root(k - 1), r - 1);
+        assert_eq!(triangular_root(u64::MAX), r);
+    }
+
+    #[test]
+    fn tetrahedral_root_exhaustive_small() {
+        for c in 0..200u64 {
+            let lo = tetrahedron(c) as u64;
+            let hi = tetrahedron(c + 1) as u64;
+            for k in lo..hi {
+                assert_eq!(tetrahedral_root(k), c, "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn tetrahedral_root_boundaries_at_large_magnitudes() {
+        for c in [2_000_000u64, 1 << 21, 1 << 22, 4_800_000] {
+            assert_eq!(tetrahedral_root(tetrahedron(c) as u64), c);
+            assert_eq!(tetrahedral_root(tetrahedron(c) as u64 - 1), c - 1);
+            assert_eq!(tetrahedral_root((tetrahedron(c + 1) - 1) as u64), c);
+        }
+    }
+
+    #[test]
+    fn tetrahedron_matches_the_volume_closed_form() {
+        // Two spellings of c(c+1)(c+2)/6 exist (this leaf-infra copy
+        // and simplex::volume::tetrahedral's binomial form, which util
+        // cannot import outside tests) — pin them together.
+        for n in [0u64, 1, 2, 5, 100, 4096, 4_800_000] {
+            assert_eq!(tetrahedron(n), crate::simplex::volume::tetrahedral(n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn roots_agree_with_the_enumeration_module() {
+        // The shared helpers back maps::enumeration — same results.
+        for k in (0..5_000_000u64).step_by(9973) {
+            assert_eq!(
+                triangular_root(k),
+                crate::maps::enumeration::triangular_root(k)
+            );
+            assert_eq!(
+                tetrahedral_root(k),
+                crate::maps::enumeration::tetrahedral_root(k)
+            );
+        }
+    }
+}

@@ -25,7 +25,7 @@ fn lambda2_efficiency_is_exactly_one() {
 
 #[test]
 fn all_zero_waste_m2_maps_hit_efficiency_one() {
-    for name in ["lambda2", "enum2", "rb", "ries", "below2"] {
+    for name in ["lambda2", "enum2", "rb", "ries", "below2", "lambda-s"] {
         let map = map2_by_name(name).unwrap();
         for nb in SIZES {
             assert!(map.supports(nb), "{name} must support pow2 {nb}");
@@ -33,6 +33,47 @@ fn all_zero_waste_m2_maps_hit_efficiency_one() {
             assert!((e - 1.0).abs() < 1e-12, "{name} nb={nb}: eff={e}");
         }
     }
+}
+
+#[test]
+fn lambda_s_m2_efficiency_is_one_at_arbitrary_sizes() {
+    // The λ_S scalability row: exactly 1.0 at sizes no other zero-waste
+    // map family covers uniformly (odd, prime, pow2±1 — every nb).
+    let map = map2_by_name("lambda-s").unwrap();
+    for nb in [3u64, 7, 63, 65, 100, 511, 513, 4095, 4097, 9973] {
+        assert!(map.supports(nb), "nb={nb}");
+        let e = space_efficiency(map.as_ref(), nb);
+        assert!((e - 1.0).abs() < 1e-12, "nb={nb}: eff={e}");
+        assert!(alpha(map.as_ref(), nb).abs() < 1e-12, "nb={nb}");
+    }
+}
+
+#[test]
+fn lambda_s_m3_efficiency_matches_closed_form_and_beats_lambda3() {
+    // λ_S m=3: eff = Tet(nb) / (W²·⌈Tet(nb)/W²⌉) with W = ⌈nb/2⌉ —
+    // above λ3's 8/9 container bound at every common size, and defined
+    // at the odd sizes λ3 rejects.
+    let map = map3_by_name("lambda-s").unwrap();
+    for nb in SIZES {
+        let w = nb.div_ceil(2) as u128;
+        let tet = simplexmap::simplex::volume::tetrahedral(nb);
+        let closed = tet as f64 / ((w * w * tet.div_ceil(w * w)) as f64);
+        let e = space_efficiency(map.as_ref(), nb);
+        assert!((e - closed).abs() < 1e-12, "nb={nb}: {e} vs {closed}");
+        assert!(
+            e > space_efficiency(&Lambda3Map, nb),
+            "nb={nb}: λ_S must beat λ3's container"
+        );
+    }
+    // And the waste vanishes asymptotically (sub-layer rounding only):
+    // at nb = 4096 the efficiency is within 0.03% of 1 — effectively
+    // the full 6× over BB, vs λ3's 16/3.
+    let e = space_efficiency(map.as_ref(), 4096);
+    assert!(e > 0.9997, "eff(4096)={e}");
+    let imp = e / space_efficiency(&BoundingBox3, 4096);
+    assert!(imp > 5.99 && imp <= 6.01, "improvement {imp}");
+    // Odd-size coverage λ3 never had.
+    assert!(map.supports(4097) && !Lambda3Map.supports(4097));
 }
 
 #[test]

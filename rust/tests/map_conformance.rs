@@ -133,7 +133,7 @@ fn every_m2_map_partitions_domain_at_every_supported_size() {
 #[test]
 fn zero_waste_m2_maps_have_exactly_zero_filler() {
     // The paper's m=2 claim: parallel space equals the data domain.
-    for name in ["lambda2", "enum2", "rb", "ries", "below2"] {
+    for name in ["lambda2", "enum2", "rb", "ries", "below2", "lambda-s"] {
         let map = map2_by_name(name).unwrap();
         for nb in supported_sizes(map.as_ref(), NB_MAX_M2) {
             let c = sweep(map.as_ref(), nb);
@@ -246,6 +246,114 @@ fn lambda3_rec_cubes_are_disjoint_and_filler_is_cube_overflow() {
             "lambda3-rec nb={nb}"
         );
     }
+}
+
+// ---- λ_S, the scalable block-rearrangement family (E16) --------------
+
+/// λ_S m=2 covers *every* size 1..=64 — the full-range sweep above
+/// only exercises `supports()`-accepted sizes, so pin the claim here:
+/// no size in range is skipped, and the grid is exactly T(nb) blocks.
+#[test]
+fn lambda_s_m2_supports_every_size_with_exact_grid() {
+    let map = map2_by_name("lambda-s").unwrap();
+    assert_eq!(
+        supported_sizes(map.as_ref(), NB_MAX_M2).len() as u64,
+        NB_MAX_M2,
+        "λ_S must accept every nb ∈ [1, {NB_MAX_M2}]"
+    );
+    for nb in 1..=NB_MAX_M2 {
+        assert_eq!(map.parallel_volume(nb), triangular(nb), "nb={nb}");
+        let c = sweep(map.as_ref(), nb);
+        assert_eq!(c.filler, 0, "nb={nb}: λ_S m=2 is zero-waste");
+    }
+}
+
+/// λ_S m=3 covers every size 1..=32 with the closed-form container
+/// waste `W²·⌈Tet(nb)/W²⌉ − Tet(nb) < W²` (final-layer rounding only).
+#[test]
+fn lambda_s_m3_filler_matches_closed_form_at_every_size() {
+    let map = map3_by_name("lambda-s").unwrap();
+    assert_eq!(
+        supported_sizes(map.as_ref(), NB_MAX_M3).len() as u64,
+        NB_MAX_M3,
+        "λ_S must accept every nb ∈ [1, {NB_MAX_M3}]"
+    );
+    for nb in 1..=NB_MAX_M3 {
+        let c = sweep(map.as_ref(), nb);
+        let w = nb.div_ceil(2) as u128;
+        let container = w * w * simplex_volume(nb, 3).div_ceil(w * w);
+        assert_eq!(c.parallel, container, "lambda-s m=3 nb={nb}");
+        assert_eq!(c.filler, container - simplex_volume(nb, 3), "nb={nb}");
+        assert!(c.filler < w * w, "nb={nb}: more than one layer of waste");
+    }
+}
+
+/// The E16 improvement goldens vs BB and the λ family (python-cross-
+/// checked): λ_S m=2 is exactly T(nb)-tight like λ2 but at every nb;
+/// λ_S m=3 launches exactly 1.125× fewer blocks than λ3's container at
+/// nb = 32 and approaches the full 6× over BB.
+#[test]
+fn lambda_s_improvement_factors_match_closed_forms() {
+    let ls2 = map2_by_name("lambda-s").unwrap();
+    let bb2 = map2_by_name("bb").unwrap();
+    let l2 = map2_by_name("lambda2").unwrap();
+    for nb in [6u64, 17, 33, 64] {
+        let imp = bb2.parallel_volume(nb) as f64 / ls2.parallel_volume(nb) as f64;
+        let closed = 2.0 * nb as f64 / (nb as f64 + 1.0);
+        assert!((imp - closed).abs() < 1e-12, "nb={nb}: {imp} vs {closed}");
+    }
+    // Equal footing with λ2 wherever λ2 exists at all.
+    for nb in [4u64, 16, 64] {
+        assert_eq!(ls2.parallel_volume(nb), l2.parallel_volume(nb), "nb={nb}");
+    }
+    let ls3 = map3_by_name("lambda-s").unwrap();
+    let l3 = map3_by_name("lambda3").unwrap();
+    let bb3 = map3_by_name("bb").unwrap();
+    assert_eq!(ls3.parallel_volume(32), 6144);
+    assert_eq!(l3.parallel_volume(32), 6912);
+    let vs_l3 = l3.parallel_volume(32) as f64 / ls3.parallel_volume(32) as f64;
+    assert!((vs_l3 - 1.125).abs() < 1e-12, "vs λ3: {vs_l3}");
+    let vs_bb = bb3.parallel_volume(32) as f64 / ls3.parallel_volume(32) as f64;
+    assert!((vs_bb - 16.0 / 3.0).abs() < 1e-12, "vs BB: {vs_bb}");
+}
+
+/// The precision acceptance row: at nb ≥ 2^24 (block ranks around
+/// 2^53, where the unfixed f64 inverse provably flips a row — see
+/// util::isqrt) λ_S block assignment stays exact. Verified via the
+/// algebraic rank roundtrip at boundary blocks of huge grids.
+#[test]
+fn lambda_s_stays_exact_at_sizes_where_f64_flips() {
+    let map = map2_by_name("lambda-s").unwrap();
+    for nb in [1u64 << 24, (1 << 24) + 1, (1 << 27) + 5, 1 << 31] {
+        assert!(map.supports(nb), "nb={nb}");
+        let g = map.grid(nb, 0);
+        let (w, h) = (g.dims[0], g.dims[1]);
+        assert_eq!(w as u128 * h as u128, triangular(nb), "nb={nb}: exact grid");
+        for (x, y) in [
+            (0u64, 0u64),
+            (w - 1, 0),
+            (0, h - 1),
+            (w - 1, h - 1),
+            (w / 2, h / 2),
+        ] {
+            let d = map.map_block(nb, 0, [x, y, 0]).expect("zero waste");
+            assert!(d[0] <= d[1] && d[1] < nb, "nb={nb} ({x},{y}) → {d:?}");
+            // Rank roundtrip: row-major triangular rank == linear id.
+            assert_eq!(
+                d[1] as u128 * (d[1] as u128 + 1) / 2 + d[0] as u128,
+                y as u128 * w as u128 + x as u128,
+                "nb={nb} ({x},{y})"
+            );
+        }
+    }
+    // The corner case the naive float root gets wrong: the block just
+    // below the row boundary at row 2^27 (k = T(2^27) − 1).
+    let nb = (1u64 << 27) + 5;
+    let w = map.grid(nb, 0).dims[0];
+    let k = (1u64 << 27) * ((1 << 27) + 1) / 2 - 1;
+    let d = map.map_block(nb, 0, [k % w, k / w, 0]).unwrap();
+    assert_eq!(d[1], (1 << 27) - 1, "must stay on the row below");
+    assert_eq!(d[0], d[1], "last block of its row (the diagonal)");
 }
 
 #[test]

@@ -11,7 +11,10 @@
 //!  P5  scheduler conservation: blocks_mapped equals domain volume for
 //!      bijective maps, for random sizes;
 //!  P6  λ3 fold involution: folding twice returns the original local
-//!      coordinates.
+//!      coordinates;
+//!  P7  λ_S rank rearrangement: at random *arbitrary* sizes (the sizes
+//!      the rest of the λ family rejects) every random block lands in
+//!      the domain with an exact rank roundtrip, both dimensions.
 
 use simplexmap::maps::{
     domain_volume, in_domain, map2_by_name, map3_by_name, CoverFromAbove, Lambda2Map,
@@ -199,6 +202,72 @@ fn p5_scheduler_conserves_blocks() {
                     r.blocks_mapped,
                     domain_volume(nb, 2)
                 ),
+            )
+        },
+    );
+}
+
+#[test]
+fn p7_lambda_s_rank_roundtrip_at_random_arbitrary_sizes() {
+    use simplexmap::maps::lambda_scalable::{LambdaScalable2, LambdaScalable3};
+    use simplexmap::util::isqrt::tetrahedron;
+    check(
+        "p7-lambda-s-m2",
+        &cfg(2048),
+        |rng| {
+            // Arbitrary sizes, pow2 or not — λ_S must not care.
+            let nb = rng.gen_range(1, 5000) as u64;
+            let g = LambdaScalable2.grid(nb, 0);
+            let x = rng.gen_range(0, g.dims[0] as usize) as u64;
+            let y = rng.gen_range(0, g.dims[1] as usize) as u64;
+            (nb, [x, y, 0])
+        },
+        |&(nb, w)| {
+            let g = LambdaScalable2.grid(nb, 0);
+            let d = match LambdaScalable2.map_block(nb, 0, w) {
+                Some(d) => d,
+                None => return Prop::Fail("λ_S m=2 returned filler".into()),
+            };
+            if !in_domain(nb, 2, d) {
+                return Prop::Fail(format!("{w:?} → {d:?} escapes nb={nb}"));
+            }
+            // Injectivity via the algebraic inverse: the triangular
+            // rank of the image is the linear block id.
+            let rank = d[1] * (d[1] + 1) / 2 + d[0];
+            Prop::from_bool(
+                rank == w[1] * g.dims[0] + w[0],
+                &format!("rank {rank} ≠ id of {w:?} at nb={nb}"),
+            )
+        },
+    );
+    check(
+        "p7-lambda-s-m3",
+        &cfg(2048),
+        |rng| {
+            let nb = rng.gen_range(1, 300) as u64;
+            let g = LambdaScalable3.grid(nb, 0);
+            let p = [
+                rng.gen_range(0, g.dims[0] as usize) as u64,
+                rng.gen_range(0, g.dims[1] as usize) as u64,
+                rng.gen_range(0, g.dims[2] as usize) as u64,
+            ];
+            (nb, p)
+        },
+        |&(nb, w)| {
+            let g = LambdaScalable3.grid(nb, 0);
+            let d = match LambdaScalable3.map_block(nb, 0, w) {
+                Some(d) => d,
+                None => return Prop::Discard, // sub-layer rounding
+            };
+            if !in_domain(nb, 3, d) {
+                return Prop::Fail(format!("{w:?} → {d:?} escapes nb={nb}"));
+            }
+            let slab = d[0] + d[1] + d[2];
+            let row = d[0] + d[1];
+            let rank = tetrahedron(slab) as u64 + row * (row + 1) / 2 + d[0];
+            Prop::from_bool(
+                rank == (w[2] * g.dims[1] + w[1]) * g.dims[0] + w[0],
+                &format!("rank {rank} ≠ id of {w:?} at nb={nb}"),
             )
         },
     );

@@ -49,7 +49,7 @@ fn m2_workloads_agree_across_all_maps_and_sizes() {
     let sched = Scheduler::new(4, None);
     // Maps valid for general 2-simplex workloads at power-of-two sizes
     // (avril covers strict pairs only → excluded; see maps::avril).
-    let maps = ["bb", "lambda2", "enum2", "rb", "ries", "above2", "below2"];
+    let maps = ["bb", "lambda2", "enum2", "rb", "ries", "above2", "below2", "lambda-s"];
     for w in [
         WorkloadKind::Edm,
         WorkloadKind::Collision,
@@ -74,7 +74,7 @@ fn m2_workloads_agree_at_non_power_of_two_sizes() {
     for w in [WorkloadKind::Edm, WorkloadKind::Collision] {
         for nb in [6u64, 10, 12] {
             let base = run(&sched, w, nb, "bb");
-            for map in ["above2", "below2", "rb", "enum2"] {
+            for map in ["above2", "below2", "rb", "enum2", "lambda-s"] {
                 let got = run(&sched, w, nb, map);
                 assert_outputs_agree(w.name(), nb, &base, &got, map);
             }
@@ -85,7 +85,7 @@ fn m2_workloads_agree_at_non_power_of_two_sizes() {
 #[test]
 fn m3_workloads_agree_across_maps_and_sizes() {
     let sched = Scheduler::new(4, None);
-    let maps = ["bb", "lambda3", "enum3", "lambda3-rec"];
+    let maps = ["bb", "lambda3", "enum3", "lambda3-rec", "lambda-s"];
     for nb in [4u64, 8] {
         let base = run(&sched, WorkloadKind::Triple, nb, maps[0]);
         for map in &maps[1..] {
@@ -112,10 +112,11 @@ fn compatible_maps(w: WorkloadKind) -> Vec<&'static str> {
             "ries",
             "above2",
             "below2",
+            "lambda-s",
         ],
         DomainKind::Simplex => match w.m() {
-            2 => vec!["bb", "lambda2", "enum2", "rb", "ries", "above2", "below2"],
-            3 => vec!["bb", "lambda3", "enum3", "lambda3-rec"],
+            2 => vec!["bb", "lambda2", "enum2", "rb", "ries", "above2", "below2", "lambda-s"],
+            3 => vec!["bb", "lambda3", "enum3", "lambda3-rec", "lambda-s"],
             _ => vec!["bb", "lambda-m"],
         },
     }
@@ -223,10 +224,35 @@ fn results_depend_on_seed_not_map() {
 fn tiny_sizes_do_not_break() {
     let sched = Scheduler::new(1, None);
     // nb=2 is the smallest size every pow2 map accepts (λ3 needs 4).
-    for map in ["bb", "lambda2", "rb", "enum2", "below2"] {
+    for map in ["bb", "lambda2", "rb", "enum2", "below2", "lambda-s"] {
         let out = run(&sched, WorkloadKind::Edm, 2, map);
         assert_eq!(out[0].0, "neighbour_count");
     }
     let out = run(&sched, WorkloadKind::Triple, 4, "lambda3");
     assert_eq!(out[0].0, "at_energy");
+    // λ_S is the only λ-family map alive at nb=1 (both dimensions).
+    for (w, map) in [
+        (WorkloadKind::Edm, "lambda-s"),
+        (WorkloadKind::Triple, "lambda-s"),
+    ] {
+        let out = run(&sched, w, 1, map);
+        assert!(!out.is_empty(), "{} nb=1", w.name());
+    }
+}
+
+#[test]
+fn lambda_s_agrees_with_bb_at_odd_sizes_in_both_dimensions() {
+    // The λ_S scalability row of the matrix: identical outputs at odd
+    // and prime sizes, where the rest of the λ family cannot run.
+    let sched = Scheduler::new(4, None);
+    for nb in [5u64, 7, 9, 13] {
+        for w in [WorkloadKind::Edm, WorkloadKind::Collision, WorkloadKind::KTuple(2)] {
+            let base = run(&sched, w, nb, "bb");
+            let got = run(&sched, w, nb, "lambda-s");
+            assert_outputs_agree(w.name(), nb, &base, &got, "lambda-s");
+        }
+        let base = run(&sched, WorkloadKind::Triple, nb, "bb");
+        let got = run(&sched, WorkloadKind::Triple, nb, "lambda-s");
+        assert_outputs_agree("triple", nb, &base, &got, "lambda-s");
+    }
 }
