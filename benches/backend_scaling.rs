@@ -1,0 +1,65 @@
+//! E17 — backend scaling: the Serial reference sweep vs the
+//! chunk-cursor worker pool on the pure `map_block` workload (trivial
+//! kernel, so the measured work is the map sweep itself — the λ2
+//! inverse per block at nb = 4096, ~8.4M mapped blocks per iteration).
+//!
+//! This is the PR 6 acceptance bench: the pool must deliver at least
+//! `SIMPLEXMAP_BACKEND_SCALING_MIN`× (default 2.0×) the Serial
+//! throughput at 4 workers, or the process exits non-zero — the
+//! lane-starvation bug this PR fixes made exactly this configuration
+//! degenerate to ~1×. Set the env var to 0 to measure without gating
+//! (e.g. on single-core runners).
+
+use simplexmap::grid::{BackendKind, BlockShape, LaunchConfig, Launcher};
+use simplexmap::maps::{adapt, Lambda2Map, ThreadMap};
+use simplexmap::util::benchkit::{black_box, section, Bencher};
+
+const NB: u64 = 4096;
+
+fn launcher(backend: BackendKind, workers: usize) -> Launcher {
+    let mut cfg = LaunchConfig::new(BlockShape::new(1, 2));
+    cfg.launch_latency = std::time::Duration::ZERO;
+    cfg.backend = backend;
+    Launcher::with_workers(workers, cfg)
+}
+
+fn bench_backend(b: &mut Bencher, name: &str, backend: BackendKind, workers: usize) -> f64 {
+    let map = adapt(Lambda2Map);
+    let l = launcher(backend, workers);
+    let blocks = Lambda2Map.parallel_volume(NB) as u64;
+    let r = b.bench(name, blocks, || {
+        let stats = l.launch(&map, NB, |_lane, b| black_box(b.data[0]) & 1);
+        black_box(stats.blocks_mapped);
+    });
+    r.secs_per_iter.p50
+}
+
+fn main() {
+    section("E17: map_block sweep, Serial vs Parallel backends (λ2, nb=4096)");
+    let mut b = Bencher::default();
+    let serial = bench_backend(&mut b, "serial (1 lane)", BackendKind::Serial, 1);
+    let mut at4 = f64::NAN;
+    for workers in [2usize, 4, 8] {
+        let p = bench_backend(
+            &mut b,
+            &format!("parallel ({workers} workers)"),
+            BackendKind::Parallel,
+            workers,
+        );
+        if workers == 4 {
+            at4 = p;
+        }
+    }
+    b.print_speedups("E17");
+
+    let speedup = serial / at4;
+    let min: f64 = std::env::var("SIMPLEXMAP_BACKEND_SCALING_MIN")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2.0);
+    println!("\nserial/parallel(4) wall-clock ratio: {speedup:.2}x (floor {min}x)");
+    if min > 0.0 && speedup < min {
+        eprintln!("backend_scaling: FAIL — {speedup:.2}x < required {min}x");
+        std::process::exit(1);
+    }
+}

@@ -68,7 +68,7 @@ fn main() {
             workload: WorkloadKind::GasketCA,
             nb: nb_e2e,
             map: map.to_string(),
-            backend: Backend::Rust,
+            backend: Backend::Parallel,
             seed: 42,
         };
         b.bench(&format!("gasket nb={nb_e2e} map={map}"), cells, || {

@@ -22,7 +22,7 @@ fn bench_workload(
             workload,
             nb,
             map: map.to_string(),
-            backend: Backend::Rust,
+            backend: Backend::Parallel,
             seed: 42,
         };
         b.bench(&format!("{} nb={nb} map={map}", workload.name()), items, || {

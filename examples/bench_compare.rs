@@ -1,0 +1,55 @@
+//! Compare two perf-trajectory JSONL files (the `BenchResult::json_line`
+//! format that `SIMPLEXMAP_BENCH_JSON` accumulates) and flag throughput
+//! regressions. CI runs this after the bench job to compare the fresh
+//! run against the committed BENCH_pr*.json trajectory.
+//!
+//! Run: `cargo run --release --example bench_compare -- <baseline.jsonl> <current.jsonl> [min_ratio]`
+//!
+//! Exit status: 0 when every shared benchmark is at or above
+//! `min_ratio` (default 0.8 — i.e. tolerate up to 20% noise) of the
+//! baseline throughput, 1 when any regressed, 2 on usage/IO errors.
+
+use simplexmap::util::benchkit::compare_trajectories;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let (Some(base_path), Some(cur_path)) = (args.get(1), args.get(2)) else {
+        eprintln!("usage: bench_compare <baseline.jsonl> <current.jsonl> [min_ratio]");
+        std::process::exit(2);
+    };
+    let min_ratio: f64 = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(0.8);
+
+    let read = |path: &str| {
+        std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("bench_compare: cannot read {path}: {e}");
+            std::process::exit(2);
+        })
+    };
+    let baseline = read(base_path);
+    let current = read(cur_path);
+
+    let deltas = compare_trajectories(&baseline, &current);
+    if deltas.is_empty() {
+        println!("bench_compare: no shared benchmark names between {base_path} and {cur_path}");
+        return;
+    }
+
+    let mut regressions = 0usize;
+    for d in &deltas {
+        let flag = if d.regressed(min_ratio) {
+            regressions += 1;
+            "  << REGRESSION"
+        } else {
+            ""
+        };
+        println!("{}{flag}", d.report_line());
+    }
+    println!(
+        "\n{} benchmarks compared, {} regressed (floor {min_ratio}x of baseline throughput)",
+        deltas.len(),
+        regressions
+    );
+    if regressions > 0 {
+        std::process::exit(1);
+    }
+}

@@ -26,6 +26,8 @@ from . import model
 B = 64
 R = 16
 R3 = 8  # triple tiles are R^3 work: keep blocks smaller in m=3
+RM = 2  # ktuple tiles are R^4 work: matches the Rust rho_m policy
+RG = 8  # gasket CA blocks (rho_gasket); halo patches are (RG+2)^2
 
 
 def _f32(*shape):
@@ -47,6 +49,14 @@ def configs():
         "triple_tile": (
             model.triple_model,
             [_f32(B, R3, 3), _f32(B, R3, 3), _f32(B, R3, 3)],
+        ),
+        "ktuple_tile": (
+            model.ktuple_model,
+            [_f32(B, RM, 3)] * 4,
+        ),
+        "gasket_tile": (
+            model.gasket_model,
+            [_f32(B, RG + 2, RG + 2)],
         ),
     }
 
@@ -127,6 +137,8 @@ def main():
         "batch": B,
         "rho2": R,
         "rho3": R3,
+        "rho_m": RM,
+        "rho_gasket": RG,
         "artifacts": entries,
     }
     with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: Sierpinski-gasket CA halo-patch tile.
+
+One program instance advances a dense (R+2)x(R+2) halo patch of the
+mod-sum neighbour automaton one step, emitting the RxR interior's next
+values: out[i, j] = (sum of the 3x3 window centred on patch[i+1, j+1])
+mod 5. The host zeroes every off-gasket / off-grid patch cell, so the
+dense window sum equals the automaton's gasket-masked neighbour sum at
+every live cell (off-gasket outputs are junk the host never scatters).
+All values are small non-negative integers, so f32 arithmetic — and the
+mod — is exact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MOD = 5.0  # matches rust/src/workloads/gasket_ca.rs MOD
+
+
+def _gasket_kernel(patch_ref, out_ref):
+    p = patch_ref[...]  # (S, R+2, R+2)
+    r = p.shape[1] - 2
+    total = jnp.zeros_like(p[:, :r, :r])
+    for di in range(3):
+        for dj in range(3):
+            total = total + p[:, di : di + r, dj : dj + r]
+    out_ref[...] = jnp.mod(total, MOD)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "slab"))
+def gasket_tile(patch, interpret=True, slab=None):
+    """Batched CA steps: (B, R+2, R+2) halo patches -> (B, R, R).
+
+    slab=B (default) collapses the grid to one program instance — the
+    interpret-mode fast configuration (§Perf)."""
+    b, h, w = patch.shape
+    assert h == w and h >= 3
+    r = h - 2
+    slab = b if slab is None else slab
+    assert b % slab == 0
+    return pl.pallas_call(
+        _gasket_kernel,
+        grid=(b // slab,),
+        in_specs=[pl.BlockSpec((slab, h, h), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((slab, r, r), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r, r), patch.dtype),
+        interpret=interpret,
+    )(patch)

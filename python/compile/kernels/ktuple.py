@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: unique 4-tuple interaction tile.
+
+One program instance reduces the softened inverse-power energy of all
+R^4 tuples drawn from four R-point chunks — the unit of work a
+lambda_m-mapped block owns in the O(n^4) 4-simplex sweep (the general-m
+workload of §III.D). With S = sum of the tuple's 6 pairwise squared
+distances, each tuple contributes (S + EPS)^(-3/2); the (R, R, R, R)
+intermediate never leaves the tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-3  # matches rust/src/workloads/ktuple.rs EPS
+
+
+def _ktuple_kernel(p1_ref, p2_ref, p3_ref, p4_ref, out_ref):
+    p1 = p1_ref[...]  # (S, R, 3)
+    p2 = p2_ref[...]
+    p3 = p3_ref[...]
+    p4 = p4_ref[...]
+
+    def d2(pa, pb):
+        d = pa[:, :, None, :] - pb[:, None, :, :]  # (S, R, R, 3)
+        return jnp.sum(d * d, axis=-1)  # (S, R, R)
+
+    # Pair sums broadcast into the (S, R1, R2, R3, R4) tuple lattice.
+    s = (
+        d2(p1, p2)[:, :, :, None, None]
+        + d2(p1, p3)[:, :, None, :, None]
+        + d2(p1, p4)[:, :, None, None, :]
+        + d2(p2, p3)[:, None, :, :, None]
+        + d2(p2, p4)[:, None, :, None, :]
+        + d2(p3, p4)[:, None, None, :, :]
+    )
+    e = (s + EPS) ** -1.5
+    out_ref[...] = jnp.sum(e, axis=(1, 2, 3, 4))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "slab"))
+def ktuple_tile(p1, p2, p3, p4, interpret=True, slab=None):
+    """Batched 4-tuple energy tiles: 4 x (B, R, 3) -> (B,).
+
+    slab=B (default) collapses the grid to one program instance — the
+    interpret-mode fast configuration (§Perf)."""
+    b, r, c = p1.shape
+    assert c == 3
+    for p in (p2, p3, p4):
+        assert p.shape == (b, r, 3)
+    slab = b if slab is None else slab
+    assert b % slab == 0
+    return pl.pallas_call(
+        _ktuple_kernel,
+        grid=(b // slab,),
+        in_specs=[
+            pl.BlockSpec((slab, r, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((slab, r, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((slab, r, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((slab, r, 3), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((slab,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), p1.dtype),
+        interpret=interpret,
+    )(p1, p2, p3, p4)

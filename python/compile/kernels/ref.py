@@ -53,6 +53,43 @@ def collision_tile_ref(boxa, boxb):
     return jnp.all(overlap, axis=-1).astype(jnp.float32)
 
 
+def ktuple_tile_ref(p1, p2, p3, p4, eps=1e-3):
+    """Softened inverse-power energy over a tile of 4-tuples.
+
+    p1..p4: (B, R, 3) -> (B,): with S the sum of the 6 pairwise squared
+    distances inside each tuple, every tuple contributes
+    (S + eps)^(-3/2); summed over all R^4 tuples.
+    """
+
+    def d2(pa, pb):
+        d = pa[:, :, None, :] - pb[:, None, :, :]
+        return jnp.sum(d * d, axis=-1)
+
+    s = (
+        d2(p1, p2)[:, :, :, None, None]
+        + d2(p1, p3)[:, :, None, :, None]
+        + d2(p1, p4)[:, :, None, None, :]
+        + d2(p2, p3)[:, None, :, :, None]
+        + d2(p2, p4)[:, None, :, None, :]
+        + d2(p3, p4)[:, None, None, :, :]
+    )
+    return jnp.sum((s + eps) ** -1.5, axis=(1, 2, 3, 4))
+
+
+def gasket_tile_ref(patch, mod=5.0):
+    """One mod-sum CA step over dense halo patches.
+
+    patch: (B, R+2, R+2) -> (B, R, R) with
+    out[b, i, j] = (sum of the 3x3 window at patch[b, i:i+3, j:j+3]) mod 5.
+    """
+    r = patch.shape[1] - 2
+    total = jnp.zeros_like(patch[:, :r, :r])
+    for di in range(3):
+        for dj in range(3):
+            total = total + patch[:, di : di + r, dj : dj + r]
+    return jnp.mod(total, mod)
+
+
 def triple_tile_ref(pi, pj, pk, eps=1e-3):
     """Axilrod–Teller triple-dipole energy over a tile of triples.
 

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 
 from .kernels.collision import collision_tile
 from .kernels.edm import edm_tile
+from .kernels.gasket import gasket_tile
+from .kernels.ktuple import ktuple_tile
 from .kernels.nbody import nbody_tile
 from .kernels.triple import triple_tile
 
@@ -53,3 +55,13 @@ def collision_model(boxa, boxb):
 def triple_model(pi, pj, pk):
     """Batched Axilrod–Teller tile energies: 3 x (B, R, 3) -> (B,)."""
     return (triple_tile(pi, pj, pk),)
+
+
+def ktuple_model(p1, p2, p3, p4):
+    """Batched 4-tuple tile energies: 4 x (B, R, 3) -> (B,)."""
+    return (ktuple_tile(p1, p2, p3, p4),)
+
+
+def gasket_model(patch):
+    """Batched gasket-CA steps: (B, R+2, R+2) halo patches -> (B, R, R)."""
+    return (gasket_tile(patch),)

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from compile.kernels import collision, edm, nbody, ref, triple
+from compile.kernels import collision, edm, gasket, ktuple, nbody, ref, triple
 
 SEED = st.integers(min_value=0, max_value=2**31 - 1)
 BATCH = st.integers(min_value=1, max_value=5)
@@ -74,6 +74,33 @@ def test_triple_matches_ref(seed, b, r):
     np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
 
 
+@settings(max_examples=15, deadline=None)
+@given(seed=SEED, b=st.integers(min_value=1, max_value=3), r=st.sampled_from([1, 2, 4]))
+def test_ktuple_matches_ref(seed, b, r):
+    rng = _rng(seed)
+    pts = [
+        jnp.asarray(rng.normal(size=(b, r, 3)).astype(np.float32))
+        for _ in range(4)
+    ]
+    got = ktuple.ktuple_tile(*pts)
+    want = ref.ktuple_tile_ref(*pts)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=SEED, b=BATCH, r=st.sampled_from([1, 2, 4, 8]))
+def test_gasket_matches_ref(seed, b, r):
+    # Integer-valued patches (the automaton's real domain): the kernel
+    # must be bit-exact against the oracle.
+    rng = _rng(seed)
+    patch = jnp.asarray(
+        rng.integers(0, 5, size=(b, r + 2, r + 2)).astype(np.float32)
+    )
+    got = gasket.gasket_tile(patch)
+    want = ref.gasket_tile_ref(patch)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 # --- Deterministic edge cases -------------------------------------------
 
 def test_edm_zero_distance_on_identical_points():
@@ -127,6 +154,22 @@ def test_triple_energy_is_permutation_invariant_on_identical_chunks():
     e1 = np.asarray(triple.triple_tile(p, p, p))
     e2 = np.asarray(ref.triple_tile_ref(p, p, p))
     np.testing.assert_allclose(e1, e2, rtol=1e-3)
+
+
+def test_ktuple_coincident_points_hit_the_softening_floor():
+    # All points coincident: S = 0, so each of the R^4 tuples
+    # contributes exactly EPS^(-3/2).
+    p = jnp.zeros((1, 2, 3), jnp.float32)
+    out = np.asarray(ktuple.ktuple_tile(p, p, p, p))
+    np.testing.assert_allclose(out, [16 * ktuple.EPS**-1.5], rtol=1e-4)
+
+
+def test_gasket_zero_patch_stays_zero_and_mod_wraps():
+    patch = jnp.zeros((1, 5, 5), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(gasket.gasket_tile(patch)), 0.0)
+    # A uniform patch of 4s: every 3x3 window sums to 36 ≡ 1 (mod 5).
+    patch = jnp.full((1, 5, 5), 4.0, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(gasket.gasket_tile(patch)), 1.0)
 
 
 def test_kernels_are_jittable_and_stable_across_calls():

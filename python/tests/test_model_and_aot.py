@@ -53,6 +53,18 @@ def test_triple_model_shape():
     assert out.shape == (2,)
 
 
+def test_ktuple_model_shape():
+    p = _rand((2, 2, 3))
+    (out,) = model.ktuple_model(p, p, p, p)
+    assert out.shape == (2,)
+
+
+def test_gasket_model_shape():
+    patch = _rand((3, 10, 10))
+    (out,) = model.gasket_model(patch)
+    assert out.shape == (3, 8, 8)
+
+
 def test_aot_configs_cover_all_models():
     names = set(aot.configs().keys())
     assert names == {
@@ -61,6 +73,8 @@ def test_aot_configs_cover_all_models():
         "nbody_tile",
         "collision_tile",
         "triple_tile",
+        "ktuple_tile",
+        "gasket_tile",
     }
 
 

@@ -44,15 +44,19 @@ struct BatchPlan {
 }
 
 impl BatchPlan {
-    /// Derive the plan from an artifact spec: batched inputs are those
-    /// whose leading dimension equals the output's batch dimension;
-    /// everything after them is a shared (unbatched) trailing input.
+    /// Derive the plan from an artifact spec: batched inputs are the
+    /// *leading run* of inputs whose first dimension equals the
+    /// output's batch dimension; everything after them is a shared
+    /// (unbatched) trailing input. Only the leading run counts — a
+    /// batch-shaped input *after* a scalar belongs to the scalar tail,
+    /// and counting it (the pre-PR-6 `filter(...).count()`) would slice
+    /// the scalar into the batched prefix and corrupt the plan.
     fn from_spec(spec: &ArtifactSpec) -> BatchPlan {
         let batch = spec.output_shape[0];
         let batched = spec
             .input_shapes
             .iter()
-            .filter(|s| !s.is_empty() && s[0] == batch)
+            .take_while(|s| !s.is_empty() && s[0] == batch)
             .count();
         let per_tile_in = spec.input_shapes[..batched]
             .iter()
@@ -195,6 +199,29 @@ mod tests {
         // Scalar-output artifact: per_tile_out floors at 1.
         let s1 = spec(vec![vec![8, 2]], vec![8]);
         assert_eq!(BatchPlan::from_spec(&s1).per_tile_out, 1);
+    }
+
+    #[test]
+    fn interior_scalar_ends_the_batched_prefix() {
+        // Regression (PR 6): an artifact shaped [B,..], [1], [B,..] —
+        // a batch-shaped input *after* a scalar. The old
+        // `filter(...).count()` counted both batch-shaped inputs (2)
+        // and then sliced `input_shapes[..2]`, misclassifying the
+        // scalar `[1]` as a 1-element batched input. Only the leading
+        // run is batched; everything from the first non-batch input on
+        // is the shared tail.
+        let s = spec(vec![vec![4, 2], vec![1], vec![4, 3]], vec![4, 5]);
+        let plan = BatchPlan::from_spec(&s);
+        assert_eq!(plan.per_tile_in, vec![2], "only the leading run batches");
+        // Assembly packs exactly one batched tensor; the tail inputs
+        // are the caller's scalar_inputs, not sliced tile chunks.
+        let chunk = [tile(0, vec![vec![1.0, 2.0]])];
+        let inputs = plan.assemble(&s.input_shapes, &chunk);
+        assert_eq!(inputs.len(), 1);
+        assert_eq!(inputs[0].shape, vec![4, 2]);
+        // A scalar-led spec batches nothing at all.
+        let s = spec(vec![vec![1], vec![4, 2]], vec![4, 1]);
+        assert_eq!(BatchPlan::from_spec(&s).per_tile_in, Vec::<usize>::new());
     }
 
     #[test]

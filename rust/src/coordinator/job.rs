@@ -110,31 +110,15 @@ impl WorkloadKind {
     ];
 }
 
-/// Where tiles execute.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Backend {
-    /// Pure-Rust tile kernels (hot-path reference; always available).
-    Rust,
-    /// AOT-compiled Pallas kernels through PJRT (requires artifacts).
-    Pjrt,
-}
+/// Where a job executes: the launcher's execution axis
+/// ([`BackendKind::Serial`] reference sweep, [`BackendKind::Parallel`]
+/// worker pool, or the [`BackendKind::Pjrt`] tile path). The wire name
+/// `"rust"` is accepted as a legacy alias for `"parallel"`.
+pub use crate::grid::BackendKind;
 
-impl Backend {
-    pub fn parse(s: &str) -> Option<Backend> {
-        match s {
-            "rust" => Some(Backend::Rust),
-            "pjrt" => Some(Backend::Pjrt),
-            _ => None,
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Backend::Rust => "rust",
-            Backend::Pjrt => "pjrt",
-        }
-    }
-}
+/// Pre-PR-6 name for the execution axis, kept for callers that spell
+/// `Backend::Pjrt` etc.
+pub type Backend = BackendKind;
 
 /// A job request.
 #[derive(Clone, Debug)]
@@ -143,7 +127,7 @@ pub struct Job {
     /// Problem size in blocks per side (threads = nb · ρ).
     pub nb: u64,
     pub map: String,
-    pub backend: Backend,
+    pub backend: BackendKind,
     pub seed: u64,
 }
 
@@ -166,8 +150,8 @@ impl Job {
             backend: j
                 .get("backend")
                 .and_then(Json::as_str)
-                .and_then(Backend::parse)
-                .unwrap_or(Backend::Rust),
+                .and_then(BackendKind::parse)
+                .unwrap_or(BackendKind::Parallel),
             seed: j.get("seed").and_then(Json::as_u64).unwrap_or(42),
         })
     }
@@ -180,13 +164,18 @@ pub struct JobResult {
     /// Workload-specific scalar outputs (checksums, counts, energies).
     pub outputs: Vec<(String, f64)>,
     pub passes: u64,
+    /// Serialized launch waves: ceil(passes / max_concurrent).
+    pub launch_waves: u64,
     pub blocks_launched: u64,
+    /// Blocks the map discarded before they reached the kernel.
+    pub blocks_filler: u64,
     pub blocks_mapped: u64,
     pub threads_launched: u64,
+    pub threads_mapped: u64,
     /// Threads the workload's thread-level predicate discarded
-    /// (diagonal blocks) — identical across the rust backend's
-    /// streaming and collect modes. The pjrt backend reports 0 (its
-    /// predication happens tile-side; see `scheduler::run_pjrt`).
+    /// (diagonal blocks) — identical across the serial/parallel
+    /// backends' streaming and collect modes. The pjrt backend reports
+    /// 0 (its predication happens tile-side; see `scheduler::run_pjrt`).
     pub threads_predicated_off: u64,
     pub wall_secs: f64,
     pub tile_batches: u64,
@@ -195,6 +184,22 @@ pub struct JobResult {
 impl JobResult {
     pub fn block_efficiency(&self) -> f64 {
         self.blocks_mapped as f64 / self.blocks_launched as f64
+    }
+
+    /// The eight launch-accounting fields, in
+    /// [`LaunchStats::accounting`](crate::grid::LaunchStats::accounting)
+    /// order — what backend/mode equivalence is asserted over.
+    pub fn accounting(&self) -> [u64; 8] {
+        [
+            self.passes,
+            self.launch_waves,
+            self.blocks_launched,
+            self.blocks_filler,
+            self.blocks_mapped,
+            self.threads_launched,
+            self.threads_mapped,
+            self.threads_predicated_off,
+        ]
     }
 
     pub fn to_json(&self) -> Json {
@@ -208,9 +213,12 @@ impl JobResult {
             ("job", self.job.to_json()),
             ("outputs", outputs),
             ("passes", self.passes.into()),
+            ("launch_waves", self.launch_waves.into()),
             ("blocks_launched", self.blocks_launched.into()),
+            ("blocks_filler", self.blocks_filler.into()),
             ("blocks_mapped", self.blocks_mapped.into()),
             ("threads_launched", self.threads_launched.into()),
+            ("threads_mapped", self.threads_mapped.into()),
             ("threads_predicated_off", self.threads_predicated_off.into()),
             ("block_efficiency", self.block_efficiency().into()),
             ("wall_secs", self.wall_secs.into()),
@@ -295,8 +303,20 @@ mod tests {
     fn job_defaults_backend_and_seed() {
         let j = json::parse(r#"{"workload":"nbody","nb":16,"map":"bb"}"#).unwrap();
         let job = Job::from_json(&j).unwrap();
-        assert_eq!(job.backend, Backend::Rust);
+        assert_eq!(job.backend, BackendKind::Parallel);
         assert_eq!(job.seed, 42);
+    }
+
+    #[test]
+    fn job_accepts_legacy_rust_backend_name() {
+        // Pre-PR-6 clients send "rust" for the in-process path; it must
+        // keep parsing as the parallel backend.
+        let j =
+            json::parse(r#"{"workload":"edm","nb":8,"map":"lambda2","backend":"rust"}"#).unwrap();
+        assert_eq!(Job::from_json(&j).unwrap().backend, BackendKind::Parallel);
+        let j = json::parse(r#"{"workload":"edm","nb":8,"map":"lambda2","backend":"serial"}"#)
+            .unwrap();
+        assert_eq!(Job::from_json(&j).unwrap().backend, BackendKind::Serial);
     }
 
     #[test]
@@ -306,14 +326,17 @@ mod tests {
                 workload: WorkloadKind::Edm,
                 nb: 4,
                 map: "bb".into(),
-                backend: Backend::Rust,
+                backend: Backend::Parallel,
                 seed: 1,
             },
             outputs: vec![("count".into(), 10.0)],
             passes: 1,
+            launch_waves: 1,
             blocks_launched: 16,
+            blocks_filler: 6,
             blocks_mapped: 10,
             threads_launched: 4096,
+            threads_mapped: 2560,
             threads_predicated_off: 136,
             wall_secs: 0.5,
             tile_batches: 1,
@@ -324,5 +347,10 @@ mod tests {
             j.get("outputs").unwrap().get("count").unwrap().as_f64(),
             Some(10.0)
         );
+        // All eight accounting fields are on the wire, in order.
+        assert_eq!(j.get("launch_waves").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("blocks_filler").unwrap().as_u64(), Some(6));
+        assert_eq!(j.get("threads_mapped").unwrap().as_u64(), Some(2560));
+        assert_eq!(r.accounting(), [1, 1, 16, 6, 10, 4096, 2560, 136]);
     }
 }

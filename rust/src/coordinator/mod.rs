@@ -27,7 +27,7 @@ pub mod server;
 pub mod trace;
 
 pub use batcher::TileBatcher;
-pub use job::{Backend, Job, JobResult, WorkloadKind};
+pub use job::{Backend, BackendKind, Job, JobResult, WorkloadKind};
 pub use metrics::Metrics;
 pub use queue::{JobQueue, QueueConfig};
 pub use scheduler::{ExecMode, RhoPolicy, ScheduleError, Scheduler};

@@ -189,7 +189,7 @@ mod tests {
             workload: WorkloadKind::Edm,
             nb,
             map: "lambda2".into(),
-            backend: Backend::Rust,
+            backend: Backend::Parallel,
             seed,
         }
     }

@@ -26,7 +26,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::coordinator::job::{Backend, Job, JobResult};
+use crate::coordinator::job::{BackendKind, Job, JobResult};
 use crate::coordinator::metrics::Metrics;
 use crate::grid::{BlockShape, LaunchConfig, LaunchStats, Launcher, MappedBlock};
 use crate::maps::MThreadMap;
@@ -66,7 +66,10 @@ impl std::fmt::Display for ScheduleError {
             }
             ScheduleError::Runtime(e) => write!(f, "runtime: {e}"),
             ScheduleError::NoPjrtPath(w) => {
-                write!(f, "workload '{w}' has no pjrt artifact; use --backend rust")
+                write!(
+                    f,
+                    "workload '{w}' has no pjrt artifact; use --backend parallel"
+                )
             }
             ScheduleError::DomainMismatch(map, w) => {
                 write!(
@@ -164,7 +167,8 @@ pub struct Scheduler {
     pub workers: usize,
     /// The one ρ policy for every dimension.
     pub rho: RhoPolicy,
-    /// Execution mode for the rust backend (pjrt always collects).
+    /// Execution mode for the serial/parallel backends (pjrt always
+    /// collects).
     pub exec_mode: ExecMode,
     executor: Option<ExecHandle>,
     pub metrics: Arc<Metrics>,
@@ -229,13 +233,20 @@ impl Scheduler {
         Ok(map)
     }
 
-    fn launcher(&self, rho: u32, m: u32) -> Launcher {
+    fn launcher(&self, rho: u32, m: u32, backend: BackendKind) -> Launcher {
         let mut cfg = LaunchConfig::new(BlockShape::new(rho, m));
         cfg.launch_latency = std::time::Duration::from_micros(5);
+        cfg.backend = backend;
         // Accounting-only launch latency: the model stays in the
         // stats, the engine never sleeps for it.
         debug_assert!(!cfg.simulate_latency);
-        Launcher::with_workers(self.workers, cfg)
+        // The serial backend is one lane by definition — a single
+        // accumulator, deterministic sweep order.
+        let workers = match backend {
+            BackendKind::Serial => 1,
+            BackendKind::Parallel | BackendKind::Pjrt => self.workers,
+        };
+        Launcher::with_workers(workers, cfg)
     }
 
     /// Run a job to completion — the one pipeline, any workload, any m,
@@ -275,9 +286,9 @@ impl Scheduler {
             self.exec_mode
         );
 
-        let launcher = self.launcher(rho, m);
+        let launcher = self.launcher(rho, m, job.backend);
         let (outputs, stats, batches) = match job.backend {
-            Backend::Rust => match self.exec_mode {
+            BackendKind::Serial | BackendKind::Parallel => match self.exec_mode {
                 ExecMode::Streaming => {
                     self.run_streaming(&launcher, map.as_ref(), w.as_ref(), job.nb)
                 }
@@ -285,7 +296,7 @@ impl Scheduler {
                     self.run_collect(&launcher, map.as_ref(), w.as_ref(), job.nb)
                 }
             },
-            Backend::Pjrt => self.run_pjrt(&launcher, map.as_ref(), w.as_ref(), job.nb)?,
+            BackendKind::Pjrt => self.run_pjrt(&launcher, map.as_ref(), w.as_ref(), job.nb)?,
         };
 
         let wall = t0.elapsed().as_secs_f64();
@@ -294,9 +305,12 @@ impl Scheduler {
             job: job.clone(),
             outputs,
             passes: stats.passes,
+            launch_waves: stats.launch_waves,
             blocks_launched: stats.blocks_launched,
+            blocks_filler: stats.blocks_filler,
             blocks_mapped: stats.blocks_mapped,
             threads_launched: stats.threads_launched,
+            threads_mapped: stats.threads_mapped,
             threads_predicated_off: stats.threads_predicated_off,
             wall_secs: wall,
             tile_batches: batches,
@@ -373,7 +387,7 @@ impl Scheduler {
     ) -> (Vec<(String, f64)>, LaunchStats, u64) {
         let (blocks, mut stats) = self.collect_blocks(launcher, map, nb);
         let t = Instant::now();
-        let (outputs, predicated) = self.execute_collected(w, &blocks);
+        let (outputs, predicated) = self.execute_collected(w, &blocks, launcher.workers());
         stats.threads_predicated_off = predicated;
         self.metrics.record_exec_phase(t.elapsed().as_secs_f64());
         (outputs, stats, 0)
@@ -384,8 +398,9 @@ impl Scheduler {
         &self,
         w: &dyn Workload,
         blocks: &[MappedBlock],
+        lanes: usize,
     ) -> (Vec<(String, f64)>, u64) {
-        let lanes = self.workers.max(1);
+        let lanes = lanes.max(1);
         let accums: Vec<Mutex<Accum>> = (0..lanes).map(|_| Mutex::new(w.new_accum())).collect();
         let predicated = AtomicU64::new(0);
         if !blocks.is_empty() {
@@ -457,7 +472,7 @@ mod tests {
             workload: w,
             nb,
             map: map.into(),
-            backend: Backend::Rust,
+            backend: BackendKind::Parallel,
             seed: 11,
         }
     }
@@ -628,8 +643,14 @@ mod tests {
             sched.run(&job(WorkloadKind::KTuple(4), 4, "lambda3")),
             Err(ScheduleError::UnknownMap(_, 4))
         ));
+        // Quadruples carry a fixed-shape artifact (ktuple_tile), so the
+        // pjrt gate passes and the error is the missing executor; every
+        // other arity has no artifact and reports the honest NoPjrtPath.
         let mut j = job(WorkloadKind::KTuple(4), 4, "bb");
-        j.backend = Backend::Pjrt;
+        j.backend = BackendKind::Pjrt;
+        assert!(matches!(sched.run(&j), Err(ScheduleError::NoExecutor(_))));
+        let mut j = job(WorkloadKind::KTuple(5), 3, "bb");
+        j.backend = BackendKind::Pjrt;
         assert!(matches!(
             sched.run(&j),
             Err(ScheduleError::NoPjrtPath("ktuple"))
@@ -768,6 +789,33 @@ mod tests {
     }
 
     #[test]
+    fn serial_backend_matches_parallel_on_all_eight_fields() {
+        // The serial sweep is the accounting oracle: a job run on one
+        // lane must agree with the pooled backend field for field (the
+        // full map × workload sweep lives in tests/workload_matrix.rs).
+        let sched = Scheduler::new(4, None);
+        for (w, nb, map) in [
+            (WorkloadKind::Edm, 8u64, "lambda2"),
+            (WorkloadKind::Triple, 4, "bb"),
+            (WorkloadKind::GasketCA, 8, "lambda-gasket"),
+        ] {
+            let mut serial = job(w, nb, map);
+            serial.backend = BackendKind::Serial;
+            let a = sched.run(&serial).unwrap();
+            let b = sched.run(&job(w, nb, map)).unwrap();
+            assert_eq!(a.accounting(), b.accounting(), "{}", w.name());
+            for ((ka, va), (kb, vb)) in a.outputs.iter().zip(&b.outputs) {
+                assert_eq!(ka, kb);
+                assert!(
+                    (va - vb).abs() <= 1e-9 * va.abs().max(1.0),
+                    "{} {ka}: {va} vs {vb}",
+                    w.name()
+                );
+            }
+        }
+    }
+
+    #[test]
     fn lambda2_launches_half_the_blocks_of_bb() {
         let sched = Scheduler::new(2, None);
         let bb = sched.run(&job(WorkloadKind::Edm, 16, "bb")).unwrap();
@@ -794,7 +842,7 @@ mod tests {
     fn pjrt_without_executor_errors() {
         let sched = Scheduler::new(1, None);
         let mut j = job(WorkloadKind::Edm, 8, "lambda2");
-        j.backend = Backend::Pjrt;
+        j.backend = BackendKind::Pjrt;
         assert!(matches!(
             sched.run(&j),
             Err(ScheduleError::NoExecutor(_))

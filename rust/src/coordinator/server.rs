@@ -6,9 +6,14 @@
 //! Protocol (request → response):
 //! - `{"cmd":"ping"}` → `{"ok":true,"pong":true}`
 //! - `{"cmd":"run","workload":"edm","nb":64,"map":"lambda2",
-//!    "backend":"rust","seed":7}` → `{"ok":true,"result":{…}}` — the
-//!    job goes through the queue; a full queue answers
+//!    "backend":"parallel","seed":7}` → `{"ok":true,"result":{…}}` —
+//!    the job goes through the queue; a full queue answers
 //!    `{"ok":false,"error":"job queue full …"}` (backpressure).
+//!    `backend` is the execution axis `serial|parallel|pjrt` (the
+//!    legacy name `rust` still parses as `parallel`); omitting it
+//!    defaults to `parallel`. Results carry all eight launch-accounting
+//!    fields (passes, launch_waves, blocks launched/filler/mapped,
+//!    threads launched/mapped/predicated-off).
 //! - `{"cmd":"maps"}` → `{"ok":true,"maps":{"2":[…],…,"8":[…],
 //!   "gasket":[…]}}` — the registered map names per dimension (the
 //!   unified registry), plus the non-simplex gasket domain under its

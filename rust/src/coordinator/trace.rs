@@ -48,7 +48,7 @@ impl Default for TraceSpec {
             ],
             maps: vec!["lambda2".into(), "bb".into(), "rb".into(), "enum2".into()],
             sizes: vec![16, 32, 64],
-            backend: Backend::Rust,
+            backend: Backend::Parallel,
             seed: 7,
         }
     }

@@ -11,6 +11,28 @@
 //! collect-then-execute flow (trace capture, conformance tests) simply
 //! pass a collecting kernel.
 //!
+//! # Backend axis
+//!
+//! [`BackendKind`] selects how the sweep executes:
+//!
+//! - [`BackendKind::Serial`] — one lane walks the whole launch in
+//!   index order: the accounting oracle every other backend must match.
+//! - [`BackendKind::Parallel`] — the worker pool below (the default).
+//! - [`BackendKind::Pjrt`] — identical host-side sweep (the
+//!   coordinator collects blocks and dispatches tiles to XLA); the
+//!   launcher itself treats it like [`BackendKind::Parallel`].
+//!
+//! The parallel pool is built **once per launch**, not once per pass:
+//! all pass grids are laid end-to-end into a single linear index space
+//! (exclusive prefix sums of the per-pass volumes), split into chunks
+//! of at most [`LaunchConfig::chunk_blocks`] blocks, and lanes pull
+//! chunk indices from a shared atomic cursor. Chunks are capped at
+//! `total / workers` blocks so a mid-size grid still fans out into at
+//! least one chunk per lane, and the first `workers` chunks are
+//! statically pre-assigned (the cursor starts past them) so every lane
+//! is guaranteed work before the race begins. Per-lane tallies come
+//! back through the join handles — no results mutex.
+//!
 //! Thread-level predication is the kernel's job (it knows the
 //! workload's domain); the launcher provides exact accounting of all
 //! four thread populations:
@@ -28,18 +50,55 @@
 //! §III.B invokes against the arity-3 recursive map.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::maps::MThreadMap;
+use crate::simplex::{BlockM, OrthotopeM};
 
 use super::{BlockShape, MappedBlock};
+
+/// Which engine drives a launch (and, at the coordinator level, a
+/// job): the single-lane reference interpreter, the chunk-cursor
+/// worker pool, or the XLA/PJRT tile path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Single-lane reference sweep — the accounting oracle.
+    Serial,
+    /// Data-parallel in-process worker pool (the default).
+    Parallel,
+    /// Host-side sweep collects blocks; tiles execute through XLA.
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Parse a CLI/wire name. `"rust"` survives as a legacy alias for
+    /// the in-process parallel backend (the pre-PR-6 job schema named
+    /// the whole non-PJRT path after the language).
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "serial" => Some(BackendKind::Serial),
+            "parallel" | "rust" => Some(BackendKind::Parallel),
+            "pjrt" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Serial => "serial",
+            BackendKind::Parallel => "parallel",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
 
 /// Launch-time knobs.
 #[derive(Clone, Debug)]
 pub struct LaunchConfig {
     pub shape: BlockShape,
-    /// Blocks per work chunk handed to a pool worker.
+    /// Blocks per work chunk pulled from the shared cursor. Chunks are
+    /// additionally capped at `total / workers` so small grids still
+    /// feed every lane.
     pub chunk_blocks: usize,
     /// Modeled fixed cost per kernel-launch wave.
     pub launch_latency: Duration,
@@ -51,6 +110,8 @@ pub struct LaunchConfig {
     /// is accounted in [`LaunchStats::launch_overhead`] only and adds
     /// no wall time.
     pub simulate_latency: bool,
+    /// Execution backend for the block sweep.
+    pub backend: BackendKind,
 }
 
 impl LaunchConfig {
@@ -61,6 +122,7 @@ impl LaunchConfig {
             launch_latency: Duration::from_micros(5),
             max_concurrent_launches: 32,
             simulate_latency: false,
+            backend: BackendKind::Parallel,
         }
     }
 }
@@ -122,6 +184,19 @@ impl LaunchStats {
     }
 }
 
+/// Odometer increment in storage order (axis 0 fastest) — one add and
+/// a rare carry per step instead of [`OrthotopeM::of_linear`]'s full
+/// division chain per block.
+fn advance(grid: &OrthotopeM, p: &mut BlockM) {
+    for axis in 0..p.m() as usize {
+        p[axis] += 1;
+        if p[axis] < grid.dims[axis] {
+            return;
+        }
+        p[axis] = 0;
+    }
+}
+
 /// The simulated device.
 pub struct Launcher {
     workers: usize,
@@ -129,7 +204,7 @@ pub struct Launcher {
 }
 
 impl Launcher {
-    /// A launcher that fans block ranges out over `workers` lanes
+    /// A launcher that fans work chunks out over `workers` lanes
     /// (scoped threads — no pool to spin up per job).
     pub fn with_workers(workers: usize, config: LaunchConfig) -> Launcher {
         Launcher {
@@ -167,61 +242,30 @@ impl Launcher {
         let threads_per_block = self.config.shape.threads();
         let passes = map.passes(nb);
 
-        let blocks_launched = AtomicU64::new(0);
-        let blocks_filler = AtomicU64::new(0);
-        let blocks_mapped = AtomicU64::new(0);
-        let predicated = AtomicU64::new(0);
-
+        // Pass geometry up front: the per-pass grids plus the exclusive
+        // prefix sum of their volumes define ONE linear index space for
+        // the whole launch, so work chunks flow across pass boundaries
+        // instead of a fresh thread scope (with its ragged tail) per
+        // pass.
+        let mut grids: Vec<OrthotopeM> = Vec::with_capacity(passes as usize);
+        let mut offsets: Vec<u64> = Vec::with_capacity(passes as usize + 1);
+        let mut total = 0u64;
         for pass in 0..passes {
             let grid = map.grid(nb, pass);
-            let total = grid.volume() as usize;
-            blocks_launched.fetch_add(total as u64, Ordering::Relaxed);
-            let chunks = total.div_ceil(self.config.chunk_blocks.max(1));
-
-            // Share state without 'static bounds: scoped threads, one
-            // contiguous block range per lane, results via a mutex.
-            let results: Mutex<Vec<(u64, u64, u64)>> = Mutex::new(Vec::new());
-            std::thread::scope(|scope| {
-                let lanes = self.workers.min(chunks.max(1));
-                let chunk_size = total.div_ceil(lanes.max(1));
-                for lane in 0..lanes {
-                    let lo = lane * chunk_size;
-                    if lo >= total {
-                        break;
-                    }
-                    let hi = ((lane + 1) * chunk_size).min(total);
-                    let kernel = &kernel;
-                    let results = &results;
-                    let grid = &grid;
-                    scope.spawn(move || {
-                        let mut filler = 0u64;
-                        let mut mapped = 0u64;
-                        let mut pred = 0u64;
-                        for idx in lo..hi {
-                            let p = grid.of_linear(idx as u64);
-                            match map.map_block(nb, pass, &p) {
-                                None => filler += 1,
-                                Some(data) => {
-                                    mapped += 1;
-                                    let mb = MappedBlock {
-                                        parallel: p,
-                                        data,
-                                        pass,
-                                    };
-                                    pred += kernel(lane, &mb);
-                                }
-                            }
-                        }
-                        results.lock().unwrap().push((filler, mapped, pred));
-                    });
-                }
-            });
-            for (f, m, p) in results.into_inner().unwrap() {
-                blocks_filler.fetch_add(f, Ordering::Relaxed);
-                blocks_mapped.fetch_add(m, Ordering::Relaxed);
-                predicated.fetch_add(p, Ordering::Relaxed);
-            }
+            offsets.push(total);
+            total += grid.volume() as u64;
+            grids.push(grid);
         }
+        offsets.push(total);
+
+        let (blocks_filler, blocks_mapped, predicated) = match self.config.backend {
+            BackendKind::Serial => {
+                sweep_range(map, nb, &grids, &offsets, 0, total, 0, &kernel)
+            }
+            BackendKind::Parallel | BackendKind::Pjrt => {
+                self.sweep_pool(map, nb, &grids, &offsets, total, &kernel)
+            }
+        };
 
         // Launch-latency model: passes serialize in waves of
         // max_concurrent_launches. Accounting-only unless the caller
@@ -232,32 +276,167 @@ impl Launcher {
             std::thread::sleep(overhead);
         }
 
-        let bl = blocks_launched.load(Ordering::Relaxed);
-        let bm = blocks_mapped.load(Ordering::Relaxed);
         LaunchStats {
             passes,
             launch_waves: waves,
-            blocks_launched: bl,
-            blocks_filler: blocks_filler.load(Ordering::Relaxed),
-            blocks_mapped: bm,
-            threads_launched: bl * threads_per_block,
-            threads_mapped: bm * threads_per_block,
-            threads_predicated_off: predicated.load(Ordering::Relaxed),
+            blocks_launched: total,
+            blocks_filler,
+            blocks_mapped,
+            threads_launched: total * threads_per_block,
+            threads_mapped: blocks_mapped * threads_per_block,
+            threads_predicated_off: predicated,
             wall: t0.elapsed(),
             launch_overhead: overhead,
         }
     }
+
+    /// The persistent worker pool: one `thread::scope` for the whole
+    /// launch, chunks of at most `chunk_blocks` blocks (capped at
+    /// `total / workers` so every lane gets at least one chunk when
+    /// `total ≥ workers`), a shared atomic cursor for distribution.
+    /// Lane `i` owns chunk `i` statically — the cursor starts at
+    /// `lanes` — so lane coverage is deterministic, not a race outcome.
+    /// Per-lane tallies return through the join handles; there is no
+    /// results mutex on the hot path.
+    #[allow(clippy::too_many_arguments)]
+    fn sweep_pool<K>(
+        &self,
+        map: &dyn MThreadMap,
+        nb: u64,
+        grids: &[OrthotopeM],
+        offsets: &[u64],
+        total: u64,
+        kernel: &K,
+    ) -> (u64, u64, u64)
+    where
+        K: Fn(usize, &MappedBlock) -> u64 + Send + Sync,
+    {
+        if total == 0 {
+            return (0, 0, 0);
+        }
+        let chunk = (self.config.chunk_blocks.max(1) as u64)
+            .min((total / self.workers as u64).max(1));
+        let n_chunks = total.div_ceil(chunk);
+        let lanes = self.workers.min(n_chunks as usize);
+        let cursor = AtomicU64::new(lanes as u64);
+        let mut acc = (0u64, 0u64, 0u64);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..lanes)
+                .map(|lane| {
+                    let cursor = &cursor;
+                    scope.spawn(move || {
+                        let mut lane_acc = (0u64, 0u64, 0u64);
+                        let mut c = lane as u64;
+                        loop {
+                            let lo = c * chunk;
+                            let hi = total.min(lo + chunk);
+                            let (f, m, p) =
+                                sweep_range(map, nb, grids, offsets, lo, hi, lane, kernel);
+                            lane_acc.0 += f;
+                            lane_acc.1 += m;
+                            lane_acc.2 += p;
+                            c = cursor.fetch_add(1, Ordering::Relaxed);
+                            if c >= n_chunks {
+                                break;
+                            }
+                        }
+                        lane_acc
+                    })
+                })
+                .collect();
+            for h in handles {
+                let (f, m, p) = h.join().expect("launch lane panicked");
+                acc.0 += f;
+                acc.1 += m;
+                acc.2 += p;
+            }
+        });
+        acc
+    }
+}
+
+/// Sweep global block indices `[lo, hi)` through `map` and `kernel`,
+/// returning `(filler, mapped, predicated_off)` block/thread tallies.
+///
+/// Within each pass segment the parallel coordinate advances as an
+/// incremental odometer over the contiguous rank range — one
+/// `of_linear` division chain per segment, then axis-0 increments —
+/// which keeps the inner loop branch-light and lets per-block kernels
+/// walk ranks in storage order.
+#[allow(clippy::too_many_arguments)]
+fn sweep_range<K>(
+    map: &dyn MThreadMap,
+    nb: u64,
+    grids: &[OrthotopeM],
+    offsets: &[u64],
+    lo: u64,
+    hi: u64,
+    lane: usize,
+    kernel: &K,
+) -> (u64, u64, u64)
+where
+    K: Fn(usize, &MappedBlock) -> u64 + Send + Sync,
+{
+    let (mut filler, mut mapped, mut pred) = (0u64, 0u64, 0u64);
+    if lo >= hi {
+        return (filler, mapped, pred);
+    }
+    // Last pass whose offset is ≤ lo (offsets[0] = 0, so ≥ 1). Empty
+    // passes share an offset with their successor; skipping forward to
+    // the last one keeps the segment loop out of zero-volume grids.
+    let mut pass = offsets.partition_point(|&o| o <= lo) - 1;
+    let mut idx = lo;
+    while idx < hi && pass < grids.len() {
+        let grid = &grids[pass];
+        let seg_hi = hi.min(offsets[pass + 1]);
+        if idx < seg_hi {
+            let mut p = grid.of_linear(idx - offsets[pass]);
+            while idx < seg_hi {
+                match map.map_block(nb, pass as u64, &p) {
+                    None => filler += 1,
+                    Some(data) => {
+                        mapped += 1;
+                        let mb = MappedBlock {
+                            parallel: p,
+                            data,
+                            pass: pass as u64,
+                        };
+                        pred += kernel(lane, &mb);
+                    }
+                }
+                idx += 1;
+                if idx < seg_hi {
+                    advance(grid, &mut p);
+                }
+            }
+        }
+        pass += 1;
+    }
+    (filler, mapped, pred)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::maps::{adapt, BoundingBox2, Lambda2Map, Lambda3Map, RiesMap, ThreadMap};
+    use std::sync::Mutex;
 
     fn launcher(rho: u32, m: u32) -> Launcher {
         let mut cfg = LaunchConfig::new(BlockShape::new(rho, m));
         cfg.launch_latency = Duration::ZERO;
         Launcher::with_workers(4, cfg)
+    }
+
+    #[test]
+    fn backend_kind_parses_names_and_legacy_alias() {
+        assert_eq!(BackendKind::parse("serial"), Some(BackendKind::Serial));
+        assert_eq!(BackendKind::parse("parallel"), Some(BackendKind::Parallel));
+        assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("rust"), Some(BackendKind::Parallel));
+        assert_eq!(BackendKind::parse("cuda"), None);
+        for b in [BackendKind::Serial, BackendKind::Parallel, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::parse(b.name()), Some(b));
+        }
     }
 
     #[test]
@@ -326,6 +505,69 @@ mod tests {
             0
         });
         assert!((max_lane.load(Ordering::Relaxed) as usize) < l.workers());
+    }
+
+    #[test]
+    fn mid_size_grids_saturate_every_lane() {
+        // Lane-starvation regression (the PR-6 headline bug): with
+        // workers=8, chunk_blocks=4096 and a grid in the 8k-block class
+        // (BB m=3 at nb=20 → 8000 blocks), the old per-pass splitter
+        // derived the lane count from ceil(total / chunk_blocks) = 2
+        // and left lanes 2..8 idle. The chunk cursor caps the chunk at
+        // total/workers and statically hands lane i chunk i, so every
+        // lane must observe mapped work.
+        use crate::maps::BoundingBoxM;
+        let mut cfg = LaunchConfig::new(BlockShape::new(2, 3));
+        cfg.launch_latency = Duration::ZERO;
+        cfg.chunk_blocks = 4096;
+        let l = Launcher::with_workers(8, cfg);
+        let seen: Vec<AtomicU64> = (0..8).map(|_| AtomicU64::new(0)).collect();
+        let max_lane = AtomicU64::new(0);
+        l.launch(&BoundingBoxM::new(3), 20, |lane, _b| {
+            seen[lane].fetch_add(1, Ordering::Relaxed);
+            max_lane.fetch_max(lane as u64, Ordering::Relaxed);
+            0
+        });
+        assert_eq!(
+            max_lane.load(Ordering::Relaxed) as usize,
+            l.workers() - 1,
+            "highest lane never fed"
+        );
+        for (lane, s) in seen.iter().enumerate() {
+            assert!(s.load(Ordering::Relaxed) > 0, "lane {lane} starved");
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_backends_agree_exactly() {
+        // The serial sweep is the accounting oracle: identical stats
+        // (all eight fields) and identical mapped-block sets for maps
+        // with and without filler, predication flowing through both.
+        use crate::maps::BoundingBoxM;
+        let kernel = |_lane: usize, b: &MappedBlock| u64::from(b.data[0] == b.data[1]);
+        let maps: Vec<(Box<dyn MThreadMap>, u64)> = vec![
+            (Box::new(adapt(Lambda2Map)), 64),
+            (Box::new(adapt(BoundingBox2)), 48),
+            (Box::new(adapt(RiesMap)), 32),
+        ];
+        for (map, nb) in maps {
+            let mut cfg = LaunchConfig::new(BlockShape::new(4, 2));
+            cfg.launch_latency = Duration::ZERO;
+            cfg.backend = BackendKind::Serial;
+            let serial = Launcher::with_workers(1, cfg.clone()).launch(map.as_ref(), nb, kernel);
+            cfg.backend = BackendKind::Parallel;
+            cfg.chunk_blocks = 37; // force many chunks across passes
+            let parallel = Launcher::with_workers(5, cfg).launch(map.as_ref(), nb, kernel);
+            assert_eq!(serial.accounting(), parallel.accounting(), "{}", map.name());
+        }
+        let mut cfg = LaunchConfig::new(BlockShape::new(2, 4));
+        cfg.launch_latency = Duration::ZERO;
+        cfg.backend = BackendKind::Serial;
+        let map = BoundingBoxM::new(4);
+        let serial = Launcher::with_workers(1, cfg.clone()).launch(&map, 5, |_l, _b| 0);
+        cfg.backend = BackendKind::Parallel;
+        let parallel = Launcher::with_workers(3, cfg).launch(&map, 5, |_l, _b| 0);
+        assert_eq!(serial.accounting(), parallel.accounting());
     }
 
     #[test]

@@ -167,6 +167,37 @@ mod tests {
     }
 
     #[test]
+    fn reports_are_backend_invariant() {
+        // α / efficiency are launch-geometry facts; the Serial and
+        // Parallel backends must produce bit-identical reports (all
+        // eight accounting fields, hence every derived number).
+        use crate::grid::BackendKind;
+        for (map, nb) in [
+            (Box::new(Lambda2Map) as Box<dyn ThreadMap>, 96u64),
+            (Box::new(BoundingBox2), 64),
+        ] {
+            let adapter = crate::maps::FixedAdapter::new(map);
+            let mut reports = Vec::new();
+            for (backend, workers) in [(BackendKind::Serial, 1), (BackendKind::Parallel, 4)] {
+                let mut cfg = LaunchConfig::new(BlockShape::new(4, 2));
+                cfg.launch_latency = Duration::ZERO;
+                cfg.backend = backend;
+                let l = Launcher::with_workers(workers, cfg);
+                let stats = l.launch(&adapter, nb, |_lane, _b| 0);
+                reports.push(OccupancyReport::new(adapter.inner.as_ref(), nb, stats));
+            }
+            assert_eq!(
+                reports[0].stats.accounting(),
+                reports[1].stats.accounting(),
+                "{}",
+                reports[0].map
+            );
+            assert_eq!(reports[0].measured_alpha(), reports[1].measured_alpha());
+            assert_eq!(reports[0].table_row(), reports[1].table_row());
+        }
+    }
+
+    #[test]
     fn improvement_over_an_empty_coverage_baseline_is_infinite() {
         // A useful map compared against an all-filler baseline: the
         // ratio is +∞ (not NaN), so comparisons keep ordering.

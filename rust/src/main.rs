@@ -4,7 +4,7 @@
 //!   report <volumes|maps|arity3|launches|general|avril|ries|nonpow2>
 //!   search   --m 2..10 --betas 2,4,8,16,32 --horizon 2^40
 //!   verify   --map <name> --nb <2^k> [--m 4..8]  exhaustive coverage check
-//!   run      --workload edm --nb 64 --map lambda2 --backend rust|pjrt
+//!   run      --workload edm --nb 64 --map lambda2 --backend serial|parallel|pjrt
 //!            (--workload ktuple --m 4..8 runs the general-m subsystem;
 //!             --workload gasket runs the Sierpiński-gasket CA)
 //!   serve    --addr 127.0.0.1:7070            JSON-lines job server
@@ -32,7 +32,11 @@ fn main() {
             "edm|collision|nbody|triple|cellular|trimatvec|ktuple[2-8]|gasket",
             Some("edm"),
         ),
-        opt("backend", "rust|pjrt", Some("rust")),
+        opt(
+            "backend",
+            "serial|parallel|pjrt (rust = legacy alias for parallel)",
+            Some("parallel"),
+        ),
         opt("seed", "workload RNG seed", Some("42")),
         opt("betas", "comma-separated arity values", Some("2,4,8,16,32")),
         opt("horizon", "n0 scan horizon", Some("1099511627776")),

@@ -171,6 +171,100 @@ pub fn section(title: &str) {
     println!("\n==== {title} ====");
 }
 
+/// One benchmark row recovered from a perf-trajectory JSONL file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    pub name: String,
+    pub throughput_per_sec: f64,
+    pub p50_secs: f64,
+}
+
+/// Parse the JSONL perf-trajectory format ([`BenchResult::json_line`]
+/// per line). Lines that fail to parse or lack the required fields are
+/// skipped — trajectory files accumulate across PRs and tool versions,
+/// and one stale line must not invalidate a comparison. When the same
+/// name appears multiple times (re-runs append), the *last* line wins.
+pub fn parse_trajectory(text: &str) -> Vec<BenchRecord> {
+    let mut out: Vec<BenchRecord> = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(j) = crate::util::json::parse(line) else {
+            continue;
+        };
+        let (Some(name), Some(thrpt), Some(p50)) = (
+            j.get("name").and_then(Json::as_str),
+            j.get("throughput_per_sec").and_then(Json::as_f64),
+            j.get("p50_secs").and_then(Json::as_f64),
+        ) else {
+            continue;
+        };
+        let rec = BenchRecord {
+            name: name.to_string(),
+            throughput_per_sec: thrpt,
+            p50_secs: p50,
+        };
+        match out.iter_mut().find(|r| r.name == rec.name) {
+            Some(existing) => *existing = rec,
+            None => out.push(rec),
+        }
+    }
+    out
+}
+
+/// One benchmark compared against its baseline row.
+#[derive(Clone, Debug)]
+pub struct BenchDelta {
+    pub name: String,
+    pub baseline_thrpt: f64,
+    pub current_thrpt: f64,
+}
+
+impl BenchDelta {
+    /// Current / baseline throughput (>1 is faster).
+    pub fn ratio(&self) -> f64 {
+        if self.baseline_thrpt <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.current_thrpt / self.baseline_thrpt
+    }
+
+    /// Whether this row regressed below `min_ratio` of the baseline
+    /// throughput (e.g. 0.8 = flag anything >20% slower).
+    pub fn regressed(&self, min_ratio: f64) -> bool {
+        self.ratio() < min_ratio
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} baseline {:>12}/s  current {:>12}/s  {:>7.3}x",
+            self.name,
+            fmt_count(self.baseline_thrpt),
+            fmt_count(self.current_thrpt),
+            self.ratio(),
+        )
+    }
+}
+
+/// Join two trajectory files by benchmark name (rows present in both).
+/// Names only in the baseline (retired benches) or only in the current
+/// run (new benches) have no meaningful ratio and are omitted.
+pub fn compare_trajectories(baseline: &str, current: &str) -> Vec<BenchDelta> {
+    let base = parse_trajectory(baseline);
+    parse_trajectory(current)
+        .into_iter()
+        .filter_map(|cur| {
+            base.iter().find(|b| b.name == cur.name).map(|b| BenchDelta {
+                name: cur.name.clone(),
+                baseline_thrpt: b.throughput_per_sec,
+                current_thrpt: cur.throughput_per_sec,
+            })
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -266,5 +360,57 @@ mod tests {
         assert_eq!(text.lines().count(), 1);
         assert!(crate::util::json::parse(text.lines().next().unwrap()).is_ok());
         let _ = std::fs::remove_dir_all(dir.parent().unwrap());
+    }
+
+    fn line(name: &str, thrpt: f64, p50: f64) -> String {
+        Json::obj(vec![
+            ("name", name.into()),
+            ("throughput_per_sec", thrpt.into()),
+            ("p50_secs", p50.into()),
+        ])
+        .to_string_compact()
+    }
+
+    #[test]
+    fn parse_trajectory_skips_garbage_and_keeps_the_last_rerun() {
+        let text = format!(
+            "{}\nnot json at all\n{{\"name\":\"missing-fields\"}}\n\n{}\n{}\n",
+            line("a", 100.0, 0.01),
+            line("b", 50.0, 0.02),
+            line("a", 200.0, 0.005), // re-run: supersedes the first "a"
+        );
+        let recs = parse_trajectory(&text);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].name, "a");
+        assert_eq!(recs[0].throughput_per_sec, 200.0);
+        assert_eq!(recs[0].p50_secs, 0.005);
+        assert_eq!(recs[1].name, "b");
+    }
+
+    #[test]
+    fn compare_joins_by_name_and_flags_regressions() {
+        let baseline = format!("{}\n{}\n{}", line("x", 100.0, 0.1), line("y", 10.0, 1.0), line("retired", 5.0, 2.0));
+        let current = format!("{}\n{}\n{}", line("x", 90.0, 0.111), line("y", 30.0, 0.33), line("brand-new", 7.0, 0.5));
+        let deltas = compare_trajectories(&baseline, &current);
+        // "retired" and "brand-new" have no counterpart — omitted.
+        assert_eq!(deltas.len(), 2);
+        let x = &deltas[0];
+        assert_eq!(x.name, "x");
+        assert!((x.ratio() - 0.9).abs() < 1e-12);
+        assert!(x.regressed(0.95));
+        assert!(!x.regressed(0.8));
+        let y = &deltas[1];
+        assert!((y.ratio() - 3.0).abs() < 1e-12);
+        assert!(!y.regressed(0.95));
+        assert!(x.report_line().contains('x'));
+    }
+
+    #[test]
+    fn compare_tolerates_a_zero_throughput_baseline() {
+        let deltas =
+            compare_trajectories(&line("z", 0.0, 0.0), &line("z", 10.0, 0.1));
+        assert_eq!(deltas.len(), 1);
+        assert!(deltas[0].ratio().is_infinite());
+        assert!(!deltas[0].regressed(0.8));
     }
 }

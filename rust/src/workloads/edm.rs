@@ -72,11 +72,24 @@ impl EdmWorkload {
     /// Pure-Rust tile kernel: squared distances of block (bc, br) into
     /// `out` (ρ×ρ, row-major [i][j] = d²(row_i, col_j)) — semantically
     /// identical to python/compile/kernels/edm.py.
+    ///
+    /// Walks both chunks as contiguous D-strided slices and writes each
+    /// output row as one `chunks_exact_mut` slice, so the fixed-width
+    /// (D = 8) difference/square reduction is bounds-check-free and
+    /// auto-vectorizable.
     pub fn tile_rust(&self, bc: u64, br: u64, out: &mut [f32]) {
-        let rho = self.rho as u64;
-        for i in 0..rho {
-            for j in 0..rho {
-                out[(i * rho + j) as usize] = self.d2(br * rho + i, bc * rho + j);
+        let rho = self.rho as usize;
+        let rows = self.chunk(br);
+        let cols = self.chunk(bc);
+        for (i, row_out) in out.chunks_exact_mut(rho).enumerate() {
+            let p = &rows[i * EDM_DIM..i * EDM_DIM + EDM_DIM];
+            for (q, o) in cols.chunks_exact(EDM_DIM).zip(row_out.iter_mut()) {
+                let mut acc = 0f32;
+                for d in 0..EDM_DIM {
+                    let diff = p[d] - q[d];
+                    acc += diff * diff;
+                }
+                *o = acc;
             }
         }
     }

@@ -23,10 +23,12 @@
 //! waste, which is precisely the comparison the gasket maps exist to
 //! win.
 
+use crate::coordinator::batcher::{TileBatcher, TileInput};
 use crate::grid::MappedBlock;
+use crate::runtime::ExecHandle;
 use crate::simplex::gasket::{gasket_cell, gasket_rank, gasket_volume, in_gasket};
 use crate::util::prng::Xoshiro256;
-use crate::workloads::{Accum, Workload};
+use crate::workloads::{Accum, PjrtRun, Workload};
 
 /// The automaton's value modulus.
 pub const MOD: u8 = 5;
@@ -126,6 +128,44 @@ impl GasketCAWorkload {
         self.state.iter().map(|&v| v as u64).sum()
     }
 
+    /// Flatten one gasket block into the (ρ+2)×(ρ+2) halo patch the
+    /// `gasket_tile` artifact consumes: row-major f32, patch cell
+    /// `(pi, pj)` holding the value at global `(col, row) =
+    /// (bc·ρ + pj − 1, br·ρ + pi − 1)`, with everything off-gasket or
+    /// off-grid reading as 0 — so the dense kernel's mod-sum over the
+    /// interior ρ×ρ window is exact for every live cell.
+    pub fn halo_patch(&self, bc: u64, br: u64) -> Vec<f32> {
+        let rho = self.rho as u64;
+        let side = rho + 2;
+        let mut patch = vec![0f32; (side * side) as usize];
+        for pi in 0..side {
+            for pj in 0..side {
+                let (r, c) = (
+                    (br * rho + pi) as i64 - 1,
+                    (bc * rho + pj) as i64 - 1,
+                );
+                if r >= 0 && c >= 0 {
+                    patch[(pi * side + pj) as usize] = self.get(c as u64, r as u64) as f32;
+                }
+            }
+        }
+        patch
+    }
+
+    /// Scatter one dense ρ×ρ kernel output tile into a block's
+    /// contiguous `3^s` rank slots, keeping only the gasket cells
+    /// (the kernel computes junk at off-gasket lattice positions; the
+    /// rank composition never reads them).
+    pub fn scatter_tile(&self, tile: &[f32], out: &mut [u8]) {
+        debug_assert_eq!(tile.len(), (self.rho as usize).pow(2));
+        debug_assert_eq!(out.len() as u128, gasket_volume(self.s));
+        let rho = self.rho as u64;
+        for (u, slot) in out.iter_mut().enumerate() {
+            let (lc, lr) = gasket_cell(self.s, u as u64);
+            *slot = tile[(lr * rho + lc) as usize] as u8;
+        }
+    }
+
     fn outputs_for(&self, next: &[u8]) -> Vec<(String, f64)> {
         let sum_after: u64 = next.iter().map(|&v| v as u64).sum();
         // Position-weighted checksum: catches any permutation of the
@@ -193,6 +233,45 @@ impl Workload for GasketCAWorkload {
 
     fn reference_outputs(&self) -> Vec<(String, f64)> {
         self.outputs_for(&self.step_reference())
+    }
+
+    fn supports_pjrt(&self) -> bool {
+        // The gasket_tile artifact is compiled for ρ = 8 halo patches
+        // (10×10 → 8×8); other ρ fall back to the Rust tile path.
+        self.rho == 8
+    }
+
+    fn run_pjrt(
+        &self,
+        exe: ExecHandle,
+        blocks: &[MappedBlock],
+    ) -> crate::runtime::Result<PjrtRun> {
+        let mut batcher = TileBatcher::new(exe, "gasket_tile")?;
+        // Gasket blocks → dense halo-patch kernel; non-gasket blocks a
+        // simplex map may hand us contribute nothing (all threads
+        // predicated off) and are simply skipped.
+        let per_block = gasket_volume(self.s) as usize;
+        let mut tiles = Vec::new();
+        for b in blocks {
+            let (bc, br) = (b.data[0], b.data[1]);
+            if in_gasket(self.nb, bc, br) {
+                tiles.push(TileInput {
+                    block_id: gasket_rank(self.k, bc, br),
+                    inputs: vec![self.halo_patch(bc, br)],
+                });
+            }
+        }
+        let outs = batcher.run(&tiles)?;
+        let mut next = vec![0u8; self.state.len()];
+        for o in &outs {
+            let base = o.block_id as usize * per_block;
+            self.scatter_tile(&o.data, &mut next[base..base + per_block]);
+        }
+        Ok(PjrtRun {
+            outputs: self.outputs_for(&next),
+            batches_run: batcher.batches_run,
+            tiles_padded: batcher.tiles_padded,
+        })
     }
 }
 
@@ -286,6 +365,72 @@ mod tests {
     #[should_panic(expected = "ρ = 2^s")]
     fn generate_rejects_non_pow2_rho() {
         GasketCAWorkload::generate(4, 3, 0);
+    }
+
+    /// What kernels/gasket.py computes per tile: the dense 3×3 mod-sum
+    /// over the patch interior. Simulated here so the halo/scatter
+    /// plumbing is testable without an executor.
+    fn simulate_gasket_tile(patch: &[f32], rho: usize) -> Vec<f32> {
+        let side = rho + 2;
+        let mut out = vec![0f32; rho * rho];
+        for i in 0..rho {
+            for j in 0..rho {
+                let mut total = 0f32;
+                for di in 0..3 {
+                    for dj in 0..3 {
+                        total += patch[(i + di) * side + (j + dj)];
+                    }
+                }
+                out[i * rho + j] = total % MOD as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn halo_patch_kernel_path_matches_reference() {
+        // Drive the PJRT data path (halo_patch → dense tile → scatter)
+        // with the simulated kernel over every gasket block: the
+        // reassembled next state must equal step_reference exactly.
+        for (nb, rho) in [(4u64, 8u32), (8, 8), (2, 4)] {
+            let w = GasketCAWorkload::generate(nb, rho, 11);
+            let per_block = gasket_volume(w.s) as usize;
+            let mut next = vec![0u8; w.state.len()];
+            for (bc, br) in enumerate_gasket(nb) {
+                let patch = w.halo_patch(bc, br);
+                let tile = simulate_gasket_tile(&patch, rho as usize);
+                let base = gasket_rank(w.k, bc, br) as usize * per_block;
+                w.scatter_tile(&tile, &mut next[base..base + per_block]);
+            }
+            assert_eq!(next, w.step_reference(), "nb={nb} ρ={rho}");
+        }
+    }
+
+    #[test]
+    fn halo_patch_borders_read_off_gasket_as_zero() {
+        let w = GasketCAWorkload::generate(4, 4, 5);
+        // Block (0,0): top and left halo rows lie off-grid → all zero.
+        let patch = w.halo_patch(0, 0);
+        let side = w.rho as usize + 2;
+        assert!(patch[..side].iter().all(|&v| v == 0.0), "top halo row");
+        assert!((0..side).all(|i| patch[i * side] == 0.0), "left halo col");
+        // Interior patch cells reproduce get() at the shifted coords.
+        for pi in 0..side {
+            for pj in 0..side {
+                let want = if pi == 0 || pj == 0 {
+                    0.0
+                } else {
+                    w.get(pj as u64 - 1, pi as u64 - 1) as f32
+                };
+                assert_eq!(patch[pi * side + pj], want, "({pi},{pj})");
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_support_is_gated_on_the_artifact_rho() {
+        assert!(GasketCAWorkload::generate(4, 8, 0).supports_pjrt());
+        assert!(!GasketCAWorkload::generate(4, 4, 0).supports_pjrt());
     }
 
     #[test]

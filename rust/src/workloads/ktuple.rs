@@ -12,11 +12,13 @@
 //! Blocks with strictly decreasing chunks are full ρ^m tiles; repeated
 //! chunks predicate per-thread (the o(n^m) diagonal charge).
 
+use crate::coordinator::batcher::{TileBatcher, TileInput};
 use crate::grid::MappedBlock;
+use crate::runtime::ExecHandle;
 use crate::simplex::block_m::BlockM;
 use crate::simplex::volume::binomial;
 use crate::util::prng::Xoshiro256;
-use crate::workloads::{Accum, Workload};
+use crate::workloads::{Accum, PjrtRun, Workload};
 
 /// Plummer-style softening of the pairwise-distance denominator.
 pub const EPS: f32 = 1e-3;
@@ -224,6 +226,50 @@ impl Workload for KTupleWorkload {
     fn reference_outputs(&self) -> Vec<(String, f64)> {
         vec![("ktuple_energy".into(), self.reference())]
     }
+
+    fn supports_pjrt(&self) -> bool {
+        // Artifacts carry fixed shapes: ktuple_tile is lowered at
+        // m = 4 chunks of R = rho_m points (python/compile/aot.py).
+        // Every other arity honestly reports no pjrt path instead of
+        // silently falling back.
+        self.m == 4
+    }
+
+    fn run_pjrt(
+        &self,
+        exe: ExecHandle,
+        blocks: &[MappedBlock],
+    ) -> crate::runtime::Result<PjrtRun> {
+        let mut batcher = TileBatcher::new(exe, "ktuple_tile")?;
+        // Same split as the triple workload: strictly-decreasing chunk
+        // tuples are full ρ^m tiles for the batched kernel; blocks with
+        // repeated chunks predicate per-thread on the Rust path.
+        let nb = self.n / self.rho as u64;
+        let mut strict_tiles = Vec::new();
+        let mut energy = 0f64;
+        for b in blocks {
+            let chunks = KTupleWorkload::block_chunks(nb, &b.data);
+            if KTupleWorkload::block_is_strict(&chunks) {
+                strict_tiles.push(TileInput {
+                    block_id: strict_tiles.len() as u64,
+                    inputs: chunks
+                        .as_slice()
+                        .iter()
+                        .map(|&c| self.chunk(c).to_vec())
+                        .collect(),
+                });
+            } else {
+                energy += self.tile_rust(&chunks);
+            }
+        }
+        let outs = batcher.run(&strict_tiles)?;
+        energy += outs.iter().map(|o| o.data[0] as f64).sum::<f64>();
+        Ok(PjrtRun {
+            outputs: vec![("ktuple_energy".into(), energy)],
+            batches_run: batcher.batches_run,
+            tiles_padded: batcher.tiles_padded,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -373,6 +419,33 @@ mod tests {
                 "m={m} nb={nb} ρ={rho}: {total} vs {want}"
             );
         }
+    }
+
+    #[test]
+    fn pjrt_split_partitions_blocks_without_loss_or_double_count() {
+        // The run_pjrt strict/non-strict split, executor-free: strict
+        // blocks (the artifact's share) number exactly C(nb, m), and
+        // the two partitions' energies sum to the brute-force
+        // reference — no block lost, none double-counted.
+        let (nb, rho, m) = (4u64, 2u32, 4u32);
+        let w = KTupleWorkload::generate(nb, rho, m, 7);
+        let (mut strict_e, mut pred_e, mut strict_n) = (0f64, 0f64, 0u128);
+        for d in simplex_blocks(nb, m) {
+            let c = KTupleWorkload::block_chunks(nb, &d);
+            if KTupleWorkload::block_is_strict(&c) {
+                strict_e += w.tile_rust(&c);
+                strict_n += 1;
+            } else {
+                pred_e += w.tile_rust(&c);
+            }
+        }
+        assert_eq!(strict_n, crate::simplex::volume::binomial(nb as u128, m as u128));
+        let want = w.reference();
+        let got = strict_e + pred_e;
+        assert!(
+            (got - want).abs() < 1e-9 * want.abs().max(1.0),
+            "{got} vs {want}"
+        );
     }
 
     #[test]

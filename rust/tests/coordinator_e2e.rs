@@ -119,7 +119,7 @@ fn pjrt_and_rust_backends_agree_at_scale() {
     let (_svc, sched) = scheduler_or_skip!();
     let nb = 16; // 256 points, 136 tiles — several batches
     let rust = sched
-        .run(&job(WorkloadKind::Edm, nb, "lambda2", Backend::Rust))
+        .run(&job(WorkloadKind::Edm, nb, "lambda2", Backend::Parallel))
         .unwrap();
     let pjrt = sched
         .run(&job(WorkloadKind::Edm, nb, "lambda2", Backend::Pjrt))

@@ -16,7 +16,7 @@ fn job(w: WorkloadKind, nb: u64, map: &str) -> Job {
         workload: w,
         nb,
         map: map.into(),
-        backend: Backend::Rust,
+        backend: Backend::Parallel,
         seed: 29,
     }
 }

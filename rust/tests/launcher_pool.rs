@@ -1,0 +1,157 @@
+//! Property tests for the launch engine's chunk-cursor worker pool
+//! (`grid/launcher.rs`) on the shared `util::proptest` harness: random
+//! (workers, chunk_blocks, map, size) scenarios must
+//!
+//!  - issue every global block index exactly once (the cursor never
+//!    skips a chunk and never double-issues one),
+//!  - keep lane indices inside `workers()`,
+//!  - have the per-lane tallies sum to the launch totals (the
+//!    mutex-free merge loses nothing),
+//!  - match the Serial backend's accounting bit for bit (all eight
+//!    fields — the single-lane sweep is the oracle).
+//!
+//! `grid/launcher.rs` unit tests pin the named regressions (lane
+//! starvation, backend agreement on specific maps); this file drives
+//! the same invariants through ~1000 randomized launches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use simplexmap::grid::{BackendKind, BlockShape, LaunchConfig, Launcher};
+use simplexmap::maps::{adapt, BoundingBox2, Lambda2Map, MThreadMap, RiesMap};
+use simplexmap::util::prng::Xoshiro256;
+use simplexmap::util::proptest::{check, Config, Prop};
+
+/// One random launch scenario.
+#[derive(Clone, Debug)]
+struct Scenario {
+    workers: usize,
+    chunk_blocks: usize,
+    nb: u64,
+    map: usize,
+}
+
+fn gen_scenario(rng: &mut Xoshiro256) -> Scenario {
+    Scenario {
+        workers: rng.gen_range(1, 9),
+        // Deliberately tiny chunks too (1 block) to maximize cursor
+        // contention, and oversized ones to hit the total/workers cap.
+        chunk_blocks: rng.gen_range(1, 300),
+        nb: [4u64, 8, 16][rng.gen_range(0, 3)],
+        map: rng.gen_range(0, 3),
+    }
+}
+
+fn make_map(which: usize) -> Box<dyn MThreadMap> {
+    match which {
+        0 => Box::new(adapt(Lambda2Map)),
+        1 => Box::new(adapt(BoundingBox2)),
+        _ => Box::new(adapt(RiesMap)),
+    }
+}
+
+fn config(s: &Scenario, backend: BackendKind) -> LaunchConfig {
+    let mut cfg = LaunchConfig::new(BlockShape::new(2, 2));
+    cfg.launch_latency = std::time::Duration::ZERO;
+    cfg.chunk_blocks = s.chunk_blocks;
+    cfg.backend = backend;
+    cfg
+}
+
+#[test]
+fn random_launches_issue_every_block_exactly_once_with_exact_lane_sums() {
+    check(
+        "pool-chunk-cursor",
+        &Config::default(),
+        gen_scenario,
+        |s| {
+            let map = make_map(s.map);
+            let nb = s.nb;
+            // All three maps are injective into the data triangle, so a
+            // per-data-block counter detects both skipped and
+            // double-issued chunks.
+            let seen: Vec<AtomicU64> = (0..nb * nb).map(|_| AtomicU64::new(0)).collect();
+            let lane_mapped: Vec<AtomicU64> =
+                (0..s.workers).map(|_| AtomicU64::new(0)).collect();
+            let lane_pred: Vec<AtomicU64> =
+                (0..s.workers).map(|_| AtomicU64::new(0)).collect();
+            let l = Launcher::with_workers(s.workers, config(s, BackendKind::Parallel));
+            let stats = l.launch(map.as_ref(), nb, |lane, b| {
+                if lane >= s.workers {
+                    // Panicking in a lane aborts the test with a join
+                    // error — good enough for a property violation.
+                    panic!("lane {lane} out of range (workers {})", s.workers);
+                }
+                seen[(b.data[1] * nb + b.data[0]) as usize].fetch_add(1, Ordering::Relaxed);
+                lane_mapped[lane].fetch_add(1, Ordering::Relaxed);
+                let p = u64::from(b.data[0] == b.data[1]);
+                lane_pred[lane].fetch_add(p, Ordering::Relaxed);
+                p
+            });
+
+            let mut mapped_total = 0u64;
+            for (i, c) in seen.iter().enumerate() {
+                let c = c.load(Ordering::Relaxed);
+                if c > 1 {
+                    return Prop::Fail(format!("data block {i} issued {c} times"));
+                }
+                mapped_total += c;
+            }
+            if mapped_total != stats.blocks_mapped {
+                return Prop::Fail(format!(
+                    "kernel saw {mapped_total} blocks, stats claim {}",
+                    stats.blocks_mapped
+                ));
+            }
+            let lane_sum: u64 = lane_mapped.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+            if lane_sum != stats.blocks_mapped {
+                return Prop::Fail(format!(
+                    "per-lane mapped sum {lane_sum} != total {}",
+                    stats.blocks_mapped
+                ));
+            }
+            let pred_sum: u64 = lane_pred.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+            if pred_sum != stats.threads_predicated_off {
+                return Prop::Fail(format!(
+                    "per-lane predication sum {pred_sum} != total {}",
+                    stats.threads_predicated_off
+                ));
+            }
+
+            // The single-lane Serial sweep is the accounting oracle.
+            let oracle = Launcher::with_workers(1, config(s, BackendKind::Serial)).launch(
+                map.as_ref(),
+                nb,
+                |_lane, b| u64::from(b.data[0] == b.data[1]),
+            );
+            Prop::from_bool(
+                oracle.accounting() == stats.accounting(),
+                &format!(
+                    "accounting diverged: serial {:?} vs parallel {:?}",
+                    oracle.accounting(),
+                    stats.accounting()
+                ),
+            )
+        },
+    );
+}
+
+#[test]
+fn single_block_and_single_worker_degenerate_cases() {
+    // The smallest launches the cursor can see: one chunk, one lane.
+    for (workers, chunk) in [(1usize, 1usize), (8, 1), (1, 4096)] {
+        let s = Scenario {
+            workers,
+            chunk_blocks: chunk,
+            nb: 4,
+            map: 0,
+        };
+        let calls = AtomicU64::new(0);
+        let l = Launcher::with_workers(s.workers, config(&s, BackendKind::Parallel));
+        let stats = l.launch(make_map(0).as_ref(), s.nb, |_lane, _b| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            0
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), stats.blocks_mapped);
+        assert_eq!(stats.blocks_mapped, 4 * (4 + 1) / 2, "λ2 covers T(4)");
+    }
+}

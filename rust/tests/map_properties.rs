@@ -189,7 +189,7 @@ fn p5_scheduler_conserves_blocks() {
                     workload: WorkloadKind::Collision,
                     nb,
                     map: "lambda2".into(),
-                    backend: Backend::Rust,
+                    backend: Backend::Parallel,
                     seed: 3,
                 })
                 .unwrap();

@@ -24,7 +24,7 @@ fn job(seed: u64) -> Job {
         workload: WorkloadKind::Edm,
         nb: 4,
         map: "lambda2".into(),
-        backend: Backend::Rust,
+        backend: Backend::Parallel,
         seed,
     }
 }
@@ -179,7 +179,7 @@ fn burst_of_mixed_workloads_drains_without_loss() {
                 workload: w,
                 nb,
                 map: map.into(),
-                backend: Backend::Rust,
+                backend: Backend::Parallel,
                 seed: 5,
             })
             .unwrap()

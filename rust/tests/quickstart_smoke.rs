@@ -33,7 +33,7 @@ fn quickstart_flow_runs_end_to_end() {
             workload: WorkloadKind::Edm,
             nb: 64,
             map: map.into(),
-            backend: Backend::Rust,
+            backend: Backend::Parallel,
             seed: 42,
         };
         let r = sched.run(&job).expect("quickstart job");

@@ -19,7 +19,7 @@ fn run(sched: &Scheduler, w: WorkloadKind, nb: u64, map: &str) -> Vec<(String, f
             workload: w,
             nb,
             map: map.into(),
-            backend: Backend::Rust,
+            backend: Backend::Parallel,
             seed: 99,
         })
         .unwrap_or_else(|e| panic!("{} nb={nb} map={map}: {e}", w.name()))
@@ -152,36 +152,50 @@ fn full_matrix_outputs_agree_across_every_compatible_map() {
 
 #[test]
 fn full_matrix_streaming_equals_collect_with_identical_stats() {
-    // Axis 2: for each (workload, map, size), the streaming and collect
-    // execution modes report the same outputs AND the same thread
-    // populations (passes, launched, mapped, predicated-off) — output
-    // agreement alone would miss a map/geometry mismatch that predicates
-    // the error away.
-    let streaming = Scheduler::new(3, None);
-    let mut collect = Scheduler::new(3, None);
-    collect.exec_mode = ExecMode::Collect;
+    // Axis 2 (widened in PR 6): for each (workload, map, size), every
+    // execution-mode × backend combination — Streaming/Collect crossed
+    // with Serial/Parallel — reports the same outputs AND all eight
+    // accounting fields. Output agreement alone would miss a
+    // map/geometry mismatch that predicates the error away; checking
+    // only five fields let the old lane-starved pool miscount waves
+    // unnoticed.
+    let mut engines = Vec::new();
+    for backend in [Backend::Serial, Backend::Parallel] {
+        for mode in [ExecMode::Streaming, ExecMode::Collect] {
+            let mut sched = Scheduler::new(3, None);
+            sched.exec_mode = mode;
+            engines.push((backend, mode, sched));
+        }
+    }
     for &w in WorkloadKind::ALL {
         for &nb in matrix_sizes(w) {
             for map in compatible_maps(w) {
                 let label = format!("{} nb={nb} map={map}", w.name());
-                let j = Job {
-                    workload: w,
-                    nb,
-                    map: map.into(),
-                    backend: Backend::Rust,
-                    seed: 99,
-                };
-                let a = streaming.run(&j).unwrap_or_else(|e| panic!("{label}: {e}"));
-                let b = collect.run(&j).unwrap_or_else(|e| panic!("{label}: {e}"));
-                assert_eq!(a.passes, b.passes, "{label}: passes");
-                assert_eq!(a.blocks_launched, b.blocks_launched, "{label}: launched");
-                assert_eq!(a.blocks_mapped, b.blocks_mapped, "{label}: mapped");
-                assert_eq!(a.threads_launched, b.threads_launched, "{label}: threads");
-                assert_eq!(
-                    a.threads_predicated_off, b.threads_predicated_off,
-                    "{label}: predicated"
-                );
-                assert_outputs_agree(w.name(), nb, &a.outputs, &b.outputs, map);
+                let results: Vec<_> = engines
+                    .iter()
+                    .map(|(backend, mode, sched)| {
+                        let j = Job {
+                            workload: w,
+                            nb,
+                            map: map.into(),
+                            backend: *backend,
+                            seed: 99,
+                        };
+                        let r = sched
+                            .run(&j)
+                            .unwrap_or_else(|e| panic!("{label} {backend:?}/{mode:?}: {e}"));
+                        (*backend, *mode, r)
+                    })
+                    .collect();
+                let (_, _, base) = &results[0];
+                for (backend, mode, r) in &results[1..] {
+                    assert_eq!(
+                        base.accounting(),
+                        r.accounting(),
+                        "{label}: accounting mismatch under {backend:?}/{mode:?}"
+                    );
+                    assert_outputs_agree(w.name(), nb, &base.outputs, &r.outputs, map);
+                }
             }
         }
     }
@@ -212,7 +226,7 @@ fn results_depend_on_seed_not_map() {
             workload: WorkloadKind::Edm,
             nb: 8,
             map: "lambda2".into(),
-            backend: Backend::Rust,
+            backend: Backend::Parallel,
             seed: 100, // different seed → different data
         })
         .unwrap()
