@@ -6,7 +6,7 @@
 # the real `xla` crate in place of runtime/xla_stub.rs (see DESIGN.md
 # §Substitutions) — without it the artifact-dependent suites skip.
 
-.PHONY: test build bench lint examples artifacts python-test clean
+.PHONY: test build bench bench-export lint examples artifacts python-test clean
 
 build:
 	cd rust && cargo build --release
@@ -19,6 +19,14 @@ lint:
 
 bench:
 	cd rust && cargo bench
+
+# Offline perf snapshot: run the hot-path benches quickly and append
+# their JSON lines to BENCH_local.json at the repo root — the file
+# `simplexmap obs bench-trajectory` (and benchkit compare) consumes.
+bench-export:
+	cd rust && SIMPLEXMAP_BENCH_SECS=0.3 \
+		SIMPLEXMAP_BENCH_JSON=$(CURDIR)/BENCH_local.json \
+		cargo bench --bench map2_throughput --bench workload_e2e
 
 examples:
 	cd rust && cargo build --release --benches --examples

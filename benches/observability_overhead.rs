@@ -1,0 +1,107 @@
+//! E18 — observability overhead: the instrumentation added for spans,
+//! histograms and per-lane profiling must stay out of the hot path.
+//!
+//! The gated claim is about the *disabled* path (profiling off, spans
+//! off — the default): its only residue in the sweep is one untaken
+//! branch per work chunk. That residue is strictly cheaper than the
+//! *enabled* path, whose per-chunk cost is two monotonic clock reads
+//! plus three counter adds — so gating `enabled / disabled ≤
+//! SIMPLEXMAP_OBS_OVERHEAD_MAX` (default 1.05, i.e. < 5%) bounds the
+//! disabled-path overhead a fortiori. The disabled sweep is measured
+//! twice (before and after the enabled one) and the faster run is the
+//! denominator, so drift penalizes rather than masks a regression.
+//! Set the env var to 0 to measure without gating.
+//!
+//! The second half micro-benches the primitives themselves: histogram
+//! record/quantile and span start/finish on both disabled and enabled
+//! recorders.
+
+use simplexmap::coordinator::SpanRecorder;
+use simplexmap::grid::{BackendKind, BlockShape, LaunchConfig, Launcher};
+use simplexmap::maps::{adapt, Lambda2Map, ThreadMap};
+use simplexmap::util::benchkit::{black_box, section, Bencher};
+use simplexmap::util::histogram::Histogram;
+
+const NB: u64 = 2048;
+const WORKERS: usize = 4;
+
+fn launcher(profile_lanes: bool) -> Launcher {
+    let mut cfg = LaunchConfig::new(BlockShape::new(1, 2));
+    cfg.launch_latency = std::time::Duration::ZERO;
+    cfg.backend = BackendKind::Parallel;
+    cfg.profile_lanes = profile_lanes;
+    Launcher::with_workers(WORKERS, cfg)
+}
+
+fn bench_sweep(b: &mut Bencher, name: &str, profile_lanes: bool) -> f64 {
+    let map = adapt(Lambda2Map);
+    let l = launcher(profile_lanes);
+    let blocks = Lambda2Map.parallel_volume(NB) as u64;
+    let r = b.bench(name, blocks, || {
+        let stats = l.launch(&map, NB, |_lane, b| black_box(b.data[0]) & 1);
+        black_box(stats.blocks_mapped);
+    });
+    r.secs_per_iter.p50
+}
+
+fn main() {
+    section("E18: map_block sweep with lane profiling off/on (λ2, nb=2048)");
+    let mut b = Bencher::default();
+    let off1 = bench_sweep(&mut b, "sweep profile=off (1st)", false);
+    let on = bench_sweep(&mut b, "sweep profile=on", true);
+    let off2 = bench_sweep(&mut b, "sweep profile=off (2nd)", false);
+    b.print_speedups("E18 sweep");
+
+    // One profiled launch to show what the enabled path buys.
+    let map = adapt(Lambda2Map);
+    let stats = launcher(true).launch(&map, NB, |_lane, b| black_box(b.data[0]) & 1);
+    println!("\nper-lane profile of one launch:");
+    for lane in &stats.lanes {
+        println!(
+            "  lane {}: busy {:>9} ns  chunks {:>3}  blocks {:>8}",
+            lane.lane, lane.busy_ns, lane.chunks_pulled, lane.blocks_processed
+        );
+    }
+    if let Some(r) = stats.lane_imbalance() {
+        println!("  lane imbalance (max/mean busy): {r:.3}x");
+    }
+
+    section("E18: observability primitives");
+    let mut b = Bencher::default();
+    let hist = Histogram::new();
+    b.bench("histogram record_ns", 1_000_000, || {
+        for i in 0..1_000_000u64 {
+            hist.record_ns(black_box(i.wrapping_mul(2654435761) % 1_000_000_000));
+        }
+    });
+    b.bench("histogram quantile walk (4 quantiles)", 1, || {
+        black_box(hist.summary_quantiles_secs());
+    });
+
+    let disabled = SpanRecorder::new(1024);
+    b.bench("span start+finish (disabled)", 1_000_000, || {
+        for _ in 0..1_000_000u32 {
+            let s = disabled.start("bench", "noop", 0);
+            disabled.finish(s);
+        }
+    });
+    let enabled = SpanRecorder::new(1024);
+    enabled.set_enabled(true);
+    b.bench("span start+finish (enabled, ring 1024)", 100_000, || {
+        for _ in 0..100_000u32 {
+            let s = enabled.start("bench", "noop", 0);
+            enabled.finish(s);
+        }
+    });
+
+    let ratio = on / off1.min(off2);
+    let max: f64 = std::env::var("SIMPLEXMAP_OBS_OVERHEAD_MAX")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.05);
+    println!("\nprofiled/unprofiled sweep ratio: {ratio:.4}x (ceiling {max}x)");
+    if max > 0.0 && ratio > max {
+        eprintln!("observability_overhead: FAIL — {ratio:.4}x > allowed {max}x");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,67 @@
+//! Chrome trace export: run a small job stream with span recording on
+//! and write the resulting lifecycle spans as a Chrome trace-event
+//! document — load the file in `chrome://tracing` or Perfetto to see
+//! jobs, fused sweeps and (with `SIMPLEXMAP_PROFILE_LANES=1`) per-lane
+//! busy intervals nested under them.
+//!
+//! Run: `cargo run --release --example trace_export -- [out.json] [jobs]`
+
+use simplexmap::coordinator::span;
+use simplexmap::coordinator::trace::{generate, replay, TraceSpec};
+use simplexmap::coordinator::Scheduler;
+use simplexmap::util::json;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let out_path = args
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| "trace_export.json".to_string());
+    let jobs: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(12);
+
+    let recorder = span::global();
+    recorder.set_enabled(true);
+
+    let mut sched = Scheduler::new(
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4),
+        None,
+    );
+    // Lane profiling makes the per-lane child spans appear in the
+    // trace; it is cheap enough to keep on for an export run.
+    sched.profile_lanes = true;
+
+    let spec = TraceSpec {
+        jobs,
+        rate_hz: 500.0,
+        sizes: vec![16, 32],
+        ..Default::default()
+    };
+    let trace = generate(&spec);
+    let report = replay(&sched, &trace);
+    println!(
+        "replayed {} jobs ({} failed); {} spans recorded",
+        report.completed,
+        report.failed,
+        recorder.len()
+    );
+
+    let spans = recorder.snapshot_last(recorder.capacity());
+    let doc = span::chrome_trace(&spans);
+    let text = doc.to_string_compact();
+    // The export must survive a round-trip through our own parser —
+    // the same guarantee the server's trace command gives clients.
+    let back = json::parse(&text).expect("chrome trace round-trips");
+    let events = back
+        .get("traceEvents")
+        .and_then(json::Json::as_arr)
+        .expect("traceEvents array");
+    assert_eq!(events.len(), spans.len());
+
+    std::fs::write(&out_path, &text).expect("write trace file");
+    println!(
+        "wrote {} trace events to {out_path} (open in chrome://tracing)",
+        events.len()
+    );
+}

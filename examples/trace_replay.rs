@@ -35,19 +35,24 @@ fn main() {
         report.failed,
         fmt_secs(report.wall.as_secs_f64())
     );
-    println!(
-        "latency  p50 {} p90 {} p99 {} max {}",
-        fmt_secs(report.latency.p50),
-        fmt_secs(report.latency.p90),
-        fmt_secs(report.latency.p99),
-        fmt_secs(report.latency.max)
-    );
-    println!(
-        "service  p50 {} p90 {} max {}",
-        fmt_secs(report.service.p50),
-        fmt_secs(report.service.p90),
-        fmt_secs(report.service.max)
-    );
+    if report.latency.count == 0 {
+        println!("latency  (no completed jobs)");
+    } else {
+        println!(
+            "latency  p50 {} p90 {} p99 {} p99.9 {} max {}",
+            fmt_secs(report.latency.p50),
+            fmt_secs(report.latency.p90),
+            fmt_secs(report.latency.p99),
+            fmt_secs(report.latency.p999),
+            fmt_secs(report.latency.max)
+        );
+        println!(
+            "service  p50 {} p90 {} max {}",
+            fmt_secs(report.service.p50),
+            fmt_secs(report.service.p90),
+            fmt_secs(report.service.max)
+        );
+    }
     let snap = sched.metrics.snapshot();
     println!(
         "jobs_completed={} blocks_mapped={}",

@@ -179,6 +179,11 @@ pub struct JobResult {
     pub threads_predicated_off: u64,
     pub wall_secs: f64,
     pub tile_batches: u64,
+    /// Per-lane launcher profile — empty unless the scheduler ran with
+    /// lane profiling on (`SIMPLEXMAP_PROFILE_LANES=1`).
+    pub lane_profile: Vec<crate::grid::LaneProfile>,
+    /// max/mean lane-busy ratio when profiled (`None` otherwise).
+    pub lane_imbalance: Option<f64>,
 }
 
 impl JobResult {
@@ -209,7 +214,7 @@ impl JobResult {
                 .map(|(k, v)| (k.clone(), Json::Num(*v)))
                 .collect(),
         );
-        Json::obj(vec![
+        let mut fields = vec![
             ("job", self.job.to_json()),
             ("outputs", outputs),
             ("passes", self.passes.into()),
@@ -223,7 +228,26 @@ impl JobResult {
             ("block_efficiency", self.block_efficiency().into()),
             ("wall_secs", self.wall_secs.into()),
             ("tile_batches", self.tile_batches.into()),
-        ])
+        ];
+        if let Some(r) = self.lane_imbalance {
+            fields.push(("lane_imbalance", r.into()));
+        }
+        if !self.lane_profile.is_empty() {
+            let lanes: Vec<Json> = self
+                .lane_profile
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("lane", p.lane.into()),
+                        ("busy_ns", p.busy_ns.into()),
+                        ("chunks_pulled", p.chunks_pulled.into()),
+                        ("blocks_processed", p.blocks_processed.into()),
+                    ])
+                })
+                .collect();
+            fields.push(("lane_profile", Json::Arr(lanes)));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -340,6 +364,8 @@ mod tests {
             threads_predicated_off: 136,
             wall_secs: 0.5,
             tile_batches: 1,
+            lane_profile: Vec::new(),
+            lane_imbalance: None,
         };
         let j = r.to_json();
         assert!((j.get("block_efficiency").unwrap().as_f64().unwrap() - 0.625).abs() < 1e-12);
@@ -352,5 +378,24 @@ mod tests {
         assert_eq!(j.get("blocks_filler").unwrap().as_u64(), Some(6));
         assert_eq!(j.get("threads_mapped").unwrap().as_u64(), Some(2560));
         assert_eq!(r.accounting(), [1, 1, 16, 6, 10, 4096, 2560, 136]);
+        // Unprofiled jobs do not clutter the wire with lane fields.
+        assert!(j.get("lane_profile").is_none());
+        assert!(j.get("lane_imbalance").is_none());
+
+        // A profiled result carries the per-lane tallies and the ratio.
+        let mut r = r;
+        r.lane_profile = vec![crate::grid::LaneProfile {
+            lane: 0,
+            busy_ns: 1000,
+            chunks_pulled: 2,
+            blocks_processed: 16,
+        }];
+        r.lane_imbalance = Some(1.25);
+        let j = r.to_json();
+        assert_eq!(j.get("lane_imbalance").unwrap().as_f64(), Some(1.25));
+        let lanes = j.get("lane_profile").unwrap().as_arr().unwrap();
+        assert_eq!(lanes.len(), 1);
+        assert_eq!(lanes[0].get("busy_ns").unwrap().as_u64(), Some(1000));
+        assert_eq!(lanes[0].get("blocks_processed").unwrap().as_u64(), Some(16));
     }
 }

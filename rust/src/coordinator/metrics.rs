@@ -1,18 +1,69 @@
 //! Process-wide coordinator metrics: job counters, per-phase latency
 //! accumulators, tile/batch counters, job-queue gauges, and the
 //! scheduler's map-layout-cache hit rate. Snapshots serialize to JSON
-//! for the server's `metrics` command.
+//! for the server's `metrics` command; [`Metrics::prometheus`] renders
+//! the same state as Prometheus text exposition.
 //!
 //! Phases: streaming jobs run map+execute fused (one `fused_phase`
 //! sample per job); collect-mode and PJRT jobs keep the split
 //! `map_phase`/`exec_phase` timings. Queue metrics: `queue_depth` is a
 //! live gauge, `queue_wait` the enqueue→dequeue latency.
+//!
+//! Every phase is backed by two accumulators: a Welford mean/stddev
+//! (exact moments) and a lock-free log-bucketed
+//! [`Histogram`](crate::util::histogram::Histogram) for
+//! p50/p90/p99/p99.9 (≤ 6.25% relative quantile error). Labeled
+//! series key job wall time by `(workload, map, backend)` so
+//! per-scenario latency stays queryable after the fact.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-use crate::util::json::Json;
+use crate::util::histogram::Histogram;
+use crate::util::json::{escape, Json};
 use crate::util::stats::Welford;
+
+/// One phase's latency accumulators: Welford for exact mean/stddev
+/// plus a histogram for quantiles.
+struct PhaseMetric {
+    welford: Mutex<Welford>,
+    hist: Histogram,
+}
+
+impl Default for PhaseMetric {
+    fn default() -> Self {
+        PhaseMetric {
+            welford: Mutex::new(Welford::new()),
+            hist: Histogram::new(),
+        }
+    }
+}
+
+impl PhaseMetric {
+    fn record(&self, secs: f64) {
+        self.welford.lock().unwrap().push(secs);
+        self.hist.record_secs(secs);
+    }
+
+    fn to_json(&self) -> Json {
+        let w = self.welford.lock().unwrap();
+        let qs = self.hist.summary_quantiles_secs();
+        let q = |i: usize| qs.map(|a| Json::from(a[i])).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("count", w.count().into()),
+            ("mean_secs", w.mean().into()),
+            ("stddev_secs", w.stddev().into()),
+            ("max_secs", if w.count() > 0 { w.max() } else { 0.0 }.into()),
+            ("p50_secs", q(0)),
+            ("p90_secs", q(1)),
+            ("p99_secs", q(2)),
+            ("p999_secs", q(3)),
+        ])
+    }
+}
+
+type SeriesKey = (String, String, String);
 
 #[derive(Default)]
 pub struct Metrics {
@@ -30,11 +81,17 @@ pub struct Metrics {
     pub queue_depth: AtomicU64,
     pub map_cache_hits: AtomicU64,
     pub map_cache_misses: AtomicU64,
-    map_phase: Mutex<Welford>,
-    exec_phase: Mutex<Welford>,
-    fused_phase: Mutex<Welford>,
-    queue_wait: Mutex<Welford>,
-    job_wall: Mutex<Welford>,
+    map_phase: PhaseMetric,
+    exec_phase: PhaseMetric,
+    fused_phase: PhaseMetric,
+    queue_wait: PhaseMetric,
+    job_wall: PhaseMetric,
+    /// max/mean lane-busy ratio per profiled launch (dimensionless).
+    lane_imbalance: Mutex<Welford>,
+    /// Job wall-time histograms keyed by `(workload, map, backend)`.
+    /// The map is touched once per job (get-or-insert an `Arc`); the
+    /// recording itself is lock-free on the shared histogram.
+    series: Mutex<BTreeMap<SeriesKey, Arc<Histogram>>>,
 }
 
 impl Metrics {
@@ -43,39 +100,62 @@ impl Metrics {
     }
 
     pub fn record_map_phase(&self, secs: f64) {
-        self.map_phase.lock().unwrap().push(secs);
+        self.map_phase.record(secs);
     }
 
     pub fn record_exec_phase(&self, secs: f64) {
-        self.exec_phase.lock().unwrap().push(secs);
+        self.exec_phase.record(secs);
     }
 
     /// One fused map+execute sweep (the streaming engine's hot path).
     pub fn record_fused_phase(&self, secs: f64) {
-        self.fused_phase.lock().unwrap().push(secs);
+        self.fused_phase.record(secs);
     }
 
     /// Time a job spent waiting in the bounded queue.
     pub fn record_queue_wait(&self, secs: f64) {
-        self.queue_wait.lock().unwrap().push(secs);
+        self.queue_wait.record(secs);
     }
 
     pub fn record_job(&self, secs: f64) {
         self.jobs_completed.fetch_add(1, Ordering::Relaxed);
-        self.job_wall.lock().unwrap().push(secs);
+        self.job_wall.record(secs);
+    }
+
+    /// Lane-imbalance ratio of a profiled launch (≥ 1.0).
+    pub fn record_lane_imbalance(&self, ratio: f64) {
+        self.lane_imbalance.lock().unwrap().push(ratio);
+    }
+
+    /// Record one job's wall time under its `(workload, map, backend)`
+    /// series.
+    pub fn record_series(&self, workload: &str, map: &str, backend: &str, secs: f64) {
+        let hist = {
+            let mut series = self.series.lock().unwrap();
+            let key = (workload.to_string(), map.to_string(), backend.to_string());
+            Arc::clone(series.entry(key).or_default())
+        };
+        hist.record_secs(secs);
     }
 
     pub fn snapshot(&self) -> Json {
-        let phase = |w: &Mutex<Welford>| {
-            let w = w.lock().unwrap();
+        let counter = |a: &AtomicU64| Json::from(a.load(Ordering::Relaxed));
+        let imbalance = {
+            let w = self.lane_imbalance.lock().unwrap();
             Json::obj(vec![
                 ("count", w.count().into()),
-                ("mean_secs", w.mean().into()),
-                ("stddev_secs", w.stddev().into()),
-                ("max_secs", if w.count() > 0 { w.max() } else { 0.0 }.into()),
+                ("mean", w.mean().into()),
+                ("max", if w.count() > 0 { w.max() } else { 0.0 }.into()),
             ])
         };
-        let counter = |a: &AtomicU64| Json::from(a.load(Ordering::Relaxed));
+        let series = {
+            let series = self.series.lock().unwrap();
+            let mut obj = BTreeMap::new();
+            for ((w, m, b), h) in series.iter() {
+                obj.insert(format!("{w}/{m}/{b}"), h.to_json());
+            }
+            Json::Obj(obj)
+        };
         Json::obj(vec![
             ("jobs_accepted", counter(&self.jobs_accepted)),
             ("jobs_completed", counter(&self.jobs_completed)),
@@ -88,12 +168,109 @@ impl Metrics {
             ("queue_depth", counter(&self.queue_depth)),
             ("map_cache_hits", counter(&self.map_cache_hits)),
             ("map_cache_misses", counter(&self.map_cache_misses)),
-            ("map_phase", phase(&self.map_phase)),
-            ("exec_phase", phase(&self.exec_phase)),
-            ("fused_phase", phase(&self.fused_phase)),
-            ("queue_wait", phase(&self.queue_wait)),
-            ("job_wall", phase(&self.job_wall)),
+            ("map_phase", self.map_phase.to_json()),
+            ("exec_phase", self.exec_phase.to_json()),
+            ("fused_phase", self.fused_phase.to_json()),
+            ("queue_wait", self.queue_wait.to_json()),
+            ("job_wall", self.job_wall.to_json()),
+            ("lane_imbalance", imbalance),
+            ("series", series),
         ])
+    }
+
+    /// Prometheus text exposition (format 0.0.4). Counters end in
+    /// `_total`, gauges keep their name, phase latencies render as
+    /// summaries in seconds with `quantile` labels, and the labeled
+    /// series add `workload`/`map`/`backend` labels to
+    /// `simplexmap_job_seconds`. Label values are escaped through
+    /// [`crate::util::json::escape`] — the Prometheus label escapes
+    /// (`\\`, `\"`, `\n`) are a subset of JSON's string escapes, so
+    /// the shared routine covers them.
+    pub fn prometheus(&self) -> String {
+        fn scalar(out: &mut String, name: &str, kind: &str, v: u64) {
+            out.push_str(&format!("# TYPE simplexmap_{name} {kind}\n"));
+            out.push_str(&format!("simplexmap_{name} {v}\n"));
+        }
+        fn summary_body(out: &mut String, name: &str, labels: &str, hist: &Histogram) {
+            if let Some(qs) = hist.summary_quantiles_secs() {
+                let pairs = [("0.5", qs[0]), ("0.9", qs[1]), ("0.99", qs[2]), ("0.999", qs[3])];
+                for (q, v) in pairs {
+                    if labels.is_empty() {
+                        out.push_str(&format!("simplexmap_{name}{{quantile=\"{q}\"}} {v}\n"));
+                    } else {
+                        out.push_str(&format!(
+                            "simplexmap_{name}{{{labels},quantile=\"{q}\"}} {v}\n"
+                        ));
+                    }
+                }
+            }
+            let suffix = if labels.is_empty() {
+                String::new()
+            } else {
+                format!("{{{labels}}}")
+            };
+            out.push_str(&format!(
+                "simplexmap_{name}_sum{suffix} {}\n",
+                hist.sum_secs()
+            ));
+            out.push_str(&format!("simplexmap_{name}_count{suffix} {}\n", hist.count()));
+        }
+
+        let mut out = String::new();
+        let load = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        scalar(&mut out, "jobs_accepted_total", "counter", load(&self.jobs_accepted));
+        scalar(&mut out, "jobs_completed_total", "counter", load(&self.jobs_completed));
+        scalar(&mut out, "jobs_failed_total", "counter", load(&self.jobs_failed));
+        scalar(&mut out, "blocks_mapped_total", "counter", load(&self.blocks_mapped));
+        scalar(&mut out, "tile_batches_total", "counter", load(&self.tile_batches));
+        scalar(&mut out, "tiles_padded_total", "counter", load(&self.tiles_padded));
+        scalar(&mut out, "jobs_queued_total", "counter", load(&self.jobs_queued));
+        scalar(&mut out, "queue_rejected_total", "counter", load(&self.queue_rejected));
+        scalar(&mut out, "queue_depth", "gauge", load(&self.queue_depth));
+        scalar(&mut out, "map_cache_hits_total", "counter", load(&self.map_cache_hits));
+        scalar(&mut out, "map_cache_misses_total", "counter", load(&self.map_cache_misses));
+
+        for (name, phase) in [
+            ("map_phase_seconds", &self.map_phase),
+            ("exec_phase_seconds", &self.exec_phase),
+            ("fused_phase_seconds", &self.fused_phase),
+            ("queue_wait_seconds", &self.queue_wait),
+            ("job_wall_seconds", &self.job_wall),
+        ] {
+            out.push_str(&format!("# TYPE simplexmap_{name} summary\n"));
+            summary_body(&mut out, name, "", &phase.hist);
+        }
+
+        {
+            let w = self.lane_imbalance.lock().unwrap();
+            scalar(&mut out, "lane_imbalance_samples_total", "counter", w.count());
+            if w.count() > 0 {
+                out.push_str("# TYPE simplexmap_lane_imbalance gauge\n");
+                out.push_str(&format!(
+                    "simplexmap_lane_imbalance{{stat=\"mean\"}} {}\n",
+                    w.mean()
+                ));
+                out.push_str(&format!(
+                    "simplexmap_lane_imbalance{{stat=\"max\"}} {}\n",
+                    w.max()
+                ));
+            }
+        }
+
+        let series = self.series.lock().unwrap();
+        if !series.is_empty() {
+            out.push_str("# TYPE simplexmap_job_seconds summary\n");
+            for ((w, m, b), h) in series.iter() {
+                let labels = format!(
+                    "workload=\"{}\",map=\"{}\",backend=\"{}\"",
+                    escape(w),
+                    escape(m),
+                    escape(b)
+                );
+                summary_body(&mut out, "job_seconds", &labels, h);
+            }
+        }
+        out
     }
 }
 
@@ -132,5 +309,93 @@ mod tests {
         let s = Metrics::new().snapshot();
         let text = s.to_string_compact();
         assert!(crate::util::json::parse(&text).is_ok());
+        // Empty phases expose null quantiles, honestly.
+        assert_eq!(s.get("job_wall").unwrap().get("p50_secs"), Some(&Json::Null));
+        assert_eq!(s.get("series").unwrap(), &Json::Obj(BTreeMap::new()));
+    }
+
+    #[test]
+    fn phase_quantiles_are_present_and_monotone() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.record_job(i as f64 * 1e-3);
+        }
+        let wall = m.snapshot();
+        let wall = wall.get("job_wall").unwrap();
+        let p = |k: &str| wall.get(k).unwrap().as_f64().unwrap();
+        assert_eq!(wall.get("count").unwrap().as_u64(), Some(100));
+        assert!(p("p50_secs") <= p("p90_secs"));
+        assert!(p("p90_secs") <= p("p99_secs"));
+        assert!(p("p99_secs") <= p("p999_secs"));
+        // p50 of 1..100 ms is ~50 ms, within the 6.25% bucket error.
+        assert!((p("p50_secs") - 0.0505).abs() / 0.0505 < 0.07);
+    }
+
+    #[test]
+    fn labeled_series_key_by_scenario() {
+        let m = Metrics::new();
+        m.record_series("edm", "lambda2", "parallel", 0.010);
+        m.record_series("edm", "lambda2", "parallel", 0.020);
+        m.record_series("collision", "bb", "serial", 0.005);
+        let s = m.snapshot();
+        let series = s.get("series").unwrap();
+        let edm = series.get("edm/lambda2/parallel").unwrap();
+        assert_eq!(edm.get("count").unwrap().as_u64(), Some(2));
+        let col = series.get("collision/bb/serial").unwrap();
+        assert_eq!(col.get("count").unwrap().as_u64(), Some(1));
+        assert!(col.get("p50_secs").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn hostile_map_names_survive_snapshot_and_prometheus() {
+        // Satellite regression: a map name containing `"` and `\` must
+        // escape cleanly in both expositions.
+        let hostile = r#"lam"bda\2"#;
+        let m = Metrics::new();
+        m.record_series("edm", hostile, "parallel", 0.003);
+        let text = m.snapshot().to_string_compact();
+        let back = crate::util::json::parse(&text).expect("snapshot must stay valid JSON");
+        let series = back.get("series").unwrap();
+        let key = format!("edm/{hostile}/parallel");
+        assert_eq!(
+            series.get(&key).unwrap().get("count").unwrap().as_u64(),
+            Some(1)
+        );
+        let prom = m.prometheus();
+        assert!(
+            prom.contains(r#"map="lam\"bda\\2""#),
+            "escaped label missing in:\n{prom}"
+        );
+    }
+
+    #[test]
+    fn prometheus_exposition_has_counters_and_summaries() {
+        let m = Metrics::new();
+        m.jobs_accepted.fetch_add(2, Ordering::Relaxed);
+        m.record_job(0.25);
+        m.record_queue_wait(0.001);
+        m.record_lane_imbalance(1.5);
+        m.record_series("edm", "lambda2", "parallel", 0.25);
+        let prom = m.prometheus();
+        assert!(prom.contains("# TYPE simplexmap_jobs_accepted_total counter"));
+        assert!(prom.contains("simplexmap_jobs_accepted_total 2"));
+        assert!(prom.contains("# TYPE simplexmap_queue_depth gauge"));
+        assert!(prom.contains("# TYPE simplexmap_job_wall_seconds summary"));
+        assert!(prom.contains("simplexmap_job_wall_seconds{quantile=\"0.5\"}"));
+        assert!(prom.contains("simplexmap_job_wall_seconds_count 1"));
+        assert!(prom.contains("simplexmap_lane_imbalance{stat=\"mean\"} 1.5"));
+        let labeled = concat!(
+            "simplexmap_job_seconds",
+            "{workload=\"edm\",map=\"lambda2\",backend=\"parallel\",quantile=\"0.5\"}"
+        );
+        assert!(prom.contains(labeled), "missing labeled series in:\n{prom}");
+        assert!(prom.ends_with('\n'));
+    }
+
+    #[test]
+    fn empty_prometheus_has_no_quantile_lines() {
+        let prom = Metrics::new().prometheus();
+        assert!(!prom.contains("quantile="));
+        assert!(prom.contains("simplexmap_job_wall_seconds_count 0"));
     }
 }

@@ -14,7 +14,11 @@
 //! - [`batcher`] — gathers the tile operands of λ-mapped blocks into
 //!   fixed-size batches and executes them on the PJRT runtime (the
 //!   AOT-compiled Pallas kernels), padding the final partial batch.
-//! - [`metrics`] — process-wide counters, phase timings, queue gauges.
+//! - [`metrics`] — process-wide counters, phase timings (Welford +
+//!   log-bucketed histograms), labeled per-scenario series, queue
+//!   gauges, Prometheus exposition.
+//! - [`span`] — lightweight lifecycle spans in a bounded ring buffer,
+//!   exportable as Chrome trace-event JSON.
 //! - [`server`] — a JSON-lines-over-TCP leader: accepts jobs from
 //!   clients and runs them through the queue (examples/serve_client).
 
@@ -24,6 +28,7 @@ pub mod metrics;
 pub mod queue;
 pub mod scheduler;
 pub mod server;
+pub mod span;
 pub mod trace;
 
 pub use batcher::TileBatcher;
@@ -31,3 +36,4 @@ pub use job::{Backend, BackendKind, Job, JobResult, WorkloadKind};
 pub use metrics::Metrics;
 pub use queue::{JobQueue, QueueConfig};
 pub use scheduler::{ExecMode, RhoPolicy, ScheduleError, Scheduler};
+pub use span::{Span, SpanRecorder};

@@ -19,6 +19,7 @@ use std::time::Instant;
 
 use crate::coordinator::job::{Job, JobResult};
 use crate::coordinator::scheduler::{ScheduleError, Scheduler};
+use crate::coordinator::span::{self, ActiveSpan};
 
 /// Queue sizing knobs.
 #[derive(Clone, Copy, Debug)]
@@ -44,6 +45,10 @@ pub type JobReceiver = mpsc::Receiver<Result<JobResult, ScheduleError>>;
 struct Queued {
     job: Job,
     enqueued: Instant,
+    /// Span covering enqueue→dequeue; finished by the worker that pops
+    /// the item (rejected submissions never construct a `Queued`, so
+    /// their spans never start).
+    wait_span: ActiveSpan,
     reply: mpsc::Sender<Result<JobResult, ScheduleError>>,
 }
 
@@ -102,6 +107,7 @@ impl JobQueue {
                 return Err(ScheduleError::QueueFull(self.inner.capacity));
             }
             q.push_back(Queued {
+                wait_span: span::global().start("queue", "queue_wait", 0),
                 job,
                 enqueued: Instant::now(),
                 reply: tx,
@@ -173,6 +179,13 @@ fn worker_loop(inner: &Inner) {
         let Some(item) = item else { return };
         let metrics = &inner.scheduler.metrics;
         metrics.record_queue_wait(item.enqueued.elapsed().as_secs_f64());
+        span::global().finish_with(
+            item.wait_span,
+            vec![
+                ("workload", item.job.workload.name().to_string()),
+                ("map", item.job.map.clone()),
+            ],
+        );
         let result = inner.scheduler.run(&item.job);
         // The client may have disconnected; dropping the result is fine.
         let _ = item.reply.send(result);

@@ -28,6 +28,7 @@ use std::time::Instant;
 
 use crate::coordinator::job::{BackendKind, Job, JobResult};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::span;
 use crate::grid::{BlockShape, LaunchConfig, LaunchStats, Launcher, MappedBlock};
 use crate::maps::MThreadMap;
 use crate::simplex::gasket::DomainKind;
@@ -172,6 +173,10 @@ pub struct Scheduler {
     pub exec_mode: ExecMode,
     executor: Option<ExecHandle>,
     pub metrics: Arc<Metrics>,
+    /// Per-lane launcher profiling (busy time, chunks pulled, blocks
+    /// processed) — off by default; enable via
+    /// `SIMPLEXMAP_PROFILE_LANES=1` or by setting the field.
+    pub profile_lanes: bool,
     /// Per-(map-name, m) resolved maps, shared across jobs: repeated
     /// jobs (sweeps, server traffic) reuse the λ_m level plans and
     /// per-nb layouts the map caches internally instead of re-deriving
@@ -181,12 +186,16 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(workers: usize, executor: Option<ExecHandle>) -> Scheduler {
+        let profile_lanes = std::env::var("SIMPLEXMAP_PROFILE_LANES")
+            .map(|s| s == "1" || s.eq_ignore_ascii_case("true"))
+            .unwrap_or(false);
         Scheduler {
             workers: workers.max(1),
             rho: RhoPolicy::default(),
             exec_mode: ExecMode::Streaming,
             executor,
             metrics: Arc::new(Metrics::new()),
+            profile_lanes,
             map_cache: Mutex::new(HashMap::new()),
         }
     }
@@ -237,6 +246,7 @@ impl Scheduler {
         let mut cfg = LaunchConfig::new(BlockShape::new(rho, m));
         cfg.launch_latency = std::time::Duration::from_micros(5);
         cfg.backend = backend;
+        cfg.profile_lanes = self.profile_lanes;
         // Accounting-only launch latency: the model stays in the
         // stats, the engine never sleeps for it.
         debug_assert!(!cfg.simulate_latency);
@@ -253,6 +263,12 @@ impl Scheduler {
     /// any domain.
     pub fn run(&self, job: &Job) -> Result<JobResult, ScheduleError> {
         let t0 = Instant::now();
+        // Root span of the job lifecycle. A failed job drops the
+        // handle unfinished (the span is simply lost — errors are
+        // already observable through `jobs_failed` and the reply).
+        let recorder = span::global();
+        let job_span = recorder.start("scheduler", "job", 0);
+        let job_id = job_span.id();
         let m = job.workload.m();
         let domain = job.workload.domain();
         let map = self.resolve_map(&job.map, m, job.nb)?;
@@ -290,17 +306,34 @@ impl Scheduler {
         let (outputs, stats, batches) = match job.backend {
             BackendKind::Serial | BackendKind::Parallel => match self.exec_mode {
                 ExecMode::Streaming => {
-                    self.run_streaming(&launcher, map.as_ref(), w.as_ref(), job.nb)
+                    self.run_streaming(&launcher, map.as_ref(), w.as_ref(), job.nb, job_id)
                 }
                 ExecMode::Collect => {
-                    self.run_collect(&launcher, map.as_ref(), w.as_ref(), job.nb)
+                    self.run_collect(&launcher, map.as_ref(), w.as_ref(), job.nb, job_id)
                 }
             },
-            BackendKind::Pjrt => self.run_pjrt(&launcher, map.as_ref(), w.as_ref(), job.nb)?,
+            BackendKind::Pjrt => {
+                self.run_pjrt(&launcher, map.as_ref(), w.as_ref(), job.nb, job_id)?
+            }
         };
 
         let wall = t0.elapsed().as_secs_f64();
         self.metrics.record_job(wall);
+        self.metrics
+            .record_series(job.workload.name(), &job.map, job.backend.name(), wall);
+        let lane_imbalance = stats.lane_imbalance();
+        if let Some(ratio) = lane_imbalance {
+            self.metrics.record_lane_imbalance(ratio);
+        }
+        recorder.finish_with(
+            job_span,
+            vec![
+                ("workload", job.workload.name().to_string()),
+                ("map", job.map.clone()),
+                ("backend", job.backend.name().to_string()),
+                ("nb", job.nb.to_string()),
+            ],
+        );
         Ok(JobResult {
             job: job.clone(),
             outputs,
@@ -314,7 +347,33 @@ impl Scheduler {
             threads_predicated_off: stats.threads_predicated_off,
             wall_secs: wall,
             tile_batches: batches,
+            lane_profile: stats.lanes,
+            lane_imbalance,
         })
+    }
+
+    /// Emit one child span per profiled lane under `parent`. Lane busy
+    /// time is measured inside the launcher and comes back through
+    /// [`LaunchStats::lanes`] after the fact, so the spans are
+    /// reconstructed intervals anchored at the sweep start.
+    fn record_lane_spans(&self, stats: &LaunchStats, parent: u64, sweep_start_ns: u64) {
+        let recorder = span::global();
+        if !recorder.enabled() {
+            return;
+        }
+        for lane in &stats.lanes {
+            recorder.record_interval(
+                "engine",
+                format!("lane-{}", lane.lane),
+                parent,
+                sweep_start_ns,
+                sweep_start_ns + lane.busy_ns,
+                vec![
+                    ("chunks_pulled", lane.chunks_pulled.to_string()),
+                    ("blocks_processed", lane.blocks_processed.to_string()),
+                ],
+            );
+        }
     }
 
     /// Fused map+execute: per-lane accumulators advance inside the map
@@ -325,7 +384,12 @@ impl Scheduler {
         map: &dyn MThreadMap,
         w: &dyn Workload,
         nb: u64,
+        parent: u64,
     ) -> (Vec<(String, f64)>, LaunchStats, u64) {
+        let recorder = span::global();
+        let sweep = recorder.start("engine", "fused_sweep", parent);
+        let sweep_id = sweep.id();
+        let sweep_start_ns = span::now_ns();
         let t = Instant::now();
         let accums: Vec<Mutex<Accum>> = (0..launcher.workers())
             .map(|_| Mutex::new(w.new_accum()))
@@ -348,6 +412,15 @@ impl Scheduler {
         self.metrics
             .blocks_mapped
             .fetch_add(stats.blocks_mapped, Ordering::Relaxed);
+        recorder.finish_with(
+            sweep,
+            vec![
+                ("blocks_mapped", stats.blocks_mapped.to_string()),
+                ("passes", stats.passes.to_string()),
+                ("launch_waves", stats.launch_waves.to_string()),
+            ],
+        );
+        self.record_lane_spans(&stats, sweep_id, sweep_start_ns);
         (outputs, stats, 0)
     }
 
@@ -358,7 +431,12 @@ impl Scheduler {
         launcher: &Launcher,
         map: &dyn MThreadMap,
         nb: u64,
+        parent: u64,
     ) -> (Vec<MappedBlock>, LaunchStats) {
+        let recorder = span::global();
+        let sweep = recorder.start("engine", "map_sweep", parent);
+        let sweep_id = sweep.id();
+        let sweep_start_ns = span::now_ns();
         let t = Instant::now();
         let blocks: Mutex<Vec<MappedBlock>> = Mutex::new(Vec::new());
         let stats = launcher.launch(map, nb, |_lane, b| {
@@ -372,6 +450,14 @@ impl Scheduler {
         self.metrics
             .blocks_mapped
             .fetch_add(stats.blocks_mapped, Ordering::Relaxed);
+        recorder.finish_with(
+            sweep,
+            vec![
+                ("blocks_mapped", stats.blocks_mapped.to_string()),
+                ("passes", stats.passes.to_string()),
+            ],
+        );
+        self.record_lane_spans(&stats, sweep_id, sweep_start_ns);
         log_debug!("scheduler", "mapped {} blocks", blocks.len());
         (blocks, stats)
     }
@@ -384,12 +470,16 @@ impl Scheduler {
         map: &dyn MThreadMap,
         w: &dyn Workload,
         nb: u64,
+        parent: u64,
     ) -> (Vec<(String, f64)>, LaunchStats, u64) {
-        let (blocks, mut stats) = self.collect_blocks(launcher, map, nb);
+        let (blocks, mut stats) = self.collect_blocks(launcher, map, nb, parent);
+        let recorder = span::global();
+        let exec = recorder.start("engine", "exec", parent);
         let t = Instant::now();
         let (outputs, predicated) = self.execute_collected(w, &blocks, launcher.workers());
         stats.threads_predicated_off = predicated;
         self.metrics.record_exec_phase(t.elapsed().as_secs_f64());
+        recorder.finish_with(exec, vec![("blocks", blocks.len().to_string())]);
         (outputs, stats, 0)
     }
 
@@ -439,6 +529,7 @@ impl Scheduler {
         map: &dyn MThreadMap,
         w: &dyn Workload,
         nb: u64,
+        parent: u64,
     ) -> Result<(Vec<(String, f64)>, LaunchStats, u64), ScheduleError> {
         if !w.supports_pjrt() {
             return Err(ScheduleError::NoPjrtPath(w.name()));
@@ -447,7 +538,9 @@ impl Scheduler {
             .executor
             .clone()
             .ok_or_else(|| ScheduleError::NoExecutor("executor not loaded".into()))?;
-        let (blocks, stats) = self.collect_blocks(launcher, map, nb);
+        let (blocks, stats) = self.collect_blocks(launcher, map, nb, parent);
+        let recorder = span::global();
+        let exec = recorder.start("engine", "exec", parent);
         let t = Instant::now();
         let run = w.run_pjrt(exe, &blocks)?;
         self.metrics
@@ -457,6 +550,7 @@ impl Scheduler {
             .tiles_padded
             .fetch_add(run.tiles_padded, Ordering::Relaxed);
         self.metrics.record_exec_phase(t.elapsed().as_secs_f64());
+        recorder.finish_with(exec, vec![("tile_batches", run.batches_run.to_string())]);
         Ok((run.outputs, stats, run.batches_run))
     }
 }
@@ -862,6 +956,38 @@ mod tests {
             snap.get("fused_phase").unwrap().get("count").unwrap().as_u64(),
             Some(2)
         );
+    }
+
+    #[test]
+    fn profiled_jobs_surface_lane_stats_and_series() {
+        let mut sched = Scheduler::new(3, None);
+        sched.profile_lanes = true;
+        let r = sched.run(&job(WorkloadKind::Edm, 8, "lambda2")).unwrap();
+        assert!(!r.lane_profile.is_empty());
+        let covered: u64 = r.lane_profile.iter().map(|p| p.blocks_processed).sum();
+        assert_eq!(covered, r.blocks_launched, "lanes cover the launch");
+        assert!(r.lane_imbalance.unwrap() >= 1.0);
+        let snap = sched.metrics.snapshot();
+        let imb = snap.get("lane_imbalance").unwrap();
+        assert_eq!(imb.get("count").unwrap().as_u64(), Some(1));
+        assert!(imb.get("mean").unwrap().as_f64().unwrap() >= 1.0);
+        let series = snap.get("series").unwrap();
+        let s = series.get("edm/lambda2/parallel").unwrap();
+        assert_eq!(s.get("count").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn unprofiled_jobs_carry_no_lane_stats() {
+        let sched = Scheduler::new(2, None);
+        assert!(!sched.profile_lanes, "profiling is opt-in");
+        let r = sched.run(&job(WorkloadKind::Edm, 8, "lambda2")).unwrap();
+        assert!(r.lane_profile.is_empty());
+        assert!(r.lane_imbalance.is_none());
+        // The labeled series records regardless — it is a metrics
+        // surface, not a profiling one.
+        let snap = sched.metrics.snapshot();
+        let series = snap.get("series").unwrap();
+        assert!(series.get("edm/lambda2/parallel").is_some());
     }
 
     #[test]

@@ -19,7 +19,16 @@
 //!   unified registry), plus the non-simplex gasket domain under its
 //!   own key.
 //! - `{"cmd":"metrics"}` → `{"ok":true,"metrics":{…}}` — includes
-//!   queue depth/wait and per-phase timings.
+//!   queue depth/wait and per-phase timings with p50/p90/p99/p99.9
+//!   quantiles plus the labeled `(workload, map, backend)` series.
+//!   `{"cmd":"metrics","format":"prometheus"}` answers
+//!   `{"ok":true,"format":"prometheus","text":"…"}` with the same
+//!   state as Prometheus text exposition.
+//! - `{"cmd":"trace","n":256}` → `{"ok":true,"spans":N,"trace":{…}}` —
+//!   the most recent `n` finished spans (default 256) as a Chrome
+//!   trace-event document. An optional `"enable":true|false` toggles
+//!   span recording first (so a client can switch tracing on, run
+//!   jobs, and pull the trace without restarting the server).
 //! - `{"cmd":"shutdown"}` → `{"ok":true}` and the server stops.
 //!
 //! Errors come back as `{"ok":false,"error":"…"}` — the connection
@@ -161,12 +170,39 @@ pub fn dispatch(line: &str, ctx: &ServerCtx) -> Json {
                         .collect(),
                 ),
             ));
-            Json::obj(vec![("ok", true.into()), ("maps", Json::Obj(per_m))])
+            Json::obj(vec![
+                ("ok", true.into()),
+                ("maps", Json::Obj(per_m.into_iter().collect())),
+            ])
         }
-        Some("metrics") => Json::obj(vec![
-            ("ok", true.into()),
-            ("metrics", ctx.scheduler.metrics.snapshot()),
-        ]),
+        Some("metrics") => {
+            if req.get("format").and_then(Json::as_str) == Some("prometheus") {
+                Json::obj(vec![
+                    ("ok", true.into()),
+                    ("format", "prometheus".into()),
+                    ("text", ctx.scheduler.metrics.prometheus().into()),
+                ])
+            } else {
+                Json::obj(vec![
+                    ("ok", true.into()),
+                    ("metrics", ctx.scheduler.metrics.snapshot()),
+                ])
+            }
+        }
+        Some("trace") => {
+            let recorder = crate::coordinator::span::global();
+            if let Some(on) = req.get("enable").and_then(Json::as_bool) {
+                recorder.set_enabled(on);
+            }
+            let n = req.get("n").and_then(Json::as_u64).unwrap_or(256) as usize;
+            let spans = recorder.snapshot_last(n);
+            Json::obj(vec![
+                ("ok", true.into()),
+                ("enabled", recorder.enabled().into()),
+                ("spans", spans.len().into()),
+                ("trace", crate::coordinator::span::chrome_trace(&spans)),
+            ])
+        }
         Some("shutdown") => {
             ctx.shutdown.store(true, Ordering::SeqCst);
             Json::obj(vec![("ok", true.into())])
@@ -178,22 +214,34 @@ pub fn dispatch(line: &str, ctx: &ServerCtx) -> Json {
                 .fetch_add(1, Ordering::Relaxed);
             match Job::from_json(&req) {
                 None => err("invalid job (need workload, nb, map)".into()),
-                Some(job) => match ctx.queue.run(job) {
-                    Ok(result) => Json::obj(vec![
-                        ("ok", true.into()),
-                        ("result", result.to_json()),
-                    ]),
-                    Err(e) => {
-                        ctx.scheduler
-                            .metrics
-                            .jobs_failed
-                            .fetch_add(1, Ordering::Relaxed);
-                        err(e.to_string())
+                Some(job) => {
+                    // Accept span: admission through reply, covering the
+                    // queue wait and the job execution beneath it.
+                    let recorder = crate::coordinator::span::global();
+                    let accept = recorder.start("server", "accept", 0);
+                    let attrs = vec![
+                        ("workload", job.workload.name().to_string()),
+                        ("map", job.map.clone()),
+                    ];
+                    let outcome = ctx.queue.run(job);
+                    recorder.finish_with(accept, attrs);
+                    match outcome {
+                        Ok(result) => Json::obj(vec![
+                            ("ok", true.into()),
+                            ("result", result.to_json()),
+                        ]),
+                        Err(e) => {
+                            ctx.scheduler
+                                .metrics
+                                .jobs_failed
+                                .fetch_add(1, Ordering::Relaxed);
+                            err(e.to_string())
+                        }
                     }
-                },
+                }
             }
         }
-        _ => err("unknown cmd (ping|run|maps|metrics|shutdown)".into()),
+        _ => err("unknown cmd (ping|run|maps|metrics|trace|shutdown)".into()),
     }
 }
 
@@ -296,6 +344,37 @@ mod tests {
             r.get("error").unwrap().as_str().unwrap().contains("gasket"),
             "{r}"
         );
+    }
+
+    #[test]
+    fn dispatch_metrics_prometheus_format() {
+        let c = ctx();
+        dispatch(
+            r#"{"cmd":"run","workload":"edm","nb":8,"map":"lambda2"}"#,
+            &c,
+        );
+        let r = dispatch(r#"{"cmd":"metrics","format":"prometheus"}"#, &c);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(r.get("format").unwrap().as_str(), Some("prometheus"));
+        let text = r.get("text").unwrap().as_str().unwrap();
+        assert!(text.contains("simplexmap_jobs_completed_total 1"), "{text}");
+        assert!(text.contains("simplexmap_job_wall_seconds{quantile=\"0.5\"}"));
+        // The default format is untouched by the new axis.
+        let r = dispatch(r#"{"cmd":"metrics"}"#, &c);
+        assert!(r.get("metrics").unwrap().get("job_wall").is_some());
+    }
+
+    #[test]
+    fn dispatch_trace_answers_a_chrome_document() {
+        // Recording stays disabled here (toggling the global recorder
+        // belongs to tests/observability.rs — lib tests share a
+        // process); the shape of the reply is what this covers.
+        let c = ctx();
+        let r = dispatch(r#"{"cmd":"trace","n":16}"#, &c);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert!(r.get("spans").unwrap().as_u64().is_some());
+        let trace = r.get("trace").unwrap();
+        assert!(trace.get("traceEvents").unwrap().as_arr().is_some());
     }
 
     #[test]

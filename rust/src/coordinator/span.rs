@@ -1,0 +1,347 @@
+//! Lightweight execution spans with Chrome trace-event export.
+//!
+//! A [`Span`] is one timed region of the job lifecycle — accept,
+//! queue wait, map/fused sweep, per-lane launch work — identified by
+//! `(id, parent)` so the regions nest into a tree, stamped with
+//! monotonic nanoseconds from a process-wide clock ([`now_ns`]), and
+//! tagged with `key=value` attributes. Finished spans land in a
+//! bounded ring buffer (oldest evicted first) owned by a
+//! [`SpanRecorder`]; the process-wide recorder ([`global`]) is what
+//! the scheduler, queue and server instrument.
+//!
+//! Recording is **off by default**: a disabled recorder's
+//! [`SpanRecorder::start`] is a single relaxed atomic load returning a
+//! dead [`ActiveSpan`] (id 0) whose finish is a no-op — the
+//! instrumentation stays negligible on the hot path (verified by
+//! `benches/observability_overhead.rs`). Enable via
+//! `SIMPLEXMAP_SPANS=1`, [`SpanRecorder::set_enabled`], or the server
+//! `{"cmd":"trace","enable":true}` command.
+//!
+//! Export ([`chrome_trace`]) is the Chrome trace-event JSON format
+//! (load in `chrome://tracing` or Perfetto): one complete event
+//! (`"ph":"X"`) per span with `ts`/`dur` in microseconds, `name` from
+//! the span name, `cat` from the target, and the span id, parent and
+//! attributes under `args`. All strings pass through the
+//! [`crate::util::json`] writer, so attribute values containing `"`
+//! or `\` stay parseable.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Monotonic nanoseconds since the first call in this process (shared
+/// with nothing else — span timestamps are only comparable to each
+/// other, which is all a trace viewer needs).
+pub fn now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// A finished span.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Unique per recorder, starting at 1 (0 means "no span").
+    pub id: u64,
+    /// Parent span id, 0 for roots.
+    pub parent: u64,
+    /// Subsystem that produced the span (`scheduler`, `queue`, ...).
+    pub target: &'static str,
+    /// Region name (`job`, `queue_wait`, `fused_sweep`, `lane-3`, ...).
+    pub name: String,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    pub attrs: Vec<(&'static str, String)>,
+}
+
+/// Handle for an in-flight span. Dead handles (id 0, from a disabled
+/// recorder) finish as no-ops. Dropping an unfinished handle simply
+/// loses the span — there is no `Drop` bookkeeping on the hot path.
+#[derive(Debug)]
+pub struct ActiveSpan {
+    id: u64,
+    parent: u64,
+    target: &'static str,
+    name: &'static str,
+    start_ns: u64,
+}
+
+impl ActiveSpan {
+    /// The span id to hand to children as `parent` (0 when disabled —
+    /// children then record as roots, which degrades gracefully).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+/// Bounded ring buffer of finished spans plus the id allocator.
+pub struct SpanRecorder {
+    enabled: AtomicBool,
+    next_id: AtomicU64,
+    capacity: usize,
+    ring: Mutex<VecDeque<Span>>,
+}
+
+impl SpanRecorder {
+    pub fn new(capacity: usize) -> SpanRecorder {
+        SpanRecorder {
+            enabled: AtomicBool::new(false),
+            next_id: AtomicU64::new(1),
+            capacity: capacity.max(1),
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Begin a span. When disabled this is one atomic load and returns
+    /// a dead handle — no clock read, no allocation.
+    pub fn start(&self, target: &'static str, name: &'static str, parent: u64) -> ActiveSpan {
+        if !self.enabled() {
+            return ActiveSpan {
+                id: 0,
+                parent: 0,
+                target,
+                name,
+                start_ns: 0,
+            };
+        }
+        ActiveSpan {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            parent,
+            target,
+            name,
+            start_ns: now_ns(),
+        }
+    }
+
+    pub fn finish(&self, span: ActiveSpan) {
+        self.finish_with(span, Vec::new());
+    }
+
+    /// End a span, attaching attributes. Dead handles are dropped
+    /// without touching the ring.
+    pub fn finish_with(&self, span: ActiveSpan, attrs: Vec<(&'static str, String)>) {
+        if span.id == 0 {
+            return;
+        }
+        self.push(Span {
+            id: span.id,
+            parent: span.parent,
+            target: span.target,
+            name: span.name.to_string(),
+            start_ns: span.start_ns,
+            end_ns: now_ns(),
+            attrs,
+        });
+    }
+
+    /// Record a span whose interval was measured externally (per-lane
+    /// busy time comes back through the launcher's join handles, after
+    /// the fact). No-op when disabled.
+    pub fn record_interval(
+        &self,
+        target: &'static str,
+        name: String,
+        parent: u64,
+        start_ns: u64,
+        end_ns: u64,
+        attrs: Vec<(&'static str, String)>,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.push(Span {
+            id,
+            parent,
+            target,
+            name,
+            start_ns,
+            end_ns: end_ns.max(start_ns),
+            attrs,
+        });
+    }
+
+    fn push(&self, span: Span) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == self.capacity {
+            ring.pop_front();
+        }
+        ring.push_back(span);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        self.ring.lock().unwrap().clear();
+    }
+
+    /// The most recent `n` finished spans, oldest first.
+    pub fn snapshot_last(&self, n: usize) -> Vec<Span> {
+        let ring = self.ring.lock().unwrap();
+        let skip = ring.len().saturating_sub(n);
+        ring.iter().skip(skip).cloned().collect()
+    }
+}
+
+/// The process-wide recorder. Capacity comes from
+/// `SIMPLEXMAP_SPAN_CAPACITY` (default 8192 spans ≈ a few MB at the
+/// attr sizes the scheduler emits); recording starts enabled only if
+/// `SIMPLEXMAP_SPANS` is `1`/`true`.
+pub fn global() -> &'static SpanRecorder {
+    static GLOBAL: OnceLock<SpanRecorder> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let capacity = std::env::var("SIMPLEXMAP_SPAN_CAPACITY")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(8192);
+        let rec = SpanRecorder::new(capacity);
+        let on = std::env::var("SIMPLEXMAP_SPANS")
+            .map(|s| s == "1" || s.eq_ignore_ascii_case("true"))
+            .unwrap_or(false);
+        rec.set_enabled(on);
+        rec
+    })
+}
+
+/// Render spans as a Chrome trace-event document:
+/// `{"traceEvents":[{"ph":"X","name","cat","ts","dur","pid","tid","args"}]}`
+/// with `ts`/`dur` in microseconds (the viewer's unit). Span id,
+/// parent and attributes ride in `args`.
+pub fn chrome_trace(spans: &[Span]) -> Json {
+    let events: Vec<Json> = spans
+        .iter()
+        .map(|s| {
+            let mut args = vec![
+                ("span_id", Json::from(s.id)),
+                ("parent", Json::from(s.parent)),
+            ];
+            for (k, v) in &s.attrs {
+                args.push((*k, Json::from(v.as_str())));
+            }
+            Json::obj(vec![
+                ("ph", "X".into()),
+                ("name", s.name.as_str().into()),
+                ("cat", s.target.into()),
+                ("ts", (s.start_ns as f64 / 1e3).into()),
+                ("dur", ((s.end_ns - s.start_ns) as f64 / 1e3).into()),
+                ("pid", 1u64.into()),
+                ("tid", 1u64.into()),
+                ("args", Json::obj(args)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn disabled_recorder_records_nothing_and_hands_out_dead_ids() {
+        let rec = SpanRecorder::new(16);
+        assert!(!rec.enabled());
+        let s = rec.start("t", "noop", 0);
+        assert_eq!(s.id(), 0);
+        rec.finish(s);
+        rec.record_interval("t", "lane-0".to_string(), 0, 10, 20, Vec::new());
+        assert!(rec.is_empty());
+    }
+
+    #[test]
+    fn spans_nest_and_carry_attrs() {
+        let rec = SpanRecorder::new(16);
+        rec.set_enabled(true);
+        let root = rec.start("scheduler", "job", 0);
+        let root_id = root.id();
+        assert!(root_id > 0);
+        let child = rec.start("engine", "fused_sweep", root_id);
+        rec.finish_with(child, vec![("blocks", "42".to_string())]);
+        rec.finish_with(root, vec![("workload", "edm".to_string())]);
+        let spans = rec.snapshot_last(16);
+        assert_eq!(spans.len(), 2);
+        // Ring order is finish order: the child landed first.
+        assert_eq!(spans[0].name, "fused_sweep");
+        assert_eq!(spans[0].parent, root_id);
+        assert_eq!(spans[1].name, "job");
+        assert_eq!(spans[1].parent, 0);
+        assert!(spans[1].end_ns >= spans[1].start_ns);
+        assert!(spans[0].attrs.iter().any(|(k, v)| *k == "blocks" && v == "42"));
+    }
+
+    #[test]
+    fn ring_is_bounded_and_keeps_the_newest() {
+        let rec = SpanRecorder::new(4);
+        rec.set_enabled(true);
+        for i in 0..10u64 {
+            rec.record_interval("t", format!("s{i}"), 0, i, i + 1, Vec::new());
+        }
+        assert_eq!(rec.len(), 4);
+        let names: Vec<String> = rec.snapshot_last(99).into_iter().map(|s| s.name).collect();
+        assert_eq!(names, ["s6", "s7", "s8", "s9"]);
+        let last_two: Vec<String> = rec.snapshot_last(2).into_iter().map(|s| s.name).collect();
+        assert_eq!(last_two, ["s8", "s9"]);
+        rec.clear();
+        assert!(rec.is_empty());
+    }
+
+    #[test]
+    fn record_interval_clamps_reversed_intervals() {
+        let rec = SpanRecorder::new(4);
+        rec.set_enabled(true);
+        rec.record_interval("t", "rev".to_string(), 0, 100, 50, Vec::new());
+        let spans = rec.snapshot_last(1);
+        assert_eq!(spans[0].start_ns, 100);
+        assert_eq!(spans[0].end_ns, 100);
+    }
+
+    #[test]
+    fn chrome_trace_roundtrips_with_hostile_attr_values() {
+        let rec = SpanRecorder::new(8);
+        rec.set_enabled(true);
+        let s = rec.start("scheduler", "job", 0);
+        rec.finish_with(s, vec![("map", r#"lam"bda\2"#.to_string())]);
+        let doc = chrome_trace(&rec.snapshot_last(8));
+        let text = doc.to_string_compact();
+        let back = parse(&text).expect("chrome trace must be valid JSON");
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        let e = &events[0];
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(e.get("name").and_then(Json::as_str), Some("job"));
+        assert_eq!(e.get("cat").and_then(Json::as_str), Some("scheduler"));
+        assert!(e.get("ts").and_then(Json::as_f64).is_some());
+        assert!(e.get("dur").and_then(Json::as_f64).unwrap() >= 0.0);
+        let args = e.get("args").unwrap();
+        assert_eq!(args.get("map").and_then(Json::as_str), Some(r#"lam"bda\2"#));
+        assert!(args.get("span_id").and_then(Json::as_u64).unwrap() > 0);
+    }
+
+    #[test]
+    fn now_ns_is_monotone() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+}

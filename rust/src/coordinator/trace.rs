@@ -124,12 +124,10 @@ pub fn replay(sched: &Scheduler, trace: &[TraceEntry]) -> ReplayReport {
     ReplayReport {
         completed: latencies.len(),
         failed,
-        latency: Summary::from_samples(&latencies).unwrap_or_else(|| {
-            Summary::from_samples(&[0.0]).unwrap()
-        }),
-        service: Summary::from_samples(&services).unwrap_or_else(|| {
-            Summary::from_samples(&[0.0]).unwrap()
-        }),
+        // An all-failed replay reports the honest empty summary
+        // (count 0, NaN moments → null JSON), not fabricated zeros.
+        latency: Summary::from_samples(&latencies).unwrap_or_else(Summary::empty),
+        service: Summary::from_samples(&services).unwrap_or_else(Summary::empty),
         wall: start.elapsed(),
     }
 }
@@ -213,5 +211,26 @@ mod tests {
         let report = replay(&sched, &trace);
         assert_eq!(report.failed, 1);
         assert_eq!(report.completed, 1);
+    }
+
+    #[test]
+    fn replay_with_every_job_failing_reports_empty_summaries() {
+        let sched = Scheduler::new(1, None);
+        let mut trace = generate(&TraceSpec {
+            jobs: 2,
+            rate_hz: 1000.0,
+            sizes: vec![8],
+            ..Default::default()
+        });
+        for e in &mut trace {
+            e.job.nb = 17;
+            e.job.map = "lambda2".into(); // λ2 rejects non-pow2 sizes
+        }
+        let report = replay(&sched, &trace);
+        assert_eq!(report.completed, 0);
+        assert_eq!(report.failed, 2);
+        assert_eq!(report.latency.count, 0);
+        assert!(report.latency.p50.is_nan(), "no fabricated zero quantiles");
+        assert_eq!(report.service.count, 0);
     }
 }

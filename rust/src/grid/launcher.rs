@@ -112,6 +112,11 @@ pub struct LaunchConfig {
     pub simulate_latency: bool,
     /// Execution backend for the block sweep.
     pub backend: BackendKind,
+    /// Opt-in per-lane profiling: busy-ns / chunks-pulled /
+    /// blocks-processed tallies per lane ([`LaunchStats::lanes`]).
+    /// Off by default — the disabled path costs one untaken branch
+    /// per work chunk (thousands of blocks), nothing per block.
+    pub profile_lanes: bool,
 }
 
 impl LaunchConfig {
@@ -123,8 +128,21 @@ impl LaunchConfig {
             max_concurrent_launches: 32,
             simulate_latency: false,
             backend: BackendKind::Parallel,
+            profile_lanes: false,
         }
     }
+}
+
+/// Per-lane work tallies from one launch (opt-in via
+/// [`LaunchConfig::profile_lanes`]). `busy_ns` is time spent inside
+/// `sweep_range` — excludes the chunk-cursor handoff, so the lane
+/// imbalance ratio reflects work distribution, not scheduling jitter.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LaneProfile {
+    pub lane: u64,
+    pub busy_ns: u64,
+    pub chunks_pulled: u64,
+    pub blocks_processed: u64,
 }
 
 /// Exact accounting of one launch (all passes).
@@ -143,6 +161,10 @@ pub struct LaunchStats {
     /// Modeled launch-latency component (wall time only when
     /// [`LaunchConfig::simulate_latency`] is set).
     pub launch_overhead: Duration,
+    /// Per-lane profile — empty unless [`LaunchConfig::profile_lanes`]
+    /// was set. Not part of [`LaunchStats::accounting`]: lane timings
+    /// are measurements, not determinism contracts.
+    pub lanes: Vec<LaneProfile>,
 }
 
 impl LaunchStats {
@@ -166,6 +188,22 @@ impl LaunchStats {
             return 1.0;
         }
         self.blocks_mapped as f64 / self.blocks_launched as f64
+    }
+
+    /// Lane-imbalance ratio: max lane busy time over mean lane busy
+    /// time (1.0 = perfectly balanced). `None` without a lane profile
+    /// or when no lane did measurable work.
+    pub fn lane_imbalance(&self) -> Option<f64> {
+        if self.lanes.is_empty() {
+            return None;
+        }
+        let max = self.lanes.iter().map(|l| l.busy_ns).max().unwrap_or(0);
+        let sum: u64 = self.lanes.iter().map(|l| l.busy_ns).sum();
+        if sum == 0 {
+            return None;
+        }
+        let mean = sum as f64 / self.lanes.len() as f64;
+        Some(max as f64 / mean)
     }
 
     /// The deterministic accounting fields (everything except the
@@ -258,9 +296,20 @@ impl Launcher {
         }
         offsets.push(total);
 
-        let (blocks_filler, blocks_mapped, predicated) = match self.config.backend {
+        let ((blocks_filler, blocks_mapped, predicated), lanes) = match self.config.backend {
             BackendKind::Serial => {
-                sweep_range(map, nb, &grids, &offsets, 0, total, 0, &kernel)
+                let sweep_t0 = self.config.profile_lanes.then(Instant::now);
+                let acc = sweep_range(map, nb, &grids, &offsets, 0, total, 0, &kernel);
+                let lanes = match sweep_t0 {
+                    Some(t) => vec![LaneProfile {
+                        lane: 0,
+                        busy_ns: t.elapsed().as_nanos() as u64,
+                        chunks_pulled: 1,
+                        blocks_processed: total,
+                    }],
+                    None => Vec::new(),
+                };
+                (acc, lanes)
             }
             BackendKind::Parallel | BackendKind::Pjrt => {
                 self.sweep_pool(map, nb, &grids, &offsets, total, &kernel)
@@ -287,6 +336,7 @@ impl Launcher {
             threads_predicated_off: predicated,
             wall: t0.elapsed(),
             launch_overhead: overhead,
+            lanes,
         }
     }
 
@@ -307,31 +357,47 @@ impl Launcher {
         offsets: &[u64],
         total: u64,
         kernel: &K,
-    ) -> (u64, u64, u64)
+    ) -> ((u64, u64, u64), Vec<LaneProfile>)
     where
         K: Fn(usize, &MappedBlock) -> u64 + Send + Sync,
     {
         if total == 0 {
-            return (0, 0, 0);
+            return ((0, 0, 0), Vec::new());
         }
         let chunk = (self.config.chunk_blocks.max(1) as u64)
             .min((total / self.workers as u64).max(1));
         let n_chunks = total.div_ceil(chunk);
         let lanes = self.workers.min(n_chunks as usize);
         let cursor = AtomicU64::new(lanes as u64);
+        let profile = self.config.profile_lanes;
         let mut acc = (0u64, 0u64, 0u64);
+        let mut profiles = Vec::new();
         std::thread::scope(|scope| {
             let handles: Vec<_> = (0..lanes)
                 .map(|lane| {
                     let cursor = &cursor;
                     scope.spawn(move || {
                         let mut lane_acc = (0u64, 0u64, 0u64);
+                        let mut prof = LaneProfile {
+                            lane: lane as u64,
+                            ..LaneProfile::default()
+                        };
                         let mut c = lane as u64;
                         loop {
                             let lo = c * chunk;
                             let hi = total.min(lo + chunk);
+                            // Time only the sweep itself, and only when
+                            // profiling: the disabled path pays one
+                            // untaken branch per multi-thousand-block
+                            // chunk, not per block.
+                            let chunk_t0 = profile.then(Instant::now);
                             let (f, m, p) =
                                 sweep_range(map, nb, grids, offsets, lo, hi, lane, kernel);
+                            if let Some(t) = chunk_t0 {
+                                prof.busy_ns += t.elapsed().as_nanos() as u64;
+                                prof.chunks_pulled += 1;
+                                prof.blocks_processed += hi - lo;
+                            }
                             lane_acc.0 += f;
                             lane_acc.1 += m;
                             lane_acc.2 += p;
@@ -340,18 +406,21 @@ impl Launcher {
                                 break;
                             }
                         }
-                        lane_acc
+                        (lane_acc, prof)
                     })
                 })
                 .collect();
             for h in handles {
-                let (f, m, p) = h.join().expect("launch lane panicked");
+                let ((f, m, p), prof) = h.join().expect("launch lane panicked");
                 acc.0 += f;
                 acc.1 += m;
                 acc.2 += p;
+                if profile {
+                    profiles.push(prof);
+                }
             }
         });
-        acc
+        (acc, profiles)
     }
 }
 
@@ -568,6 +637,74 @@ mod tests {
         cfg.backend = BackendKind::Parallel;
         let parallel = Launcher::with_workers(3, cfg).launch(&map, 5, |_l, _b| 0);
         assert_eq!(serial.accounting(), parallel.accounting());
+    }
+
+    #[test]
+    fn lane_profiling_is_off_by_default() {
+        let l = launcher(8, 2);
+        assert!(!l.config.profile_lanes);
+        let stats = l.launch(&adapt(Lambda2Map), 64, |_lane, _b| 0);
+        assert!(stats.lanes.is_empty());
+        assert_eq!(stats.lane_imbalance(), None);
+    }
+
+    #[test]
+    fn lane_profiling_tallies_cover_the_launch() {
+        let mut cfg = LaunchConfig::new(BlockShape::new(4, 2));
+        cfg.launch_latency = Duration::ZERO;
+        cfg.profile_lanes = true;
+        cfg.chunk_blocks = 64; // force many chunks
+        let l = Launcher::with_workers(4, cfg);
+        let stats = l.launch(&adapt(BoundingBox2), 48, |_lane, b| {
+            // A little work per block so busy_ns registers.
+            black_box_sum(b.data[0] + b.data[1])
+        });
+        assert!(!stats.lanes.is_empty());
+        assert!(stats.lanes.len() <= l.workers());
+        let blocks: u64 = stats.lanes.iter().map(|p| p.blocks_processed).sum();
+        assert_eq!(blocks, stats.blocks_launched, "every block attributed");
+        let chunks: u64 = stats.lanes.iter().map(|p| p.chunks_pulled).sum();
+        assert!(chunks >= stats.lanes.len() as u64, "each lane pulled >= 1");
+        let busy: u64 = stats.lanes.iter().map(|p| p.busy_ns).sum();
+        assert!(busy > 0, "lanes did measurable work");
+        // Lane ids are the stable kernel lane indices, in order.
+        for (i, p) in stats.lanes.iter().enumerate() {
+            assert_eq!(p.lane, i as u64);
+        }
+        let r = stats.lane_imbalance().expect("profiled launch has a ratio");
+        assert!(r >= 1.0, "max/mean is at least 1: {r}");
+    }
+
+    fn black_box_sum(x: u64) -> u64 {
+        // Cheap data-dependent result the optimizer cannot discard.
+        std::hint::black_box(x) % 2
+    }
+
+    #[test]
+    fn serial_profile_is_one_lane_covering_everything() {
+        let mut cfg = LaunchConfig::new(BlockShape::new(4, 2));
+        cfg.launch_latency = Duration::ZERO;
+        cfg.backend = BackendKind::Serial;
+        cfg.profile_lanes = true;
+        let l = Launcher::with_workers(1, cfg);
+        let stats = l.launch(&adapt(Lambda2Map), 64, |_lane, _b| 0);
+        assert_eq!(stats.lanes.len(), 1);
+        assert_eq!(stats.lanes[0].lane, 0);
+        assert_eq!(stats.lanes[0].chunks_pulled, 1);
+        assert_eq!(stats.lanes[0].blocks_processed, stats.blocks_launched);
+        let r = stats.lane_imbalance().unwrap();
+        assert!((r - 1.0).abs() < 1e-12, "single lane is balanced: {r}");
+    }
+
+    #[test]
+    fn profiling_does_not_change_accounting() {
+        let kernel = |_lane: usize, b: &MappedBlock| u64::from(b.data[0] == b.data[1]);
+        let mut cfg = LaunchConfig::new(BlockShape::new(4, 2));
+        cfg.launch_latency = Duration::ZERO;
+        let plain = Launcher::with_workers(4, cfg.clone()).launch(&adapt(RiesMap), 32, kernel);
+        cfg.profile_lanes = true;
+        let profiled = Launcher::with_workers(4, cfg).launch(&adapt(RiesMap), 32, kernel);
+        assert_eq!(plain.accounting(), profiled.accounting());
     }
 
     #[test]

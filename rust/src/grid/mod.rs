@@ -21,7 +21,7 @@ pub mod occupancy;
 
 use crate::simplex::block_m::{BlockM, M_MAX};
 
-pub use launcher::{BackendKind, LaunchConfig, LaunchStats, Launcher};
+pub use launcher::{BackendKind, LaneProfile, LaunchConfig, LaunchStats, Launcher};
 pub use occupancy::OccupancyReport;
 
 /// Threads per block side (ρ in the paper; blocks are ρ^m cubes —

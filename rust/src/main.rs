@@ -9,6 +9,11 @@
 //!             --workload gasket runs the Sierpiński-gasket CA)
 //!   serve    --addr 127.0.0.1:7070            JSON-lines job server
 //!   sweep    --workload edm --nb 64           all maps side by side
+//!   obs      snapshot|watch|bench-trajectory  observability client:
+//!            snapshot/watch pull `{"cmd":"metrics"}` from a running
+//!            server (--format prometheus for text exposition);
+//!            bench-trajectory reports throughput across accumulated
+//!            BENCH_*.json files in --dir
 //!
 //! `--help` prints the options.
 
@@ -19,7 +24,9 @@ use simplexmap::coordinator::server::Server;
 use simplexmap::coordinator::{Backend, Job, Scheduler, WorkloadKind};
 use simplexmap::maps::{map2_by_name, map3_by_name, MThreadMap as _, ThreadMap};
 use simplexmap::runtime::{artifact, ExecutorService};
+use simplexmap::util::benchkit;
 use simplexmap::util::cli::{flag, opt, Args};
+use simplexmap::util::json::Json;
 
 fn main() {
     let specs = vec![
@@ -41,6 +48,10 @@ fn main() {
         opt("betas", "comma-separated arity values", Some("2,4,8,16,32")),
         opt("horizon", "n0 scan horizon", Some("1099511627776")),
         opt("addr", "server bind address", Some("127.0.0.1:7070")),
+        opt("dir", "directory scanned for BENCH_*.json (obs)", Some(".")),
+        opt("interval", "seconds between obs watch samples", Some("2")),
+        opt("count", "obs watch samples before exit (0 = forever)", Some("0")),
+        opt("format", "metrics exposition: json|prometheus", Some("json")),
         opt("workers", "worker threads", None),
         opt("artifacts", "artifacts directory", Some("artifacts")),
         opt("config", "TOML config file (CLI flags take precedence)", None),
@@ -58,7 +69,9 @@ fn main() {
     };
     if args.flag("help") || args.positional().is_empty() {
         eprintln!("{}", args.usage());
-        eprintln!("subcommands: report <table> | show | search | verify | run | sweep | serve");
+        eprintln!(
+            "subcommands: report <table> | show | search | verify | run | sweep | serve | obs"
+        );
         std::process::exit(if args.flag("help") { 0 } else { 2 });
     }
     if let Err(e) = dispatch(&args) {
@@ -76,6 +89,7 @@ fn dispatch(args: &Args) -> Result<(), String> {
         "run" => run(args, false),
         "sweep" => run(args, true),
         "serve" => serve(args),
+        "obs" => obs(args),
         other => Err(format!("unknown subcommand '{other}'")),
     }
 }
@@ -403,6 +417,108 @@ fn run(args: &Args, sweep: bool) -> Result<(), String> {
         }
     }
     Ok(())
+}
+
+/// Observability client: pull metrics from a running server, or report
+/// the offline perf trajectory from accumulated bench exports.
+fn obs(args: &Args) -> Result<(), String> {
+    let action = args
+        .positional()
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("snapshot");
+    match action {
+        "snapshot" => {
+            println!("{}", obs_fetch(args)?);
+            Ok(())
+        }
+        "watch" => {
+            let interval: f64 = args
+                .get("interval")
+                .unwrap()
+                .parse()
+                .map_err(|_| "bad --interval (seconds)".to_string())?;
+            let count = args.get_u64("count").map_err(|e| e.to_string())?.unwrap();
+            let mut done = 0u64;
+            loop {
+                match obs_fetch(args) {
+                    Ok(text) => println!("{text}"),
+                    Err(e) => eprintln!("obs: {e}"),
+                }
+                done += 1;
+                if count > 0 && done >= count {
+                    return Ok(());
+                }
+                std::thread::sleep(std::time::Duration::from_secs_f64(interval.max(0.1)));
+            }
+        }
+        "bench-trajectory" => {
+            let dir = args.get("dir").unwrap();
+            let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+                .map_err(|e| format!("cannot read {dir}: {e}"))?
+                .filter_map(|entry| entry.ok())
+                .map(|entry| entry.path())
+                .filter(|p| {
+                    p.file_name()
+                        .and_then(|n| n.to_str())
+                        .is_some_and(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+                })
+                .collect();
+            files.sort();
+            let snapshots: Vec<(String, String)> = files
+                .iter()
+                .filter_map(|p| {
+                    let label = p.file_name()?.to_str()?.to_string();
+                    std::fs::read_to_string(p).ok().map(|text| (label, text))
+                })
+                .collect();
+            // An empty directory is a state, not an error: the report
+            // says how to produce snapshots and we exit 0.
+            print!("{}", benchkit::trajectory_report(&snapshots));
+            Ok(())
+        }
+        other => Err(format!(
+            "unknown obs action '{other}' (snapshot|watch|bench-trajectory)"
+        )),
+    }
+}
+
+/// One metrics request against `--addr`, rendered per `--format`.
+fn obs_fetch(args: &Args) -> Result<String, String> {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = args.get("addr").unwrap();
+    let format = args.get("format").unwrap().to_string();
+    let stream =
+        std::net::TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let mut writer = stream.try_clone().map_err(|e| e.to_string())?;
+    let req = if format == "prometheus" {
+        "{\"cmd\":\"metrics\",\"format\":\"prometheus\"}\n"
+    } else {
+        "{\"cmd\":\"metrics\"}\n"
+    };
+    writer.write_all(req.as_bytes()).map_err(|e| e.to_string())?;
+    writer.flush().map_err(|e| e.to_string())?;
+    let mut line = String::new();
+    BufReader::new(stream)
+        .read_line(&mut line)
+        .map_err(|e| e.to_string())?;
+    let reply =
+        simplexmap::util::json::parse(line.trim()).map_err(|e| format!("bad reply: {e}"))?;
+    if reply.get("ok").and_then(Json::as_bool) != Some(true) {
+        return Err(format!("server refused metrics request: {}", line.trim()));
+    }
+    if format == "prometheus" {
+        Ok(reply
+            .get("text")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string())
+    } else {
+        Ok(reply
+            .get("metrics")
+            .map(Json::to_string_compact)
+            .unwrap_or_default())
+    }
 }
 
 fn serve(args: &Args) -> Result<(), String> {

@@ -248,6 +248,57 @@ impl BenchDelta {
     }
 }
 
+/// Multi-snapshot perf trajectory: one row per benchmark name showing
+/// first/last throughput and their ratio across labelled JSONL
+/// snapshots (oldest first — the `obs bench-trajectory` CLI passes
+/// `BENCH_*.json` files sorted by name). Pure on `(label, content)`
+/// pairs so it is testable without a filesystem; an empty input
+/// answers with guidance instead of an empty table.
+pub fn trajectory_report(snapshots: &[(String, String)]) -> String {
+    if snapshots.is_empty() {
+        return "no BENCH_*.json snapshots found — run `make bench-export` (or CI's bench \
+                job) to produce one\n"
+            .to_string();
+    }
+    let parsed: Vec<(&str, Vec<BenchRecord>)> = snapshots
+        .iter()
+        .map(|(label, text)| (label.as_str(), parse_trajectory(text)))
+        .collect();
+    let mut out = format!("perf trajectory over {} snapshot(s):\n", parsed.len());
+    for (label, recs) in &parsed {
+        out.push_str(&format!("  {label}: {} row(s)\n", recs.len()));
+    }
+    // Benchmark names in first-seen order across snapshots.
+    let mut names: Vec<&str> = Vec::new();
+    for (_, recs) in &parsed {
+        for r in recs {
+            if !names.iter().any(|n| *n == r.name) {
+                names.push(&r.name);
+            }
+        }
+    }
+    out.push('\n');
+    for name in names {
+        let series: Vec<f64> = parsed
+            .iter()
+            .filter_map(|(_, recs)| {
+                recs.iter()
+                    .find(|r| r.name == name)
+                    .map(|r| r.throughput_per_sec)
+            })
+            .collect();
+        let (first, last) = (series[0], *series.last().unwrap());
+        let ratio = if first > 0.0 { last / first } else { f64::NAN };
+        out.push_str(&format!(
+            "{name:<44} first {:>12}/s  last {:>12}/s  {ratio:>7.3}x over {} snapshot(s)\n",
+            fmt_count(first),
+            fmt_count(last),
+            series.len(),
+        ));
+    }
+    out
+}
+
 /// Join two trajectory files by benchmark name (rows present in both).
 /// Names only in the baseline (retired benches) or only in the current
 /// run (new benches) have no meaningful ratio and are omitted.
@@ -403,6 +454,67 @@ mod tests {
         assert!((y.ratio() - 3.0).abs() < 1e-12);
         assert!(!y.regressed(0.95));
         assert!(x.report_line().contains('x'));
+    }
+
+    #[test]
+    fn bench_json_env_exports_a_parseable_file() {
+        // Satellite regression for the offline `make bench-export`
+        // path: pointing SIMPLEXMAP_BENCH_JSON at a path must leave a
+        // parseable JSONL file behind. Other tests may bench while the
+        // var is set (lib tests share a process), so the assertion is
+        // containment, not an exact line count.
+        let path = std::env::temp_dir().join(format!(
+            "simplexmap_bench_export_env_{}.jsonl",
+            std::process::id()
+        ));
+        let path_str = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        std::env::set_var("SIMPLEXMAP_BENCH_JSON", &path_str);
+        quick().bench("env-export-check", 10, || {});
+        std::env::remove_var("SIMPLEXMAP_BENCH_JSON");
+        let text = std::fs::read_to_string(&path).expect("bench export must land");
+        let mut seen = false;
+        for line in text.lines() {
+            let j = crate::util::json::parse(line).expect("every line parses");
+            if j.get("name").and_then(Json::as_str) == Some("env-export-check") {
+                assert!(j.get("throughput_per_sec").unwrap().as_f64().is_some());
+                seen = true;
+            }
+        }
+        assert!(seen, "exported line missing from {text}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn trajectory_report_tracks_first_to_last_throughput() {
+        let snaps = vec![
+            (
+                "BENCH_pr1.json".to_string(),
+                format!("{}\n{}", line("a", 100.0, 0.01), line("b", 10.0, 0.1)),
+            ),
+            ("BENCH_pr2.json".to_string(), line("a", 150.0, 0.0066)),
+            (
+                "BENCH_pr3.json".to_string(),
+                format!("{}\n{}", line("a", 200.0, 0.005), line("b", 5.0, 0.2)),
+            ),
+        ];
+        let report = trajectory_report(&snaps);
+        assert!(report.contains("3 snapshot(s)"), "{report}");
+        assert!(report.contains("BENCH_pr2.json"), "{report}");
+        // "a" doubled (100 → 200), "b" halved (10 → 5).
+        let a_row = report.lines().find(|l| l.starts_with('a')).unwrap();
+        assert!(a_row.contains("2.000x"), "{a_row}");
+        assert!(a_row.contains("3 snapshot(s)"), "{a_row}");
+        let b_row = report.lines().find(|l| l.starts_with('b')).unwrap();
+        assert!(b_row.contains("0.500x"), "{b_row}");
+        assert!(b_row.contains("2 snapshot(s)"), "{b_row}");
+    }
+
+    #[test]
+    fn trajectory_report_on_no_snapshots_gives_guidance() {
+        let report = trajectory_report(&[]);
+        assert!(report.contains("no BENCH_*.json"), "{report}");
+        assert!(report.contains("make bench-export"), "{report}");
     }
 
     #[test]

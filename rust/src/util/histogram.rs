@@ -1,0 +1,390 @@
+//! Lock-free log-bucketed latency histogram.
+//!
+//! The value domain is `u64` nanoseconds. Buckets 0..32 are exact
+//! (1 ns each); every octave above that splits into 16 sub-buckets
+//! (`SUB_BITS = 4`), so the relative bucket width is at most 1/16
+//! (≤ 6.25%) everywhere — quantile estimates carry at most that
+//! relative error, and in practice much less because the walk
+//! interpolates linearly inside the landing bucket. The full `u64`
+//! range fits in [`N_BUCKETS`] = 976 buckets (~8 KB of atomics).
+//!
+//! Recording is a handful of relaxed atomic adds — no locks, safe from
+//! any thread, mergeable across histograms ([`Histogram::merge`]).
+//! Reads ([`Histogram::quantile_secs`], [`Histogram::to_json`]) snapshot
+//! the bucket array non-atomically: concurrent recording can tear a
+//! snapshot by a few samples, which is fine for metrics-grade
+//! reporting (quantiles within one snapshot stay mutually consistent
+//! because they share one snapshot).
+//!
+//! Bucket arithmetic (for `v ≥ 32`, with `exp = floor(log2 v)`):
+//!
+//! ```text
+//! index(v)  = (exp - 3)·16 + ((v >> (exp - 4)) & 15)
+//! bounds(i) = low = (16 + i%16) << (i/16 - 1),  width = 1 << (i/16 - 1)
+//! ```
+//!
+//! which is continuous with the exact region (`index(31) = 31`,
+//! `index(32) = 32`) and monotone in `v`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::json::Json;
+
+/// Sub-bucket resolution: each power-of-two octave splits into
+/// `2^SUB_BITS` buckets.
+pub const SUB_BITS: u32 = 4;
+const SUBS: usize = 1 << SUB_BITS;
+
+/// Total bucket count covering the full `u64` ns range:
+/// `index(u64::MAX) = (63 - 3)·16 + 15 = 975`.
+pub const N_BUCKETS: usize = 976;
+
+/// A mergeable, lock-free latency histogram over nanosecond values.
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    min_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            min_ns: AtomicU64::new(u64::MAX),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index for a nanosecond value. Monotone nondecreasing,
+    /// exact below 32, gapless (consecutive values differ by ≤ 1
+    /// bucket), and `< N_BUCKETS` for every `u64`.
+    pub fn bucket_index(ns: u64) -> usize {
+        if ns < 2 * SUBS as u64 {
+            return ns as usize;
+        }
+        let exp = 63 - ns.leading_zeros();
+        let sub = ((ns >> (exp - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+        (exp - SUB_BITS + 1) as usize * SUBS + sub
+    }
+
+    /// Half-open value range `[low, high)` covered by a bucket, in
+    /// `u128` because the top bucket's bound is exactly `2^64`.
+    pub fn bucket_bounds(idx: usize) -> (u128, u128) {
+        if idx < 2 * SUBS {
+            return (idx as u128, idx as u128 + 1);
+        }
+        let exp = (idx / SUBS) as u32 + SUB_BITS - 1;
+        let sub = (idx % SUBS) as u128;
+        let low = (SUBS as u128 + sub) << (exp - SUB_BITS);
+        (low, low + (1u128 << (exp - SUB_BITS)))
+    }
+
+    /// Record a duration in seconds. Negative and NaN inputs land in
+    /// bucket 0 (the float→int cast saturates); values beyond the u64
+    /// ns range clamp to the top bucket.
+    pub fn record_secs(&self, secs: f64) {
+        self.record_ns((secs * 1e9) as u64);
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[Self::bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.min_ns.fetch_min(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn mean_secs(&self) -> Option<f64> {
+        let n = self.count();
+        (n > 0).then(|| self.sum_secs() / n as f64)
+    }
+
+    pub fn min_secs(&self) -> Option<f64> {
+        (self.count() > 0).then(|| self.min_ns.load(Ordering::Relaxed) as f64 / 1e9)
+    }
+
+    pub fn max_secs(&self) -> Option<f64> {
+        (self.count() > 0).then(|| self.max_ns.load(Ordering::Relaxed) as f64 / 1e9)
+    }
+
+    /// Fold another histogram's tallies into this one.
+    pub fn merge(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let c = theirs.load(Ordering::Relaxed);
+            if c > 0 {
+                mine.fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_ns
+            .fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        // A fresh histogram's min is u64::MAX and max is 0 — both
+        // merge as no-ops, so empty sources need no special case.
+        self.min_ns
+            .fetch_min(other.min_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_ns
+            .fetch_max(other.max_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> (Vec<u64>, u64) {
+        let counts: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let n = counts.iter().sum();
+        (counts, n)
+    }
+
+    fn quantile_from(counts: &[u64], n: u64, q: f64) -> f64 {
+        let t = q.clamp(0.0, 1.0) * (n - 1) as f64;
+        let mut cum = 0u64;
+        for (idx, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if (cum + c) as f64 > t {
+                let (lo, hi) = Self::bucket_bounds(idx);
+                // Midpoint-of-rank interpolation inside the bucket:
+                // a single-sample bucket reports its center.
+                let pos = ((t - cum as f64 + 0.5) / c as f64).clamp(0.0, 1.0);
+                return (lo as f64 + pos * (hi - lo) as f64) / 1e9;
+            }
+            cum += c;
+        }
+        // Unreachable when n came from the same snapshot; a defensive
+        // answer for a zero snapshot.
+        0.0
+    }
+
+    /// Estimated quantile in seconds (`q` in [0, 1]); `None` when
+    /// empty. Error is bounded by the ≤ 1/16 relative bucket width.
+    pub fn quantile_secs(&self, q: f64) -> Option<f64> {
+        let (counts, n) = self.snapshot();
+        (n > 0).then(|| Self::quantile_from(&counts, n, q))
+    }
+
+    /// `[p50, p90, p99, p99.9]` in seconds from a single snapshot (so
+    /// the four are mutually monotone even under concurrent writes);
+    /// `None` when empty.
+    pub fn summary_quantiles_secs(&self) -> Option<[f64; 4]> {
+        let (counts, n) = self.snapshot();
+        if n == 0 {
+            return None;
+        }
+        Some([0.5, 0.9, 0.99, 0.999].map(|q| Self::quantile_from(&counts, n, q)))
+    }
+
+    /// Metrics-exposition JSON: count plus mean/quantiles/max in
+    /// seconds; the latter are `null` when the histogram is empty.
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::from).unwrap_or(Json::Null);
+        let qs = self.summary_quantiles_secs();
+        let at = |i: usize| opt(qs.map(|q| q[i]));
+        Json::obj(vec![
+            ("count", self.count().into()),
+            ("mean_secs", opt(self.mean_secs())),
+            ("p50_secs", at(0)),
+            ("p90_secs", at(1)),
+            ("p99_secs", at(2)),
+            ("p999_secs", at(3)),
+            ("min_secs", opt(self.min_secs())),
+            ("max_secs", opt(self.max_secs())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::stats::percentile_sorted;
+
+    #[test]
+    fn bucket_index_is_exact_below_32() {
+        for v in 0..32u64 {
+            assert_eq!(Histogram::bucket_index(v), v as usize);
+            let (lo, hi) = Histogram::bucket_bounds(v as usize);
+            assert_eq!((lo, hi), (v as u128, v as u128 + 1));
+        }
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_gapless_and_contained() {
+        let mut prev = 0usize;
+        for v in 0..200_000u64 {
+            let idx = Histogram::bucket_index(v);
+            assert!(idx >= prev, "index regressed at {v}");
+            assert!(idx - prev <= 1, "index gap at {v}");
+            let (lo, hi) = Histogram::bucket_bounds(idx);
+            assert!(lo <= v as u128 && (v as u128) < hi, "{v} not in [{lo},{hi})");
+            prev = idx;
+        }
+        // Spot-check the extremes and the octave seams.
+        assert_eq!(Histogram::bucket_index(31), 31);
+        assert_eq!(Histogram::bucket_index(32), 32);
+        assert_eq!(Histogram::bucket_index(u64::MAX), N_BUCKETS - 1);
+        let (lo, hi) = Histogram::bucket_bounds(N_BUCKETS - 1);
+        assert!(lo <= u64::MAX as u128 && (u64::MAX as u128) < hi);
+        assert_eq!(hi, 1u128 << 64);
+    }
+
+    #[test]
+    fn bucket_relative_width_is_bounded() {
+        for idx in 32..N_BUCKETS {
+            let (lo, hi) = Histogram::bucket_bounds(idx);
+            assert!(
+                (hi - lo) * 16 <= lo,
+                "bucket {idx} wider than 1/16: [{lo},{hi})"
+            );
+        }
+    }
+
+    #[test]
+    fn random_values_land_in_their_bucket() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        for _ in 0..100_000 {
+            let v = rng.next_u64() >> (rng.next_u64() % 60);
+            let (lo, hi) = Histogram::bucket_bounds(Histogram::bucket_index(v));
+            assert!(lo <= v as u128 && (v as u128) < hi);
+        }
+    }
+
+    #[test]
+    fn count_sum_min_max_track_samples() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        for ns in [100u64, 5_000, 42] {
+            h.record_ns(ns);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.sum_secs() - 5_142e-9).abs() < 1e-15);
+        assert_eq!(h.min_secs(), Some(42e-9));
+        assert_eq!(h.max_secs(), Some(5_000e-9));
+        assert!((h.mean_secs().unwrap() - 1_714e-9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn record_secs_saturates_bad_inputs() {
+        let h = Histogram::new();
+        h.record_secs(-1.0); // negative → 0 ns
+        h.record_secs(f64::NAN); // NaN → 0 ns
+        h.record_secs(1e300); // overflow → top bucket
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.min_secs(), Some(0.0));
+        assert_eq!(h.max_secs(), Some(u64::MAX as f64 / 1e9));
+    }
+
+    #[test]
+    fn quantiles_match_sorted_oracle_within_bucket_error() {
+        // Log-uniform-ish samples spanning 100 ns .. 1 s: the regime
+        // where log bucketing must hold its ≤ 1/16 relative error.
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let h = Histogram::new();
+        let mut samples = Vec::new();
+        for _ in 0..20_000 {
+            let u = rng.gen_f64();
+            let ns = (100.0f64 * (1e9f64 / 100.0).powf(u)) as u64;
+            h.record_ns(ns);
+            samples.push(ns as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let est = h.quantile_secs(q).unwrap() * 1e9;
+            let oracle = percentile_sorted(&samples, q);
+            let rel = (est - oracle).abs() / oracle.max(1.0);
+            assert!(rel < 0.07, "q={q}: est={est} oracle={oracle} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn summary_quantiles_are_monotone() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let h = Histogram::new();
+        for _ in 0..5_000 {
+            h.record_ns(rng.next_u64() % 10_000_000);
+        }
+        let [p50, p90, p99, p999] = h.summary_quantiles_secs().unwrap();
+        assert!(p50 <= p90 && p90 <= p99 && p99 <= p999);
+    }
+
+    #[test]
+    fn merge_matches_recording_everything_in_one() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let (a, b, all) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for i in 0..4_000u64 {
+            let ns = rng.next_u64() % 1_000_000;
+            let target = if i % 2 == 0 { &a } else { &b };
+            target.record_ns(ns);
+            all.record_ns(ns);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.sum_secs(), all.sum_secs());
+        assert_eq!(a.min_secs(), all.min_secs());
+        assert_eq!(a.max_secs(), all.max_secs());
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            assert_eq!(a.quantile_secs(q), all.quantile_secs(q));
+        }
+    }
+
+    #[test]
+    fn merging_an_empty_histogram_changes_nothing() {
+        let (a, empty) = (Histogram::new(), Histogram::new());
+        a.record_ns(1234);
+        a.merge(&empty);
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.min_secs(), Some(1234e-9));
+        assert_eq!(a.max_secs(), Some(1234e-9));
+    }
+
+    #[test]
+    fn empty_histogram_reports_none_and_null_json() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_secs(0.5), None);
+        assert_eq!(h.summary_quantiles_secs(), None);
+        assert_eq!(h.mean_secs(), None);
+        let j = h.to_json();
+        assert_eq!(j.get("count").and_then(Json::as_u64), Some(0));
+        assert_eq!(j.get("p50_secs"), Some(&Json::Null));
+        assert_eq!(j.get("p999_secs"), Some(&Json::Null));
+        // And the whole thing round-trips through the parser.
+        let text = j.to_string_compact();
+        assert_eq!(crate::util::json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn constant_samples_quantile_within_bucket_width() {
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record_ns(1_000_000); // 1 ms
+        }
+        for q in [0.0, 0.5, 1.0] {
+            let est = h.quantile_secs(q).unwrap();
+            let rel = (est - 1e-3).abs() / 1e-3;
+            assert!(rel <= 1.0 / 16.0, "q={q}: est={est} rel={rel}");
+        }
+        let j = h.to_json();
+        assert_eq!(j.get("count").and_then(Json::as_u64), Some(100));
+        assert!(j.get("p50_secs").and_then(Json::as_f64).is_some());
+    }
+}

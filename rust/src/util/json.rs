@@ -169,6 +169,17 @@ fn write_value(v: &Json, out: &mut String) {
 
 fn write_string(s: &str, out: &mut String) {
     out.push('"');
+    escape_into(s, out);
+    out.push('"');
+}
+
+/// Append the JSON string-escaped form of `s` (without surrounding
+/// quotes) to `out`. This is the single escaping routine for every
+/// string the crate emits — the JSON writer above, JSONL log lines,
+/// and the Prometheus exposition (whose label-value escapes, `\\`,
+/// `\"` and `\n`, are a subset of JSON's) all route through it so no
+/// caller hand-rolls `format!` escaping.
+pub fn escape_into(s: &str, out: &mut String) {
     for c in s.chars() {
         match c {
             '"' => out.push_str("\\\""),
@@ -180,7 +191,13 @@ fn write_string(s: &str, out: &mut String) {
             c => out.push(c),
         }
     }
-    out.push('"');
+}
+
+/// [`escape_into`] returning a fresh `String`.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    escape_into(s, &mut out);
+    out
 }
 
 /// Parse error with byte offset for diagnostics.
@@ -386,6 +403,21 @@ impl<'a> Parser<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn escape_handles_quotes_backslashes_and_controls() {
+        assert_eq!(escape(r#"lam"bda\2"#), r#"lam\"bda\\2"#);
+        assert_eq!(escape("a\nb\tc"), "a\\nb\\tc");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+        assert_eq!(escape("plain"), "plain");
+        // The writer and the helper must agree: a Json::Str built from
+        // the raw string parses back to the same raw string.
+        let raw = "q\"uote\\slash\nnl";
+        let v = Json::Str(raw.to_string());
+        let emitted = v.to_string_compact();
+        assert_eq!(emitted, format!("\"{}\"", escape(raw)));
+        assert_eq!(parse(&emitted).unwrap().as_str().unwrap(), raw);
+    }
 
     #[test]
     fn roundtrip_scalar_values() {

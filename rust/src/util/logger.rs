@@ -3,10 +3,18 @@
 //! Level is taken from `SIMPLEXMAP_LOG` (error|warn|info|debug|trace),
 //! defaulting to `info`. Timestamps are monotonic seconds since process
 //! start — good enough for correlating coordinator events.
+//!
+//! Output format is selected by `SIMPLEXMAP_LOG_FORMAT`: the default
+//! `text` keeps the human `[  t LEVEL target] msg` lines; `json` emits
+//! structured JSONL — one `{"level","target","ts","msg"}` object per
+//! line, every string escaped through [`crate::util::json`] so targets
+//! and messages containing quotes or backslashes stay parseable.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
@@ -38,10 +46,40 @@ impl Level {
             Level::Trace => "TRACE",
         }
     }
+
+    /// Lowercase name for structured output (no padding).
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+}
+
+/// Log line rendering: human text (default) or one-object-per-line
+/// JSON for machine consumption.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LogFormat {
+    Text = 0,
+    Json = 1,
+}
+
+impl LogFormat {
+    pub fn parse(s: &str) -> Option<LogFormat> {
+        match s.to_ascii_lowercase().as_str() {
+            "text" => Some(LogFormat::Text),
+            "json" => Some(LogFormat::Json),
+            _ => None,
+        }
+    }
 }
 
 static START: OnceLock<Instant> = OnceLock::new();
 static LEVEL: OnceLock<AtomicU8> = OnceLock::new();
+static FORMAT: OnceLock<AtomicU8> = OnceLock::new();
 
 fn start() -> &'static Instant {
     START.get_or_init(Instant::now)
@@ -75,10 +113,47 @@ pub fn enabled(l: Level) -> bool {
     l <= level()
 }
 
+fn format_cell() -> &'static AtomicU8 {
+    FORMAT.get_or_init(|| {
+        let f = std::env::var("SIMPLEXMAP_LOG_FORMAT")
+            .ok()
+            .and_then(|s| LogFormat::parse(&s))
+            .unwrap_or(LogFormat::Text);
+        AtomicU8::new(f as u8)
+    })
+}
+
+pub fn set_format(f: LogFormat) {
+    format_cell().store(f as u8, Ordering::SeqCst);
+}
+
+pub fn format() -> LogFormat {
+    match format_cell().load(Ordering::SeqCst) {
+        1 => LogFormat::Json,
+        _ => LogFormat::Text,
+    }
+}
+
+/// Render one structured JSONL record. Pure (no clock, no I/O) so the
+/// escaping behaviour is unit-testable; all strings pass through the
+/// [`crate::util::json`] writer.
+pub fn json_line(l: Level, target: &str, ts: f64, msg: &str) -> String {
+    Json::obj(vec![
+        ("level", l.name().into()),
+        ("target", target.into()),
+        ("ts", ts.into()),
+        ("msg", msg.into()),
+    ])
+    .to_string_compact()
+}
+
 pub fn log(l: Level, target: &str, msg: &str) {
     if enabled(l) {
         let t = start().elapsed().as_secs_f64();
-        eprintln!("[{t:9.3} {} {target}] {msg}", l.tag());
+        match format() {
+            LogFormat::Text => eprintln!("[{t:9.3} {} {target}] {msg}", l.tag()),
+            LogFormat::Json => eprintln!("{}", json_line(l, target, t, msg)),
+        }
     }
 }
 
@@ -128,5 +203,32 @@ mod tests {
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
         set_level(Level::Info);
+    }
+
+    #[test]
+    fn log_format_parses() {
+        assert_eq!(LogFormat::parse("json"), Some(LogFormat::Json));
+        assert_eq!(LogFormat::parse("TEXT"), Some(LogFormat::Text));
+        assert_eq!(LogFormat::parse("yaml"), None);
+    }
+
+    #[test]
+    fn json_line_escapes_quotes_and_backslashes() {
+        // Regression for the satellite requirement: a map name like
+        // `lam"bda\2` in a log message must survive the JSON writer.
+        let line = json_line(Level::Info, r#"sched"uler\x"#, 1.25, r#"map lam"bda\2 resolved"#);
+        let v = crate::util::json::parse(&line).expect("log line must be valid JSON");
+        assert_eq!(v.get("level").and_then(crate::util::json::Json::as_str), Some("info"));
+        assert_eq!(
+            v.get("target").and_then(crate::util::json::Json::as_str),
+            Some(r#"sched"uler\x"#)
+        );
+        assert_eq!(v.get("ts").and_then(crate::util::json::Json::as_f64), Some(1.25));
+        assert_eq!(
+            v.get("msg").and_then(crate::util::json::Json::as_str),
+            Some(r#"map lam"bda\2 resolved"#)
+        );
+        // One object per line: no embedded newlines.
+        assert!(!line.contains('\n'));
     }
 }

@@ -10,6 +10,7 @@
 pub mod benchkit;
 pub mod cli;
 pub mod config;
+pub mod histogram;
 pub mod isqrt;
 pub mod json;
 pub mod logger;

@@ -3,6 +3,11 @@
 //! histogram, and throughput formatting.
 
 /// Summary statistics over a sample of f64 measurements.
+///
+/// The honest zero-sample representation is [`Summary::empty`]:
+/// `count = 0` with NaN statistics (so `empty() != empty()` under
+/// `PartialEq` — compare `count` when emptiness is the question) that
+/// serialize as `null` through [`Summary::to_json`].
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
     pub count: usize,
@@ -13,6 +18,7 @@ pub struct Summary {
     pub p50: f64,
     pub p90: f64,
     pub p99: f64,
+    pub p999: f64,
 }
 
 impl Summary {
@@ -39,7 +45,44 @@ impl Summary {
             p50: percentile_sorted(&sorted, 0.50),
             p90: percentile_sorted(&sorted, 0.90),
             p99: percentile_sorted(&sorted, 0.99),
+            p999: percentile_sorted(&sorted, 0.999),
         })
+    }
+
+    /// The zero-sample summary: `count = 0`, every statistic NaN.
+    /// Replaces the old pattern of faking a `[0.0]` sample when a run
+    /// completed nothing — zero completions now report as zero.
+    pub fn empty() -> Summary {
+        Summary {
+            count: 0,
+            mean: f64::NAN,
+            stddev: f64::NAN,
+            min: f64::NAN,
+            max: f64::NAN,
+            p50: f64::NAN,
+            p90: f64::NAN,
+            p99: f64::NAN,
+            p999: f64::NAN,
+        }
+    }
+
+    /// JSON with non-finite statistics (the empty summary, or inf from
+    /// degenerate inputs) rendered as `null` rather than as invalid
+    /// JSON literals.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let num = |v: f64| if v.is_finite() { v.into() } else { Json::Null };
+        Json::obj(vec![
+            ("count", self.count.into()),
+            ("mean", num(self.mean)),
+            ("stddev", num(self.stddev)),
+            ("min", num(self.min)),
+            ("max", num(self.max)),
+            ("p50", num(self.p50)),
+            ("p90", num(self.p90)),
+            ("p99", num(self.p99)),
+            ("p999", num(self.p999)),
+        ])
     }
 }
 
@@ -182,6 +225,40 @@ mod tests {
     #[test]
     fn summary_empty_is_none() {
         assert!(Summary::from_samples(&[]).is_none());
+    }
+
+    #[test]
+    fn summary_quantiles_are_ordered_including_p999() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i * 7 % 1000) as f64).collect();
+        let s = Summary::from_samples(&xs).unwrap();
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.p999);
+        assert!(s.p999 <= s.max);
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((s.p999 - percentile_sorted(&sorted, 0.999)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_reports_zero_count_and_null_json() {
+        use crate::util::json::Json;
+        let s = Summary::empty();
+        assert_eq!(s.count, 0);
+        assert!(s.p50.is_nan() && s.p999.is_nan() && s.mean.is_nan());
+        let j = s.to_json();
+        assert_eq!(j.get("count").and_then(Json::as_u64), Some(0));
+        assert_eq!(j.get("p50"), Some(&Json::Null));
+        assert_eq!(j.get("p999"), Some(&Json::Null));
+        let text = j.to_string_compact();
+        assert_eq!(crate::util::json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn nonempty_summary_json_is_numeric() {
+        use crate::util::json::Json;
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0]).unwrap();
+        let j = s.to_json();
+        assert_eq!(j.get("p50").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.get("count").and_then(Json::as_u64), Some(3));
     }
 
     #[test]

@@ -1,0 +1,116 @@
+//! End-to-end observability: spans recorded through the real job
+//! lifecycle (server dispatch → queue → scheduler → launcher lanes)
+//! and exported as Chrome trace JSON via the server's trace command.
+//!
+//! This suite owns the *global* span recorder (lib unit tests only
+//! touch local `SpanRecorder` instances): it runs in its own test
+//! binary, and every count assertion is `≥`/containment so tests in
+//! this process stay order-independent.
+
+use std::sync::Arc;
+
+use simplexmap::coordinator::server::{dispatch, ServerCtx};
+use simplexmap::coordinator::{span, QueueConfig, Scheduler};
+use simplexmap::util::json::{self, Json};
+
+#[test]
+fn spans_flow_from_jobs_to_the_server_trace_command() {
+    let mut sched = Scheduler::new(2, None);
+    sched.profile_lanes = true;
+    let ctx = ServerCtx::new(Arc::new(sched), QueueConfig::default());
+
+    // A client can switch recording on over the wire…
+    let r = dispatch(r#"{"cmd":"trace","enable":true}"#, &ctx);
+    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r}");
+    assert_eq!(r.get("enabled").and_then(Json::as_bool), Some(true));
+    assert!(span::global().enabled());
+
+    // …run jobs…
+    for req in [
+        r#"{"cmd":"run","workload":"edm","nb":8,"map":"lambda2"}"#,
+        r#"{"cmd":"run","workload":"collision","nb":8,"map":"bb"}"#,
+    ] {
+        let r = dispatch(req, &ctx);
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r}");
+    }
+
+    // …and pull the trace without restarting anything.
+    let r = dispatch(r#"{"cmd":"trace","n":512}"#, &ctx);
+    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r}");
+    assert!(r.get("spans").and_then(Json::as_u64).unwrap() >= 2);
+
+    // The document round-trips through our own parser, and the whole
+    // lifecycle is present: accept (server), queue_wait (queue), job
+    // (scheduler), fused_sweep and per-lane intervals (engine).
+    let text = r.get("trace").unwrap().to_string_compact();
+    let back = json::parse(&text).expect("chrome trace must be valid JSON");
+    let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let names: Vec<&str> = events
+        .iter()
+        .filter_map(|e| e.get("name").and_then(Json::as_str))
+        .collect();
+    for expected in ["accept", "queue_wait", "job", "fused_sweep"] {
+        assert!(names.contains(&expected), "missing span '{expected}' in {names:?}");
+    }
+    assert!(
+        names.iter().any(|n| n.starts_with("lane-")),
+        "profiled run must emit per-lane spans: {names:?}"
+    );
+
+    // Job spans carry their scenario; the sweep nests under a job.
+    let job = events
+        .iter()
+        .find(|e| e.get("name").and_then(Json::as_str) == Some("job"))
+        .unwrap();
+    assert_eq!(job.get("cat").and_then(Json::as_str), Some("scheduler"));
+    let args = job.get("args").unwrap();
+    assert!(args.get("workload").and_then(Json::as_str).is_some());
+    assert!(args.get("map").and_then(Json::as_str).is_some());
+    let job_ids: Vec<u64> = events
+        .iter()
+        .filter(|e| e.get("name").and_then(Json::as_str) == Some("job"))
+        .filter_map(|e| e.get("args").unwrap().get("span_id").and_then(Json::as_u64))
+        .collect();
+    let sweep_parent = events
+        .iter()
+        .find(|e| e.get("name").and_then(Json::as_str) == Some("fused_sweep"))
+        .and_then(|e| e.get("args").unwrap().get("parent").and_then(Json::as_u64))
+        .unwrap();
+    assert!(
+        job_ids.contains(&sweep_parent),
+        "fused_sweep parent {sweep_parent} not among job spans {job_ids:?}"
+    );
+
+    // Switch recording back off over the wire.
+    let r = dispatch(r#"{"cmd":"trace","enable":false}"#, &ctx);
+    assert_eq!(r.get("enabled").and_then(Json::as_bool), Some(false));
+    assert!(!span::global().enabled());
+}
+
+#[test]
+fn profiled_results_reach_clients_with_lane_fields() {
+    let mut sched = Scheduler::new(3, None);
+    sched.profile_lanes = true;
+    let ctx = ServerCtx::new(Arc::new(sched), QueueConfig::default());
+    let r = dispatch(
+        r#"{"cmd":"run","workload":"edm","nb":16,"map":"lambda2"}"#,
+        &ctx,
+    );
+    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r}");
+    let result = r.get("result").unwrap();
+    assert!(result.get("lane_imbalance").and_then(Json::as_f64).unwrap() >= 1.0);
+    let lanes = result.get("lane_profile").unwrap().as_arr().unwrap();
+    assert!(!lanes.is_empty());
+    let blocks: u64 = lanes
+        .iter()
+        .map(|l| l.get("blocks_processed").unwrap().as_u64().unwrap())
+        .sum();
+    assert_eq!(
+        Some(blocks),
+        result.get("blocks_launched").unwrap().as_u64(),
+        "lane tallies cover the launch"
+    );
+    // The wire result stays round-trippable.
+    assert!(json::parse(&r.to_string_compact()).is_ok());
+}

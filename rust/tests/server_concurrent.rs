@@ -78,6 +78,35 @@ fn concurrent_clients_execute_in_parallel_through_the_queue() {
         Some(total)
     );
 
+    // Phase histograms saw every job and report monotone quantiles.
+    for phase in ["queue_wait", "job_wall"] {
+        let p = snap.get(phase).unwrap();
+        assert_eq!(
+            p.get("count").unwrap().as_u64(),
+            Some(total),
+            "{phase} count"
+        );
+        let q = |k: &str| p.get(k).unwrap().as_f64().unwrap_or_else(|| panic!("{phase}.{k}"));
+        assert!(q("p50_secs") <= q("p90_secs"), "{phase}");
+        assert!(q("p90_secs") <= q("p99_secs"), "{phase}");
+        assert!(q("p99_secs") <= q("p999_secs"), "{phase}");
+        assert!(q("p50_secs") >= 0.0, "{phase}");
+    }
+
+    // Every (workload, map, backend) scenario the burst ran shows up as
+    // a labeled series: 6 clients × 3 jobs over 3 scenarios, default
+    // backend, 6 runs each.
+    let series = snap.get("series").unwrap();
+    for key in [
+        "edm/lambda2/parallel",
+        "collision/bb/parallel",
+        "trimatvec/rb/parallel",
+    ] {
+        let s = series.get(key).unwrap_or_else(|| panic!("missing series {key}"));
+        assert_eq!(s.get("count").unwrap().as_u64(), Some(6), "{key}");
+        assert!(s.get("p50_secs").unwrap().as_f64().is_some(), "{key}");
+    }
+
     // Shut the leader down cleanly.
     let conn = std::net::TcpStream::connect(addr).unwrap();
     let mut writer = conn.try_clone().unwrap();
