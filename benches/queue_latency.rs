@@ -1,0 +1,95 @@
+//! E19 — queue latency: enqueue→dequeue wait percentiles under a full
+//! burst, plus the end-to-end submit→drain throughput of the bounded
+//! job queue. These rows feed the gated bench-regression set so the
+//! serving tier's admission path cannot silently regress.
+//!
+//! Each burst uses a fresh scheduler + queue (fresh metrics), submits
+//! `BURST` small jobs back-to-back and drains them; the queue_wait
+//! p50/p99 from that burst's metrics snapshot are one sample each. The
+//! exported rows use `items_per_iter = 1`, so `throughput_per_sec =
+//! 1 / latency` and the regression gate's throughput-ratio check maps
+//! directly onto "latency must not grow".
+
+use std::sync::Arc;
+
+use simplexmap::coordinator::{Backend, Job, JobQueue, QueueConfig, Scheduler, WorkloadKind};
+use simplexmap::util::benchkit::{section, BenchResult, Bencher};
+use simplexmap::util::json::Json;
+use simplexmap::util::stats::Summary;
+
+const BURST: u64 = 64;
+
+fn job(seed: u64) -> Job {
+    Job {
+        workload: WorkloadKind::Edm,
+        nb: 8,
+        map: "lambda2".into(),
+        backend: Backend::Serial,
+        seed,
+    }
+}
+
+/// One burst on a fresh queue; returns (p50_secs, p99_secs) of
+/// queue_wait from the burst's own metrics.
+fn burst() -> (f64, f64) {
+    let sched = Arc::new(Scheduler::new(2, None));
+    let queue = JobQueue::start(
+        Arc::clone(&sched),
+        QueueConfig {
+            workers: 4,
+            capacity: BURST as usize,
+        },
+    );
+    let receivers: Vec<_> = (0..BURST)
+        .map(|i| queue.submit(job(i)).expect("burst fits the capacity"))
+        .collect();
+    for rx in receivers {
+        rx.recv()
+            .expect("queue alive")
+            .expect("small jobs succeed");
+    }
+    let snap = sched.metrics.snapshot();
+    let wait = snap.get("queue_wait").expect("queue_wait phase");
+    let q = |key: &str| wait.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+    let out = (q("p50_secs"), q("p99_secs"));
+    queue.shutdown();
+    out
+}
+
+fn emit(name: &str, samples: &[f64]) {
+    let result = BenchResult {
+        name: name.to_string(),
+        items_per_iter: 1,
+        secs_per_iter: Summary::from_samples(samples).expect("at least one burst"),
+    };
+    println!("{}", result.report_line());
+    if let Ok(path) = std::env::var("SIMPLEXMAP_BENCH_JSON") {
+        if !path.is_empty() {
+            result.export_json(&path);
+        }
+    }
+}
+
+fn main() {
+    section("E19: queue_wait percentiles over full-capacity bursts (64 jobs)");
+    let bursts: usize = std::env::var("SIMPLEXMAP_QUEUE_BURSTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+    burst(); // warmup: thread-pool and allocator effects stay out
+    let mut p50s = Vec::with_capacity(bursts);
+    let mut p99s = Vec::with_capacity(bursts);
+    for _ in 0..bursts.max(1) {
+        let (p50, p99) = burst();
+        p50s.push(p50);
+        p99s.push(p99);
+    }
+    emit("queue_wait_p50", &p50s);
+    emit("queue_wait_p99", &p99s);
+
+    section("E19: submit→drain throughput (fresh queue per iteration)");
+    let mut b = Bencher::default();
+    b.bench("queue_submit_drain_64", BURST, || {
+        burst();
+    });
+}

@@ -1,0 +1,354 @@
+//! Serving-tier load test: the reactor vs the thread-per-connection
+//! baseline, then a thousand-client sweep storm with invariant checks.
+//!
+//! Three phases, all against in-process servers on the loopback:
+//!
+//! 1. **Baseline** — the threaded [`Server`], 64 clients each running
+//!    jobs one request/response round-trip at a time (the pre-reactor
+//!    serving shape).
+//! 2. **Reactor @ 64** — same total job count, but each client submits
+//!    one `sweep` and reads the streamed frames; reports the aggregate
+//!    throughput ratio over phase 1.
+//! 3. **Scale** — `SIMPLEXMAP_LOAD_CLIENTS` (default 1000) concurrent
+//!    sweep clients. Every client verifies its own frame stream (each
+//!    row exactly once, done-frame counts consistent) while a sampler
+//!    polls `{"cmd":"metrics"}` and records the peak queue depth.
+//!
+//! Exit is nonzero if any result is lost or duplicated, the queue
+//! depth ever exceeds its capacity, or the throughput ratio falls
+//! under `SIMPLEXMAP_LOAD_MIN_RATIO` (default 0 = report only).
+//!
+//! Run: `cargo run --release --example load_test`
+//! Knobs: `SIMPLEXMAP_LOAD_CLIENTS`, `SIMPLEXMAP_LOAD_JOBS` (rows per
+//! scale-phase sweep), `SIMPLEXMAP_LOAD_BASE_JOBS` (jobs per phase-1/2
+//! client), `SIMPLEXMAP_LOAD_WINDOW`, `SIMPLEXMAP_LOAD_MIN_RATIO`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use simplexmap::coordinator::server::Server;
+use simplexmap::coordinator::{QueueConfig, Reactor, ReactorConfig, Scheduler};
+use simplexmap::util::json::{self, Json};
+
+const QUEUE_CAPACITY: usize = 64;
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Lift the open-file ceiling to its hard limit so a thousand client
+/// sockets (plus the server side of each) fit in one process.
+#[cfg(target_os = "linux")]
+fn raise_nofile() {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    unsafe {
+        let mut r = RLimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut r) == 0 && r.cur < r.max {
+            r.cur = r.max;
+            let _ = setrlimit(RLIMIT_NOFILE, &r);
+        }
+    }
+}
+#[cfg(not(target_os = "linux"))]
+fn raise_nofile() {}
+
+fn queue_config() -> QueueConfig {
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8);
+    QueueConfig {
+        workers,
+        capacity: QUEUE_CAPACITY,
+    }
+}
+
+fn spawn_threaded() -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let server = Server::with_queue(Arc::new(Scheduler::new(2, None)), queue_config());
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        server
+            .serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+            .unwrap();
+    });
+    (rx.recv().unwrap(), handle)
+}
+
+fn spawn_reactor() -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let cfg = ReactorConfig {
+        queue: queue_config(),
+        ..ReactorConfig::from_env()
+    };
+    let reactor = Reactor::with_config(Arc::new(Scheduler::new(2, None)), cfg);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        reactor
+            .serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+            .unwrap();
+    });
+    (rx.recv().unwrap(), handle)
+}
+
+fn connect(addr: SocketAddr) -> std::io::Result<(TcpStream, BufReader<TcpStream>)> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let reader = BufReader::new(stream.try_clone()?);
+    Ok((stream, reader))
+}
+
+fn read_json(reader: &mut BufReader<TcpStream>, what: &str) -> Result<Json, String> {
+    let mut line = String::new();
+    let n = reader
+        .read_line(&mut line)
+        .map_err(|e| format!("read {what}: {e}"))?;
+    if n == 0 {
+        return Err(format!("connection closed awaiting {what}"));
+    }
+    json::parse(line.trim()).map_err(|e| format!("bad {what}: {e}"))
+}
+
+/// Phase-1 client: `jobs` sequential run round-trips; returns ok count.
+fn baseline_client(addr: SocketAddr, seed: u64, jobs: u64) -> Result<u64, String> {
+    let (mut w, mut r) = connect(addr).map_err(|e| e.to_string())?;
+    let mut ok = 0u64;
+    for i in 0..jobs {
+        let req = format!(
+            "{{\"cmd\":\"run\",\"workload\":\"edm\",\"nb\":8,\"map\":\"lambda2\",\
+             \"backend\":\"serial\",\"seed\":{}}}\n",
+            seed * 10_000 + i
+        );
+        w.write_all(req.as_bytes()).map_err(|e| e.to_string())?;
+        let reply = read_json(&mut r, "run reply")?;
+        if reply.get("ok").and_then(Json::as_bool) == Some(true) {
+            ok += 1;
+        } else {
+            return Err(format!("run refused: {}", reply.to_string_compact()));
+        }
+    }
+    Ok(ok)
+}
+
+/// Sweep client: one streamed sweep of `jobs` rows, each row verified
+/// to arrive exactly once; returns (completed, failed) from the done
+/// frame after cross-checking against the frames actually seen.
+fn sweep_client(addr: SocketAddr, seed: u64, jobs: u64, window: u64) -> Result<(u64, u64), String> {
+    let (mut w, mut r) = connect(addr).map_err(|e| e.to_string())?;
+    let nbs: Vec<String> = (0..jobs).map(|_| "8".to_string()).collect();
+    let req = format!(
+        "{{\"cmd\":\"sweep\",\"workloads\":[\"edm\"],\"maps\":[\"lambda2\"],\"nbs\":[{}],\
+         \"backend\":\"serial\",\"seed\":{seed},\"window\":{window}}}\n",
+        nbs.join(",")
+    );
+    w.write_all(req.as_bytes()).map_err(|e| e.to_string())?;
+    let ack = read_json(&mut r, "sweep ack")?;
+    if ack.get("ok").and_then(Json::as_bool) != Some(true) {
+        return Err(format!("sweep refused: {}", ack.to_string_compact()));
+    }
+    let total = ack.get("jobs").and_then(Json::as_u64).unwrap_or(0);
+    if total != jobs {
+        return Err(format!("ack says {total} jobs, expected {jobs}"));
+    }
+    let mut seen = vec![false; jobs as usize];
+    let mut frames = 0u64;
+    loop {
+        let frame = read_json(&mut r, "sweep frame")?;
+        if frame.get("done").and_then(Json::as_bool) == Some(true) {
+            let completed = frame.get("completed").and_then(Json::as_u64).unwrap_or(0);
+            let failed = frame.get("failed").and_then(Json::as_u64).unwrap_or(0);
+            if frames != jobs || seen.iter().any(|s| !s) || completed + failed != jobs {
+                return Err(format!(
+                    "lost/duplicated rows: saw {frames}/{jobs} frames, \
+                     done counts {completed}+{failed}"
+                ));
+            }
+            return Ok((completed, failed));
+        }
+        let idx = frame
+            .get("job")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| format!("frame without job index: {}", frame.to_string_compact()))?;
+        let slot = seen
+            .get_mut(idx as usize)
+            .ok_or(format!("job index {idx} out of range"))?;
+        if *slot {
+            return Err(format!("duplicate frame for job {idx}"));
+        }
+        *slot = true;
+        frames += 1;
+    }
+}
+
+/// Run `clients` threads of `work` and return (errors, elapsed).
+fn run_clients<F>(clients: u64, stagger: bool, work: F) -> (Vec<String>, Duration)
+where
+    F: Fn(u64) -> Result<(), String> + Send + Sync + 'static,
+{
+    let work = Arc::new(work);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for id in 0..clients {
+        let work = Arc::clone(&work);
+        let builder = std::thread::Builder::new().stack_size(192 * 1024);
+        handles.push(
+            builder
+                .spawn(move || {
+                    if stagger {
+                        // Spread connects so the listener backlog never
+                        // sees a thousand simultaneous SYNs.
+                        std::thread::sleep(Duration::from_millis(id % 97));
+                    }
+                    work(id).err()
+                })
+                .expect("spawn client thread"),
+        );
+    }
+    let mut errors = Vec::new();
+    for h in handles {
+        if let Some(e) = h.join().expect("client thread panicked") {
+            errors.push(e);
+        }
+    }
+    (errors, t0.elapsed())
+}
+
+/// Poll the server's metrics until `stop`, tracking peak queue depth.
+fn depth_sampler(addr: SocketAddr, stop: Arc<AtomicBool>, peak: Arc<AtomicU64>) {
+    let Ok((mut w, mut r)) = connect(addr) else {
+        return;
+    };
+    while !stop.load(Ordering::Relaxed) {
+        if w.write_all(b"{\"cmd\":\"metrics\"}\n").is_err() {
+            return;
+        }
+        let Ok(reply) = read_json(&mut r, "metrics") else {
+            return;
+        };
+        let depth = reply
+            .get("metrics")
+            .and_then(|m| m.get("queue_depth"))
+            .and_then(Json::as_u64)
+            .unwrap_or(0);
+        peak.fetch_max(depth, Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn shutdown(addr: SocketAddr, handle: std::thread::JoinHandle<()>) {
+    if let Ok((mut w, mut r)) = connect(addr) {
+        let _ = w.write_all(b"{\"cmd\":\"shutdown\"}\n");
+        let _ = read_json(&mut r, "shutdown ack");
+    }
+    handle.join().expect("server thread panicked");
+}
+
+fn main() {
+    raise_nofile();
+    let base_clients = 64u64;
+    let base_jobs = env_u64("SIMPLEXMAP_LOAD_BASE_JOBS", 10);
+    let scale_clients = env_u64("SIMPLEXMAP_LOAD_CLIENTS", 1000);
+    let scale_jobs = env_u64("SIMPLEXMAP_LOAD_JOBS", 8);
+    let window = env_u64("SIMPLEXMAP_LOAD_WINDOW", 16);
+    let min_ratio = env_f64("SIMPLEXMAP_LOAD_MIN_RATIO", 0.0);
+    let mut failed = false;
+
+    // Phase 1: threaded baseline, one round-trip per job.
+    let (addr, handle) = spawn_threaded();
+    let (errors, elapsed) = run_clients(base_clients, false, move |id| {
+        baseline_client(addr, id, base_jobs).map(|_| ())
+    });
+    shutdown(addr, handle);
+    let base_total = base_clients * base_jobs;
+    let base_tput = base_total as f64 / elapsed.as_secs_f64();
+    println!(
+        "phase 1 threaded : {base_clients} clients x {base_jobs} jobs -> \
+         {base_tput:>8.0} jobs/s ({} errors)",
+        errors.len()
+    );
+    failed |= !errors.is_empty();
+
+    // Phase 2: reactor, same totals, one streamed sweep per client.
+    let (addr, handle) = spawn_reactor();
+    let (errors, elapsed) = run_clients(base_clients, false, move |id| {
+        sweep_client(addr, id, base_jobs, window).map(|_| ())
+    });
+    shutdown(addr, handle);
+    let reactor_tput = base_total as f64 / elapsed.as_secs_f64();
+    let ratio = reactor_tput / base_tput;
+    println!(
+        "phase 2 reactor  : {base_clients} clients x {base_jobs} rows -> \
+         {reactor_tput:>8.0} jobs/s ({} errors) — {ratio:.2}x over threaded",
+        errors.len()
+    );
+    failed |= !errors.is_empty();
+    if min_ratio > 0.0 && ratio < min_ratio {
+        println!("FAIL: throughput ratio {ratio:.2} under the {min_ratio:.2} floor");
+        failed = true;
+    }
+
+    // Phase 3: the sweep storm with invariant checks.
+    let (addr, handle) = spawn_reactor();
+    let stop = Arc::new(AtomicBool::new(false));
+    let peak = Arc::new(AtomicU64::new(0));
+    let sampler = {
+        let (stop, peak) = (Arc::clone(&stop), Arc::clone(&peak));
+        std::thread::spawn(move || depth_sampler(addr, stop, peak))
+    };
+    let completed = Arc::new(AtomicU64::new(0));
+    let sum = Arc::clone(&completed);
+    let (errors, elapsed) = run_clients(scale_clients, true, move |id| {
+        let (done, fail) = sweep_client(addr, id, scale_jobs, window)?;
+        sum.fetch_add(done + fail, Ordering::Relaxed);
+        Ok(())
+    });
+    stop.store(true, Ordering::Relaxed);
+    sampler.join().expect("sampler panicked");
+    shutdown(addr, handle);
+    let scale_total = scale_clients * scale_jobs;
+    let got = completed.load(Ordering::Relaxed);
+    let depth = peak.load(Ordering::Relaxed);
+    println!(
+        "phase 3 scale    : {scale_clients} clients x {scale_jobs} rows -> \
+         {got}/{scale_total} results in {:.2}s, peak queue depth {depth}/{QUEUE_CAPACITY} \
+         ({} errors)",
+        elapsed.as_secs_f64(),
+        errors.len()
+    );
+    for e in errors.iter().take(5) {
+        println!("  client error: {e}");
+    }
+    if !errors.is_empty() || got != scale_total {
+        println!("FAIL: lost or duplicated results under load");
+        failed = true;
+    }
+    if depth as usize > QUEUE_CAPACITY {
+        println!("FAIL: queue depth {depth} exceeded capacity {QUEUE_CAPACITY}");
+        failed = true;
+    }
+
+    if failed {
+        std::process::exit(1);
+    }
+    println!("load test OK: zero lost results, queue depth bounded");
+}

@@ -97,6 +97,29 @@ impl WorkloadKind {
         }
     }
 
+    /// The map roster a `sweep` runs this workload against — shared by
+    /// the CLI `sweep` subcommand and the server's `{"cmd":"sweep"}`
+    /// fan-out so wire and local sweeps stay row-for-row identical.
+    pub fn sweep_maps(&self) -> Vec<String> {
+        if self.domain() == crate::simplex::gasket::DomainKind::Gasket {
+            // The dedicated gasket maps, plus two simplex covers to
+            // show the predication waste they pay on a fractal domain.
+            ["bb-gasket", "lambda-gasket", "bb", "lambda2"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect()
+        } else if self.m() >= 4 {
+            crate::maps::map_names(self.m())
+        } else {
+            let fixed: &[&str] = if self.m() == 2 {
+                &["bb", "lambda2", "enum2", "rb", "ries", "lambda-s"]
+            } else {
+                &["bb", "lambda3", "enum3", "lambda-s", "lambda-sw"]
+            };
+            fixed.iter().map(|s| s.to_string()).collect()
+        }
+    }
+
     pub const ALL: &'static [WorkloadKind] = &[
         WorkloadKind::Edm,
         WorkloadKind::Collision,
@@ -303,6 +326,37 @@ mod tests {
         );
         assert_eq!(WorkloadKind::parse("ktuple1"), None, "no 1-tuples");
         assert_eq!(WorkloadKind::parse("ktuple9"), None, "beyond M_MAX");
+    }
+
+    #[test]
+    fn sweep_maps_cover_every_dimension() {
+        assert_eq!(
+            WorkloadKind::Edm.sweep_maps(),
+            vec!["bb", "lambda2", "enum2", "rb", "ries", "lambda-s"]
+        );
+        assert_eq!(
+            WorkloadKind::Triple.sweep_maps(),
+            vec!["bb", "lambda3", "enum3", "lambda-s", "lambda-sw"]
+        );
+        assert_eq!(
+            WorkloadKind::GasketCA.sweep_maps(),
+            vec!["bb-gasket", "lambda-gasket", "bb", "lambda2"]
+        );
+        // m ≥ 4 pulls the live registry roster.
+        assert_eq!(
+            WorkloadKind::KTuple(5).sweep_maps(),
+            crate::maps::map_names(5)
+        );
+        // Every advertised map must resolve for its workload's m.
+        for w in WorkloadKind::ALL {
+            for map in w.sweep_maps() {
+                assert!(
+                    crate::maps::map_by_name(w.m(), &map).is_some(),
+                    "{} -> {map}",
+                    w.name()
+                );
+            }
+        }
     }
 
     #[test]

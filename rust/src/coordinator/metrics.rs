@@ -81,11 +81,27 @@ pub struct Metrics {
     pub queue_depth: AtomicU64,
     pub map_cache_hits: AtomicU64,
     pub map_cache_misses: AtomicU64,
+    /// TCP connections the serving tier accepted / closed (both
+    /// server modes).
+    pub conns_accepted: AtomicU64,
+    pub conns_closed: AtomicU64,
+    /// Connections dropped because their write backlog crossed the
+    /// reactor's hard cap (slow-client protection).
+    pub slow_client_drops: AtomicU64,
+    /// Frames rejected by the capped reader before parsing.
+    pub frames_oversized: AtomicU64,
+    /// Sweep fan-outs started / fully resolved, and individual sweep
+    /// jobs that completed (ok or failed).
+    pub sweeps_started: AtomicU64,
+    pub sweeps_completed: AtomicU64,
+    pub sweep_jobs_completed: AtomicU64,
     map_phase: PhaseMetric,
     exec_phase: PhaseMetric,
     fused_phase: PhaseMetric,
     queue_wait: PhaseMetric,
     job_wall: PhaseMetric,
+    /// First-job-submitted → last-job-resolved wall time per sweep.
+    sweep_wall: PhaseMetric,
     /// max/mean lane-busy ratio per profiled launch (dimensionless).
     lane_imbalance: Mutex<Welford>,
     /// Job wall-time histograms keyed by `(workload, map, backend)`.
@@ -120,6 +136,11 @@ impl Metrics {
     pub fn record_job(&self, secs: f64) {
         self.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.job_wall.record(secs);
+    }
+
+    /// Wall time of one whole sweep fan-out (submit → last result).
+    pub fn record_sweep_wall(&self, secs: f64) {
+        self.sweep_wall.record(secs);
     }
 
     /// Lane-imbalance ratio of a profiled launch (≥ 1.0).
@@ -168,11 +189,19 @@ impl Metrics {
             ("queue_depth", counter(&self.queue_depth)),
             ("map_cache_hits", counter(&self.map_cache_hits)),
             ("map_cache_misses", counter(&self.map_cache_misses)),
+            ("conns_accepted", counter(&self.conns_accepted)),
+            ("conns_closed", counter(&self.conns_closed)),
+            ("slow_client_drops", counter(&self.slow_client_drops)),
+            ("frames_oversized", counter(&self.frames_oversized)),
+            ("sweeps_started", counter(&self.sweeps_started)),
+            ("sweeps_completed", counter(&self.sweeps_completed)),
+            ("sweep_jobs_completed", counter(&self.sweep_jobs_completed)),
             ("map_phase", self.map_phase.to_json()),
             ("exec_phase", self.exec_phase.to_json()),
             ("fused_phase", self.fused_phase.to_json()),
             ("queue_wait", self.queue_wait.to_json()),
             ("job_wall", self.job_wall.to_json()),
+            ("sweep_wall", self.sweep_wall.to_json()),
             ("lane_imbalance", imbalance),
             ("series", series),
         ])
@@ -229,6 +258,18 @@ impl Metrics {
         scalar(&mut out, "queue_depth", "gauge", load(&self.queue_depth));
         scalar(&mut out, "map_cache_hits_total", "counter", load(&self.map_cache_hits));
         scalar(&mut out, "map_cache_misses_total", "counter", load(&self.map_cache_misses));
+        scalar(&mut out, "conns_accepted_total", "counter", load(&self.conns_accepted));
+        scalar(&mut out, "conns_closed_total", "counter", load(&self.conns_closed));
+        scalar(&mut out, "slow_client_drops_total", "counter", load(&self.slow_client_drops));
+        scalar(&mut out, "frames_oversized_total", "counter", load(&self.frames_oversized));
+        scalar(&mut out, "sweeps_started_total", "counter", load(&self.sweeps_started));
+        scalar(&mut out, "sweeps_completed_total", "counter", load(&self.sweeps_completed));
+        scalar(
+            &mut out,
+            "sweep_jobs_completed_total",
+            "counter",
+            load(&self.sweep_jobs_completed),
+        );
 
         for (name, phase) in [
             ("map_phase_seconds", &self.map_phase),
@@ -236,6 +277,7 @@ impl Metrics {
             ("fused_phase_seconds", &self.fused_phase),
             ("queue_wait_seconds", &self.queue_wait),
             ("job_wall_seconds", &self.job_wall),
+            ("sweep_wall_seconds", &self.sweep_wall),
         ] {
             out.push_str(&format!("# TYPE simplexmap_{name} summary\n"));
             summary_body(&mut out, name, "", &phase.hist);
@@ -390,6 +432,33 @@ mod tests {
         );
         assert!(prom.contains(labeled), "missing labeled series in:\n{prom}");
         assert!(prom.ends_with('\n'));
+    }
+
+    #[test]
+    fn serving_counters_and_sweep_wall_export() {
+        let m = Metrics::new();
+        m.conns_accepted.fetch_add(5, Ordering::Relaxed);
+        m.conns_closed.fetch_add(4, Ordering::Relaxed);
+        m.slow_client_drops.fetch_add(1, Ordering::Relaxed);
+        m.frames_oversized.fetch_add(2, Ordering::Relaxed);
+        m.sweeps_started.fetch_add(3, Ordering::Relaxed);
+        m.sweeps_completed.fetch_add(3, Ordering::Relaxed);
+        m.sweep_jobs_completed.fetch_add(12, Ordering::Relaxed);
+        m.record_sweep_wall(0.125);
+        let s = m.snapshot();
+        assert_eq!(s.get("conns_accepted").unwrap().as_u64(), Some(5));
+        assert_eq!(s.get("slow_client_drops").unwrap().as_u64(), Some(1));
+        assert_eq!(s.get("frames_oversized").unwrap().as_u64(), Some(2));
+        assert_eq!(s.get("sweeps_completed").unwrap().as_u64(), Some(3));
+        assert_eq!(s.get("sweep_jobs_completed").unwrap().as_u64(), Some(12));
+        let sweep = s.get("sweep_wall").unwrap();
+        assert_eq!(sweep.get("count").unwrap().as_u64(), Some(1));
+        assert!(sweep.get("p50_secs").unwrap().as_f64().is_some());
+        let prom = m.prometheus();
+        assert!(prom.contains("simplexmap_conns_accepted_total 5"));
+        assert!(prom.contains("simplexmap_sweeps_started_total 3"));
+        assert!(prom.contains("# TYPE simplexmap_sweep_wall_seconds summary"));
+        assert!(prom.contains("simplexmap_sweep_wall_seconds_count 1"));
     }
 
     #[test]

@@ -21,11 +21,16 @@
 //!   exportable as Chrome trace-event JSON.
 //! - [`server`] — a JSON-lines-over-TCP leader: accepts jobs from
 //!   clients and runs them through the queue (examples/serve_client).
+//!   One blocking thread per connection — the measurable baseline.
+//! - [`reactor`] — the non-blocking poll multiplexer: thousands of
+//!   connections on one thread, capped-frame reads, backpressured
+//!   writes, and the streaming `sweep`/`results` fan-out commands.
 
 pub mod batcher;
 pub mod job;
 pub mod metrics;
 pub mod queue;
+pub mod reactor;
 pub mod scheduler;
 pub mod server;
 pub mod span;
@@ -34,6 +39,7 @@ pub mod trace;
 pub use batcher::TileBatcher;
 pub use job::{Backend, BackendKind, Job, JobResult, WorkloadKind};
 pub use metrics::Metrics;
-pub use queue::{JobQueue, QueueConfig};
+pub use queue::{JobQueue, Priority, QueueConfig};
+pub use reactor::{Reactor, ReactorConfig};
 pub use scheduler::{ExecMode, RhoPolicy, ScheduleError, Scheduler};
 pub use span::{Span, SpanRecorder};

@@ -1,4 +1,5 @@
-//! Bounded job queue + worker pool in front of the unified engine.
+//! Bounded job queue + worker pool in front of the unified engine,
+//! with job priorities and per-client fairness lanes.
 //!
 //! The server used to run every job inline on its connection thread;
 //! the queue decouples admission from execution: connections enqueue,
@@ -8,10 +9,30 @@
 //! under overload. Queue depth and enqueue→dequeue wait times are
 //! exported through the scheduler's [`Metrics`](crate::coordinator::Metrics).
 //!
+//! ## Priorities and fairness
+//!
+//! Jobs carry a [`Priority`] (strict: a high job is always dequeued
+//! before any normal job, normal before low) and a *lane* — an opaque
+//! client token (the reactor uses the connection id). Within one
+//! priority level, lanes are served round-robin, one job per turn, so
+//! a client that fans a 4096-row sweep into the queue cannot starve a
+//! client submitting single jobs: the single job waits behind at most
+//! one job per other active lane, not behind the whole sweep. The
+//! capacity bound stays global — `queue_depth ≤ capacity` holds
+//! exactly at every instant regardless of how jobs spread over lanes.
+//!
+//! ## Sync and async admission
+//!
+//! [`submit`](JobQueue::submit)/[`run`](JobQueue::run) keep the
+//! blocking channel shape the threaded server uses.
+//! [`submit_async`](JobQueue::submit_async) hands the result to a
+//! callback on the worker thread instead — the poll-reactor submits
+//! hundreds of sweep jobs this way without parking a thread per job.
+//!
 //! Shutdown drains: workers finish every job already enqueued (their
 //! clients are still waiting on replies) before exiting.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -39,8 +60,62 @@ impl Default for QueueConfig {
     }
 }
 
+/// Strict job priority: every queued High job dequeues before any
+/// Normal job, every Normal before any Low. Fairness applies *within*
+/// a level, not across levels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    High = 0,
+    Normal = 1,
+    Low = 2,
+}
+
+impl Priority {
+    pub const ALL: [Priority; 3] = [Priority::High, Priority::Normal, Priority::Low];
+
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" | "" => Some(Priority::Normal),
+            "low" => Some(Priority::Low),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    #[inline]
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
 /// The result channel a submitted job resolves through.
 pub type JobReceiver = mpsc::Receiver<Result<JobResult, ScheduleError>>;
+
+/// How a finished job reaches its submitter.
+enum Reply {
+    /// Blocking shape: the submitter parks on the receiver.
+    Channel(mpsc::Sender<Result<JobResult, ScheduleError>>),
+    /// Reactor shape: invoked on the worker thread; must not block.
+    Callback(Box<dyn FnOnce(Result<JobResult, ScheduleError>) + Send>),
+}
+
+impl Reply {
+    fn deliver(self, result: Result<JobResult, ScheduleError>) {
+        match self {
+            // The client may have disconnected; dropping is fine.
+            Reply::Channel(tx) => drop(tx.send(result)),
+            Reply::Callback(cb) => cb(result),
+        }
+    }
+}
 
 struct Queued {
     job: Job,
@@ -49,11 +124,62 @@ struct Queued {
     /// the item (rejected submissions never construct a `Queued`, so
     /// their spans never start).
     wait_span: ActiveSpan,
-    reply: mpsc::Sender<Result<JobResult, ScheduleError>>,
+    reply: Reply,
+}
+
+/// Priority levels × per-client FIFO lanes with a round-robin cursor
+/// per level. Lanes materialize on first push and evaporate when
+/// drained, so the footprint is bounded by the jobs themselves.
+#[derive(Default)]
+struct Lanes {
+    levels: [BTreeMap<u64, VecDeque<Queued>>; 3],
+    /// Last lane served per level; the next pop starts strictly after
+    /// it (wrapping), which is exactly round-robin.
+    cursor: [u64; 3],
+    len: usize,
+}
+
+impl Lanes {
+    fn push(&mut self, priority: Priority, lane: u64, item: Queued) {
+        self.levels[priority.index()]
+            .entry(lane)
+            .or_default()
+            .push_back(item);
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<Queued> {
+        for p in 0..3 {
+            let level = &mut self.levels[p];
+            if level.is_empty() {
+                continue;
+            }
+            // First lane strictly after the cursor, wrapping to the
+            // smallest lane id.
+            let lane = level
+                .range(self.cursor[p].wrapping_add(1)..)
+                .next()
+                .map(|(k, _)| *k)
+                .or_else(|| level.keys().next().copied())?;
+            let fifo = level.get_mut(&lane)?;
+            let item = fifo.pop_front()?;
+            if fifo.is_empty() {
+                level.remove(&lane);
+            }
+            self.cursor[p] = lane;
+            self.len -= 1;
+            return Some(item);
+        }
+        None
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
 }
 
 struct Inner {
-    queue: Mutex<VecDeque<Queued>>,
+    queue: Mutex<Lanes>,
     available: Condvar,
     shutdown: AtomicBool,
     capacity: usize,
@@ -69,7 +195,7 @@ pub struct JobQueue {
 impl JobQueue {
     pub fn start(scheduler: Arc<Scheduler>, cfg: QueueConfig) -> JobQueue {
         let inner = Arc::new(Inner {
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(Lanes::default()),
             available: Condvar::new(),
             shutdown: AtomicBool::new(false),
             capacity: cfg.capacity.max(1),
@@ -87,18 +213,22 @@ impl JobQueue {
         JobQueue { inner, workers }
     }
 
-    /// Enqueue a job; the receiver yields its result once a worker
-    /// finishes. Fails fast when the queue is full (backpressure) or
-    /// the coordinator is shutting down.
-    pub fn submit(&self, job: Job) -> Result<JobReceiver, ScheduleError> {
+    /// The shared admission path: everything under one lock so the
+    /// capacity bound and the gauges stay exact.
+    fn enqueue(
+        &self,
+        job: Job,
+        priority: Priority,
+        lane: u64,
+        reply: Reply,
+    ) -> Result<(), ScheduleError> {
         let metrics = &self.inner.scheduler.metrics;
-        let (tx, rx) = mpsc::channel();
         {
             let mut q = self.inner.queue.lock().unwrap();
             // Shutdown must be re-checked under the queue lock: workers
             // take the same lock before their final empty+shutdown
             // check, so a job enqueued here is guaranteed to be seen
-            // by the drain (no stranded reply channels).
+            // by the drain (no stranded replies).
             if self.inner.shutdown.load(Ordering::SeqCst) {
                 return Err(ScheduleError::Shutdown);
             }
@@ -106,19 +236,58 @@ impl JobQueue {
                 metrics.queue_rejected.fetch_add(1, Ordering::Relaxed);
                 return Err(ScheduleError::QueueFull(self.inner.capacity));
             }
-            q.push_back(Queued {
-                wait_span: span::global().start("queue", "queue_wait", 0),
-                job,
-                enqueued: Instant::now(),
-                reply: tx,
-            });
+            q.push(
+                priority,
+                lane,
+                Queued {
+                    wait_span: span::global().start("queue", "queue_wait", 0),
+                    job,
+                    enqueued: Instant::now(),
+                    reply,
+                },
+            );
             // Gauge updates stay under the lock so a worker cannot pop
             // (and decrement) before the increment lands.
             metrics.jobs_queued.fetch_add(1, Ordering::Relaxed);
             metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
         }
         self.inner.available.notify_one();
+        Ok(())
+    }
+
+    /// Enqueue a job; the receiver yields its result once a worker
+    /// finishes. Fails fast when the queue is full (backpressure) or
+    /// the coordinator is shutting down.
+    pub fn submit(&self, job: Job) -> Result<JobReceiver, ScheduleError> {
+        self.submit_with(job, Priority::Normal, 0)
+    }
+
+    /// [`submit`](JobQueue::submit) with an explicit priority and
+    /// fairness lane.
+    pub fn submit_with(
+        &self,
+        job: Job,
+        priority: Priority,
+        lane: u64,
+    ) -> Result<JobReceiver, ScheduleError> {
+        let (tx, rx) = mpsc::channel();
+        self.enqueue(job, priority, lane, Reply::Channel(tx))?;
         Ok(rx)
+    }
+
+    /// Non-blocking admission: the callback runs on the worker thread
+    /// that finishes the job (it must not block — hand off and return).
+    /// On rejection the callback is *not* invoked; the error comes
+    /// back synchronously so the reactor can answer backpressure
+    /// inline.
+    pub fn submit_async(
+        &self,
+        job: Job,
+        priority: Priority,
+        lane: u64,
+        on_done: impl FnOnce(Result<JobResult, ScheduleError>) + Send + 'static,
+    ) -> Result<(), ScheduleError> {
+        self.enqueue(job, priority, lane, Reply::Callback(Box::new(on_done)))
     }
 
     /// Submit and block for the result (what a connection thread does).
@@ -134,6 +303,11 @@ impl JobQueue {
             .metrics
             .queue_depth
             .load(Ordering::Relaxed)
+    }
+
+    /// The backpressure bound.
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
     }
 
     /// Stop accepting new jobs; workers drain what is already queued.
@@ -157,7 +331,7 @@ fn worker_loop(inner: &Inner) {
         let item = {
             let mut q = inner.queue.lock().unwrap();
             loop {
-                if let Some(item) = q.pop_front() {
+                if let Some(item) = q.pop() {
                     // Decrement under the same lock as the pop so the
                     // gauge always equals the pending-set size — the
                     // bound `queue_depth ≤ capacity` is exact at every
@@ -187,8 +361,7 @@ fn worker_loop(inner: &Inner) {
             ],
         );
         let result = inner.scheduler.run(&item.job);
-        // The client may have disconnected; dropping the result is fine.
-        let _ = item.reply.send(result);
+        item.reply.deliver(result);
     }
 }
 
@@ -205,6 +378,71 @@ mod tests {
             backend: Backend::Parallel,
             seed,
         }
+    }
+
+    fn queued(seed: u64) -> Queued {
+        let (tx, _rx) = mpsc::channel();
+        Queued {
+            job: job(8, seed),
+            enqueued: Instant::now(),
+            wait_span: span::global().start("queue", "queue_wait", 0),
+            reply: Reply::Channel(tx),
+        }
+    }
+
+    #[test]
+    fn lanes_round_robin_within_a_level() {
+        // Lane 1 floods five jobs, lane 2 and 3 one each: the pops must
+        // interleave lanes, not drain lane 1 first.
+        let mut lanes = Lanes::default();
+        for seed in 0..5 {
+            lanes.push(Priority::Normal, 1, queued(seed));
+        }
+        lanes.push(Priority::Normal, 2, queued(10));
+        lanes.push(Priority::Normal, 3, queued(11));
+        let order: Vec<u64> = std::iter::from_fn(|| lanes.pop())
+            .map(|q| q.job.seed)
+            .collect();
+        assert_eq!(order, vec![0, 10, 11, 1, 2, 3, 4]);
+        assert_eq!(lanes.len(), 0);
+    }
+
+    #[test]
+    fn lanes_strict_priority_across_levels() {
+        let mut lanes = Lanes::default();
+        lanes.push(Priority::Low, 1, queued(30));
+        lanes.push(Priority::Normal, 1, queued(20));
+        lanes.push(Priority::High, 2, queued(10));
+        lanes.push(Priority::High, 1, queued(11));
+        let order: Vec<u64> = std::iter::from_fn(|| lanes.pop())
+            .map(|q| q.job.seed)
+            .collect();
+        // Both high jobs (round-robin over lanes 2 then 1 — cursor
+        // starts at 0 so lane 1 is "next"), then normal, then low.
+        assert_eq!(order, vec![11, 10, 20, 30]);
+    }
+
+    #[test]
+    fn lanes_cursor_resumes_after_served_lane() {
+        let mut lanes = Lanes::default();
+        for lane in [5u64, 9, 14] {
+            lanes.push(Priority::Normal, lane, queued(lane));
+            lanes.push(Priority::Normal, lane, queued(lane + 100));
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| lanes.pop())
+            .map(|q| q.job.seed)
+            .collect();
+        assert_eq!(order, vec![5, 9, 14, 105, 109, 114]);
+    }
+
+    #[test]
+    fn priority_parse_and_names_roundtrip() {
+        for p in Priority::ALL {
+            assert_eq!(Priority::parse(p.name()), Some(p));
+        }
+        assert_eq!(Priority::parse(""), Some(Priority::Normal));
+        assert_eq!(Priority::parse("urgent"), None);
+        assert!(Priority::High < Priority::Normal);
     }
 
     #[test]
@@ -229,6 +467,36 @@ mod tests {
                 .load(std::sync::atomic::Ordering::Relaxed),
             9
         );
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn submit_async_delivers_via_callback() {
+        let sched = Arc::new(Scheduler::new(2, None));
+        let q = JobQueue::start(
+            Arc::clone(&sched),
+            QueueConfig {
+                workers: 2,
+                capacity: 16,
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        for i in 0..6u64 {
+            let tx = tx.clone();
+            q.submit_async(job(8, i), Priority::Normal, i % 2, move |r| {
+                tx.send((i, r.map(|jr| jr.job.nb))).unwrap();
+            })
+            .unwrap();
+        }
+        let mut seen: Vec<u64> = (0..6)
+            .map(|_| rx.recv().unwrap())
+            .map(|(i, r)| {
+                assert_eq!(r.expect("job ok"), 8);
+                i
+            })
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
         assert_eq!(q.depth(), 0);
     }
 
@@ -276,6 +544,38 @@ mod tests {
     }
 
     #[test]
+    fn submit_async_rejection_is_synchronous_and_skips_callback() {
+        let sched = Arc::new(Scheduler::new(1, None));
+        let q = JobQueue::start(
+            Arc::clone(&sched),
+            QueueConfig {
+                workers: 1,
+                capacity: 2,
+            },
+        );
+        let fired = Arc::new(AtomicBool::new(false));
+        let mut rejections = 0;
+        for i in 0..64u64 {
+            let fired = Arc::clone(&fired);
+            match q.submit_async(job(8, i), Priority::Low, 7, move |r| {
+                if r.is_err() {
+                    fired.store(true, Ordering::SeqCst);
+                }
+            }) {
+                Ok(()) => {}
+                Err(ScheduleError::QueueFull(_)) => rejections += 1,
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert!(rejections > 0);
+        drop(q); // drain
+        assert!(
+            !fired.load(Ordering::SeqCst),
+            "rejected submissions must never reach the callback with an error"
+        );
+    }
+
+    #[test]
     fn shutdown_rejects_new_jobs_but_drains_queued_ones() {
         let sched = Arc::new(Scheduler::new(1, None));
         let q = JobQueue::start(
@@ -304,5 +604,47 @@ mod tests {
             Some(1)
         );
         assert_eq!(snap.get("jobs_queued").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn lanes_interleaved_priorities_and_lanes_drain_exactly_once() {
+        // A mixed burst: every pushed job must come back exactly once,
+        // never reordered within its (priority, lane) FIFO.
+        let mut lanes = Lanes::default();
+        let mut pushed = Vec::new();
+        for (i, (p, lane)) in [
+            (Priority::Low, 3u64),
+            (Priority::Normal, 1),
+            (Priority::High, 1),
+            (Priority::Normal, 1),
+            (Priority::Normal, 2),
+            (Priority::High, 9),
+            (Priority::Low, 3),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            lanes.push(p, lane, queued(i as u64));
+            pushed.push((p, lane, i as u64));
+        }
+        let mut popped = Vec::new();
+        while let Some(q) = lanes.pop() {
+            popped.push(q.job.seed);
+        }
+        assert_eq!(popped.len(), pushed.len(), "no loss, no duplication");
+        let mut sorted = popped.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4, 5, 6]);
+        // Per-(priority, lane) FIFO order is preserved: lane 1 normal
+        // saw seeds 1 then 3; lane 3 low saw 0 then 6.
+        let pos = |s: u64| popped.iter().position(|&x| x == s).unwrap();
+        assert!(pos(1) < pos(3));
+        assert!(pos(0) < pos(6));
+        // Strict priority: both highs (2, 5) precede every normal and low.
+        for high in [2u64, 5] {
+            for other in [0u64, 1, 3, 4, 6] {
+                assert!(pos(high) < pos(other));
+            }
+        }
     }
 }

@@ -1,0 +1,1201 @@
+//! Non-blocking connection multiplexer: one thread, a `poll(2)`
+//! readiness loop over `std::net`, thousands of concurrent clients.
+//!
+//! The threaded server ([`crate::coordinator::server`]) spends a stack
+//! and a parked thread per connection and serializes each client's
+//! jobs behind a blocking `queue.run`. This reactor keeps every
+//! connection in one readiness loop (mio-style, zero dependencies):
+//! reads go through the capped incremental framer
+//! ([`FrameBuffer`]) so a hostile or confused client can neither buffer
+//! unbounded garbage nor wedge the loop with a frame that never ends;
+//! writes go through per-connection buffers with a soft watermark that
+//! pauses both reads and result transfer for that client (backpressure)
+//! and a hard cap that drops the connection (slow-client protection,
+//! counted in `slow_client_drops`).
+//!
+//! Job execution never blocks the loop: `run` and `sweep` submit
+//! through [`JobQueue::submit_async`](crate::coordinator::queue::JobQueue)
+//! and the queue workers hand results back through a completion list
+//! plus a loopback UDP wake datagram — the reactor sleeps in `poll`
+//! until either a socket or a completion needs it.
+//!
+//! ## Sweep fan-out
+//!
+//! `{"cmd":"sweep","workloads":["edm"],"nbs":[8,16],…}` expands a
+//! workloads × maps × nbs grid (row-major; `maps` defaults to each
+//! workload's [`WorkloadKind::sweep_maps`] roster, so a wire sweep is
+//! row-for-row the CLI `sweep`) and fans the rows through the queue
+//! under the connection's fairness lane and the request's priority.
+//! At most `window` rows are in flight per sweep at a time, so a
+//! 4096-row sweep cannot monopolize the bounded queue: the global
+//! invariant `queue_depth ≤ capacity` holds at every instant and
+//! `QueueFull` during fan-out is retried on the next completion
+//! instead of surfacing to the client.
+//!
+//! Replies stream per connection in *request order* (slots): the ack
+//! frame `{"ok":true,"sweep":S,"jobs":N,"streaming":…}` first, then —
+//! when streaming — one frame per row *in completion order*
+//! (`{"sweep":S,"job":i,…}`), then `{"sweep":S,"done":true,…}`.
+//! Results are also reassembled *in row order* into a per-sweep store
+//! served by `{"cmd":"results","sweep":S,"cursor":0,"limit":64}` with
+//! cursor pagination — the non-streaming path for very large sweeps.
+//! The store is bounded (sweeps per connection × rows per sweep) and
+//! freed on disconnect.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream, UdpSocket};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::job::{Job, JobResult, WorkloadKind};
+use crate::coordinator::queue::{Priority, QueueConfig};
+use crate::coordinator::scheduler::{ScheduleError, Scheduler};
+use crate::coordinator::server::{dispatch_control, err_reply, ServerCtx};
+use crate::coordinator::span::{self, ActiveSpan};
+use crate::util::json::{self, Frame, FrameBuffer, Json, DEFAULT_MAX_FRAME};
+use crate::{log_info, log_warn};
+
+/// Hand-rolled `poll(2)` binding — the only system call the reactor
+/// needs beyond `std::net`, so no crate dependency is worth it.
+#[cfg(unix)]
+mod sys {
+    use std::io::ErrorKind;
+    use std::os::raw::{c_int, c_short};
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: c_short,
+        pub revents: c_short,
+    }
+
+    pub const POLLIN: c_short = 0x001;
+    pub const POLLOUT: c_short = 0x004;
+    pub const POLLERR: c_short = 0x008;
+    pub const POLLHUP: c_short = 0x010;
+
+    #[cfg(target_os = "linux")]
+    type NfdsT = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    type NfdsT = std::os::raw::c_uint;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+    }
+
+    /// `poll` with EINTR retry. Returns the number of ready entries.
+    pub fn poll_wait(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+        loop {
+            let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let e = std::io::Error::last_os_error();
+            if e.kind() != ErrorKind::Interrupted {
+                return Err(e);
+            }
+        }
+    }
+}
+
+/// Portability fallback: no readiness facility — sleep briefly and
+/// report every registered interest as ready (the sockets are all
+/// non-blocking, so spurious readiness only costs a `WouldBlock`).
+#[cfg(not(unix))]
+mod sys {
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+
+    pub fn poll_wait(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+        std::thread::sleep(std::time::Duration::from_millis(timeout_ms.clamp(1, 5) as u64));
+        let mut ready = 0;
+        for f in fds.iter_mut() {
+            f.revents = f.events;
+            if f.revents != 0 {
+                ready += 1;
+            }
+        }
+        Ok(ready)
+    }
+}
+
+#[cfg(unix)]
+fn raw_fd<T: std::os::fd::AsRawFd>(t: &T) -> i32 {
+    t.as_raw_fd()
+}
+#[cfg(not(unix))]
+fn raw_fd<T>(_t: &T) -> i32 {
+    0
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Reactor sizing knobs. Environment overrides (`from_env`):
+/// `SIMPLEXMAP_MAX_FRAME`, `SIMPLEXMAP_MAX_CONNS`,
+/// `SIMPLEXMAP_SWEEP_WINDOW`, `SIMPLEXMAP_SWEEP_JOBS_MAX`.
+#[derive(Clone, Copy, Debug)]
+pub struct ReactorConfig {
+    pub queue: QueueConfig,
+    /// Largest accepted request frame in bytes (capped reader).
+    pub max_frame: usize,
+    /// Accepted-connection ceiling; excess connections are refused.
+    pub max_conns: usize,
+    /// Default per-sweep in-flight window (overridable per request).
+    pub sweep_window: usize,
+    /// Row ceiling for one sweep expansion.
+    pub max_sweep_jobs: usize,
+    /// Active (unfinished) sweeps allowed per connection; up to twice
+    /// this many total sweeps stay addressable for pagination before
+    /// the oldest finished one is evicted.
+    pub max_sweeps_per_conn: usize,
+    /// Write-backlog level that pauses reads + result transfer.
+    pub soft_watermark: usize,
+    /// Write-backlog level that drops the connection.
+    pub hard_cap: usize,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> ReactorConfig {
+        ReactorConfig {
+            queue: QueueConfig::default(),
+            max_frame: DEFAULT_MAX_FRAME,
+            max_conns: 4096,
+            sweep_window: 16,
+            max_sweep_jobs: 4096,
+            max_sweeps_per_conn: 8,
+            soft_watermark: 256 * 1024,
+            hard_cap: 8 * 1024 * 1024,
+        }
+    }
+}
+
+impl ReactorConfig {
+    pub fn from_env() -> ReactorConfig {
+        let d = ReactorConfig::default();
+        ReactorConfig {
+            max_frame: env_usize("SIMPLEXMAP_MAX_FRAME", d.max_frame).max(64),
+            max_conns: env_usize("SIMPLEXMAP_MAX_CONNS", d.max_conns).max(1),
+            sweep_window: env_usize("SIMPLEXMAP_SWEEP_WINDOW", d.sweep_window).max(1),
+            max_sweep_jobs: env_usize("SIMPLEXMAP_SWEEP_JOBS_MAX", d.max_sweep_jobs).max(1),
+            ..d
+        }
+    }
+}
+
+/// Per-request sweep options.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SweepOpts {
+    pub stream: bool,
+    pub window: usize,
+    pub priority: Priority,
+}
+
+/// Expand a `sweep` request into its job rows (row-major:
+/// workloads → maps → nbs) plus options. Pure — unit-tested without
+/// sockets, and the contract the wire-vs-CLI differential test pins.
+pub fn expand_sweep(
+    req: &Json,
+    default_window: usize,
+    max_jobs: usize,
+) -> Result<(Vec<Job>, SweepOpts), String> {
+    let str_list = |key: &str| -> Result<Option<Vec<String>>, String> {
+        match req.get(key) {
+            None => Ok(None),
+            Some(Json::Arr(items)) => {
+                let mut out = Vec::with_capacity(items.len());
+                for it in items {
+                    out.push(
+                        it.as_str()
+                            .ok_or(format!("{key} must be an array of strings"))?
+                            .to_string(),
+                    );
+                }
+                Ok(Some(out))
+            }
+            Some(_) => Err(format!("{key} must be an array of strings")),
+        }
+    };
+    let workload_names = str_list("workloads")?.ok_or("sweep needs workloads: [\"edm\", …]")?;
+    if workload_names.is_empty() {
+        return Err("sweep needs at least one workload".into());
+    }
+    let mut workloads = Vec::with_capacity(workload_names.len());
+    for name in &workload_names {
+        workloads.push(WorkloadKind::parse(name).ok_or(format!("unknown workload {name}"))?);
+    }
+    let nbs: Vec<u64> = match req.get("nbs") {
+        Some(Json::Arr(items)) if !items.is_empty() => {
+            let mut out = Vec::with_capacity(items.len());
+            for it in items {
+                out.push(it.as_u64().ok_or("nbs must be an array of integers")?);
+            }
+            out
+        }
+        _ => return Err("sweep needs nbs: [8, 16, …]".into()),
+    };
+    let maps = str_list("maps")?;
+    let backend = match req.get("backend").and_then(Json::as_str) {
+        None => crate::coordinator::job::BackendKind::Parallel,
+        Some(s) => crate::coordinator::job::BackendKind::parse(s)
+            .ok_or(format!("unknown backend {s}"))?,
+    };
+    let seed = req.get("seed").and_then(Json::as_u64).unwrap_or(42);
+    let stream = req.get("stream").and_then(Json::as_bool).unwrap_or(true);
+    let window = req
+        .get("window")
+        .and_then(Json::as_u64)
+        .map(|w| (w as usize).clamp(1, 1024))
+        .unwrap_or(default_window);
+    let priority = match req.get("priority").and_then(Json::as_str) {
+        None => Priority::Normal,
+        Some(s) => Priority::parse(s).ok_or(format!("unknown priority {s} (high|normal|low)"))?,
+    };
+
+    let mut jobs = Vec::new();
+    for w in &workloads {
+        let maps_for_w = match &maps {
+            Some(m) => m.clone(),
+            None => w.sweep_maps(),
+        };
+        for map in &maps_for_w {
+            for &nb in &nbs {
+                jobs.push(Job {
+                    workload: *w,
+                    nb,
+                    map: map.clone(),
+                    backend,
+                    seed,
+                });
+            }
+        }
+    }
+    if jobs.is_empty() {
+        return Err("sweep expanded to zero jobs".into());
+    }
+    if jobs.len() > max_jobs {
+        return Err(format!(
+            "sweep expands to {} jobs, over the {max_jobs} limit — split it",
+            jobs.len()
+        ));
+    }
+    Ok((
+        jobs,
+        SweepOpts {
+            stream,
+            window,
+            priority,
+        },
+    ))
+}
+
+/// A finished job travelling from a queue worker back to the loop.
+struct Done {
+    token: u64,
+    /// Reply slot (plain `run` only; sweeps reply through their own slot).
+    req: u64,
+    /// `(sweep id, row index)` when the job belongs to a sweep.
+    sweep: Option<(u64, usize)>,
+    result: Result<JobResult, ScheduleError>,
+}
+
+/// Completion mailbox + self-wake: queue workers push here and nudge
+/// the sleeping `poll` with a loopback datagram.
+struct Mailbox {
+    done: Mutex<Vec<Done>>,
+    wake: UdpSocket,
+}
+
+impl Mailbox {
+    fn push(&self, d: Done) {
+        self.done.lock().unwrap().push(d);
+        // A full socket buffer means wake datagrams are already
+        // pending, which is all a wake needs to guarantee.
+        let _ = self.wake.send(&[1]);
+    }
+}
+
+/// One in-order reply slot: responses leave the connection in request
+/// order, so a pipelined client can match frames to requests.
+struct Slot {
+    req: u64,
+    frames: VecDeque<String>,
+    done: bool,
+}
+
+struct SweepState {
+    /// The slot the ack/stream/done frames flow through.
+    req: u64,
+    jobs: Vec<Job>,
+    /// Reassembled in row order as completions arrive (out-of-order
+    /// workers land in the right cell).
+    results: Vec<Option<Json>>,
+    next_submit: usize,
+    in_flight: usize,
+    completed: u64,
+    failed: u64,
+    stream: bool,
+    window: usize,
+    priority: Priority,
+    started: Instant,
+    finished: bool,
+    span: Option<ActiveSpan>,
+}
+
+struct Conn {
+    stream: TcpStream,
+    fd: i32,
+    frames: FrameBuffer,
+    out: Vec<u8>,
+    slots: VecDeque<Slot>,
+    /// Bytes sitting in not-yet-transferred slot frames (`out` bytes
+    /// are counted separately); the two together are the write backlog
+    /// the watermark/hard-cap act on.
+    pending_bytes: usize,
+    next_req: u64,
+    next_sweep: u64,
+    sweeps: BTreeMap<u64, SweepState>,
+    inflight_runs: usize,
+    read_closed: bool,
+    dead: bool,
+    span: Option<ActiveSpan>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, max_frame: usize) -> Conn {
+        let fd = raw_fd(&stream);
+        Conn {
+            stream,
+            fd,
+            frames: FrameBuffer::new(max_frame),
+            out: Vec::new(),
+            slots: VecDeque::new(),
+            pending_bytes: 0,
+            next_req: 0,
+            next_sweep: 0,
+            sweeps: BTreeMap::new(),
+            inflight_runs: 0,
+            read_closed: false,
+            dead: false,
+            span: Some(span::global().start("server", "conn", 0)),
+        }
+    }
+
+    fn backlog(&self) -> usize {
+        self.out.len() + self.pending_bytes
+    }
+
+    fn paused(&self, cfg: &ReactorConfig) -> bool {
+        self.backlog() > cfg.soft_watermark
+    }
+
+    fn new_slot(&mut self) -> u64 {
+        let req = self.next_req;
+        self.next_req += 1;
+        self.slots.push_back(Slot {
+            req,
+            frames: VecDeque::new(),
+            done: false,
+        });
+        req
+    }
+
+    fn push_frame_text(&mut self, req: u64, text: String) {
+        if let Some(slot) = self.slots.iter_mut().find(|s| s.req == req) {
+            self.pending_bytes += text.len() + 1;
+            slot.frames.push_back(text);
+        }
+    }
+
+    fn push_frame(&mut self, req: u64, j: Json) {
+        self.push_frame_text(req, j.to_string_compact());
+    }
+
+    fn finish_slot(&mut self, req: u64) {
+        if let Some(slot) = self.slots.iter_mut().find(|s| s.req == req) {
+            slot.done = true;
+        }
+    }
+
+    /// One-frame reply: push and close the slot.
+    fn reply(&mut self, req: u64, j: Json) {
+        self.push_frame(req, j);
+        self.finish_slot(req);
+    }
+
+    /// Everything delivered, nothing running: safe to forget once the
+    /// client side has stopped talking (or shutdown wants us gone).
+    fn idle(&self) -> bool {
+        self.out.is_empty()
+            && self.slots.is_empty()
+            && self.inflight_runs == 0
+            && self.sweeps.values().all(|s| s.finished)
+    }
+
+    /// Transfer frames from the front slot(s) into the write buffer,
+    /// strictly in request order, up to the soft watermark.
+    fn fill_out(&mut self, cfg: &ReactorConfig) {
+        while self.out.len() < cfg.soft_watermark {
+            let Some(front) = self.slots.front_mut() else {
+                break;
+            };
+            if let Some(f) = front.frames.pop_front() {
+                self.pending_bytes -= f.len() + 1;
+                self.out.extend_from_slice(f.as_bytes());
+                self.out.push(b'\n');
+            } else if front.done {
+                self.slots.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn write_out(&mut self) {
+        while !self.out.is_empty() {
+            match self.stream.write(&self.out) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.out.drain(..n);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    fn read_in(&mut self) {
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    self.read_closed = true;
+                    break;
+                }
+                Ok(n) => self.frames.push(&buf[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// The poll-reactor server. Same wire protocol as the threaded
+/// [`Server`](crate::coordinator::server::Server) (shared
+/// [`dispatch_control`]) plus the streaming `sweep`/`results` pair.
+pub struct Reactor {
+    ctx: Arc<ServerCtx>,
+    cfg: ReactorConfig,
+}
+
+impl Reactor {
+    pub fn new(scheduler: Arc<Scheduler>) -> Reactor {
+        Reactor::with_config(scheduler, ReactorConfig::default())
+    }
+
+    pub fn with_config(scheduler: Arc<Scheduler>, cfg: ReactorConfig) -> Reactor {
+        Reactor {
+            ctx: Arc::new(ServerCtx::new(scheduler, cfg.queue)),
+            cfg,
+        }
+    }
+
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.ctx.shutdown)
+    }
+
+    /// Bind and multiplex until a shutdown command arrives. Reports the
+    /// bound address through `on_bound` (lets tests/examples use port 0).
+    pub fn serve(
+        &self,
+        addr: &str,
+        on_bound: impl FnOnce(std::net::SocketAddr),
+    ) -> std::io::Result<()> {
+        let cfg = self.cfg;
+        let ctx = &self.ctx;
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        log_info!("reactor", "listening on {local}");
+        on_bound(local);
+
+        // Loopback self-wake pair: workers signal completions through
+        // `mailbox.wake` → `wake_rx` becomes readable → poll returns.
+        let wake_rx = UdpSocket::bind("127.0.0.1:0")?;
+        wake_rx.set_nonblocking(true)?;
+        let wake_tx = UdpSocket::bind("127.0.0.1:0")?;
+        wake_tx.set_nonblocking(true)?;
+        wake_tx.connect(wake_rx.local_addr()?)?;
+        let mailbox = Arc::new(Mailbox {
+            done: Mutex::new(Vec::new()),
+            wake: wake_tx,
+        });
+
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut next_token: u64 = 1;
+        let mut fds: Vec<sys::PollFd> = Vec::new();
+        let mut order: Vec<u64> = Vec::new();
+        let mut grace_rounds_left: Option<u32> = None;
+
+        loop {
+            let shutting_down = ctx.shutdown.load(Ordering::SeqCst);
+            if shutting_down && grace_rounds_left.is_none() {
+                grace_rounds_left = Some(50); // ≈5 s at the 100 ms tick
+            }
+
+            fds.clear();
+            order.clear();
+            let accepting = !shutting_down && conns.len() < cfg.max_conns;
+            fds.push(sys::PollFd {
+                fd: raw_fd(&listener),
+                events: if accepting { sys::POLLIN } else { 0 },
+                revents: 0,
+            });
+            fds.push(sys::PollFd {
+                fd: raw_fd(&wake_rx),
+                events: sys::POLLIN,
+                revents: 0,
+            });
+            for (tok, c) in conns.iter() {
+                let mut ev = 0;
+                if !c.read_closed && !c.paused(&cfg) {
+                    ev |= sys::POLLIN;
+                }
+                if !c.out.is_empty() {
+                    ev |= sys::POLLOUT;
+                }
+                fds.push(sys::PollFd {
+                    fd: c.fd,
+                    events: ev,
+                    revents: 0,
+                });
+                order.push(*tok);
+            }
+
+            sys::poll_wait(&mut fds, 100)?;
+
+            // Drain wake datagrams (their only content is "look at the
+            // mailbox").
+            if fds[1].revents & (sys::POLLIN | sys::POLLERR) != 0 {
+                let mut sink = [0u8; 64];
+                while wake_rx.recv(&mut sink).is_ok() {}
+            }
+
+            // Completions from the queue workers.
+            let batch = std::mem::take(&mut *mailbox.done.lock().unwrap());
+            for d in batch {
+                let Some(c) = conns.get_mut(&d.token) else {
+                    continue; // client vanished mid-job; result dropped
+                };
+                match d.sweep {
+                    Some((sid, idx)) => {
+                        apply_sweep_result(c, ctx, sid, idx, d.result, true);
+                    }
+                    None => {
+                        c.inflight_runs = c.inflight_runs.saturating_sub(1);
+                        let reply = match d.result {
+                            Ok(r) => Json::obj(vec![
+                                ("ok", true.into()),
+                                ("result", r.to_json()),
+                            ]),
+                            Err(e) => {
+                                ctx.scheduler
+                                    .metrics
+                                    .jobs_failed
+                                    .fetch_add(1, Ordering::Relaxed);
+                                err_reply(e.to_string())
+                            }
+                        };
+                        c.reply(d.req, reply);
+                    }
+                }
+            }
+
+            // New connections.
+            if accepting && fds[0].revents & sys::POLLIN != 0 {
+                loop {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            if conns.len() >= cfg.max_conns {
+                                drop(stream);
+                                log_warn!("reactor", "refusing {peer}: connection limit");
+                                continue;
+                            }
+                            if stream.set_nonblocking(true).is_err() {
+                                continue;
+                            }
+                            let _ = stream.set_nodelay(true);
+                            ctx.scheduler
+                                .metrics
+                                .conns_accepted
+                                .fetch_add(1, Ordering::Relaxed);
+                            let tok = next_token;
+                            next_token += 1;
+                            conns.insert(tok, Conn::new(stream, cfg.max_frame));
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(e) => return Err(e),
+                    }
+                }
+            }
+
+            // Socket readiness per connection.
+            for (i, tok) in order.iter().enumerate() {
+                let revents = fds[i + 2].revents;
+                let Some(c) = conns.get_mut(tok) else { continue };
+                if revents & sys::POLLERR != 0 {
+                    c.dead = true;
+                    continue;
+                }
+                if revents & (sys::POLLIN | sys::POLLHUP) != 0 && !c.read_closed {
+                    c.read_in();
+                }
+            }
+
+            // Frame processing, sweep pumping, reply transfer, writes.
+            for (tok, c) in conns.iter_mut() {
+                if c.dead {
+                    continue;
+                }
+                while !c.paused(&cfg) {
+                    match c.frames.next_frame() {
+                        Some(Frame::Line(line)) => {
+                            if line.trim().is_empty() {
+                                continue;
+                            }
+                            handle_request(c, *tok, &line, ctx, &mailbox, &cfg);
+                        }
+                        Some(Frame::Oversized { limit }) => {
+                            ctx.scheduler
+                                .metrics
+                                .frames_oversized
+                                .fetch_add(1, Ordering::Relaxed);
+                            let req = c.new_slot();
+                            c.reply(
+                                req,
+                                err_reply(format!("frame exceeds {limit} byte limit")),
+                            );
+                        }
+                        None => break,
+                    }
+                }
+                pump_sweeps(c, *tok, ctx, &mailbox, &cfg);
+                c.fill_out(&cfg);
+                c.write_out();
+                if c.backlog() > cfg.hard_cap {
+                    ctx.scheduler
+                        .metrics
+                        .slow_client_drops
+                        .fetch_add(1, Ordering::Relaxed);
+                    log_warn!("reactor", "dropping slow client ({} bytes backlog)", c.backlog());
+                    c.dead = true;
+                }
+            }
+
+            // Reap: broken connections, and quiet ones whose client
+            // already said goodbye.
+            let force_close = grace_rounds_left == Some(0);
+            conns.retain(|_, c| {
+                let quiet = c.idle() && (c.read_closed || shutting_down);
+                let gone = c.dead || quiet || force_close;
+                if gone {
+                    if let Some(sp) = c.span.take() {
+                        span::global().finish(sp);
+                    }
+                    ctx.scheduler
+                        .metrics
+                        .conns_closed
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                !gone
+            });
+
+            if let Some(g) = grace_rounds_left.as_mut() {
+                if conns.is_empty() {
+                    break;
+                }
+                if *g == 0 {
+                    break;
+                }
+                *g -= 1;
+            }
+        }
+
+        ctx.queue.shutdown();
+        log_info!("reactor", "shut down");
+        Ok(())
+    }
+}
+
+fn handle_request(
+    c: &mut Conn,
+    token: u64,
+    line: &str,
+    ctx: &Arc<ServerCtx>,
+    mailbox: &Arc<Mailbox>,
+    cfg: &ReactorConfig,
+) {
+    let req_id = c.new_slot();
+    let req = match json::parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            c.reply(req_id, err_reply(format!("bad json: {e}")));
+            return;
+        }
+    };
+    if let Some(reply) = dispatch_control(&req, ctx) {
+        c.reply(req_id, reply);
+        return;
+    }
+    match req.get("cmd").and_then(Json::as_str) {
+        Some("run") => handle_run(c, token, req_id, &req, ctx, mailbox),
+        Some("sweep") => handle_sweep(c, req_id, &req, ctx, cfg),
+        Some("results") => handle_results(c, req_id, &req),
+        _ => c.reply(
+            req_id,
+            err_reply("unknown cmd (ping|run|sweep|results|maps|metrics|trace|shutdown)".into()),
+        ),
+    }
+}
+
+fn handle_run(
+    c: &mut Conn,
+    token: u64,
+    req_id: u64,
+    req: &Json,
+    ctx: &Arc<ServerCtx>,
+    mailbox: &Arc<Mailbox>,
+) {
+    let metrics = &ctx.scheduler.metrics;
+    metrics.jobs_accepted.fetch_add(1, Ordering::Relaxed);
+    let Some(job) = Job::from_json(req) else {
+        c.reply(req_id, err_reply("invalid job (need workload, nb, map)".into()));
+        return;
+    };
+    let priority = match req.get("priority").and_then(Json::as_str) {
+        None => Priority::Normal,
+        Some(s) => match Priority::parse(s) {
+            Some(p) => p,
+            None => {
+                c.reply(req_id, err_reply(format!("unknown priority {s}")));
+                return;
+            }
+        },
+    };
+    // Accept span: admission → completion (the reply transfer happens
+    // on the loop right after, so this is the client-visible latency
+    // minus socket time).
+    let accept = span::global().start("server", "accept", 0);
+    let attrs = vec![
+        ("workload", job.workload.name().to_string()),
+        ("map", job.map.clone()),
+    ];
+    let mb = Arc::clone(mailbox);
+    match ctx.queue.submit_async(job, priority, token, move |result| {
+        span::global().finish_with(accept, attrs);
+        mb.push(Done {
+            token,
+            req: req_id,
+            sweep: None,
+            result,
+        });
+    }) {
+        Ok(()) => c.inflight_runs += 1,
+        Err(e) => {
+            metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            c.reply(req_id, err_reply(e.to_string()));
+        }
+    }
+}
+
+fn handle_sweep(
+    c: &mut Conn,
+    req_id: u64,
+    req: &Json,
+    ctx: &Arc<ServerCtx>,
+    cfg: &ReactorConfig,
+) {
+    let (jobs, opts) = match expand_sweep(req, cfg.sweep_window, cfg.max_sweep_jobs) {
+        Ok(x) => x,
+        Err(msg) => {
+            c.reply(req_id, err_reply(msg));
+            return;
+        }
+    };
+    let active = c.sweeps.values().filter(|s| !s.finished).count();
+    if active >= cfg.max_sweeps_per_conn {
+        c.reply(
+            req_id,
+            err_reply(format!(
+                "too many active sweeps ({active}); wait for one to finish"
+            )),
+        );
+        return;
+    }
+    // Evict the oldest finished sweep once the pagination store is at
+    // capacity — bounded memory per connection.
+    while c.sweeps.len() >= cfg.max_sweeps_per_conn * 2 {
+        let oldest_done = c
+            .sweeps
+            .iter()
+            .find(|(_, s)| s.finished)
+            .map(|(id, _)| *id);
+        match oldest_done {
+            Some(id) => {
+                c.sweeps.remove(&id);
+            }
+            None => break,
+        }
+    }
+    let sid = c.next_sweep;
+    c.next_sweep += 1;
+    let metrics = &ctx.scheduler.metrics;
+    metrics.sweeps_started.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .jobs_accepted
+        .fetch_add(jobs.len() as u64, Ordering::Relaxed);
+    let n = jobs.len();
+    let ack = Json::obj(vec![
+        ("ok", true.into()),
+        ("sweep", sid.into()),
+        ("jobs", (n as u64).into()),
+        ("streaming", opts.stream.into()),
+    ]);
+    c.push_frame(req_id, ack);
+    if !opts.stream {
+        // Non-streaming sweeps answer just the ack; rows arrive via
+        // `results` pagination. The slot closes so later requests
+        // (e.g. the polls) are not blocked behind the fan-out.
+        c.finish_slot(req_id);
+    }
+    c.sweeps.insert(
+        sid,
+        SweepState {
+            req: req_id,
+            results: vec![None; n],
+            jobs,
+            next_submit: 0,
+            in_flight: 0,
+            completed: 0,
+            failed: 0,
+            stream: opts.stream,
+            window: opts.window,
+            priority: opts.priority,
+            started: Instant::now(),
+            finished: false,
+            span: Some(span::global().start("server", "sweep", 0)),
+        },
+    );
+    // Rows are submitted by `pump_sweeps` on this same loop iteration.
+}
+
+fn handle_results(c: &mut Conn, req_id: u64, req: &Json) {
+    let Some(sid) = req.get("sweep").and_then(Json::as_u64) else {
+        c.reply(req_id, err_reply("results needs a sweep id".into()));
+        return;
+    };
+    let Some(st) = c.sweeps.get(&sid) else {
+        c.reply(
+            req_id,
+            err_reply(format!(
+                "unknown sweep {sid} (results are per-connection and bounded)"
+            )),
+        );
+        return;
+    };
+    let cursor = req.get("cursor").and_then(Json::as_u64).unwrap_or(0) as usize;
+    let limit = req
+        .get("limit")
+        .and_then(Json::as_u64)
+        .unwrap_or(64)
+        .clamp(1, 256) as usize;
+    let total = st.results.len();
+    let end = cursor.saturating_add(limit).min(total);
+    let page: Vec<Json> = st
+        .results
+        .get(cursor.min(total)..end)
+        .unwrap_or(&[])
+        .iter()
+        .map(|r| r.clone().unwrap_or(Json::Null))
+        .collect();
+    let next = if end < total {
+        Json::from(end as u64)
+    } else {
+        Json::Null
+    };
+    let reply = Json::obj(vec![
+        ("ok", true.into()),
+        ("sweep", sid.into()),
+        ("jobs", (total as u64).into()),
+        ("cursor", (cursor as u64).into()),
+        ("done", st.finished.into()),
+        ("results", Json::Arr(page)),
+        ("next_cursor", next),
+    ]);
+    c.reply(req_id, reply);
+}
+
+/// Submit sweep rows up to each sweep's in-flight window. `QueueFull`
+/// stops the pump without failing the row — the next completion frees
+/// queue space and wakes the loop, which retries here. This is what
+/// keeps `queue_depth ≤ capacity` while a 4096-row sweep drains.
+fn pump_sweeps(
+    c: &mut Conn,
+    token: u64,
+    ctx: &Arc<ServerCtx>,
+    mailbox: &Arc<Mailbox>,
+    cfg: &ReactorConfig,
+) {
+    // A backlogged client stops receiving new rows: in-flight ones
+    // finish (bounded by the window), then the fan-out idles until the
+    // client drains — memory stays bounded without dropping results.
+    if c.paused(cfg) {
+        return;
+    }
+    let mut hard_failures: Vec<(u64, usize, ScheduleError)> = Vec::new();
+    for (&sid, st) in c.sweeps.iter_mut() {
+        while !st.finished && st.next_submit < st.jobs.len() && st.in_flight < st.window {
+            let idx = st.next_submit;
+            let job = st.jobs[idx].clone();
+            let mb = Arc::clone(mailbox);
+            match ctx.queue.submit_async(job, st.priority, token, move |result| {
+                mb.push(Done {
+                    token,
+                    req: 0,
+                    sweep: Some((sid, idx)),
+                    result,
+                });
+            }) {
+                Ok(()) => {
+                    st.in_flight += 1;
+                    st.next_submit += 1;
+                }
+                Err(ScheduleError::QueueFull(_)) => return,
+                Err(e) => {
+                    // Shutdown and friends: fail the row, move on.
+                    st.next_submit += 1;
+                    hard_failures.push((sid, idx, e));
+                }
+            }
+        }
+    }
+    for (sid, idx, e) in hard_failures {
+        apply_sweep_result(c, ctx, sid, idx, Err(e), false);
+    }
+}
+
+/// Land one sweep row: reassemble into the row-order store, stream the
+/// frame if requested, close out the sweep when the last row lands.
+fn apply_sweep_result(
+    c: &mut Conn,
+    ctx: &Arc<ServerCtx>,
+    sid: u64,
+    idx: usize,
+    result: Result<JobResult, ScheduleError>,
+    from_queue: bool,
+) {
+    let metrics = &ctx.scheduler.metrics;
+    let Some(st) = c.sweeps.get_mut(&sid) else {
+        return;
+    };
+    if from_queue {
+        st.in_flight = st.in_flight.saturating_sub(1);
+    }
+    if idx >= st.results.len() || st.results[idx].is_some() {
+        return; // structurally impossible duplicate; never double-count
+    }
+    let ok = result.is_ok();
+    let frame = match result {
+        Ok(r) => Json::obj(vec![
+            ("sweep", sid.into()),
+            ("job", (idx as u64).into()),
+            ("ok", true.into()),
+            ("result", r.to_json()),
+        ]),
+        Err(e) => Json::obj(vec![
+            ("sweep", sid.into()),
+            ("job", (idx as u64).into()),
+            ("ok", false.into()),
+            ("error", e.to_string().into()),
+        ]),
+    };
+    if ok {
+        st.completed += 1;
+    } else {
+        st.failed += 1;
+        metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+    }
+    metrics.sweep_jobs_completed.fetch_add(1, Ordering::Relaxed);
+    let mut texts: Vec<String> = Vec::new();
+    if st.stream {
+        texts.push(frame.to_string_compact());
+    }
+    st.results[idx] = Some(frame);
+    let req = st.req;
+    let stream = st.stream;
+    let finished_now = st.completed + st.failed == st.results.len() as u64;
+    if finished_now {
+        st.finished = true;
+        metrics.sweeps_completed.fetch_add(1, Ordering::Relaxed);
+        metrics.record_sweep_wall(st.started.elapsed().as_secs_f64());
+        let (jobs, completed, failed) =
+            (st.results.len() as u64, st.completed, st.failed);
+        if let Some(sp) = st.span.take() {
+            span::global().finish_with(sp, vec![("jobs", jobs.to_string())]);
+        }
+        if stream {
+            texts.push(
+                Json::obj(vec![
+                    ("sweep", sid.into()),
+                    ("done", true.into()),
+                    ("jobs", jobs.into()),
+                    ("completed", completed.into()),
+                    ("failed", failed.into()),
+                ])
+                .to_string_compact(),
+            );
+        }
+    }
+    for t in texts {
+        c.push_frame_text(req, t);
+    }
+    if finished_now && stream {
+        c.finish_slot(req);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expand_sweep_defaults_match_cli_sweep_roster() {
+        let req = json::parse(r#"{"cmd":"sweep","workloads":["edm"],"nbs":[8]}"#).unwrap();
+        let (jobs, opts) = expand_sweep(&req, 16, 4096).expect("valid sweep");
+        let maps: Vec<&str> = jobs.iter().map(|j| j.map.as_str()).collect();
+        assert_eq!(maps, vec!["bb", "lambda2", "enum2", "rb", "ries", "lambda-s"]);
+        assert!(jobs.iter().all(|j| j.nb == 8 && j.seed == 42));
+        assert_eq!(
+            opts,
+            SweepOpts {
+                stream: true,
+                window: 16,
+                priority: Priority::Normal
+            }
+        );
+    }
+
+    #[test]
+    fn expand_sweep_is_row_major_over_workloads_maps_nbs() {
+        let req = json::parse(
+            r#"{"cmd":"sweep","workloads":["edm","nbody"],"maps":["bb","lambda2"],
+                "nbs":[4,8],"seed":7,"stream":false,"window":3,"priority":"low"}"#,
+        )
+        .unwrap();
+        let (jobs, opts) = expand_sweep(&req, 16, 4096).unwrap();
+        let rows: Vec<(String, String, u64)> = jobs
+            .iter()
+            .map(|j| (j.workload.name().to_string(), j.map.clone(), j.nb))
+            .collect();
+        let expect = [
+            ("edm", "bb", 4),
+            ("edm", "bb", 8),
+            ("edm", "lambda2", 4),
+            ("edm", "lambda2", 8),
+            ("nbody", "bb", 4),
+            ("nbody", "bb", 8),
+            ("nbody", "lambda2", 4),
+            ("nbody", "lambda2", 8),
+        ];
+        let expect: Vec<(String, String, u64)> = expect
+            .iter()
+            .map(|(w, m, n)| (w.to_string(), m.to_string(), *n))
+            .collect();
+        assert_eq!(rows, expect);
+        assert_eq!(
+            opts,
+            SweepOpts {
+                stream: false,
+                window: 3,
+                priority: Priority::Low
+            }
+        );
+        assert!(jobs.iter().all(|j| j.seed == 7));
+    }
+
+    #[test]
+    fn expand_sweep_rejects_malformed_requests() {
+        let bad = [
+            r#"{"cmd":"sweep"}"#,
+            r#"{"cmd":"sweep","workloads":[],"nbs":[8]}"#,
+            r#"{"cmd":"sweep","workloads":["edm"]}"#,
+            r#"{"cmd":"sweep","workloads":["edm"],"nbs":[]}"#,
+            r#"{"cmd":"sweep","workloads":["dance"],"nbs":[8]}"#,
+            r#"{"cmd":"sweep","workloads":["edm"],"nbs":[8],"priority":"urgent"}"#,
+            r#"{"cmd":"sweep","workloads":["edm"],"nbs":[8],"backend":"tpu"}"#,
+            r#"{"cmd":"sweep","workloads":"edm","nbs":[8]}"#,
+        ];
+        for b in bad {
+            let req = json::parse(b).unwrap();
+            assert!(expand_sweep(&req, 16, 4096).is_err(), "{b}");
+        }
+    }
+
+    #[test]
+    fn expand_sweep_enforces_row_ceiling() {
+        let req = json::parse(
+            r#"{"cmd":"sweep","workloads":["edm"],"maps":["bb"],"nbs":[4,8,16,32]}"#,
+        )
+        .unwrap();
+        assert!(expand_sweep(&req, 16, 4).is_ok());
+        let err = expand_sweep(&req, 16, 3).unwrap_err();
+        assert!(err.contains("over the 3"), "{err}");
+    }
+
+    #[test]
+    fn poll_wait_times_out_with_no_fds() {
+        let mut fds: Vec<sys::PollFd> = Vec::new();
+        let t = Instant::now();
+        let n = sys::poll_wait(&mut fds, 10).unwrap();
+        assert_eq!(n, 0);
+        assert!(t.elapsed().as_millis() >= 5, "timeout must actually wait");
+    }
+
+    #[test]
+    fn reactor_config_env_floors() {
+        let d = ReactorConfig::default();
+        assert!(d.soft_watermark < d.hard_cap);
+        assert!(d.max_sweep_jobs >= d.sweep_window);
+        let e = ReactorConfig::from_env();
+        assert!(e.max_frame >= 64);
+        assert!(e.sweep_window >= 1);
+    }
+}

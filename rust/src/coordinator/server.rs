@@ -33,6 +33,12 @@
 //!
 //! Errors come back as `{"ok":false,"error":"…"}` — the connection
 //! stays usable (a malformed job must not kill the leader).
+//!
+//! This module is the *threaded* mode (one blocking thread per
+//! connection) — the measurable baseline. The poll-based multiplexer
+//! in [`crate::coordinator::reactor`] serves the same protocol plus
+//! the streaming `sweep`/`results` commands on a single thread; both
+//! share [`ServerCtx`] and [`dispatch_control`].
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -96,11 +102,20 @@ impl Server {
             match listener.accept() {
                 Ok((stream, peer)) => {
                     log_info!("server", "connection from {peer}");
+                    self.ctx
+                        .scheduler
+                        .metrics
+                        .conns_accepted
+                        .fetch_add(1, Ordering::Relaxed);
                     let ctx = Arc::clone(&self.ctx);
                     conns.push(std::thread::spawn(move || {
                         if let Err(e) = handle_conn(stream, &ctx) {
                             log_warn!("server", "connection error: {e}");
                         }
+                        ctx.scheduler
+                            .metrics
+                            .conns_closed
+                            .fetch_add(1, Ordering::Relaxed);
                     }));
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -141,15 +156,22 @@ fn handle_conn(stream: TcpStream, ctx: &ServerCtx) -> std::io::Result<()> {
     Ok(())
 }
 
-/// Pure request → response mapping (unit-testable without sockets).
-pub fn dispatch(line: &str, ctx: &ServerCtx) -> Json {
-    let err = |msg: String| Json::obj(vec![("ok", false.into()), ("error", msg.into())]);
-    let req = match json::parse(line) {
-        Ok(j) => j,
-        Err(e) => return err(format!("bad json: {e}")),
-    };
+/// Standard error-reply shape shared by both server modes.
+pub fn err_reply(msg: String) -> Json {
+    Json::obj(vec![("ok", false.into()), ("error", msg.into())])
+}
+
+/// The synchronous control commands every server mode answers the same
+/// way: `ping`, `maps`, `metrics`, `trace`, `shutdown`. Returns `None`
+/// for anything else (`run`, `sweep`, …) — those are execution
+/// commands whose blocking behaviour differs per mode, so each server
+/// routes them itself.
+pub fn dispatch_control(req: &Json, ctx: &ServerCtx) -> Option<Json> {
     match req.get("cmd").and_then(Json::as_str) {
-        Some("ping") => Json::obj(vec![("ok", true.into()), ("pong", true.into())]),
+        Some("ping") => Some(Json::obj(vec![
+            ("ok", true.into()),
+            ("pong", true.into()),
+        ])),
         Some("maps") => {
             let mut per_m: Vec<(String, Json)> = (2..=crate::simplex::block_m::M_MAX as u32)
                 .map(|m| {
@@ -170,23 +192,23 @@ pub fn dispatch(line: &str, ctx: &ServerCtx) -> Json {
                         .collect(),
                 ),
             ));
-            Json::obj(vec![
+            Some(Json::obj(vec![
                 ("ok", true.into()),
                 ("maps", Json::Obj(per_m.into_iter().collect())),
-            ])
+            ]))
         }
         Some("metrics") => {
             if req.get("format").and_then(Json::as_str) == Some("prometheus") {
-                Json::obj(vec![
+                Some(Json::obj(vec![
                     ("ok", true.into()),
                     ("format", "prometheus".into()),
                     ("text", ctx.scheduler.metrics.prometheus().into()),
-                ])
+                ]))
             } else {
-                Json::obj(vec![
+                Some(Json::obj(vec![
                     ("ok", true.into()),
                     ("metrics", ctx.scheduler.metrics.snapshot()),
-                ])
+                ]))
             }
         }
         Some("trace") => {
@@ -196,17 +218,33 @@ pub fn dispatch(line: &str, ctx: &ServerCtx) -> Json {
             }
             let n = req.get("n").and_then(Json::as_u64).unwrap_or(256) as usize;
             let spans = recorder.snapshot_last(n);
-            Json::obj(vec![
+            Some(Json::obj(vec![
                 ("ok", true.into()),
                 ("enabled", recorder.enabled().into()),
                 ("spans", spans.len().into()),
                 ("trace", crate::coordinator::span::chrome_trace(&spans)),
-            ])
+            ]))
         }
         Some("shutdown") => {
             ctx.shutdown.store(true, Ordering::SeqCst);
-            Json::obj(vec![("ok", true.into())])
+            Some(Json::obj(vec![("ok", true.into())]))
         }
+        _ => None,
+    }
+}
+
+/// Pure request → response mapping for the threaded server
+/// (unit-testable without sockets).
+pub fn dispatch(line: &str, ctx: &ServerCtx) -> Json {
+    let err = err_reply;
+    let req = match json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return err(format!("bad json: {e}")),
+    };
+    if let Some(reply) = dispatch_control(&req, ctx) {
+        return reply;
+    }
+    match req.get("cmd").and_then(Json::as_str) {
         Some("run") => {
             ctx.scheduler
                 .metrics
@@ -241,6 +279,9 @@ pub fn dispatch(line: &str, ctx: &ServerCtx) -> Json {
                 }
             }
         }
+        Some("sweep") | Some("results") => err(
+            "sweep streaming needs the reactor server (restart with --mode reactor)".into(),
+        ),
         _ => err("unknown cmd (ping|run|maps|metrics|trace|shutdown)".into()),
     }
 }
@@ -407,6 +448,26 @@ mod tests {
                 .jobs_failed
                 .load(std::sync::atomic::Ordering::Relaxed),
             1
+        );
+    }
+
+    #[test]
+    fn dispatch_control_splits_sync_from_execution_cmds() {
+        let c = ctx();
+        let ping = json::parse(r#"{"cmd":"ping"}"#).unwrap();
+        assert!(dispatch_control(&ping, &c).is_some());
+        let run = json::parse(r#"{"cmd":"run","workload":"edm","nb":8,"map":"bb"}"#).unwrap();
+        assert!(
+            dispatch_control(&run, &c).is_none(),
+            "execution commands are each mode's own business"
+        );
+        // The threaded server points sweep clients at the reactor
+        // instead of silently running the fan-out serially.
+        let r = dispatch(r#"{"cmd":"sweep","workloads":["edm"]}"#, &c);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        assert!(
+            r.get("error").unwrap().as_str().unwrap().contains("reactor"),
+            "{r}"
         );
     }
 

@@ -7,8 +7,16 @@
 //!   run      --workload edm --nb 64 --map lambda2 --backend serial|parallel|pjrt
 //!            (--workload ktuple --m 4..8 runs the general-m subsystem;
 //!             --workload gasket runs the Sierpiński-gasket CA)
-//!   serve    --addr 127.0.0.1:7070            JSON-lines job server
+//!   serve    --addr 127.0.0.1:7070 --mode reactor|threaded
+//!            JSON-lines job server: the poll reactor multiplexes
+//!            thousands of connections on one thread (default);
+//!            threaded keeps one blocking thread per connection
 //!   sweep    --workload edm --nb 64           all maps side by side
+//!   client   run|sweep --addr 127.0.0.1:7070  wire client: submit a
+//!            job or a sweep fan-out (--workload a,b --nbs 8,16
+//!            --maps lambda2,bb --priority high --window 16) and
+//!            stream the per-job frames; --no-stream polls paginated
+//!            `results` pages instead
 //!   obs      snapshot|watch|bench-trajectory  observability client:
 //!            snapshot/watch pull `{"cmd":"metrics"}` from a running
 //!            server (--format prometheus for text exposition);
@@ -48,6 +56,13 @@ fn main() {
         opt("betas", "comma-separated arity values", Some("2,4,8,16,32")),
         opt("horizon", "n0 scan horizon", Some("1099511627776")),
         opt("addr", "server bind address", Some("127.0.0.1:7070")),
+        opt("mode", "serve loop: reactor|threaded", Some("reactor")),
+        opt("nbs", "client sweep sizes, comma-separated (default: --nb)", None),
+        opt("maps", "client sweep maps, comma-separated (default: full roster)", None),
+        opt("priority", "job priority: high|normal|low", Some("normal")),
+        opt("window", "client sweep in-flight window", Some("16")),
+        opt("limit", "client results page size", Some("64")),
+        flag("no-stream", "client sweep: poll paginated results instead of streaming"),
         opt("dir", "directory scanned for BENCH_*.json (obs)", Some(".")),
         opt("interval", "seconds between obs watch samples", Some("2")),
         opt("count", "obs watch samples before exit (0 = forever)", Some("0")),
@@ -70,7 +85,8 @@ fn main() {
     if args.flag("help") || args.positional().is_empty() {
         eprintln!("{}", args.usage());
         eprintln!(
-            "subcommands: report <table> | show | search | verify | run | sweep | serve | obs"
+            "subcommands: report <table> | show | search | verify | run | sweep | serve | \
+             client | obs"
         );
         std::process::exit(if args.flag("help") { 0 } else { 2 });
     }
@@ -89,6 +105,7 @@ fn dispatch(args: &Args) -> Result<(), String> {
         "run" => run(args, false),
         "sweep" => run(args, true),
         "serve" => serve(args),
+        "client" => client(args),
         "obs" => obs(args),
         other => Err(format!("unknown subcommand '{other}'")),
     }
@@ -375,23 +392,7 @@ fn run(args: &Args, sweep: bool) -> Result<(), String> {
 
     let gasket = workload.domain() == simplexmap::maps::DomainKind::Gasket;
     let maps: Vec<String> = if sweep {
-        if gasket {
-            // The dedicated gasket maps, plus two simplex covers to
-            // show the predication waste they pay on a fractal domain.
-            ["bb-gasket", "lambda-gasket", "bb", "lambda2"]
-                .iter()
-                .map(|s| s.to_string())
-                .collect()
-        } else if workload.m() >= 4 {
-            simplexmap::maps::map_names(workload.m())
-        } else {
-            let fixed: &[&str] = if workload.m() == 2 {
-                &["bb", "lambda2", "enum2", "rb", "ries", "lambda-s"]
-            } else {
-                &["bb", "lambda3", "enum3", "lambda-s"]
-            };
-            fixed.iter().map(|s| s.to_string()).collect()
-        }
+        workload.sweep_maps()
     } else {
         let default = if gasket {
             "lambda-gasket"
@@ -533,8 +534,171 @@ fn serve(args: &Args) -> Result<(), String> {
         eprintln!("note: artifacts missing — pjrt backend disabled for this server");
     }
     let addr = args.get("addr").unwrap();
-    let server = Server::new(Arc::new(sched));
-    server
-        .serve(addr, |bound| eprintln!("listening on {bound}"))
-        .map_err(|e| e.to_string())
+    let sched = Arc::new(sched);
+    match args.get("mode").unwrap() {
+        "threaded" => Server::new(sched)
+            .serve(addr, |bound| eprintln!("listening on {bound} (threaded)"))
+            .map_err(|e| e.to_string()),
+        "reactor" => {
+            let cfg = simplexmap::coordinator::ReactorConfig::from_env();
+            simplexmap::coordinator::Reactor::with_config(sched, cfg)
+                .serve(addr, |bound| eprintln!("listening on {bound} (reactor)"))
+                .map_err(|e| e.to_string())
+        }
+        other => Err(format!("unknown serve mode '{other}' (reactor|threaded)")),
+    }
+}
+
+/// Wire client: submit one `run` or a `sweep` fan-out over a single
+/// connection and print each reply frame as it arrives.
+fn client(args: &Args) -> Result<(), String> {
+    use std::io::{BufRead, BufReader};
+    let action = args.positional().get(1).map(|s| s.as_str()).unwrap_or("sweep");
+    let addr = args.get("addr").unwrap();
+    let stream =
+        std::net::TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone().map_err(|e| e.to_string())?;
+    let mut reader = BufReader::new(stream);
+    let mut read_frame = |what: &str| -> Result<Json, String> {
+        let mut line = String::new();
+        let n = reader
+            .read_line(&mut line)
+            .map_err(|e| format!("read {what}: {e}"))?;
+        if n == 0 {
+            return Err(format!("server closed the connection awaiting {what}"));
+        }
+        simplexmap::util::json::parse(line.trim()).map_err(|e| format!("bad {what}: {e}"))
+    };
+
+    let nb = args.get_u64("nb").map_err(|e| e.to_string())?.unwrap();
+    let seed = args.get_u64("seed").map_err(|e| e.to_string())?.unwrap();
+    let priority = args.get("priority").unwrap().to_string();
+    let backend = args.get("backend").unwrap().to_string();
+    match action {
+        "run" => {
+            let workload = args.get("workload").unwrap().to_string();
+            let map = args.get("map").unwrap_or("lambda2").to_string();
+            let req = Json::obj(vec![
+                ("cmd", "run".into()),
+                ("workload", workload.into()),
+                ("nb", nb.into()),
+                ("map", map.into()),
+                ("backend", backend.into()),
+                ("seed", seed.into()),
+                ("priority", priority.into()),
+            ]);
+            send_line(&mut writer, &req)?;
+            let reply = read_frame("reply")?;
+            println!("{}", reply.to_string_compact());
+            ok_or_err(&reply)
+        }
+        "sweep" => {
+            let comma = |key: &str| -> Option<Vec<Json>> {
+                args.get(key).map(|s| {
+                    s.split(',')
+                        .map(|p| Json::from(p.trim()))
+                        .collect::<Vec<Json>>()
+                })
+            };
+            let workloads =
+                comma("workload").ok_or("client sweep needs --workload a[,b,…]")?;
+            let nbs: Vec<Json> = match args.get("nbs") {
+                None => vec![nb.into()],
+                Some(s) => {
+                    let mut out = Vec::new();
+                    for p in s.split(',') {
+                        let v: u64 = p
+                            .trim()
+                            .parse()
+                            .map_err(|_| format!("bad --nbs entry '{}'", p.trim()))?;
+                        out.push(v.into());
+                    }
+                    out
+                }
+            };
+            let window = args.get_u64("window").map_err(|e| e.to_string())?.unwrap();
+            let stream_frames = !args.flag("no-stream");
+            let mut pairs = vec![
+                ("cmd", Json::from("sweep")),
+                ("workloads", Json::Arr(workloads)),
+                ("nbs", Json::Arr(nbs)),
+                ("backend", backend.into()),
+                ("seed", seed.into()),
+                ("priority", priority.into()),
+                ("window", window.into()),
+                ("stream", stream_frames.into()),
+            ];
+            if let Some(maps) = comma("maps") {
+                pairs.push(("maps", Json::Arr(maps)));
+            }
+            send_line(&mut writer, &Json::obj(pairs))?;
+            let ack = read_frame("sweep ack")?;
+            println!("{}", ack.to_string_compact());
+            ok_or_err(&ack)?;
+            let sid = ack.get("sweep").and_then(Json::as_u64).ok_or("ack has no sweep id")?;
+            let jobs = ack.get("jobs").and_then(Json::as_u64).unwrap_or(0);
+            if stream_frames {
+                loop {
+                    let frame = read_frame("stream frame")?;
+                    println!("{}", frame.to_string_compact());
+                    if frame.get("done").and_then(Json::as_bool) == Some(true) {
+                        return Ok(());
+                    }
+                }
+            }
+            // --no-stream: walk the paginated `results` pages, printing
+            // the monotone prefix of completed rows until all arrive.
+            let limit = args.get_u64("limit").map_err(|e| e.to_string())?.unwrap();
+            let mut cursor = 0u64;
+            while cursor < jobs {
+                let req = Json::obj(vec![
+                    ("cmd", "results".into()),
+                    ("sweep", sid.into()),
+                    ("cursor", cursor.into()),
+                    ("limit", limit.into()),
+                ]);
+                send_line(&mut writer, &req)?;
+                let page = read_frame("results page")?;
+                ok_or_err(&page)?;
+                let rows = page.get("results").and_then(Json::as_arr).unwrap_or(&[]);
+                let mut advanced = false;
+                for row in rows {
+                    if matches!(row, Json::Null) {
+                        break;
+                    }
+                    println!("{}", row.to_string_compact());
+                    cursor += 1;
+                    advanced = true;
+                }
+                if !advanced {
+                    std::thread::sleep(std::time::Duration::from_millis(25));
+                }
+            }
+            Ok(())
+        }
+        other => Err(format!("unknown client action '{other}' (run|sweep)")),
+    }
+}
+
+fn send_line(writer: &mut std::net::TcpStream, req: &Json) -> Result<(), String> {
+    use std::io::Write;
+    let mut line = req.to_string_compact();
+    line.push('\n');
+    writer
+        .write_all(line.as_bytes())
+        .and_then(|()| writer.flush())
+        .map_err(|e| format!("send: {e}"))
+}
+
+fn ok_or_err(reply: &Json) -> Result<(), String> {
+    if reply.get("ok").and_then(Json::as_bool) == Some(true) {
+        Ok(())
+    } else {
+        Err(reply
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("server refused the request")
+            .to_string())
+    }
 }

@@ -114,6 +114,48 @@ impl ThreadMap for LambdaScalable2 {
     }
 }
 
+/// ρ granularity the searched container aligns against — the m = 3
+/// block side of the default [`RhoPolicy`](crate::coordinator::RhoPolicy).
+const SEARCH_RHO: u64 = 8;
+
+/// ρ-aware container search for the m = 3 map (`lambda-sw`): instead
+/// of always taking `W = ⌈nb/2⌉`, scan the window
+/// `[max(min(W₀, ρ), W₀ − ρ), W₀ + ρ]` around the half-width `W₀` and
+/// pick the width minimizing the final-layer waste
+/// `W²·⌈Tet(nb)/W²⌉ − Tet(nb)`, tie-breaking toward ρ-aligned widths,
+/// then proximity to `W₀`, then the smaller width. The window always
+/// contains `W₀`, so the searched container is *never worse* than the
+/// fixed one (golden-pinned in the tests below). Cached per `nb` — the
+/// scan is ~17 integer divisions, but `map_block` asks for the width
+/// on every block.
+pub fn searched_width(nb: u64) -> u64 {
+    use std::collections::HashMap;
+    use std::sync::{OnceLock, RwLock};
+    static CACHE: OnceLock<RwLock<HashMap<u64, u64>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| RwLock::new(HashMap::new()));
+    if let Some(&w) = cache.read().unwrap().get(&nb) {
+        return w;
+    }
+    let w = search_width(nb);
+    cache.write().unwrap().insert(nb, w);
+    w
+}
+
+fn search_width(nb: u64) -> u64 {
+    let t = tetrahedron(nb);
+    let w0 = scalable_width(nb);
+    let lo = w0.min(SEARCH_RHO).max(w0.saturating_sub(SEARCH_RHO)).max(1);
+    let hi = w0 + SEARCH_RHO;
+    // Lexicographic (waste, ρ-misalignment, |W − W₀|, W): fully ordered,
+    // so the winner is deterministic.
+    let key = |w: u64| {
+        let ww = (w as u128) * (w as u128);
+        let waste = ww * t.div_ceil(ww) - t;
+        (waste, u64::from(w % SEARCH_RHO != 0), w.abs_diff(w0), w)
+    };
+    (lo..=hi).min_by_key(|&w| key(w)).unwrap_or(w0)
+}
+
 /// λ_S for the 3-simplex: `W × W × L` container, sub-layer waste.
 pub struct LambdaScalable3;
 
@@ -155,6 +197,56 @@ impl ThreadMap for LambdaScalable3 {
     #[inline]
     fn map_block(&self, nb: u64, _pass: u64, w: [u64; 3]) -> Option<[u64; 3]> {
         let width = scalable_width(nb);
+        let k = (w[2] * width + w[1]) * width + w[0];
+        if k as u128 >= tetrahedron(nb) {
+            return None; // final-layer rounding past the last element
+        }
+        let (x, y, z) = lambda_s3(k);
+        Some([x, y, z])
+    }
+}
+
+/// λ_S for the 3-simplex with the ρ-aware searched width
+/// ([`searched_width`]): same rearrangement, per-`nb` container choice.
+pub struct LambdaScalableRho3;
+
+impl LambdaScalableRho3 {
+    /// Layer count `⌈Tet(nb)/W²⌉` for the searched width.
+    #[inline]
+    fn layers(nb: u64) -> u64 {
+        let w = searched_width(nb) as u128;
+        tetrahedron(nb).div_ceil(w * w) as u64
+    }
+}
+
+impl ThreadMap for LambdaScalableRho3 {
+    fn name(&self) -> &'static str {
+        "lambda-sw"
+    }
+
+    fn m(&self) -> u32 {
+        3
+    }
+
+    fn supports(&self, nb: u64) -> bool {
+        // Same shape as LambdaScalable3::supports, but the searched
+        // width can sit up to ρ above ⌈nb/2⌉, so the padded-rank bound
+        // uses the window ceiling.
+        if nb == 0 || nb > 5_000_000 {
+            return false;
+        }
+        let w = (scalable_width(nb) + SEARCH_RHO) as u128;
+        tetrahedron(nb) + w * w <= u64::MAX as u128
+    }
+
+    fn grid(&self, nb: u64, _pass: u64) -> Orthotope {
+        let w = searched_width(nb);
+        Orthotope::d3(w, w, Self::layers(nb))
+    }
+
+    #[inline]
+    fn map_block(&self, nb: u64, _pass: u64, w: [u64; 3]) -> Option<[u64; 3]> {
+        let width = searched_width(nb);
         let k = (w[2] * width + w[1]) * width + w[0];
         if k as u128 >= tetrahedron(nb) {
             return None; // final-layer rounding past the last element
@@ -321,6 +413,66 @@ mod tests {
         assert!(LambdaScalable3.supports(4_800_000));
         assert!(!LambdaScalable3.supports(0));
         assert!(!LambdaScalable3.supports(u64::MAX));
+    }
+
+    #[test]
+    fn sw_container_matches_searched_goldens() {
+        // (nb, W, L, parallel, waste) — python-cross-checked; the
+        // issue's sizes {4, 8, 32, 4096} plus two mid sizes. nb = 16 is
+        // a case where the fixed half-width is already waste-optimal.
+        for (nb, w, l, parallel, waste) in [
+            (4u64, 2u64, 5u64, 20u128, 0u128),
+            (8, 11, 1, 121, 1),
+            (16, 8, 13, 832, 16),
+            (32, 9, 74, 5994, 10),
+            (64, 30, 51, 45900, 140),
+            (100, 43, 93, 171957, 257),
+            (4096, 2042, 2749, 11462681236, 1045140),
+        ] {
+            assert_eq!(searched_width(nb), w, "nb={nb}");
+            let g = LambdaScalableRho3.grid(nb, 0);
+            assert_eq!(g.dims, [w, w, l], "nb={nb}");
+            assert_eq!(LambdaScalableRho3.parallel_volume(nb), parallel, "nb={nb}");
+            assert_eq!(parallel - tetrahedron(nb), waste, "nb={nb}");
+        }
+    }
+
+    #[test]
+    fn sw_never_worse_than_fixed_half_width() {
+        // The search window always contains W₀ = ⌈nb/2⌉, so the chosen
+        // container can never launch more blocks than the fixed one —
+        // and the waste always stays under one searched layer.
+        for nb in (1..=400u64).chain([4096]) {
+            let fixed = LambdaScalable3.parallel_volume(nb);
+            let searched = LambdaScalableRho3.parallel_volume(nb);
+            assert!(searched <= fixed, "nb={nb}: searched {searched} > fixed {fixed}");
+            let w = searched_width(nb) as u128;
+            assert!(searched - tetrahedron(nb) < w * w, "nb={nb}");
+        }
+    }
+
+    #[test]
+    fn sw_covers_domain_exactly_once_at_awkward_sizes() {
+        // Registry-level conformance for all nb ≤ 32 rides along in
+        // tests/map_conformance.rs via MAP3_NAMES; here the sizes where
+        // the searched width differs most from ⌈nb/2⌉.
+        for nb in [1u64, 2, 3, 5, 7, 8, 9, 12, 15, 17, 21, 32] {
+            let map = LambdaScalableRho3;
+            assert!(map.supports(nb));
+            let mut seen = HashSet::new();
+            let mut filler = 0u128;
+            for w in map.grid(nb, 0).iter() {
+                match map.map_block(nb, 0, w) {
+                    None => filler += 1,
+                    Some(d) => {
+                        assert!(in_domain(nb, 3, d), "nb={nb}: {w:?} → {d:?}");
+                        assert!(seen.insert(d), "nb={nb}: dup {d:?}");
+                    }
+                }
+            }
+            assert_eq!(seen.len() as u128, domain_volume(nb, 3), "nb={nb}");
+            assert_eq!(filler, map.parallel_volume(nb) - domain_volume(nb, 3), "nb={nb}");
+        }
     }
 
     #[test]

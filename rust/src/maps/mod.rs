@@ -54,7 +54,7 @@ pub use lambda3::Lambda3Map;
 pub use lambda3_recursive::Lambda3RecMap;
 pub use lambda_gasket::{GasketBoundingBoxMap, GasketLambdaMap};
 pub use lambda_m::LambdaMMap;
-pub use lambda_scalable::{LambdaScalable2, LambdaScalable3};
+pub use lambda_scalable::{searched_width, LambdaScalable2, LambdaScalable3, LambdaScalableRho3};
 pub use mdim::{
     adapt, alpha_m, in_domain_m, map_by_name, map_names, map_names_for, space_efficiency_m,
     BoundingBoxM, FixedAdapter, MThreadMap,
@@ -139,6 +139,8 @@ pub fn fixed_map_by_name(m: u32, name: &str) -> Option<Box<dyn ThreadMap>> {
         // λ_S (arXiv 2208.11617): exact at arbitrary nb, integer roots.
         (2, "lambda-s" | "scalable") => Some(Box::new(LambdaScalable2)),
         (3, "lambda-s" | "scalable") => Some(Box::new(LambdaScalable3)),
+        // λ_S with the ρ-aware searched container width (per-nb W).
+        (3, "lambda-sw" | "scalable-rho") => Some(Box::new(LambdaScalableRho3)),
         // §III.A non-power-of-two approaches (1: from above, 2: below).
         (2, "above2" | "from-above") => Some(Box::new(CoverFromAbove::new(Lambda2Map))),
         (2, "below2" | "from-below") => Some(Box::new(CoverFromBelow2)),
@@ -164,7 +166,7 @@ pub fn map3_by_name(name: &str) -> Option<Box<dyn ThreadMap>> {
 pub const MAP2_NAMES: &[&str] =
     &["bb", "lambda2", "enum2", "rb", "ries", "avril", "above2", "below2", "lambda-s"];
 /// All registered 3-simplex map names.
-pub const MAP3_NAMES: &[&str] = &["bb", "lambda3", "enum3", "lambda3-rec", "lambda-s"];
+pub const MAP3_NAMES: &[&str] = &["bb", "lambda3", "enum3", "lambda3-rec", "lambda-s", "lambda-sw"];
 /// The gasket-domain map names (m = 2, [`DomainKind::Gasket`]) — listed
 /// separately from [`MAP2_NAMES`] because they cover a different data
 /// domain (the simplex conformance sweeps must not pick them up).

@@ -400,6 +400,269 @@ impl<'a> Parser<'a> {
     }
 }
 
+// ---------------------------------------------------------------------
+// Capped incremental framing (newline-delimited JSON over sockets)
+// ---------------------------------------------------------------------
+
+/// Default per-frame cap. A legitimate request is a few hundred bytes;
+/// 1 MiB leaves room for pathological-but-honest sweeps while bounding
+/// what an untrusted peer can make the server buffer.
+pub const DEFAULT_MAX_FRAME: usize = 1 << 20;
+
+/// One decoded item from a [`FrameBuffer`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum Frame {
+    /// A complete newline-terminated line (`\n` stripped, and a
+    /// trailing `\r` with it, so CRLF peers work unmodified).
+    Line(String),
+    /// A frame exceeded the cap. The offending bytes are dropped and
+    /// the stream resynchronizes at the next newline — exactly one
+    /// `Oversized` is reported per overlong frame, the moment the cap
+    /// trips, so the peer gets a prompt error instead of a hang.
+    Oversized { limit: usize },
+}
+
+/// Incremental capped reader for newline-delimited frames: feed raw
+/// socket bytes with [`push`](FrameBuffer::push), pull complete frames
+/// with [`next_frame`](FrameBuffer::next_frame). Hostile input can
+/// neither grow the buffer past the cap (overlong frames are discarded
+/// as they arrive, not accumulated) nor desynchronize it (partial
+/// reads reassemble; decoding resumes at the newline after a rejected
+/// frame). This is the SNIPPETS.md capped-reader shape, adapted to a
+/// non-blocking reactor: `push` never blocks and `next_frame` never
+/// waits.
+pub struct FrameBuffer {
+    buf: Vec<u8>,
+    max_frame: usize,
+    /// Inside an overlong frame whose terminating newline has not
+    /// arrived yet (its `Oversized` is already emitted): drop bytes
+    /// until the newline resynchronizes the stream.
+    skipping: bool,
+}
+
+impl FrameBuffer {
+    pub fn new(max_frame: usize) -> FrameBuffer {
+        FrameBuffer {
+            buf: Vec::new(),
+            max_frame: max_frame.max(1),
+            skipping: false,
+        }
+    }
+
+    /// Append raw bytes. While skipping an overlong frame, everything
+    /// up to the resynchronizing newline is dropped without buffering.
+    pub fn push(&mut self, bytes: &[u8]) {
+        if self.skipping {
+            match bytes.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    self.skipping = false;
+                    self.buf.extend_from_slice(&bytes[i + 1..]);
+                }
+                None => {} // still inside the oversized frame
+            }
+        } else {
+            self.buf.extend_from_slice(bytes);
+        }
+    }
+
+    /// Pull the next complete frame, if any. Call in a loop after each
+    /// `push` — one push can complete several frames.
+    pub fn next_frame(&mut self) -> Option<Frame> {
+        match self.buf.iter().position(|&b| b == b'\n') {
+            Some(i) if i <= self.max_frame => {
+                let mut line: Vec<u8> = self.buf.drain(..=i).collect();
+                line.pop(); // the newline
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                Some(Frame::Line(String::from_utf8_lossy(&line).into_owned()))
+            }
+            Some(i) => {
+                // Complete but overlong (arrived in one push): drop it
+                // whole and resynchronize immediately. `skipping` is
+                // never set here — a skipping buffer holds no
+                // pre-newline bytes by construction.
+                self.buf.drain(..=i);
+                Some(Frame::Oversized {
+                    limit: self.max_frame,
+                })
+            }
+            None if self.buf.len() > self.max_frame => {
+                // Cap tripped mid-frame: report once now (prompt error
+                // even if the newline never comes), then skip until
+                // the newline arrives — `push` clears `skipping`.
+                self.buf.clear();
+                self.skipping = true;
+                Some(Frame::Oversized {
+                    limit: self.max_frame,
+                })
+            }
+            None => None,
+        }
+    }
+
+    /// Bytes currently buffered (≤ cap + one read's worth by
+    /// construction, when frames are drained after every push).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+#[cfg(test)]
+mod frame_tests {
+    use super::*;
+
+    fn drain(fb: &mut FrameBuffer) -> Vec<Frame> {
+        let mut out = Vec::new();
+        while let Some(f) = fb.next_frame() {
+            out.push(f);
+        }
+        out
+    }
+
+    #[test]
+    fn frames_reassemble_across_partial_reads() {
+        let mut fb = FrameBuffer::new(64);
+        fb.push(b"{\"cmd\":\"pi");
+        assert_eq!(drain(&mut fb), vec![]);
+        fb.push(b"ng\"}\n{\"cmd\":");
+        assert_eq!(
+            drain(&mut fb),
+            vec![Frame::Line("{\"cmd\":\"ping\"}".into())]
+        );
+        fb.push(b"\"maps\"}\r\n");
+        assert_eq!(
+            drain(&mut fb),
+            vec![Frame::Line("{\"cmd\":\"maps\"}".into())]
+        );
+        assert_eq!(fb.buffered(), 0);
+    }
+
+    #[test]
+    fn one_push_can_complete_many_frames() {
+        let mut fb = FrameBuffer::new(64);
+        fb.push(b"a\nb\nc\n");
+        assert_eq!(
+            drain(&mut fb),
+            vec![
+                Frame::Line("a".into()),
+                Frame::Line("b".into()),
+                Frame::Line("c".into())
+            ]
+        );
+    }
+
+    #[test]
+    fn oversized_frame_rejected_promptly_not_on_newline() {
+        // The cap trips mid-frame: the error is reported immediately
+        // (no hang waiting for a newline the peer may never send) and
+        // memory stays bounded while the rest of the frame streams in.
+        let mut fb = FrameBuffer::new(16);
+        fb.push(&[b'x'; 17]);
+        assert_eq!(drain(&mut fb), vec![Frame::Oversized { limit: 16 }]);
+        for _ in 0..64 {
+            fb.push(&[b'x'; 1024]);
+            assert_eq!(drain(&mut fb), vec![]);
+            assert_eq!(fb.buffered(), 0, "skipped bytes must not accumulate");
+        }
+        // Resynchronizes at the newline; the next frame decodes clean.
+        fb.push(b"tail\nok\n");
+        assert_eq!(drain(&mut fb), vec![Frame::Line("ok".into())]);
+    }
+
+    #[test]
+    fn oversized_frame_in_one_push_reports_once_and_resyncs() {
+        let mut fb = FrameBuffer::new(8);
+        let mut hostile = vec![b'y'; 100];
+        hostile.push(b'\n');
+        hostile.extend_from_slice(b"{\"ok\":1}\n");
+        fb.push(&hostile);
+        assert_eq!(
+            drain(&mut fb),
+            vec![
+                Frame::Oversized { limit: 8 },
+                Frame::Line("{\"ok\":1}".into())
+            ]
+        );
+    }
+
+    #[test]
+    fn frame_exactly_at_cap_passes() {
+        let mut fb = FrameBuffer::new(4);
+        fb.push(b"abcd\nabcde\n");
+        assert_eq!(
+            drain(&mut fb),
+            vec![Frame::Line("abcd".into()), Frame::Oversized { limit: 4 }]
+        );
+    }
+
+    #[test]
+    fn empty_lines_and_crlf_are_distinct_frames() {
+        let mut fb = FrameBuffer::new(8);
+        fb.push(b"\n\r\nx\n");
+        assert_eq!(
+            drain(&mut fb),
+            vec![
+                Frame::Line(String::new()),
+                Frame::Line(String::new()),
+                Frame::Line("x".into())
+            ]
+        );
+    }
+
+    #[test]
+    fn hostile_seeded_fuzz_recovers_every_valid_frame() {
+        // Deterministic fuzz: interleave valid frames with overlong
+        // garbage runs, then replay the byte stream in seeded random
+        // chunk sizes. Every valid frame must come back exactly once,
+        // in order; every garbage run must produce exactly one
+        // Oversized; nothing may panic and the buffer must stay
+        // bounded.
+        use crate::util::prng::Xoshiro256;
+        let cap = 128usize;
+        for seed in 0..8u64 {
+            let mut rng = Xoshiro256::seed_from_u64(0x9e3779b9 ^ seed);
+            let mut stream = Vec::new();
+            let mut expect = Vec::new();
+            for i in 0..50 {
+                if rng.gen_range(0, 4) == 0 {
+                    // Garbage run past the cap (binary bytes, no
+                    // newline until the end).
+                    let len = cap + 1 + rng.gen_range(0, 512);
+                    for _ in 0..len {
+                        let b = rng.next_u32() as u8;
+                        stream.push(if b == b'\n' { b'.' } else { b });
+                    }
+                    stream.push(b'\n');
+                    expect.push(Frame::Oversized { limit: cap });
+                } else {
+                    let body =
+                        format!("{{\"i\":{i},\"pad\":\"{}\"}}", "p".repeat(rng.gen_range(0, 64)));
+                    assert!(body.len() <= cap);
+                    stream.extend_from_slice(body.as_bytes());
+                    stream.push(b'\n');
+                    expect.push(Frame::Line(body));
+                }
+            }
+            let mut fb = FrameBuffer::new(cap);
+            let mut got = Vec::new();
+            let mut off = 0;
+            while off < stream.len() {
+                let n = (1 + rng.gen_range(0, 97)).min(stream.len() - off);
+                fb.push(&stream[off..off + n]);
+                off += n;
+                got.extend(drain(&mut fb));
+                assert!(
+                    fb.buffered() <= cap + 97,
+                    "seed {seed}: buffer grew past cap+chunk: {}",
+                    fb.buffered()
+                );
+            }
+            assert_eq!(got, expect, "seed {seed}");
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

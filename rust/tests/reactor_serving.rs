@@ -1,0 +1,298 @@
+//! End-to-end serving through the poll reactor over real TCP: control
+//! commands, pipelined runs, streamed sweep fan-out, cursor-paginated
+//! results, capped-frame rejection, split-write reassembly, and clean
+//! shutdown — the wire contract of the multiplexed serving tier.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
+use simplexmap::coordinator::{Reactor, ReactorConfig, Scheduler};
+use simplexmap::util::json::{self, Json};
+
+fn start(cfg: ReactorConfig) -> (Arc<Scheduler>, SocketAddr, std::thread::JoinHandle<()>) {
+    let sched = Arc::new(Scheduler::new(2, None));
+    let reactor = Reactor::with_config(Arc::clone(&sched), cfg);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        reactor
+            .serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+            .unwrap();
+    });
+    (sched, rx.recv().unwrap(), handle)
+}
+
+fn connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+fn send(w: &mut TcpStream, line: &str) {
+    w.write_all(line.as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+    w.flush().unwrap();
+}
+
+fn recv(r: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    let n = r.read_line(&mut line).unwrap();
+    assert!(n > 0, "server closed the connection unexpectedly");
+    json::parse(line.trim()).unwrap_or_else(|e| panic!("bad frame {line:?}: {e}"))
+}
+
+fn is_ok(j: &Json) -> bool {
+    j.get("ok").and_then(Json::as_bool) == Some(true)
+}
+
+fn shutdown(addr: SocketAddr, handle: std::thread::JoinHandle<()>) {
+    let (mut w, mut r) = connect(addr);
+    send(&mut w, r#"{"cmd":"shutdown"}"#);
+    assert!(is_ok(&recv(&mut r)), "shutdown must ack");
+    drop((w, r));
+    handle.join().expect("reactor thread must exit after shutdown");
+}
+
+#[test]
+fn control_commands_and_pipelined_runs_answer_in_order() {
+    let (_sched, addr, handle) = start(ReactorConfig::default());
+    let (mut w, mut r) = connect(addr);
+
+    send(&mut w, r#"{"cmd":"ping"}"#);
+    let pong = recv(&mut r);
+    assert!(is_ok(&pong));
+    assert_eq!(pong.get("pong").and_then(Json::as_bool), Some(true));
+
+    // Pipeline: two runs and a ping written back-to-back; replies must
+    // come back in request order (slots), with the ping answering only
+    // after both runs despite being instant.
+    send(&mut w, r#"{"cmd":"run","workload":"edm","nb":8,"map":"lambda2","seed":1}"#);
+    send(&mut w, r#"{"cmd":"run","workload":"edm","nb":4,"map":"bb","seed":2}"#);
+    send(&mut w, r#"{"cmd":"ping"}"#);
+    let first = recv(&mut r);
+    let second = recv(&mut r);
+    let third = recv(&mut r);
+    assert!(is_ok(&first) && is_ok(&second) && is_ok(&third), "all three must succeed");
+    let nb_of = |j: &Json| {
+        let job = j.get("result").and_then(|r| r.get("job"))?;
+        job.get("nb").and_then(Json::as_u64)
+    };
+    assert_eq!(nb_of(&first), Some(8), "first reply answers the first request");
+    assert_eq!(nb_of(&second), Some(4));
+    assert_eq!(third.get("pong").and_then(Json::as_bool), Some(true));
+
+    // Errors are replies, not disconnects: the conn stays usable.
+    send(&mut w, r#"{"cmd":"run","workload":"edm","nb":8,"map":"lambda2","priority":"urgent"}"#);
+    let bad = recv(&mut r);
+    assert!(!is_ok(&bad));
+    let msg = bad.get("error").and_then(Json::as_str).unwrap();
+    assert!(msg.contains("priority"), "{bad:?}");
+    send(&mut w, r#"{"cmd":"run","workload":"edm"}"#);
+    assert!(!is_ok(&recv(&mut r)), "invalid job must refuse");
+    send(&mut w, r#"{"cmd":"dance"}"#);
+    let unknown = recv(&mut r);
+    assert!(!is_ok(&unknown));
+    let msg = unknown.get("error").and_then(Json::as_str).unwrap();
+    assert!(msg.contains("unknown cmd"), "{unknown:?}");
+    send(&mut w, r#"{"cmd":"ping"}"#);
+    assert!(is_ok(&recv(&mut r)), "conn survives all error replies");
+
+    drop((w, r));
+    shutdown(addr, handle);
+}
+
+#[test]
+fn sweep_streams_every_row_exactly_once_then_a_done_frame() {
+    let (sched, addr, handle) = start(ReactorConfig::default());
+    let (mut w, mut r) = connect(addr);
+    send(
+        &mut w,
+        r#"{"cmd":"sweep","workloads":["edm"],"maps":["lambda2","bb"],"nbs":[4,8],"seed":9}"#,
+    );
+    let ack = recv(&mut r);
+    assert!(is_ok(&ack), "{ack:?}");
+    let sid = ack.get("sweep").and_then(Json::as_u64).unwrap();
+    assert_eq!(ack.get("jobs").and_then(Json::as_u64), Some(4));
+    assert_eq!(ack.get("streaming").and_then(Json::as_bool), Some(true));
+
+    let mut seen = [false; 4];
+    loop {
+        let frame = recv(&mut r);
+        assert_eq!(frame.get("sweep").and_then(Json::as_u64), Some(sid));
+        if frame.get("done").and_then(Json::as_bool) == Some(true) {
+            assert_eq!(frame.get("jobs").and_then(Json::as_u64), Some(4));
+            assert_eq!(frame.get("completed").and_then(Json::as_u64), Some(4));
+            assert_eq!(frame.get("failed").and_then(Json::as_u64), Some(0));
+            break;
+        }
+        let idx = frame.get("job").and_then(Json::as_u64).unwrap() as usize;
+        assert!(!seen[idx], "row {idx} streamed twice");
+        seen[idx] = true;
+        assert!(is_ok(&frame));
+        // Row-major expansion: maps × nbs ⇒ rows (lambda2,4) (lambda2,8)
+        // (bb,4) (bb,8).
+        let job = frame.get("result").and_then(|r| r.get("job")).unwrap();
+        let expect_map = if idx < 2 { "lambda2" } else { "bb" };
+        let expect_nb = if idx % 2 == 0 { 4 } else { 8 };
+        assert_eq!(job.get("map").and_then(Json::as_str), Some(expect_map), "row {idx}");
+        assert_eq!(job.get("nb").and_then(Json::as_u64), Some(expect_nb), "row {idx}");
+        assert_eq!(job.get("seed").and_then(Json::as_u64), Some(9));
+    }
+    assert!(seen.iter().all(|s| *s), "every row must stream");
+
+    // Serving metrics observed the sweep.
+    let snap = sched.metrics.snapshot();
+    assert_eq!(snap.get("sweeps_started").unwrap().as_u64(), Some(1));
+    assert_eq!(snap.get("sweeps_completed").unwrap().as_u64(), Some(1));
+    assert_eq!(snap.get("sweep_jobs_completed").unwrap().as_u64(), Some(4));
+    assert_eq!(snap.get("sweep_wall").unwrap().get("count").unwrap().as_u64(), Some(1));
+
+    drop((w, r));
+    shutdown(addr, handle);
+}
+
+#[test]
+fn non_streaming_sweep_pages_through_results_with_cursors() {
+    let (_sched, addr, handle) = start(ReactorConfig::default());
+    let (mut w, mut r) = connect(addr);
+    let mut req = String::from(r#"{"cmd":"sweep","workloads":["edm"],"maps":["bb"],"#);
+    req.push_str(r#""nbs":[4,8,12,16,20],"stream":false}"#);
+    send(&mut w, &req);
+    let ack = recv(&mut r);
+    assert!(is_ok(&ack), "{ack:?}");
+    assert_eq!(ack.get("streaming").and_then(Json::as_bool), Some(false));
+    let sid = ack.get("sweep").and_then(Json::as_u64).unwrap();
+
+    // Poll pages of 2 until the sweep reports done and no row is null.
+    let expected_nbs = [4u64, 8, 12, 16, 20];
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    'poll: loop {
+        assert!(std::time::Instant::now() < deadline, "sweep never completed");
+        let mut rows: Vec<Json> = Vec::new();
+        let mut cursor = 0u64;
+        loop {
+            send(
+                &mut w,
+                &format!(r#"{{"cmd":"results","sweep":{sid},"cursor":{cursor},"limit":2}}"#),
+            );
+            let page = recv(&mut r);
+            assert!(is_ok(&page), "{page:?}");
+            assert_eq!(page.get("jobs").and_then(Json::as_u64), Some(5));
+            assert_eq!(page.get("cursor").and_then(Json::as_u64), Some(cursor));
+            let chunk = page.get("results").and_then(Json::as_arr).unwrap();
+            assert!(chunk.len() <= 2, "limit respected");
+            rows.extend(chunk.iter().cloned());
+            match page.get("next_cursor").and_then(Json::as_u64) {
+                Some(next) => {
+                    assert_eq!(next, cursor + chunk.len() as u64);
+                    cursor = next;
+                }
+                None => {
+                    assert_eq!(rows.len(), 5, "pages must cover every row");
+                    if page.get("done").and_then(Json::as_bool) == Some(true)
+                        && rows.iter().all(|r| !matches!(r, Json::Null))
+                    {
+                        break 'poll check_rows(&rows, &expected_nbs);
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    continue 'poll;
+                }
+            }
+        }
+    }
+
+    // Unknown sweep ids answer an error, not a hang.
+    send(&mut w, r#"{"cmd":"results","sweep":999}"#);
+    let missing = recv(&mut r);
+    assert!(!is_ok(&missing));
+    let msg = missing.get("error").and_then(Json::as_str).unwrap();
+    assert!(msg.contains("unknown sweep"), "{missing:?}");
+
+    drop((w, r));
+    shutdown(addr, handle);
+}
+
+/// Rows come back in row-major submission order regardless of the
+/// order workers finished them.
+fn check_rows(rows: &[Json], expected_nbs: &[u64]) {
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(row.get("job").and_then(Json::as_u64), Some(i as u64));
+        assert!(is_ok(row), "row {i}: {row:?}");
+        let job = row.get("result").and_then(|r| r.get("job")).unwrap();
+        assert_eq!(job.get("nb").and_then(Json::as_u64), Some(expected_nbs[i]), "row {i}");
+    }
+}
+
+#[test]
+fn oversized_frames_reject_cleanly_and_split_writes_reassemble() {
+    let cfg = ReactorConfig {
+        max_frame: 256,
+        ..ReactorConfig::default()
+    };
+    let (sched, addr, handle) = start(cfg);
+    let (mut w, mut r) = connect(addr);
+
+    // An oversized frame: rejected with a bounded read, conn survives.
+    let huge = format!("{{\"cmd\":\"run\",\"pad\":\"{}\"}}", "x".repeat(512));
+    send(&mut w, &huge);
+    let reply = recv(&mut r);
+    assert!(!is_ok(&reply));
+    let msg = reply.get("error").and_then(Json::as_str).unwrap();
+    assert!(msg.contains("256 byte limit"), "{reply:?}");
+
+    // A request split across many small writes with pauses reassembles
+    // into one frame once the newline lands.
+    let req = b"{\"cmd\":\"run\",\"workload\":\"edm\",\"nb\":8,\"map\":\"lambda2\"}\n";
+    for chunk in req.chunks(7) {
+        w.write_all(chunk).unwrap();
+        w.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    let run = recv(&mut r);
+    assert!(is_ok(&run), "split-written request must execute: {run:?}");
+
+    assert_eq!(sched.metrics.snapshot().get("frames_oversized").unwrap().as_u64(), Some(1));
+    drop((w, r));
+    shutdown(addr, handle);
+}
+
+#[test]
+fn concurrent_sweep_clients_lose_nothing() {
+    let (sched, addr, handle) = start(ReactorConfig::default());
+    const CLIENTS: usize = 8;
+    const ROWS: usize = 6;
+    let mut clients = Vec::new();
+    for c in 0..CLIENTS {
+        clients.push(std::thread::spawn(move || {
+            let (mut w, mut r) = connect(addr);
+            let mut req = String::from(r#"{"cmd":"sweep","workloads":["edm"],"maps":["bb"],"#);
+            req.push_str(&format!(r#""nbs":[4,5,6,7,8,9],"seed":{c},"window":2}}"#));
+            send(&mut w, &req);
+            let ack = recv(&mut r);
+            assert!(is_ok(&ack), "client {c}: {ack:?}");
+            let mut seen = [false; ROWS];
+            loop {
+                let frame = recv(&mut r);
+                if frame.get("done").and_then(Json::as_bool) == Some(true) {
+                    assert_eq!(frame.get("completed").and_then(Json::as_u64), Some(ROWS as u64));
+                    break;
+                }
+                let idx = frame.get("job").and_then(Json::as_u64).unwrap() as usize;
+                assert!(!seen[idx], "client {c}: duplicate row {idx}");
+                seen[idx] = true;
+            }
+            assert!(seen.iter().all(|s| *s), "client {c}: lost rows");
+        }));
+    }
+    for c in clients {
+        c.join().expect("sweep client");
+    }
+    let snap = sched.metrics.snapshot();
+    let total = (CLIENTS * ROWS) as u64;
+    assert_eq!(snap.get("sweep_jobs_completed").unwrap().as_u64(), Some(total));
+    assert_eq!(snap.get("sweeps_completed").unwrap().as_u64(), Some(CLIENTS as u64));
+    assert_eq!(snap.get("jobs_failed").unwrap().as_u64(), Some(0));
+    assert_eq!(snap.get("queue_depth").unwrap().as_u64(), Some(0));
+    shutdown(addr, handle);
+}

@@ -1,0 +1,216 @@
+//! Differential serving tests: a sweep served over the wire by the
+//! reactor must produce byte-identical per-job result documents to the
+//! same jobs run directly on a local scheduler — for every compatible
+//! map of each workload family — and cursor pagination must reassemble
+//! out-of-order worker completions into row-major submission order.
+//! Only the nondeterministic timing fields (`wall_secs`, lane profile)
+//! are stripped before comparison.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
+use simplexmap::coordinator::{Backend, Job, Reactor, ReactorConfig, Scheduler, WorkloadKind};
+use simplexmap::util::json::{self, Json};
+
+const SEED: u64 = 7;
+
+fn start() -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let sched = Arc::new(Scheduler::new(2, None));
+    let reactor = Reactor::with_config(sched, ReactorConfig::default());
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        reactor
+            .serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+            .unwrap();
+    });
+    (rx.recv().unwrap(), handle)
+}
+
+fn connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+fn send(w: &mut TcpStream, line: &str) {
+    w.write_all(line.as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+    w.flush().unwrap();
+}
+
+fn recv(r: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    let n = r.read_line(&mut line).unwrap();
+    assert!(n > 0, "server closed the connection unexpectedly");
+    json::parse(line.trim()).unwrap_or_else(|e| panic!("bad frame {line:?}: {e}"))
+}
+
+fn shutdown(addr: SocketAddr, handle: std::thread::JoinHandle<()>) {
+    let (mut w, mut r) = connect(addr);
+    send(&mut w, r#"{"cmd":"shutdown"}"#);
+    recv(&mut r);
+    drop((w, r));
+    handle.join().expect("reactor thread exits after shutdown");
+}
+
+/// Canonical byte form of a job-result document: everything except the
+/// fields that legitimately differ between two executions of the same
+/// job (wall-clock and the parallel backend's lane timing profile).
+fn canonical(result: &Json) -> String {
+    let mut doc = result.clone();
+    if let Json::Obj(m) = &mut doc {
+        m.remove("wall_secs");
+        m.remove("lane_imbalance");
+        m.remove("lane_profile");
+    }
+    doc.to_string_compact()
+}
+
+/// The same job the sweep expansion builds for (workload, nb, map),
+/// executed directly on a local scheduler.
+fn local(sched: &Scheduler, workload: &str, nb: u64, map: &str) -> String {
+    let job = Job {
+        workload: WorkloadKind::parse(workload).expect("roster workload"),
+        nb,
+        map: map.to_string(),
+        backend: Backend::Serial,
+        seed: SEED,
+    };
+    let result = sched.run(&job).expect("local run succeeds");
+    canonical(&result.to_json())
+}
+
+/// One row per workload family: (workload, nb, every compatible map).
+/// Mirrors `compatible_maps` in workload_matrix.rs, including the
+/// searched-width lambda-sw container for m = 3.
+fn roster() -> Vec<(&'static str, u64, Vec<&'static str>)> {
+    let m2 = || vec!["bb", "lambda2", "enum2", "rb", "ries", "above2", "below2", "lambda-s"];
+    let m3 = || vec!["bb", "lambda3", "enum3", "lambda3-rec", "lambda-s", "lambda-sw"];
+    let gasket = vec![
+        "bb-gasket",
+        "lambda-gasket",
+        "bb",
+        "lambda2",
+        "enum2",
+        "rb",
+        "ries",
+        "above2",
+        "below2",
+        "lambda-s",
+    ];
+    vec![
+        ("edm", 8, m2()),
+        ("collision", 8, m2()),
+        ("nbody", 8, m2()),
+        ("cellular", 8, m2()),
+        ("trimatvec", 8, m2()),
+        ("triple", 4, m3()),
+        ("gasket", 4, gasket),
+        ("ktuple4", 4, vec!["bb", "lambda-m"]),
+    ]
+}
+
+fn sweep_request(workload: &str, nb: u64, maps: &[&str]) -> String {
+    let quoted: Vec<String> = maps.iter().map(|m| format!("\"{m}\"")).collect();
+    let maps_json = quoted.join(",");
+    let mut req = format!(r#"{{"cmd":"sweep","workloads":["{workload}"],"nbs":[{nb}],"#);
+    req.push_str(&format!(r#""maps":[{maps_json}],"backend":"serial","seed":{SEED}}}"#));
+    req
+}
+
+#[test]
+fn wire_sweep_results_match_local_runs_byte_for_byte() {
+    let (addr, handle) = start();
+    let local_sched = Scheduler::new(2, None);
+    for (workload, nb, maps) in roster() {
+        // Fresh connection per family: keeps every sweep independent
+        // and stays clear of the per-connection active-sweep cap.
+        let (mut w, mut r) = connect(addr);
+        send(&mut w, &sweep_request(workload, nb, &maps));
+        let ack = recv(&mut r);
+        assert_eq!(
+            ack.get("jobs").and_then(Json::as_u64),
+            Some(maps.len() as u64),
+            "{workload}: {ack:?}"
+        );
+        let mut wire: Vec<Option<String>> = vec![None; maps.len()];
+        loop {
+            let frame = recv(&mut r);
+            if frame.get("done").and_then(Json::as_bool) == Some(true) {
+                let failed = frame.get("failed").and_then(Json::as_u64);
+                assert_eq!(failed, Some(0), "{workload}: {frame:?}");
+                break;
+            }
+            assert_eq!(frame.get("ok").and_then(Json::as_bool), Some(true), "{frame:?}");
+            let idx = frame.get("job").and_then(Json::as_u64).unwrap() as usize;
+            let result = frame.get("result").expect("ok frame carries a result");
+            assert!(wire[idx].is_none(), "{workload}: row {idx} streamed twice");
+            wire[idx] = Some(canonical(result));
+        }
+        for (i, map) in maps.iter().enumerate() {
+            let got = wire[i].as_ref().unwrap_or_else(|| panic!("{workload}/{map}: lost row"));
+            let want = local(&local_sched, workload, nb, map);
+            assert_eq!(got, &want, "{workload} nb={nb} {map}: wire and local results differ");
+        }
+        drop((w, r));
+    }
+    shutdown(addr, handle);
+}
+
+#[test]
+fn paginated_results_reassemble_out_of_order_completions_row_major() {
+    let (addr, handle) = start();
+    let local_sched = Scheduler::new(2, None);
+    let (mut w, mut r) = connect(addr);
+    // Eight rows of varying cost through four queue workers with a wide
+    // window: completions land out of submission order, yet the results
+    // pages must read back row-major.
+    let nbs: [u64; 8] = [11, 4, 9, 5, 10, 6, 8, 7];
+    let mut req = String::from(r#"{"cmd":"sweep","workloads":["edm"],"maps":["bb"],"#);
+    req.push_str(&format!(r#""nbs":[11,4,9,5,10,6,8,7],"backend":"serial","seed":{SEED},"#));
+    req.push_str(r#""stream":false,"window":8}"#);
+    send(&mut w, &req);
+    let ack = recv(&mut r);
+    assert_eq!(ack.get("jobs").and_then(Json::as_u64), Some(8), "{ack:?}");
+    assert_eq!(ack.get("streaming").and_then(Json::as_bool), Some(false));
+    let sid = ack.get("sweep").and_then(Json::as_u64).unwrap();
+
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    let rows = loop {
+        assert!(std::time::Instant::now() < deadline, "sweep never completed");
+        let mut rows: Vec<Json> = Vec::new();
+        let mut cursor = 0u64;
+        let done = loop {
+            let get = format!(r#"{{"cmd":"results","sweep":{sid},"cursor":{cursor},"limit":3}}"#);
+            send(&mut w, &get);
+            let page = recv(&mut r);
+            assert_eq!(page.get("ok").and_then(Json::as_bool), Some(true), "{page:?}");
+            let chunk = page.get("results").and_then(Json::as_arr).unwrap();
+            rows.extend(chunk.iter().cloned());
+            match page.get("next_cursor").and_then(Json::as_u64) {
+                Some(next) => cursor = next,
+                None => break page.get("done").and_then(Json::as_bool) == Some(true),
+            }
+        };
+        if done && rows.iter().all(|row| !matches!(row, Json::Null)) {
+            break rows;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    };
+
+    assert_eq!(rows.len(), nbs.len());
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(row.get("job").and_then(Json::as_u64), Some(i as u64), "row order");
+        assert_eq!(row.get("ok").and_then(Json::as_bool), Some(true), "{row:?}");
+        let result = row.get("result").unwrap();
+        let job = result.get("job").expect("result document embeds its job");
+        let nb = job.get("nb").and_then(Json::as_u64);
+        assert_eq!(nb, Some(nbs[i]), "row {i} must hold the row-major job, not arrival order");
+        let want = local(&local_sched, "edm", nbs[i], "bb");
+        assert_eq!(canonical(result), want, "row {i}: wire and local results differ");
+    }
+    drop((w, r));
+    shutdown(addr, handle);
+}

@@ -85,7 +85,7 @@ fn m2_workloads_agree_at_non_power_of_two_sizes() {
 #[test]
 fn m3_workloads_agree_across_maps_and_sizes() {
     let sched = Scheduler::new(4, None);
-    let maps = ["bb", "lambda3", "enum3", "lambda3-rec", "lambda-s"];
+    let maps = ["bb", "lambda3", "enum3", "lambda3-rec", "lambda-s", "lambda-sw"];
     for nb in [4u64, 8] {
         let base = run(&sched, WorkloadKind::Triple, nb, maps[0]);
         for map in &maps[1..] {
@@ -116,7 +116,7 @@ fn compatible_maps(w: WorkloadKind) -> Vec<&'static str> {
         ],
         DomainKind::Simplex => match w.m() {
             2 => vec!["bb", "lambda2", "enum2", "rb", "ries", "above2", "below2", "lambda-s"],
-            3 => vec!["bb", "lambda3", "enum3", "lambda3-rec", "lambda-s"],
+            3 => vec!["bb", "lambda3", "enum3", "lambda3-rec", "lambda-s", "lambda-sw"],
             _ => vec!["bb", "lambda-m"],
         },
     }
