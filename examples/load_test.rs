@@ -1,7 +1,7 @@
 //! Serving-tier load test: the reactor vs the thread-per-connection
 //! baseline, then a thousand-client sweep storm with invariant checks.
 //!
-//! Three phases, all against in-process servers on the loopback:
+//! Four phases, all against in-process servers on the loopback:
 //!
 //! 1. **Baseline** — the threaded [`Server`], 64 clients each running
 //!    jobs one request/response round-trip at a time (the pre-reactor
@@ -13,15 +13,21 @@
 //!    sweep clients. Every client verifies its own frame stream (each
 //!    row exactly once, done-frame counts consistent) while a sampler
 //!    polls `{"cmd":"metrics"}` and records the peak queue depth.
+//! 4. **Reconnect** — `SIMPLEXMAP_LOAD_RECONNECT_CLIENTS` (default 64)
+//!    clients each start a non-streaming sweep, hard-drop the
+//!    connection right after the ack, then recover every row by the
+//!    durable token from a fresh connection (0 disables the phase).
 //!
-//! Exit is nonzero if any result is lost or duplicated, the queue
-//! depth ever exceeds its capacity, or the throughput ratio falls
-//! under `SIMPLEXMAP_LOAD_MIN_RATIO` (default 0 = report only).
+//! Exit is nonzero if any result is lost or duplicated (including
+//! across the phase-4 disconnects), the queue depth ever exceeds its
+//! capacity, or the throughput ratio falls under
+//! `SIMPLEXMAP_LOAD_MIN_RATIO` (default 0 = report only).
 //!
 //! Run: `cargo run --release --example load_test`
 //! Knobs: `SIMPLEXMAP_LOAD_CLIENTS`, `SIMPLEXMAP_LOAD_JOBS` (rows per
 //! scale-phase sweep), `SIMPLEXMAP_LOAD_BASE_JOBS` (jobs per phase-1/2
-//! client), `SIMPLEXMAP_LOAD_WINDOW`, `SIMPLEXMAP_LOAD_MIN_RATIO`.
+//! client), `SIMPLEXMAP_LOAD_WINDOW`, `SIMPLEXMAP_LOAD_MIN_RATIO`,
+//! `SIMPLEXMAP_LOAD_RECONNECT_CLIENTS`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -200,6 +206,73 @@ fn sweep_client(addr: SocketAddr, seed: u64, jobs: u64, window: u64) -> Result<(
     }
 }
 
+/// Phase-4 client: start a non-streaming sweep, hard-drop the
+/// connection straight after the ack (mid-fan-out for any realistic
+/// row count), then reconnect and page every row back by the durable
+/// token — the results-outlive-the-connection contract under load.
+fn reconnect_client(addr: SocketAddr, seed: u64, jobs: u64, window: u64) -> Result<(), String> {
+    let token = {
+        let (mut w, mut r) = connect(addr).map_err(|e| e.to_string())?;
+        let nbs: Vec<String> = (0..jobs).map(|_| "8".to_string()).collect();
+        let req = format!(
+            "{{\"cmd\":\"sweep\",\"workloads\":[\"edm\"],\"maps\":[\"lambda2\"],\"nbs\":[{}],\
+             \"backend\":\"serial\",\"seed\":{seed},\"window\":{window},\"stream\":false}}\n",
+            nbs.join(",")
+        );
+        w.write_all(req.as_bytes()).map_err(|e| e.to_string())?;
+        let ack = read_json(&mut r, "sweep ack")?;
+        if ack.get("ok").and_then(Json::as_bool) != Some(true) {
+            return Err(format!("sweep refused: {}", ack.to_string_compact()));
+        }
+        ack.get("token")
+            .and_then(Json::as_str)
+            .ok_or("ack has no token")?
+            .to_string()
+        // Both socket halves drop here: the hard disconnect.
+    };
+    let (mut w, mut r) = connect(addr).map_err(|e| e.to_string())?;
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut cursor = 0u64;
+    loop {
+        let req = format!(
+            "{{\"cmd\":\"results\",\"token\":\"{token}\",\"cursor\":{cursor},\"limit\":64}}\n"
+        );
+        w.write_all(req.as_bytes()).map_err(|e| e.to_string())?;
+        let page = read_json(&mut r, "results page")?;
+        if page.get("ok").and_then(Json::as_bool) != Some(true) {
+            return Err(format!("results refused: {}", page.to_string_compact()));
+        }
+        let total = page.get("jobs").and_then(Json::as_u64).unwrap_or(0);
+        if total != jobs {
+            return Err(format!("token pages {total} jobs, expected {jobs}"));
+        }
+        let rows = page.get("results").and_then(Json::as_arr).unwrap_or(&[]);
+        let mut advanced = false;
+        for row in rows {
+            if matches!(row, Json::Null) {
+                break;
+            }
+            if row.get("job").and_then(Json::as_u64) != Some(cursor) {
+                return Err(format!(
+                    "cursor {cursor} got wrong row: {}",
+                    row.to_string_compact()
+                ));
+            }
+            cursor += 1;
+            advanced = true;
+        }
+        if cursor >= total {
+            return Ok(());
+        }
+        if !advanced {
+            if Instant::now() > deadline {
+                return Err(format!("timed out at cursor {cursor}/{total}"));
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
 /// Run `clients` threads of `work` and return (errors, elapsed).
 fn run_clients<F>(clients: u64, stagger: bool, work: F) -> (Vec<String>, Duration)
 where
@@ -347,8 +420,33 @@ fn main() {
         failed = true;
     }
 
+    // Phase 4: kill-and-reconnect — every client hard-drops its
+    // connection right after the sweep ack and recovers all rows by
+    // token from a fresh connection.
+    let reconnect_clients = env_u64("SIMPLEXMAP_LOAD_RECONNECT_CLIENTS", 64);
+    if reconnect_clients > 0 {
+        let (addr, handle) = spawn_reactor();
+        let (errors, elapsed) = run_clients(reconnect_clients, true, move |id| {
+            reconnect_client(addr, id, scale_jobs, window)
+        });
+        shutdown(addr, handle);
+        println!(
+            "phase 4 reconnect: {reconnect_clients} clients x {scale_jobs} rows, \
+             conn dropped post-ack -> all rows recovered by token in {:.2}s ({} errors)",
+            elapsed.as_secs_f64(),
+            errors.len()
+        );
+        for e in errors.iter().take(5) {
+            println!("  client error: {e}");
+        }
+        if !errors.is_empty() {
+            println!("FAIL: results lost across reconnect");
+            failed = true;
+        }
+    }
+
     if failed {
         std::process::exit(1);
     }
-    println!("load test OK: zero lost results, queue depth bounded");
+    println!("load test OK: zero lost results, queue depth bounded, reconnect durable");
 }

@@ -95,6 +95,23 @@ pub struct Metrics {
     pub sweeps_started: AtomicU64,
     pub sweeps_completed: AtomicU64,
     pub sweep_jobs_completed: AtomicU64,
+    /// Completed-job accounting across the serving tier. Every `Ok`
+    /// job result is exactly one of: delivered to a live connection,
+    /// stored in the results store, or orphaned (store refused it) —
+    /// `jobs_completed == results_delivered + results_stored +
+    /// orphaned_results` is test-asserted end to end.
+    pub results_delivered: AtomicU64,
+    pub results_stored: AtomicU64,
+    pub orphaned_results: AtomicU64,
+    /// Results-store entries evicted (TTL age-out or LRU admission).
+    pub store_evictions: AtomicU64,
+    /// Jobs re-enqueued after a retryable failure (bounded per job).
+    pub jobs_retried: AtomicU64,
+    /// Jobs that outlived their deadline waiting in the queue.
+    pub jobs_expired: AtomicU64,
+    /// Results-store occupancy gauges (rows held / sweeps addressable).
+    pub store_rows: AtomicU64,
+    pub store_sweeps: AtomicU64,
     map_phase: PhaseMetric,
     exec_phase: PhaseMetric,
     fused_phase: PhaseMetric,
@@ -196,6 +213,14 @@ impl Metrics {
             ("sweeps_started", counter(&self.sweeps_started)),
             ("sweeps_completed", counter(&self.sweeps_completed)),
             ("sweep_jobs_completed", counter(&self.sweep_jobs_completed)),
+            ("results_delivered", counter(&self.results_delivered)),
+            ("results_stored", counter(&self.results_stored)),
+            ("orphaned_results", counter(&self.orphaned_results)),
+            ("store_evictions", counter(&self.store_evictions)),
+            ("jobs_retried", counter(&self.jobs_retried)),
+            ("jobs_expired", counter(&self.jobs_expired)),
+            ("store_rows", counter(&self.store_rows)),
+            ("store_sweeps", counter(&self.store_sweeps)),
             ("map_phase", self.map_phase.to_json()),
             ("exec_phase", self.exec_phase.to_json()),
             ("fused_phase", self.fused_phase.to_json()),
@@ -270,6 +295,14 @@ impl Metrics {
             "counter",
             load(&self.sweep_jobs_completed),
         );
+        scalar(&mut out, "results_delivered_total", "counter", load(&self.results_delivered));
+        scalar(&mut out, "results_stored_total", "counter", load(&self.results_stored));
+        scalar(&mut out, "orphaned_results_total", "counter", load(&self.orphaned_results));
+        scalar(&mut out, "store_evictions_total", "counter", load(&self.store_evictions));
+        scalar(&mut out, "jobs_retried_total", "counter", load(&self.jobs_retried));
+        scalar(&mut out, "jobs_expired_total", "counter", load(&self.jobs_expired));
+        scalar(&mut out, "store_rows", "gauge", load(&self.store_rows));
+        scalar(&mut out, "store_sweeps", "gauge", load(&self.store_sweeps));
 
         for (name, phase) in [
             ("map_phase_seconds", &self.map_phase),
@@ -459,6 +492,35 @@ mod tests {
         assert!(prom.contains("simplexmap_sweeps_started_total 3"));
         assert!(prom.contains("# TYPE simplexmap_sweep_wall_seconds summary"));
         assert!(prom.contains("simplexmap_sweep_wall_seconds_count 1"));
+    }
+
+    #[test]
+    fn results_store_counters_and_gauges_export() {
+        let m = Metrics::new();
+        m.results_delivered.fetch_add(7, Ordering::Relaxed);
+        m.results_stored.fetch_add(4, Ordering::Relaxed);
+        m.orphaned_results.fetch_add(1, Ordering::Relaxed);
+        m.store_evictions.fetch_add(2, Ordering::Relaxed);
+        m.jobs_retried.fetch_add(3, Ordering::Relaxed);
+        m.jobs_expired.fetch_add(5, Ordering::Relaxed);
+        m.store_rows.store(64, Ordering::Relaxed);
+        m.store_sweeps.store(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.get("results_delivered").unwrap().as_u64(), Some(7));
+        assert_eq!(s.get("results_stored").unwrap().as_u64(), Some(4));
+        assert_eq!(s.get("orphaned_results").unwrap().as_u64(), Some(1));
+        assert_eq!(s.get("store_evictions").unwrap().as_u64(), Some(2));
+        assert_eq!(s.get("jobs_retried").unwrap().as_u64(), Some(3));
+        assert_eq!(s.get("jobs_expired").unwrap().as_u64(), Some(5));
+        assert_eq!(s.get("store_rows").unwrap().as_u64(), Some(64));
+        assert_eq!(s.get("store_sweeps").unwrap().as_u64(), Some(2));
+        let prom = m.prometheus();
+        assert!(prom.contains("# TYPE simplexmap_results_stored_total counter"));
+        assert!(prom.contains("simplexmap_orphaned_results_total 1"));
+        assert!(prom.contains("simplexmap_jobs_retried_total 3"));
+        assert!(prom.contains("# TYPE simplexmap_store_rows gauge"));
+        assert!(prom.contains("simplexmap_store_rows 64"));
+        assert!(prom.contains("simplexmap_store_sweeps 2"));
     }
 
     #[test]

@@ -25,12 +25,16 @@
 //! - [`reactor`] — the non-blocking poll multiplexer: thousands of
 //!   connections on one thread, capped-frame reads, backpressured
 //!   writes, and the streaming `sweep`/`results` fan-out commands.
+//! - [`results_store`] — the connection-independent sweep results
+//!   store: bounded, TTL-evicted, keyed by durable token so clients
+//!   reconnect and resume pagination instead of losing work.
 
 pub mod batcher;
 pub mod job;
 pub mod metrics;
 pub mod queue;
 pub mod reactor;
+pub mod results_store;
 pub mod scheduler;
 pub mod server;
 pub mod span;
@@ -41,5 +45,6 @@ pub use job::{Backend, BackendKind, Job, JobResult, WorkloadKind};
 pub use metrics::Metrics;
 pub use queue::{JobQueue, Priority, QueueConfig};
 pub use reactor::{Reactor, ReactorConfig};
+pub use results_store::{PutOutcome, ResultsStore, StoreConfig, StoreError};
 pub use scheduler::{ExecMode, RhoPolicy, ScheduleError, Scheduler};
 pub use span::{Span, SpanRecorder};

@@ -120,6 +120,10 @@ impl Reply {
 struct Queued {
     job: Job,
     enqueued: Instant,
+    /// Latest instant the job may still *start*; a worker popping it
+    /// later delivers [`ScheduleError::Expired`] instead of running it
+    /// (a stuck queue fails jobs loudly instead of arbitrarily late).
+    deadline: Option<Instant>,
     /// Span covering enqueue→dequeue; finished by the worker that pops
     /// the item (rejected submissions never construct a `Queued`, so
     /// their spans never start).
@@ -220,6 +224,7 @@ impl JobQueue {
         job: Job,
         priority: Priority,
         lane: u64,
+        deadline: Option<Instant>,
         reply: Reply,
     ) -> Result<(), ScheduleError> {
         let metrics = &self.inner.scheduler.metrics;
@@ -243,6 +248,7 @@ impl JobQueue {
                     wait_span: span::global().start("queue", "queue_wait", 0),
                     job,
                     enqueued: Instant::now(),
+                    deadline,
                     reply,
                 },
             );
@@ -271,7 +277,7 @@ impl JobQueue {
         lane: u64,
     ) -> Result<JobReceiver, ScheduleError> {
         let (tx, rx) = mpsc::channel();
-        self.enqueue(job, priority, lane, Reply::Channel(tx))?;
+        self.enqueue(job, priority, lane, None, Reply::Channel(tx))?;
         Ok(rx)
     }
 
@@ -287,7 +293,25 @@ impl JobQueue {
         lane: u64,
         on_done: impl FnOnce(Result<JobResult, ScheduleError>) + Send + 'static,
     ) -> Result<(), ScheduleError> {
-        self.enqueue(job, priority, lane, Reply::Callback(Box::new(on_done)))
+        self.enqueue(job, priority, lane, None, Reply::Callback(Box::new(on_done)))
+    }
+
+    /// [`submit_async`](JobQueue::submit_async) with a start deadline:
+    /// if no worker picks the job up by `deadline`, it resolves to
+    /// [`ScheduleError::Expired`] (and counts in `jobs_expired`)
+    /// instead of running arbitrarily late. The reactor uses this for
+    /// sweep rows so one stuck sweep cannot silently hold a client's
+    /// results forever — expired rows go through the bounded retry
+    /// path instead.
+    pub fn submit_async_with_deadline(
+        &self,
+        job: Job,
+        priority: Priority,
+        lane: u64,
+        deadline: Option<Instant>,
+        on_done: impl FnOnce(Result<JobResult, ScheduleError>) + Send + 'static,
+    ) -> Result<(), ScheduleError> {
+        self.enqueue(job, priority, lane, deadline, Reply::Callback(Box::new(on_done)))
     }
 
     /// Submit and block for the result (what a connection thread does).
@@ -352,7 +376,8 @@ fn worker_loop(inner: &Inner) {
         };
         let Some(item) = item else { return };
         let metrics = &inner.scheduler.metrics;
-        metrics.record_queue_wait(item.enqueued.elapsed().as_secs_f64());
+        let waited = item.enqueued.elapsed();
+        metrics.record_queue_wait(waited.as_secs_f64());
         span::global().finish_with(
             item.wait_span,
             vec![
@@ -360,7 +385,15 @@ fn worker_loop(inner: &Inner) {
                 ("map", item.job.map.clone()),
             ],
         );
-        let result = inner.scheduler.run(&item.job);
+        // Deadline check happens at pop, not mid-run: a running job
+        // cannot be cancelled, so "expired" means expired-in-queue.
+        let expired = item.deadline.is_some_and(|d| Instant::now() > d);
+        let result = if expired {
+            metrics.jobs_expired.fetch_add(1, Ordering::Relaxed);
+            Err(ScheduleError::Expired(waited.as_millis() as u64))
+        } else {
+            inner.scheduler.run(&item.job)
+        };
         item.reply.deliver(result);
     }
 }
@@ -385,6 +418,7 @@ mod tests {
         Queued {
             job: job(8, seed),
             enqueued: Instant::now(),
+            deadline: None,
             wait_span: span::global().start("queue", "queue_wait", 0),
             reply: Reply::Channel(tx),
         }
@@ -591,6 +625,42 @@ mod tests {
         // The already-enqueued job still resolves.
         let r = rx.recv().unwrap();
         assert!(r.is_ok(), "drained job must complete: {:?}", r.err().map(|e| e.to_string()));
+    }
+
+    #[test]
+    fn expired_deadline_fails_at_pop_and_counts() {
+        let sched = Arc::new(Scheduler::new(1, None));
+        let q = JobQueue::start(
+            Arc::clone(&sched),
+            QueueConfig {
+                workers: 2,
+                capacity: 16,
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        // A deadline already in the past: the popping worker must
+        // deliver Expired without running the job.
+        let past = Instant::now() - std::time::Duration::from_millis(10);
+        let tx2 = tx.clone();
+        q.submit_async_with_deadline(job(8, 1), Priority::Normal, 0, Some(past), move |r| {
+            tx2.send(r).unwrap();
+        })
+        .unwrap();
+        let r = rx.recv().unwrap();
+        assert!(matches!(r, Err(ScheduleError::Expired(_))), "{r:?}");
+        assert_eq!(
+            sched.metrics.jobs_expired.load(Ordering::Relaxed),
+            1,
+            "expiry must count"
+        );
+        // A generous deadline runs normally.
+        let future = Instant::now() + std::time::Duration::from_secs(60);
+        q.submit_async_with_deadline(job(8, 2), Priority::Normal, 0, Some(future), move |r| {
+            tx.send(r).unwrap();
+        })
+        .unwrap();
+        assert!(rx.recv().unwrap().is_ok());
+        assert_eq!(sched.metrics.jobs_expired.load(Ordering::Relaxed), 1);
     }
 
     #[test]

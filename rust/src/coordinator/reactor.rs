@@ -19,7 +19,7 @@
 //! plus a loopback UDP wake datagram — the reactor sleeps in `poll`
 //! until either a socket or a completion needs it.
 //!
-//! ## Sweep fan-out
+//! ## Sweep fan-out and the durable results store
 //!
 //! `{"cmd":"sweep","workloads":["edm"],"nbs":[8,16],…}` expands a
 //! workloads × maps × nbs grid (row-major; `maps` defaults to each
@@ -33,28 +33,50 @@
 //! instead of surfacing to the client.
 //!
 //! Replies stream per connection in *request order* (slots): the ack
-//! frame `{"ok":true,"sweep":S,"jobs":N,"streaming":…}` first, then —
-//! when streaming — one frame per row *in completion order*
+//! frame `{"ok":true,"sweep":S,"token":"swp-…","jobs":N,…}` first,
+//! then — when streaming — one frame per row *in completion order*
 //! (`{"sweep":S,"job":i,…}`), then `{"sweep":S,"done":true,…}`.
-//! Results are also reassembled *in row order* into a per-sweep store
-//! served by `{"cmd":"results","sweep":S,"cursor":0,"limit":64}` with
-//! cursor pagination — the non-streaming path for very large sweeps.
-//! The store is bounded (sweeps per connection × rows per sweep) and
-//! freed on disconnect.
+//!
+//! Results do **not** live in the connection. Every row lands in the
+//! process-wide [`ResultsStore`], keyed by the durable `token` from
+//! the ack — so a client that loses its TCP connection mid-sweep
+//! reconnects, presents the token to `{"cmd":"results","token":…}`,
+//! and resumes cursor pagination exactly where the rows are, while
+//! the sweep itself keeps running detached (its owner is cleared, the
+//! fan-out continues into the store). The store is bounded
+//! (`SIMPLEXMAP_STORE_CAP` rows, pre-reserved per sweep at admission
+//! so mid-sweep overflow is impossible) and TTL-evicted
+//! (`SIMPLEXMAP_STORE_TTL_SECS`, finished entries only); admission
+//! refusal is a typed wire error, never silent loss.
+//!
+//! ## Job timeout and bounded retry
+//!
+//! Every submitted row carries a start deadline
+//! (`SIMPLEXMAP_JOB_TIMEOUT_MS`). A row the queue could not start in
+//! time resolves to [`ScheduleError::Expired`] and is re-enqueued
+//! through the same priority/fairness lane at most
+//! `SIMPLEXMAP_JOB_RETRY_MAX` times (counted in `jobs_retried`)
+//! before it fails for real. Completed-job accounting is closed:
+//! `jobs_completed == results_delivered + results_stored +
+//! orphaned_results` — a finished job is delivered to a live
+//! connection, stored under a token, or (only if the store refuses an
+//! orphan) counted, never silently dropped.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream, UdpSocket};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::job::{Job, JobResult, WorkloadKind};
 use crate::coordinator::queue::{Priority, QueueConfig};
+use crate::coordinator::results_store::{PutOutcome, ResultsStore, StoreConfig};
 use crate::coordinator::scheduler::{ScheduleError, Scheduler};
 use crate::coordinator::server::{dispatch_control, err_reply, ServerCtx};
 use crate::coordinator::span::{self, ActiveSpan};
 use crate::util::json::{self, Frame, FrameBuffer, Json, DEFAULT_MAX_FRAME};
+use crate::util::prng::SplitMix64;
 use crate::{log_info, log_warn};
 
 /// Hand-rolled `poll(2)` binding — the only system call the reactor
@@ -101,9 +123,7 @@ mod sys {
     }
 }
 
-/// Portability fallback: no readiness facility — sleep briefly and
-/// report every registered interest as ready (the sockets are all
-/// non-blocking, so spurious readiness only costs a `WouldBlock`).
+/// Portability fallback mirror of the pollfd shape (no real `poll`).
 #[cfg(not(unix))]
 mod sys {
     #[derive(Clone, Copy)]
@@ -117,17 +137,92 @@ mod sys {
     pub const POLLOUT: i16 = 0x004;
     pub const POLLERR: i16 = 0x008;
     pub const POLLHUP: i16 = 0x010;
+}
 
-    pub fn poll_wait(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
-        std::thread::sleep(std::time::Duration::from_millis(timeout_ms.clamp(1, 5) as u64));
-        let mut ready = 0;
-        for f in fds.iter_mut() {
-            f.revents = f.events;
-            if f.revents != 0 {
-                ready += 1;
-            }
+/// Readiness probing for platforms without `poll(2)`.
+///
+/// The old fallback set `revents = events` unconditionally after a
+/// 1–5 ms nap — every fd looked ready on every call, which both
+/// busy-spun the loop and reported *phantom readiness* (a `POLLIN`
+/// with nothing to read, over and over). This probe sleeps in ~1 ms
+/// ticks up to the full poll timeout and wakes early **only** when a
+/// socket shows real pending input via a non-blocking peek. Write
+/// interest and unpeekable fds ([`Probe::Assume`], e.g. listeners)
+/// are reported only at exit — they never cut the sleep short, so
+/// they cannot spin the loop.
+///
+/// Compiled on unix too (under `cfg(test)`) so the regression tests
+/// run on the primary platform.
+#[cfg(any(test, not(unix)))]
+mod probe {
+    use std::io::ErrorKind;
+    use std::net::{TcpStream, UdpSocket};
+    use std::time::{Duration, Instant};
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+
+    /// How one registered fd can be probed for input readiness.
+    pub enum Probe<'a> {
+        /// No way to peek (a listener): readiness is only reported at
+        /// exit, and the caller discovers the truth by attempting the
+        /// (non-blocking) operation.
+        Assume,
+        Tcp(&'a TcpStream),
+        Udp(&'a UdpSocket),
+    }
+
+    /// Real, observable input readiness right now — or 0.
+    fn input_ready(p: &Probe<'_>) -> i16 {
+        let mut b = [0u8; 1];
+        match p {
+            Probe::Assume => 0,
+            Probe::Tcp(s) => match s.peek(&mut b) {
+                Ok(0) => POLLIN | POLLHUP, // orderly EOF: a read will see it
+                Ok(_) => POLLIN,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => 0,
+                Err(e) if e.kind() == ErrorKind::Interrupted => 0,
+                Err(_) => POLLERR,
+            },
+            Probe::Udp(s) => match s.peek(&mut b) {
+                Ok(_) => POLLIN,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => 0,
+                Err(e) if e.kind() == ErrorKind::Interrupted => 0,
+                Err(_) => POLLERR,
+            },
         }
-        Ok(ready)
+    }
+
+    /// `poll` replacement: returns one `revents` per interest. Wakes
+    /// early only on real pending input; `POLLOUT` and [`Probe::Assume`]
+    /// interests are folded in at exit.
+    pub fn poll_probed(interests: &[(i16, Probe<'_>)], timeout_ms: i32) -> Vec<i16> {
+        let deadline = Instant::now() + Duration::from_millis(timeout_ms.max(0) as u64);
+        loop {
+            let mut revents: Vec<i16> = Vec::with_capacity(interests.len());
+            let mut ready = false;
+            for (events, p) in interests {
+                let r = if events & POLLIN != 0 { input_ready(p) } else { 0 };
+                if r != 0 {
+                    ready = true;
+                }
+                revents.push(r);
+            }
+            if ready || Instant::now() >= deadline {
+                for (i, (events, p)) in interests.iter().enumerate() {
+                    match p {
+                        // Unpeekable: report the registered interest;
+                        // the non-blocking attempt sorts out the truth.
+                        Probe::Assume => revents[i] |= events,
+                        _ => revents[i] |= events & POLLOUT,
+                    }
+                }
+                return revents;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
     }
 }
 
@@ -147,9 +242,18 @@ fn env_usize(key: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 /// Reactor sizing knobs. Environment overrides (`from_env`):
 /// `SIMPLEXMAP_MAX_FRAME`, `SIMPLEXMAP_MAX_CONNS`,
-/// `SIMPLEXMAP_SWEEP_WINDOW`, `SIMPLEXMAP_SWEEP_JOBS_MAX`.
+/// `SIMPLEXMAP_SWEEP_WINDOW`, `SIMPLEXMAP_SWEEP_JOBS_MAX`,
+/// `SIMPLEXMAP_STORE_CAP`, `SIMPLEXMAP_STORE_TTL_SECS`,
+/// `SIMPLEXMAP_JOB_TIMEOUT_MS`, `SIMPLEXMAP_JOB_RETRY_MAX`.
 #[derive(Clone, Copy, Debug)]
 pub struct ReactorConfig {
     pub queue: QueueConfig,
@@ -162,13 +266,22 @@ pub struct ReactorConfig {
     /// Row ceiling for one sweep expansion.
     pub max_sweep_jobs: usize,
     /// Active (unfinished) sweeps allowed per connection; up to twice
-    /// this many total sweeps stay addressable for pagination before
-    /// the oldest finished one is evicted.
+    /// this many sweep-id aliases stay addressable per connection
+    /// (tokens are never bounded per connection — the store is the
+    /// global bound).
     pub max_sweeps_per_conn: usize,
     /// Write-backlog level that pauses reads + result transfer.
     pub soft_watermark: usize,
     /// Write-backlog level that drops the connection.
     pub hard_cap: usize,
+    /// Results-store row capacity (pre-reserved per sweep at admission).
+    pub store_rows_cap: usize,
+    /// Finished store entries idle longer than this age out.
+    pub store_ttl_secs: u64,
+    /// Start deadline per submitted job (expired-in-queue ⇒ retry/fail).
+    pub job_timeout_ms: u64,
+    /// Re-enqueues allowed per sweep row after a retryable failure.
+    pub job_retry_max: u32,
 }
 
 impl Default for ReactorConfig {
@@ -182,6 +295,10 @@ impl Default for ReactorConfig {
             max_sweeps_per_conn: 8,
             soft_watermark: 256 * 1024,
             hard_cap: 8 * 1024 * 1024,
+            store_rows_cap: 65_536,
+            store_ttl_secs: 600,
+            job_timeout_ms: 300_000,
+            job_retry_max: 1,
         }
     }
 }
@@ -194,7 +311,18 @@ impl ReactorConfig {
             max_conns: env_usize("SIMPLEXMAP_MAX_CONNS", d.max_conns).max(1),
             sweep_window: env_usize("SIMPLEXMAP_SWEEP_WINDOW", d.sweep_window).max(1),
             max_sweep_jobs: env_usize("SIMPLEXMAP_SWEEP_JOBS_MAX", d.max_sweep_jobs).max(1),
+            store_rows_cap: env_usize("SIMPLEXMAP_STORE_CAP", d.store_rows_cap).max(1),
+            store_ttl_secs: env_u64("SIMPLEXMAP_STORE_TTL_SECS", d.store_ttl_secs),
+            job_timeout_ms: env_u64("SIMPLEXMAP_JOB_TIMEOUT_MS", d.job_timeout_ms),
+            job_retry_max: env_u64("SIMPLEXMAP_JOB_RETRY_MAX", d.job_retry_max as u64) as u32,
             ..d
+        }
+    }
+
+    fn store_config(&self) -> StoreConfig {
+        StoreConfig {
+            max_rows: self.store_rows_cap,
+            ttl: Duration::from_secs(self.store_ttl_secs),
         }
     }
 }
@@ -307,6 +435,8 @@ pub fn expand_sweep(
 
 /// A finished job travelling from a queue worker back to the loop.
 struct Done {
+    /// Connection the job belongs to (plain `run` routing; sweep rows
+    /// route by sweep id — their sweep outlives any connection).
     token: u64,
     /// Reply slot (plain `run` only; sweeps reply through their own slot).
     req: u64,
@@ -339,22 +469,34 @@ struct Slot {
     done: bool,
 }
 
-struct SweepState {
-    /// The slot the ack/stream/done frames flow through.
+/// One live sweep fan-out. Process-global (keyed by a global sweep
+/// id), not per-connection: rows land in the [`ResultsStore`] under
+/// `token`, and `owner` is merely the connection currently receiving
+/// stream/done frames — cleared when that connection dies, at which
+/// point the fan-out continues detached and the results stay
+/// retrievable by token.
+struct SweepRun {
+    token: String,
+    /// Connection receiving stream frames (`None` once it vanished).
+    owner: Option<u64>,
+    /// The owner's slot the ack/stream/done frames flow through.
     req: u64,
     jobs: Vec<Job>,
-    /// Reassembled in row order as completions arrive (out-of-order
-    /// workers land in the right cell).
-    results: Vec<Option<Json>>,
     next_submit: usize,
     in_flight: usize,
+    /// Row indices awaiting re-submission after a retryable failure.
+    retry: VecDeque<usize>,
+    /// Retries consumed per row (bounded by `job_retry_max`).
+    retries_used: Vec<u8>,
     completed: u64,
     failed: u64,
     stream: bool,
     window: usize,
     priority: Priority,
+    /// Fairness lane (the originating connection's token — kept after
+    /// detach so a big orphaned sweep still cannot starve other lanes).
+    lane: u64,
     started: Instant,
-    finished: bool,
     span: Option<ActiveSpan>,
 }
 
@@ -369,8 +511,13 @@ struct Conn {
     /// the watermark/hard-cap act on.
     pending_bytes: usize,
     next_req: u64,
-    next_sweep: u64,
-    sweeps: BTreeMap<u64, SweepState>,
+    /// sweep-id → token aliases this connection may page by bare id
+    /// (`{"cmd":"results","sweep":S}`). Sweep ids are global, so this
+    /// doubles as the authorization check: only the starting
+    /// connection can address a sweep by id — everyone else needs the
+    /// token capability. Bounded; the oldest alias drops first (the
+    /// token always keeps working).
+    sweep_tokens: BTreeMap<u64, String>,
     inflight_runs: usize,
     read_closed: bool,
     dead: bool,
@@ -388,8 +535,7 @@ impl Conn {
             slots: VecDeque::new(),
             pending_bytes: 0,
             next_req: 0,
-            next_sweep: 0,
-            sweeps: BTreeMap::new(),
+            sweep_tokens: BTreeMap::new(),
             inflight_runs: 0,
             read_closed: false,
             dead: false,
@@ -441,11 +587,12 @@ impl Conn {
 
     /// Everything delivered, nothing running: safe to forget once the
     /// client side has stopped talking (or shutdown wants us gone).
+    /// A streaming sweep holds its slot open until the done frame, so
+    /// such a connection is never idle mid-sweep; non-streaming sweeps
+    /// deliberately survive their connection (they detach into the
+    /// store), so they don't pin the connection here.
     fn idle(&self) -> bool {
-        self.out.is_empty()
-            && self.slots.is_empty()
-            && self.inflight_runs == 0
-            && self.sweeps.values().all(|s| s.finished)
+        self.out.is_empty() && self.slots.is_empty() && self.inflight_runs == 0
     }
 
     /// Transfer frames from the front slot(s) into the write buffer,
@@ -507,6 +654,22 @@ impl Conn {
     }
 }
 
+/// Durable sweep token: `swp-{sid}-{nonce}`. The nonce mixes a
+/// per-server salt so tokens are not guessable from the (sequential)
+/// sweep id alone — a token is a capability, the id is not.
+fn fresh_token(sid: u64, salt: u64) -> String {
+    let mut mix = SplitMix64::new(salt ^ sid.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    format!("swp-{sid}-{:08x}", mix.next_u64() as u32)
+}
+
+/// Whether a failed row deserves a trip through the bounded retry
+/// path: queue expiry and runtime faults are environmental (another
+/// attempt can land differently); everything else — unknown map,
+/// unsupported size, shutdown — fails identically every time.
+fn retryable(e: &ScheduleError) -> bool {
+    matches!(e, ScheduleError::Expired(_) | ScheduleError::Runtime(_))
+}
+
 /// The poll-reactor server. Same wire protocol as the threaded
 /// [`Server`](crate::coordinator::server::Server) (shared
 /// [`dispatch_control`]) plus the streaming `sweep`/`results` pair.
@@ -559,7 +722,17 @@ impl Reactor {
         });
 
         let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut sweeps: HashMap<u64, SweepRun> = HashMap::new();
+        let mut store = ResultsStore::new(cfg.store_config());
         let mut next_token: u64 = 1;
+        let mut next_sid: u64 = 1;
+        // Per-server token salt: wall clock ⊕ pid, so two servers (or
+        // two runs) never mint the same token for the same sid.
+        let salt = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x5EED)
+            ^ (std::process::id() as u64).rotate_left(32);
         let mut fds: Vec<sys::PollFd> = Vec::new();
         let mut order: Vec<u64> = Vec::new();
         let mut grace_rounds_left: Option<u32> = None;
@@ -599,7 +772,30 @@ impl Reactor {
                 order.push(*tok);
             }
 
+            #[cfg(unix)]
             sys::poll_wait(&mut fds, 100)?;
+            #[cfg(not(unix))]
+            {
+                let revents = {
+                    let mut interests: Vec<(i16, probe::Probe<'_>)> =
+                        Vec::with_capacity(fds.len());
+                    interests.push((fds[0].events, probe::Probe::Assume));
+                    interests.push((fds[1].events, probe::Probe::Udp(&wake_rx)));
+                    for (i, tok) in order.iter().enumerate() {
+                        let p = match conns.get(tok) {
+                            Some(c) => probe::Probe::Tcp(&c.stream),
+                            None => probe::Probe::Assume,
+                        };
+                        interests.push((fds[i + 2].events, p));
+                    }
+                    probe::poll_probed(&interests, 100)
+                };
+                for (f, r) in fds.iter_mut().zip(revents) {
+                    f.revents = r;
+                }
+            }
+
+            let now = Instant::now();
 
             // Drain wake datagrams (their only content is "look at the
             // mailbox").
@@ -611,30 +807,86 @@ impl Reactor {
             // Completions from the queue workers.
             let batch = std::mem::take(&mut *mailbox.done.lock().unwrap());
             for d in batch {
-                let Some(c) = conns.get_mut(&d.token) else {
-                    continue; // client vanished mid-job; result dropped
-                };
                 match d.sweep {
                     Some((sid, idx)) => {
-                        apply_sweep_result(c, ctx, sid, idx, d.result, true);
+                        // Sweep rows route by global sweep id — the
+                        // sweep (and its store entry) outlive any
+                        // individual connection.
+                        apply_sweep_result(
+                            &mut conns, &mut sweeps, &mut store, ctx, &cfg, sid, idx, d.result,
+                            true,
+                        );
                     }
-                    None => {
-                        c.inflight_runs = c.inflight_runs.saturating_sub(1);
-                        let reply = match d.result {
-                            Ok(r) => Json::obj(vec![
-                                ("ok", true.into()),
-                                ("result", r.to_json()),
-                            ]),
-                            Err(e) => {
-                                ctx.scheduler
-                                    .metrics
-                                    .jobs_failed
-                                    .fetch_add(1, Ordering::Relaxed);
-                                err_reply(e.to_string())
+                    None => match conns.get_mut(&d.token) {
+                        Some(c) => {
+                            c.inflight_runs = c.inflight_runs.saturating_sub(1);
+                            let reply = match d.result {
+                                Ok(r) => {
+                                    ctx.scheduler
+                                        .metrics
+                                        .results_delivered
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    Json::obj(vec![
+                                        ("ok", true.into()),
+                                        ("result", r.to_json()),
+                                    ])
+                                }
+                                Err(e) => {
+                                    ctx.scheduler
+                                        .metrics
+                                        .jobs_failed
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    err_reply(e.to_string())
+                                }
+                            };
+                            c.reply(d.req, reply);
+                        }
+                        None => {
+                            // Client vanished mid-job. The old reactor
+                            // dropped the result on the floor here;
+                            // now an Ok result is stashed under a
+                            // derived token so a reconnecting client
+                            // (or operator) can still fetch it, and
+                            // every outcome is accounted.
+                            let metrics = &ctx.scheduler.metrics;
+                            match d.result {
+                                Ok(r) => {
+                                    let frame = Json::obj(vec![
+                                        ("ok", true.into()),
+                                        ("result", r.to_json()),
+                                    ]);
+                                    let run_token = format!("run-{}-{}", d.token, d.req);
+                                    match store.stash(&run_token, frame, true, now) {
+                                        Ok(evicted) => {
+                                            metrics
+                                                .results_stored
+                                                .fetch_add(1, Ordering::Relaxed);
+                                            metrics
+                                                .store_evictions
+                                                .fetch_add(evicted as u64, Ordering::Relaxed);
+                                            log_info!(
+                                                "reactor",
+                                                "stashed orphaned run result as {run_token}"
+                                            );
+                                        }
+                                        Err(_) => {
+                                            metrics
+                                                .orphaned_results
+                                                .fetch_add(1, Ordering::Relaxed);
+                                            log_warn!(
+                                                "reactor",
+                                                "store full; orphaned run result dropped \
+                                                 (counted in orphaned_results)"
+                                            );
+                                        }
+                                    }
+                                }
+                                Err(_) => {
+                                    metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                                }
                             }
-                        };
-                        c.reply(d.req, reply);
-                    }
+                        }
+                    },
                 }
             }
 
@@ -680,7 +932,7 @@ impl Reactor {
                 }
             }
 
-            // Frame processing, sweep pumping, reply transfer, writes.
+            // Frame processing per connection.
             for (tok, c) in conns.iter_mut() {
                 if c.dead {
                     continue;
@@ -691,7 +943,10 @@ impl Reactor {
                             if line.trim().is_empty() {
                                 continue;
                             }
-                            handle_request(c, *tok, &line, ctx, &mailbox, &cfg);
+                            handle_request(
+                                c, *tok, &line, ctx, &mailbox, &cfg, &mut sweeps, &mut store,
+                                &mut next_sid, salt,
+                            );
                         }
                         Some(Frame::Oversized { limit }) => {
                             ctx.scheduler
@@ -707,7 +962,22 @@ impl Reactor {
                         None => break,
                     }
                 }
-                pump_sweeps(c, *tok, ctx, &mailbox, &cfg);
+            }
+
+            // Pump every live sweep (owned or detached) up to its
+            // window, then land any submit-time hard failures.
+            let failures = pump_sweeps(&conns, &mut sweeps, ctx, &mailbox, &cfg);
+            for (sid, idx, e) in failures {
+                apply_sweep_result(
+                    &mut conns, &mut sweeps, &mut store, ctx, &cfg, sid, idx, Err(e), false,
+                );
+            }
+
+            // Reply transfer and writes.
+            for c in conns.values_mut() {
+                if c.dead {
+                    continue;
+                }
                 c.fill_out(&cfg);
                 c.write_out();
                 if c.backlog() > cfg.hard_cap {
@@ -721,9 +991,11 @@ impl Reactor {
             }
 
             // Reap: broken connections, and quiet ones whose client
-            // already said goodbye.
+            // already said goodbye. Sweeps they own detach (owner
+            // cleared) and keep fanning out into the store.
             let force_close = grace_rounds_left == Some(0);
-            conns.retain(|_, c| {
+            let mut reaped: Vec<u64> = Vec::new();
+            conns.retain(|tok, c| {
                 let quiet = c.idle() && (c.read_closed || shutting_down);
                 let gone = c.dead || quiet || force_close;
                 if gone {
@@ -734,12 +1006,45 @@ impl Reactor {
                         .metrics
                         .conns_closed
                         .fetch_add(1, Ordering::Relaxed);
+                    reaped.push(*tok);
                 }
                 !gone
             });
+            if !reaped.is_empty() {
+                for run in sweeps.values_mut() {
+                    if run.owner.is_some_and(|t| reaped.contains(&t)) {
+                        run.owner = None;
+                        log_info!(
+                            "reactor",
+                            "sweep {} detached (client gone); results stay under its token",
+                            run.token
+                        );
+                    }
+                }
+            }
+
+            // Store housekeeping: age out abandoned finished sweeps and
+            // publish the occupancy gauges.
+            let aged = store.evict_expired(now);
+            if aged > 0 {
+                ctx.scheduler
+                    .metrics
+                    .store_evictions
+                    .fetch_add(aged as u64, Ordering::Relaxed);
+            }
+            ctx.scheduler
+                .metrics
+                .store_rows
+                .store(store.rows_used() as u64, Ordering::Relaxed);
+            ctx.scheduler
+                .metrics
+                .store_sweeps
+                .store(store.sweeps() as u64, Ordering::Relaxed);
 
             if let Some(g) = grace_rounds_left.as_mut() {
-                if conns.is_empty() {
+                // Exit once every connection is gone *and* every sweep
+                // has drained into the store — or the grace runs out.
+                if conns.is_empty() && sweeps.is_empty() {
                     break;
                 }
                 if *g == 0 {
@@ -755,13 +1060,21 @@ impl Reactor {
     }
 }
 
+/// One framed request → reply frames into the request's slot. Control
+/// commands share [`dispatch_control`] with the threaded server;
+/// `run`/`sweep`/`results` are the reactor's own non-blocking paths.
+#[allow(clippy::too_many_arguments)]
 fn handle_request(
     c: &mut Conn,
-    token: u64,
+    conn_tok: u64,
     line: &str,
-    ctx: &Arc<ServerCtx>,
+    ctx: &ServerCtx,
     mailbox: &Arc<Mailbox>,
     cfg: &ReactorConfig,
+    sweeps: &mut HashMap<u64, SweepRun>,
+    store: &mut ResultsStore,
+    next_sid: &mut u64,
+    salt: u64,
 ) {
     let req_id = c.new_slot();
     let req = match json::parse(line) {
@@ -776,9 +1089,11 @@ fn handle_request(
         return;
     }
     match req.get("cmd").and_then(Json::as_str) {
-        Some("run") => handle_run(c, token, req_id, &req, ctx, mailbox),
-        Some("sweep") => handle_sweep(c, req_id, &req, ctx, cfg),
-        Some("results") => handle_results(c, req_id, &req),
+        Some("run") => handle_run(c, conn_tok, req_id, &req, ctx, mailbox, cfg),
+        Some("sweep") => {
+            handle_sweep(c, conn_tok, req_id, &req, ctx, cfg, sweeps, store, next_sid, salt)
+        }
+        Some("results") => handle_results(c, req_id, &req, store),
         _ => c.reply(
             req_id,
             err_reply("unknown cmd (ping|run|sweep|results|maps|metrics|trace|shutdown)".into()),
@@ -786,16 +1101,21 @@ fn handle_request(
     }
 }
 
+/// Non-blocking `run`: submit through the queue (with the start
+/// deadline), let the completion route back through the mailbox.
 fn handle_run(
     c: &mut Conn,
-    token: u64,
+    conn_tok: u64,
     req_id: u64,
     req: &Json,
-    ctx: &Arc<ServerCtx>,
+    ctx: &ServerCtx,
     mailbox: &Arc<Mailbox>,
+    cfg: &ReactorConfig,
 ) {
-    let metrics = &ctx.scheduler.metrics;
-    metrics.jobs_accepted.fetch_add(1, Ordering::Relaxed);
+    ctx.scheduler
+        .metrics
+        .jobs_accepted
+        .fetch_add(1, Ordering::Relaxed);
     let Some(job) = Job::from_json(req) else {
         c.reply(req_id, err_reply("invalid job (need workload, nb, map)".into()));
         return;
@@ -805,52 +1125,69 @@ fn handle_run(
         Some(s) => match Priority::parse(s) {
             Some(p) => p,
             None => {
-                c.reply(req_id, err_reply(format!("unknown priority {s}")));
+                c.reply(
+                    req_id,
+                    err_reply(format!("unknown priority {s} (high|normal|low)")),
+                );
                 return;
             }
         },
     };
-    // Accept span: admission → completion (the reply transfer happens
-    // on the loop right after, so this is the client-visible latency
-    // minus socket time).
-    let accept = span::global().start("server", "accept", 0);
-    let attrs = vec![
-        ("workload", job.workload.name().to_string()),
-        ("map", job.map.clone()),
-    ];
     let mb = Arc::clone(mailbox);
-    match ctx.queue.submit_async(job, priority, token, move |result| {
-        span::global().finish_with(accept, attrs);
-        mb.push(Done {
-            token,
-            req: req_id,
-            sweep: None,
-            result,
-        });
-    }) {
+    let deadline = Some(Instant::now() + Duration::from_millis(cfg.job_timeout_ms));
+    let outcome = ctx.queue.submit_async_with_deadline(
+        job,
+        priority,
+        conn_tok,
+        deadline,
+        move |result| {
+            mb.push(Done {
+                token: conn_tok,
+                req: req_id,
+                sweep: None,
+                result,
+            });
+        },
+    );
+    match outcome {
         Ok(()) => c.inflight_runs += 1,
         Err(e) => {
-            metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            ctx.scheduler
+                .metrics
+                .jobs_failed
+                .fetch_add(1, Ordering::Relaxed);
             c.reply(req_id, err_reply(e.to_string()));
         }
     }
 }
 
+/// Start a sweep: expand, reserve store rows under a fresh token (the
+/// bounded-store pushback happens *here*, before any work is queued),
+/// ack with the token, and register the global run for the pump.
+#[allow(clippy::too_many_arguments)]
 fn handle_sweep(
     c: &mut Conn,
+    conn_tok: u64,
     req_id: u64,
     req: &Json,
-    ctx: &Arc<ServerCtx>,
+    ctx: &ServerCtx,
     cfg: &ReactorConfig,
+    sweeps: &mut HashMap<u64, SweepRun>,
+    store: &mut ResultsStore,
+    next_sid: &mut u64,
+    salt: u64,
 ) {
     let (jobs, opts) = match expand_sweep(req, cfg.sweep_window, cfg.max_sweep_jobs) {
         Ok(x) => x,
-        Err(msg) => {
-            c.reply(req_id, err_reply(msg));
+        Err(e) => {
+            c.reply(req_id, err_reply(e));
             return;
         }
     };
-    let active = c.sweeps.values().filter(|s| !s.finished).count();
+    let active = sweeps
+        .values()
+        .filter(|r| r.owner == Some(conn_tok))
+        .count();
     if active >= cfg.max_sweeps_per_conn {
         c.reply(
             req_id,
@@ -860,76 +1197,105 @@ fn handle_sweep(
         );
         return;
     }
-    // Evict the oldest finished sweep once the pagination store is at
-    // capacity — bounded memory per connection.
-    while c.sweeps.len() >= cfg.max_sweeps_per_conn * 2 {
-        let oldest_done = c
-            .sweeps
-            .iter()
-            .find(|(_, s)| s.finished)
-            .map(|(id, _)| *id);
-        match oldest_done {
-            Some(id) => {
-                c.sweeps.remove(&id);
+    let n = jobs.len();
+    let sid = *next_sid;
+    let token = fresh_token(sid, salt);
+    match store.admit(&token, n, Instant::now()) {
+        Ok(evicted) => {
+            if evicted > 0 {
+                ctx.scheduler
+                    .metrics
+                    .store_evictions
+                    .fetch_add(evicted as u64, Ordering::Relaxed);
             }
-            None => break,
+        }
+        Err(e) => {
+            // Typed admission pushback: the sweep was never started, so
+            // nothing is counted as accepted and nothing can be lost.
+            c.reply(req_id, err_reply(e.to_string()));
+            return;
         }
     }
-    let sid = c.next_sweep;
-    c.next_sweep += 1;
-    let metrics = &ctx.scheduler.metrics;
-    metrics.sweeps_started.fetch_add(1, Ordering::Relaxed);
-    metrics
+    *next_sid += 1;
+    ctx.scheduler
+        .metrics
+        .sweeps_started
+        .fetch_add(1, Ordering::Relaxed);
+    ctx.scheduler
+        .metrics
         .jobs_accepted
-        .fetch_add(jobs.len() as u64, Ordering::Relaxed);
-    let n = jobs.len();
-    let ack = Json::obj(vec![
-        ("ok", true.into()),
-        ("sweep", sid.into()),
-        ("jobs", (n as u64).into()),
-        ("streaming", opts.stream.into()),
-    ]);
-    c.push_frame(req_id, ack);
+        .fetch_add(n as u64, Ordering::Relaxed);
+    // Bounded id→token alias table; dropping an old alias never loses
+    // results — the token itself keeps paging.
+    while c.sweep_tokens.len() >= cfg.max_sweeps_per_conn * 2 {
+        let oldest = *c.sweep_tokens.keys().next().unwrap();
+        c.sweep_tokens.remove(&oldest);
+    }
+    c.sweep_tokens.insert(sid, token.clone());
+    c.push_frame(
+        req_id,
+        Json::obj(vec![
+            ("ok", true.into()),
+            ("sweep", sid.into()),
+            ("token", token.clone().into()),
+            ("jobs", n.into()),
+            ("streaming", opts.stream.into()),
+        ]),
+    );
     if !opts.stream {
-        // Non-streaming sweeps answer just the ack; rows arrive via
-        // `results` pagination. The slot closes so later requests
-        // (e.g. the polls) are not blocked behind the fan-out.
+        // Non-streaming: the ack is the whole reply; rows are paged
+        // later via `results` (by id on this connection, by token on
+        // any connection).
         c.finish_slot(req_id);
     }
-    c.sweeps.insert(
+    sweeps.insert(
         sid,
-        SweepState {
+        SweepRun {
+            token,
+            owner: Some(conn_tok),
             req: req_id,
-            results: vec![None; n],
             jobs,
             next_submit: 0,
             in_flight: 0,
+            retry: VecDeque::new(),
+            retries_used: vec![0; n],
             completed: 0,
             failed: 0,
             stream: opts.stream,
             window: opts.window,
             priority: opts.priority,
+            lane: conn_tok,
             started: Instant::now(),
-            finished: false,
             span: Some(span::global().start("server", "sweep", 0)),
         },
     );
-    // Rows are submitted by `pump_sweeps` on this same loop iteration.
 }
 
-fn handle_results(c: &mut Conn, req_id: u64, req: &Json) {
-    let Some(sid) = req.get("sweep").and_then(Json::as_u64) else {
-        c.reply(req_id, err_reply("results needs a sweep id".into()));
-        return;
-    };
-    let Some(st) = c.sweeps.get(&sid) else {
-        c.reply(
-            req_id,
-            err_reply(format!(
-                "unknown sweep {sid} (results are per-connection and bounded)"
-            )),
-        );
-        return;
+/// Page stored results by durable token (any connection — this is the
+/// reconnect path) or by bare sweep id (only the connection that
+/// started it).
+fn handle_results(c: &mut Conn, req_id: u64, req: &Json, store: &mut ResultsStore) {
+    let explicit = req.get("token").and_then(Json::as_str).map(str::to_string);
+    let sid = req.get("sweep").and_then(Json::as_u64);
+    let (token, sid_for_reply) = match (explicit, sid) {
+        (Some(t), s) => (t, s),
+        (None, Some(s)) => match c.sweep_tokens.get(&s) {
+            Some(t) => (t.clone(), Some(s)),
+            None => {
+                c.reply(
+                    req_id,
+                    err_reply(format!(
+                        "unknown sweep {s} (ids are per-connection — reconnecting \
+                         clients page by token)"
+                    )),
+                );
+                return;
+            }
+        },
+        (None, None) => {
+            c.reply(req_id, err_reply("results needs a sweep id or token".into()));
+            return;
+        }
     };
     let cursor = req.get("cursor").and_then(Json::as_u64).unwrap_or(0) as usize;
     let limit = req
@@ -937,158 +1303,212 @@ fn handle_results(c: &mut Conn, req_id: u64, req: &Json) {
         .and_then(Json::as_u64)
         .unwrap_or(64)
         .clamp(1, 256) as usize;
-    let total = st.results.len();
-    let end = cursor.saturating_add(limit).min(total);
-    let page: Vec<Json> = st
-        .results
-        .get(cursor.min(total)..end)
-        .unwrap_or(&[])
-        .iter()
-        .map(|r| r.clone().unwrap_or(Json::Null))
-        .collect();
-    let next = if end < total {
-        Json::from(end as u64)
-    } else {
-        Json::Null
+    let Some(page) = store.page(&token, cursor, limit, Instant::now()) else {
+        c.reply(
+            req_id,
+            err_reply(format!("unknown token {token} (expired or evicted)")),
+        );
+        return;
     };
-    let reply = Json::obj(vec![
-        ("ok", true.into()),
-        ("sweep", sid.into()),
-        ("jobs", (total as u64).into()),
-        ("cursor", (cursor as u64).into()),
-        ("done", st.finished.into()),
-        ("results", Json::Arr(page)),
-        ("next_cursor", next),
-    ]);
-    c.reply(req_id, reply);
+    let mut fields: Vec<(&str, Json)> = vec![("ok", true.into())];
+    if let Some(s) = sid_for_reply {
+        fields.push(("sweep", s.into()));
+    }
+    fields.push(("token", token.into()));
+    fields.push(("jobs", page.jobs.into()));
+    fields.push(("cursor", page.cursor.into()));
+    fields.push(("done", page.done.into()));
+    fields.push(("completed", page.completed.into()));
+    fields.push(("failed", page.failed.into()));
+    fields.push(("results", Json::Arr(page.results)));
+    fields.push((
+        "next_cursor",
+        match page.next_cursor {
+            Some(nc) => nc.into(),
+            None => Json::Null,
+        },
+    ));
+    c.reply(req_id, Json::obj(fields));
 }
 
-/// Submit sweep rows up to each sweep's in-flight window. `QueueFull`
-/// stops the pump without failing the row — the next completion frees
-/// queue space and wakes the loop, which retries here. This is what
-/// keeps `queue_depth ≤ capacity` while a 4096-row sweep drains.
+/// Keep every live sweep (owned or detached) at its in-flight window.
+/// Retried rows resubmit ahead of fresh ones through the same
+/// priority/fairness lane. `QueueFull` stops pumping for this tick
+/// (state untouched — the row is only peeked); hard submit failures
+/// are returned for the caller to land as row results.
 fn pump_sweeps(
-    c: &mut Conn,
-    token: u64,
-    ctx: &Arc<ServerCtx>,
+    conns: &HashMap<u64, Conn>,
+    sweeps: &mut HashMap<u64, SweepRun>,
+    ctx: &ServerCtx,
     mailbox: &Arc<Mailbox>,
     cfg: &ReactorConfig,
-) {
-    // A backlogged client stops receiving new rows: in-flight ones
-    // finish (bounded by the window), then the fan-out idles until the
-    // client drains — memory stays bounded without dropping results.
-    if c.paused(cfg) {
-        return;
-    }
-    let mut hard_failures: Vec<(u64, usize, ScheduleError)> = Vec::new();
-    for (&sid, st) in c.sweeps.iter_mut() {
-        while !st.finished && st.next_submit < st.jobs.len() && st.in_flight < st.window {
-            let idx = st.next_submit;
-            let job = st.jobs[idx].clone();
-            let mb = Arc::clone(mailbox);
-            match ctx.queue.submit_async(job, st.priority, token, move |result| {
-                mb.push(Done {
-                    token,
-                    req: 0,
-                    sweep: Some((sid, idx)),
-                    result,
-                });
-            }) {
-                Ok(()) => {
-                    st.in_flight += 1;
-                    st.next_submit += 1;
+) -> Vec<(u64, usize, ScheduleError)> {
+    let mut failures = Vec::new();
+    'runs: for (&sid, run) in sweeps.iter_mut() {
+        if run.stream {
+            // Streaming sweeps throttle on their owner's backpressure;
+            // once detached they drain into the store unthrottled.
+            if let Some(owner) = run.owner {
+                if conns.get(&owner).is_some_and(|c| c.paused(cfg)) {
+                    continue;
                 }
-                Err(ScheduleError::QueueFull(_)) => return,
+            }
+        }
+        while run.in_flight < run.window {
+            let from_retry = run.retry.front().is_some();
+            let idx = match run.retry.front().copied() {
+                Some(i) => i,
+                None if run.next_submit < run.jobs.len() => run.next_submit,
+                None => break,
+            };
+            let job = run.jobs[idx].clone();
+            let mb = Arc::clone(mailbox);
+            let deadline = Some(Instant::now() + Duration::from_millis(cfg.job_timeout_ms));
+            let outcome = ctx.queue.submit_async_with_deadline(
+                job,
+                run.priority,
+                run.lane,
+                deadline,
+                move |result| {
+                    mb.push(Done {
+                        token: 0,
+                        req: 0,
+                        sweep: Some((sid, idx)),
+                        result,
+                    });
+                },
+            );
+            match outcome {
+                Ok(()) => {
+                    run.in_flight += 1;
+                    if from_retry {
+                        run.retry.pop_front();
+                    } else {
+                        run.next_submit += 1;
+                    }
+                }
+                Err(ScheduleError::QueueFull(_)) => break 'runs,
                 Err(e) => {
-                    // Shutdown and friends: fail the row, move on.
-                    st.next_submit += 1;
-                    hard_failures.push((sid, idx, e));
+                    if from_retry {
+                        run.retry.pop_front();
+                    } else {
+                        run.next_submit += 1;
+                    }
+                    failures.push((sid, idx, e));
                 }
             }
         }
     }
-    for (sid, idx, e) in hard_failures {
-        apply_sweep_result(c, ctx, sid, idx, Err(e), false);
-    }
+    failures
 }
 
-/// Land one sweep row: reassemble into the row-order store, stream the
-/// frame if requested, close out the sweep when the last row lands.
+/// Land one sweep-row outcome: maybe re-enqueue (bounded retry), store
+/// the row under the sweep's token, stream it to a live owner, and —
+/// on the last row — finish the sweep (done frame, wall record, span).
+#[allow(clippy::too_many_arguments)]
 fn apply_sweep_result(
-    c: &mut Conn,
-    ctx: &Arc<ServerCtx>,
+    conns: &mut HashMap<u64, Conn>,
+    sweeps: &mut HashMap<u64, SweepRun>,
+    store: &mut ResultsStore,
+    ctx: &ServerCtx,
+    cfg: &ReactorConfig,
     sid: u64,
     idx: usize,
     result: Result<JobResult, ScheduleError>,
     from_queue: bool,
 ) {
-    let metrics = &ctx.scheduler.metrics;
-    let Some(st) = c.sweeps.get_mut(&sid) else {
+    let Some(run) = sweeps.get_mut(&sid) else {
         return;
     };
+    let metrics = &ctx.scheduler.metrics;
     if from_queue {
-        st.in_flight = st.in_flight.saturating_sub(1);
-    }
-    if idx >= st.results.len() || st.results[idx].is_some() {
-        return; // structurally impossible duplicate; never double-count
+        run.in_flight = run.in_flight.saturating_sub(1);
+        if let Err(e) = &result {
+            if retryable(e) && u32::from(run.retries_used[idx]) < cfg.job_retry_max {
+                run.retries_used[idx] = run.retries_used[idx].saturating_add(1);
+                metrics.jobs_retried.fetch_add(1, Ordering::Relaxed);
+                run.retry.push_back(idx);
+                return;
+            }
+        }
     }
     let ok = result.is_ok();
     let frame = match result {
         Ok(r) => Json::obj(vec![
             ("sweep", sid.into()),
-            ("job", (idx as u64).into()),
+            ("job", idx.into()),
             ("ok", true.into()),
             ("result", r.to_json()),
         ]),
         Err(e) => Json::obj(vec![
             ("sweep", sid.into()),
-            ("job", (idx as u64).into()),
+            ("job", idx.into()),
             ("ok", false.into()),
             ("error", e.to_string().into()),
         ]),
     };
+    let text = (run.stream && run.owner.is_some()).then(|| frame.to_string_compact());
+    match store.put(&run.token, idx, frame, ok, Instant::now()) {
+        // A duplicate landing means this row is already fully
+        // accounted — nothing further to apply.
+        PutOutcome::Duplicate => return,
+        PutOutcome::Unknown => {
+            // The entry aged out (or was LRU-evicted) mid-sweep; the
+            // result has nowhere durable to go.
+            if ok {
+                metrics.orphaned_results.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        PutOutcome::Stored => {
+            if ok {
+                metrics.results_stored.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
     if ok {
-        st.completed += 1;
+        run.completed += 1;
     } else {
-        st.failed += 1;
+        run.failed += 1;
         metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
     }
     metrics.sweep_jobs_completed.fetch_add(1, Ordering::Relaxed);
-    let mut texts: Vec<String> = Vec::new();
-    if st.stream {
-        texts.push(frame.to_string_compact());
-    }
-    st.results[idx] = Some(frame);
-    let req = st.req;
-    let stream = st.stream;
-    let finished_now = st.completed + st.failed == st.results.len() as u64;
-    if finished_now {
-        st.finished = true;
+    let finished = run.completed + run.failed == run.jobs.len() as u64;
+    if finished {
         metrics.sweeps_completed.fetch_add(1, Ordering::Relaxed);
-        metrics.record_sweep_wall(st.started.elapsed().as_secs_f64());
-        let (jobs, completed, failed) =
-            (st.results.len() as u64, st.completed, st.failed);
-        if let Some(sp) = st.span.take() {
-            span::global().finish_with(sp, vec![("jobs", jobs.to_string())]);
+        metrics.record_sweep_wall(run.started.elapsed().as_secs_f64());
+        if let Some(sp) = run.span.take() {
+            span::global().finish_with(sp, vec![("jobs", run.jobs.len().to_string())]);
         }
-        if stream {
-            texts.push(
+    }
+    let owner = run.owner;
+    let req = run.req;
+    let stream = run.stream;
+    let token = run.token.clone();
+    let jobs_n = run.jobs.len();
+    let (completed, failed) = (run.completed, run.failed);
+    if finished {
+        // The run's job is done; the *results* live on in the store
+        // until paged + TTL-evicted.
+        sweeps.remove(&sid);
+    }
+    if let Some(c) = owner.and_then(|t| conns.get_mut(&t)) {
+        if let Some(t) = text {
+            c.push_frame_text(req, t);
+        }
+        if finished && stream {
+            c.push_frame(
+                req,
                 Json::obj(vec![
                     ("sweep", sid.into()),
                     ("done", true.into()),
-                    ("jobs", jobs.into()),
+                    ("jobs", jobs_n.into()),
                     ("completed", completed.into()),
                     ("failed", failed.into()),
-                ])
-                .to_string_compact(),
+                    ("token", token.into()),
+                ]),
             );
+            c.finish_slot(req);
         }
-    }
-    for t in texts {
-        c.push_frame_text(req, t);
-    }
-    if finished_now && stream {
-        c.finish_slot(req);
     }
 }
 
@@ -1180,6 +1600,7 @@ mod tests {
         assert!(err.contains("over the 3"), "{err}");
     }
 
+    #[cfg(unix)]
     #[test]
     fn poll_wait_times_out_with_no_fds() {
         let mut fds: Vec<sys::PollFd> = Vec::new();
@@ -1194,8 +1615,104 @@ mod tests {
         let d = ReactorConfig::default();
         assert!(d.soft_watermark < d.hard_cap);
         assert!(d.max_sweep_jobs >= d.sweep_window);
+        assert_eq!(d.store_ttl_secs, 600);
+        assert_eq!(d.job_timeout_ms, 300_000);
+        assert_eq!(d.job_retry_max, 1);
         let e = ReactorConfig::from_env();
         assert!(e.max_frame >= 64);
         assert!(e.sweep_window >= 1);
+        assert!(e.store_rows_cap >= 1);
+    }
+
+    #[test]
+    fn fresh_tokens_are_distinct_and_carry_the_sweep_id() {
+        let a = fresh_token(1, 0xDEAD);
+        let b = fresh_token(2, 0xDEAD);
+        let c = fresh_token(1, 0xBEEF);
+        assert!(a.starts_with("swp-1-"), "{a}");
+        assert!(b.starts_with("swp-2-"), "{b}");
+        assert_ne!(a, b);
+        assert_ne!(a, c, "the salt must reach the nonce");
+    }
+
+    #[test]
+    fn retryable_covers_expiry_and_runtime_only() {
+        assert!(retryable(&ScheduleError::Expired(5)));
+        assert!(!retryable(&ScheduleError::QueueFull(8)));
+        assert!(!retryable(&ScheduleError::Shutdown));
+        assert!(!retryable(&ScheduleError::UnknownMap("x".into(), 2)));
+    }
+
+    // ---- probe (the non-unix poll fallback) --------------------------
+    //
+    // The old fallback reported `revents = events` for every fd on
+    // every call: phantom POLLIN with nothing to read, i.e. a busy
+    // loop. These tests pin the fix on the primary platform.
+
+    use std::net::{TcpListener as TL, TcpStream as TS, UdpSocket as US};
+
+    fn tcp_pair() -> (TS, TS) {
+        let l = TL::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let a = TS::connect(addr).unwrap();
+        let (b, _) = l.accept().unwrap();
+        a.set_nonblocking(true).unwrap();
+        b.set_nonblocking(true).unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn probe_reports_no_readiness_without_data_and_waits_out_the_timeout() {
+        let (a, _b) = tcp_pair();
+        let interests = vec![(probe::POLLIN, probe::Probe::Tcp(&a))];
+        let t = Instant::now();
+        let revents = probe::poll_probed(&interests, 30);
+        assert!(
+            t.elapsed().as_millis() >= 25,
+            "must sleep, not busy-return: {:?}",
+            t.elapsed()
+        );
+        assert_eq!(revents, vec![0], "no data ⇒ no phantom POLLIN");
+    }
+
+    #[test]
+    fn probe_wakes_early_on_pending_tcp_data() {
+        let (a, mut b) = tcp_pair();
+        b.write_all(b"hi").unwrap();
+        let interests = vec![(probe::POLLIN, probe::Probe::Tcp(&a))];
+        let t = Instant::now();
+        let revents = probe::poll_probed(&interests, 5_000);
+        assert!(t.elapsed().as_millis() < 1_000, "pending data must cut the wait");
+        assert_eq!(revents[0] & probe::POLLIN, probe::POLLIN);
+    }
+
+    #[test]
+    fn probe_flags_hangup_on_peer_close() {
+        let (a, b) = tcp_pair();
+        drop(b);
+        let revents = probe::poll_probed(&[(probe::POLLIN, probe::Probe::Tcp(&a))], 5_000);
+        assert_eq!(revents[0] & probe::POLLIN, probe::POLLIN);
+        assert_eq!(revents[0] & probe::POLLHUP, probe::POLLHUP);
+    }
+
+    #[test]
+    fn probe_sees_udp_datagrams_and_folds_interests_only_at_exit() {
+        let rx = US::bind("127.0.0.1:0").unwrap();
+        rx.set_nonblocking(true).unwrap();
+        let tx = US::bind("127.0.0.1:0").unwrap();
+        tx.connect(rx.local_addr().unwrap()).unwrap();
+        tx.send(&[1]).unwrap();
+        let (a, _b) = tcp_pair();
+        let interests = vec![
+            (probe::POLLIN, probe::Probe::Udp(&rx)),
+            // Write interest never wakes the loop early; it is folded
+            // in at exit so the caller still attempts the write.
+            (probe::POLLOUT, probe::Probe::Tcp(&a)),
+            (probe::POLLIN, probe::Probe::Assume),
+        ];
+        let revents = probe::poll_probed(&interests, 5_000);
+        assert_eq!(revents[0] & probe::POLLIN, probe::POLLIN);
+        assert_eq!(revents[1], probe::POLLOUT);
+        assert_eq!(revents[2], probe::POLLIN, "Assume reports its registered interest");
     }
 }

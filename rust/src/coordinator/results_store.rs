@@ -1,0 +1,419 @@
+//! Connection-independent sweep results store: the container that
+//! outlives the consumer.
+//!
+//! The reactor used to keep sweep rows inside the `Conn` that started
+//! the sweep, so a dropped TCP connection destroyed every completed
+//! result of an in-flight sweep. This store severs that tie the same
+//! way the paper's block-space maps sever parallel space from domain
+//! space: rows are keyed by a durable *token* handed out in the sweep
+//! ack, and any connection that presents the token can page through
+//! the rows — mid-sweep or after completion, across reconnects.
+//!
+//! ## Invariants
+//!
+//! - **Bounded.** Total stored rows never exceed `max_rows`. Admission
+//!   pre-reserves *all* of a sweep's rows up front, so a sweep that is
+//!   admitted can never hit store-full mid-flight — degradation happens
+//!   at the edge (a typed [`StoreError::Full`] refusal the caller turns
+//!   into a wire error), never as silent row loss in the middle.
+//! - **Only finished entries are evicted.** Unfinished entries are
+//!   always driven to completion by a live `SweepRun` in the reactor
+//!   (even after the owning client vanishes), so TTL/LRU eviction
+//!   considers finished entries only; an admitted sweep keeps its
+//!   reservation until it finishes and ages out.
+//! - **Duplicate-delivery guard.** `put` reports [`PutOutcome::Duplicate`]
+//!   for a row that already landed, so the caller's exactly-once
+//!   accounting survives reconnects and retries.
+//!
+//! The store is owned by the single-threaded reactor loop and takes
+//! `&mut self` — no interior locking — and it counts nothing itself:
+//! the reactor translates return values ([`PutOutcome`], eviction
+//! counts) into metrics, which keeps these unit tests standalone.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Store sizing knobs (reactor copies these out of `ReactorConfig`,
+/// which reads `SIMPLEXMAP_STORE_CAP` / `SIMPLEXMAP_STORE_TTL_SECS`).
+#[derive(Clone, Copy, Debug)]
+pub struct StoreConfig {
+    /// Ceiling on total rows held across all sweeps.
+    pub max_rows: usize,
+    /// Finished entries older than this (since last access) age out.
+    pub ttl: Duration,
+}
+
+impl Default for StoreConfig {
+    fn default() -> StoreConfig {
+        StoreConfig {
+            max_rows: 65_536,
+            ttl: Duration::from_secs(600),
+        }
+    }
+}
+
+/// Typed admission refusal: the caller reports `need`/`cap`/`used` to
+/// the client instead of silently dropping rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreError {
+    Full {
+        need: usize,
+        cap: usize,
+        used: usize,
+    },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Full { need, cap, used } => write!(
+                f,
+                "results store full: sweep needs {need} rows, {used}/{cap} in use \
+                 (finish or expire older sweeps, or raise SIMPLEXMAP_STORE_CAP)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+/// What happened to a row handed to [`ResultsStore::put`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PutOutcome {
+    /// Landed in its cell.
+    Stored,
+    /// The cell was already filled — exactly-once guard tripped.
+    Duplicate,
+    /// No entry under that token (evicted or never admitted).
+    Unknown,
+}
+
+/// One `results` page, reassembled row-major.
+#[derive(Clone, Debug)]
+pub struct Page {
+    pub jobs: usize,
+    pub cursor: usize,
+    pub results: Vec<Json>,
+    pub next_cursor: Option<usize>,
+    pub done: bool,
+    pub completed: u64,
+    pub failed: u64,
+}
+
+struct Entry {
+    /// Row-major cells; `None` until the row's completion lands.
+    rows: Vec<Option<Json>>,
+    finished: bool,
+    completed: u64,
+    failed: u64,
+    /// Admission, put, finish and page all refresh this — TTL measures
+    /// abandonment, not age.
+    last_access: Instant,
+}
+
+/// Bounded, TTL-evicted map from sweep token to its result rows.
+pub struct ResultsStore {
+    cfg: StoreConfig,
+    entries: HashMap<String, Entry>,
+    rows_used: usize,
+}
+
+impl ResultsStore {
+    pub fn new(cfg: StoreConfig) -> ResultsStore {
+        ResultsStore {
+            cfg,
+            entries: HashMap::new(),
+            rows_used: 0,
+        }
+    }
+
+    /// Reserve `jobs` row cells under `token`. Evicts finished entries
+    /// oldest-access-first to make room; refuses (typed, no partial
+    /// state) when even that cannot fit the sweep. Returns how many
+    /// entries were evicted so the caller can count them.
+    pub fn admit(&mut self, token: &str, jobs: usize, now: Instant) -> Result<usize, StoreError> {
+        if let Some(old) = self.entries.remove(token) {
+            // A token collision can only be a caller bug, but leaking
+            // the old reservation would corrupt the occupancy gauge.
+            self.rows_used -= old.rows.len();
+        }
+        let mut evicted = 0;
+        while self.rows_used + jobs > self.cfg.max_rows {
+            let oldest = self
+                .entries
+                .iter()
+                .filter(|(_, e)| e.finished)
+                .min_by_key(|(_, e)| e.last_access)
+                .map(|(t, _)| t.clone());
+            match oldest {
+                Some(t) => {
+                    let e = self.entries.remove(&t).expect("picked from entries");
+                    self.rows_used -= e.rows.len();
+                    evicted += 1;
+                }
+                None => {
+                    return Err(StoreError::Full {
+                        need: jobs,
+                        cap: self.cfg.max_rows,
+                        used: self.rows_used,
+                    });
+                }
+            }
+        }
+        self.rows_used += jobs;
+        self.entries.insert(
+            token.to_string(),
+            Entry {
+                rows: vec![None; jobs],
+                finished: false,
+                completed: 0,
+                failed: 0,
+                last_access: now,
+            },
+        );
+        Ok(evicted)
+    }
+
+    /// Land one row in its cell; `ok` feeds the completed/failed tally.
+    pub fn put(
+        &mut self,
+        token: &str,
+        idx: usize,
+        row: Json,
+        ok: bool,
+        now: Instant,
+    ) -> PutOutcome {
+        let Some(e) = self.entries.get_mut(token) else {
+            return PutOutcome::Unknown;
+        };
+        e.last_access = now;
+        if idx >= e.rows.len() || e.rows[idx].is_some() {
+            return PutOutcome::Duplicate;
+        }
+        e.rows[idx] = Some(row);
+        if ok {
+            e.completed += 1;
+        } else {
+            e.failed += 1;
+        }
+        if e.completed + e.failed == e.rows.len() as u64 {
+            e.finished = true;
+        }
+        PutOutcome::Stored
+    }
+
+    /// One-shot stash for an orphaned single-job result (a plain `run`
+    /// whose client vanished before the reply could be written): admit
+    /// a 1-row entry, fill it, and mark it finished in one step.
+    pub fn stash(
+        &mut self,
+        token: &str,
+        row: Json,
+        ok: bool,
+        now: Instant,
+    ) -> Result<usize, StoreError> {
+        let evicted = self.admit(token, 1, now)?;
+        let outcome = self.put(token, 0, row, ok, now);
+        debug_assert_eq!(outcome, PutOutcome::Stored);
+        Ok(evicted)
+    }
+
+    /// Cursor-paginated read. `None` means unknown token. Missing rows
+    /// page as `Json::Null` exactly like the old per-conn store, so a
+    /// reconnecting client can poll mid-sweep.
+    pub fn page(&mut self, token: &str, cursor: usize, limit: usize, now: Instant) -> Option<Page> {
+        let e = self.entries.get_mut(token)?;
+        e.last_access = now;
+        let total = e.rows.len();
+        let start = cursor.min(total);
+        let end = cursor.saturating_add(limit).min(total);
+        let results: Vec<Json> = e.rows[start..end]
+            .iter()
+            .map(|r| r.clone().unwrap_or(Json::Null))
+            .collect();
+        Some(Page {
+            jobs: total,
+            cursor,
+            results,
+            next_cursor: if end < total { Some(end) } else { None },
+            done: e.finished,
+            completed: e.completed,
+            failed: e.failed,
+        })
+    }
+
+    /// Drop finished entries not touched within the TTL. Returns the
+    /// eviction count for the caller's `store_evictions` counter.
+    pub fn evict_expired(&mut self, now: Instant) -> usize {
+        let ttl = self.cfg.ttl;
+        let expired: Vec<String> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.finished && now.duration_since(e.last_access) >= ttl)
+            .map(|(t, _)| t.clone())
+            .collect();
+        for t in &expired {
+            let e = self.entries.remove(t).expect("picked from entries");
+            self.rows_used -= e.rows.len();
+        }
+        expired.len()
+    }
+
+    /// Occupancy gauges for `{"cmd":"metrics"}`.
+    pub fn rows_used(&self) -> usize {
+        self.rows_used
+    }
+
+    pub fn sweeps(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn contains(&self, token: &str) -> bool {
+        self.entries.contains_key(token)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(i: usize) -> Json {
+        Json::obj(vec![("job", (i as u64).into()), ("ok", true.into())])
+    }
+
+    fn store(max_rows: usize, ttl_secs: u64) -> ResultsStore {
+        ResultsStore::new(StoreConfig {
+            max_rows,
+            ttl: Duration::from_secs(ttl_secs),
+        })
+    }
+
+    #[test]
+    fn admit_put_page_round_trip_row_major() {
+        let now = Instant::now();
+        let mut s = store(16, 600);
+        s.admit("swp-1", 3, now).unwrap();
+        assert_eq!(s.rows_used(), 3);
+        assert_eq!(s.sweeps(), 1);
+        // Out-of-order completions land in row-major cells.
+        assert_eq!(s.put("swp-1", 2, row(2), true, now), PutOutcome::Stored);
+        assert_eq!(s.put("swp-1", 0, row(0), true, now), PutOutcome::Stored);
+        let p = s.page("swp-1", 0, 2, now).unwrap();
+        assert_eq!(p.jobs, 3);
+        assert_eq!(p.results.len(), 2);
+        assert_eq!(p.results[0].get("job").and_then(Json::as_u64), Some(0));
+        assert!(matches!(p.results[1], Json::Null), "missing row pages as null");
+        assert_eq!(p.next_cursor, Some(2));
+        assert!(!p.done);
+        let p2 = s.page("swp-1", 2, 10, now).unwrap();
+        assert_eq!(p2.next_cursor, None);
+        assert_eq!(s.put("swp-1", 1, row(1), false, now), PutOutcome::Stored);
+        let p3 = s.page("swp-1", 0, 10, now).unwrap();
+        assert!(p3.done, "all rows landed ⇒ finished");
+        assert_eq!((p3.completed, p3.failed), (2, 1));
+    }
+
+    #[test]
+    fn duplicate_and_unknown_puts_are_reported_not_stored() {
+        let now = Instant::now();
+        let mut s = store(8, 600);
+        s.admit("t", 2, now).unwrap();
+        assert_eq!(s.put("t", 0, row(0), true, now), PutOutcome::Stored);
+        assert_eq!(s.put("t", 0, row(0), true, now), PutOutcome::Duplicate);
+        assert_eq!(s.put("t", 9, row(9), true, now), PutOutcome::Duplicate);
+        assert_eq!(s.put("nope", 0, row(0), true, now), PutOutcome::Unknown);
+        let p = s.page("t", 0, 10, now).unwrap();
+        assert_eq!((p.completed, p.failed), (1, 0), "duplicates never double-count");
+    }
+
+    #[test]
+    fn admission_evicts_finished_lru_and_refuses_past_unfinished() {
+        let t0 = Instant::now();
+        let mut s = store(4, 600);
+        s.admit("old", 2, t0).unwrap();
+        s.put("old", 0, row(0), true, t0);
+        s.put("old", 1, row(1), true, t0); // finished
+        s.admit("live", 2, t0 + Duration::from_secs(1)).unwrap();
+        assert_eq!(s.rows_used(), 4);
+        // Needs 2, store full: evicts the finished "old", keeps "live".
+        let evicted = s.admit("new", 2, t0 + Duration::from_secs(2)).unwrap();
+        assert_eq!(evicted, 1);
+        assert!(!s.contains("old"));
+        assert!(s.contains("live"));
+        assert_eq!(s.rows_used(), 4);
+        // Only unfinished entries remain — typed refusal, no state change.
+        let err = s.admit("more", 1, t0 + Duration::from_secs(3)).unwrap_err();
+        assert_eq!(
+            err,
+            StoreError::Full {
+                need: 1,
+                cap: 4,
+                used: 4
+            }
+        );
+        assert!(err.to_string().contains("SIMPLEXMAP_STORE_CAP"));
+        assert_eq!(s.sweeps(), 2);
+    }
+
+    #[test]
+    fn oversized_sweep_is_refused_outright() {
+        let now = Instant::now();
+        let mut s = store(4, 600);
+        assert!(matches!(
+            s.admit("big", 5, now),
+            Err(StoreError::Full { need: 5, cap: 4, used: 0 })
+        ));
+        assert_eq!(s.rows_used(), 0);
+    }
+
+    #[test]
+    fn ttl_evicts_only_finished_entries_and_access_refreshes() {
+        let t0 = Instant::now();
+        let mut s = store(16, 10);
+        s.admit("done", 1, t0).unwrap();
+        s.put("done", 0, row(0), true, t0);
+        s.admit("touched", 1, t0).unwrap();
+        s.put("touched", 0, row(0), true, t0);
+        s.admit("pending", 1, t0).unwrap();
+        // Page refreshes last_access on "touched" just before the sweep.
+        s.page("touched", 0, 1, t0 + Duration::from_secs(9)).unwrap();
+        let evicted = s.evict_expired(t0 + Duration::from_secs(12));
+        assert_eq!(evicted, 1, "only the stale finished entry ages out");
+        assert!(!s.contains("done"));
+        assert!(s.contains("touched"));
+        assert!(s.contains("pending"), "unfinished entries never TTL out");
+        assert_eq!(s.rows_used(), 2);
+    }
+
+    #[test]
+    fn stash_is_a_one_shot_finished_entry() {
+        let now = Instant::now();
+        let mut s = store(4, 600);
+        s.stash("run-7", row(0), true, now).unwrap();
+        let p = s.page("run-7", 0, 10, now).unwrap();
+        assert!(p.done);
+        assert_eq!((p.jobs, p.completed, p.failed), (1, 1, 0));
+        s.stash("run-8", row(1), false, now).unwrap();
+        let p8 = s.page("run-8", 0, 10, now).unwrap();
+        assert_eq!((p8.completed, p8.failed), (0, 1));
+        // Stashes are finished, so they are evictable for new admissions.
+        let evicted = s.admit("swp", 4, now).unwrap();
+        assert_eq!(evicted, 2);
+        assert_eq!(s.rows_used(), 4);
+    }
+
+    #[test]
+    fn readmitting_a_token_replaces_without_leaking_occupancy() {
+        let now = Instant::now();
+        let mut s = store(8, 600);
+        s.admit("t", 3, now).unwrap();
+        s.put("t", 0, row(0), true, now);
+        s.admit("t", 2, now).unwrap();
+        assert_eq!(s.rows_used(), 2);
+        let p = s.page("t", 0, 10, now).unwrap();
+        assert_eq!(p.jobs, 2);
+        assert!(matches!(p.results[0], Json::Null), "fresh reservation");
+    }
+}

@@ -51,6 +51,11 @@ pub enum ScheduleError {
     GasketGeometry(u64, u32),
     /// The bounded job queue refused the job (backpressure).
     QueueFull(usize),
+    /// The job outlived its deadline while waiting in the queue; the
+    /// payload is how long it waited, in milliseconds. (A job already
+    /// running cannot be cancelled — expiry is an admission-to-start
+    /// bound, not a wall-clock abort.)
+    Expired(u64),
     /// The coordinator is shutting down; the job was not run.
     Shutdown,
 }
@@ -87,6 +92,9 @@ impl std::fmt::Display for ScheduleError {
             }
             ScheduleError::QueueFull(cap) => {
                 write!(f, "job queue full (capacity {cap}); retry later")
+            }
+            ScheduleError::Expired(waited_ms) => {
+                write!(f, "job expired in queue after {waited_ms} ms (deadline exceeded)")
             }
             ScheduleError::Shutdown => write!(f, "coordinator shutting down"),
         }

@@ -264,10 +264,19 @@ pub fn dispatch(line: &str, ctx: &ServerCtx) -> Json {
                     let outcome = ctx.queue.run(job);
                     recorder.finish_with(accept, attrs);
                     match outcome {
-                        Ok(result) => Json::obj(vec![
-                            ("ok", true.into()),
-                            ("result", result.to_json()),
-                        ]),
+                        Ok(result) => {
+                            // A threaded-mode reply goes straight down the
+                            // connection — the delivered leg of the
+                            // completed-job accounting identity.
+                            ctx.scheduler
+                                .metrics
+                                .results_delivered
+                                .fetch_add(1, Ordering::Relaxed);
+                            Json::obj(vec![
+                                ("ok", true.into()),
+                                ("result", result.to_json()),
+                            ])
+                        }
                         Err(e) => {
                             ctx.scheduler
                                 .metrics

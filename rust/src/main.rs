@@ -16,7 +16,8 @@
 //!            job or a sweep fan-out (--workload a,b --nbs 8,16
 //!            --maps lambda2,bb --priority high --window 16) and
 //!            stream the per-job frames; --no-stream polls paginated
-//!            `results` pages instead
+//!            `results` pages instead; --resume <token> reattaches to
+//!            a sweep from any connection (the ack prints the token)
 //!   obs      snapshot|watch|bench-trajectory  observability client:
 //!            snapshot/watch pull `{"cmd":"metrics"}` from a running
 //!            server (--format prometheus for text exposition);
@@ -62,6 +63,11 @@ fn main() {
         opt("priority", "job priority: high|normal|low", Some("normal")),
         opt("window", "client sweep in-flight window", Some("16")),
         opt("limit", "client results page size", Some("64")),
+        opt(
+            "resume",
+            "client: page an existing sweep by durable token (submits nothing)",
+            None,
+        ),
         flag("no-stream", "client sweep: poll paginated results instead of streaming"),
         opt("dir", "directory scanned for BENCH_*.json (obs)", Some(".")),
         opt("interval", "seconds between obs watch samples", Some("2")),
@@ -570,6 +576,43 @@ fn client(args: &Args) -> Result<(), String> {
         }
         simplexmap::util::json::parse(line.trim()).map_err(|e| format!("bad {what}: {e}"))
     };
+
+    // --resume <token>: reattach to a sweep started on a previous
+    // (possibly dead) connection and page its stored rows by the
+    // durable token. Submits nothing; works from any connection.
+    if let Some(token) = args.get("resume") {
+        let token = token.to_string();
+        let limit = args.get_u64("limit").map_err(|e| e.to_string())?.unwrap();
+        let mut cursor = 0u64;
+        loop {
+            let req = Json::obj(vec![
+                ("cmd", "results".into()),
+                ("token", token.clone().into()),
+                ("cursor", cursor.into()),
+                ("limit", limit.into()),
+            ]);
+            send_line(&mut writer, &req)?;
+            let page = read_frame("results page")?;
+            ok_or_err(&page)?;
+            let jobs = page.get("jobs").and_then(Json::as_u64).unwrap_or(0);
+            let rows = page.get("results").and_then(Json::as_arr).unwrap_or(&[]);
+            let mut advanced = false;
+            for row in rows {
+                if matches!(row, Json::Null) {
+                    break;
+                }
+                println!("{}", row.to_string_compact());
+                cursor += 1;
+                advanced = true;
+            }
+            if cursor >= jobs {
+                return Ok(());
+            }
+            if !advanced {
+                std::thread::sleep(std::time::Duration::from_millis(25));
+            }
+        }
+    }
 
     let nb = args.get_u64("nb").map_err(|e| e.to_string())?.unwrap();
     let seed = args.get_u64("seed").map_err(|e| e.to_string())?.unwrap();

@@ -129,16 +129,57 @@ const SEARCH_RHO: u64 = 8;
 /// scan is ~17 integer divisions, but `map_block` asks for the width
 /// on every block.
 pub fn searched_width(nb: u64) -> u64 {
-    use std::collections::HashMap;
-    use std::sync::{OnceLock, RwLock};
-    static CACHE: OnceLock<RwLock<HashMap<u64, u64>>> = OnceLock::new();
-    let cache = CACHE.get_or_init(|| RwLock::new(HashMap::new()));
-    if let Some(&w) = cache.read().unwrap().get(&nb) {
-        return w;
+    use std::sync::{Mutex, OnceLock};
+    static CACHE: OnceLock<Mutex<WidthMemo>> = OnceLock::new();
+    CACHE
+        .get_or_init(|| Mutex::new(WidthMemo::new(WIDTH_MEMO_CAP)))
+        .lock()
+        .unwrap()
+        .get(nb)
+}
+
+/// Entry bound for the [`searched_width`] memo. A long-lived server
+/// sweeping adversarial (or merely varied) nb values must not grow an
+/// unbounded process-global map; ~1k entries of 16 bytes is plenty for
+/// every realistic working set and recomputing a miss is ~17 integer
+/// divisions.
+const WIDTH_MEMO_CAP: usize = 1024;
+
+/// Bounded FIFO memo for the container search: at capacity the oldest
+/// insertion is evicted. The value is a pure function of the key, so
+/// eviction can never change an answer — only cost a recompute.
+struct WidthMemo {
+    cap: usize,
+    map: std::collections::HashMap<u64, u64>,
+    order: std::collections::VecDeque<u64>,
+}
+
+impl WidthMemo {
+    fn new(cap: usize) -> WidthMemo {
+        WidthMemo {
+            cap: cap.max(1),
+            map: std::collections::HashMap::new(),
+            order: std::collections::VecDeque::new(),
+        }
     }
-    let w = search_width(nb);
-    cache.write().unwrap().insert(nb, w);
-    w
+
+    fn get(&mut self, nb: u64) -> u64 {
+        if let Some(&w) = self.map.get(&nb) {
+            return w;
+        }
+        let w = search_width(nb);
+        while self.map.len() >= self.cap {
+            match self.order.pop_front() {
+                Some(old) => {
+                    self.map.remove(&old);
+                }
+                None => break,
+            }
+        }
+        self.map.insert(nb, w);
+        self.order.push_back(nb);
+        w
+    }
 }
 
 fn search_width(nb: u64) -> u64 {
@@ -472,6 +513,27 @@ mod tests {
             }
             assert_eq!(seen.len() as u128, domain_volume(nb, 3), "nb={nb}");
             assert_eq!(filler, map.parallel_volume(nb) - domain_volume(nb, 3), "nb={nb}");
+        }
+    }
+
+    #[test]
+    fn width_memo_holds_its_cap_and_never_changes_answers() {
+        let mut memo = WidthMemo::new(64);
+        // Overfill by 4×: the map must stay at the cap throughout …
+        for nb in 1..=256u64 {
+            assert_eq!(memo.get(nb), search_width(nb), "nb={nb}");
+            assert!(memo.map.len() <= 64, "nb={nb}: {} entries", memo.map.len());
+            assert_eq!(memo.map.len(), memo.order.len(), "nb={nb}");
+        }
+        assert_eq!(memo.map.len(), 64);
+        // … and evicted keys recompute to the identical width (the
+        // memo is transparent: same function, just cached).
+        for nb in 1..=256u64 {
+            assert_eq!(memo.get(nb), search_width(nb), "nb={nb} after eviction");
+        }
+        // The process-global path answers the same as a direct search.
+        for nb in [4u64, 8, 16, 32, 64, 100, 4096] {
+            assert_eq!(searched_width(nb), search_width(nb), "nb={nb}");
         }
     }
 

@@ -257,6 +257,209 @@ fn oversized_frames_reject_cleanly_and_split_writes_reassemble() {
     shutdown(addr, handle);
 }
 
+/// Poll `{"cmd":"metrics"}` on `conn` until `pred` holds or the
+/// deadline passes; returns the last snapshot either way.
+fn await_metrics(
+    w: &mut TcpStream,
+    r: &mut BufReader<TcpStream>,
+    pred: impl Fn(&Json) -> bool,
+) -> Json {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        send(w, r#"{"cmd":"metrics"}"#);
+        let reply = recv(r);
+        let snap = reply.get("metrics").expect("metrics reply").clone();
+        if pred(&snap) || std::time::Instant::now() > deadline {
+            return snap;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+}
+
+fn counter(snap: &Json, name: &str) -> u64 {
+    snap.get(name)
+        .and_then(Json::as_u64)
+        .unwrap_or_else(|| panic!("metrics missing {name}"))
+}
+
+#[test]
+fn store_cap_refuses_admission_with_a_typed_error() {
+    // A 4-row store: a 5-row sweep must be refused up front — typed
+    // pushback at admission, never silent loss mid-sweep.
+    let cfg = ReactorConfig {
+        store_rows_cap: 4,
+        ..ReactorConfig::default()
+    };
+    let (sched, addr, handle) = start(cfg);
+    let (mut w, mut r) = connect(addr);
+
+    let mut req = String::from(r#"{"cmd":"sweep","workloads":["edm"],"maps":["bb"],"#);
+    req.push_str(r#""nbs":[4,5,6,7,8],"stream":false}"#);
+    send(&mut w, &req);
+    let refused = recv(&mut r);
+    assert!(!is_ok(&refused), "{refused:?}");
+    let msg = refused.get("error").and_then(Json::as_str).unwrap();
+    assert!(msg.contains("results store full"), "{refused:?}");
+    assert!(msg.contains("SIMPLEXMAP_STORE_CAP"), "{refused:?}");
+    // A refused sweep starts nothing and accepts nothing.
+    let snap = sched.metrics.snapshot();
+    assert_eq!(snap.get("sweeps_started").unwrap().as_u64(), Some(0));
+    assert_eq!(snap.get("jobs_accepted").unwrap().as_u64(), Some(0));
+
+    // A fitting sweep works; once finished, its entry is LRU ground
+    // that a later admission may reclaim (counted in store_evictions).
+    let mut req = String::from(r#"{"cmd":"sweep","workloads":["edm"],"maps":["bb"],"#);
+    req.push_str(r#""nbs":[4,5,6,7],"stream":false}"#);
+    send(&mut w, &req);
+    let ack = recv(&mut r);
+    assert!(is_ok(&ack), "{ack:?}");
+    let sid = ack.get("sweep").and_then(Json::as_u64).unwrap();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        assert!(std::time::Instant::now() < deadline, "sweep never completed");
+        send(&mut w, &format!(r#"{{"cmd":"results","sweep":{sid},"limit":4}}"#));
+        let page = recv(&mut r);
+        assert!(is_ok(&page), "{page:?}");
+        if page.get("done").and_then(Json::as_bool) == Some(true) {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let mut req = String::from(r#"{"cmd":"sweep","workloads":["edm"],"maps":["bb"],"#);
+    req.push_str(r#""nbs":[9,10],"stream":false}"#);
+    send(&mut w, &req);
+    let ack2 = recv(&mut r);
+    assert!(is_ok(&ack2), "finished entries must be evictable: {ack2:?}");
+    let snap = await_metrics(&mut w, &mut r, |s| counter(s, "store_evictions") >= 1);
+    assert!(counter(&snap, "store_evictions") >= 1, "{snap}");
+
+    // And a results request naming nothing is an error, not a hang.
+    send(&mut w, r#"{"cmd":"results"}"#);
+    let bad = recv(&mut r);
+    assert!(!is_ok(&bad));
+    assert!(
+        bad.get("error").and_then(Json::as_str).unwrap().contains("sweep id or token"),
+        "{bad:?}"
+    );
+
+    drop((w, r));
+    shutdown(addr, handle);
+}
+
+#[test]
+fn expired_rows_retry_once_then_fail_and_are_counted() {
+    // job_timeout_ms = 0: every row's start deadline is already past
+    // when a worker pops it, so each row expires, retries exactly
+    // job_retry_max times through the queue, then fails for real —
+    // fully deterministic retry accounting.
+    let cfg = ReactorConfig {
+        job_timeout_ms: 0,
+        job_retry_max: 1,
+        ..ReactorConfig::default()
+    };
+    let (sched, addr, handle) = start(cfg);
+    let (mut w, mut r) = connect(addr);
+    send(
+        &mut w,
+        r#"{"cmd":"sweep","workloads":["edm"],"maps":["bb"],"nbs":[4,5,6]}"#,
+    );
+    let ack = recv(&mut r);
+    assert!(is_ok(&ack), "{ack:?}");
+    let mut failed_rows = 0u64;
+    loop {
+        let frame = recv(&mut r);
+        if frame.get("done").and_then(Json::as_bool) == Some(true) {
+            assert_eq!(frame.get("completed").and_then(Json::as_u64), Some(0));
+            assert_eq!(frame.get("failed").and_then(Json::as_u64), Some(3));
+            break;
+        }
+        assert!(!is_ok(&frame), "a 0ms deadline must expire every row: {frame:?}");
+        let msg = frame.get("error").and_then(Json::as_str).unwrap();
+        assert!(msg.contains("expired"), "{frame:?}");
+        failed_rows += 1;
+    }
+    assert_eq!(failed_rows, 3);
+
+    let snap = sched.metrics.snapshot();
+    // 3 rows × (1 first attempt + 1 retry) = 6 expiries, 3 retries.
+    assert_eq!(snap.get("jobs_retried").unwrap().as_u64(), Some(3), "{snap}");
+    assert_eq!(snap.get("jobs_expired").unwrap().as_u64(), Some(6), "{snap}");
+    assert_eq!(snap.get("jobs_failed").unwrap().as_u64(), Some(3), "{snap}");
+    // No job ever ran, so the completed-job identity is 0 = 0 + 0 + 0.
+    assert_eq!(snap.get("jobs_completed").unwrap().as_u64(), Some(0));
+    assert_eq!(snap.get("results_delivered").unwrap().as_u64(), Some(0));
+    assert_eq!(snap.get("results_stored").unwrap().as_u64(), Some(0));
+    assert_eq!(snap.get("orphaned_results").unwrap().as_u64(), Some(0));
+
+    drop((w, r));
+    shutdown(addr, handle);
+}
+
+#[test]
+fn completed_jobs_are_all_delivered_stored_or_orphaned() {
+    let (_sched, addr, handle) = start(ReactorConfig::default());
+    let (mut w, mut r) = connect(addr);
+
+    // Two plain runs answered on a live connection → delivered.
+    send(&mut w, r#"{"cmd":"run","workload":"edm","nb":8,"map":"lambda2"}"#);
+    send(&mut w, r#"{"cmd":"run","workload":"edm","nb":4,"map":"bb"}"#);
+    assert!(is_ok(&recv(&mut r)));
+    assert!(is_ok(&recv(&mut r)));
+
+    // A non-streaming sweep paged to completion → stored.
+    send(
+        &mut w,
+        r#"{"cmd":"sweep","workloads":["edm"],"maps":["bb"],"nbs":[4,5,6],"stream":false}"#,
+    );
+    let ack = recv(&mut r);
+    assert!(is_ok(&ack), "{ack:?}");
+    let token = ack.get("token").and_then(Json::as_str).unwrap().to_string();
+
+    // A run whose connection dies mid-job: the result must still be
+    // accounted — delivered (conn object outlived the client), stored
+    // (stashed under a run token), or, only if the store refused it,
+    // orphaned. Never silently dropped.
+    {
+        let (mut w2, _r2) = connect(addr);
+        send(&mut w2, r#"{"cmd":"run","workload":"edm","nb":16,"map":"bb"}"#);
+        // w2/_r2 drop here: the client vanishes with the job in flight.
+    }
+
+    // All 6 jobs execute regardless; the identity must close exactly.
+    let snap = await_metrics(&mut w, &mut r, |s| counter(s, "jobs_completed") >= 6);
+    let completed = counter(&snap, "jobs_completed");
+    assert_eq!(completed, 6, "{snap}");
+    assert_eq!(
+        completed,
+        counter(&snap, "results_delivered")
+            + counter(&snap, "results_stored")
+            + counter(&snap, "orphaned_results"),
+        "completed-job accounting identity: {snap}"
+    );
+    assert!(counter(&snap, "results_delivered") >= 2, "{snap}");
+    assert!(counter(&snap, "results_stored") >= 3, "{snap}");
+
+    // The sweep's rows page back by token, and the occupancy gauges
+    // see the store (3 sweep rows; the stash, if any, adds to them).
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        assert!(std::time::Instant::now() < deadline, "sweep never completed");
+        send(&mut w, &format!(r#"{{"cmd":"results","token":"{token}","limit":3}}"#));
+        let page = recv(&mut r);
+        assert!(is_ok(&page), "{page:?}");
+        if page.get("done").and_then(Json::as_bool) == Some(true) {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let snap = await_metrics(&mut w, &mut r, |s| counter(s, "store_rows") >= 3);
+    assert!(counter(&snap, "store_rows") >= 3, "{snap}");
+    assert!(counter(&snap, "store_sweeps") >= 1, "{snap}");
+
+    drop((w, r));
+    shutdown(addr, handle);
+}
+
 #[test]
 fn concurrent_sweep_clients_lose_nothing() {
     let (sched, addr, handle) = start(ReactorConfig::default());

@@ -160,6 +160,88 @@ fn wire_sweep_results_match_local_runs_byte_for_byte() {
 }
 
 #[test]
+fn reconnecting_client_recovers_identical_results_by_token() {
+    let (addr, handle) = start();
+    let local_sched = Scheduler::new(2, None);
+
+    // Start a non-streaming sweep and hard-drop the connection right
+    // after the ack — mid-flight for the fan-out, which must detach
+    // and keep landing rows in the durable store.
+    let nbs: [u64; 8] = [11, 4, 9, 5, 10, 6, 8, 7];
+    let (sid, token) = {
+        let (mut w, mut r) = connect(addr);
+        let mut req = String::from(r#"{"cmd":"sweep","workloads":["edm"],"maps":["bb"],"#);
+        req.push_str(&format!(
+            r#""nbs":[11,4,9,5,10,6,8,7],"backend":"serial","seed":{SEED},"#
+        ));
+        req.push_str(r#""stream":false,"window":2}"#);
+        send(&mut w, &req);
+        let ack = recv(&mut r);
+        assert_eq!(ack.get("ok").and_then(Json::as_bool), Some(true), "{ack:?}");
+        assert_eq!(ack.get("jobs").and_then(Json::as_u64), Some(8), "{ack:?}");
+        let sid = ack.get("sweep").and_then(Json::as_u64).unwrap();
+        let token = ack
+            .get("token")
+            .and_then(Json::as_str)
+            .expect("ack carries the durable token")
+            .to_string();
+        (sid, token)
+        // w/r drop here — the TCP connection dies with rows in flight.
+    };
+
+    // Reconnect. The bare sweep id is another connection's property and
+    // must be refused; the token is the cross-connection capability.
+    let (mut w, mut r) = connect(addr);
+    send(&mut w, &format!(r#"{{"cmd":"results","sweep":{sid},"cursor":0,"limit":3}}"#));
+    let refused = recv(&mut r);
+    assert_eq!(refused.get("ok").and_then(Json::as_bool), Some(false), "{refused:?}");
+    assert!(
+        refused.get("error").and_then(Json::as_str).unwrap().contains("unknown sweep"),
+        "{refused:?}"
+    );
+
+    // Resume pagination by token until every row has landed.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    let rows = loop {
+        assert!(std::time::Instant::now() < deadline, "detached sweep never completed");
+        let mut rows: Vec<Json> = Vec::new();
+        let mut cursor = 0u64;
+        let done = loop {
+            let get = format!(
+                r#"{{"cmd":"results","token":"{token}","cursor":{cursor},"limit":3}}"#
+            );
+            send(&mut w, &get);
+            let page = recv(&mut r);
+            assert_eq!(page.get("ok").and_then(Json::as_bool), Some(true), "{page:?}");
+            assert_eq!(page.get("token").and_then(Json::as_str), Some(token.as_str()));
+            let chunk = page.get("results").and_then(Json::as_arr).unwrap();
+            rows.extend(chunk.iter().cloned());
+            match page.get("next_cursor").and_then(Json::as_u64) {
+                Some(next) => cursor = next,
+                None => break page.get("done").and_then(Json::as_bool) == Some(true),
+            }
+        };
+        if done && rows.iter().all(|row| !matches!(row, Json::Null)) {
+            break rows;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    };
+
+    // Byte-identical to the same jobs run on a local scheduler — the
+    // disconnect must not change a single result byte.
+    assert_eq!(rows.len(), nbs.len());
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(row.get("job").and_then(Json::as_u64), Some(i as u64), "row order");
+        assert_eq!(row.get("ok").and_then(Json::as_bool), Some(true), "{row:?}");
+        let result = row.get("result").unwrap();
+        let want = local(&local_sched, "edm", nbs[i], "bb");
+        assert_eq!(canonical(result), want, "row {i}: reconnect changed the result");
+    }
+    drop((w, r));
+    shutdown(addr, handle);
+}
+
+#[test]
 fn paginated_results_reassemble_out_of_order_completions_row_major() {
     let (addr, handle) = start();
     let local_sched = Scheduler::new(2, None);
