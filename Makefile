@@ -16,6 +16,7 @@ test:
 
 lint:
 	cd rust && cargo clippy --all-targets -- -D warnings
+	cd rust && cargo run --release --bin simplexlint
 
 bench:
 	cd rust && cargo bench

@@ -28,6 +28,11 @@
 //! scale-phase sweep), `SIMPLEXMAP_LOAD_BASE_JOBS` (jobs per phase-1/2
 //! client), `SIMPLEXMAP_LOAD_WINDOW`, `SIMPLEXMAP_LOAD_MIN_RATIO`,
 //! `SIMPLEXMAP_LOAD_RECONNECT_CLIENTS`.
+//!
+//! Memory-ordering policy: the shared tallies are summed after every
+//! client thread is joined (the join is the synchronization edge), so
+//! the counters themselves are Relaxed.
+// lint: atomics(Relaxed)
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -69,6 +74,9 @@ fn raise_nofile() {
         fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
     }
     const RLIMIT_NOFILE: i32 = 7;
+    // SAFETY: `r` is a live, properly aligned `#[repr(C)]` mirror of
+    // the kernel's `struct rlimit`; getrlimit/setrlimit only read or
+    // write through the pointer for the duration of the call.
     unsafe {
         let mut r = RLimit { cur: 0, max: 0 };
         if getrlimit(RLIMIT_NOFILE, &mut r) == 0 && r.cur < r.max {

@@ -1,0 +1,40 @@
+//! `simplexlint` — run the in-tree static-analysis pass over the
+//! repository and exit non-zero on any unsuppressed finding.
+//!
+//! Usage: `cargo run --release --bin simplexlint [repo-root]`
+//! With no argument the repo root is found by walking up from the
+//! current directory (so it works from `rust/` and from the root).
+//! CI gates on this binary in the `lint` job; the rule set and the
+//! allow-annotation grammar are documented in DESIGN.md §Static
+//! Analysis.
+
+use simplexmap::lint;
+
+fn main() {
+    let root = match std::env::args().nth(1) {
+        Some(p) => std::path::PathBuf::from(p),
+        None => {
+            let cwd = std::env::current_dir().expect("current dir");
+            match lint::find_root(&cwd) {
+                Some(r) => r,
+                None => {
+                    eprintln!(
+                        "simplexlint: no repo root (rust/src + EXPERIMENTS.md) above {}",
+                        cwd.display()
+                    );
+                    std::process::exit(2);
+                }
+            }
+        }
+    };
+    match lint::run(&root) {
+        Ok(report) => {
+            print!("{}", report.render());
+            std::process::exit(if report.clean() { 0 } else { 1 });
+        }
+        Err(e) => {
+            eprintln!("simplexlint: IO error: {e}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -15,6 +15,11 @@
 //! p50/p90/p99/p99.9 (≤ 6.25% relative quantile error). Labeled
 //! series key job wall time by `(workload, map, backend)` so
 //! per-scenario latency stays queryable after the fact.
+//!
+//! Memory-ordering policy: every atomic is a monotonic counter or a
+//! last-write-wins gauge; readers only ever see a slightly stale
+//! snapshot, which is the contract of a metrics endpoint — Relaxed.
+// lint: atomics(Relaxed)
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};

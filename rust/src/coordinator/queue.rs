@@ -31,6 +31,12 @@
 //!
 //! Shutdown drains: workers finish every job already enqueued (their
 //! clients are still waiting on replies) before exiting.
+//!
+//! Memory-ordering policy: the only atomic is the `shutdown` flag, and
+//! every access (the two worker checks, the enqueue check, the store
+//! in [`JobQueue::shutdown`]) happens while holding the queue mutex —
+//! the mutex provides all the ordering, so the flag itself is Relaxed.
+// lint: atomics(Relaxed)
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -41,6 +47,7 @@ use std::time::Instant;
 use crate::coordinator::job::{Job, JobResult};
 use crate::coordinator::scheduler::{ScheduleError, Scheduler};
 use crate::coordinator::span::{self, ActiveSpan};
+use crate::util::sync::{lock_unpoisoned, wait_unpoisoned};
 
 /// Queue sizing knobs.
 #[derive(Clone, Copy, Debug)]
@@ -145,6 +152,7 @@ struct Lanes {
 
 impl Lanes {
     fn push(&mut self, priority: Priority, lane: u64, item: Queued) {
+        // lint: allow(panic, priority index is 0..=2 by construction over a 3-lane array)
         self.levels[priority.index()]
             .entry(lane)
             .or_default()
@@ -153,15 +161,14 @@ impl Lanes {
     }
 
     fn pop(&mut self) -> Option<Queued> {
-        for p in 0..3 {
-            let level = &mut self.levels[p];
+        for (level, cursor) in self.levels.iter_mut().zip(self.cursor.iter_mut()) {
             if level.is_empty() {
                 continue;
             }
             // First lane strictly after the cursor, wrapping to the
             // smallest lane id.
             let lane = level
-                .range(self.cursor[p].wrapping_add(1)..)
+                .range(cursor.wrapping_add(1)..)
                 .next()
                 .map(|(k, _)| *k)
                 .or_else(|| level.keys().next().copied())?;
@@ -170,7 +177,7 @@ impl Lanes {
             if fifo.is_empty() {
                 level.remove(&lane);
             }
-            self.cursor[p] = lane;
+            *cursor = lane;
             self.len -= 1;
             return Some(item);
         }
@@ -211,6 +218,7 @@ impl JobQueue {
                 std::thread::Builder::new()
                     .name(format!("smx-jobq-{i}"))
                     .spawn(move || worker_loop(&inner))
+                    // lint: allow(panic, startup precedes serving; no threads means no server)
                     .expect("spawn queue worker")
             })
             .collect();
@@ -229,12 +237,12 @@ impl JobQueue {
     ) -> Result<(), ScheduleError> {
         let metrics = &self.inner.scheduler.metrics;
         {
-            let mut q = self.inner.queue.lock().unwrap();
+            let mut q = lock_unpoisoned(&self.inner.queue);
             // Shutdown must be re-checked under the queue lock: workers
             // take the same lock before their final empty+shutdown
             // check, so a job enqueued here is guaranteed to be seen
             // by the drain (no stranded replies).
-            if self.inner.shutdown.load(Ordering::SeqCst) {
+            if self.inner.shutdown.load(Ordering::Relaxed) {
                 return Err(ScheduleError::Shutdown);
             }
             if q.len() >= self.inner.capacity {
@@ -336,7 +344,18 @@ impl JobQueue {
 
     /// Stop accepting new jobs; workers drain what is already queued.
     pub fn shutdown(&self) {
-        self.inner.shutdown.store(true, Ordering::SeqCst);
+        // The store must happen under the queue lock. A worker checks
+        // the flag *between* its empty-check and its condvar wait,
+        // holding this same lock; a bare store-then-notify could land
+        // exactly in that window — the notify would precede the wait
+        // and the worker would sleep forever on an empty queue (lost
+        // wakeup; `Drop` would then hang on `join`). Storing *inside*
+        // the critical section serializes against the check-then-wait
+        // sequence and the mutex release publishes the flag to every
+        // later lock holder, which is why Relaxed suffices.
+        let q = lock_unpoisoned(&self.inner.queue);
+        self.inner.shutdown.store(true, Ordering::Relaxed);
+        drop(q);
         self.inner.available.notify_all();
     }
 }
@@ -353,7 +372,7 @@ impl Drop for JobQueue {
 fn worker_loop(inner: &Inner) {
     loop {
         let item = {
-            let mut q = inner.queue.lock().unwrap();
+            let mut q = lock_unpoisoned(&inner.queue);
             loop {
                 if let Some(item) = q.pop() {
                     // Decrement under the same lock as the pop so the
@@ -368,10 +387,10 @@ fn worker_loop(inner: &Inner) {
                         .fetch_sub(1, Ordering::Relaxed);
                     break Some(item);
                 }
-                if inner.shutdown.load(Ordering::SeqCst) {
+                if inner.shutdown.load(Ordering::Relaxed) {
                     break None;
                 }
-                q = inner.available.wait(q).unwrap();
+                q = wait_unpoisoned(&inner.available, q);
             }
         };
         let Some(item) = item else { return };

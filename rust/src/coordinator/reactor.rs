@@ -61,6 +61,12 @@
 //! orphaned_results` — a finished job is delivered to a live
 //! connection, stored under a token, or (only if the store refuses an
 //! orphan) counted, never silently dropped.
+//!
+//! Memory-ordering policy: every atomic the reactor touches is either
+//! a monotonic metrics counter/gauge or the polled `shutdown` flag.
+//! Nothing synchronizes *through* them — the 100 ms poll tick is the
+//! only freshness bound the flag needs — so all accesses are Relaxed.
+// lint: atomics(Relaxed)
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
@@ -77,6 +83,7 @@ use crate::coordinator::server::{dispatch_control, err_reply, ServerCtx};
 use crate::coordinator::span::{self, ActiveSpan};
 use crate::util::json::{self, Frame, FrameBuffer, Json, DEFAULT_MAX_FRAME};
 use crate::util::prng::SplitMix64;
+use crate::util::sync::lock_unpoisoned;
 use crate::{log_info, log_warn};
 
 /// Hand-rolled `poll(2)` binding — the only system call the reactor
@@ -111,6 +118,9 @@ mod sys {
     /// `poll` with EINTR retry. Returns the number of ready entries.
     pub fn poll_wait(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
         loop {
+            // SAFETY: `fds` is a live exclusively-borrowed slice; the
+            // pointer/length pair describes exactly its allocation and
+            // the kernel writes only the `revents` fields within it.
             let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
             if rc >= 0 {
                 return Ok(rc as usize);
@@ -454,7 +464,7 @@ struct Mailbox {
 
 impl Mailbox {
     fn push(&self, d: Done) {
-        self.done.lock().unwrap().push(d);
+        lock_unpoisoned(&self.done).push(d);
         // A full socket buffer means wake datagrams are already
         // pending, which is all a wake needs to guarantee.
         let _ = self.wake.send(&[1]);
@@ -642,6 +652,7 @@ impl Conn {
                     self.read_closed = true;
                     break;
                 }
+                // lint: allow(panic, the Read contract guarantees n is at most the buffer length)
                 Ok(n) => self.frames.push(&buf[..n]),
                 Err(e) if e.kind() == ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == ErrorKind::Interrupted => continue,
@@ -738,7 +749,7 @@ impl Reactor {
         let mut grace_rounds_left: Option<u32> = None;
 
         loop {
-            let shutting_down = ctx.shutdown.load(Ordering::SeqCst);
+            let shutting_down = ctx.shutdown.load(Ordering::Relaxed);
             if shutting_down && grace_rounds_left.is_none() {
                 grace_rounds_left = Some(50); // ≈5 s at the 100 ms tick
             }
@@ -779,14 +790,16 @@ impl Reactor {
                 let revents = {
                     let mut interests: Vec<(i16, probe::Probe<'_>)> =
                         Vec::with_capacity(fds.len());
-                    interests.push((fds[0].events, probe::Probe::Assume));
-                    interests.push((fds[1].events, probe::Probe::Udp(&wake_rx)));
-                    for (i, tok) in order.iter().enumerate() {
-                        let p = match conns.get(tok) {
-                            Some(c) => probe::Probe::Tcp(&c.stream),
-                            None => probe::Probe::Assume,
+                    for (i, f) in fds.iter().enumerate() {
+                        let p = match i {
+                            0 => probe::Probe::Assume,
+                            1 => probe::Probe::Udp(&wake_rx),
+                            _ => match order.get(i - 2).and_then(|tok| conns.get(tok)) {
+                                Some(c) => probe::Probe::Tcp(&c.stream),
+                                None => probe::Probe::Assume,
+                            },
                         };
-                        interests.push((fds[i + 2].events, p));
+                        interests.push((f.events, p));
                     }
                     probe::poll_probed(&interests, 100)
                 };
@@ -799,13 +812,13 @@ impl Reactor {
 
             // Drain wake datagrams (their only content is "look at the
             // mailbox").
-            if fds[1].revents & (sys::POLLIN | sys::POLLERR) != 0 {
+            if fds.get(1).is_some_and(|f| f.revents & (sys::POLLIN | sys::POLLERR) != 0) {
                 let mut sink = [0u8; 64];
                 while wake_rx.recv(&mut sink).is_ok() {}
             }
 
             // Completions from the queue workers.
-            let batch = std::mem::take(&mut *mailbox.done.lock().unwrap());
+            let batch = std::mem::take(&mut *lock_unpoisoned(&mailbox.done));
             for d in batch {
                 match d.sweep {
                     Some((sid, idx)) => {
@@ -891,7 +904,7 @@ impl Reactor {
             }
 
             // New connections.
-            if accepting && fds[0].revents & sys::POLLIN != 0 {
+            if accepting && fds.first().is_some_and(|f| f.revents & sys::POLLIN != 0) {
                 loop {
                     match listener.accept() {
                         Ok((stream, peer)) => {
@@ -921,7 +934,9 @@ impl Reactor {
 
             // Socket readiness per connection.
             for (i, tok) in order.iter().enumerate() {
-                let revents = fds[i + 2].revents;
+                let Some(revents) = fds.get(i + 2).map(|f| f.revents) else {
+                    continue;
+                };
                 let Some(c) = conns.get_mut(tok) else { continue };
                 if revents & sys::POLLERR != 0 {
                     c.dead = true;
@@ -1228,7 +1243,9 @@ fn handle_sweep(
     // Bounded id→token alias table; dropping an old alias never loses
     // results — the token itself keeps paging.
     while c.sweep_tokens.len() >= cfg.max_sweeps_per_conn * 2 {
-        let oldest = *c.sweep_tokens.keys().next().unwrap();
+        let Some(oldest) = c.sweep_tokens.keys().next().copied() else {
+            break;
+        };
         c.sweep_tokens.remove(&oldest);
     }
     c.sweep_tokens.insert(sid, token.clone());
@@ -1361,7 +1378,16 @@ fn pump_sweeps(
                 None if run.next_submit < run.jobs.len() => run.next_submit,
                 None => break,
             };
-            let job = run.jobs[idx].clone();
+            let Some(job) = run.jobs.get(idx).cloned() else {
+                // An out-of-range index can only be a bookkeeping bug;
+                // discard the slot rather than wedge the pump.
+                if from_retry {
+                    run.retry.pop_front();
+                } else {
+                    run.next_submit += 1;
+                }
+                continue;
+            };
             let mb = Arc::clone(mailbox);
             let deadline = Some(Instant::now() + Duration::from_millis(cfg.job_timeout_ms));
             let outcome = ctx.queue.submit_async_with_deadline(
@@ -1424,8 +1450,14 @@ fn apply_sweep_result(
     if from_queue {
         run.in_flight = run.in_flight.saturating_sub(1);
         if let Err(e) = &result {
-            if retryable(e) && u32::from(run.retries_used[idx]) < cfg.job_retry_max {
-                run.retries_used[idx] = run.retries_used[idx].saturating_add(1);
+            // An out-of-range idx (impossible by construction) reads
+            // as retries-exhausted, so the row fails instead of
+            // panicking the loop.
+            let used = run.retries_used.get(idx).copied().unwrap_or(u8::MAX);
+            if retryable(e) && u32::from(used) < cfg.job_retry_max {
+                if let Some(u) = run.retries_used.get_mut(idx) {
+                    *u = u.saturating_add(1);
+                }
                 metrics.jobs_retried.fetch_add(1, Ordering::Relaxed);
                 run.retry.push_back(idx);
                 return;

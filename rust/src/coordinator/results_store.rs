@@ -149,9 +149,10 @@ impl ResultsStore {
                 .map(|(t, _)| t.clone());
             match oldest {
                 Some(t) => {
-                    let e = self.entries.remove(&t).expect("picked from entries");
-                    self.rows_used -= e.rows.len();
-                    evicted += 1;
+                    if let Some(e) = self.entries.remove(&t) {
+                        self.rows_used -= e.rows.len();
+                        evicted += 1;
+                    }
                 }
                 None => {
                     return Err(StoreError::Full {
@@ -189,10 +190,13 @@ impl ResultsStore {
             return PutOutcome::Unknown;
         };
         e.last_access = now;
-        if idx >= e.rows.len() || e.rows[idx].is_some() {
+        let Some(cell) = e.rows.get_mut(idx) else {
+            return PutOutcome::Duplicate;
+        };
+        if cell.is_some() {
             return PutOutcome::Duplicate;
         }
-        e.rows[idx] = Some(row);
+        *cell = Some(row);
         if ok {
             e.completed += 1;
         } else {
@@ -229,8 +233,11 @@ impl ResultsStore {
         let total = e.rows.len();
         let start = cursor.min(total);
         let end = cursor.saturating_add(limit).min(total);
-        let results: Vec<Json> = e.rows[start..end]
+        let results: Vec<Json> = e
+            .rows
             .iter()
+            .skip(start)
+            .take(end - start)
             .map(|r| r.clone().unwrap_or(Json::Null))
             .collect();
         Some(Page {
@@ -255,8 +262,9 @@ impl ResultsStore {
             .map(|(t, _)| t.clone())
             .collect();
         for t in &expired {
-            let e = self.entries.remove(t).expect("picked from entries");
-            self.rows_used -= e.rows.len();
+            if let Some(e) = self.entries.remove(t) {
+                self.rows_used -= e.rows.len();
+            }
         }
         expired.len()
     }

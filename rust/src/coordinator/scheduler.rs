@@ -20,6 +20,10 @@
 //! The PJRT backend necessarily collects (the tile batcher packs
 //! fixed-size batches), and dispatches through
 //! [`Workload::run_pjrt`] — no per-workload code lives here anymore.
+//!
+//! Memory-ordering policy: the scheduler only touches the metrics
+//! counters/gauges (statistical, tolerate staleness) — Relaxed.
+// lint: atomics(Relaxed)
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -39,6 +39,12 @@
 //! in [`crate::coordinator::reactor`] serves the same protocol plus
 //! the streaming `sweep`/`results` commands on a single thread; both
 //! share [`ServerCtx`] and [`dispatch_control`].
+//!
+//! Memory-ordering policy: the atomics here are monotonic metrics
+//! counters and the `shutdown` flag. The flag is polled by the accept
+//! loop (bounded by the accept timeout) and checked per request — no
+//! data is published through it — so every access is Relaxed.
+// lint: atomics(Relaxed)
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -98,7 +104,7 @@ impl Server {
         log_info!("server", "listening on {local}");
         on_bound(local);
         let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
-        while !self.ctx.shutdown.load(Ordering::SeqCst) {
+        while !self.ctx.shutdown.load(Ordering::Relaxed) {
             match listener.accept() {
                 Ok((stream, peer)) => {
                     log_info!("server", "connection from {peer}");
@@ -149,7 +155,7 @@ fn handle_conn(stream: TcpStream, ctx: &ServerCtx) -> std::io::Result<()> {
         writer.write_all(response.to_string_compact().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
-        if ctx.shutdown.load(Ordering::SeqCst) {
+        if ctx.shutdown.load(Ordering::Relaxed) {
             break;
         }
     }
@@ -226,7 +232,7 @@ pub fn dispatch_control(req: &Json, ctx: &ServerCtx) -> Option<Json> {
             ]))
         }
         Some("shutdown") => {
-            ctx.shutdown.store(true, Ordering::SeqCst);
+            ctx.shutdown.store(true, Ordering::Relaxed);
             Some(Json::obj(vec![("ok", true.into())]))
         }
         _ => None,

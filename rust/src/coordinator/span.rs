@@ -24,6 +24,13 @@
 //! attributes under `args`. All strings pass through the
 //! [`crate::util::json`] writer, so attribute values containing `"`
 //! or `\` stay parseable.
+//!
+//! Memory-ordering policy: the recording toggle and span-id counter
+//! are independent cells — the id only needs uniqueness (`fetch_add`
+//! is atomic at any ordering) and the toggle tolerates a stale read
+//! by design (spans started just before a toggle flip may record) —
+//! so all accesses are Relaxed.
+// lint: atomics(Relaxed)
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};

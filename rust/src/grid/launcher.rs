@@ -48,6 +48,12 @@
 //! wall-clock sleep is opt-in via [`LaunchConfig::simulate_latency`] —
 //! and a `max_concurrent_launches` cap models the ≤32-kernel limit
 //! §III.B invokes against the arity-3 recursive map.
+//!
+//! Memory-ordering policy: the work-stealing chunk cursor only needs
+//! each worker to claim a distinct chunk — `fetch_add` is atomic at
+//! any ordering and the pool joins before results are read (the join
+//! provides the happens-before edge) — so all accesses are Relaxed.
+// lint: atomics(Relaxed)
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};

@@ -30,6 +30,7 @@ pub mod analysis;
 pub mod coordinator;
 pub mod gensearch;
 pub mod grid;
+pub mod lint;
 pub mod maps;
 pub mod runtime;
 pub mod simplex;

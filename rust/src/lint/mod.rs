@@ -1,0 +1,201 @@
+//! `simplexlint` — the repo's in-tree static-analysis pass.
+//!
+//! Mechanizes the correctness invariants every efficiency claim rests
+//! on (DESIGN.md §Static Analysis): panic-freedom on the serving
+//! paths, a declared atomic-ordering policy per file, checked casts in
+//! the exact-rank arithmetic, a two-way env-knob registry against
+//! EXPERIMENTS.md, and a `SAFETY:`-documented unsafe inventory. The
+//! binary (`cargo run --bin simplexlint`) walks `rust/src`, `benches`
+//! and `examples`, runs every rule, and exits non-zero on any
+//! unsuppressed finding — gated in CI as the `lint` job.
+//!
+//! Zero dependencies by design (no syn): [`scanner`] is a token-level
+//! Rust scanner that is exactly strong enough for the rule set, and
+//! [`rules`] documents each rule's matching contract and escape hatch
+//! (`// lint: allow(<rule>, <reason>)` — counted, reported, reasons
+//! mandatory).
+
+pub mod rules;
+pub mod scanner;
+
+use rules::Finding;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+/// Everything one lint run produced.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn unsuppressed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.suppressed.is_none())
+    }
+
+    pub fn suppressed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.suppressed.is_some())
+    }
+
+    /// True when the tree is clean (CI gate condition).
+    pub fn clean(&self) -> bool {
+        self.unsuppressed().next().is_none()
+    }
+
+    /// Render the human report: unsuppressed findings first, then the
+    /// suppression inventory, then per-rule totals.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in self.unsuppressed() {
+            out.push_str(&format!(
+                "{}:{}: [{}] {}\n",
+                f.path, f.line, f.rule, f.msg
+            ));
+        }
+        let nsup = self.suppressed().count();
+        if nsup > 0 {
+            out.push_str(&format!("\n{nsup} suppressed by allow-annotations:\n"));
+            for f in self.suppressed() {
+                out.push_str(&format!(
+                    "  {}:{}: [{}] allowed: {}\n",
+                    f.path,
+                    f.line,
+                    f.rule,
+                    f.suppressed.as_deref().unwrap_or("")
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "\n{} files scanned; per rule (unsuppressed/suppressed):\n",
+            self.files_scanned
+        ));
+        for rule in rules::RULES {
+            let open = self.unsuppressed().filter(|f| f.rule == rule).count();
+            let sup = self.suppressed().filter(|f| f.rule == rule).count();
+            out.push_str(&format!("  {rule:<8} {open}/{sup}\n"));
+        }
+        out.push_str(if self.clean() {
+            "simplexlint: clean\n"
+        } else {
+            "simplexlint: FAILED\n"
+        });
+        out
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for stable
+/// reports.
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    let mut paths: Vec<_> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            rust_files(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Run the full lint over a repo checkout. `root` is the repository
+/// root (the directory holding `rust/`, `benches/`, `examples/` and
+/// `EXPERIMENTS.md`).
+pub fn run(root: &Path) -> std::io::Result<Report> {
+    let mut files = Vec::new();
+    for sub in ["rust/src", "benches", "examples"] {
+        rust_files(&root.join(sub), &mut files);
+    }
+    let mut report = Report::default();
+    let mut env_reads: BTreeSet<String> = BTreeSet::new();
+    let mut env_sites: BTreeMap<String, (String, usize)> = BTreeMap::new();
+    for path in &files {
+        let src = std::fs::read_to_string(path)?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let scanned = scanner::scan(&rel, &src);
+        report.findings.extend(rules::check_file(&scanned));
+        for knob in rules::env_reads(&scanned) {
+            // Remember the first read site per knob for reporting.
+            let line = scanned
+                .toks
+                .iter()
+                .find(|t| t.kind == scanner::TokKind::Str && t.text.contains(&knob))
+                .map(|t| t.line)
+                .unwrap_or(0);
+            env_sites.entry(knob.clone()).or_insert((rel.clone(), line));
+            env_reads.insert(knob);
+        }
+        report.files_scanned += 1;
+    }
+    let registry_path = "EXPERIMENTS.md";
+    let registry = std::fs::read_to_string(root.join(registry_path)).unwrap_or_default();
+    report.findings.extend(rules::check_env_registry(
+        &env_reads,
+        &env_sites,
+        &registry,
+        registry_path,
+    ));
+    report
+        .findings
+        .sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    Ok(report)
+}
+
+/// Locate the repo root by walking up from `start` until a directory
+/// holding both `rust/src` and `EXPERIMENTS.md` appears.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = Some(start.to_path_buf());
+    while let Some(d) = dir {
+        if d.join("rust/src").is_dir() && d.join("EXPERIMENTS.md").is_file() {
+            return Some(d);
+        }
+        dir = d.parent().map(Path::to_path_buf);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_clean_and_failed_states() {
+        let mut r = Report::default();
+        assert!(r.clean());
+        assert!(r.render().contains("simplexlint: clean"));
+        r.findings.push(Finding {
+            rule: "panic",
+            path: "src/coordinator/queue.rs".into(),
+            line: 3,
+            msg: "x".into(),
+            suppressed: None,
+        });
+        r.findings.push(Finding {
+            rule: "cast",
+            path: "src/maps/m.rs".into(),
+            line: 9,
+            msg: "y".into(),
+            suppressed: Some("proved".into()),
+        });
+        assert!(!r.clean());
+        let text = r.render();
+        assert!(text.contains("simplexlint: FAILED"));
+        assert!(text.contains("1 suppressed"));
+        assert!(text.contains("queue.rs:3"));
+    }
+
+    #[test]
+    fn find_root_walks_up_from_a_nested_dir() {
+        let here = std::env::current_dir().expect("cwd");
+        let root = find_root(&here).expect("repo root from test cwd");
+        assert!(root.join("EXPERIMENTS.md").is_file());
+        assert!(root.join("rust/src/lint/mod.rs").is_file());
+    }
+}

@@ -1,0 +1,574 @@
+//! The five `simplexlint` rule families (see DESIGN.md §Static
+//! Analysis for the contract and the extension recipe).
+//!
+//! Every rule reports [`Finding`]s; a finding whose line (or the line
+//! directly above it) carries a matching `// lint: allow(<rule>,
+//! <reason>)` annotation is *suppressed* — still counted and printed
+//! in the report summary, but not gating. The reason is mandatory:
+//! `allow(panic)` without one does not suppress.
+
+use super::scanner::{Scanned, TokKind};
+use std::collections::BTreeSet;
+
+/// Rule identifiers — the `<rule>` token of the allow grammar.
+pub const RULES: [&str; 5] = ["panic", "atomics", "cast", "env", "unsafe"];
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+    /// Set when an allow-annotation covers the site; the reason is
+    /// carried so the report can surface *why* each suppression
+    /// exists.
+    pub suppressed: Option<String>,
+}
+
+impl Finding {
+    fn new(rule: &'static str, sc: &Scanned, line: usize, msg: String) -> Finding {
+        Finding {
+            rule,
+            path: sc.path.clone(),
+            line,
+            msg,
+            suppressed: allow_reason(sc, rule, line),
+        }
+    }
+}
+
+/// Parse `lint: allow(<rule>, <reason>)` out of the comment channel on
+/// `line` or the line above. Returns the reason when present.
+fn allow_reason(sc: &Scanned, rule: &str, line: usize) -> Option<String> {
+    for l in [line, line.saturating_sub(1)] {
+        if l == 0 {
+            continue;
+        }
+        if let Some(r) = parse_allow(sc.comment(l), rule) {
+            return Some(r);
+        }
+    }
+    None
+}
+
+/// Extract the reason from one comment string, if it carries a
+/// matching `lint: allow(rule, reason)`.
+pub fn parse_allow(comment: &str, rule: &str) -> Option<String> {
+    let mut rest = comment;
+    while let Some(pos) = rest.find("lint: allow(") {
+        let body = &rest[pos + "lint: allow(".len()..];
+        let close = body.find(')')?;
+        let inner = &body[..close];
+        if let Some((r, reason)) = inner.split_once(',') {
+            if r.trim() == rule && !reason.trim().is_empty() {
+                return Some(reason.trim().to_string());
+            }
+        }
+        rest = &body[close..];
+    }
+    None
+}
+
+/// Parse a `lint: atomics(Relaxed, AcqRel, ...)` policy header from a
+/// whole file's comment channel. Returns the declared ordering set, or
+/// `None` when the file declares no policy.
+pub fn atomics_policy(sc: &Scanned) -> Option<BTreeSet<String>> {
+    for line in 1..=sc.lines {
+        let c = sc.comment(line);
+        if let Some(pos) = c.find("lint: atomics(") {
+            let body = &c[pos + "lint: atomics(".len()..];
+            let close = body.find(')')?;
+            return Some(
+                body[..close]
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect(),
+            );
+        }
+    }
+    None
+}
+
+const ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// Keywords that can directly precede `[` in *type* position — an
+/// ident from this set followed by `[` is a slice type, not an index
+/// expression.
+const TYPE_POSITION_KEYWORDS: [&str; 20] = [
+    "mut", "ref", "dyn", "as", "in", "return", "break", "continue", "else", "match", "move",
+    "static", "const", "box", "await", "loop", "while", "if", "impl", "where",
+];
+
+/// Is `rel_path` one of the serving-path files under the panic rule?
+pub fn panic_scope(rel_path: &str) -> bool {
+    [
+        "coordinator/reactor.rs",
+        "coordinator/queue.rs",
+        "coordinator/server.rs",
+        "coordinator/results_store.rs",
+    ]
+    .iter()
+    .any(|s| rel_path.ends_with(s))
+}
+
+/// Is `rel_path` in the exact-arithmetic scope of the cast rule?
+pub fn cast_scope(rel_path: &str) -> bool {
+    rel_path.contains("src/maps/")
+        || rel_path.contains("src/simplex/")
+        || rel_path.ends_with("util/isqrt.rs")
+}
+
+/// Run every per-file rule over one scanned file.
+pub fn check_file(sc: &Scanned) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if panic_scope(&sc.path) {
+        rule_panic(sc, &mut out);
+    }
+    rule_atomics(sc, &mut out);
+    if cast_scope(&sc.path) {
+        rule_cast(sc, &mut out);
+    }
+    rule_unsafe(sc, &mut out);
+    out
+}
+
+/// Rule `panic`: no `.unwrap()` / `.expect(` / panicking macros /
+/// slice-index expressions in the serving-path files.
+fn rule_panic(sc: &Scanned, out: &mut Vec<Finding>) {
+    let toks = &sc.toks;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.in_test {
+            continue;
+        }
+        match t.kind {
+            TokKind::Ident if matches!(t.text.as_str(), "unwrap" | "expect") => {
+                let after_dot =
+                    i > 0 && toks[i - 1].kind == TokKind::Punct && toks[i - 1].text == ".";
+                let called = toks
+                    .get(i + 1)
+                    .is_some_and(|n| n.kind == TokKind::Punct && n.text == "(");
+                if after_dot && called {
+                    out.push(Finding::new(
+                        "panic",
+                        sc,
+                        t.line,
+                        format!(".{}() may panic on a serving path", t.text),
+                    ));
+                }
+            }
+            TokKind::Ident
+                if matches!(
+                    t.text.as_str(),
+                    "panic" | "unreachable" | "todo" | "unimplemented" | "assert" | "assert_eq"
+                        | "assert_ne"
+                ) =>
+            {
+                let is_macro = toks
+                    .get(i + 1)
+                    .is_some_and(|n| n.kind == TokKind::Punct && n.text == "!");
+                if is_macro {
+                    out.push(Finding::new(
+                        "panic",
+                        sc,
+                        t.line,
+                        format!("{}! may panic on a serving path", t.text),
+                    ));
+                }
+            }
+            TokKind::Punct if t.text == "[" && i > 0 => {
+                let p = &toks[i - 1];
+                let indexes = match p.kind {
+                    TokKind::Ident => !TYPE_POSITION_KEYWORDS.contains(&p.text.as_str()),
+                    TokKind::Punct => p.text == ")" || p.text == "]",
+                    _ => false,
+                };
+                if indexes {
+                    out.push(Finding::new(
+                        "panic",
+                        sc,
+                        t.line,
+                        format!(
+                            "slice index `{}[..]` may panic on a serving path (use .get())",
+                            p.text
+                        ),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Rule `atomics`: every `Ordering::<variant>` use must match the
+/// file's declared `lint: atomics(...)` policy header. A file that
+/// uses atomics with no header, or uses a variant outside the declared
+/// set (the classic undeclared-SeqCst default), is flagged.
+fn rule_atomics(sc: &Scanned, out: &mut Vec<Finding>) {
+    let policy = atomics_policy(sc);
+    let toks = &sc.toks;
+    let mut missing_header_reported = false;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.in_test || t.kind != TokKind::Ident || t.text != "Ordering" {
+            continue;
+        }
+        // Match `Ordering` `:` `:` `<variant>`.
+        let (Some(c1), Some(c2), Some(v)) = (toks.get(i + 1), toks.get(i + 2), toks.get(i + 3))
+        else {
+            continue;
+        };
+        if !(c1.text == ":" && c2.text == ":" && v.kind == TokKind::Ident) {
+            continue;
+        }
+        if !ORDERINGS.contains(&v.text.as_str()) {
+            continue; // `cmp::Ordering::Less` etc — not an atomic use.
+        }
+        match &policy {
+            None => {
+                if !missing_header_reported {
+                    out.push(Finding::new(
+                        "atomics",
+                        sc,
+                        v.line,
+                        format!(
+                            "file uses Ordering::{} without a `lint: atomics(...)` policy header",
+                            v.text
+                        ),
+                    ));
+                    missing_header_reported = true;
+                }
+            }
+            Some(set) if !set.contains(&v.text) => {
+                out.push(Finding::new(
+                    "atomics",
+                    sc,
+                    v.line,
+                    format!(
+                        "Ordering::{} is outside this file's declared policy ({})",
+                        v.text,
+                        set.iter().cloned().collect::<Vec<_>>().join(", ")
+                    ),
+                ));
+            }
+            Some(_) => {}
+        }
+    }
+}
+
+/// Rule `cast`: in the exact-arithmetic scope, every `as u64` /
+/// `as usize` (the narrowing directions out of the u128 rank domain)
+/// must be `try_into` or carry an allow-annotation with the range
+/// proof. The scanner is type-blind, so the rule is deliberately
+/// over-broad: widening casts in scope pay a one-line annotation too.
+fn rule_cast(sc: &Scanned, out: &mut Vec<Finding>) {
+    let toks = &sc.toks;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.in_test || t.kind != TokKind::Ident || t.text != "as" {
+            continue;
+        }
+        let Some(n) = toks.get(i + 1) else { continue };
+        if n.kind == TokKind::Ident && matches!(n.text.as_str(), "u64" | "usize") {
+            out.push(Finding::new(
+                "cast",
+                sc,
+                t.line,
+                format!(
+                    "bare `as {}` in exact-arithmetic scope (use try_into or prove the range)",
+                    n.text
+                ),
+            ));
+        }
+    }
+}
+
+/// Rule `unsafe`: every `unsafe` token must have a `SAFETY:` comment
+/// on the same line or within the 3 lines above it.
+fn rule_unsafe(sc: &Scanned, out: &mut Vec<Finding>) {
+    for t in &sc.toks {
+        if t.in_test || t.kind != TokKind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        let documented = (t.line.saturating_sub(3)..=t.line)
+            .any(|l| l > 0 && sc.comment(l).contains("SAFETY:"));
+        if !documented {
+            out.push(Finding::new(
+                "unsafe",
+                sc,
+                t.line,
+                "unsafe without a `// SAFETY:` comment".to_string(),
+            ));
+        }
+    }
+}
+
+/// Collect every `SIMPLEXMAP_*` name read in a file's production
+/// string literals (the env-knob registry rule's source side).
+pub fn env_reads(sc: &Scanned) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for t in &sc.toks {
+        if t.in_test || t.kind != TokKind::Str {
+            continue;
+        }
+        collect_knob_names(&t.text, &mut out);
+    }
+    out
+}
+
+/// Pull `SIMPLEXMAP_[A-Z0-9_]+` words out of arbitrary text.
+pub fn collect_knob_names(text: &str, out: &mut BTreeSet<String>) {
+    let b = text.as_bytes();
+    let mut i = 0usize;
+    while let Some(pos) = text[i..].find("SIMPLEXMAP_") {
+        let start = i + pos;
+        // Must not be preceded by an identifier char (e.g. a longer
+        // name embedding the prefix).
+        if start > 0 && (b[start - 1].is_ascii_alphanumeric() || b[start - 1] == b'_') {
+            i = start + 1;
+            continue;
+        }
+        let mut end = start + "SIMPLEXMAP_".len();
+        while end < b.len()
+            && (b[end].is_ascii_uppercase() || b[end].is_ascii_digit() || b[end] == b'_')
+        {
+            end += 1;
+        }
+        // Trim trailing underscores (prose like `SIMPLEXMAP_` alone).
+        let name = text[start..end].trim_end_matches('_');
+        if name.len() > "SIMPLEXMAP_".len() {
+            out.insert(name.to_string());
+        }
+        i = end;
+    }
+}
+
+/// Rule `env`, registry side: two-way parity between the knobs read in
+/// source and the names mentioned in the EXPERIMENTS.md registry text.
+pub fn check_env_registry(
+    reads: &BTreeSet<String>,
+    read_sites: &std::collections::BTreeMap<String, (String, usize)>,
+    registry_text: &str,
+    registry_path: &str,
+) -> Vec<Finding> {
+    let mut documented = BTreeSet::new();
+    collect_knob_names(registry_text, &mut documented);
+    let mut out = Vec::new();
+    for knob in reads {
+        if !documented.contains(knob) {
+            let (path, line) = read_sites
+                .get(knob)
+                .cloned()
+                .unwrap_or_else(|| (registry_path.to_string(), 0));
+            out.push(Finding {
+                rule: "env",
+                path,
+                line,
+                msg: format!(
+                    "{knob} is read in source but missing from the {registry_path} knob table"
+                ),
+                suppressed: None,
+            });
+        }
+    }
+    for knob in &documented {
+        if !reads.contains(knob) {
+            out.push(Finding {
+                rule: "env",
+                path: registry_path.to_string(),
+                line: 0,
+                msg: format!(
+                    "{knob} is in the {registry_path} knob table but nothing in source reads it"
+                ),
+                suppressed: None,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scanner::scan;
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn findings(path: &str, src: &str) -> Vec<Finding> {
+        check_file(&scan(path, src))
+    }
+
+    fn unsuppressed(f: &[Finding]) -> usize {
+        f.iter().filter(|x| x.suppressed.is_none()).count()
+    }
+
+    #[test]
+    fn panic_rule_flags_unwrap_expect_macros_and_indexing() {
+        let src = "fn f(v: &[u64], m: std::sync::Mutex<u8>) {\n\
+                   let a = m.lock().unwrap();\n\
+                   let b = v.first().expect(\"x\");\n\
+                   panic!(\"boom\");\n\
+                   let c = v[0];\n\
+                   }";
+        let f = findings("src/coordinator/queue.rs", src);
+        assert_eq!(f.len(), 4, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "panic"));
+        assert_eq!(unsuppressed(&f), 4);
+    }
+
+    #[test]
+    fn panic_rule_scope_is_the_serving_files_only() {
+        let src = "fn f(v: &[u64]) -> u64 { v[0] }";
+        assert!(findings("src/coordinator/scheduler.rs", src).is_empty());
+        assert!(!findings("src/coordinator/reactor.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_rule_ignores_test_code_and_non_panicking_lookalikes() {
+        let src = "fn f(v: &[u64]) -> u64 { v.first().copied().unwrap_or(0) }\n\
+                   #[cfg(test)]\nmod tests { fn t(v: &[u64]) { v[0]; x.unwrap(); assert!(true); } }";
+        let f = findings("src/coordinator/server.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn slice_type_positions_are_not_index_expressions() {
+        let src = "fn f(x: &mut [u8], y: [u64; 4]) -> Vec<u8> { vec![0; 4] }\n#[derive(Debug)]\nstruct S;";
+        let f = findings("src/coordinator/reactor.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn allow_annotation_suppresses_and_carries_reason() {
+        let src = "fn f() {\n\
+                   // lint: allow(panic, startup-fatal by design)\n\
+                   let t = spawn().expect(\"spawn\");\n\
+                   let u = other().unwrap();\n\
+                   }";
+        let f = findings("src/coordinator/queue.rs", src);
+        assert_eq!(f.len(), 2);
+        assert_eq!(
+            f[0].suppressed.as_deref(),
+            Some("startup-fatal by design"),
+            "{f:?}"
+        );
+        assert!(f[1].suppressed.is_none());
+    }
+
+    #[test]
+    fn allow_without_reason_does_not_suppress() {
+        let src = "fn f() { x.unwrap(); } // lint: allow(panic, )";
+        let f = findings("src/coordinator/queue.rs", src);
+        assert_eq!(unsuppressed(&f), 1);
+    }
+
+    #[test]
+    fn atomics_rule_requires_header_and_declared_variants() {
+        let src = "use std::sync::atomic::Ordering;\n\
+                   fn f(a: &std::sync::atomic::AtomicU64) { a.load(Ordering::SeqCst); }";
+        let f = findings("src/util/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].msg.contains("no `lint: atomics"));
+
+        let src2 = "// lint: atomics(Relaxed)\n\
+                    use std::sync::atomic::Ordering;\n\
+                    fn f(a: &std::sync::atomic::AtomicU64) {\n\
+                    a.load(Ordering::Relaxed);\n\
+                    a.store(1, Ordering::SeqCst);\n\
+                    }";
+        let f2 = findings("src/util/x.rs", src2);
+        assert_eq!(f2.len(), 1, "{f2:?}");
+        assert!(f2[0].msg.contains("SeqCst is outside"));
+    }
+
+    #[test]
+    fn atomics_rule_ignores_cmp_ordering() {
+        let src = "fn f(a: u64, b: u64) -> std::cmp::Ordering { if a < b { std::cmp::Ordering::Less } else { std::cmp::Ordering::Greater } }";
+        assert!(findings("src/util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cast_rule_flags_scope_and_honours_allow() {
+        let src = "fn f(x: u128) -> u64 { x as u64 }";
+        assert_eq!(unsuppressed(&findings("src/maps/m.rs", src)), 1);
+        assert_eq!(unsuppressed(&findings("src/simplex/s.rs", src)), 1);
+        assert_eq!(unsuppressed(&findings("src/util/isqrt.rs", src)), 1);
+        // Out of scope: coordinator, grid, other util files.
+        assert!(findings("src/util/histogram.rs", src).is_empty());
+        assert!(findings("src/grid/launcher.rs", src).is_empty());
+
+        let allowed = "fn f(x: u128) -> u64 {\n\
+                       x as u64 // lint: allow(cast, x <= T(nb) <= u64::MAX by supports())\n\
+                       }";
+        let f = findings("src/maps/m.rs", allowed);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].suppressed.is_some());
+    }
+
+    #[test]
+    fn cast_rule_ignores_widening_and_test_code() {
+        let src = "fn f(x: u64) -> u128 { x as u128 }\n\
+                   #[cfg(test)]\nmod tests { fn t(x: u128) -> u64 { x as u64 } }";
+        assert!(findings("src/maps/m.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_rule_wants_safety_comment() {
+        let src = "fn f() { unsafe { libc_call(); } }";
+        assert_eq!(unsuppressed(&findings("src/coordinator/reactor.rs", src)), 1);
+        let ok = "fn f() {\n\
+                  // SAFETY: fds points at len initialized pollfd structs.\n\
+                  unsafe { libc_call(); }\n\
+                  }";
+        assert!(findings("src/coordinator/reactor.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn env_reads_come_from_production_strings_only() {
+        let src = "fn f() { std::env::var(\"SIMPLEXMAP_KNOB_A\"); }\n\
+                   #[cfg(test)]\nmod tests { fn t() { std::env::var(\"SIMPLEXMAP_KNOB_B\"); } }";
+        let reads = env_reads(&scan("src/x.rs", src));
+        assert!(reads.contains("SIMPLEXMAP_KNOB_A"));
+        assert!(!reads.contains("SIMPLEXMAP_KNOB_B"));
+    }
+
+    #[test]
+    fn env_registry_drift_is_flagged_both_ways() {
+        let mut reads = BTreeSet::new();
+        reads.insert("SIMPLEXMAP_READ_ONLY".to_string());
+        reads.insert("SIMPLEXMAP_BOTH".to_string());
+        let mut sites = BTreeMap::new();
+        sites.insert(
+            "SIMPLEXMAP_READ_ONLY".to_string(),
+            ("src/x.rs".to_string(), 7),
+        );
+        let registry = "| `SIMPLEXMAP_BOTH` | doc |\n| `SIMPLEXMAP_DOC_ONLY` | doc |";
+        let f = check_env_registry(&reads, &sites, registry, "EXPERIMENTS.md");
+        assert_eq!(f.len(), 2, "{f:?}");
+        let read_only = f
+            .iter()
+            .find(|x| x.msg.contains("SIMPLEXMAP_READ_ONLY"))
+            .expect("read-only drift");
+        assert_eq!(read_only.path, "src/x.rs");
+        assert_eq!(read_only.line, 7);
+        assert!(f
+            .iter()
+            .any(|x| x.msg.contains("SIMPLEXMAP_DOC_ONLY") && x.path == "EXPERIMENTS.md"));
+        let clean = check_env_registry(
+            &reads,
+            &sites,
+            "`SIMPLEXMAP_BOTH` and `SIMPLEXMAP_READ_ONLY`",
+            "EXPERIMENTS.md",
+        );
+        assert!(clean.is_empty());
+    }
+
+    #[test]
+    fn knob_names_do_not_match_inside_longer_identifiers() {
+        let mut out = BTreeSet::new();
+        collect_knob_names("XSIMPLEXMAP_NOT_A_KNOB but SIMPLEXMAP_REAL ok", &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out.contains("SIMPLEXMAP_REAL"));
+    }
+}

@@ -1,0 +1,555 @@
+//! Token-level Rust scanner for `simplexlint` — zero dependencies (no
+//! syn/proc-macro, matching the repo's offline-safe policy; DESIGN.md
+//! §Substitutions).
+//!
+//! The scanner is deliberately *not* a full Rust lexer: it produces
+//! exactly what the five rule families need and nothing more —
+//!
+//! - a flat token stream (`Tok`) with line numbers, where comments and
+//!   string-literal bodies can never masquerade as code;
+//! - a per-line *comment channel* (doc comments included), which is
+//!   where `// lint: allow(...)`, `// lint: atomics(...)` and
+//!   `// SAFETY:` annotations live;
+//! - string-literal *values* (for the `SIMPLEXMAP_*` env-knob
+//!   registry rule);
+//! - `#[cfg(test)]`-gated regions, marked so every rule can skip test
+//!   code (test-only panics/casts are free to be blunt).
+//!
+//! Handled syntax: line comments, nested block comments, string /
+//! raw-string / byte-string / char literals, lifetimes vs char
+//! literals, identifiers, numbers, single-char punctuation. That is
+//! sufficient for every construct the rules match on (`.unwrap()`,
+//! `panic!`, `expr[`, `as u64`, `Ordering::SeqCst`, `unsafe`).
+
+/// Token kinds the rules distinguish.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unwrap`, `as`, `Ordering`, ...).
+    Ident,
+    /// Numeric literal (`0`, `0x1f`, `1_000`).
+    Num,
+    /// String / raw-string / byte-string literal (value stored).
+    Str,
+    /// Char literal (`'a'`, `'\n'`).
+    Char,
+    /// Lifetime (`'a` in `&'a str`).
+    Lifetime,
+    /// Any single punctuation character (`.`, `[`, `!`, `:`, ...).
+    Punct,
+}
+
+/// One token: kind, text (literal *value* for `Str`), 1-based line,
+/// and whether it sits inside a `#[cfg(test)]`-gated block.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+    pub in_test: bool,
+}
+
+/// A fully scanned source file.
+#[derive(Debug)]
+pub struct Scanned {
+    /// Repo-relative path with forward slashes (rule scoping key).
+    pub path: String,
+    /// The code token stream (comments and literals resolved).
+    pub toks: Vec<Tok>,
+    /// Comment text per 1-based line (all comments on that line,
+    /// concatenated; block comments contribute to every line they
+    /// touch). Index 0 is unused.
+    pub comments: Vec<String>,
+    /// Number of source lines.
+    pub lines: usize,
+}
+
+impl Scanned {
+    /// Comment text on `line` (1-based); empty when out of range.
+    pub fn comment(&self, line: usize) -> &str {
+        self.comments.get(line).map(String::as_str).unwrap_or("")
+    }
+}
+
+/// Scan `src` into tokens + comment channel. `path` is carried through
+/// for reporting and rule scoping.
+pub fn scan(path: &str, src: &str) -> Scanned {
+    let bytes: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let nlines = src.lines().count();
+    let mut comments = vec![String::new(); nlines + 2];
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    let push_comment = |comments: &mut Vec<String>, line: usize, text: &str| {
+        if line < comments.len() {
+            comments[line].push_str(text);
+            comments[line].push(' ');
+        }
+    };
+
+    while i < bytes.len() {
+        let c = bytes[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            '/' if i + 1 < bytes.len() && bytes[i + 1] == '/' => {
+                // Line comment (covers /// and //! doc forms).
+                let start = i;
+                while i < bytes.len() && bytes[i] != '\n' {
+                    i += 1;
+                }
+                let text: String = bytes[start..i].iter().collect();
+                push_comment(&mut comments, line, &text);
+            }
+            '/' if i + 1 < bytes.len() && bytes[i + 1] == '*' => {
+                // Block comment, possibly nested, possibly multi-line.
+                let mut depth = 1usize;
+                let mut seg = String::from("/*");
+                i += 2;
+                while i < bytes.len() && depth > 0 {
+                    if bytes[i] == '/' && i + 1 < bytes.len() && bytes[i + 1] == '*' {
+                        depth += 1;
+                        seg.push_str("/*");
+                        i += 2;
+                    } else if bytes[i] == '*' && i + 1 < bytes.len() && bytes[i + 1] == '/' {
+                        depth -= 1;
+                        seg.push_str("*/");
+                        i += 2;
+                    } else {
+                        if bytes[i] == '\n' {
+                            push_comment(&mut comments, line, &seg);
+                            seg.clear();
+                            line += 1;
+                        } else {
+                            seg.push(bytes[i]);
+                        }
+                        i += 1;
+                    }
+                }
+                push_comment(&mut comments, line, &seg);
+            }
+            '"' => {
+                let (value, consumed, newlines) = scan_string(&bytes[i..]);
+                toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: value,
+                    line,
+                    in_test: false,
+                });
+                line += newlines;
+                i += consumed;
+            }
+            'r' | 'b' if starts_raw_or_byte_string(&bytes[i..]) => {
+                let (value, consumed, newlines) = scan_raw_or_byte(&bytes[i..]);
+                toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: value,
+                    line,
+                    in_test: false,
+                });
+                line += newlines;
+                i += consumed;
+            }
+            '\'' => {
+                // Lifetime vs char literal: `'ident` not followed by a
+                // closing quote is a lifetime (`&'a str`, `'static`).
+                let is_lifetime = i + 1 < bytes.len()
+                    && (bytes[i + 1].is_alphanumeric() || bytes[i + 1] == '_')
+                    && {
+                        let mut j = i + 1;
+                        while j < bytes.len() && (bytes[j].is_alphanumeric() || bytes[j] == '_') {
+                            j += 1;
+                        }
+                        !(j < bytes.len() && bytes[j] == '\'')
+                    };
+                if is_lifetime {
+                    let mut j = i + 1;
+                    while j < bytes.len() && (bytes[j].is_alphanumeric() || bytes[j] == '_') {
+                        j += 1;
+                    }
+                    toks.push(Tok {
+                        kind: TokKind::Lifetime,
+                        text: bytes[i..j].iter().collect(),
+                        line,
+                        in_test: false,
+                    });
+                    i = j;
+                } else {
+                    // Char literal: 'x', '\n', '\'', '\u{1F600}'.
+                    let mut j = i + 1;
+                    while j < bytes.len() {
+                        if bytes[j] == '\\' {
+                            j += 2;
+                        } else if bytes[j] == '\'' {
+                            j += 1;
+                            break;
+                        } else {
+                            j += 1;
+                        }
+                    }
+                    toks.push(Tok {
+                        kind: TokKind::Char,
+                        text: bytes[i..j.min(bytes.len())].iter().collect(),
+                        line,
+                        in_test: false,
+                    });
+                    i = j;
+                }
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let mut j = i;
+                while j < bytes.len() && (bytes[j].is_alphanumeric() || bytes[j] == '_') {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Ident,
+                    text: bytes[i..j].iter().collect(),
+                    line,
+                    in_test: false,
+                });
+                i = j;
+            }
+            c if c.is_ascii_digit() => {
+                let mut j = i;
+                while j < bytes.len()
+                    && (bytes[j].is_alphanumeric() || bytes[j] == '_' || bytes[j] == '.')
+                {
+                    // `0..n` range: stop the number before `..`.
+                    if bytes[j] == '.' && j + 1 < bytes.len() && bytes[j + 1] == '.' {
+                        break;
+                    }
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Num,
+                    text: bytes[i..j].iter().collect(),
+                    line,
+                    in_test: false,
+                });
+                i = j;
+            }
+            c if c.is_whitespace() => {
+                i += 1;
+            }
+            _ => {
+                toks.push(Tok {
+                    kind: TokKind::Punct,
+                    text: c.to_string(),
+                    line,
+                    in_test: false,
+                });
+                i += 1;
+            }
+        }
+    }
+
+    mark_test_regions(&mut toks);
+    Scanned {
+        path: path.to_string(),
+        toks,
+        comments,
+        lines: nlines,
+    }
+}
+
+/// `r"..."`, `r#"..."#`, `b"..."`, `br#"..."#` lookahead.
+fn starts_raw_or_byte_string(s: &[char]) -> bool {
+    let mut j = 0;
+    if s[j] == 'b' {
+        j += 1;
+    }
+    if j < s.len() && s[j] == 'r' {
+        j += 1;
+        while j < s.len() && s[j] == '#' {
+            j += 1;
+        }
+    }
+    j > 0 && j < s.len() && s[j] == '"' && (s[0] == 'r' || s[0] == 'b')
+}
+
+/// Scan a plain `"..."` literal starting at `s[0] == '"'`.
+/// Returns (unescaped-ish value, chars consumed, embedded newlines).
+fn scan_string(s: &[char]) -> (String, usize, usize) {
+    let mut value = String::new();
+    let mut newlines = 0usize;
+    let mut j = 1usize;
+    while j < s.len() {
+        match s[j] {
+            '\\' if j + 1 < s.len() => {
+                // Keep escapes opaque — the env rule only needs plain
+                // ASCII names, which never contain escapes.
+                value.push(s[j + 1]);
+                j += 2;
+            }
+            '"' => {
+                j += 1;
+                break;
+            }
+            '\n' => {
+                newlines += 1;
+                value.push('\n');
+                j += 1;
+            }
+            c => {
+                value.push(c);
+                j += 1;
+            }
+        }
+    }
+    (value, j, newlines)
+}
+
+/// Scan `r#*"..."#*` / `b"..."` starting at `s[0]` ∈ {r, b}.
+fn scan_raw_or_byte(s: &[char]) -> (String, usize, usize) {
+    let mut j = 0usize;
+    let is_raw;
+    if s[j] == 'b' {
+        j += 1;
+    }
+    if j < s.len() && s[j] == 'r' {
+        is_raw = true;
+        j += 1;
+    } else {
+        is_raw = false;
+    }
+    let mut hashes = 0usize;
+    while j < s.len() && s[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    // s[j] == '"'
+    j += 1;
+    let mut value = String::new();
+    let mut newlines = 0usize;
+    while j < s.len() {
+        if !is_raw && s[j] == '\\' && j + 1 < s.len() {
+            value.push(s[j + 1]);
+            j += 2;
+            continue;
+        }
+        if s[j] == '"' {
+            // Raw strings close only on `"` followed by the right
+            // number of `#`s.
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while seen < hashes && k < s.len() && s[k] == '#' {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return (value, k, newlines);
+            }
+            value.push('"');
+            j += 1;
+            continue;
+        }
+        if s[j] == '\n' {
+            newlines += 1;
+        }
+        value.push(s[j]);
+        j += 1;
+    }
+    (value, j, newlines)
+}
+
+/// Mark every token inside a `#[cfg(test)]`-gated item as test code.
+///
+/// Grammar matched: `#` `[` `cfg` `(` ... `test` ... `)` `]` followed
+/// by an item; the gated region runs from the attribute to the close
+/// of the item's first brace block (covers `mod tests { ... }` and
+/// `#[cfg(test)] fn helper() { ... }` alike). `cfg(all(test, ...))`
+/// and `cfg(any(..., test))` count as gated — over-approximating the
+/// test region only ever *relaxes* the lint, never tightens it.
+fn mark_test_regions(toks: &mut [Tok]) {
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_cfg_test_attr(toks, i) {
+            // Find the end of the attribute (`]` closing the `#[`).
+            let mut j = i + 1; // at '['
+            let mut bracket = 0i32;
+            while j < toks.len() {
+                match (toks[j].kind, toks[j].text.as_str()) {
+                    (TokKind::Punct, "[") => bracket += 1,
+                    (TokKind::Punct, "]") => {
+                        bracket -= 1;
+                        if bracket == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            // Walk to the item's opening brace, then match braces.
+            let mut k = j + 1;
+            while k < toks.len() && !(toks[k].kind == TokKind::Punct && toks[k].text == "{") {
+                // A `;` before any `{` means a braceless item
+                // (`#[cfg(test)] use ...;`) — gate just up to it.
+                if toks[k].kind == TokKind::Punct && toks[k].text == ";" {
+                    break;
+                }
+                k += 1;
+            }
+            let mut depth = 0i32;
+            let mut end = k;
+            while end < toks.len() {
+                if toks[end].kind == TokKind::Punct {
+                    match toks[end].text.as_str() {
+                        "{" => depth += 1,
+                        "}" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        ";" if depth == 0 => break,
+                        _ => {}
+                    }
+                }
+                end += 1;
+            }
+            for t in toks[i..=end.min(toks.len() - 1)].iter_mut() {
+                t.in_test = true;
+            }
+            i = end + 1;
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Does the token at `i` start `#[cfg(... test ...)]`?
+fn is_cfg_test_attr(toks: &[Tok], i: usize) -> bool {
+    if !(toks[i].kind == TokKind::Punct && toks[i].text == "#") {
+        return false;
+    }
+    let Some(t1) = toks.get(i + 1) else {
+        return false;
+    };
+    let Some(t2) = toks.get(i + 2) else {
+        return false;
+    };
+    if !(t1.kind == TokKind::Punct && t1.text == "[") {
+        return false;
+    }
+    if !(t2.kind == TokKind::Ident && t2.text == "cfg") {
+        return false;
+    }
+    // Scan the cfg(...) argument list for a bare `test` ident.
+    let mut depth = 0i32;
+    let mut j = i + 3;
+    while j < toks.len() {
+        match (toks[j].kind, toks[j].text.as_str()) {
+            (TokKind::Punct, "(") => depth += 1,
+            (TokKind::Punct, ")") => {
+                depth -= 1;
+                if depth == 0 {
+                    return false;
+                }
+            }
+            (TokKind::Ident, "test") if depth >= 1 => return true,
+            (TokKind::Punct, "]") => return false,
+            _ => {}
+        }
+        j += 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_never_reach_the_token_stream() {
+        let s = scan(
+            "x.rs",
+            "let a = \"no // comment .unwrap()\"; // real comment\n/* block\nspans */ let b = 1;",
+        );
+        // The string body is a Str token, not idents.
+        assert!(s
+            .toks
+            .iter()
+            .all(|t| !(t.kind == TokKind::Ident && t.text == "unwrap")));
+        assert!(s.comment(1).contains("real comment"));
+        assert!(s.comment(2).contains("block"));
+        assert!(s.comment(3).contains("spans"));
+        // Code after the block comment still tokenizes.
+        assert!(s
+            .toks
+            .iter()
+            .any(|t| t.kind == TokKind::Ident && t.text == "b" && t.line == 3));
+    }
+
+    #[test]
+    fn raw_strings_and_chars_and_lifetimes() {
+        let s = scan(
+            "x.rs",
+            "let r = r#\"raw \"quoted\" body\"#; let c = '\\''; fn f<'a>(x: &'a str) {}",
+        );
+        let strs: Vec<_> = s.toks.iter().filter(|t| t.kind == TokKind::Str).collect();
+        assert_eq!(strs.len(), 1);
+        assert_eq!(strs[0].text, "raw \"quoted\" body");
+        assert!(s.toks.iter().any(|t| t.kind == TokKind::Char));
+        assert!(s
+            .toks
+            .iter()
+            .any(|t| t.kind == TokKind::Lifetime && t.text == "'a"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_marked() {
+        let src = "fn prod() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\nfn prod2() {}";
+        let s = scan("x.rs", src);
+        let unwraps: Vec<_> = s
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident && t.text == "unwrap")
+            .collect();
+        assert_eq!(unwraps.len(), 2);
+        assert!(!unwraps[0].in_test);
+        assert!(unwraps[1].in_test);
+        let prod2 = s
+            .toks
+            .iter()
+            .find(|t| t.text == "prod2")
+            .expect("prod2 token");
+        assert!(!prod2.in_test);
+    }
+
+    #[test]
+    fn cfg_all_test_counts_as_gated() {
+        let src = "#[cfg(all(test, unix))]\nmod t { fn g() { a.unwrap(); } }";
+        let s = scan("x.rs", src);
+        assert!(s
+            .toks
+            .iter()
+            .filter(|t| t.text == "unwrap")
+            .all(|t| t.in_test));
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_gated() {
+        // `test` inside the cfg still gates — over-approximation is
+        // documented; `cfg(unix)` alone must NOT gate.
+        let src = "#[cfg(unix)]\nfn g() { a.unwrap(); }";
+        let s = scan("x.rs", src);
+        assert!(s
+            .toks
+            .iter()
+            .filter(|t| t.text == "unwrap")
+            .all(|t| !t.in_test));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let s = scan("x.rs", "/* outer /* inner */ still comment */ let x = 1;");
+        assert!(s
+            .toks
+            .iter()
+            .any(|t| t.kind == TokKind::Ident && t.text == "x"));
+        assert!(!s.toks.iter().any(|t| t.text == "outer"));
+    }
+}

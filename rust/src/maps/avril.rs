@@ -38,6 +38,7 @@ pub fn avril_row_f64(k: u64, n: u64) -> u64 {
     let kf = k as f64;
     let nf = n as f64;
     let disc = (2.0 * nf - 1.0) * (2.0 * nf - 1.0) - 8.0 * kf;
+    // lint: allow(cast, the f64 Avril baseline measures exactly this float truncation, E11)
     ((2.0 * nf - 1.0 - disc.sqrt()) * 0.5) as u64
 }
 
@@ -74,6 +75,7 @@ pub fn avril_map_f32(k: u64, n: u64) -> (u64, u64) {
     let kf = k as f32;
     let nf = n as f32;
     let disc = (2.0 * nf - 1.0) * (2.0 * nf - 1.0) - 8.0 * kf;
+    // lint: allow(cast, the f32 variant exists to measure this exact truncation error, E11)
     let a = ((2.0 * nf - 1.0 - disc.sqrt()) * 0.5) as u64;
     let rs = a
         .wrapping_mul(n)

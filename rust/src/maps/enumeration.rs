@@ -74,6 +74,7 @@ impl Enum3Map {
     fn layers(nb: u64) -> u64 {
         let need = simplex_volume(nb, 3);
         let base = (nb as u128 / 2) * (nb as u128 / 2);
+        // lint: allow(cast, quotient is about 2nb/3, far inside u64)
         need.div_ceil(base) as u64
     }
 }

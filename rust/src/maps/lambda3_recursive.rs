@@ -17,6 +17,7 @@ pub struct Lambda3RecMap;
 
 /// Number of launches: 3^0 + 3^1 + … + 3^{log2(N)-1} cubes.
 pub fn launch_count(nb: u64) -> u64 {
+    // lint: allow(cast, u32 to u64 widens)
     let levels = ilog2(nb) as u64;
     (3u64.pow(levels as u32) - 1) / 2
 }
@@ -35,6 +36,7 @@ fn decode(nb: u64, idx: u64) -> (u64, [u64; 3]) {
     let mut offset = [0u64; 3];
     // Digits from least significant = deepest recursion step.
     for step in (1..=level).rev() {
+        // lint: allow(cast, rem % 3 is 0..=2)
         let branch = (rem % 3) as usize;
         rem /= 3;
         offset[branch] += nb >> step;

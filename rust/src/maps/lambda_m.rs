@@ -66,6 +66,7 @@ impl LambdaMMap {
 
     /// Non-panicking constructor (registry path for user-typed names).
     pub fn try_for_paper(m: u32, beta: u32) -> Option<LambdaMMap> {
+        // lint: allow(cast, u32 to usize widens on every supported target)
         if m < 2 || m as usize > M_MAX || beta < 2 || (beta as u128) >= factorial(m) {
             return None;
         }
@@ -159,11 +160,15 @@ impl LambdaMMap {
     }
 
     fn pass_grid(&self, layout: &Layout, pass: u64) -> OrthotopeM {
+        // lint: allow(cast, pass < plan.levels <= M_MAX)
         let i = pass as usize;
         let side = layout.plan.sides[i];
+        // lint: allow(cast, u64 grid-dims contract: count * side <= u64::MAX)
         let count = layout.plan.counts[i] as u64;
         let mut dims = [side; M_MAX];
+        // lint: allow(cast, u32 to usize widens)
         dims[self.m as usize - 1] = count * side;
+        // lint: allow(cast, u32 to usize widens)
         OrthotopeM::new(&dims[..self.m as usize])
     }
 
@@ -172,11 +177,14 @@ impl LambdaMMap {
     /// (greedy, binary-searched), then prefix-sum differences give the
     /// simplex cell.
     fn unrank(&self, mut t: u128, native: u64) -> BlockM {
+        // lint: allow(cast, u32 to usize widens)
         let m = self.m as usize;
         let mut cs = [0u64; M_MAX];
+        // lint: allow(cast, u32 to u64 widens)
         let mut ub = native + self.m as u64 - 2;
         for i in (1..=m).rev() {
             let k = i as u128;
+            // lint: allow(cast, i is at most m <= M_MAX)
             let (mut lo, mut hi) = (i as u64 - 1, ub);
             while lo < hi {
                 let mid = lo + (hi - lo + 1) / 2;
@@ -225,6 +233,7 @@ impl MThreadMap for LambdaMMap {
 
     fn passes(&self, nb: u64) -> u64 {
         let native = self.native_size(nb).expect("unsupported nb");
+        // lint: allow(cast, usize to u64 widens here)
         self.layout(native).plan.levels() as u64
     }
 
@@ -238,6 +247,7 @@ impl MThreadMap for LambdaMMap {
         let native = self.native_size(nb).expect("unsupported nb");
         let layout = self.layout(native);
         let grid = self.pass_grid(&layout, pass);
+        // lint: allow(cast, pass < plan.levels <= M_MAX)
         let t = layout.bases[pass as usize] + grid.linear_of(w) as u128;
         if t >= layout.domain {
             return None; // structural filler past V(Δ)

@@ -69,6 +69,7 @@ pub fn lambda_s2(k: u64) -> (u64, u64) {
 #[inline(always)]
 pub fn lambda_s3(k: u64) -> (u64, u64, u64) {
     let slab = tetrahedral_root(k);
+    // lint: allow(cast, Tet of tetrahedral_root of k is at most k, a u64)
     let rem = k - tetrahedron(slab) as u64;
     let row = triangular_root(rem);
     let col = rem - row * (row + 1) / 2;
@@ -82,6 +83,7 @@ impl LambdaScalable2 {
     /// Grid height `T(nb)/w` — exact division (module doc).
     #[inline]
     fn height(nb: u64) -> u64 {
+        // lint: allow(cast, quotient <= T-of-nb which fits u64 for supported nb)
         (triangular(nb) / scalable_width(nb) as u128) as u64
     }
 }
@@ -205,6 +207,7 @@ impl LambdaScalable3 {
     #[inline]
     fn layers(nb: u64) -> u64 {
         let w = scalable_width(nb) as u128;
+        // lint: allow(cast, supports caps Tet-of-nb + w*w at u64::MAX)
         tetrahedron(nb).div_ceil(w * w) as u64
     }
 }
@@ -256,6 +259,7 @@ impl LambdaScalableRho3 {
     #[inline]
     fn layers(nb: u64) -> u64 {
         let w = searched_width(nb) as u128;
+        // lint: allow(cast, supports caps Tet-of-nb + w*w at u64::MAX)
         tetrahedron(nb).div_ceil(w * w) as u64
     }
 }

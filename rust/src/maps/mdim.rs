@@ -122,6 +122,7 @@ impl MThreadMap for FixedAdapter {
 
     fn grid(&self, nb: u64, pass: u64) -> OrthotopeM {
         let g = self.inner.grid(nb, pass);
+        // lint: allow(cast, u32 to usize widens)
         OrthotopeM::new(&g.dims[..g.m as usize])
     }
 
@@ -141,6 +142,7 @@ pub struct BoundingBoxM {
 
 impl BoundingBoxM {
     pub fn new(m: u32) -> BoundingBoxM {
+        // lint: allow(cast, u32 to usize widens)
         assert!(m >= 2 && m as usize <= M_MAX);
         BoundingBoxM { m }
     }
@@ -162,6 +164,7 @@ impl MThreadMap for BoundingBoxM {
 
     fn grid(&self, nb: u64, _pass: u64) -> OrthotopeM {
         let dims = [nb; M_MAX];
+        // lint: allow(cast, u32 to usize widens)
         OrthotopeM::new(&dims[..self.m as usize])
     }
 

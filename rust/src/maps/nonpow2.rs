@@ -105,11 +105,13 @@ impl ThreadMap for CoverFromBelow2 {
     /// One triangle pass per segment + one rectangle pass per segment
     /// after the first.
     fn passes(&self, nb: u64) -> u64 {
+        // lint: allow(cast, count_ones is u32, widening)
         2 * nb.count_ones() as u64 - 1
     }
 
     fn grid(&self, nb: u64, pass: u64) -> Orthotope {
         let segs = Self::segments(nb);
+        // lint: allow(cast, pass < passes = 2*popcount-1 <= 127)
         let i = (pass as usize + 1) / 2;
         let (s, o) = segs[i];
         if pass % 2 == 1 {
@@ -127,6 +129,7 @@ impl ThreadMap for CoverFromBelow2 {
     #[inline]
     fn map_block(&self, nb: u64, pass: u64, w: [u64; 3]) -> Option<[u64; 3]> {
         let segs = Self::segments(nb);
+        // lint: allow(cast, pass < passes = 2*popcount-1 <= 127)
         let i = (pass as usize + 1) / 2;
         let (s, o) = segs[i];
         if pass % 2 == 1 {

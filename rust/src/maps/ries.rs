@@ -30,10 +30,12 @@ impl ThreadMap for RiesMap {
 
     /// log2(N) square passes + 1 diagonal pass.
     fn passes(&self, nb: u64) -> u64 {
+        // lint: allow(cast, ilog2 is u32, widening)
         ilog2(nb) as u64 + 1
     }
 
     fn grid(&self, nb: u64, pass: u64) -> Orthotope {
+        // lint: allow(cast, ilog2 is u32, widening)
         let square_passes = ilog2(nb) as u64;
         if pass < square_passes {
             // Pass ℓ: 2^ℓ squares of side s = N/2^{ℓ+1}, stacked in y.
@@ -47,6 +49,7 @@ impl ThreadMap for RiesMap {
 
     #[inline]
     fn map_block(&self, nb: u64, pass: u64, w: [u64; 3]) -> Option<[u64; 3]> {
+        // lint: allow(cast, ilog2 is u32, widening)
         let square_passes = ilog2(nb) as u64;
         if pass < square_passes {
             let s = nb >> (pass + 1);

@@ -8,6 +8,10 @@
 //! per-request reply channel. Requests serialize naturally — which
 //! matches the single-device CPU client and makes batching (not
 //! concurrency) the throughput lever, as in the real system.
+//!
+//! Memory-ordering policy: the only atomic is the round-robin device
+//! cursor, which needs nothing beyond atomicity — Relaxed.
+// lint: atomics(Relaxed)
 
 use std::collections::BTreeMap;
 use std::path::Path;

@@ -26,6 +26,7 @@ pub struct BlockM {
 impl BlockM {
     /// The zero coordinate of dimension m.
     pub fn zeros(m: u32) -> BlockM {
+        // lint: allow(cast, u32 to usize widens)
         assert!(m >= 1 && m as usize <= M_MAX, "m={m} out of 1..={M_MAX}");
         BlockM {
             len: m as u8,
@@ -48,6 +49,7 @@ impl BlockM {
 
     #[inline]
     pub fn as_slice(&self) -> &[u64] {
+        // lint: allow(cast, u32 to usize widens)
         &self.xs[..self.len as usize]
     }
 
@@ -62,6 +64,7 @@ impl BlockM {
     pub fn from_fixed3(p: [u64; 3], m: u32) -> BlockM {
         debug_assert!((1..=3).contains(&m));
         let mut b = BlockM::zeros(m);
+        // lint: allow(cast, u32 to usize widens)
         b.xs[..m as usize].copy_from_slice(&p[..m as usize]);
         b
     }
@@ -71,6 +74,7 @@ impl BlockM {
     pub fn to_fixed3(&self) -> [u64; 3] {
         debug_assert!(self.len <= 3);
         let mut p = [0u64; 3];
+        // lint: allow(cast, u32 to usize widens)
         p[..self.len as usize].copy_from_slice(self.as_slice());
         p
     }
@@ -87,6 +91,7 @@ impl std::ops::Index<usize> for BlockM {
 impl std::ops::IndexMut<usize> for BlockM {
     #[inline]
     fn index_mut(&mut self, i: usize) -> &mut u64 {
+        // lint: allow(cast, u32 to usize widens)
         &mut self.xs[..self.len as usize][i]
     }
 }
@@ -142,6 +147,7 @@ impl OrthotopeM {
     pub fn of_linear(&self, mut idx: u64) -> BlockM {
         let m = self.m();
         let mut p = BlockM::zeros(m);
+        // lint: allow(cast, u32 to usize widens)
         for i in 0..m as usize {
             let d = self.dims[i];
             p[i] = idx % d;
@@ -176,6 +182,7 @@ impl Iterator for OrthotopeMIter {
         let mut succ = cur;
         let mut i = 0usize;
         loop {
+            // lint: allow(cast, u32 to usize widens)
             if i == succ.m() as usize {
                 self.next = None;
                 break;

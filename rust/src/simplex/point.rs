@@ -30,6 +30,7 @@ impl PointM {
     }
 
     pub fn as_slice(&self) -> &[u64] {
+        // lint: allow(cast, u32 to usize widens)
         &self.coords[..self.m as usize]
     }
 
@@ -47,6 +48,7 @@ pub struct Simplex {
 
 impl Simplex {
     pub fn new(n: u64, m: u32) -> Simplex {
+        // lint: allow(cast, u32 to usize widens)
         assert!(m as usize <= MAX_M && m >= 1, "1 ≤ m ≤ {MAX_M}");
         Simplex { n, m }
     }
@@ -59,6 +61,7 @@ impl Simplex {
 
     #[inline]
     pub fn contains_coords(&self, coords: &[u64]) -> bool {
+        // lint: allow(cast, u32 to usize widens)
         coords.len() == self.m as usize && self.n > 0 && coords.iter().sum::<u64>() <= self.n - 1
     }
 
@@ -74,6 +77,7 @@ impl Simplex {
             next: if self.n == 0 {
                 None
             } else {
+                // lint: allow(cast, u32 to usize widens)
                 Some(PointM::new(&vec![0; self.m as usize]))
             },
         }
@@ -93,6 +97,7 @@ impl Iterator for SimplexIter {
         let current = self.next?;
         // Advance: increment the last coordinate; on budget overflow,
         // carry into earlier coordinates.
+        // lint: allow(cast, u32 to usize widens)
         let m = self.simplex.m as usize;
         let budget = self.simplex.n - 1;
         let mut c = current;

@@ -154,6 +154,7 @@ impl GeneralSetParams {
         let mut size = self.r * n as f64;
         let mut count = 1u128;
         for _ in 0..levels {
+            // lint: allow(cast, size stays in 0..=n; float-to-int saturates)
             let s = (size + 0.5).floor() as u64; // round half up
             if s == 0 {
                 break;

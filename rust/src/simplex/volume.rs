@@ -50,6 +50,7 @@ pub fn simplex_volume_f64(n: u64, m: u32) -> f64 {
         return 0.0;
     }
     let mut acc = 1.0f64;
+    // lint: allow(cast, u32 to u64 widens)
     for i in 0..m as u64 {
         acc *= (n + i) as f64 / (i + 1) as f64;
     }

@@ -25,6 +25,12 @@
 //!
 //! which is continuous with the exact region (`index(31) = 31`,
 //! `index(32) = 32`) and monotone in `v`.
+//!
+//! Memory-ordering policy: bucket counters and the min/max cells are
+//! statistically merged by readers that tolerate torn snapshots (a
+//! quantile over a live histogram is approximate by nature) — every
+//! access is Relaxed.
+// lint: atomics(Relaxed)
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -28,6 +28,7 @@
 /// Floor square root of a `u64` (exact for every input).
 #[inline]
 pub fn isqrt_u64(x: u64) -> u64 {
+    // lint: allow(cast, sqrt of a u64 is below 2^32)
     isqrt_u128(x as u128) as u64
 }
 
@@ -88,6 +89,7 @@ pub fn icbrt_u128(x: u128) -> u128 {
 /// and `(s−1)/2` floors both to `r`.
 #[inline]
 pub fn triangular_root(k: u64) -> u64 {
+    // lint: allow(cast, isqrt of 8k+1 < 2^34; halved it fits u64)
     ((isqrt_u128(8 * k as u128 + 1) - 1) / 2) as u64
 }
 
@@ -103,6 +105,7 @@ pub fn tetrahedron(c: u64) -> u128 {
 /// within O(1) of the answer because `c³ ≤ c(c+1)(c+2) < (c+2)³`).
 #[inline]
 pub fn tetrahedral_root(k: u64) -> u64 {
+    // lint: allow(cast, cbrt of 6k < 2^23 for k in u64)
     let mut c = icbrt_u128(6 * k as u128) as u64;
     while c > 0 && tetrahedron(c) > k as u128 {
         c -= 1;

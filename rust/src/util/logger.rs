@@ -9,6 +9,11 @@
 //! structured JSONL — one `{"level","target","ts","msg"}` object per
 //! line, every string escaped through [`crate::util::json`] so targets
 //! and messages containing quotes or backslashes stay parseable.
+//!
+//! Memory-ordering policy: the level and format cells are plain
+//! last-write-wins configuration bytes — no data is published through
+//! them — so loads and stores are Relaxed.
+// lint: atomics(Relaxed)
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -96,11 +101,11 @@ fn level_cell() -> &'static AtomicU8 {
 }
 
 pub fn set_level(level: Level) {
-    level_cell().store(level as u8, Ordering::SeqCst);
+    level_cell().store(level as u8, Ordering::Relaxed);
 }
 
 pub fn level() -> Level {
-    match level_cell().load(Ordering::SeqCst) {
+    match level_cell().load(Ordering::Relaxed) {
         0 => Level::Error,
         1 => Level::Warn,
         2 => Level::Info,
@@ -124,11 +129,11 @@ fn format_cell() -> &'static AtomicU8 {
 }
 
 pub fn set_format(f: LogFormat) {
-    format_cell().store(f as u8, Ordering::SeqCst);
+    format_cell().store(f as u8, Ordering::Relaxed);
 }
 
 pub fn format() -> LogFormat {
-    match format_cell().load(Ordering::SeqCst) {
+    match format_cell().load(Ordering::Relaxed) {
         1 => LogFormat::Json,
         _ => LogFormat::Text,
     }

@@ -17,3 +17,4 @@ pub mod logger;
 pub mod prng;
 pub mod proptest;
 pub mod stats;
+pub mod sync;

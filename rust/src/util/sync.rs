@@ -1,0 +1,97 @@
+//! Poison-recovering lock helpers for the serving paths.
+//!
+//! `Mutex::lock().unwrap()` turns one panicked holder into a cascade:
+//! every later lock attempt panics on the poison flag, so a single bug
+//! anywhere under a lock takes the whole serving tier down with it.
+//! The serving paths are lint-enforced panic-free (`simplexlint`'s
+//! `panic` rule, DESIGN.md §Static Analysis), which makes poisoning
+//! doubly wrong there: it cannot happen from our own code, and if a
+//! future bug does poison a lock the right degradation is to keep
+//! serving with the last-written state — all data guarded by these
+//! locks (queue lanes, result rows, reply mailboxes) is valid at every
+//! lock release point.
+//!
+//! These helpers recover the guard from a poisoned lock instead of
+//! panicking. They are the blessed replacement everywhere the `panic`
+//! rule forbids `.lock().unwrap()`.
+
+use std::sync::{
+    Condvar, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
+
+/// Lock, recovering from poison (see module docs for why this is the
+/// correct degradation on the panic-free serving paths).
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Condvar wait, recovering the guard from poison.
+pub fn wait_unpoisoned<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// RwLock read, recovering from poison.
+pub fn read_unpoisoned<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// RwLock write, recovering from poison.
+pub fn write_unpoisoned<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex, RwLock};
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u64));
+        let m2 = Arc::clone(&m);
+        // Poison the mutex by panicking while holding it.
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock_unpoisoned(&m), 7);
+        *lock_unpoisoned(&m) = 9;
+        assert_eq!(*lock_unpoisoned(&m), 9);
+    }
+
+    #[test]
+    fn rwlock_recovers_from_poison() {
+        let l = Arc::new(RwLock::new(1u64));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison");
+        })
+        .join();
+        assert_eq!(*read_unpoisoned(&l), 1);
+        *write_unpoisoned(&l) = 2;
+        assert_eq!(*read_unpoisoned(&l), 2);
+    }
+
+    #[test]
+    fn wait_returns_after_notify() {
+        use std::sync::Condvar;
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = Arc::clone(&pair);
+        let t = std::thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            let mut g = lock_unpoisoned(m);
+            while !*g {
+                g = wait_unpoisoned(cv, g);
+            }
+        });
+        {
+            let (m, cv) = &*pair;
+            *lock_unpoisoned(m) = true;
+            cv.notify_all();
+        }
+        t.join().unwrap();
+    }
+}

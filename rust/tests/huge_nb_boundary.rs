@@ -1,0 +1,161 @@
+//! Boundary regressions for the narrowing casts `simplexlint`'s `cast`
+//! rule annotates (DESIGN.md §Static Analysis, E22): every `as u64`
+//! in `maps/lambda_scalable.rs`, `maps/avril.rs` and `util/isqrt.rs`
+//! carries a range proof in its allow-annotation, and these tests pin
+//! each proof at the largest input the type can present — the audit
+//! found no narrowing bug, and this file is the evidence that keeps it
+//! that way.
+
+use simplexmap::maps::avril::avril_map_isqrt;
+use simplexmap::maps::lambda_scalable::{
+    lambda_s2, scalable_width, LambdaScalable2, LambdaScalable3,
+};
+use simplexmap::maps::ThreadMap;
+use simplexmap::simplex::volume::triangular;
+use simplexmap::util::isqrt::{tetrahedral_root, tetrahedron, triangular_root};
+
+/// Largest `r` with `T(r) ≤ u64::MAX` (`T(r) = r(r+1)/2` in u128).
+fn max_triangular_row() -> u64 {
+    let (mut lo, mut hi) = (1u64, u64::MAX);
+    while lo < hi {
+        let mid = lo + (hi - lo + 1) / 2;
+        if triangular(mid) <= u64::MAX as u128 {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+/// Largest `c` with `Tet(c) ≤ u64::MAX` (`Tet(c) = c(c+1)(c+2)/6`).
+fn max_tetrahedral_cut() -> u64 {
+    let (mut lo, mut hi) = (1u64, 10_000_000u64);
+    while lo < hi {
+        let mid = lo + (hi - lo + 1) / 2;
+        if tetrahedron(mid) <= u64::MAX as u128 {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+#[test]
+fn triangular_root_exact_at_the_u64_edge() {
+    let r = max_triangular_row();
+    // The edge really is the edge.
+    assert!(triangular(r) <= u64::MAX as u128);
+    assert!(triangular(r + 1) > u64::MAX as u128);
+    let tr = triangular(r) as u64;
+    assert_eq!(triangular_root(tr), r);
+    assert_eq!(triangular_root(tr - 1), r - 1);
+    // The very top of the input type still floors into the edge row.
+    assert_eq!(triangular_root(u64::MAX), r);
+}
+
+#[test]
+fn triangular_root_exact_at_the_2pow32_row() {
+    // λ_S2's supports() bound: rows stay below 2³² so r·(r+1) fits
+    // u64. Pin exactness on both sides of that row.
+    let r = 1u64 << 32;
+    let tr = triangular(r) as u64;
+    assert_eq!(triangular_root(tr), r);
+    assert_eq!(triangular_root(tr - 1), r - 1);
+}
+
+#[test]
+fn tetrahedral_root_exact_at_the_u64_edge() {
+    let c = max_tetrahedral_cut();
+    assert!(tetrahedron(c) <= u64::MAX as u128);
+    assert!(tetrahedron(c + 1) > u64::MAX as u128);
+    let tc = tetrahedron(c) as u64;
+    assert_eq!(tetrahedral_root(tc), c);
+    assert_eq!(tetrahedral_root(tc - 1), c - 1);
+    assert_eq!(tetrahedral_root(u64::MAX), c);
+}
+
+#[test]
+fn lambda_s2_top_rank_at_max_supported_nb() {
+    // supports() admits every nb < 2³² and nothing above.
+    let nb = (1u64 << 32) - 1;
+    assert!(LambdaScalable2.supports(nb));
+    assert!(!LambdaScalable2.supports(1u64 << 32));
+
+    let width = scalable_width(nb);
+    let grid = LambdaScalable2.grid(nb, 0);
+    // Exact division: the half-width grid covers T(nb) with no waste.
+    assert_eq!(grid.dims[0] as u128 * grid.dims[1] as u128, triangular(nb));
+
+    // First block → the simplex origin.
+    assert_eq!(LambdaScalable2.map_block(nb, 0, [0, 0, 0]), Some([0, 0, 0]));
+    // Last block → the far corner (col = row = nb−1): the rank
+    // arithmetic `row·(row+1)` peaked exactly at the supports() bound.
+    let last = [grid.dims[0] - 1, grid.dims[1] - 1, 0];
+    assert_eq!(LambdaScalable2.map_block(nb, 0, last), Some([nb - 1, nb - 1, 0]));
+    // Rank T(nb−1) starts the last row.
+    let k = triangular(nb - 1) as u64;
+    let (col, row) = lambda_s2(k);
+    assert_eq!((col, row), (0, nb - 1));
+    assert_eq!(width, nb.div_ceil(2));
+}
+
+#[test]
+fn lambda_s3_top_rank_at_max_supported_nb() {
+    // Largest nb the m = 3 map admits: Tet(nb) + W² ≤ u64::MAX.
+    let (mut lo, mut hi) = (1u64, 5_000_000u64);
+    while lo < hi {
+        let mid = lo + (hi - lo + 1) / 2;
+        if LambdaScalable3.supports(mid) {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    let nb = lo;
+    assert!(LambdaScalable3.supports(nb));
+    assert!(!LambdaScalable3.supports(nb + 1));
+
+    let width = scalable_width(nb);
+    let grid = LambdaScalable3.grid(nb, 0);
+    assert_eq!(grid.dims[0], width);
+    assert_eq!(grid.dims[1], width);
+    // The padded container covers the tetrahedron with < W² slack.
+    let cells = width as u128 * width as u128 * grid.dims[2] as u128;
+    assert!(cells >= tetrahedron(nb));
+    assert!(cells - tetrahedron(nb) < width as u128 * width as u128);
+
+    // Last real rank → a simplex point on the far slab x+y+z = nb−1.
+    let k = (tetrahedron(nb) - 1) as u64;
+    let w = [k % width, (k / width) % width, k / (width * width)];
+    let p = LambdaScalable3.map_block(nb, 0, w).expect("last rank is real");
+    assert_eq!(p[0] + p[1] + p[2], nb - 1);
+    assert!(p.iter().all(|&x| x < nb));
+
+    // One past the end (if the final layer is padded) is rejected, not
+    // misassigned.
+    if cells > tetrahedron(nb) {
+        let k = tetrahedron(nb) as u64;
+        let w = [k % width, (k / width) % width, k / (width * width)];
+        assert_eq!(LambdaScalable3.map_block(nb, 0, w), None);
+    }
+}
+
+#[test]
+fn avril_isqrt_exact_at_2pow32_interactions() {
+    // n = 2³² puts total = n(n−1)/2 within one bit of u64::MAX/2 —
+    // far beyond both float cliffs (f32 at n ≈ 3000, f64 at n = 2²⁸).
+    let n = 1u64 << 32;
+    let total = n * (n - 1) / 2;
+    assert_eq!(avril_map_isqrt(0, n), (0, 1));
+    assert_eq!(avril_map_isqrt(n - 2, n), (0, n - 1)); // last of row 0
+    assert_eq!(avril_map_isqrt(n - 1, n), (1, 2)); // first of row 1
+    assert_eq!(avril_map_isqrt(total - 1, n), (n - 2, n - 1));
+    // Row boundary deep in the triangle: the first pair of the second
+    // half's diagonal row a = n/2.
+    let a = n / 2;
+    let row_start = a * n - a - a * (a - 1) / 2;
+    assert_eq!(avril_map_isqrt(row_start, n), (a, a + 1));
+    assert_eq!(avril_map_isqrt(row_start - 1, n), (a - 1, n - 1));
+}

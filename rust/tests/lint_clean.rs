@@ -1,0 +1,21 @@
+//! The tree must lint clean — the same gate CI's `lint` job enforces
+//! by running the `simplexlint` binary. Running it as a tier-1 test
+//! too means a violation fails `cargo test` locally before it ever
+//! reaches CI, and the failure message carries the full report.
+
+use simplexmap::lint;
+
+#[test]
+fn tree_is_lint_clean() {
+    let cwd = std::env::current_dir().expect("cwd");
+    let root = lint::find_root(&cwd).expect("repo root above test cwd");
+    let report = lint::run(&root).expect("lint walk");
+    assert!(
+        report.clean(),
+        "simplexlint found unsuppressed violations:\n{}",
+        report.render()
+    );
+    // The walk really covered the tree (guards against a silent
+    // empty-walk passing as clean).
+    assert!(report.files_scanned > 90, "scanned {}", report.files_scanned);
+}
